@@ -1,0 +1,206 @@
+//! End-to-end driver (DESIGN.md §7): serve batched inference requests
+//! over a real small BERT encoder stack, with every piece of the system
+//! engaged:
+//!
+//! * numerics — the AOT-compiled JAX graph (Pallas flexible-MM kernels
+//!   inside) executed via PJRT, verified against a host-side oracle;
+//! * timing  — the FILCO two-stage DSE schedule for BERT on the
+//!   modelled VCK190, including the generated instruction streams run
+//!   through the fabric simulator;
+//! * serving — the leader queue/batcher with latency metrics.
+//!
+//! Run: `cargo run --release --example bert_e2e` (after `make artifacts`).
+//! Results are recorded in EXPERIMENTS.md §E2E.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::{instrgen, serving};
+use filco::coordinator::serving::Servable;
+use filco::dse::{self, Solver};
+use filco::platform::Platform;
+use filco::runtime::{Engine, HostTensor};
+use filco::sim::{self, Fabric};
+use filco::workload::zoo;
+
+// Served model geometry — matches the `bert_layer_s64_h128_a4_f512`
+// artifact compiled by make artifacts.
+const SEQ: usize = 64;
+const HIDDEN: usize = 128;
+const HEADS: usize = 4;
+const FFN: usize = 512;
+const LAYERS: usize = 4;
+const REQUESTS: u64 = 64;
+
+fn main() -> anyhow::Result<()> {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+
+    // ---------- FILCO timing path: DSE + instrgen + simulator ----------
+    // Paper-scale BERT (hidden 768) on the modelled fabric.
+    let dag = zoo::bert_layers(SEQ as u32, LAYERS as u32);
+    let table = dse::stage1::optimize(&p, &cfg, &dag);
+    let t0 = Instant::now();
+    let schedule = dse::two_stage(
+        &p,
+        &cfg,
+        &dag,
+        Solver::Ga { population: 48, generations: 120, seed: 7 },
+    );
+    schedule.validate(&dag, &table, cfg.n_fmus, cfg.m_cus).expect("valid schedule");
+    println!(
+        "[dse]   BERT-{SEQ} x{LAYERS}: makespan {:.3e} s on modelled VCK190 ({:.0} GFLOP/s), {:.2} s search",
+        schedule.makespan,
+        dag.total_flops() as f64 / schedule.makespan / 1e9,
+        t0.elapsed().as_secs_f64()
+    );
+    let prog = instrgen::generate(&dag, &table, &schedule, 96);
+    let sim_report = sim::simulate(&p, &Fabric::from_config(&cfg), &prog).expect("sim");
+    println!(
+        "[sim]   {} instructions, simulated {:.3e} s, mean CU util {:.1}%",
+        sim_report.instructions,
+        sim_report.makespan_s,
+        sim_report.mean_cu_utilization() * 100.0
+    );
+
+    // ---------- numerics + serving path --------------------------------
+    let engine = Arc::new(Engine::open_default()?);
+    let mut model = serving::BertModel::synthetic(SEQ, HIDDEN, HEADS, FFN, LAYERS, 42);
+    model.fabric_s = schedule.makespan;
+    let model = Arc::new(model);
+
+    // Verify numerics of the served model against the pure-host oracle
+    // before opening the doors.
+    let probe = HostTensor::randn(&[SEQ, HIDDEN], 1234);
+    let served = model.run(&engine, &probe)?;
+    let oracle = host_bert_oracle(&model, &probe);
+    let diff = served.max_abs_diff(&oracle);
+    println!("[check] PJRT vs host oracle max|err| = {diff:.2e}");
+    assert!(served.allclose(&oracle, 2e-2, 2e-2), "numerics mismatch: {diff}");
+
+    let server = serving::Server::new(engine.clone(), model.clone(), 8);
+    let producer_queue = server.queue.clone();
+    let producer = std::thread::spawn(move || {
+        for i in 0..REQUESTS {
+            producer_queue.push(serving::Request {
+                id: i,
+                input: HostTensor::randn(&[SEQ, HIDDEN], i),
+                enqueued: Instant::now(),
+            });
+        }
+        producer_queue.close();
+    });
+    let t1 = Instant::now();
+    let (responses, metrics) = server.run_to_completion();
+    producer.join().unwrap();
+    let wall = t1.elapsed().as_secs_f64();
+
+    println!("[serve] {}", metrics.summary());
+    println!(
+        "[serve] {} responses in {:.2} s wall -> {:.1} req/s host, fabric-time/request {:.3e} s -> {:.1} req/s on modelled VCK190",
+        responses.len(),
+        wall,
+        responses.len() as f64 / wall,
+        schedule.makespan,
+        1.0 / schedule.makespan
+    );
+    assert_eq!(responses.len() as u64, REQUESTS);
+    println!("bert_e2e OK");
+    Ok(())
+}
+
+/// Pure-host BERT encoder oracle mirroring python/compile/model.py.
+fn host_bert_oracle(m: &serving::BertModel, x0: &HostTensor) -> HostTensor {
+    use filco::runtime::tensor::matmul_ref;
+    let (s, h) = (m.seq, m.hidden);
+    let heads = HEADS;
+    let dh = h / heads;
+    let mut x = x0.clone();
+    for p in &m.params {
+        let (wq, bq, wk, bk) = (&p[0], &p[1], &p[2], &p[3]);
+        let (wv, bv, wo, bo) = (&p[4], &p[5], &p[6], &p[7]);
+        let (w1, b1, w2, b2) = (&p[8], &p[9], &p[10], &p[11]);
+        let (g1, be1, g2, be2) = (&p[12], &p[13], &p[14], &p[15]);
+        let add_bias = |t: &HostTensor, b: &HostTensor| {
+            let mut o = t.clone();
+            for i in 0..o.shape[0] {
+                for j in 0..o.shape[1] {
+                    o.data[i * o.shape[1] + j] += b.data[j];
+                }
+            }
+            o
+        };
+        let q = add_bias(&matmul_ref(&x, wq), bq);
+        let k = add_bias(&matmul_ref(&x, wk), bk);
+        let v = add_bias(&matmul_ref(&x, wv), bv);
+        // Attention per head.
+        let mut ctx = HostTensor::zeros(&[s, h]);
+        for hd in 0..heads {
+            for i in 0..s {
+                // scores over j
+                let mut scores = vec![0.0f32; s];
+                for j in 0..s {
+                    let mut dot = 0.0f32;
+                    for d in 0..dh {
+                        dot += q.at2(i, hd * dh + d) * k.at2(j, hd * dh + d);
+                    }
+                    scores[j] = dot / (dh as f32).sqrt();
+                }
+                let mx = scores.iter().cloned().fold(f32::MIN, f32::max);
+                let mut den = 0.0f32;
+                for sc in &mut scores {
+                    *sc = (*sc - mx).exp();
+                    den += *sc;
+                }
+                for d in 0..dh {
+                    let mut acc = 0.0f32;
+                    for j in 0..s {
+                        acc += scores[j] / den * v.at2(j, hd * dh + d);
+                    }
+                    ctx.data[i * h + hd * dh + d] = acc;
+                }
+            }
+        }
+        let attn = add_bias(&matmul_ref(&ctx, wo), bo);
+        // x = LN(x + attn)
+        let mut y = x.clone();
+        for i in 0..s * h {
+            y.data[i] += attn.data[i];
+        }
+        x = layer_norm(&y, g1, be1);
+        // FFN
+        let mut f = add_bias(&matmul_ref(&x, w1), b1);
+        for v in &mut f.data {
+            *v = gelu(*v);
+        }
+        let f2 = add_bias(&matmul_ref(&f, w2), b2);
+        let mut y2 = x.clone();
+        for i in 0..s * h {
+            y2.data[i] += f2.data[i];
+        }
+        x = layer_norm(&y2, g2, be2);
+    }
+    x
+}
+
+fn gelu(x: f32) -> f32 {
+    // tanh approximation, matches jax.nn.gelu(approximate=True).
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn layer_norm(t: &HostTensor, g: &HostTensor, b: &HostTensor) -> HostTensor {
+    let (rows, cols) = (t.shape[0], t.shape[1]);
+    let mut o = t.clone();
+    for i in 0..rows {
+        let row = &t.data[i * cols..(i + 1) * cols];
+        let mean: f32 = row.iter().sum::<f32>() / cols as f32;
+        let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..cols {
+            o.data[i * cols + j] = (row[j] - mean) * inv * g.data[j] + b.data[j];
+        }
+    }
+    o
+}

@@ -1,0 +1,91 @@
+//! DSE deep-dive: run both Stage-2 solvers on one model, dump the
+//! schedule timeline, GA convergence, and the generated instruction
+//! streams (first lines), then write codegen outputs.
+//!
+//! Run: `cargo run --release --example dse_sweep -- [model]`
+//! (default model: bert-128x2)
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::instrgen;
+use filco::dse::{ga::GaConfig, sched_milp, stage1};
+use filco::isa::disasm;
+use filco::platform::Platform;
+use filco::sim::{self, Fabric};
+use filco::workload::zoo;
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "bert-128x2".into());
+    let dag = match model.as_str() {
+        "mlp-s" => zoo::mlp_s(),
+        "pointnet" => zoo::pointnet(),
+        _ => zoo::bert_layers(128, 2),
+    };
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+
+    println!("workload {}: {} layers, diversity {:.2}", dag.name, dag.len(), dag.diversity());
+    let table = stage1::optimize(&p, &cfg, &dag);
+    println!(
+        "stage-1: {} candidate modes total (max {} per layer)",
+        table.modes.iter().map(Vec::len).sum::<usize>(),
+        table.max_candidates()
+    );
+
+    // --- GA ---------------------------------------------------------------
+    let ga = GaConfig { population: 64, generations: 150, seed: 0xF11C0, ..Default::default() }
+        .solve(&dag, &table, &cfg);
+    println!(
+        "\nGA: makespan {:.4e} s after {} generations ({} evals, {:.2} s)",
+        ga.best_makespan, ga.generations_run, ga.evaluations, ga.elapsed_s
+    );
+    let every = (ga.history.len() / 10).max(1);
+    for (g, mk) in ga.history.iter().enumerate().step_by(every) {
+        println!("  gen {g:>4}: {mk:.4e} s");
+    }
+
+    // --- MILP (exact when tractable) ---------------------------------------
+    let milp = sched_milp::solve(&dag, &table, &cfg, 20.0);
+    println!(
+        "\nMILP: status {:?}, {} nodes, {:.2} s, makespan {:.4e} s",
+        milp.status, milp.nodes, milp.elapsed_s, milp.schedule.makespan
+    );
+
+    // --- timeline + instructions ------------------------------------------
+    let best = if milp.schedule.makespan < ga.best_makespan
+        && milp.schedule.validate(&dag, &table, cfg.n_fmus, cfg.m_cus).is_ok()
+    {
+        println!("using MILP schedule");
+        milp.schedule
+    } else {
+        println!("using GA schedule");
+        ga.schedule
+    };
+    println!("\ntimeline:");
+    let mut entries = best.entries.clone();
+    entries.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    for e in entries.iter().take(12) {
+        let m = &table.modes[e.layer][e.mode];
+        println!(
+            "  [{:>9.3e}..{:>9.3e}] {:<22} f={} c={} tile={}x{}x{}",
+            e.start, e.end, dag.layers[e.layer].name, m.fmus, m.cus, m.tile.0, m.tile.1, m.tile.2
+        );
+    }
+    if entries.len() > 12 {
+        println!("  ... {} more", entries.len() - 12);
+    }
+
+    let prog = instrgen::generate(&dag, &table, &best, 64);
+    println!("\ninstruction streams ({} instrs total), head:", prog.total_len());
+    for line in disasm::disasm_program(&prog).lines().take(16) {
+        println!("  {line}");
+    }
+
+    let report = sim::simulate(&p, &Fabric::from_config(&cfg), &prog).expect("sim");
+    println!(
+        "\nsimulated: {:.4e} s (schedule model {:.4e} s), CU util {:.1}%",
+        report.makespan_s,
+        best.makespan,
+        report.mean_cu_utilization() * 100.0
+    );
+    println!("dse_sweep OK");
+}

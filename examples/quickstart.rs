@@ -1,0 +1,64 @@
+//! Quickstart: the whole FILCO stack on one matrix multiply.
+//!
+//! 1. Two-stage DSE picks runtime parameters + a schedule for a tiny
+//!    workload;
+//! 2. the Instruction Generator lowers it to ISA streams;
+//! 3. the fabric simulator times it on the modelled VCK190;
+//! 4. the PJRT runtime executes the AOT JAX/Pallas artifact for the
+//!    *numerics*, verified against a host oracle.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::instrgen;
+use filco::dse::{self, Solver};
+use filco::platform::Platform;
+use filco::runtime::{tensor::matmul_ref, Engine, HostTensor};
+use filco::sim::{self, Fabric};
+use filco::workload::{Dag, MmShape};
+
+fn main() -> anyhow::Result<()> {
+    // --- workload: one 100x64x48 MM (deliberately ragged) -------------
+    let mut dag = Dag::new("quickstart");
+    dag.add("mm", MmShape::new(100, 64, 48));
+
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    println!("fabric: {} FMUs, {} CUs x {} AIEs, {}", cfg.n_fmus, cfg.m_cus, cfg.aies_per_cu,
+        cfg.features.label());
+
+    // --- DSE ------------------------------------------------------------
+    let table = dse::stage1::optimize(&p, &cfg, &dag);
+    println!("stage-1 candidates for the layer: {}", table.modes[0].len());
+    let schedule = dse::two_stage(&p, &cfg, &dag, Solver::Milp { budget_s: 10.0 });
+    schedule.validate(&dag, &table, cfg.n_fmus, cfg.m_cus).expect("valid schedule");
+    let mode = &table.modes[0][schedule.entries[0].mode];
+    println!(
+        "schedule: mode f={} c={} tile={}x{}x{} -> {:.3e} s on the modelled fabric",
+        mode.fmus, mode.cus, mode.tile.0, mode.tile.1, mode.tile.2, schedule.makespan
+    );
+
+    // --- instruction generation + simulation ----------------------------
+    let prog = instrgen::generate(&dag, &table, &schedule, 64);
+    println!("generated {} instructions", prog.total_len());
+    let report = sim::simulate(&p, &Fabric::from_config(&cfg), &prog).expect("sim");
+    println!(
+        "simulated: {:.3e} s, DDR in/out {} / {} KB, mean CU util {:.1}%",
+        report.makespan_s,
+        report.ddr_in_bytes / 1024,
+        report.ddr_out_bytes / 1024,
+        report.mean_cu_utilization() * 100.0
+    );
+
+    // --- numerics through the AOT Pallas artifact ------------------------
+    let engine = Engine::open_default()?;
+    let a = HostTensor::randn(&[100, 64], 1);
+    let b = HostTensor::randn(&[64, 48], 2);
+    let got = engine.mm(&a, &b)?;
+    let exp = matmul_ref(&a, &b);
+    let diff = got.max_abs_diff(&exp);
+    println!("PJRT result max|err| vs host oracle: {diff:.2e}");
+    assert!(got.allclose(&exp, 1e-3, 1e-3), "numerics mismatch");
+    println!("quickstart OK");
+    Ok(())
+}

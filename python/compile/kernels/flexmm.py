@@ -1,0 +1,212 @@
+"""L1 — FILCO flexible-parallelism matrix-multiply kernel in Pallas.
+
+This is the Pallas analog of FILCO's flexible AIE programming method
+(paper §2.2, Fig 3):
+
+* The AIE kernel packs a fixed ``2x8x8`` tiled MM into one atomic VLIW
+  operation and wraps it in nested loops whose bounds arrive *at runtime*
+  through stream instructions.  The fixed atomic tile keeps the datapath
+  saturated; the runtime bounds remove the padding that static designs pay
+  on small/diverse operands.
+
+* On the TPU/Pallas side the atomic tile maps to one MXU contraction over
+  a VMEM block and the runtime loop bounds map to the ``pallas_call`` grid
+  plus *atomic-granularity* padding: operands are padded only up to the
+  next multiple of the atomic tile (``ATOM = (2, 8, 8)``), never to a full
+  static buffer shape.  The HBM<->VMEM schedule the paper expresses with
+  mesh-in/mesh-out streams is expressed here with ``BlockSpec`` index maps.
+
+The kernel is lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+run Mosaic custom-calls; real-TPU efficiency is estimated analytically
+(DESIGN.md §8) from the VMEM footprint and MXU utilisation of the chosen
+block shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper's atomic operation is a 2x8x8 tiled MM (one VLIW op on the
+# AIE).  We keep the same granularity: operands are padded to multiples of
+# ATOM only, which is what bounds FILCO's "invalid computation" (red
+# blocks in Fig 3b) to a sliver instead of a full static tile.
+ATOM_M, ATOM_K, ATOM_N = 2, 8, 8
+
+# Default compute-tile (CU-buffer sized) block.  On real AIE hardware the
+# maximum tile is 32x32x32 (fits the 32 KB local memory with double
+# buffering); we keep that as the default VMEM block and let callers pick
+# smaller tiles for small workloads — that choice is exactly FILCO's
+# runtime-flexible parallelism.
+DEFAULT_TILE = (32, 32, 32)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def atom_padded_dims(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Dimensions after padding to the atomic-operation granularity."""
+    return (_round_up(m, ATOM_M), _round_up(k, ATOM_K), _round_up(n, ATOM_N))
+
+
+def atom_op_count(m: int, k: int, n: int) -> int:
+    """Number of atomic 2x8x8 operations needed for an MxKxN MM."""
+    pm, pk, pn = atom_padded_dims(m, k, n)
+    return (pm // ATOM_M) * (pk // ATOM_K) * (pn // ATOM_N)
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    """Grid body: one (tm, tk) x (tk, tn) block contraction per step.
+
+    The accumulator lives in scratch (VMEM); the K grid dimension is the
+    innermost loop so the output block is revisited ``k_steps`` times —
+    the Pallas rendition of the AIE kernel's ``for k_block`` loop with a
+    runtime bound.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # One "macro" contraction == (tm/2)*(tk/8)*(tn/8) atomic 2x8x8 ops.
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _validate_tile(tile: tuple[int, int, int]) -> tuple[int, int, int]:
+    tm, tk, tn = tile
+    if tm <= 0 or tk <= 0 or tn <= 0:
+        raise ValueError(f"tile dims must be positive, got {tile}")
+    if tm % ATOM_M or tk % ATOM_K or tn % ATOM_N:
+        raise ValueError(
+            f"tile {tile} must be a multiple of the atomic op "
+            f"({ATOM_M}x{ATOM_K}x{ATOM_N})"
+        )
+    return tm, tk, tn
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def flexmm(x: jax.Array, w: jax.Array, *, tile: tuple[int, int, int] = DEFAULT_TILE):
+    """FILCO flexible-tile matrix multiply: ``x @ w``.
+
+    ``x``: (M, K), ``w``: (K, N); any M/K/N.  Operands are padded to the
+    *atomic* granularity only, then tiled with runtime-chosen compute
+    tiles (``tile``), never to a fixed buffer shape.
+    """
+    tm, tk, tn = _validate_tile(tile)
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x {x.shape} vs w {w.shape}")
+
+    # Pad to the compute tile (the compute tile is itself a multiple of
+    # the atomic tile, so this is still atomic-granularity padding from
+    # the datapath's perspective — the residual blocks simply run with a
+    # partially masked atomic grid).
+    pm, pk, pn = _round_up(m, tm), _round_up(k, tk), _round_up(n, tn)
+    xp = jnp.pad(x, ((0, pm - m), (0, pk - k)))
+    wp = jnp.pad(w, ((0, pk - k), (0, pn - n)))
+
+    k_steps = pk // tk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps),
+        grid=(pm // tm, pn // tn, k_steps),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), x.dtype),
+        scratch_shapes=[_vmem_scratch((tm, tn))],
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _vmem_scratch(shape):
+    """f32 VMEM scratch accumulator (plain buffer under interpret mode)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, jnp.float32)
+
+
+def flexmm_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    tile: tuple[int, int, int] = DEFAULT_TILE,
+    act: str = "none",
+):
+    """MM + bias + optional activation, with the MM on the Pallas kernel.
+
+    The epilogue stays in jnp so XLA fuses it into the surrounding HLO —
+    on the FILCO fabric the analogous fusion is the CU mesh-out stream
+    applying the vector post-op on the way to the FMU.
+    """
+    y = flexmm(x, w, tile=tile) + b[None, :]
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(y, approximate=True)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def pick_tile(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Runtime-parameter heuristic mirroring FILCO's Stage-1 optimizer.
+
+    Choose the largest compute tile that does not overshoot the operand —
+    i.e. shrink tile dims for small matrices so the padded fraction stays
+    bounded, exactly the reconfiguration shown in Fig 3(b).
+    """
+
+    def fit(dim: int, atom: int, cap: int) -> int:
+        padded = _round_up(max(dim, 1), atom)
+        return min(cap, padded)
+
+    tm = fit(m, ATOM_M, DEFAULT_TILE[0])
+    tk = fit(k, ATOM_K, DEFAULT_TILE[1])
+    tn = fit(n, ATOM_N, DEFAULT_TILE[2])
+    # Tile dims must be atomic multiples; fit() preserves that because
+    # caps are atomic multiples and padded dims are atomic multiples.
+    return (tm, tk, tn)
+
+
+def vmem_bytes(tile: tuple[int, int, int], dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one grid step (x, w blocks + f32 accumulator),
+
+    double-buffered inputs — the quantity bounded by AIE local memory /
+    TPU VMEM and reported in DESIGN.md's roofline estimate."""
+    tm, tk, tn = tile
+    return 2 * (tm * tk + tk * tn) * dtype_bytes + tm * tn * 4
+
+
+def mxu_utilization_estimate(m: int, k: int, n: int, tile=DEFAULT_TILE) -> float:
+    """Fraction of issued MACs that are useful for an MxKxN MM under
+    ``tile`` — the flexible-parallelism efficiency FILCO plots in Fig 8."""
+    tm, tk, tn = _validate_tile(tile)
+    pm, pk, pn = _round_up(m, tm), _round_up(k, tk), _round_up(n, tn)
+    return (m * k * n) / float(pm * pk * pn)
+
+
+def static_utilization_estimate(m: int, k: int, n: int, tile=DEFAULT_TILE) -> float:
+    """Same quantity for the *static* baseline: operands padded to the
+    full fixed tile regardless of size (Fig 3b 'static' row)."""
+    tm, tk, tn = _validate_tile(tile)
+    pm = max(_round_up(m, tm), tm)
+    pk = max(_round_up(k, tk), tk)
+    pn = max(_round_up(n, tn), tn)
+    return (m * k * n) / float(pm * pk * pn)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every kernel and model block.
+
+These are the correctness references the Pallas kernel (L1) and the JAX
+model graph (L2) are validated against in ``python/tests``.  They use no
+Pallas, no custom tiling — just the mathematically obvious expression.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mm(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain matrix multiply oracle."""
+    return jnp.matmul(x, w)
+
+
+def mm_bias_act(x, w, b, act: str = "none"):
+    y = jnp.matmul(x, w) + b[None, :]
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(y, approximate=True)
+    raise ValueError(act)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def softmax(x, axis: int = -1):
+    return jax.nn.softmax(x, axis=axis)
+
+
+def attention(x, wq, bq, wk, bk, wv, bv, wo, bo, num_heads: int):
+    """Multi-head self-attention oracle, (S, H) input."""
+    s, h = x.shape
+    dh = h // num_heads
+    q = (x @ wq + bq).reshape(s, num_heads, dh).transpose(1, 0, 2)
+    k = (x @ wk + bk).reshape(s, num_heads, dh).transpose(1, 0, 2)
+    v = (x @ wv + bv).reshape(s, num_heads, dh).transpose(1, 0, 2)
+    scores = jnp.einsum("hsd,htd->hst", q, k) / jnp.sqrt(float(dh))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hst,htd->hsd", probs, v)
+    ctx = ctx.transpose(1, 0, 2).reshape(s, h)
+    return ctx @ wo + bo
+
+
+def bert_encoder_layer(x, p, num_heads: int):
+    """Post-LN BERT encoder layer oracle.
+
+    ``p`` is the parameter dict produced by ``model.init_bert_layer``.
+    """
+    attn = attention(
+        x,
+        p["wq"], p["bq"], p["wk"], p["bk"], p["wv"], p["bv"],
+        p["wo"], p["bo"],
+        num_heads,
+    )
+    x = layer_norm(x + attn, p["ln1_g"], p["ln1_b"])
+    ff = mm_bias_act(x, p["w1"], p["b1"], act="gelu")
+    ff = ff @ p["w2"] + p["b2"]
+    return layer_norm(x + ff, p["ln2_g"], p["ln2_b"])
+
+
+def mlp_block(x, ws, bs):
+    """MLP oracle: alternating Linear+ReLU, last layer linear."""
+    for i, (w, b) in enumerate(zip(ws, bs)):
+        x = x @ w + b
+        if i != len(ws) - 1:
+            x = jnp.maximum(x, 0.0)
+    return x

@@ -1,0 +1,77 @@
+"""L1 — vector-unit kernels: row softmax and LayerNorm in Pallas.
+
+On the FILCO fabric these post-ops run on the AIE vector datapath as the
+mesh-out stream drains the CU (the paper folds them into the CU's
+write-back path). Here they are Pallas kernels tiled over row blocks so
+the whole encoder layer lowers into one HLO module together with the
+flexmm kernel.
+
+interpret=True, same as flexmm (CPU PJRT cannot run Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step (VMEM block height).
+ROW_BLOCK = 8
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    o_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@jax.jit
+def softmax_rows(x: jax.Array) -> jax.Array:
+    """Numerically-stable softmax over the last dim of a 2-D array."""
+    r, c = x.shape
+    pr = _round_up(r, ROW_BLOCK)
+    xp = jnp.pad(x, ((0, pr - r), (0, 0)))
+    out = pl.pallas_call(
+        _softmax_kernel,
+        grid=(pr // ROW_BLOCK,),
+        in_specs=[pl.BlockSpec((ROW_BLOCK, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_BLOCK, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pr, c), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:r, :]
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def layer_norm_rows(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5):
+    """LayerNorm over the last dim of a 2-D array (per-row statistics)."""
+    r, c = x.shape
+    pr = _round_up(r, ROW_BLOCK)
+    xp = jnp.pad(x, ((0, pr - r), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(pr // ROW_BLOCK,),
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((pr, c), x.dtype),
+        interpret=True,
+    )(xp, gamma, beta)
+    return out[:r, :]

@@ -1,0 +1,157 @@
+"""L2 — FILCO JAX compute graphs (build-time only).
+
+The paper's realistic workloads are Transformer/BERT encoder stacks and
+MLPs built almost entirely from matrix multiplies (its §4.2 'diverse MM'
+workloads sweep sequence length, heads, head dim and MLP ratio).  This
+module defines those graphs in JAX, routing every MM through the L1
+Pallas flexible-tile kernel so the whole layer lowers into a single HLO
+module that the Rust runtime executes via PJRT.
+
+Everything here runs exactly once, inside ``make artifacts``; Python is
+never on the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flexmm as fx
+from .kernels import vector as vk
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def init_bert_layer(key, hidden: int, ffn: int):
+    """Parameters for one post-LN BERT encoder layer, dict of arrays."""
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / jnp.sqrt(float(hidden))
+
+    def lin(k, i, o):
+        return jax.random.normal(k, (i, o), jnp.float32) * scale
+
+    return {
+        "wq": lin(ks[0], hidden, hidden), "bq": jnp.zeros((hidden,), jnp.float32),
+        "wk": lin(ks[1], hidden, hidden), "bk": jnp.zeros((hidden,), jnp.float32),
+        "wv": lin(ks[2], hidden, hidden), "bv": jnp.zeros((hidden,), jnp.float32),
+        "wo": lin(ks[3], hidden, hidden), "bo": jnp.zeros((hidden,), jnp.float32),
+        "w1": lin(ks[4], hidden, ffn),    "b1": jnp.zeros((ffn,), jnp.float32),
+        "w2": lin(ks[5], ffn, hidden),    "b2": jnp.zeros((hidden,), jnp.float32),
+        "ln1_g": jnp.ones((hidden,), jnp.float32),
+        "ln1_b": jnp.zeros((hidden,), jnp.float32),
+        "ln2_g": jnp.ones((hidden,), jnp.float32),
+        "ln2_b": jnp.zeros((hidden,), jnp.float32),
+    }
+
+
+BERT_PARAM_ORDER = [
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "w1", "b1", "w2", "b2", "ln1_g", "ln1_b", "ln2_g", "ln2_b",
+]
+
+
+def init_mlp(key, dims: list[int]):
+    ws, bs = [], []
+    ks = jax.random.split(key, len(dims) - 1)
+    for i in range(len(dims) - 1):
+        scale = 1.0 / jnp.sqrt(float(dims[i]))
+        ws.append(jax.random.normal(ks[i], (dims[i], dims[i + 1]), jnp.float32) * scale)
+        bs.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return ws, bs
+
+
+# ---------------------------------------------------------------------------
+# Model graphs (all MMs via the L1 kernel)
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm via the Pallas row kernel (L1)."""
+    return vk.layer_norm_rows(x, gamma, beta, eps=eps)
+
+
+def attention(x, p, num_heads: int, tile):
+    """Multi-head self-attention with Q/K/V/O projections on the Pallas
+    kernel.  Score/context MMs stay in jnp (they are batched per-head
+    einsums; on the fabric they map to per-CU small MMs that the
+    instruction stream expresses directly)."""
+    s, h = x.shape
+    dh = h // num_heads
+    q = (fx.flexmm(x, p["wq"], tile=tile) + p["bq"]).reshape(s, num_heads, dh)
+    k = (fx.flexmm(x, p["wk"], tile=tile) + p["bk"]).reshape(s, num_heads, dh)
+    v = (fx.flexmm(x, p["wv"], tile=tile) + p["bv"]).reshape(s, num_heads, dh)
+    q = q.transpose(1, 0, 2)
+    k = k.transpose(1, 0, 2)
+    v = v.transpose(1, 0, 2)
+    scores = jnp.einsum("hsd,htd->hst", q, k) / jnp.sqrt(float(dh))
+    # Row softmax on the Pallas vector kernel, vmapped over heads.
+    probs = jax.vmap(vk.softmax_rows)(scores)
+    ctx = jnp.einsum("hst,htd->hsd", probs, v).transpose(1, 0, 2).reshape(s, h)
+    return fx.flexmm(ctx, p["wo"], tile=tile) + p["bo"]
+
+
+def bert_encoder_layer(x, p, num_heads: int, tile=None):
+    """One post-LN BERT encoder layer; input/output (S, H)."""
+    s, h = x.shape
+    tile = tile or fx.pick_tile(s, h, h)
+    attn = attention(x, p, num_heads, tile)
+    x = layer_norm(x + attn, p["ln1_g"], p["ln1_b"])
+    ffn_tile = fx.pick_tile(s, h, p["w1"].shape[1])
+    ff = fx.flexmm_bias_act(x, p["w1"], p["b1"], tile=ffn_tile, act="gelu")
+    ff = fx.flexmm(ff, p["w2"], tile=fx.pick_tile(s, p["w1"].shape[1], h)) + p["b2"]
+    return layer_norm(x + ff, p["ln2_g"], p["ln2_b"])
+
+
+def bert_layer_fn(seq: int, hidden: int, heads: int, ffn: int):
+    """Return an (x, *params) -> (out,) function for AOT lowering."""
+
+    def fn(x, *params):
+        p = dict(zip(BERT_PARAM_ORDER, params))
+        return (bert_encoder_layer(x, p, heads),)
+
+    return fn
+
+
+def mlp_fn(dims: list[int]):
+    """MLP head: alternating Linear+ReLU, last layer linear, all MMs on
+    the flexible kernel."""
+
+    def fn(x, *wb):
+        n = len(dims) - 1
+        ws, bs = wb[:n], wb[n:]
+        for i in range(n):
+            tile = fx.pick_tile(x.shape[0], ws[i].shape[0], ws[i].shape[1])
+            act = "none" if i == n - 1 else "relu"
+            x = fx.flexmm_bias_act(x, ws[i], bs[i], tile=tile, act=act)
+        return (x,)
+
+    return fn
+
+
+def mm_fn(m: int, k: int, n: int):
+    """Generic bucketed MM entry point for the serving path."""
+    tile = fx.pick_tile(m, k, n)
+
+    def fn(x, w):
+        return (fx.flexmm(x, w, tile=tile),)
+
+    return fn
+
+
+def bert_example_args(seq: int, hidden: int, heads: int, ffn: int):
+    """ShapeDtypeStructs for jitting a bert layer."""
+    f32 = jnp.float32
+    x = jax.ShapeDtypeStruct((seq, hidden), f32)
+    shapes = {
+        "wq": (hidden, hidden), "bq": (hidden,),
+        "wk": (hidden, hidden), "bk": (hidden,),
+        "wv": (hidden, hidden), "bv": (hidden,),
+        "wo": (hidden, hidden), "bo": (hidden,),
+        "w1": (hidden, ffn), "b1": (ffn,),
+        "w2": (ffn, hidden), "b2": (hidden,),
+        "ln1_g": (hidden,), "ln1_b": (hidden,),
+        "ln2_g": (hidden,), "ln2_b": (hidden,),
+    }
+    params = [jax.ShapeDtypeStruct(shapes[name], f32) for name in BERT_PARAM_ORDER]
+    return [x] + params

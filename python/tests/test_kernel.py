@@ -1,0 +1,228 @@
+"""L1 correctness: Pallas flexible-MM kernel vs the pure-jnp oracle.
+
+This is the CORE numerical signal: if these pass, every HLO artifact the
+Rust runtime executes computes the same numbers as the reference.
+Includes a hypothesis sweep over shapes/tiles per the repro requirements.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flexmm as fx
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _check(m, k, n, tile=None, tol=1e-4):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 1000003 + k * 1009 + n))
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    tile = tile or fx.pick_tile(m, k, n)
+    got = fx.flexmm(x, w, tile=tile)
+    exp = ref.mm(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------- basic ---
+
+class TestFlexmmExact:
+    def test_square_tile_exact_fit(self):
+        _check(32, 32, 32, tile=(32, 32, 32))
+
+    def test_identity(self):
+        x = jnp.eye(16, dtype=jnp.float32)
+        w = jnp.arange(16 * 8, dtype=jnp.float32).reshape(16, 8)
+        got = fx.flexmm(x, w, tile=(16, 16, 8))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(w))
+
+    def test_atomic_single_op(self):
+        _check(2, 8, 8, tile=(2, 8, 8))
+
+    def test_paper_fig8_smallest(self):
+        # Fig 8 sweeps from 8x24x16 upward at atomic granularity.
+        _check(8, 24, 16)
+
+    def test_paper_fig8_largest(self):
+        _check(32, 32, 32)
+
+    def test_zero_inputs(self):
+        got = fx.flexmm(jnp.zeros((8, 8)), jnp.zeros((8, 8)), tile=(8, 8, 8))
+        assert float(jnp.max(jnp.abs(got))) == 0.0
+
+
+class TestFlexmmRagged:
+    """Shapes that are NOT tile multiples — the padding/masking path."""
+
+    @pytest.mark.parametrize(
+        "m,k,n",
+        [(7, 13, 5), (1, 8, 8), (33, 65, 17), (100, 64, 48), (3, 3, 3), (2, 100, 2)],
+    )
+    def test_ragged(self, m, k, n):
+        _check(m, k, n)
+
+    def test_tile_bigger_than_matrix(self):
+        _check(4, 8, 8, tile=(32, 32, 32))
+
+    def test_k_multi_step_accumulation(self):
+        # k_steps > 1 exercises the scratch accumulator flush logic.
+        _check(16, 256, 16, tile=(16, 32, 16))
+
+
+class TestTileValidation:
+    def test_rejects_non_atomic_tile(self):
+        with pytest.raises(ValueError):
+            fx.flexmm(jnp.zeros((8, 8)), jnp.zeros((8, 8)), tile=(3, 8, 8))
+
+    def test_rejects_zero_tile(self):
+        with pytest.raises(ValueError):
+            fx.flexmm(jnp.zeros((8, 8)), jnp.zeros((8, 8)), tile=(0, 8, 8))
+
+    def test_rejects_contraction_mismatch(self):
+        with pytest.raises(ValueError):
+            fx.flexmm(jnp.zeros((8, 8)), jnp.zeros((16, 8)))
+
+    def test_pick_tile_atomic_multiples(self):
+        for (m, k, n) in [(1, 1, 1), (7, 13, 5), (500, 3, 9), (32, 32, 32)]:
+            tm, tk, tn = fx.pick_tile(m, k, n)
+            assert tm % fx.ATOM_M == 0 and tk % fx.ATOM_K == 0 and tn % fx.ATOM_N == 0
+            assert tm <= fx.DEFAULT_TILE[0] and tk <= fx.DEFAULT_TILE[1]
+
+    def test_pick_tile_shrinks_for_small(self):
+        assert fx.pick_tile(2, 8, 8) == (2, 8, 8)
+        assert fx.pick_tile(512, 512, 512) == fx.DEFAULT_TILE
+
+
+class TestBiasAct:
+    @pytest.mark.parametrize("act", ["none", "relu", "gelu"])
+    def test_bias_act_matches_ref(self, act):
+        kx, kw, kb = jax.random.split(jax.random.PRNGKey(7), 3)
+        x, w = _rand(kx, (24, 40)), _rand(kw, (40, 24))
+        b = _rand(kb, (24,))
+        got = fx.flexmm_bias_act(x, w, b, tile=fx.pick_tile(24, 40, 24), act=act)
+        exp = ref.mm_bias_act(x, w, b, act=act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-4, rtol=1e-4)
+
+    def test_rejects_unknown_act(self):
+        with pytest.raises(ValueError):
+            fx.flexmm_bias_act(jnp.zeros((8, 8)), jnp.zeros((8, 8)), jnp.zeros((8,)), act="tanh")
+
+
+# -------------------------------------------------------------- property ---
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+)
+def test_hypothesis_shape_sweep(m, k, n):
+    _check(m, k, n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 40),
+    n=st.integers(1, 40),
+    tm=st.sampled_from([2, 4, 8, 16, 32]),
+    tk=st.sampled_from([8, 16, 32]),
+    tn=st.sampled_from([8, 16, 32]),
+)
+def test_hypothesis_tile_sweep(m, k, n, tm, tk, tn):
+    """Any legal tile must give the same numbers — tiles change timing,
+    never semantics (the heart of 'flexible parallelism')."""
+    _check(m, k, n, tile=(tm, tk, tn))
+
+
+# ------------------------------------------------------------- estimates ---
+
+class TestUtilizationModel:
+    def test_flex_beats_static_on_small(self):
+        m, k, n = 8, 24, 16
+        flex = fx.mxu_utilization_estimate(m, k, n, tile=fx.pick_tile(m, k, n))
+        static = fx.static_utilization_estimate(m, k, n)
+        assert flex > static
+
+    def test_equal_at_full_tile(self):
+        assert fx.mxu_utilization_estimate(32, 32, 32) == 1.0
+        assert fx.static_utilization_estimate(32, 32, 32) == 1.0
+
+    def test_atom_op_count(self):
+        assert fx.atom_op_count(2, 8, 8) == 1
+        assert fx.atom_op_count(32, 32, 32) == 16 * 4 * 4
+        assert fx.atom_op_count(3, 9, 9) == 2 * 2 * 2
+
+    def test_vmem_bytes_monotone(self):
+        assert fx.vmem_bytes((32, 32, 32)) > fx.vmem_bytes((8, 8, 8))
+
+    def test_utilization_bounds(self):
+        for (m, k, n) in [(1, 1, 1), (8, 24, 16), (100, 100, 100)]:
+            u = fx.mxu_utilization_estimate(m, k, n, tile=fx.pick_tile(m, k, n))
+            assert 0.0 < u <= 1.0
+
+
+# ----------------------------------------------------- vector kernels ---
+
+from compile.kernels import vector as vk
+
+
+class TestSoftmaxKernel:
+    @pytest.mark.parametrize("r,c", [(1, 4), (8, 16), (13, 40), (64, 64)])
+    def test_matches_oracle(self, r, c):
+        x = jax.random.normal(jax.random.PRNGKey(r * 100 + c), (r, c), jnp.float32)
+        got = vk.softmax_rows(x)
+        exp = ref.softmax(x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+    def test_rows_sum_to_one(self):
+        x = jax.random.normal(jax.random.PRNGKey(5), (17, 33), jnp.float32) * 10
+        s = jnp.sum(vk.softmax_rows(x), axis=-1)
+        np.testing.assert_allclose(np.asarray(s), np.ones(17), atol=1e-5)
+
+    def test_stable_under_large_values(self):
+        x = jnp.full((4, 8), 1e4, jnp.float32)
+        got = vk.softmax_rows(x)
+        assert np.all(np.isfinite(np.asarray(got)))
+        np.testing.assert_allclose(np.asarray(got), np.full((4, 8), 1.0 / 8), atol=1e-6)
+
+
+class TestLayerNormKernel:
+    @pytest.mark.parametrize("r,c", [(1, 8), (9, 32), (64, 128)])
+    def test_matches_oracle(self, r, c):
+        key = jax.random.PRNGKey(r + c)
+        x = jax.random.normal(key, (r, c), jnp.float32) * 3 + 1
+        g = jax.random.normal(jax.random.PRNGKey(1), (c,), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (c,), jnp.float32)
+        got = vk.layer_norm_rows(x, g, b)
+        exp = ref.layer_norm(x, g, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-4, rtol=1e-4)
+
+    def test_unit_gain_zero_bias_normalises(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (5, 64), jnp.float32) * 7 + 2
+        y = vk.layer_norm_rows(x, jnp.ones(64), jnp.zeros(64))
+        y = np.asarray(y)
+        np.testing.assert_allclose(y.mean(axis=1), np.zeros(5), atol=1e-4)
+        np.testing.assert_allclose(y.std(axis=1), np.ones(5), atol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(1, 40), c=st.integers(2, 60))
+def test_hypothesis_softmax_shapes(r, c):
+    x = jax.random.normal(jax.random.PRNGKey(r * 997 + c), (r, c), jnp.float32)
+    got = vk.softmax_rows(x)
+    exp = ref.softmax(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(r=st.integers(1, 40), c=st.integers(2, 60))
+def test_hypothesis_layernorm_shapes(r, c):
+    x = jax.random.normal(jax.random.PRNGKey(r * 31 + c), (r, c), jnp.float32)
+    got = vk.layer_norm_rows(x, jnp.ones(c), jnp.zeros(c))
+    exp = ref.layer_norm(x, jnp.ones(c), jnp.zeros(c))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-4, rtol=1e-4)

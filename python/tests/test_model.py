@@ -1,0 +1,82 @@
+"""L2 correctness: JAX model graphs (Pallas MMs inside) vs pure-jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def bert_params():
+    return model.init_bert_layer(jax.random.PRNGKey(0), hidden=64, ffn=256)
+
+
+class TestBertLayer:
+    @pytest.mark.parametrize("seq", [8, 32, 33, 64])
+    def test_matches_oracle(self, bert_params, seq):
+        x = jax.random.normal(jax.random.PRNGKey(seq), (seq, 64), jnp.float32)
+        got = model.bert_encoder_layer(x, bert_params, num_heads=4)
+        exp = ref.bert_encoder_layer(x, bert_params, num_heads=4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-4, rtol=2e-4)
+
+    def test_output_shape(self, bert_params):
+        x = jnp.zeros((16, 64), jnp.float32)
+        y = model.bert_encoder_layer(x, bert_params, num_heads=4)
+        assert y.shape == (16, 64)
+
+    def test_layer_fn_param_order(self, bert_params):
+        """bert_layer_fn consumes params positionally in BERT_PARAM_ORDER —
+        the same order the Rust runtime feeds buffers."""
+        seq, hidden = 16, 64
+        fn = model.bert_layer_fn(seq, hidden, 4, 256)
+        x = jax.random.normal(jax.random.PRNGKey(1), (seq, hidden), jnp.float32)
+        flat = [bert_params[name] for name in model.BERT_PARAM_ORDER]
+        (got,) = fn(x, *flat)
+        exp = ref.bert_encoder_layer(x, bert_params, num_heads=4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=2e-4, rtol=2e-4)
+
+    def test_deterministic(self, bert_params):
+        x = jax.random.normal(jax.random.PRNGKey(3), (8, 64), jnp.float32)
+        a = model.bert_encoder_layer(x, bert_params, num_heads=4)
+        b = model.bert_encoder_layer(x, bert_params, num_heads=4)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestMlp:
+    def test_matches_oracle(self):
+        dims = [64, 128, 128, 10]
+        ws, bs = model.init_mlp(jax.random.PRNGKey(5), dims)
+        x = jax.random.normal(jax.random.PRNGKey(6), (32, 64), jnp.float32)
+        fn = model.mlp_fn(dims)
+        (got,) = fn(x, *ws, *bs)
+        exp = ref.mlp_block(x, ws, bs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-4, rtol=1e-4)
+
+    def test_relu_applied_between_layers(self):
+        dims = [4, 4, 4]
+        ws = [jnp.eye(4), jnp.eye(4)]
+        bs = [jnp.zeros(4), jnp.zeros(4)]
+        x = jnp.array([[-1.0, 2.0, -3.0, 4.0]], jnp.float32)
+        fn = model.mlp_fn(dims)
+        (got,) = fn(x, *ws, *bs)
+        np.testing.assert_allclose(np.asarray(got), [[0.0, 2.0, 0.0, 4.0]])
+
+
+class TestLayerNorm:
+    def test_matches_oracle(self):
+        x = jax.random.normal(jax.random.PRNGKey(9), (8, 32), jnp.float32)
+        g = jnp.ones(32); b = jnp.zeros(32)
+        np.testing.assert_allclose(
+            np.asarray(model.layer_norm(x, g, b)),
+            np.asarray(ref.layer_norm(x, g, b)),
+            atol=1e-5, rtol=1e-5,
+        )
+
+    def test_normalizes(self):
+        x = jax.random.normal(jax.random.PRNGKey(10), (4, 64), jnp.float32) * 10 + 3
+        y = model.layer_norm(x, jnp.ones(64), jnp.zeros(64))
+        assert abs(float(jnp.mean(y))) < 1e-3
+        assert abs(float(jnp.std(y)) - 1.0) < 1e-2

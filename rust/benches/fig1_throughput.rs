@@ -1,0 +1,82 @@
+//! Fig 1 — throughput comparison across accelerator designs and models
+//! of varying diversity (paper §1).
+//!
+//! Columns: CHARM-1 (monolithic), CHARM-2, CHARM-3 (multi-diverse),
+//! RSN (overlay), FILCO (two-stage DSE on the composable fabric).
+//! Rows: MLP-L (low diversity, large), MLP-S (small), DeiT-L, DeiT-S,
+//! PointNet (highest diversity).
+//!
+//! Expected shape (paper): CHARM-1 peaks on MLP-L then collapses with
+//! diversity/size; CHARM-2/3 degrade more gracefully but cap the peak;
+//! RSN holds until sizes shrink; FILCO >= all across the board.
+
+use filco::arch::FilcoConfig;
+use filco::baseline::charm::{charm1, charm2, charm3, charm_gflops};
+use filco::baseline::rsn::rsn;
+use filco::dse::{self, Solver};
+use filco::platform::Platform;
+use filco::report::Table;
+use filco::workload::zoo;
+
+fn main() {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    let models = zoo::fig1_models();
+
+    let mut t = Table::new(
+        "Fig 1: throughput (GFLOP/s) for different works",
+        &["model", "diversity", "CHARM-1", "CHARM-2", "CHARM-3", "RSN", "FILCO"],
+    );
+    let mut results: Vec<(String, Vec<f64>)> = Vec::new();
+    for dag in &models {
+        let g1 = charm_gflops(&p, &[charm1(&p)], dag);
+        let g2 = charm_gflops(&p, &charm2(&p), dag);
+        let g3 = charm_gflops(&p, &charm3(&p), dag);
+        let gr = rsn(&p).dag_gflops(&p, dag);
+        let sched = dse::two_stage(
+            &p,
+            &cfg,
+            dag,
+            Solver::Ga { population: 48, generations: 100, seed: 0xF16 },
+        );
+        let gf = dag.total_flops() as f64 / sched.makespan / 1e9;
+        t.row(&[
+            dag.name.clone(),
+            format!("{:.2}", dag.diversity()),
+            format!("{g1:.0}"),
+            format!("{g2:.0}"),
+            format!("{g3:.0}"),
+            format!("{gr:.0}"),
+            format!("{gf:.0}"),
+        ]);
+        results.push((dag.name.clone(), vec![g1, g2, g3, gr, gf]));
+    }
+    t.emit("fig1_throughput");
+
+    // Shape assertions.
+    let get = |name: &str| &results.iter().find(|(n, _)| n == name).unwrap().1;
+    let mlp_l = get("MLP-L");
+    let mlp_s = get("MLP-S");
+    // (1) CHARM-1 leads the CHARM family on MLP-L but collapses on MLP-S.
+    assert!(mlp_l[0] >= mlp_l[1] * 0.95 && mlp_l[0] >= mlp_l[2] * 0.95);
+    let c1_drop = mlp_l[0] / mlp_s[0];
+    let c3_drop = mlp_l[2] / mlp_s[2];
+    assert!(c1_drop > c3_drop, "CHARM-1 must degrade faster than CHARM-3");
+    // (2) FILCO >= every baseline on every model (small tolerance).
+    for (name, r) in &results {
+        let best_base = r[..4].iter().cloned().fold(0.0f64, f64::max);
+        assert!(
+            r[4] >= best_base * 0.97,
+            "{name}: FILCO {} below best baseline {}",
+            r[4],
+            best_base
+        );
+    }
+    // (3) FILCO's edge grows with diversity (PointNet vs MLP-L).
+    let edge_mlp_l = mlp_l[4] / mlp_l[..4].iter().cloned().fold(0.0f64, f64::max);
+    let pnet = get("PointNet");
+    let edge_pnet = pnet[4] / pnet[..4].iter().cloned().fold(0.0f64, f64::max);
+    println!("FILCO edge: MLP-L {edge_mlp_l:.2}x -> PointNet {edge_pnet:.2}x");
+    assert!(edge_pnet > edge_mlp_l);
+    println!("fig1 OK");
+}

@@ -1,0 +1,67 @@
+//! §Perf harness: microbenchmarks for the three L3 hot paths —
+//! Stage-1 optimization, GA schedule search (evals/s), and the fabric
+//! simulator (instructions/s). Used to drive the EXPERIMENTS.md §Perf
+//! iteration log; not a paper figure.
+
+use std::time::Instant;
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::instrgen;
+use filco::dse::{ga::GaConfig, stage1};
+use filco::platform::Platform;
+use filco::sim::{self, Fabric};
+use filco::workload::zoo;
+
+fn main() {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+
+    // --- Stage 1 on a realistic DAG (BERT-128, 12 layers = 96 MMs) ----
+    let dag = zoo::bert(128);
+    let t = Instant::now();
+    let table = stage1::optimize(&p, &cfg, &dag);
+    let stage1_s = t.elapsed().as_secs_f64();
+    println!(
+        "stage1: {} layers in {:.3} s ({:.0} layers/s)",
+        dag.len(),
+        stage1_s,
+        dag.len() as f64 / stage1_s
+    );
+
+    // --- GA throughput --------------------------------------------------
+    let t = Instant::now();
+    let ga = GaConfig { population: 64, generations: 100, seed: 1, ..Default::default() }
+        .solve(&dag, &table, &cfg);
+    let ga_s = t.elapsed().as_secs_f64();
+    println!(
+        "ga:     {} evals in {:.3} s ({:.0} evals/s, {} layers each)",
+        ga.evaluations,
+        ga_s,
+        ga.evaluations as f64 / ga_s,
+        dag.len()
+    );
+
+    // --- simulator throughput -------------------------------------------
+    let small = zoo::bert_layers(128, 2);
+    let table2 = stage1::optimize(&p, &cfg, &small);
+    let sched = GaConfig { population: 16, generations: 10, seed: 2, ..Default::default() }
+        .solve(&small, &table2, &cfg)
+        .schedule;
+    let prog = instrgen::generate(&small, &table2, &sched, 256);
+    let t = Instant::now();
+    let mut total_instr = 0u64;
+    let mut reps = 0;
+    while t.elapsed().as_secs_f64() < 1.0 {
+        let r = sim::simulate(&p, &Fabric::from_config(&cfg), &prog).unwrap();
+        total_instr += r.instructions;
+        reps += 1;
+    }
+    let sim_s = t.elapsed().as_secs_f64();
+    println!(
+        "sim:    {} instrs x {} reps in {:.3} s ({:.0} instrs/s)",
+        prog.total_len(),
+        reps,
+        sim_s,
+        total_instr as f64 / sim_s
+    );
+}

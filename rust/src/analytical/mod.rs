@@ -1,0 +1,444 @@
+//! Analytical performance model (paper §3, Fig 6 "Runtime Parameter
+//! Optimizer").
+//!
+//! One parameterised accelerator model covers FILCO (with any feature
+//! subset) *and* the baselines: CHARM's monolithic/diverse designs and
+//! the RSN overlay are specific parameter points of the same equations
+//! (see [`crate::baseline`]). This keeps Fig 1/9/10 comparisons
+//! apples-to-apples, exactly like the paper's in-house analytical models.
+//!
+//! The model splits a layer's latency into *compute* and *communication*
+//! and overlaps them (the fabric double-buffers everything):
+//!
+//! ```text
+//! latency = max(T_compute, T_ddr, T_stream) + T_reconfig
+//! ```
+//!
+//! * `T_compute` — [`aie::AieKernelModel`] cycle model scaled to the
+//!   allocated AIEs, with padding at the design's compute granularity
+//!   (atomic 2x8x8 when FP is on; the full static tile otherwise).
+//! * `T_ddr` — classic tiled-MM traffic: `A` is re-read `ceil(n/Tn)`
+//!   times, `B` `ceil(m/Tm)` times, `C` written once, with the on-chip
+//!   tile `(Tm,Tk,Tn)` bounded by the FMU capacity the design grants
+//!   each operand (shared pool when FMF is on, fixed split otherwise)
+//!   and inflated to the buffer-view page when FMV is off.
+//! * `T_stream` — on-chip FMU->CU traffic over the fully-connected
+//!   stream topology.
+
+pub mod aie;
+
+use crate::arch::{ATOM_K, ATOM_M, ATOM_N};
+use crate::platform::Platform;
+use crate::util::round_up;
+use crate::workload::MmShape;
+
+/// How a design stores operands in on-chip memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryView {
+    /// FMV on: 1-D addressing, any shape stored exactly (padded only to
+    /// the atomic op granularity).
+    Flexible,
+    /// FMV off: operands occupy fixed `page x page` buffer views; both
+    /// storage *and DDR traffic* are padded to the page grid (the padded
+    /// rows/cols are physically transferred — §2.3's red blocks).
+    Paged { page: u32 },
+}
+
+/// How FMU capacity is assigned to operands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MemoryFunc {
+    /// FMF on: one shared pool; any operand may use any FMU (§2.4).
+    Shared,
+    /// FMF off: the pool is split at compile time in fixed fractions
+    /// A : B : C.
+    FixedSplit { a: f64, b: f64, c: f64 },
+}
+
+/// On-chip tile selection policy (ablated in `benches/ablations.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TilePolicy {
+    /// Minimise estimated DDR *time* (bytes / burst-efficiency) — the
+    /// policy FILCO's Stage-1 uses.
+    #[default]
+    MinTime,
+    /// Minimise raw DDR bytes — the naive objective; favours skinny
+    /// tiles whose short bursts destroy effective bandwidth.
+    MinTraffic,
+}
+
+/// A fully-specified accelerator design point for the analytical model.
+#[derive(Debug, Clone)]
+pub struct AccModel {
+    pub name: String,
+    /// Compute units allocated and AIEs per CU.
+    pub cus: u32,
+    pub aies_per_cu: u32,
+    /// Total on-chip operand memory, fp32 elements (sum over the FMUs /
+    /// buffers granted to this accelerator; one ping half — the pong
+    /// half is what buys compute/transfer overlap).
+    pub onchip_elems: u64,
+    /// Compute padding granularity: atomic (FP on) or the static tile.
+    pub compute_gran: (u32, u32, u32),
+    pub view: MemoryView,
+    pub func: MemoryFunc,
+    /// AIE kernel cycle model (flexible or static instruction schedule).
+    pub kernel: aie::AieKernelModel,
+    /// Per-layer reconfiguration cost, seconds (instruction decode —
+    /// "a few bytes"; ~µs for FILCO, 0 for designs with nothing to
+    /// reconfigure).
+    pub reconfig_s: f64,
+    /// Tile selection objective (MinTime unless ablating).
+    pub tile_policy: TilePolicy,
+}
+
+/// Per-layer performance breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerPerf {
+    pub compute_s: f64,
+    pub ddr_s: f64,
+    pub stream_s: f64,
+    pub latency_s: f64,
+    /// Useful FLOPs / issued FLOPs (compute padding efficiency).
+    pub compute_eff: f64,
+    /// Useful DDR bytes / transferred bytes.
+    pub comm_eff: f64,
+    /// On-chip tile used for the traffic model.
+    pub tile: (u32, u32, u32),
+}
+
+impl AccModel {
+    /// Total AIEs.
+    pub fn aies(&self) -> u32 {
+        self.cus * self.aies_per_cu
+    }
+
+    /// Storage footprint of a `rows x cols` operand under the view rule.
+    fn stored_elems(&self, rows: u32, cols: u32) -> u64 {
+        match self.view {
+            MemoryView::Flexible => {
+                round_up(rows as u64, ATOM_M as u64) * round_up(cols as u64, ATOM_N as u64)
+            }
+            MemoryView::Paged { page } => {
+                round_up(rows as u64, page as u64) * round_up(cols as u64, page as u64)
+            }
+        }
+    }
+
+    /// Padded dims transferred over DDR for a `rows x cols` region.
+    fn xfer_dims(&self, rows: u32, cols: u32) -> (u64, u64) {
+        match self.view {
+            MemoryView::Flexible => (rows as u64, cols as u64),
+            MemoryView::Paged { page } => {
+                (round_up(rows as u64, page as u64), round_up(cols as u64, page as u64))
+            }
+        }
+    }
+
+    /// Can a tile `(tm, tk, tn)` be resident on-chip?
+    ///
+    /// * FMF on (Shared): FMUs are fungible — "FILCO can maximize data
+    ///   reuse as long as the total data size of operands and results
+    ///   does not exceed resource constraints" (paper Fig 5b): the SUM
+    ///   of stored footprints must fit the pool.
+    /// * FMF off (FixedSplit): each operand is confined to its
+    ///   compile-time share.
+    fn tile_fits(&self, tm: u32, tk: u32, tn: u32) -> bool {
+        let a = self.stored_elems(tm, tk);
+        let b = self.stored_elems(tk, tn);
+        let c = self.stored_elems(tm, tn);
+        match self.func {
+            MemoryFunc::Shared => a + b + c <= self.onchip_elems,
+            MemoryFunc::FixedSplit { a: fa, b: fb, c: fc } => {
+                let pool = self.onchip_elems as f64;
+                a as f64 <= pool * fa && b as f64 <= pool * fb && c as f64 <= pool * fc
+            }
+        }
+    }
+
+    /// Per-operand DDR traffic for a given on-chip tile: classic
+    /// tiled-MM — A re-read per N-stripe, B per M-stripe, C written
+    /// once; regions padded at the view granularity. Returns
+    /// (bytes_a, bytes_b, bytes_c).
+    fn tile_traffic(&self, shape: &MmShape, tm: u32, tk: u32, tn: u32) -> (u64, u64, u64) {
+        let b_ = shape.batch as u64;
+        let (am, ak) = self.xfer_dims(shape.m, shape.k);
+        let (bk, bn) = self.xfer_dims(shape.k, shape.n);
+        let (cm, cn) = self.xfer_dims(shape.m, shape.n);
+        let reload_a = shape.n.div_ceil(tn.max(1)) as u64;
+        let reload_b = shape.m.div_ceil(tm.max(1)) as u64;
+        let _ = tk;
+        (4 * b_ * am * ak * reload_a, 4 * b_ * bk * bn * reload_b, 4 * b_ * cm * cn)
+    }
+
+    /// Burst lengths for the three operand streams under a tile: rows of
+    /// the transferred tile are the contiguous units (wide cyclic ports
+    /// issue one burst per tile row).
+    fn tile_bursts(&self, tm: u32, tk: u32, tn: u32) -> (u64, u64, u64) {
+        (
+            (4 * self.xfer_dims(tm, tk).1).max(64),
+            (4 * self.xfer_dims(tk, tn).1).max(64),
+            (4 * self.xfer_dims(tm, tn).1).max(64),
+        )
+    }
+
+    /// Estimated DDR time for a tile choice — the quantity the Runtime
+    /// Parameter Optimizer actually minimises (bytes alone would favour
+    /// skinny tiles whose short bursts destroy effective bandwidth).
+    fn tile_ddr_time(&self, p: &Platform, shape: &MmShape, tm: u32, tk: u32, tn: u32) -> f64 {
+        let (ba, bb, bc) = self.tile_traffic(shape, tm, tk, tn);
+        let (ua, ub, uc) = self.tile_bursts(tm, tk, tn);
+        p.ddr.transfer_time_s(ba, ua)
+            + p.ddr.transfer_time_s(bb, ub)
+            + p.ddr.transfer_time_s(bc, uc)
+    }
+
+    /// Candidate tile extents for one dimension: the full extent plus
+    /// successive halvings down to the atomic granularity.
+    fn dim_candidates(full: u32, atom: u32) -> Vec<u32> {
+        let mut v = Vec::new();
+        let mut d = full.max(atom);
+        loop {
+            v.push(d);
+            if d <= atom {
+                break;
+            }
+            d = (d / 2).max(atom);
+        }
+        v
+    }
+
+    /// Choose the on-chip tile minimising estimated DDR time subject to
+    /// the residency constraint (this is what the Runtime Parameter
+    /// Optimizer's brute-force search does per layer, §3.1 Stage 1).
+    fn pick_tile(&self, p: &Platform, shape: &MmShape) -> (u32, u32, u32) {
+        let ms = Self::dim_candidates(shape.m, ATOM_M);
+        let ks = Self::dim_candidates(shape.k, ATOM_K);
+        let ns = Self::dim_candidates(shape.n, ATOM_N);
+        let mut best: Option<((u32, u32, u32), f64)> = None;
+        for &tm in &ms {
+            for &tk in &ks {
+                for &tn in &ns {
+                    if !self.tile_fits(tm, tk, tn) {
+                        continue;
+                    }
+                    let t = match self.tile_policy {
+                        TilePolicy::MinTime => self.tile_ddr_time(p, shape, tm, tk, tn),
+                        TilePolicy::MinTraffic => {
+                            let (a, b, c) = self.tile_traffic(shape, tm, tk, tn);
+                            (a + b + c) as f64
+                        }
+                    };
+                    if best.is_none_or(|(_, bt)| t < bt) {
+                        best = Some(((tm, tk, tn), t));
+                    }
+                }
+            }
+        }
+        match best {
+            Some((tile, _)) => tile,
+            // Nothing fits (pool smaller than the minimal tile): run
+            // with the minimal tile anyway; the hardware would stream.
+            None => (
+                ATOM_M.min(shape.m.max(1)),
+                ATOM_K.min(shape.k.max(1)),
+                ATOM_N.min(shape.n.max(1)),
+            ),
+        }
+    }
+
+    /// Evaluate one layer on this design under `platform`.
+    pub fn layer_perf(&self, p: &Platform, shape: &MmShape) -> LayerPerf {
+        let (gm, gk, gn) = self.compute_gran;
+        let b = shape.batch as u64;
+
+        // ---- compute ------------------------------------------------
+        let pm = round_up(shape.m as u64, gm as u64);
+        let pk = round_up(shape.k as u64, gk as u64);
+        let pn = round_up(shape.n as u64, gn as u64);
+        let cycles_one = self.kernel.mm_cycles(pm as u32, pk as u32, pn as u32);
+        // Macro-tile parallelism across AIEs: when the padded matrix has
+        // fewer 32^3 macro tiles than allocated AIEs, the surplus AIEs
+        // idle (edge quantisation).
+        let tiles = (pm.div_ceil(32) * pk.div_ceil(32) * pn.div_ceil(32)).max(1) * b;
+        let aies = self.aies().max(1) as u64;
+        // Total work spread over AIEs with macro-tile quantisation: in
+        // each "round" every AIE runs one macro tile; partial last round.
+        let rounds = tiles.div_ceil(aies) as f64;
+        let per_tile_cycles = cycles_one * b as f64 / tiles as f64;
+        let compute_cycles = rounds * per_tile_cycles;
+        let compute_s = compute_cycles / (p.aie_ghz * 1e9);
+        let useful = shape.macs() as f64;
+        let issued = (pm * pk * pn * b) as f64;
+
+        // ---- DDR traffic ---------------------------------------------
+        let (tm, tk, tn) = self.pick_tile(p, shape);
+        let (bytes_a, bytes_b, bytes_c) = self.tile_traffic(shape, tm, tk, tn);
+        let ddr_s = self.tile_ddr_time(p, shape, tm, tk, tn);
+        // Padding waste in a single pass (reload traffic is counted in
+        // ddr_s but is a tiling effect, not a padding inefficiency).
+        let (am, ak) = self.xfer_dims(shape.m, shape.k);
+        let (bk, bn) = self.xfer_dims(shape.k, shape.n);
+        let (cm, cn) = self.xfer_dims(shape.m, shape.n);
+        let once = 4 * b * (am * ak + bk * bn + cm * cn);
+        let comm_eff = shape.bytes() as f64 / once as f64;
+
+        // ---- on-chip streams ------------------------------------------
+        // Operand + result tiles stream between FMUs and CUs over the
+        // fully-connected topology; each CU has one in + one out port.
+        let stream_bytes = (bytes_a + bytes_b + bytes_c) as f64;
+        let stream_bw = self.cus as f64 * p.plio_bytes_per_sec() * 2.0;
+        let stream_s = stream_bytes / stream_bw;
+
+        let latency_s = compute_s.max(ddr_s).max(stream_s) + self.reconfig_s;
+        LayerPerf {
+            compute_s,
+            ddr_s,
+            stream_s,
+            latency_s,
+            compute_eff: useful / issued.max(1.0),
+            comm_eff,
+            tile: (tm, tk, tn),
+        }
+    }
+
+    /// Sequential makespan of a DAG on this single accelerator
+    /// (layer-at-a-time execution — how CHARM-1 and RSN run a model).
+    pub fn dag_latency(&self, p: &Platform, dag: &crate::workload::Dag) -> f64 {
+        dag.layers.iter().map(|l| self.layer_perf(p, &l.shape).latency_s).sum()
+    }
+
+    /// Throughput in GFLOP/s for a DAG run sequentially.
+    pub fn dag_gflops(&self, p: &Platform, dag: &crate::workload::Dag) -> f64 {
+        dag.total_flops() as f64 / self.dag_latency(p, dag) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FilcoConfig;
+
+    fn filco_model() -> AccModel {
+        let p = Platform::vck190();
+        let c = FilcoConfig::default_for(&p);
+        crate::baseline::filco_acc(&c, crate::arch::Features::ALL)
+    }
+
+    #[test]
+    fn large_square_is_efficient_and_balanced() {
+        // fp32 square MM with ~1 MFMU-elements of reuse buffer on a
+        // 25.6 GB/s DDR channel is mildly bandwidth-limited at every
+        // size (reuse ~ sqrt(buffer)); what must hold: near-perfect
+        // padding efficiency and a bounded comm/compute ratio, with the
+        // compute fraction growing from small to large MMs.
+        let p = Platform::vck190();
+        let m = filco_model();
+        let big = m.layer_perf(&p, &MmShape::new(2048, 2048, 2048));
+        let small = m.layer_perf(&p, &MmShape::new(128, 128, 128));
+        assert!(big.compute_eff > 0.99, "{big:?}");
+        assert!(big.comm_eff > 0.99, "{big:?}");
+        assert!(big.ddr_s / big.compute_s < 4.0, "{big:?}");
+        assert!(
+            big.compute_s / big.ddr_s > small.compute_s / small.ddr_s,
+            "compute fraction must grow with size"
+        );
+    }
+
+    #[test]
+    fn comm_bound_for_small_bert_layer() {
+        // §4.3: "for the small BERT applications, limited by a low CTC
+        // ratio, the communication time dominates" — a seq-32 projection
+        // layer is weight-dominated and DDR-bound.
+        let p = Platform::vck190();
+        let m = filco_model();
+        let perf = m.layer_perf(&p, &MmShape::new(32, 768, 768));
+        assert!(perf.ddr_s > perf.compute_s, "{perf:?}");
+    }
+
+    #[test]
+    fn latency_is_max_plus_reconfig() {
+        let p = Platform::vck190();
+        let m = filco_model();
+        let perf = m.layer_perf(&p, &MmShape::new(512, 512, 512));
+        let expect = perf.compute_s.max(perf.ddr_s).max(perf.stream_s) + m.reconfig_s;
+        assert!((perf.latency_s - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn paged_view_transfers_more() {
+        let p = Platform::vck190();
+        let mut flex = filco_model();
+        flex.view = MemoryView::Flexible;
+        let mut paged = filco_model();
+        paged.view = MemoryView::Paged { page: 256 };
+        // A 100x100 MM pads to 256x256 pages -> ~6.5x traffic.
+        let s = MmShape::new(100, 100, 100);
+        let e_flex = flex.layer_perf(&p, &s).comm_eff;
+        let e_paged = paged.layer_perf(&p, &s).comm_eff;
+        assert!(e_flex > 0.9, "flex comm_eff {e_flex}");
+        assert!(e_paged < 0.3, "paged comm_eff {e_paged}");
+    }
+
+    #[test]
+    fn fixed_split_hurts_skewed_shapes() {
+        let p = Platform::vck190();
+        let shared = filco_model();
+        let mut split = filco_model();
+        split.func = MemoryFunc::FixedSplit { a: 1.0 / 3.0, b: 1.0 / 3.0, c: 1.0 / 3.0 };
+        // A (m x k) is ~half the pool: under FMF the whole working set
+        // is resident in one pass, while the rigid 1/3 split cannot hold
+        // A and must tile + reload the other operands (paper Fig 5a).
+        let s = MmShape::new(1024, 1024, 256);
+        let l_shared = shared.layer_perf(&p, &s).latency_s;
+        let l_split = split.layer_perf(&p, &s).latency_s;
+        assert!(l_split > l_shared, "shared {l_shared} vs split {l_split}");
+    }
+
+    #[test]
+    fn more_cus_faster_compute() {
+        let p = Platform::vck190();
+        let mut m1 = filco_model();
+        m1.cus = 1;
+        let mut m8 = filco_model();
+        m8.cus = 8;
+        let s = MmShape::new(4096, 4096, 4096);
+        let c1 = m1.layer_perf(&p, &s).compute_s;
+        let c8 = m8.layer_perf(&p, &s).compute_s;
+        assert!((c1 / c8 - 8.0).abs() < 0.5, "c1/c8 = {}", c1 / c8);
+    }
+
+    #[test]
+    fn batch_scales_work() {
+        let p = Platform::vck190();
+        let m = filco_model();
+        let s1 = MmShape::new(256, 64, 256);
+        let s12 = MmShape::batched(12, 256, 64, 256);
+        let l1 = m.layer_perf(&p, &s1);
+        let l12 = m.layer_perf(&p, &s12);
+        // Batch 1 of a 256x64x256 MM cannot fill 384 AIEs (128 macro
+        // tiles); batching improves utilisation, so the slowdown is
+        // sub-linear but at least ~3x.
+        assert!(l12.compute_s > 2.9 * l1.compute_s, "l1 {} l12 {}", l1.compute_s, l12.compute_s);
+        assert!(l12.compute_s < 12.1 * l1.compute_s);
+    }
+
+    #[test]
+    fn dag_gflops_positive_and_bounded() {
+        let p = Platform::vck190();
+        let m = filco_model();
+        let dag = crate::workload::zoo::bert_layers(128, 1);
+        let g = m.dag_gflops(&p, &dag);
+        let peak = p.aie_peak_flops(m.aies()) / 1e9;
+        assert!(g > 0.0 && g <= peak, "gflops {g} peak {peak}");
+    }
+
+    #[test]
+    fn tile_fits_capacities() {
+        let p = Platform::vck190();
+        let m = filco_model();
+        let s = MmShape::new(4096, 4096, 4096);
+        let perf = m.layer_perf(&p, &s);
+        let (tm, tk, tn) = perf.tile;
+        assert!(m.tile_fits(tm, tk, tn), "tile {:?} overflows pool", perf.tile);
+    }
+}

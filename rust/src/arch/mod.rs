@@ -1,0 +1,211 @@
+//! FILCO architecture configuration (paper §2.1, Fig 2).
+//!
+//! *Static parameters* — fixed before compilation (§2.5): the number and
+//! capacity of FMUs/CUs, AIEs per CU, and the stream topology. Everything
+//! else (tile sizes, buffer views, FMU functionality, routing choices) is
+//! a *runtime parameter* delivered via the ISA.
+
+use crate::platform::Platform;
+
+/// The three flexibility features ablated in Fig 10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Features {
+    /// Flexible parallelism (§2.2): runtime-flexible AIE tile sizes.
+    pub fp: bool,
+    /// Flexible memory functionality (§2.4): FMUs assigned to operands /
+    /// results at runtime.
+    pub fmf: bool,
+    /// Flexible memory views (§2.3): 1-D buffers viewed as any shape.
+    pub fmv: bool,
+}
+
+impl Features {
+    pub const ALL: Features = Features { fp: true, fmf: true, fmv: true };
+    pub const NONE: Features = Features { fp: false, fmf: false, fmv: false };
+    pub const FP: Features = Features { fp: true, fmf: false, fmv: false };
+    pub const FP_FMF: Features = Features { fp: true, fmf: true, fmv: false };
+
+    pub fn label(&self) -> String {
+        if *self == Features::ALL {
+            return "FILCO(FP,FMF,FMV)".into();
+        }
+        let mut parts = Vec::new();
+        if self.fp {
+            parts.push("FP");
+        }
+        if self.fmf {
+            parts.push("FMF");
+        }
+        if self.fmv {
+            parts.push("FMV");
+        }
+        if parts.is_empty() {
+            "FILCO(none)".into()
+        } else {
+            format!("FILCO({})", parts.join(","))
+        }
+    }
+}
+
+/// The atomic AIE operation: a 2x8x8 tiled MM packed into one VLIW op
+/// (§2.2). Kept in one place; the Pallas kernel mirrors it (flexmm.py).
+pub const ATOM_M: u32 = 2;
+pub const ATOM_K: u32 = 8;
+pub const ATOM_N: u32 = 8;
+
+/// Maximum AIE compute tile (bounded by 32 KB local memory with double
+/// buffering): 32x32x32 fp32.
+pub const MAX_TILE_M: u32 = 32;
+pub const MAX_TILE_K: u32 = 32;
+pub const MAX_TILE_N: u32 = 32;
+
+/// Static FILCO configuration: N FMUs, M CUs, K AIEs per CU (§2.1).
+#[derive(Debug, Clone)]
+pub struct FilcoConfig {
+    /// N — number of Flexible Memory Units.
+    pub n_fmus: u32,
+    /// M — number of Compute Units.
+    pub m_cus: u32,
+    /// K — AIE tiles per CU.
+    pub aies_per_cu: u32,
+    /// Capacity of one FMU buffer (bytes, per ping/pong half).
+    pub fmu_bytes: u64,
+    /// CU buffer bytes (sized to the maximum AIE tile set, block
+    /// partitioned — §2.1).
+    pub cu_buf_bytes: u64,
+    /// Enabled flexibility features.
+    pub features: Features,
+}
+
+impl FilcoConfig {
+    /// Default partition of a platform: use ~96% of the AIE array in 8
+    /// CUs and split PL SRAM between 16 FMUs (double-buffered) and the
+    /// CU buffers.
+    pub fn default_for(p: &Platform) -> Self {
+        let m_cus = 8;
+        let aies_per_cu = (p.aie_tiles * 24 / 25) / m_cus; // 384/8 = 48 on VCK190
+        let n_fmus = 16;
+        // CU buffer ("sized to match the maximum AIE tile", §2.1): a
+        // block-partitioned staging area holding 8 in-flight tile
+        // triples (A, B, C at 32x32x4 B), double buffered — per CU, not
+        // per AIE: AIE-local memory holds the working tiles; the CU
+        // buffer only decouples FMU streams from the mesh.
+        let tile_triple = (32 * 32 * 3) as u64 * 4;
+        let cu_buf_bytes = tile_triple * 8 * 2;
+        let cu_total = cu_buf_bytes * m_cus as u64;
+        let fmu_pool = p.pl_sram_bytes.saturating_sub(cu_total);
+        // Each FMU holds a double buffer: capacity below is one half.
+        let fmu_bytes = fmu_pool / n_fmus as u64 / 2;
+        Self {
+            n_fmus,
+            m_cus,
+            aies_per_cu,
+            fmu_bytes,
+            cu_buf_bytes,
+            features: Features::ALL,
+        }
+    }
+
+    /// Same fabric with different feature flags (Fig 10 ablation).
+    pub fn with_features(mut self, f: Features) -> Self {
+        self.features = f;
+        self
+    }
+
+    /// Total AIE tiles used.
+    pub fn aie_tiles_used(&self) -> u32 {
+        self.m_cus * self.aies_per_cu
+    }
+
+    /// fp32 elements one FMU half-buffer can hold.
+    pub fn fmu_elems(&self) -> u64 {
+        self.fmu_bytes / 4
+    }
+
+    /// Consistency checks against the platform (static parameters must
+    /// fit before "compile time").
+    pub fn validate(&self, p: &Platform) -> Result<(), String> {
+        if self.aie_tiles_used() > p.aie_tiles {
+            return Err(format!(
+                "{} AIEs used > {} available",
+                self.aie_tiles_used(),
+                p.aie_tiles
+            ));
+        }
+        let sram = self.cu_buf_bytes * self.m_cus as u64 + self.fmu_bytes * 2 * self.n_fmus as u64;
+        if sram > p.pl_sram_bytes {
+            return Err(format!("{} B SRAM used > {} available", sram, p.pl_sram_bytes));
+        }
+        if self.n_fmus == 0 || self.m_cus == 0 || self.aies_per_cu == 0 {
+            return Err("degenerate configuration".into());
+        }
+        // The fully-connected FMU<->CU stream topology (§2.1) needs
+        // N*M streams each way; bound by PLIO ports * a generous mux
+        // factor — flag absurd configs.
+        if self.n_fmus * self.m_cus > p.plio_ports * 16 {
+            return Err("stream topology exceeds routable fabric".into());
+        }
+        Ok(())
+    }
+
+    /// Peak fp32 FLOP/s of `cus` compute units on platform `p`.
+    pub fn peak_flops(&self, p: &Platform, cus: u32) -> f64 {
+        p.aie_peak_flops(cus.min(self.m_cus) * self.aies_per_cu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_fits_vck190() {
+        let p = Platform::vck190();
+        let c = FilcoConfig::default_for(&p);
+        c.validate(&p).expect("default config must validate");
+        assert_eq!(c.aie_tiles_used(), 384);
+        assert_eq!(c.n_fmus, 16);
+    }
+
+    #[test]
+    fn fmu_capacity_reasonable() {
+        // Each FMU half-buffer should hold at least a 256x256 fp32 matrix
+        // (the paper's FMV example stores 256x256 / 128x512 in one FMU).
+        let c = FilcoConfig::default_for(&Platform::vck190());
+        assert!(c.fmu_elems() >= 256 * 256, "fmu_elems = {}", c.fmu_elems());
+    }
+
+    #[test]
+    fn validate_rejects_oversubscription() {
+        let p = Platform::vck190();
+        let mut c = FilcoConfig::default_for(&p);
+        c.aies_per_cu = 1000;
+        assert!(c.validate(&p).is_err());
+
+        let mut c2 = FilcoConfig::default_for(&p);
+        c2.fmu_bytes = p.pl_sram_bytes;
+        assert!(c2.validate(&p).is_err());
+    }
+
+    #[test]
+    fn feature_labels() {
+        assert_eq!(Features::ALL.label(), "FILCO(FP,FMF,FMV)");
+        assert_eq!(Features::FP.label(), "FILCO(FP)");
+        assert_eq!(Features::NONE.label(), "FILCO(none)");
+    }
+
+    #[test]
+    fn peak_flops_scales_with_cus() {
+        let p = Platform::vck190();
+        let c = FilcoConfig::default_for(&p);
+        let one = c.peak_flops(&p, 1);
+        let all = c.peak_flops(&p, c.m_cus);
+        assert!((all / one - c.m_cus as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn atom_matches_kernel() {
+        // Must agree with python/compile/kernels/flexmm.py ATOM_*.
+        assert_eq!((ATOM_M, ATOM_K, ATOM_N), (2, 8, 8));
+    }
+}

@@ -1,0 +1,88 @@
+//! Baseline accelerator designs + FILCO design-point constructors.
+//!
+//! All designs are parameter points of [`crate::analytical::AccModel`]
+//! so every Fig 1/9/10 comparison uses the same underlying equations:
+//!
+//! * [`charm`] — CHARM [35]: monolithic (CHARM-1) and multi-accelerator
+//!   (CHARM-2/-3) fixed-dataflow designs with static buffer shapes.
+//! * [`rsn`] — RSN [24]: overlay with flexible operand->memory mapping
+//!   but a fixed on-chip page shape and static computation tiles.
+//! * [`filco_acc`] — FILCO on the same fabric with any feature subset
+//!   (the Fig 10 ablation axis).
+
+pub mod charm;
+pub mod rsn;
+
+use crate::analytical::aie::AieKernelModel;
+use crate::analytical::{AccModel, MemoryFunc, MemoryView};
+use crate::arch::{Features, FilcoConfig};
+
+/// Build the FILCO accelerator model from a fabric config + features.
+///
+/// Feature mapping (paper §2.2–2.4):
+/// * FP on  -> atomic compute granularity + flexible kernel schedule;
+///   off -> static 32x32x32 kernel with full-tile padding.
+/// * FMV on -> flexible 1-D views; off -> fixed 256x256 buffer views
+///   (the example geometry in Fig 4b).
+/// * FMF on -> shared FMU pool; off -> fixed 1/3:1/3:1/3 A:B:C split.
+pub fn filco_acc(cfg: &FilcoConfig, f: Features) -> AccModel {
+    AccModel {
+        name: f.label(),
+        cus: cfg.m_cus,
+        aies_per_cu: cfg.aies_per_cu,
+        onchip_elems: cfg.fmu_elems() * cfg.n_fmus as u64,
+        compute_gran: if f.fp {
+            (crate::arch::ATOM_M, crate::arch::ATOM_K, crate::arch::ATOM_N)
+        } else {
+            (32, 32, 32)
+        },
+        view: if f.fmv { MemoryView::Flexible } else { MemoryView::Paged { page: 256 } },
+        func: if f.fmf {
+            MemoryFunc::Shared
+        } else {
+            MemoryFunc::FixedSplit { a: 1.0 / 3.0, b: 1.0 / 3.0, c: 1.0 / 3.0 }
+        },
+        kernel: if f.fp { AieKernelModel::Flexible } else { AieKernelModel::Static },
+        // Runtime reconfiguration = decoding a few bytes of instructions
+        // per unit at PL clock. The instruction stream runs ahead of
+        // execution (double-buffered decode), so only a fraction of the
+        // ~1 µs decode is exposed per layer.
+        reconfig_s: 0.2e-6,
+        tile_policy: Default::default(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+    use crate::workload::MmShape;
+
+    #[test]
+    fn filco_full_features_beats_none() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let full = filco_acc(&cfg, Features::ALL);
+        let none = filco_acc(&cfg, Features::NONE);
+        // Small diverse MM: flexibility should win decisively.
+        let s = MmShape::new(48, 100, 24);
+        let lf = full.layer_perf(&p, &s).latency_s;
+        let ln = none.layer_perf(&p, &s).latency_s;
+        assert!(ln > 2.0 * lf, "none {ln} vs full {lf}");
+    }
+
+    #[test]
+    fn features_monotone_on_small_diverse() {
+        // Each added feature must not hurt (on the shapes the paper
+        // motivates: small + skewed).
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let s = MmShape::new(100, 48, 20);
+        let l = |f: Features| filco_acc(&cfg, f).layer_perf(&p, &s).latency_s;
+        let fp = l(Features::FP);
+        let fp_fmf = l(Features::FP_FMF);
+        let all = l(Features::ALL);
+        assert!(fp >= fp_fmf * 0.999, "fp {fp} fmf {fp_fmf}");
+        assert!(fp_fmf >= all * 0.999, "fmf {fp_fmf} all {all}");
+    }
+}

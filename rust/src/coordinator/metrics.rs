@@ -1,0 +1,108 @@
+//! Serving metrics: per-request latency tracking and throughput summary.
+
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Running};
+
+/// Accumulates request latencies + byte/flop counters for a serving run.
+#[derive(Debug)]
+pub struct Metrics {
+    started: Instant,
+    latencies_s: Vec<f64>,
+    running: Running,
+    pub total_flops: u64,
+    pub errors: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            latencies_s: Vec::new(),
+            running: Running::new(),
+            total_flops: 0,
+            errors: 0,
+        }
+    }
+
+    pub fn record(&mut self, latency_s: f64, flops: u64) {
+        self.latencies_s.push(latency_s);
+        self.running.push(latency_s);
+        self.total_flops += flops;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_s.len()
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        self.running.mean()
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.latencies_s, 0.50)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.latencies_s, 0.99)
+    }
+
+    /// Requests per second over the wall-clock window so far.
+    pub fn throughput_rps(&self) -> f64 {
+        self.count() as f64 / self.started.elapsed().as_secs_f64().max(1e-12)
+    }
+
+    /// Achieved GFLOP/s of useful work.
+    pub fn gflops(&self) -> f64 {
+        self.total_flops as f64 / self.started.elapsed().as_secs_f64().max(1e-12) / 1e9
+    }
+
+    pub fn summary(&self) -> String {
+        if self.latencies_s.is_empty() {
+            return "no requests".to_string();
+        }
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms rps={:.1} errors={}",
+            self.count(),
+            self.mean_latency_s() * 1e3,
+            self.p50() * 1e3,
+            self.p99() * 1e3,
+            self.running.max() * 1e3,
+            self.throughput_rps(),
+            self.errors,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarises() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record(i as f64 / 1000.0, 1000);
+        }
+        assert_eq!(m.count(), 100);
+        assert!((m.p50() - 0.0505).abs() < 1e-3);
+        assert!(m.p99() > 0.098);
+        assert_eq!(m.total_flops, 100_000);
+        assert!(m.summary().contains("n=100"));
+    }
+
+    #[test]
+    fn empty_summary_safe() {
+        assert_eq!(Metrics::new().summary(), "no requests");
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator — the FILCO control plane plus the serving runtime.
+//!
+//! * [`instrgen`] — the Instruction Generator (paper Fig 6): lowers a
+//!   DSE [`crate::dse::Schedule`] into per-unit [`crate::isa::Program`]
+//!   streams (tiled loads, FMU view/functionality switches, CU kernel
+//!   launches with runtime loop bounds).
+//! * [`serving`] — leader loop: request queue, per-model batching,
+//!   dispatch to the PJRT runtime for numerics with fabric timing from
+//!   the analytical model/simulator.
+//! * [`reconfig`] — real-time reconfiguration manager: composes the
+//!   fabric into one unified accelerator or several independent ones
+//!   (the paper's headline capability) by repartitioning FMUs/CUs
+//!   between tenants at runtime.
+//! * [`metrics`] — latency/throughput accounting.
+
+pub mod instrgen;
+pub mod metrics;
+pub mod reconfig;
+pub mod serving;

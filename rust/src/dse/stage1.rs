@@ -1,0 +1,180 @@
+//! Stage 1 — Runtime Parameter Optimizer (paper §3.1).
+//!
+//! "Performs a brute-force search on every layer to find the optimal
+//! runtime dataflow, as well as a table with the optimal latency under
+//! the constraints of FMU and CU."
+//!
+//! For each layer we sweep the allocation grid (number of FMUs `f`,
+//! number of CUs `c`); the analytical model picks the best on-chip tile
+//! for that allocation (its own inner brute force) and yields latency
+//! `e_ik`. Dominated modes (≥ resources AND ≥ latency than another) are
+//! pruned so Stage 2 searches only the Pareto frontier.
+
+use crate::analytical::AccModel;
+use crate::arch::FilcoConfig;
+use crate::platform::Platform;
+use crate::workload::Dag;
+
+use super::schedule::{CandidateTable, Mode};
+
+/// The model for a fabric *slice*: `c` CUs and `f` FMUs of the FILCO
+/// configuration, with the configured features.
+pub fn slice_model(cfg: &FilcoConfig, f: u32, c: u32) -> AccModel {
+    let mut m = crate::baseline::filco_acc(cfg, cfg.features);
+    m.cus = c;
+    m.onchip_elems = cfg.fmu_elems() * f as u64;
+    m
+}
+
+/// FMU allocation candidates: powers of two up to N (the fully-connected
+/// stream topology lets any subset feed any CU, so only the count
+/// matters to the model).
+fn fmu_grid(n_fmus: u32) -> Vec<u32> {
+    let mut v = Vec::new();
+    let mut f = 1;
+    while f < n_fmus {
+        v.push(f);
+        f *= 2;
+    }
+    v.push(n_fmus);
+    v
+}
+
+/// Brute-force the candidate table for every layer of `dag`.
+///
+/// Perf: DNN DAGs repeat a handful of layer shapes (a 12-layer BERT has
+/// 96 MMs but only 5 distinct shapes), so results are memoised per
+/// shape — the §Perf log measured a 16x Stage-1 speedup on BERT-128.
+pub fn optimize(p: &Platform, cfg: &FilcoConfig, dag: &Dag) -> CandidateTable {
+    let fgrid = fmu_grid(cfg.n_fmus);
+    let mut memo: std::collections::HashMap<crate::workload::MmShape, Vec<Mode>> =
+        std::collections::HashMap::new();
+    let mut modes = Vec::with_capacity(dag.len());
+    for layer in &dag.layers {
+        if let Some(hit) = memo.get(&layer.shape) {
+            modes.push(hit.clone());
+            continue;
+        }
+        let mut cand: Vec<Mode> = Vec::new();
+        for &f in &fgrid {
+            for c in 1..=cfg.m_cus {
+                let model = slice_model(cfg, f, c);
+                let perf = model.layer_perf(p, &layer.shape);
+                cand.push(Mode {
+                    fmus: f,
+                    cus: c,
+                    latency_s: perf.latency_s,
+                    tile: perf.tile,
+                });
+            }
+        }
+        // Pareto prune: drop modes dominated in (fmus, cus, latency).
+        let mut keep: Vec<Mode> = Vec::new();
+        for m in &cand {
+            let dominated = cand.iter().any(|o| {
+                (o.fmus <= m.fmus && o.cus <= m.cus && o.latency_s < m.latency_s - 1e-15)
+                    || (o.fmus < m.fmus && o.cus <= m.cus && o.latency_s <= m.latency_s)
+                    || (o.fmus <= m.fmus && o.cus < m.cus && o.latency_s <= m.latency_s)
+            });
+            if !dominated {
+                keep.push(*m);
+            }
+        }
+        // Deduplicate identical survivors.
+        keep.sort_by(|a, b| {
+            (a.fmus, a.cus)
+                .cmp(&(b.fmus, b.cus))
+                .then(a.latency_s.partial_cmp(&b.latency_s).unwrap())
+        });
+        keep.dedup_by(|a, b| a.fmus == b.fmus && a.cus == b.cus);
+        memo.insert(layer.shape, keep.clone());
+        modes.push(keep);
+    }
+    CandidateTable { modes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{zoo, MmShape};
+
+    fn setup() -> (Platform, FilcoConfig) {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        (p, cfg)
+    }
+
+    #[test]
+    fn every_layer_has_candidates() {
+        let (p, cfg) = setup();
+        let dag = zoo::bert_layers(64, 1);
+        let t = optimize(&p, &cfg, &dag);
+        assert_eq!(t.num_layers(), dag.len());
+        for ms in &t.modes {
+            assert!(!ms.is_empty());
+            for m in ms {
+                assert!(m.fmus >= 1 && m.fmus <= cfg.n_fmus);
+                assert!(m.cus >= 1 && m.cus <= cfg.m_cus);
+                assert!(m.latency_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_no_dominated_modes() {
+        let (p, cfg) = setup();
+        let dag = zoo::mlp_s();
+        let t = optimize(&p, &cfg, &dag);
+        for ms in &t.modes {
+            for a in ms {
+                for b in ms {
+                    if a == b {
+                        continue;
+                    }
+                    let dominates = b.fmus <= a.fmus
+                        && b.cus <= a.cus
+                        && b.latency_s <= a.latency_s
+                        && (b.fmus < a.fmus || b.cus < a.cus || b.latency_s < a.latency_s - 1e-15);
+                    assert!(!dominates, "{b:?} dominates {a:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compute_heavy_layer_prefers_more_cus() {
+        // For a big square MM the fastest mode must saturate: its
+        // latency equals the full-fabric allocation's latency (ties may
+        // keep a smaller CU count when DDR-bound — also optimal).
+        let (p, cfg) = setup();
+        let mut dag = Dag::new("one");
+        dag.add("big", MmShape::new(4096, 4096, 4096));
+        let t = optimize(&p, &cfg, &dag);
+        let fastest = t.fastest(0);
+        assert!(fastest.cus >= cfg.m_cus / 2, "fastest {fastest:?}");
+        let full = slice_model(&cfg, cfg.n_fmus, cfg.m_cus)
+            .layer_perf(&p, &dag.layers[0].shape)
+            .latency_s;
+        assert!(fastest.latency_s <= full * 1.0001, "fastest {fastest:?} vs full {full}");
+    }
+
+    #[test]
+    fn small_layer_has_cheap_mode_close_to_fastest() {
+        // Small layers can't use the whole fabric: some low-resource
+        // mode should be within 2x of the fastest latency, enabling
+        // Stage-2 packing (this is FILCO's composability win).
+        let (p, cfg) = setup();
+        let mut dag = Dag::new("one");
+        dag.add("small", MmShape::new(64, 64, 64));
+        let t = optimize(&p, &cfg, &dag);
+        let fastest = t.fastest(0).latency_s;
+        let cheap = t.modes[0]
+            .iter()
+            .filter(|m| m.cus <= 2 && m.fmus <= 4)
+            .map(|m| m.latency_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!(cheap < 2.0 * fastest, "cheap {cheap} vs fastest {fastest}");
+    }
+
+    use crate::workload::Dag;
+}

@@ -1,0 +1,120 @@
+//! Human-readable disassembly of FILCO instruction streams (debugging
+//! aid + the `filco disasm` CLI subcommand).
+
+use super::program::{Program, UnitId};
+use super::words::*;
+
+fn view_str(v: &TileView) -> String {
+    format!("[{}:{}, {}:{}]", v.start_row, v.end_row, v.start_col, v.end_col)
+}
+
+/// One-line rendering of a single instruction.
+pub fn disasm_instr(i: &Instr) -> String {
+    let last = if i.is_last() { " !last" } else { "" };
+    match i {
+        Instr::Header(h) => {
+            format!("HDR  des={} len={}{last}", h.des_unit, h.valid_length)
+        }
+        Instr::IomLoad(l) => format!(
+            "LOAD ddr={:#x} -> FMU{} dims={}x{} view={}{last}",
+            l.ddr_addr,
+            l.des_fmu,
+            l.m,
+            l.n,
+            view_str(&l.view)
+        ),
+        Instr::IomStore(s) => format!(
+            "STOR FMU{} -> ddr={:#x} dims={}x{} view={}{last}",
+            s.src_fmu,
+            s.ddr_addr,
+            s.m,
+            s.n,
+            view_str(&s.view)
+        ),
+        Instr::Fmu(f) => format!(
+            "FMU  ping={:?} pong={:?} src=CU{} des=CU{} count={} view={}{last}",
+            f.ping_op,
+            f.pong_op,
+            f.src_cu,
+            f.des_cu,
+            f.count,
+            view_str(&f.view)
+        ),
+        Instr::Cu(c) => format!(
+            "CU   ping={:?} pong={:?} src=FMU{} des=FMU{} count={} mm={}x{}x{}{last}",
+            c.ping_op, c.pong_op, c.src_fmu, c.des_fmu, c.count, c.m, c.k, c.n
+        ),
+    }
+}
+
+/// Full program listing, grouped per unit.
+pub fn disasm_program(p: &Program) -> String {
+    let mut out = String::new();
+    let mut units: Vec<UnitId> = p.units().collect();
+    units.sort();
+    for u in units {
+        out.push_str(&format!("== {u} ==\n"));
+        for (idx, i) in p.stream(u).iter().enumerate() {
+            out.push_str(&format!("  {idx:4}: {}\n", disasm_instr(i)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_kinds() {
+        let instrs = [
+            Instr::Header(HeaderInstr { is_last: false, des_unit: UnitId::Fmu(2), valid_length: 4 }),
+            Instr::IomLoad(IomLoadInstr {
+                is_last: false,
+                ddr_addr: 0x1000,
+                des_fmu: 1,
+                m: 64,
+                n: 64,
+                view: TileView::full(64, 64),
+            }),
+            Instr::Fmu(FmuInstr {
+                is_last: true,
+                ping_op: FmuOp::RecvFromIom,
+                pong_op: FmuOp::SendToCu,
+                src_cu: 0,
+                des_cu: 3,
+                count: 4096,
+                view: TileView::full(64, 64),
+            }),
+        ];
+        for i in &instrs {
+            let s = disasm_instr(i);
+            assert!(!s.is_empty());
+        }
+        assert!(disasm_instr(&instrs[2]).contains("!last"));
+        assert!(disasm_instr(&instrs[1]).contains("0x1000"));
+    }
+
+    #[test]
+    fn program_listing_groups_by_unit() {
+        let mut p = Program::new();
+        p.push(
+            UnitId::Cu(0),
+            Instr::Cu(CuInstr {
+                is_last: false,
+                ping_op: CuOp::ComputeMm,
+                pong_op: CuOp::Idle,
+                src_fmu: 0,
+                des_fmu: 1,
+                count: 1,
+                m: 32,
+                k: 32,
+                n: 32,
+            }),
+        );
+        p.seal();
+        let txt = disasm_program(&p);
+        assert!(txt.contains("== CU0 =="));
+        assert!(txt.contains("mm=32x32x32"));
+    }
+}

@@ -1,0 +1,338 @@
+//! Fixed-width binary encoding for instruction words.
+//!
+//! Layout: 1 opcode byte, then little-endian fields. The FMU pattern
+//! switch the paper highlights ("switched by decoding a few bytes of
+//! instructions", §2.5) corresponds to the 2-byte op pair at the head of
+//! the FMU word.
+
+use super::program::UnitId;
+use super::words::*;
+
+/// Opcode tags.
+const OP_HEADER: u8 = 0x01;
+const OP_IOM_LOAD: u8 = 0x02;
+const OP_IOM_STORE: u8 = 0x03;
+const OP_FMU: u8 = 0x04;
+const OP_CU: u8 = 0x05;
+
+/// Flags byte: bit0 = is_last.
+const FLAG_LAST: u8 = 0x01;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum DecodeError {
+    #[error("truncated instruction at byte {0}")]
+    Truncated(usize),
+    #[error("unknown opcode {0:#x} at byte {1}")]
+    BadOpcode(u8, usize),
+    #[error("invalid field: {0}")]
+    BadField(&'static str),
+}
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+    fn u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    fn view(&mut self, v: &TileView) {
+        self.u32(v.start_row);
+        self.u32(v.end_row);
+        self.u32(v.start_col);
+        self.u32(v.end_col);
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.i + n > self.b.len() {
+            return Err(DecodeError::Truncated(self.i));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, DecodeError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16, DecodeError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn view(&mut self) -> Result<TileView, DecodeError> {
+        Ok(TileView {
+            start_row: self.u32()?,
+            end_row: self.u32()?,
+            start_col: self.u32()?,
+            end_col: self.u32()?,
+        })
+    }
+}
+
+/// Encode one instruction, appending to `out`.
+pub fn encode_into(instr: &Instr, out: &mut Vec<u8>) {
+    let mut w = Writer { buf: std::mem::take(out) };
+    let flags = |b: bool| if b { FLAG_LAST } else { 0 };
+    match instr {
+        Instr::Header(h) => {
+            w.u8(OP_HEADER);
+            w.u8(flags(h.is_last));
+            w.u16(h.des_unit.code());
+            w.u32(h.valid_length);
+        }
+        Instr::IomLoad(i) => {
+            w.u8(OP_IOM_LOAD);
+            w.u8(flags(i.is_last));
+            w.u64(i.ddr_addr);
+            w.u16(i.des_fmu);
+            w.u32(i.m);
+            w.u32(i.n);
+            w.view(&i.view);
+        }
+        Instr::IomStore(i) => {
+            w.u8(OP_IOM_STORE);
+            w.u8(flags(i.is_last));
+            w.u64(i.ddr_addr);
+            w.u16(i.src_fmu);
+            w.u32(i.m);
+            w.u32(i.n);
+            w.view(&i.view);
+        }
+        Instr::Fmu(i) => {
+            w.u8(OP_FMU);
+            w.u8(flags(i.is_last));
+            w.u8(i.ping_op.code());
+            w.u8(i.pong_op.code());
+            w.u16(i.src_cu);
+            w.u16(i.des_cu);
+            w.u32(i.count);
+            w.view(&i.view);
+        }
+        Instr::Cu(i) => {
+            w.u8(OP_CU);
+            w.u8(flags(i.is_last));
+            w.u8(i.ping_op.code());
+            w.u8(i.pong_op.code());
+            w.u16(i.src_fmu);
+            w.u16(i.des_fmu);
+            w.u32(i.count);
+            w.u32(i.m);
+            w.u32(i.k);
+            w.u32(i.n);
+        }
+    }
+    *out = w.buf;
+}
+
+/// Encode a whole stream.
+pub fn encode_stream(instrs: &[Instr]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(instrs.len() * 32);
+    for i in instrs {
+        encode_into(i, &mut out);
+    }
+    out
+}
+
+/// Decode one instruction starting at `r.i`.
+fn decode_one(r: &mut Reader) -> Result<Instr, DecodeError> {
+    let at = r.i;
+    let op = r.u8()?;
+    let flags = r.u8()?;
+    let is_last = flags & FLAG_LAST != 0;
+    match op {
+        OP_HEADER => {
+            let code = r.u16()?;
+            let des_unit = UnitId::from_code(code).ok_or(DecodeError::BadField("des_unit"))?;
+            Ok(Instr::Header(HeaderInstr { is_last, des_unit, valid_length: r.u32()? }))
+        }
+        OP_IOM_LOAD => Ok(Instr::IomLoad(IomLoadInstr {
+            is_last,
+            ddr_addr: r.u64()?,
+            des_fmu: r.u16()?,
+            m: r.u32()?,
+            n: r.u32()?,
+            view: r.view()?,
+        })),
+        OP_IOM_STORE => Ok(Instr::IomStore(IomStoreInstr {
+            is_last,
+            ddr_addr: r.u64()?,
+            src_fmu: r.u16()?,
+            m: r.u32()?,
+            n: r.u32()?,
+            view: r.view()?,
+        })),
+        OP_FMU => {
+            let ping_op = FmuOp::from_code(r.u8()?).ok_or(DecodeError::BadField("ping_op"))?;
+            let pong_op = FmuOp::from_code(r.u8()?).ok_or(DecodeError::BadField("pong_op"))?;
+            Ok(Instr::Fmu(FmuInstr {
+                is_last,
+                ping_op,
+                pong_op,
+                src_cu: r.u16()?,
+                des_cu: r.u16()?,
+                count: r.u32()?,
+                view: r.view()?,
+            }))
+        }
+        OP_CU => {
+            let ping_op = CuOp::from_code(r.u8()?).ok_or(DecodeError::BadField("ping_op"))?;
+            let pong_op = CuOp::from_code(r.u8()?).ok_or(DecodeError::BadField("pong_op"))?;
+            Ok(Instr::Cu(CuInstr {
+                is_last,
+                ping_op,
+                pong_op,
+                src_fmu: r.u16()?,
+                des_fmu: r.u16()?,
+                count: r.u32()?,
+                m: r.u32()?,
+                k: r.u32()?,
+                n: r.u32()?,
+            }))
+        }
+        other => Err(DecodeError::BadOpcode(other, at)),
+    }
+}
+
+/// Decode a whole stream.
+pub fn decode_stream(bytes: &[u8]) -> Result<Vec<Instr>, DecodeError> {
+    let mut r = Reader { b: bytes, i: 0 };
+    let mut out = Vec::new();
+    while r.i < r.b.len() {
+        out.push(decode_one(&mut r)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+    use crate::util::rng::SplitMix64;
+
+    fn arbitrary_view(rng: &mut SplitMix64) -> TileView {
+        let sr = rng.below(512) as u32;
+        let sc = rng.below(512) as u32;
+        TileView {
+            start_row: sr,
+            end_row: sr + 1 + rng.below(512) as u32,
+            start_col: sc,
+            end_col: sc + 1 + rng.below(512) as u32,
+        }
+    }
+
+    fn arbitrary_instr(rng: &mut SplitMix64) -> Instr {
+        match rng.below(5) {
+            0 => Instr::Header(HeaderInstr {
+                is_last: rng.below(2) == 1,
+                des_unit: UnitId::from_code(rng.below(100) as u16).unwrap(),
+                valid_length: rng.next_u64() as u32,
+            }),
+            1 => Instr::IomLoad(IomLoadInstr {
+                is_last: rng.below(2) == 1,
+                ddr_addr: rng.next_u64(),
+                des_fmu: rng.below(64) as u16,
+                m: rng.below(4096) as u32,
+                n: rng.below(4096) as u32,
+                view: arbitrary_view(rng),
+            }),
+            2 => Instr::IomStore(IomStoreInstr {
+                is_last: rng.below(2) == 1,
+                ddr_addr: rng.next_u64(),
+                src_fmu: rng.below(64) as u16,
+                m: rng.below(4096) as u32,
+                n: rng.below(4096) as u32,
+                view: arbitrary_view(rng),
+            }),
+            3 => Instr::Fmu(FmuInstr {
+                is_last: rng.below(2) == 1,
+                ping_op: FmuOp::from_code(rng.below(5) as u8).unwrap(),
+                pong_op: FmuOp::from_code(rng.below(5) as u8).unwrap(),
+                src_cu: rng.below(64) as u16,
+                des_cu: rng.below(64) as u16,
+                count: rng.next_u64() as u32,
+                view: arbitrary_view(rng),
+            }),
+            _ => Instr::Cu(CuInstr {
+                is_last: rng.below(2) == 1,
+                ping_op: CuOp::from_code(rng.below(3) as u8).unwrap(),
+                pong_op: CuOp::from_code(rng.below(3) as u8).unwrap(),
+                src_fmu: rng.below(64) as u16,
+                des_fmu: rng.below(64) as u16,
+                count: rng.next_u64() as u32,
+                m: rng.below(1024) as u32,
+                k: rng.below(1024) as u32,
+                n: rng.below(1024) as u32,
+            }),
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        Cases::new(500).run(|rng| {
+            let n = rng.range(1, 20);
+            let instrs: Vec<Instr> = (0..n).map(|_| arbitrary_instr(rng)).collect();
+            let bytes = encode_stream(&instrs);
+            let back = decode_stream(&bytes).expect("decode");
+            assert_eq!(instrs, back);
+        });
+    }
+
+    #[test]
+    fn decode_rejects_bad_opcode() {
+        let err = decode_stream(&[0xFF, 0x00]).unwrap_err();
+        assert_eq!(err, DecodeError::BadOpcode(0xFF, 0));
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let instrs = vec![Instr::Header(HeaderInstr {
+            is_last: true,
+            des_unit: UnitId::Cu(3),
+            valid_length: 9,
+        })];
+        let mut bytes = encode_stream(&instrs);
+        bytes.pop();
+        assert!(matches!(decode_stream(&bytes), Err(DecodeError::Truncated(_))));
+    }
+
+    #[test]
+    fn decode_rejects_bad_fmu_op() {
+        // Craft an FMU word with ping_op code 7.
+        let bytes = vec![0x04, 0x00, 0x07, 0x00];
+        assert!(matches!(decode_stream(&bytes), Err(DecodeError::BadField("ping_op"))));
+    }
+
+    #[test]
+    fn instruction_size_budget() {
+        // The paper notes only 16 KB of AIE instruction memory; FILCO
+        // instruction words must stay tiny ("a few bytes"). Assert every
+        // word encodes under 40 bytes.
+        let mut rng = SplitMix64::new(3);
+        for _ in 0..100 {
+            let i = arbitrary_instr(&mut rng);
+            let mut out = Vec::new();
+            encode_into(&i, &mut out);
+            assert!(out.len() <= 40, "{i:?} encoded to {} bytes", out.len());
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! FILCO instruction set (paper §2.5, Table 1).
+//!
+//! FILCO separates *static* parameters (number/capacity of FMUs & CUs,
+//! AIE connections inside a CU — fixed at compile time, see
+//! [`crate::arch`]) from *runtime* parameters, which are delivered to the
+//! function units as small instruction words streamed from off-chip
+//! instruction memory by the Instruction Generator.
+//!
+//! One instruction word per function unit per (ping|pong) phase:
+//!
+//! | unit       | fields (Table 1)                                                    |
+//! |------------|---------------------------------------------------------------------|
+//! | InstrGen   | `is_last, des_unit, valid_length`                                   |
+//! | IOM Loader | `is_last, ddr_addr, des_fmu, M, N, start_row,end_row,start_col,end_col` |
+//! | IOM Storer | `is_last, ddr_addr, src_fmu, M, N, start_row,end_row,start_col,end_col` |
+//! | FMU        | `is_last, ping_op, pong_op, src_cu, des_cu, count, start_row,end_row,start_col,end_col` |
+//! | CU         | `is_last, ping_op, pong_op, src_fmu, des_fmu, count` (+ the AIE kernel loop bounds `m,k,n` — Fig 3 delivers these through the kernel's input ports; we carry them in the CU word) |
+//!
+//! Submodules:
+//! * [`words`]   — typed instruction structs + operation enums.
+//! * [`encode`]  — fixed-width binary encode/decode (the "binary files"
+//!   the FILCO framework emits).
+//! * [`program`] — per-unit instruction streams for a whole schedule.
+//! * [`disasm`]  — human-readable disassembly.
+
+pub mod disasm;
+pub mod encode;
+pub mod program;
+pub mod words;
+
+pub use program::{Program, UnitId};
+pub use words::{
+    CuInstr, CuOp, FmuInstr, FmuOp, HeaderInstr, IomLoadInstr, IomStoreInstr, Instr, TileView,
+};

@@ -1,0 +1,187 @@
+//! Per-unit instruction streams ("the ready-to-run binary files" the
+//! FILCO framework generates) plus the unit addressing scheme.
+
+use super::words::Instr;
+
+/// Addressable function units in the data plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum UnitId {
+    IomLoader,
+    IomStorer,
+    Fmu(u16),
+    Cu(u16),
+}
+
+impl UnitId {
+    /// Compact numeric code used by the binary encoding: 0, 1, then FMUs
+    /// at 2..2+N, CUs at 1024..1024+M.
+    pub fn code(self) -> u16 {
+        match self {
+            UnitId::IomLoader => 0,
+            UnitId::IomStorer => 1,
+            UnitId::Fmu(i) => 2 + i,
+            UnitId::Cu(i) => 1024 + i,
+        }
+    }
+
+    pub fn from_code(c: u16) -> Option<Self> {
+        match c {
+            0 => Some(UnitId::IomLoader),
+            1 => Some(UnitId::IomStorer),
+            c if (2..1024).contains(&c) => Some(UnitId::Fmu(c - 2)),
+            c => c.checked_sub(1024).map(UnitId::Cu),
+        }
+    }
+}
+
+impl std::fmt::Display for UnitId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            UnitId::IomLoader => write!(f, "IOM.L"),
+            UnitId::IomStorer => write!(f, "IOM.S"),
+            UnitId::Fmu(i) => write!(f, "FMU{i}"),
+            UnitId::Cu(i) => write!(f, "CU{i}"),
+        }
+    }
+}
+
+/// A complete FILCO program: one instruction stream per function unit.
+/// Streams are executed in order by each unit's decoder; the control
+/// plane interleaves dispatch using header words (encode.rs).
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    streams: Vec<(UnitId, Vec<Instr>)>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append an instruction to `unit`'s stream (creating it if needed).
+    pub fn push(&mut self, unit: UnitId, instr: Instr) {
+        if let Some((_, s)) = self.streams.iter_mut().find(|(u, _)| *u == unit) {
+            s.push(instr);
+        } else {
+            self.streams.push((unit, vec![instr]));
+        }
+    }
+
+    pub fn stream(&self, unit: UnitId) -> &[Instr] {
+        self.streams
+            .iter()
+            .find(|(u, _)| *u == unit)
+            .map(|(_, s)| s.as_slice())
+            .unwrap_or(&[])
+    }
+
+    pub fn units(&self) -> impl Iterator<Item = UnitId> + '_ {
+        self.streams.iter().map(|(u, _)| *u)
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.streams.iter().map(|(_, s)| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Mark the final instruction of every stream `is_last` (the units'
+    /// while(1) decoders stop on it).
+    pub fn seal(&mut self) {
+        for (_, s) in &mut self.streams {
+            if let Some(last) = s.last_mut() {
+                match last {
+                    Instr::Header(i) => i.is_last = true,
+                    Instr::IomLoad(i) => i.is_last = true,
+                    Instr::IomStore(i) => i.is_last = true,
+                    Instr::Fmu(i) => i.is_last = true,
+                    Instr::Cu(i) => i.is_last = true,
+                }
+            }
+        }
+    }
+
+    /// Every stream must terminate with `is_last` to be executable.
+    pub fn validate(&self) -> Result<(), String> {
+        for (u, s) in &self.streams {
+            match s.last() {
+                None => return Err(format!("{u}: empty stream")),
+                Some(i) if !i.is_last() => {
+                    return Err(format!("{u}: stream not sealed (missing is_last)"))
+                }
+                _ => {}
+            }
+            // No is_last in the middle.
+            for (idx, i) in s[..s.len() - 1].iter().enumerate() {
+                if i.is_last() {
+                    return Err(format!("{u}: is_last at {idx} before end of stream"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::words::*;
+
+    fn cu_nop() -> Instr {
+        Instr::Cu(CuInstr {
+            is_last: false,
+            ping_op: CuOp::Idle,
+            pong_op: CuOp::Idle,
+            src_fmu: 0,
+            des_fmu: 0,
+            count: 0,
+            m: 0,
+            k: 0,
+            n: 0,
+        })
+    }
+
+    #[test]
+    fn unit_code_roundtrip() {
+        for u in [UnitId::IomLoader, UnitId::IomStorer, UnitId::Fmu(0), UnitId::Fmu(41), UnitId::Cu(0), UnitId::Cu(7)] {
+            assert_eq!(UnitId::from_code(u.code()), Some(u));
+        }
+    }
+
+    #[test]
+    fn push_and_stream() {
+        let mut p = Program::new();
+        p.push(UnitId::Cu(0), cu_nop());
+        p.push(UnitId::Cu(0), cu_nop());
+        p.push(UnitId::Cu(1), cu_nop());
+        assert_eq!(p.stream(UnitId::Cu(0)).len(), 2);
+        assert_eq!(p.stream(UnitId::Cu(1)).len(), 1);
+        assert_eq!(p.stream(UnitId::Cu(2)).len(), 0);
+        assert_eq!(p.total_len(), 3);
+    }
+
+    #[test]
+    fn seal_then_validate() {
+        let mut p = Program::new();
+        p.push(UnitId::Cu(0), cu_nop());
+        p.push(UnitId::Cu(0), cu_nop());
+        assert!(p.validate().is_err());
+        p.seal();
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_mid_stream_last() {
+        let mut p = Program::new();
+        let mut first = cu_nop();
+        if let Instr::Cu(i) = &mut first {
+            i.is_last = true;
+        }
+        p.push(UnitId::Cu(0), first);
+        p.push(UnitId::Cu(0), cu_nop());
+        p.seal();
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Typed instruction words for every FILCO function unit (Table 1).
+
+/// A rectangular view into a logically 2-D operand held in an FMU's 1-D
+/// buffer (paper §2.3 "flexible on-chip memory views"): rows/cols are
+/// *element* indices; the FMU reconstructs addresses as
+/// `row * row_stride + col` with the stride carried by `cols_total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileView {
+    pub start_row: u32,
+    pub end_row: u32, // exclusive
+    pub start_col: u32,
+    pub end_col: u32, // exclusive
+}
+
+impl TileView {
+    pub fn full(rows: u32, cols: u32) -> Self {
+        Self { start_row: 0, end_row: rows, start_col: 0, end_col: cols }
+    }
+
+    pub fn rows(&self) -> u32 {
+        self.end_row - self.start_row
+    }
+
+    pub fn cols(&self) -> u32 {
+        self.end_col - self.start_col
+    }
+
+    pub fn elements(&self) -> u64 {
+        self.rows() as u64 * self.cols() as u64
+    }
+
+    pub fn is_valid(&self) -> bool {
+        self.end_row > self.start_row && self.end_col > self.start_col
+    }
+}
+
+/// Instruction Generator header word: tells the dispatcher how many
+/// subsequent words go to which unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeaderInstr {
+    pub is_last: bool,
+    pub des_unit: super::UnitId,
+    pub valid_length: u32,
+}
+
+/// IOM Loader word: DDR -> FMU transfer of a `M x N` operand region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IomLoadInstr {
+    pub is_last: bool,
+    pub ddr_addr: u64,
+    pub des_fmu: u16,
+    /// Full operand dimensions in DDR (row-major), used to compute burst
+    /// strides.
+    pub m: u32,
+    pub n: u32,
+    pub view: TileView,
+}
+
+/// IOM Storer word: FMU -> DDR transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IomStoreInstr {
+    pub is_last: bool,
+    pub ddr_addr: u64,
+    pub src_fmu: u16,
+    pub m: u32,
+    pub n: u32,
+    pub view: TileView,
+}
+
+/// What an FMU does during one buffer phase (paper Fig 4: the same 1-D
+/// double buffer is *viewed* and *routed* differently per instruction —
+/// this is both FMV (views) and FMF (functionality) in one decoder).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FmuOp {
+    Idle,
+    /// Receive `count` elements from the IOM into the active buffer.
+    RecvFromIom,
+    /// Send the addressed tile view to a CU (operand feed).
+    SendToCu,
+    /// Receive a result tile from a CU (result collect).
+    RecvFromCu,
+    /// Drain the active buffer to the IOM storer.
+    SendToIom,
+}
+
+impl FmuOp {
+    pub const ALL: [FmuOp; 5] =
+        [FmuOp::Idle, FmuOp::RecvFromIom, FmuOp::SendToCu, FmuOp::RecvFromCu, FmuOp::SendToIom];
+
+    pub fn code(self) -> u8 {
+        match self {
+            FmuOp::Idle => 0,
+            FmuOp::RecvFromIom => 1,
+            FmuOp::SendToCu => 2,
+            FmuOp::RecvFromCu => 3,
+            FmuOp::SendToIom => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        Self::ALL.get(c as usize).copied()
+    }
+}
+
+/// FMU word. `src_cu`/`des_cu` select the pre-routed stream used this
+/// phase; `count` bounds the receive; the tile view addresses the 1-D
+/// buffer for sends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FmuInstr {
+    pub is_last: bool,
+    pub ping_op: FmuOp,
+    pub pong_op: FmuOp,
+    pub src_cu: u16,
+    pub des_cu: u16,
+    pub count: u32,
+    pub view: TileView,
+}
+
+/// What a CU does during one phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CuOp {
+    Idle,
+    /// Run the flexible AIE MM kernel over the loop bounds in the word.
+    ComputeMm,
+    /// Stream a result tile out to the destination FMU.
+    WriteBack,
+}
+
+impl CuOp {
+    pub const ALL: [CuOp; 3] = [CuOp::Idle, CuOp::ComputeMm, CuOp::WriteBack];
+
+    pub fn code(self) -> u8 {
+        match self {
+            CuOp::Idle => 0,
+            CuOp::ComputeMm => 1,
+            CuOp::WriteBack => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Self> {
+        Self::ALL.get(c as usize).copied()
+    }
+}
+
+/// CU word. `m/k/n` are the *runtime loop bounds* of the flexible AIE
+/// kernel (Fig 3 lines 3–7: bounds arrive through input ports); they are
+/// in elements and need not be atomic-tile multiples — the kernel rounds
+/// up to atomic 2x8x8 operations internally.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CuInstr {
+    pub is_last: bool,
+    pub ping_op: CuOp,
+    pub pong_op: CuOp,
+    pub src_fmu: u16,
+    pub des_fmu: u16,
+    pub count: u32,
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+}
+
+/// Any instruction word (tagged for stream dispatch + disassembly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    Header(HeaderInstr),
+    IomLoad(IomLoadInstr),
+    IomStore(IomStoreInstr),
+    Fmu(FmuInstr),
+    Cu(CuInstr),
+}
+
+impl Instr {
+    pub fn is_last(&self) -> bool {
+        match self {
+            Instr::Header(i) => i.is_last,
+            Instr::IomLoad(i) => i.is_last,
+            Instr::IomStore(i) => i.is_last,
+            Instr::Fmu(i) => i.is_last,
+            Instr::Cu(i) => i.is_last,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_view_geometry() {
+        let v = TileView { start_row: 2, end_row: 10, start_col: 4, end_col: 8 };
+        assert_eq!(v.rows(), 8);
+        assert_eq!(v.cols(), 4);
+        assert_eq!(v.elements(), 32);
+        assert!(v.is_valid());
+    }
+
+    #[test]
+    fn tile_view_full() {
+        let v = TileView::full(16, 32);
+        assert_eq!(v.elements(), 512);
+    }
+
+    #[test]
+    fn degenerate_view_invalid() {
+        let v = TileView { start_row: 3, end_row: 3, start_col: 0, end_col: 4 };
+        assert!(!v.is_valid());
+    }
+
+    #[test]
+    fn op_codes_roundtrip() {
+        for op in FmuOp::ALL {
+            assert_eq!(FmuOp::from_code(op.code()), Some(op));
+        }
+        for op in CuOp::ALL {
+            assert_eq!(CuOp::from_code(op.code()), Some(op));
+        }
+        assert_eq!(FmuOp::from_code(99), None);
+        assert_eq!(CuOp::from_code(99), None);
+    }
+}

@@ -1,0 +1,38 @@
+//! # FILCO — Flexible Composing Architecture with Real-Time Reconfigurability
+//!
+//! Full-system reproduction of the FILCO paper (DAC 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the FILCO coordinator: ISA ([`isa`]), platform
+//!   & DDR models ([`platform`]), architecture configuration ([`arch`]),
+//!   a cycle-approximate fabric simulator ([`sim`]), analytical
+//!   performance models ([`analytical`]) with CHARM/RSN baselines
+//!   ([`baseline`]), the two-stage DSE with an in-house MILP
+//!   branch-and-bound and a genetic algorithm ([`dse`]), the DNN workload
+//!   zoo ([`workload`]), instruction generation + serving
+//!   ([`coordinator`], [`codegen`]) and the PJRT runtime that executes
+//!   AOT-compiled JAX/Pallas artifacts ([`runtime`]).
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (BERT, MLP,
+//!   bucketed MM) that call the L1 kernel; lowered once to HLO text.
+//! * **L1 (python/compile/kernels/flexmm.py)** — the Pallas
+//!   flexible-tile MM kernel (the paper's flexible AIE programming).
+//!
+//! Python never runs on the request path: `make artifacts` AOT-compiles
+//! everything; the Rust binary is self-contained afterwards.
+
+pub mod analytical;
+pub mod arch;
+pub mod baseline;
+pub mod codegen;
+pub mod coordinator;
+pub mod dse;
+pub mod isa;
+pub mod platform;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

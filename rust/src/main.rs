@@ -1,0 +1,191 @@
+//! `filco` — CLI for the FILCO framework reproduction.
+//!
+//! Subcommands:
+//!   info                      platform + fabric + artifact summary
+//!   dse     --model M [..]    run two-stage DSE, print the schedule
+//!   sim     --model M [..]    DSE -> instrgen -> fabric simulation
+//!   disasm  --model M [..]    print the generated instruction streams
+//!   codegen --model M --out D write binaries/schedule.json/dataflow.h
+//!   serve   --requests N      serve MM inferences through PJRT
+//!   gantt   --model M [..]    ASCII utilization timeline from the sim
+//!
+//! Models: bert-32|64|128|256|512, mlp-l, mlp-s, deit-l, deit-s,
+//! pointnet, mixer (and bertN-L for N layers, e.g. bert-128x2).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::{instrgen, serving};
+use filco::dse::{self, Solver};
+use filco::isa::disasm;
+use filco::platform::Platform;
+use filco::runtime::{Engine, HostTensor};
+use filco::sim::{self, Fabric};
+use filco::workload::{zoo, Dag};
+
+fn model_by_name(name: &str) -> Option<Dag> {
+    if let Some(rest) = name.strip_prefix("bert-") {
+        if let Some((seq, layers)) = rest.split_once('x') {
+            return Some(zoo::bert_layers(seq.parse().ok()?, layers.parse().ok()?));
+        }
+        return Some(zoo::bert(rest.parse().ok()?));
+    }
+    match name {
+        "mlp-l" => Some(zoo::mlp_l()),
+        "mlp-s" => Some(zoo::mlp_s()),
+        "deit-l" => Some(zoo::deit_l()),
+        "deit-s" => Some(zoo::deit_s()),
+        "pointnet" => Some(zoo::pointnet()),
+        "mixer" => Some(zoo::mlp_mixer()),
+        _ => None,
+    }
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            m.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn prepared(flags: &HashMap<String, String>) -> (Platform, FilcoConfig, Dag) {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    let model = flags.get("model").map(String::as_str).unwrap_or("bert-128x1");
+    let dag = model_by_name(model).unwrap_or_else(|| {
+        eprintln!("unknown model {model:?}");
+        std::process::exit(2);
+    });
+    (p, cfg, dag)
+}
+
+fn solver_of(flags: &HashMap<String, String>) -> Solver {
+    match flags.get("solver").map(String::as_str) {
+        Some("milp") => Solver::Milp { budget_s: 60.0 },
+        _ => Solver::Ga { population: 48, generations: 120, seed: 0xF11C0 },
+    }
+}
+
+fn cmd_info() {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    println!("FILCO {} — flexible composing architecture reproduction", filco::VERSION);
+    println!("platform: {} ({} AIEs @ {} GHz, {:.1} MB PL SRAM, {:.1} GB/s DDR peak)",
+        p.name, p.aie_tiles, p.aie_ghz,
+        p.pl_sram_bytes as f64 / 1048576.0, p.ddr.peak_bytes_per_sec / 1e9);
+    println!("fabric:   {} FMUs x {} KB | {} CUs x {} AIEs | features {}",
+        cfg.n_fmus, cfg.fmu_bytes / 1024, cfg.m_cus, cfg.aies_per_cu, cfg.features.label());
+    match Engine::open_default() {
+        Ok(e) => println!("runtime:  PJRT {} | {} artifacts", e.platform_name(), e.manifest.entries.len()),
+        Err(e) => println!("runtime:  unavailable ({e})"),
+    }
+}
+
+fn pipeline(flags: &HashMap<String, String>) -> (Platform, FilcoConfig, Dag, dse::CandidateTable, dse::Schedule) {
+    let (p, cfg, dag) = prepared(flags);
+    let table = dse::stage1::optimize(&p, &cfg, &dag);
+    let schedule = dse::two_stage(&p, &cfg, &dag, solver_of(flags));
+    (p, cfg, dag, table, schedule)
+}
+
+fn cmd_dse(flags: &HashMap<String, String>) {
+    let (_p, cfg, dag, table, schedule) = pipeline(flags);
+    schedule.validate(&dag, &table, cfg.n_fmus, cfg.m_cus).expect("invalid schedule");
+    println!("workload {}: {} layers, diversity {:.2}", dag.name, dag.len(), dag.diversity());
+    println!("makespan: {:.6e} s  ({:.1} GFLOP/s)",
+        schedule.makespan, dag.total_flops() as f64 / schedule.makespan / 1e9);
+    for e in &schedule.entries {
+        let m = &table.modes[e.layer][e.mode];
+        println!("  {:<24} [{:>10.3e}, {:>10.3e}] f={} c={} tile={}x{}x{}",
+            dag.layers[e.layer].name, e.start, e.end, m.fmus, m.cus, m.tile.0, m.tile.1, m.tile.2);
+    }
+}
+
+fn cmd_sim(flags: &HashMap<String, String>) {
+    let (p, cfg, dag, table, schedule) = pipeline(flags);
+    let prog = instrgen::generate(&dag, &table, &schedule, 128);
+    let fabric = Fabric::from_config(&cfg);
+    match sim::simulate(&p, &fabric, &prog) {
+        Ok(r) => {
+            println!("workload {}: {} instructions", dag.name, r.instructions);
+            println!("sim makespan {:.6e} s (schedule model {:.6e} s)", r.makespan_s, schedule.makespan);
+            println!("DDR in {} MB out {} MB", r.ddr_in_bytes >> 20, r.ddr_out_bytes >> 20);
+            println!("mean CU utilization {:.1}%", r.mean_cu_utilization() * 100.0);
+        }
+        Err(e) => eprintln!("simulation failed: {e}"),
+    }
+}
+
+fn cmd_disasm(flags: &HashMap<String, String>) {
+    let (_p, _cfg, dag, table, schedule) = pipeline(flags);
+    let prog = instrgen::generate(&dag, &table, &schedule, 16);
+    print!("{}", disasm::disasm_program(&prog));
+}
+
+fn cmd_codegen(flags: &HashMap<String, String>) {
+    let (_p, _cfg, dag, table, schedule) = pipeline(flags);
+    let prog = instrgen::generate(&dag, &table, &schedule, 128);
+    let arts = filco::codegen::generate(&dag, &table, &schedule, &prog);
+    let out = flags.get("out").cloned().unwrap_or_else(|| "target/filco-out".into());
+    arts.write_to(std::path::Path::new(&out)).expect("write artifacts");
+    println!("wrote {} instruction bytes + schedule.json + dataflow.h to {out}", arts.total_bytes());
+}
+
+fn cmd_gantt(flags: &HashMap<String, String>) {
+    let (p, cfg, dag, table, schedule) = pipeline(flags);
+    let prog = instrgen::generate(&dag, &table, &schedule, 32);
+    let mut eng = sim::engine::Engine::new(p, Fabric::from_config(&cfg));
+    eng.trace_enabled = true;
+    match eng.run_traced(&prog) {
+        Ok((report, trace)) => {
+            println!("{} — {:.3e} s simulated", dag.name, report.makespan_s);
+            print!("{}", trace.gantt(100));
+        }
+        Err(e) => eprintln!("simulation failed: {e}"),
+    }
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) {
+    let n: u64 = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let engine = Arc::new(Engine::open_default().expect("artifacts missing — run `make artifacts`"));
+    let model = Arc::new(serving::MmModel::new(64, 64, 64, 1));
+    let server = serving::Server::new(engine, model, 8);
+    for i in 0..n {
+        server.queue.push(serving::Request {
+            id: i,
+            input: HostTensor::randn(&[64, 64], i),
+            enqueued: std::time::Instant::now(),
+        });
+    }
+    server.queue.close();
+    let (responses, metrics) = server.run_to_completion();
+    println!("served {} responses: {}", responses.len(), metrics.summary());
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("info");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "info" => cmd_info(),
+        "dse" => cmd_dse(&flags),
+        "sim" => cmd_sim(&flags),
+        "disasm" => cmd_disasm(&flags),
+        "codegen" => cmd_codegen(&flags),
+        "serve" => cmd_serve(&flags),
+        "gantt" => cmd_gantt(&flags),
+        other => {
+            eprintln!("unknown command {other:?}; see src/main.rs header for usage");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Platform resource model — the stand-in for the AMD Versal VCK190
+//! board the paper evaluates on (§4: 150 MHz PL, 1 GHz AIE, Vitis 2023.1).
+//!
+//! The FILCO framework takes "DNN models, platform information, and DDR
+//! profiling results as input" (paper Fig 6); this module is the
+//! *platform information* + *DDR profiling* part. Numbers follow public
+//! VCK190 specs and the CHARM paper's characterisation:
+//!
+//! * 400 AIE tiles @ 1 GHz, 8 fp32 MACs/cycle each → 6.4 TFLOPS fp32 peak
+//! * 32 KB local memory per AIE tile, 16 KB program memory
+//! * PL on-chip SRAM: 967 BRAM36 (4.35 MB) + 463 URAM288 (16.6 MB)
+//! * one DDR4-3200 channel, 25.6 GB/s peak, efficiency profiled vs
+//!   AXI burst length ([`ddr::DdrProfile`])
+
+pub mod ddr;
+
+pub use ddr::DdrProfile;
+
+/// Static description of the target device + clocks.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    /// Total AIE tiles on the device.
+    pub aie_tiles: u32,
+    /// AIE clock in GHz.
+    pub aie_ghz: f64,
+    /// fp32 MACs per AIE tile per cycle (VCK190 AIE1: 8).
+    pub aie_macs_per_cycle: u32,
+    /// AIE local data memory per tile, bytes.
+    pub aie_local_bytes: u64,
+    /// AIE program memory per tile, bytes (16 KB — the constraint that
+    /// rules out "finite instruction blocks" in §2.2).
+    pub aie_pm_bytes: u64,
+    /// PL fabric clock in MHz.
+    pub pl_mhz: f64,
+    /// Total usable PL SRAM (BRAM + URAM), bytes.
+    pub pl_sram_bytes: u64,
+    /// Stream width between PL and AIE per port, bits at PL clock.
+    pub plio_bits: u32,
+    /// Number of PLIO ports usable per direction.
+    pub plio_ports: u32,
+    /// DDR profile (peak + efficiency curve).
+    pub ddr: DdrProfile,
+}
+
+impl Platform {
+    /// The VCK190 configuration used throughout the paper's evaluation.
+    pub fn vck190() -> Self {
+        Self {
+            name: "VCK190".to_string(),
+            aie_tiles: 400,
+            aie_ghz: 1.0,
+            aie_macs_per_cycle: 8,
+            aie_local_bytes: 32 * 1024,
+            aie_pm_bytes: 16 * 1024,
+            pl_mhz: 150.0,
+            // 967 * 36 Kb + 463 * 288 Kb ≈ 4.35 MB + 16.67 MB; keep 90%
+            // usable after controller/interconnect overhead.
+            pl_sram_bytes: ((967u64 * 36 + 463u64 * 288) * 1024 / 8) * 9 / 10,
+            plio_bits: 128,
+            plio_ports: 78,
+            ddr: DdrProfile::vck190_lpddr4(),
+        }
+    }
+
+    /// Peak fp32 throughput of `tiles` AIE tiles, FLOP/s (2 FLOPs/MAC).
+    pub fn aie_peak_flops(&self, tiles: u32) -> f64 {
+        tiles as f64 * self.aie_macs_per_cycle as f64 * 2.0 * self.aie_ghz * 1e9
+    }
+
+    /// PL cycles per second.
+    pub fn pl_hz(&self) -> f64 {
+        self.pl_mhz * 1e6
+    }
+
+    /// AIE cycles per PL cycle (the two clock domains the simulator
+    /// converts between).
+    pub fn aie_cycles_per_pl_cycle(&self) -> f64 {
+        self.aie_ghz * 1e9 / self.pl_hz()
+    }
+
+    /// On-chip stream bandwidth of one PLIO port, bytes/s.
+    pub fn plio_bytes_per_sec(&self) -> f64 {
+        self.plio_bits as f64 / 8.0 * self.pl_hz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vck190_peak_matches_charm() {
+        let p = Platform::vck190();
+        // 400 tiles * 8 MACs * 2 * 1 GHz = 6.4 TFLOPS
+        assert!((p.aie_peak_flops(p.aie_tiles) - 6.4e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn sram_budget_about_19mb(){
+        let p = Platform::vck190();
+        let mb = p.pl_sram_bytes as f64 / (1024.0 * 1024.0);
+        assert!((17.0..20.0).contains(&mb), "sram = {mb} MB");
+    }
+
+    #[test]
+    fn clock_ratio() {
+        let p = Platform::vck190();
+        assert!((p.aie_cycles_per_pl_cycle() - 1e9 / 150e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plio_bandwidth() {
+        let p = Platform::vck190();
+        // 128 bit @ 150 MHz = 2.4 GB/s per port
+        assert!((p.plio_bytes_per_sec() - 2.4e9).abs() < 1.0);
+    }
+}

@@ -1,0 +1,193 @@
+//! PJRT execution engine: HLO-text artifacts -> compiled executables ->
+//! typed execute calls, with a per-artifact executable cache.
+//!
+//! Interchange is HLO *text* (never serialized HloModuleProto): jax
+//! >= 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; `HloModuleProto::from_text_file` reassigns ids. The
+//! AOT side lowers with `return_tuple=True`, so outputs are unwrapped
+//! with `to_tuple()` here.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// Loads artifacts lazily, compiles once, executes many times.
+/// Thread-safe: the cache is mutex-guarded; PJRT execution itself is
+/// serialised per call (the CPU client is internally threaded).
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Open the artifact directory (expects `manifest.json`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open the default artifact dir (env `FILCO_ARTIFACTS` or
+    /// `artifacts/`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(super::default_artifact_dir())
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of artifacts compiled so far (cache size).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    fn compile(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry =
+            self.manifest.find(name).ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let path = self.dir.join(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with host inputs; returns host outputs.
+    /// Shapes are validated against the manifest before dispatch.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        if inputs.len() != entry.inputs.len() {
+            bail!("{name}: {} inputs given, {} expected", inputs.len(), entry.inputs.len());
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.shape != spec.shape {
+                bail!("{name}: input {i} shape {:?} != expected {:?}", t.shape, spec.shape);
+            }
+        }
+        self.compile(name)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims).map_err(anyhow::Error::from)
+            })
+            .collect::<Result<_>>()?;
+
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("device -> host transfer")?;
+        drop(cache);
+
+        // AOT lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != entry.num_outputs {
+            bail!("{name}: {} outputs, manifest says {}", parts.len(), entry.num_outputs);
+        }
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>()?;
+                Ok(HostTensor::from_vec(&dims, data))
+            })
+            .collect()
+    }
+
+    /// Run an `(m, k, n)` MM through the smallest covering bucket
+    /// artifact: pad inputs to the bucket, execute, slice the result —
+    /// the runtime mirror of FILCO's atomic-granularity padding.
+    pub fn mm(&self, a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let (k2, n) = (b.shape[0], b.shape[1]);
+        if k != k2 {
+            bail!("mm: contraction mismatch {k} vs {k2}");
+        }
+        let (bm, bk, bn) = self
+            .manifest
+            .best_mm_bucket(m, k, n)
+            .ok_or_else(|| anyhow!("no MM bucket covers {m}x{k}x{n}"))?;
+        let name = format!("mm_{bm}x{bk}x{bn}");
+        let ap = if (m, k) == (bm, bk) { a.clone() } else { a.pad2(bm, bk) };
+        let bp = if (k, n) == (bk, bn) { b.clone() } else { b.pad2(bk, bn) };
+        let out = self.execute(&name, &[ap, bp])?;
+        Ok(out.into_iter().next().unwrap().slice2(m, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::tensor::matmul_ref;
+
+    fn engine() -> Option<Engine> {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return None; // artifacts not built — skip
+        }
+        Some(Engine::open(dir).expect("engine"))
+    }
+
+    #[test]
+    fn executes_exact_bucket() {
+        let Some(e) = engine() else { return };
+        let a = HostTensor::randn(&[32, 32], 1);
+        let b = HostTensor::randn(&[32, 32], 2);
+        let got = e.execute("mm_32x32x32", &[a.clone(), b.clone()]).unwrap();
+        let exp = matmul_ref(&a, &b);
+        assert!(got[0].allclose(&exp, 1e-3, 1e-3), "diff {}", got[0].max_abs_diff(&exp));
+    }
+
+    #[test]
+    fn mm_pads_and_slices() {
+        let Some(e) = engine() else { return };
+        let a = HostTensor::randn(&[20, 30], 3);
+        let b = HostTensor::randn(&[30, 10], 4);
+        let got = e.mm(&a, &b).unwrap();
+        let exp = matmul_ref(&a, &b);
+        assert_eq!(got.shape, vec![20, 10]);
+        assert!(got.allclose(&exp, 1e-3, 1e-3), "diff {}", got.max_abs_diff(&exp));
+    }
+
+    #[test]
+    fn executable_cache_reused() {
+        let Some(e) = engine() else { return };
+        let a = HostTensor::randn(&[16, 16], 5);
+        let b = HostTensor::randn(&[16, 16], 6);
+        let _ = e.execute("mm_16x16x16", &[a.clone(), b.clone()]).unwrap();
+        let n1 = e.compiled_count();
+        let _ = e.execute("mm_16x16x16", &[a, b]).unwrap();
+        assert_eq!(e.compiled_count(), n1, "second call must hit the cache");
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let Some(e) = engine() else { return };
+        let bad = HostTensor::randn(&[8, 8], 7);
+        assert!(e.execute("mm_32x32x32", &[bad.clone(), bad]).is_err());
+        assert!(e.execute("nonexistent", &[]).is_err());
+    }
+}

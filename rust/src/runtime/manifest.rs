@@ -1,0 +1,161 @@
+//! `artifacts/manifest.json` — the contract between the AOT compile path
+//! (python/compile/aot.py) and the Rust runtime.
+
+use crate::util::json::Json;
+
+/// Input/output tensor spec.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub num_outputs: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let v = Json::parse(text).map_err(|e| e.to_string())?;
+        if v.get("version").and_then(Json::as_u64) != Some(1) {
+            return Err("unsupported manifest version".into());
+        }
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("manifest missing entries")?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Self { entries })
+    }
+
+    pub fn load(dir: &std::path::Path) -> Result<Self, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All MM bucket shapes `(m, k, n)` present in the manifest.
+    pub fn mm_buckets(&self) -> Vec<(usize, usize, usize)> {
+        let mut v: Vec<(usize, usize, usize)> = self
+            .entries
+            .iter()
+            .filter_map(|e| {
+                let rest = e.name.strip_prefix("mm_")?;
+                let dims: Vec<usize> =
+                    rest.split('x').map(|d| d.parse().ok()).collect::<Option<_>>()?;
+                (dims.len() == 3).then(|| (dims[0], dims[1], dims[2]))
+            })
+            .collect();
+        v.sort_by_key(|&(m, k, n)| m * k * n);
+        v
+    }
+
+    /// Smallest bucket covering an `(m, k, n)` MM (pad-and-run target);
+    /// `None` if nothing covers it.
+    pub fn best_mm_bucket(&self, m: usize, k: usize, n: usize) -> Option<(usize, usize, usize)> {
+        self.mm_buckets()
+            .into_iter()
+            .filter(|&(bm, bk, bn)| bm >= m && bk >= k && bn >= n)
+            .min_by_key(|&(bm, bk, bn)| bm * bk * bn)
+    }
+}
+
+fn parse_entry(v: &Json) -> Result<ArtifactEntry, String> {
+    let name = v.get("name").and_then(Json::as_str).ok_or("entry missing name")?.to_string();
+    let path = v.get("path").and_then(Json::as_str).ok_or("entry missing path")?.to_string();
+    let num_outputs =
+        v.get("num_outputs").and_then(Json::as_u64).ok_or("entry missing num_outputs")? as usize;
+    let inputs = v
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or("entry missing inputs")?
+        .iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or("input missing shape")?
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as usize).ok_or("bad dim".to_string()))
+                .collect::<Result<Vec<_>, _>>()?;
+            let dtype =
+                s.get("dtype").and_then(Json::as_str).ok_or("input missing dtype")?.to_string();
+            Ok::<TensorSpec, String>(TensorSpec { shape, dtype })
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(ArtifactEntry { name, path, inputs, num_outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "mm_32x32x32", "path": "mm_32x32x32.hlo.txt", "sha256_16": "ab",
+         "inputs": [{"shape": [32,32], "dtype": "float32"},
+                    {"shape": [32,32], "dtype": "float32"}],
+         "num_outputs": 1},
+        {"name": "mm_64x64x64", "path": "mm_64x64x64.hlo.txt", "sha256_16": "cd",
+         "inputs": [{"shape": [64,64], "dtype": "float32"},
+                    {"shape": [64,64], "dtype": "float32"}],
+         "num_outputs": 1},
+        {"name": "bert_layer_s32_h128_a4_f512", "path": "b.hlo.txt", "sha256_16": "ef",
+         "inputs": [{"shape": [32,128], "dtype": "float32"}],
+         "num_outputs": 1}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.find("mm_32x32x32").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![32, 32]);
+        assert_eq!(e.num_outputs, 1);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.mm_buckets(), vec![(32, 32, 32), (64, 64, 64)]);
+        assert_eq!(m.best_mm_bucket(20, 30, 32), Some((32, 32, 32)));
+        assert_eq!(m.best_mm_bucket(33, 10, 10), Some((64, 64, 64)));
+        assert_eq!(m.best_mm_bucket(100, 10, 10), None);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 2, "entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.find("mm_32x32x32").is_some());
+        assert!(!m.mm_buckets().is_empty());
+    }
+}

@@ -1,0 +1,25 @@
+//! Runtime layer: loads the AOT-compiled HLO artifacts (produced by
+//! `make artifacts` from the L2 JAX graphs with the L1 Pallas kernel
+//! inside) and executes them on the PJRT CPU client from the request
+//! path. Python is never involved here.
+//!
+//! * [`tensor`] — host-side fp32 tensors + oracles for verification.
+//! * [`manifest`] — `artifacts/manifest.json` parsing + MM bucket
+//!   selection.
+//! * [`engine`] — PJRT client, executable cache, typed execute calls.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use tensor::HostTensor;
+
+/// Default artifact directory (relative to the repo root).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // Tests/examples run from the crate root; allow override.
+    std::env::var("FILCO_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

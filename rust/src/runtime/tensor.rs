@@ -1,0 +1,167 @@
+//! Host-side fp32 tensors: the minimal container the serving path needs,
+//! plus numerical oracles used to verify PJRT results end-to-end.
+
+use crate::util::rng::SplitMix64;
+
+/// Dense row-major fp32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    /// Deterministic pseudo-random tensor (standard normal).
+    pub fn randn(shape: &[usize], seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(|_| rng.next_normal() as f32).collect() }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// 2-D element accessor (row-major).
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Zero-pad a 2-D tensor to `(rows, cols)`.
+    pub fn pad2(&self, rows: usize, cols: usize) -> HostTensor {
+        assert_eq!(self.rank(), 2);
+        let (r0, c0) = (self.shape[0], self.shape[1]);
+        assert!(rows >= r0 && cols >= c0, "pad must grow");
+        let mut out = HostTensor::zeros(&[rows, cols]);
+        for i in 0..r0 {
+            out.data[i * cols..i * cols + c0]
+                .copy_from_slice(&self.data[i * c0..(i + 1) * c0]);
+        }
+        out
+    }
+
+    /// Slice the top-left `(rows, cols)` corner of a 2-D tensor.
+    pub fn slice2(&self, rows: usize, cols: usize) -> HostTensor {
+        assert_eq!(self.rank(), 2);
+        let c0 = self.shape[1];
+        assert!(rows <= self.shape[0] && cols <= c0);
+        let mut out = HostTensor::zeros(&[rows, cols]);
+        for i in 0..rows {
+            out.data[i * cols..(i + 1) * cols].copy_from_slice(&self.data[i * c0..i * c0 + cols]);
+        }
+        out
+    }
+
+    /// Max absolute difference against another tensor.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Allclose with absolute + relative tolerance.
+    pub fn allclose(&self, other: &HostTensor, atol: f32, rtol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// Reference row-major matmul oracle: (m,k) @ (k,n).
+pub fn matmul_ref(a: &HostTensor, b: &HostTensor) -> HostTensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "contraction mismatch");
+    let mut out = HostTensor::zeros(&[m, n]);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_then_slice_roundtrip() {
+        let t = HostTensor::randn(&[5, 7], 1);
+        let padded = t.pad2(8, 16);
+        assert_eq!(padded.shape, vec![8, 16]);
+        assert_eq!(padded.slice2(5, 7), t);
+        // Padding area is zero.
+        assert_eq!(padded.at2(7, 15), 0.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = HostTensor::zeros(&[4, 4]);
+        for i in 0..4 {
+            eye.data[i * 4 + i] = 1.0;
+        }
+        let x = HostTensor::randn(&[4, 4], 2);
+        let y = matmul_ref(&eye, &x);
+        assert!(y.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = matmul_ref(&a, &b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn padding_preserves_matmul() {
+        let a = HostTensor::randn(&[5, 3], 3);
+        let b = HostTensor::randn(&[3, 6], 4);
+        let exact = matmul_ref(&a, &b);
+        let padded = matmul_ref(&a.pad2(8, 8), &b.pad2(8, 8)).slice2(5, 6);
+        assert!(exact.allclose(&padded, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        assert_eq!(HostTensor::randn(&[3, 3], 7), HostTensor::randn(&[3, 3], 7));
+        assert_ne!(HostTensor::randn(&[3, 3], 7), HostTensor::randn(&[3, 3], 8));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        HostTensor::from_vec(&[2, 2], vec![1.0]);
+    }
+}

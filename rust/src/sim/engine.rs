@@ -1,0 +1,544 @@
+//! Transaction-level discrete-event engine executing ISA programs.
+//!
+//! Each function unit advances through its instruction stream; an
+//! instruction *fires* when its input packets are available on the
+//! inter-unit channels. The engine loops over units until quiescence:
+//! either every stream is exhausted (success) or no unit can make
+//! progress (deadlock — a generator bug, reported as an error with the
+//! stuck unit).
+
+use std::collections::HashMap;
+
+use crate::isa::{CuOp, FmuOp, Instr, Program, UnitId};
+use crate::platform::Platform;
+
+use super::trace::{Event, Trace};
+use super::{Fabric, SimReport};
+
+/// A data packet on a stream channel.
+#[derive(Debug, Clone, Copy)]
+struct Packet {
+    ready_s: f64,
+    #[allow(dead_code)] // carried for trace/debug inspection
+    elements: u64,
+}
+
+/// Channel key: (producer, consumer). Channels are stored indexed by
+/// consumer (§Perf: `reserve` only ever scans one consumer's queues, so
+/// keying the map by consumer avoids a full-map walk per attempt).
+type ChanKey = (UnitId, UnitId);
+
+pub struct Engine {
+    p: Platform,
+    fabric: Fabric,
+    pub trace_enabled: bool,
+}
+
+struct UnitState {
+    unit: UnitId,
+    pc: usize,
+    /// Time this unit becomes free.
+    free_at: f64,
+    busy: f64,
+}
+
+impl Engine {
+    pub fn new(p: Platform, fabric: Fabric) -> Self {
+        Self { p, fabric, trace_enabled: false }
+    }
+
+    /// Stream seconds to move `elements` fp32 over one PLIO port.
+    fn stream_time(&self, elements: u64) -> f64 {
+        elements as f64 * 4.0 / self.p.plio_bytes_per_sec()
+    }
+
+    /// DDR seconds for `elements` fp32 with `row_elems`-wide rows.
+    fn ddr_time(&self, elements: u64, row_elems: u64) -> f64 {
+        self.p.ddr.transfer_time_s(elements * 4, (row_elems * 4).max(64))
+    }
+
+    /// CU compute seconds for an m x k x n kernel launch over K AIEs.
+    fn compute_time(&self, m: u32, k: u32, n: u32) -> f64 {
+        let cycles = self.fabric.kernel.mm_cycles(m.max(1), k.max(1), n.max(1));
+        // Macro tiles parallelise across the CU's AIEs.
+        let tiles = (m.max(1).div_ceil(32) as u64)
+            * (k.max(1).div_ceil(32) as u64)
+            * (n.max(1).div_ceil(32) as u64);
+        let aies = self.fabric.aies_per_cu.max(1) as u64;
+        let rounds = tiles.div_ceil(aies);
+        let per_tile = cycles / tiles as f64;
+        rounds as f64 * per_tile / (self.p.aie_ghz * 1e9)
+    }
+
+    /// Execute `program`; returns the report or a deadlock diagnosis.
+    pub fn run(&self, program: &Program) -> Result<SimReport, String> {
+        program.validate()?;
+        self.run_traced(program).map(|(r, _)| r)
+    }
+
+    /// Execute and also return the event trace.
+    pub fn run_traced(&self, program: &Program) -> Result<(SimReport, Trace), String> {
+        let mut units: Vec<UnitState> = program
+            .units()
+            .map(|u| UnitState { unit: u, pc: 0, free_at: 0.0, busy: 0.0 })
+            .collect();
+        // consumer -> vec of (producer, packet)
+        let mut chans: HashMap<UnitId, Vec<(UnitId, Packet)>> = HashMap::new();
+        let mut trace = Trace::default();
+        let mut ddr_in = 0u64;
+        let mut ddr_out = 0u64;
+        let mut executed = 0u64;
+
+        // Two-phase packet acquisition: `reserve` finds the earliest
+        // `count` packets matching the predicate WITHOUT consuming them;
+        // `commit` removes a reservation. An instruction only consumes
+        // once ALL of its inputs are reservable — otherwise nothing is
+        // touched (consuming eagerly would drop packets on a partially
+        // ready instruction and deadlock the fabric).
+        type Reservation = Vec<(UnitId, usize)>;
+        fn reserve(
+            chans: &HashMap<UnitId, Vec<(UnitId, Packet)>>,
+            consumer: UnitId,
+            pred: impl Fn(UnitId) -> bool,
+            count: usize,
+            taken: &Reservation,
+        ) -> Option<(Reservation, f64)> {
+            let queue = chans.get(&consumer)?;
+            let mut picks: Reservation = Vec::with_capacity(count);
+            let mut ready = 0.0f64;
+            for _ in 0..count {
+                let mut best: Option<(usize, f64)> = None;
+                for (i, (producer, pkt)) in queue.iter().enumerate() {
+                    if !pred(*producer) {
+                        continue;
+                    }
+                    if picks.iter().chain(taken.iter()).any(|&(pk, pi)| pk == consumer && pi == i)
+                    {
+                        continue;
+                    }
+                    if best.is_none() || pkt.ready_s < best.unwrap().1 {
+                        best = Some((i, pkt.ready_s));
+                    }
+                }
+                let (idx, r) = best?;
+                ready = ready.max(r);
+                picks.push((consumer, idx));
+            }
+            Some((picks, ready))
+        }
+        fn commit(chans: &mut HashMap<UnitId, Vec<(UnitId, Packet)>>, mut res: Reservation) {
+            // Remove per queue in descending index order so indices stay
+            // valid during removal.
+            res.sort_by(|a, b| b.1.cmp(&a.1));
+            for (key, idx) in res {
+                chans.get_mut(&key).unwrap().remove(idx);
+            }
+        }
+
+        loop {
+            let mut progressed = false;
+            let mut all_done = true;
+            for ui in 0..units.len() {
+                let unit = units[ui].unit;
+                let stream = program.stream(unit);
+                if units[ui].pc >= stream.len() {
+                    continue;
+                }
+                all_done = false;
+                let instr = &stream[units[ui].pc];
+
+                // Attempt to fire the instruction.
+                let fired: Option<(f64, f64)> = match instr {
+                    Instr::Header(_) => {
+                        // Control-plane only; zero-time dispatch.
+                        Some((units[ui].free_at, units[ui].free_at))
+                    }
+                    Instr::IomLoad(l) => {
+                        let elems = l.view.elements();
+                        let dur = self.ddr_time(elems, l.view.cols() as u64);
+                        let start = units[ui].free_at;
+                        let end = start + dur;
+                        chans
+                            .entry(UnitId::Fmu(l.des_fmu))
+                            .or_default()
+                            .push((UnitId::IomLoader, Packet { ready_s: end, elements: elems }));
+                        ddr_in += elems * 4;
+                        Some((start, end))
+                    }
+                    Instr::IomStore(s) => {
+                        // Wait for the FMU's drain packet.
+                        match reserve(
+                            &chans,
+                            UnitId::IomStorer,
+                            |prod| prod == UnitId::Fmu(s.src_fmu),
+                            1,
+                            &Vec::new(),
+                        ) {
+                            None => None,
+                            Some((res, ready)) => {
+                                let elems = s.view.elements();
+                                commit(&mut chans, res);
+                                let start = units[ui].free_at.max(ready);
+                                let dur = self.ddr_time(elems, s.view.cols() as u64);
+                                ddr_out += elems * 4;
+                                Some((start, start + dur))
+                            }
+                        }
+                    }
+                    Instr::Fmu(f) => {
+                        // Ping and pong ops run on the two buffer halves;
+                        // they may overlap, so the phase duration is the
+                        // max of the two op durations. All input packets
+                        // are reserved first, then committed atomically.
+                        let mut start = units[ui].free_at;
+                        let mut durs = [0.0f64; 2];
+                        let mut ok = true;
+                        let mut reserved: Reservation = Vec::new();
+                        let mut outputs: Vec<(ChanKey, Packet)> = Vec::new();
+                        for (which, op) in [(0usize, f.ping_op), (1usize, f.pong_op)] {
+                            match op {
+                                FmuOp::Idle => {}
+                                FmuOp::RecvFromIom => {
+                                    match reserve(
+                                        &chans,
+                                        unit,
+                                        |prod| prod == UnitId::IomLoader,
+                                        1,
+                                        &reserved,
+                                    ) {
+                                        None => {
+                                            ok = false;
+                                            break;
+                                        }
+                                        Some((res, ready)) => {
+                                            reserved.extend(res);
+                                            start = start.max(ready);
+                                        }
+                                    }
+                                }
+                                FmuOp::SendToCu => {
+                                    let elems = f.view.elements().min(self.fabric.fmu_elems);
+                                    durs[which] = durs[which].max(self.stream_time(elems));
+                                    outputs.push((
+                                        (unit, UnitId::Cu(f.des_cu)),
+                                        Packet { ready_s: 0.0, elements: elems },
+                                    ));
+                                }
+                                FmuOp::RecvFromCu => {
+                                    match reserve(
+                                        &chans,
+                                        unit,
+                                        |prod| prod == UnitId::Cu(f.src_cu),
+                                        1,
+                                        &reserved,
+                                    ) {
+                                        None => {
+                                            ok = false;
+                                            break;
+                                        }
+                                        Some((res, ready)) => {
+                                            reserved.extend(res);
+                                            start = start.max(ready);
+                                        }
+                                    }
+                                }
+                                FmuOp::SendToIom => {
+                                    let elems = f.view.elements();
+                                    durs[which] = durs[which].max(self.stream_time(elems));
+                                    outputs.push((
+                                        (unit, UnitId::IomStorer),
+                                        Packet { ready_s: 0.0, elements: elems },
+                                    ));
+                                }
+                            }
+                        }
+                        if !ok {
+                            None
+                        } else {
+                            commit(&mut chans, reserved);
+                            let end = start + durs[0].max(durs[1]);
+                            for ((producer, consumer), mut pkt) in outputs {
+                                pkt.ready_s = end;
+                                chans.entry(consumer).or_default().push((producer, pkt));
+                            }
+                            Some((start, end))
+                        }
+                    }
+                    Instr::Cu(c) => {
+                        let mut start = units[ui].free_at;
+                        let mut dur = 0.0f64;
+                        let mut ok = true;
+                        let mut reserved: Reservation = Vec::new();
+                        let mut outputs: Vec<(ChanKey, Packet)> = Vec::new();
+                        for op in [c.ping_op, c.pong_op] {
+                            match op {
+                                CuOp::Idle => {}
+                                CuOp::ComputeMm => {
+                                    // Reserve `count` operand packets
+                                    // destined to this CU (from any FMU).
+                                    match reserve(
+                                        &chans,
+                                        unit,
+                                        |prod| matches!(prod, UnitId::Fmu(_)),
+                                        c.count as usize,
+                                        &reserved,
+                                    ) {
+                                        None => {
+                                            ok = false;
+                                            break;
+                                        }
+                                        Some((res, ready)) => {
+                                            reserved.extend(res);
+                                            start = start.max(ready);
+                                        }
+                                    }
+                                    dur += self.compute_time(c.m, c.k, c.n);
+                                }
+                                CuOp::WriteBack => {
+                                    let elems = c.m as u64 * c.n as u64;
+                                    dur += self.stream_time(elems);
+                                    outputs.push((
+                                        (unit, UnitId::Fmu(c.des_fmu)),
+                                        Packet { ready_s: 0.0, elements: elems },
+                                    ));
+                                }
+                            }
+                        }
+                        if !ok {
+                            None
+                        } else {
+                            commit(&mut chans, reserved);
+                            let end = start + dur;
+                            for ((producer, consumer), mut pkt) in outputs {
+                                pkt.ready_s = end;
+                                chans.entry(consumer).or_default().push((producer, pkt));
+                            }
+                            Some((start, end))
+                        }
+                    }
+                };
+
+                if let Some((start, end)) = fired {
+                    let st = &mut units[ui];
+                    if self.trace_enabled {
+                        trace.push(Event { unit, pc: st.pc, start_s: start, end_s: end });
+                    }
+                    st.busy += end - start;
+                    st.free_at = end;
+                    st.pc += 1;
+                    executed += 1;
+                    progressed = true;
+                }
+            }
+            if all_done {
+                break;
+            }
+            if !progressed {
+                let stuck: Vec<String> = units
+                    .iter()
+                    .filter(|u| u.pc < program.stream(u.unit).len())
+                    .map(|u| format!("{}@{}", u.unit, u.pc))
+                    .collect();
+                return Err(format!("simulator deadlock; stuck units: {}", stuck.join(", ")));
+            }
+        }
+
+        let makespan_s = units.iter().map(|u| u.free_at).fold(0.0, f64::max);
+        Ok((
+            SimReport {
+                makespan_s,
+                busy: units.iter().map(|u| (u.unit, u.busy)).collect(),
+                ddr_in_bytes: ddr_in,
+                ddr_out_bytes: ddr_out,
+                instructions: executed,
+            },
+            trace,
+        ))
+    }
+}
+
+/// Convenience constructor used across tests/benches.
+pub fn default_engine() -> (Platform, Fabric) {
+    let p = Platform::vck190();
+    let cfg = crate::arch::FilcoConfig::default_for(&p);
+    (p.clone(), Fabric::from_config(&cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{
+        CuInstr, FmuInstr, IomLoadInstr, IomStoreInstr, TileView,
+    };
+
+    /// Hand-built single-MM program: load A,B -> FMU0/1 -> CU0 -> FMU2
+    /// -> store.
+    fn mm_program(m: u32, k: u32, n: u32) -> Program {
+        let mut p = Program::new();
+        let a = TileView::full(m, k);
+        let b = TileView::full(k, n);
+        let c = TileView::full(m, n);
+        p.push(
+            UnitId::IomLoader,
+            Instr::IomLoad(IomLoadInstr { is_last: false, ddr_addr: 0, des_fmu: 0, m, n: k, view: a }),
+        );
+        p.push(
+            UnitId::IomLoader,
+            Instr::IomLoad(IomLoadInstr { is_last: false, ddr_addr: 0x1000, des_fmu: 1, m: k, n, view: b }),
+        );
+        p.push(
+            UnitId::Fmu(0),
+            Instr::Fmu(FmuInstr {
+                is_last: false,
+                ping_op: FmuOp::RecvFromIom,
+                pong_op: FmuOp::Idle,
+                src_cu: 0,
+                des_cu: 0,
+                count: a.elements() as u32,
+                view: a,
+            }),
+        );
+        p.push(
+            UnitId::Fmu(0),
+            Instr::Fmu(FmuInstr {
+                is_last: false,
+                ping_op: FmuOp::SendToCu,
+                pong_op: FmuOp::Idle,
+                src_cu: 0,
+                des_cu: 0,
+                count: 0,
+                view: a,
+            }),
+        );
+        p.push(
+            UnitId::Fmu(1),
+            Instr::Fmu(FmuInstr {
+                is_last: false,
+                ping_op: FmuOp::RecvFromIom,
+                pong_op: FmuOp::Idle,
+                src_cu: 0,
+                des_cu: 0,
+                count: b.elements() as u32,
+                view: b,
+            }),
+        );
+        p.push(
+            UnitId::Fmu(1),
+            Instr::Fmu(FmuInstr {
+                is_last: false,
+                ping_op: FmuOp::SendToCu,
+                pong_op: FmuOp::Idle,
+                src_cu: 0,
+                des_cu: 0,
+                count: 0,
+                view: b,
+            }),
+        );
+        p.push(
+            UnitId::Cu(0),
+            Instr::Cu(CuInstr {
+                is_last: false,
+                ping_op: CuOp::ComputeMm,
+                pong_op: CuOp::WriteBack,
+                src_fmu: 0,
+                des_fmu: 2,
+                count: 2,
+                m,
+                k,
+                n,
+            }),
+        );
+        p.push(
+            UnitId::Fmu(2),
+            Instr::Fmu(FmuInstr {
+                is_last: false,
+                ping_op: FmuOp::RecvFromCu,
+                pong_op: FmuOp::SendToIom,
+                src_cu: 0,
+                des_cu: 0,
+                count: 0,
+                view: c,
+            }),
+        );
+        p.push(
+            UnitId::IomStorer,
+            Instr::IomStore(IomStoreInstr {
+                is_last: false,
+                ddr_addr: 0x2000,
+                src_fmu: 2,
+                m,
+                n,
+                view: c,
+            }),
+        );
+        p.seal();
+        p
+    }
+
+    #[test]
+    fn single_mm_runs_to_completion() {
+        let (p, f) = default_engine();
+        let r = simulate_ok(&p, &f, &mm_program(64, 64, 64));
+        assert!(r.makespan_s > 0.0);
+        assert_eq!(r.ddr_in_bytes, (64 * 64 + 64 * 64) * 4);
+        assert_eq!(r.ddr_out_bytes, 64 * 64 * 4);
+        assert_eq!(r.instructions, 9);
+    }
+
+    fn simulate_ok(p: &Platform, f: &Fabric, prog: &Program) -> SimReport {
+        super::super::simulate(p, f, prog).expect("sim must not deadlock")
+    }
+
+    #[test]
+    fn bigger_mm_takes_longer() {
+        let (p, f) = default_engine();
+        let small = simulate_ok(&p, &f, &mm_program(32, 32, 32)).makespan_s;
+        let big = simulate_ok(&p, &f, &mm_program(256, 256, 256)).makespan_s;
+        assert!(big > small, "big {big} small {small}");
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        // CU waits for 2 packets but only one FMU ever sends.
+        let mut prog = mm_program(16, 16, 16);
+        // Remove FMU1's stream entirely by rebuilding without it.
+        let mut broken = Program::new();
+        for u in prog.units() {
+            if u == UnitId::Fmu(1) {
+                continue;
+            }
+            for i in prog.stream(u) {
+                broken.push(u, *i);
+            }
+        }
+        broken.seal();
+        let (p, f) = default_engine();
+        let err = super::super::simulate(&p, &f, &broken).unwrap_err();
+        assert!(err.contains("deadlock"), "err: {err}");
+        let _ = &mut prog;
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (p, f) = default_engine();
+        let r = simulate_ok(&p, &f, &mm_program(128, 128, 128));
+        for (u, busy) in &r.busy {
+            let util = busy / r.makespan_s;
+            assert!((0.0..=1.0 + 1e-9).contains(&util), "{u}: util {util}");
+        }
+    }
+
+    #[test]
+    fn trace_records_events() {
+        let (p, f) = default_engine();
+        let mut eng = Engine::new(p, f);
+        eng.trace_enabled = true;
+        let (r, t) = eng.run_traced(&mm_program(32, 32, 32)).unwrap();
+        assert_eq!(t.events.len() as u64, r.instructions);
+        // Events are internally consistent.
+        for e in &t.events {
+            assert!(e.end_s >= e.start_s);
+            assert!(e.end_s <= r.makespan_s + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Cycle-approximate fabric simulator — the stand-in for running FILCO's
+//! generated binaries on the VCK190 board.
+//!
+//! The simulator executes real [`crate::isa::Program`]s (the exact
+//! instruction streams the [`crate::coordinator::instrgen`] emits) over
+//! a transaction-level model of the data plane:
+//!
+//! * **IOM** loader/storer — DDR transfers timed by the profiled
+//!   bandwidth-vs-burst curve ([`crate::platform::DdrProfile`]);
+//! * **FMU** — 1-D double buffers; ping/pong ops on the two halves may
+//!   overlap (that's the point of the double buffer); sends are timed by
+//!   the PLIO stream bandwidth;
+//! * **CU** — the flexible/static AIE kernel cycle model
+//!   ([`crate::analytical::aie::AieKernelModel`]) scaled over the CU's K
+//!   AIEs, fed by operand packets from FMUs.
+//!
+//! Units communicate through timestamped packet channels mirroring the
+//! pre-routed stream topology. [`engine::Engine::run`] returns a
+//! [`SimReport`] with makespan, per-unit busy time and traffic counters;
+//! [`trace`] captures per-instruction events.
+
+pub mod engine;
+pub mod trace;
+
+use crate::analytical::aie::AieKernelModel;
+use crate::platform::Platform;
+
+/// Static fabric description for a simulation run.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    pub n_fmus: u32,
+    pub m_cus: u32,
+    pub aies_per_cu: u32,
+    /// fp32 elements per FMU buffer half.
+    pub fmu_elems: u64,
+    pub kernel: AieKernelModel,
+}
+
+impl Fabric {
+    pub fn from_config(cfg: &crate::arch::FilcoConfig) -> Self {
+        Self {
+            n_fmus: cfg.n_fmus,
+            m_cus: cfg.m_cus,
+            aies_per_cu: cfg.aies_per_cu,
+            fmu_elems: cfg.fmu_elems(),
+            kernel: if cfg.features.fp { AieKernelModel::Flexible } else { AieKernelModel::Static },
+        }
+    }
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// End-to-end time, seconds.
+    pub makespan_s: f64,
+    /// Busy seconds per unit (same indexing as `UnitId::code()` order:
+    /// loader, storer, FMUs, CUs).
+    pub busy: Vec<(crate::isa::UnitId, f64)>,
+    /// Total DDR bytes moved in / out.
+    pub ddr_in_bytes: u64,
+    pub ddr_out_bytes: u64,
+    /// Executed instruction count.
+    pub instructions: u64,
+}
+
+impl SimReport {
+    /// Utilization of a unit over the makespan.
+    pub fn utilization(&self, unit: crate::isa::UnitId) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.busy
+            .iter()
+            .find(|(u, _)| *u == unit)
+            .map(|(_, b)| b / self.makespan_s)
+            .unwrap_or(0.0)
+    }
+
+    /// Aggregate CU utilization (mean over CUs that appear).
+    pub fn mean_cu_utilization(&self) -> f64 {
+        let cus: Vec<f64> = self
+            .busy
+            .iter()
+            .filter(|(u, _)| matches!(u, crate::isa::UnitId::Cu(_)))
+            .map(|(_, b)| b / self.makespan_s.max(1e-30))
+            .collect();
+        if cus.is_empty() {
+            0.0
+        } else {
+            cus.iter().sum::<f64>() / cus.len() as f64
+        }
+    }
+}
+
+/// Convenience: simulate a program on a fabric/platform pair.
+pub fn simulate(
+    p: &Platform,
+    fabric: &Fabric,
+    program: &crate::isa::Program,
+) -> Result<SimReport, String> {
+    engine::Engine::new(p.clone(), fabric.clone()).run(program)
+}

@@ -1,0 +1,89 @@
+//! Per-instruction event traces from the simulator (debugging +
+//! utilization visualisation in the examples).
+
+use crate::isa::UnitId;
+
+/// One fired instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub unit: UnitId,
+    /// Index into the unit's instruction stream.
+    pub pc: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Ordered collection of events (firing order).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+}
+
+impl Trace {
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    /// Events of one unit, in time order.
+    pub fn unit_events(&self, unit: UnitId) -> Vec<Event> {
+        let mut v: Vec<Event> = self.events.iter().filter(|e| e.unit == unit).copied().collect();
+        v.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+        v
+    }
+
+    /// ASCII Gantt rendering (one row per unit, `width` columns).
+    pub fn gantt(&self, width: usize) -> String {
+        if self.events.is_empty() {
+            return String::new();
+        }
+        let t_max = self.events.iter().map(|e| e.end_s).fold(0.0f64, f64::max).max(1e-30);
+        let mut units: Vec<UnitId> = self.events.iter().map(|e| e.unit).collect();
+        units.sort();
+        units.dedup();
+        let mut out = String::new();
+        for u in units {
+            let mut row = vec![b'.'; width];
+            for e in self.unit_events(u) {
+                let a = ((e.start_s / t_max) * width as f64) as usize;
+                let b = (((e.end_s / t_max) * width as f64).ceil() as usize).min(width);
+                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                    *c = b'#';
+                }
+            }
+            out.push_str(&format!("{:>6} |{}|\n", u.to_string(), String::from_utf8(row).unwrap()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_events_sorted() {
+        let mut t = Trace::default();
+        t.push(Event { unit: UnitId::Cu(0), pc: 1, start_s: 2.0, end_s: 3.0 });
+        t.push(Event { unit: UnitId::Cu(0), pc: 0, start_s: 0.0, end_s: 1.0 });
+        t.push(Event { unit: UnitId::Fmu(0), pc: 0, start_s: 0.5, end_s: 1.5 });
+        let ev = t.unit_events(UnitId::Cu(0));
+        assert_eq!(ev.len(), 2);
+        assert!(ev[0].start_s <= ev[1].start_s);
+    }
+
+    #[test]
+    fn gantt_renders_rows() {
+        let mut t = Trace::default();
+        t.push(Event { unit: UnitId::Cu(0), pc: 0, start_s: 0.0, end_s: 0.5 });
+        t.push(Event { unit: UnitId::Fmu(1), pc: 0, start_s: 0.5, end_s: 1.0 });
+        let g = t.gantt(20);
+        assert!(g.contains("CU0"));
+        assert!(g.contains("FMU1"));
+        assert!(g.contains('#'));
+    }
+
+    #[test]
+    fn empty_trace_empty_gantt() {
+        assert!(Trace::default().gantt(10).is_empty());
+    }
+}

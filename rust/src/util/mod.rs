@@ -1,0 +1,53 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline with a narrow vendored crate
+//! set (no `serde`, `rand`, `proptest`, `criterion`), so this module
+//! carries minimal, well-tested replacements:
+//!
+//! * [`rng`] — SplitMix64 PRNG (deterministic, seedable; used by the GA,
+//!   workload generators and property tests).
+//! * [`json`] — a small JSON parser/writer for `artifacts/manifest.json`
+//!   and config files.
+//! * [`stats`] — streaming mean/percentile helpers for metrics & benches.
+//! * [`prop`] — a mini property-testing harness (randomized cases with
+//!   seed reporting on failure).
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Round `x` up to the next multiple of `m` (`m > 0`).
+#[inline]
+pub fn round_up(x: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// Ceiling division.
+#[inline]
+pub fn ceil_div(x: u64, m: u64) -> u64 {
+    debug_assert!(m > 0);
+    x.div_ceil(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+}

@@ -1,0 +1,106 @@
+//! Mini property-testing harness (`proptest` is not in the offline
+//! vendored set).
+//!
+//! Usage:
+//! ```ignore
+//! use crate::util::prop::Cases;
+//! Cases::new(200).run(|rng| {
+//!     let m = rng.range(1, 64);
+//!     assert!(some_invariant(m), "violated for m={m}");
+//! });
+//! ```
+//! On failure the panic message is re-raised with the case seed so the
+//! exact input can be replayed with `Cases::replay(seed, |rng| ...)`.
+
+use super::rng::SplitMix64;
+
+/// Runs `n` randomized cases, each with a deterministic per-case seed
+/// derived from a master seed (env `FILCO_PROP_SEED` overrides).
+pub struct Cases {
+    n: usize,
+    master_seed: u64,
+}
+
+impl Cases {
+    pub fn new(n: usize) -> Self {
+        let master_seed = std::env::var("FILCO_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xF11C0);
+        Self { n, master_seed }
+    }
+
+    pub fn with_seed(n: usize, master_seed: u64) -> Self {
+        Self { n, master_seed }
+    }
+
+    /// Run the property over `n` cases. Panics (with the case seed in the
+    /// message) on the first failing case.
+    pub fn run<F: FnMut(&mut SplitMix64)>(&self, mut prop: F) {
+        let mut seeder = SplitMix64::new(self.master_seed);
+        for case in 0..self.n {
+            let case_seed = seeder.next_u64();
+            let mut rng = SplitMix64::new(case_seed);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut rng);
+            }));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".to_string());
+                panic!(
+                    "property failed at case {case}/{} (replay seed {case_seed:#x}): {msg}",
+                    self.n
+                );
+            }
+        }
+    }
+
+    /// Replay a single failing case by seed.
+    pub fn replay<F: FnMut(&mut SplitMix64)>(seed: u64, mut prop: F) {
+        let mut rng = SplitMix64::new(seed);
+        prop(&mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Cases::with_seed(50, 1).run(|rng| {
+            count += 1;
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            Cases::with_seed(100, 2).run(|rng| {
+                let x = rng.below(10);
+                assert!(x != 3, "hit the bad value");
+            });
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "msg={msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = Vec::new();
+        Cases::replay(0xDEAD, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        Cases::replay(0xDEAD, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic diverse-MM workload generator (paper §4.2, Fig 9).
+//!
+//! The paper "design[s] a series of Transformer-based workloads with
+//! varying sequence length, number of heads, head dimension, and MLP
+//! ratio", then categorises them "according to the number of operations
+//! and inter-layer diversity". This module generates that grid:
+//! given a target operation count and a diversity degree, it synthesises
+//! a transformer-like layer set whose measured [`Dag::diversity`] and
+//! total MACs land in the requested bucket.
+
+use super::{Dag, MmShape};
+use crate::util::rng::SplitMix64;
+
+/// Grid axis: operation-count buckets (total MACs per workload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpBucket {
+    /// ~2^24 MACs — "small" (communication-bound region).
+    Small,
+    /// ~2^28 MACs.
+    Medium,
+    /// ~2^32 MACs — "large" (compute-bound region).
+    Large,
+}
+
+impl OpBucket {
+    pub const ALL: [OpBucket; 3] = [OpBucket::Small, OpBucket::Medium, OpBucket::Large];
+
+    pub fn target_macs(self) -> u64 {
+        // Per-layer sides of roughly 40 / 180 / 700 elements over a
+        // 12-layer workload — matching the paper's sweep from tiny
+        // attention heads (seq 32, head dim 64) up to big FFN MMs.
+        match self {
+            OpBucket::Small => 1 << 20,
+            OpBucket::Medium => 1 << 26,
+            OpBucket::Large => 1 << 32,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpBucket::Small => "small-ops",
+            OpBucket::Medium => "medium-ops",
+            OpBucket::Large => "large-ops",
+        }
+    }
+}
+
+/// Grid axis: diversity degree (0 = uniform square shapes, higher =
+/// more inter-layer variance + skew).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Diversity {
+    Low,
+    Medium,
+    High,
+}
+
+impl Diversity {
+    pub const ALL: [Diversity; 3] = [Diversity::Low, Diversity::Medium, Diversity::High];
+
+    /// (log-size spread, skew exponent range) per degree.
+    fn params(self) -> (f64, u32) {
+        match self {
+            Diversity::Low => (0.15, 0),
+            Diversity::Medium => (0.8, 2),
+            Diversity::High => (1.8, 4),
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Diversity::Low => "low-div",
+            Diversity::Medium => "med-div",
+            Diversity::High => "high-div",
+        }
+    }
+}
+
+fn round_to_atom(x: f64, atom: u32) -> u32 {
+    let v = (x.round() as u32).max(atom);
+    v.div_ceil(atom) * atom
+}
+
+/// Generate one workload for a (bucket, diversity) grid cell.
+///
+/// Layers form a chain (transformer blocks are sequential); shapes are
+/// log-normally perturbed around the cube root of per-layer MACs, with
+/// skew applied by shifting size between M/K/N — mimicking varying
+/// sequence length vs head dim vs FFN ratio.
+pub fn generate(bucket: OpBucket, div: Diversity, layers: usize, seed: u64) -> Dag {
+    let mut rng = SplitMix64::new(seed ^ 0xD1BE_25E5);
+    let (sigma, skew_range) = div.params();
+    let per_layer = bucket.target_macs() as f64 / layers as f64;
+
+    let mut d = Dag::new(format!("{}_{}", bucket.label(), div.label()));
+    let mut prev: Option<usize> = None;
+    for i in 0..layers {
+        // Per-layer MAC target, log-normal spread.
+        let macs = per_layer * (sigma * rng.next_normal()).exp();
+        let side = macs.cbrt();
+        // Skew: move up to 2^skew factor from one dim to another.
+        let sk = if skew_range == 0 {
+            1.0
+        } else {
+            2f64.powi(rng.range(0, (skew_range + 1) as usize) as i32)
+        };
+        let (mut m, mut k, mut n) = (side, side, side);
+        match rng.below(3) {
+            0 => {
+                m *= sk;
+                k /= sk.sqrt();
+                n /= sk.sqrt();
+            }
+            1 => {
+                k *= sk;
+                m /= sk.sqrt();
+                n /= sk.sqrt();
+            }
+            _ => {
+                n *= sk;
+                m /= sk.sqrt();
+                k /= sk.sqrt();
+            }
+        }
+        let shape = MmShape::new(
+            round_to_atom(m, crate::arch::ATOM_M),
+            round_to_atom(k, crate::arch::ATOM_K),
+            round_to_atom(n, crate::arch::ATOM_N),
+        );
+        let l = d.add(format!("mm{i}"), shape);
+        if let Some(p) = prev {
+            d.dep(p, l);
+        }
+        prev = Some(l);
+    }
+    d
+}
+
+/// The full 3x3 Fig 9 grid (fixed seeds → reproducible workloads).
+pub fn fig9_grid(layers: usize) -> Vec<(OpBucket, Diversity, Dag)> {
+    let mut out = Vec::new();
+    for (bi, &b) in OpBucket::ALL.iter().enumerate() {
+        for (di, &v) in Diversity::ALL.iter().enumerate() {
+            out.push((b, v, generate(b, v, layers, (bi * 3 + di) as u64 + 1)));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_dags_valid_and_chained() {
+        for (_, _, d) in fig9_grid(12) {
+            d.validate().unwrap();
+            assert_eq!(d.len(), 12);
+            assert_eq!(d.edges.len(), 11);
+        }
+    }
+
+    #[test]
+    fn op_counts_land_in_buckets() {
+        for b in OpBucket::ALL {
+            let d = generate(b, Diversity::Low, 12, 7);
+            let total = d.layers.iter().map(|l| l.shape.macs()).sum::<u64>() as f64;
+            let target = b.target_macs() as f64;
+            let ratio = total / target;
+            assert!(
+                (0.3..3.0).contains(&ratio),
+                "{}: total {total:.3e} vs target {target:.3e}",
+                d.name
+            );
+        }
+    }
+
+    #[test]
+    fn diversity_monotone_across_degrees() {
+        // Averaged over seeds, measured diversity must rise Low→High.
+        let avg = |v: Diversity| -> f64 {
+            (0..8)
+                .map(|s| generate(OpBucket::Medium, v, 16, s).diversity())
+                .sum::<f64>()
+                / 8.0
+        };
+        let lo = avg(Diversity::Low);
+        let mid = avg(Diversity::Medium);
+        let hi = avg(Diversity::High);
+        assert!(lo < mid, "low {lo} < medium {mid}");
+        assert!(mid < hi, "medium {mid} < high {hi}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(OpBucket::Small, Diversity::High, 10, 42);
+        let b = generate(OpBucket::Small, Diversity::High, 10, 42);
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.shape, y.shape);
+        }
+    }
+
+    #[test]
+    fn shapes_atomic_aligned() {
+        let d = generate(OpBucket::Medium, Diversity::High, 20, 3);
+        for l in &d.layers {
+            assert_eq!(l.shape.m % crate::arch::ATOM_M, 0);
+            assert_eq!(l.shape.k % crate::arch::ATOM_K, 0);
+            assert_eq!(l.shape.n % crate::arch::ATOM_N, 0);
+        }
+    }
+}

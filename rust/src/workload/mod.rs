@@ -1,0 +1,277 @@
+//! DNN workloads as layer DAGs of (batched) matrix multiplies.
+//!
+//! The paper's entire analysis treats DNN layers as dense MM operations
+//! whose *shape diversity* (intra- and inter-model, §1) is the problem
+//! being solved. A workload here is a DAG: nodes are MM layers `L_i`,
+//! edges are dependencies `P_{i,j}` (§3.2).
+//!
+//! * [`zoo`] — the models profiled in the paper: MLP (Wang et al.),
+//!   DeiT, PointNet, MLP-Mixer, BERT-32..512.
+//! * [`diverse`] — the synthetic diverse-MM workload generator behind
+//!   Fig 9 (sweeps operation count × diversity degree).
+
+pub mod diverse;
+pub mod zoo;
+
+/// One (optionally batched) matrix multiply: `batch × (m×k) @ (k×n)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MmShape {
+    pub batch: u32,
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+}
+
+impl MmShape {
+    pub fn new(m: u32, k: u32, n: u32) -> Self {
+        Self { batch: 1, m, k, n }
+    }
+
+    pub fn batched(batch: u32, m: u32, k: u32, n: u32) -> Self {
+        Self { batch, m, k, n }
+    }
+
+    /// Useful FLOPs (2 per MAC).
+    pub fn flops(&self) -> u64 {
+        2 * self.batch as u64 * self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// MACs.
+    pub fn macs(&self) -> u64 {
+        self.flops() / 2
+    }
+
+    /// fp32 bytes of A, B and C (per batch element summed).
+    pub fn bytes(&self) -> u64 {
+        4 * self.batch as u64
+            * (self.m as u64 * self.k as u64
+                + self.k as u64 * self.n as u64
+                + self.m as u64 * self.n as u64)
+    }
+
+    /// Computation-to-communication ratio in FLOPs/byte — the "CTC
+    /// ratio" the paper uses to explain why small BERT models are
+    /// communication-bound (§4.3).
+    pub fn ctc(&self) -> f64 {
+        self.flops() as f64 / self.bytes() as f64
+    }
+
+    /// A scalar "shape skew": max dim / min dim. Square MMs ≈ 1.
+    pub fn skew(&self) -> f64 {
+        let dims = [self.m as f64, self.k as f64, self.n as f64];
+        let mx = dims.iter().cloned().fold(f64::MIN, f64::max);
+        let mn = dims.iter().cloned().fold(f64::MAX, f64::min);
+        mx / mn
+    }
+}
+
+/// A named DAG node.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub shape: MmShape,
+}
+
+/// Workload DAG. An edge `(i, j)` means layer `j` depends on layer `i`
+/// (paper: `P_{i,j} = 1` iff `L_j` depends on `L_i`).
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub edges: Vec<(usize, usize)>,
+}
+
+impl Dag {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), layers: Vec::new(), edges: Vec::new() }
+    }
+
+    /// Append a layer, returning its index.
+    pub fn add(&mut self, name: impl Into<String>, shape: MmShape) -> usize {
+        self.layers.push(Layer { name: name.into(), shape });
+        self.layers.len() - 1
+    }
+
+    /// Add dependency: `to` depends on `from`.
+    pub fn dep(&mut self, from: usize, to: usize) {
+        debug_assert!(from < self.layers.len() && to < self.layers.len());
+        self.edges.push((from, to));
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// Predecessor lists.
+    pub fn preds(&self) -> Vec<Vec<usize>> {
+        let mut p = vec![Vec::new(); self.layers.len()];
+        for &(a, b) in &self.edges {
+            p[b].push(a);
+        }
+        p
+    }
+
+    /// Successor lists.
+    pub fn succs(&self) -> Vec<Vec<usize>> {
+        let mut s = vec![Vec::new(); self.layers.len()];
+        for &(a, b) in &self.edges {
+            s[a].push(b);
+        }
+        s
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<usize>> {
+        let mut indeg = vec![0usize; self.layers.len()];
+        for &(_, b) in &self.edges {
+            indeg[b] += 1;
+        }
+        let succs = self.succs();
+        let mut queue: Vec<usize> = (0..self.layers.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(self.layers.len());
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for &j in &succs[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    queue.push(j);
+                }
+            }
+        }
+        (order.len() == self.layers.len()).then_some(order)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for &(a, b) in &self.edges {
+            if a >= self.layers.len() || b >= self.layers.len() {
+                return Err(format!("edge ({a},{b}) out of range"));
+            }
+            if a == b {
+                return Err(format!("self-loop at {a}"));
+            }
+        }
+        if self.topo_order().is_none() {
+            return Err("cycle detected".into());
+        }
+        Ok(())
+    }
+
+    /// Total useful FLOPs.
+    pub fn total_flops(&self) -> u64 {
+        self.layers.iter().map(|l| l.shape.flops()).sum()
+    }
+
+    /// Total operand/result bytes (no reuse).
+    pub fn total_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.shape.bytes()).sum()
+    }
+
+    /// The paper's *diversity degree*: coefficient of variation of
+    /// per-layer log-MAC counts plus mean log shape-skew. 0 for a single
+    /// repeated square MM; grows with intra-model shape variance.
+    pub fn diversity(&self) -> f64 {
+        if self.layers.len() < 2 {
+            return 0.0;
+        }
+        let logs: Vec<f64> = self.layers.iter().map(|l| (l.shape.macs() as f64).ln()).collect();
+        let mean = logs.iter().sum::<f64>() / logs.len() as f64;
+        let var = logs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / logs.len() as f64;
+        let cv = var.sqrt();
+        let mean_skew =
+            self.layers.iter().map(|l| l.shape.skew().ln()).sum::<f64>() / self.layers.len() as f64;
+        cv + mean_skew
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Dag {
+        // 0 -> {1, 2} -> 3
+        let mut d = Dag::new("diamond");
+        let a = d.add("a", MmShape::new(8, 8, 8));
+        let b = d.add("b", MmShape::new(8, 8, 8));
+        let c = d.add("c", MmShape::new(8, 8, 8));
+        let e = d.add("e", MmShape::new(8, 8, 8));
+        d.dep(a, b);
+        d.dep(a, c);
+        d.dep(b, e);
+        d.dep(c, e);
+        d
+    }
+
+    #[test]
+    fn shape_math() {
+        let s = MmShape::new(32, 64, 16);
+        assert_eq!(s.flops(), 2 * 32 * 64 * 16);
+        assert_eq!(s.bytes(), 4 * (32 * 64 + 64 * 16 + 32 * 16));
+        assert!((s.skew() - 4.0).abs() < 1e-12);
+        let b = MmShape::batched(12, 32, 64, 16);
+        assert_eq!(b.flops(), 12 * s.flops());
+    }
+
+    #[test]
+    fn topo_respects_deps() {
+        let d = diamond();
+        let order = d.topo_order().unwrap();
+        let pos = |i: usize| order.iter().position(|&x| x == i).unwrap();
+        assert!(pos(0) < pos(1) && pos(0) < pos(2));
+        assert!(pos(1) < pos(3) && pos(2) < pos(3));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut d = diamond();
+        d.dep(3, 0);
+        assert!(d.topo_order().is_none());
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn self_loop_rejected() {
+        let mut d = diamond();
+        d.edges.push((1, 1));
+        assert!(d.validate().is_err());
+    }
+
+    #[test]
+    fn diversity_zero_for_uniform_square() {
+        let mut d = Dag::new("uniform");
+        for i in 0..4 {
+            d.add(format!("l{i}"), MmShape::new(64, 64, 64));
+        }
+        assert!(d.diversity() < 1e-9);
+    }
+
+    #[test]
+    fn diversity_grows_with_variance() {
+        let mut small = Dag::new("low");
+        small.add("a", MmShape::new(64, 64, 64));
+        small.add("b", MmShape::new(64, 64, 64));
+        let mut big = Dag::new("high");
+        big.add("a", MmShape::new(1024, 8, 1024));
+        big.add("b", MmShape::new(8, 1024, 8));
+        assert!(big.diversity() > small.diversity());
+    }
+
+    #[test]
+    fn preds_succs_consistent() {
+        let d = diamond();
+        let p = d.preds();
+        let s = d.succs();
+        assert_eq!(p[3], vec![1, 2]);
+        assert_eq!(s[0], vec![1, 2]);
+        assert!(p[0].is_empty());
+        assert!(s[3].is_empty());
+    }
+
+    #[test]
+    fn ctc_grows_with_size() {
+        assert!(MmShape::new(512, 512, 512).ctc() > MmShape::new(32, 32, 32).ctc());
+    }
+}

@@ -1,0 +1,271 @@
+//! The model zoo profiled in the paper (§1 Fig 1, §4.3 Fig 10):
+//! MLP (Wang et al. benchmark), DeiT, PointNet, MLP-Mixer, and the
+//! BERT-32..512 series.
+
+use super::{Dag, MmShape};
+
+/// Transformer encoder hyper-parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct EncoderCfg {
+    pub seq: u32,
+    pub hidden: u32,
+    pub heads: u32,
+    pub ffn: u32,
+    pub layers: u32,
+}
+
+/// Build a transformer-encoder DAG: per layer
+/// Q, K, V (parallel) -> scores -> context -> O -> FFN1 -> FFN2, with
+/// sequential dependencies across layers.
+pub fn encoder(name: &str, c: EncoderCfg) -> Dag {
+    assert!(c.hidden % c.heads == 0, "hidden must divide heads");
+    let dh = c.hidden / c.heads;
+    let mut d = Dag::new(name);
+    let mut prev_out: Option<usize> = None;
+    for l in 0..c.layers {
+        let q = d.add(format!("L{l}.q"), MmShape::new(c.seq, c.hidden, c.hidden));
+        let k = d.add(format!("L{l}.k"), MmShape::new(c.seq, c.hidden, c.hidden));
+        let v = d.add(format!("L{l}.v"), MmShape::new(c.seq, c.hidden, c.hidden));
+        if let Some(p) = prev_out {
+            d.dep(p, q);
+            d.dep(p, k);
+            d.dep(p, v);
+        }
+        let s = d.add(
+            format!("L{l}.scores"),
+            MmShape::batched(c.heads, c.seq, dh, c.seq),
+        );
+        d.dep(q, s);
+        d.dep(k, s);
+        let ctx = d.add(
+            format!("L{l}.ctx"),
+            MmShape::batched(c.heads, c.seq, c.seq, dh),
+        );
+        d.dep(s, ctx);
+        d.dep(v, ctx);
+        let o = d.add(format!("L{l}.o"), MmShape::new(c.seq, c.hidden, c.hidden));
+        d.dep(ctx, o);
+        let f1 = d.add(format!("L{l}.ffn1"), MmShape::new(c.seq, c.hidden, c.ffn));
+        d.dep(o, f1);
+        let f2 = d.add(format!("L{l}.ffn2"), MmShape::new(c.seq, c.ffn, c.hidden));
+        d.dep(f1, f2);
+        prev_out = Some(f2);
+    }
+    d
+}
+
+/// BERT-base encoder with sequence length `seq` — the §4.3 series
+/// (BERT-32, -64, -128, -256, -512). Hidden 768, 12 heads, FFN 3072.
+pub fn bert(seq: u32) -> Dag {
+    encoder(
+        &format!("BERT-{seq}"),
+        EncoderCfg { seq, hidden: 768, heads: 12, ffn: 3072, layers: 12 },
+    )
+}
+
+/// Short BERT (fewer layers) for simulator-heavy tests/benches.
+pub fn bert_layers(seq: u32, layers: u32) -> Dag {
+    encoder(
+        &format!("BERT-{seq}x{layers}"),
+        EncoderCfg { seq, hidden: 768, heads: 12, ffn: 3072, layers },
+    )
+}
+
+/// MLP-L: large near-square MM chain (low intra-model diversity) — the
+/// Fig 1 workload where monolithic designs shine. Shapes follow the
+/// Wang et al. MLP benchmark scaled to data-center size.
+pub fn mlp_l() -> Dag {
+    chain_mlp("MLP-L", 1024, &[4096, 4096, 4096, 4096, 4096, 1024])
+}
+
+/// MLP-S: the same topology at small size (inter-model diversity vs
+/// MLP-L; Fig 1's small workload).
+pub fn mlp_s() -> Dag {
+    chain_mlp("MLP-S", 64, &[256, 256, 256, 256, 256, 64])
+}
+
+fn chain_mlp(name: &str, batch: u32, widths: &[u32]) -> Dag {
+    let mut d = Dag::new(name);
+    let mut prev: Option<usize> = None;
+    let mut in_dim = widths[0];
+    for (i, &w) in widths.iter().enumerate().skip(1) {
+        let l = d.add(format!("fc{i}"), MmShape::new(batch, in_dim, w));
+        if let Some(p) = prev {
+            d.dep(p, l);
+        }
+        prev = Some(l);
+        in_dim = w;
+    }
+    d
+}
+
+/// DeiT-L (ViT-Large geometry: 197 tokens, hidden 1024, 16 heads) —
+/// medium diversity: attention vs FFN shapes differ.
+pub fn deit_l() -> Dag {
+    encoder(
+        "DeiT-L",
+        EncoderCfg { seq: 200, hidden: 1024, heads: 16, ffn: 4096, layers: 24 },
+    )
+}
+
+/// DeiT-S (hidden 384, 6 heads, 12 layers).
+pub fn deit_s() -> Dag {
+    encoder(
+        "DeiT-S",
+        EncoderCfg { seq: 200, hidden: 384, heads: 6, ffn: 1536, layers: 12 },
+    )
+}
+
+/// PointNet (classification head): shared per-point MLPs
+/// 3→64→64→64→128→1024 over 1024 points, T-Net 3x3 and 64x64 feature
+/// transforms, then FC 1024→512→256→40. Extremely skewed shapes — the
+/// highest-diversity model in Fig 1.
+pub fn pointnet() -> Dag {
+    let n_pts = 1024;
+    let mut d = Dag::new("PointNet");
+    // Input T-Net (simplified trunk): per-point MLP then FCs to 3x3.
+    let t1 = d.add("tnet1.mlp1", MmShape::new(n_pts, 3, 64));
+    let t2 = d.add("tnet1.mlp2", MmShape::new(n_pts, 64, 128));
+    let t3 = d.add("tnet1.mlp3", MmShape::new(n_pts, 128, 1024));
+    let t4 = d.add("tnet1.fc1", MmShape::new(1, 1024, 512));
+    let t5 = d.add("tnet1.fc2", MmShape::new(1, 512, 256));
+    let t6 = d.add("tnet1.fc3", MmShape::new(1, 256, 9));
+    let tx = d.add("tnet1.apply", MmShape::new(n_pts, 3, 3));
+    for w in [(t1, t2), (t2, t3), (t3, t4), (t4, t5), (t5, t6), (t6, tx)] {
+        d.dep(w.0, w.1);
+    }
+    // Trunk MLPs.
+    let m1 = d.add("mlp1", MmShape::new(n_pts, 3, 64));
+    d.dep(tx, m1);
+    let m2 = d.add("mlp2", MmShape::new(n_pts, 64, 64));
+    d.dep(m1, m2);
+    // Feature T-Net (64x64).
+    let f1 = d.add("tnet2.mlp1", MmShape::new(n_pts, 64, 64));
+    let f2 = d.add("tnet2.mlp2", MmShape::new(n_pts, 64, 128));
+    let f3 = d.add("tnet2.mlp3", MmShape::new(n_pts, 128, 1024));
+    let f4 = d.add("tnet2.fc1", MmShape::new(1, 1024, 512));
+    let f5 = d.add("tnet2.fc2", MmShape::new(1, 512, 256));
+    let f6 = d.add("tnet2.fc3", MmShape::new(1, 256, 64 * 64));
+    let fx = d.add("tnet2.apply", MmShape::new(n_pts, 64, 64));
+    d.dep(m2, f1);
+    for w in [(f1, f2), (f2, f3), (f3, f4), (f4, f5), (f5, f6), (f6, fx)] {
+        d.dep(w.0, w.1);
+    }
+    // Remaining trunk + classifier.
+    let m3 = d.add("mlp3", MmShape::new(n_pts, 64, 64));
+    d.dep(fx, m3);
+    let m4 = d.add("mlp4", MmShape::new(n_pts, 64, 128));
+    d.dep(m3, m4);
+    let m5 = d.add("mlp5", MmShape::new(n_pts, 128, 1024));
+    d.dep(m4, m5);
+    let c1 = d.add("fc1", MmShape::new(1, 1024, 512));
+    d.dep(m5, c1);
+    let c2 = d.add("fc2", MmShape::new(1, 512, 256));
+    d.dep(c1, c2);
+    let c3 = d.add("fc3", MmShape::new(1, 256, 40));
+    d.dep(c2, c3);
+    d
+}
+
+/// MLP-Mixer (S/16-like): token-mixing (S×S) + channel-mixing MMs.
+pub fn mlp_mixer() -> Dag {
+    let (s, c, layers) = (196u32, 512u32, 8u32);
+    let (ds, dc) = (256u32, 2048u32);
+    let mut d = Dag::new("MLP-Mixer");
+    let mut prev: Option<usize> = None;
+    for l in 0..layers {
+        // Token mixing operates on transposed (C, S): two MMs.
+        let tm1 = d.add(format!("L{l}.tok1"), MmShape::new(c, s, ds));
+        let tm2 = d.add(format!("L{l}.tok2"), MmShape::new(c, ds, s));
+        // Channel mixing on (S, C).
+        let cm1 = d.add(format!("L{l}.ch1"), MmShape::new(s, c, dc));
+        let cm2 = d.add(format!("L{l}.ch2"), MmShape::new(s, dc, c));
+        if let Some(p) = prev {
+            d.dep(p, tm1);
+        }
+        d.dep(tm1, tm2);
+        d.dep(tm2, cm1);
+        d.dep(cm1, cm2);
+        prev = Some(cm2);
+    }
+    d
+}
+
+/// The Fig 1 profiling set, in the paper's diversity order.
+pub fn fig1_models() -> Vec<Dag> {
+    vec![mlp_l(), mlp_s(), deit_l(), deit_s(), pointnet()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_zoo_dags_valid() {
+        for d in [
+            bert(32),
+            bert(512),
+            mlp_l(),
+            mlp_s(),
+            deit_l(),
+            deit_s(),
+            pointnet(),
+            mlp_mixer(),
+        ] {
+            d.validate().unwrap_or_else(|e| panic!("{}: {e}", d.name));
+            assert!(!d.is_empty());
+        }
+    }
+
+    #[test]
+    fn bert_layer_structure() {
+        let d = bert_layers(128, 1);
+        // 8 MMs per encoder layer: q,k,v, scores, ctx, o, ffn1, ffn2.
+        assert_eq!(d.len(), 8);
+        // scores layer is batched by heads with seq x dh x seq.
+        let s = &d.layers[3];
+        assert_eq!(s.shape.batch, 12);
+        assert_eq!((s.shape.m, s.shape.k, s.shape.n), (128, 64, 128));
+    }
+
+    #[test]
+    fn bert_flops_scale_superlinear_in_seq() {
+        // Attention scores are quadratic in seq; BERT-512 must be much
+        // more than 2x BERT-256.
+        let f256 = bert(256).total_flops() as f64;
+        let f512 = bert(512).total_flops() as f64;
+        assert!(f512 / f256 > 2.0);
+    }
+
+    #[test]
+    fn diversity_ordering_matches_fig1() {
+        // Paper: MLP lowest diversity, DeiT medium, PointNet highest.
+        let mlp = mlp_l().diversity();
+        let deit = deit_l().diversity();
+        let pnet = pointnet().diversity();
+        assert!(mlp < deit, "mlp {mlp} < deit {deit}");
+        assert!(deit < pnet, "deit {deit} < pnet {pnet}");
+    }
+
+    #[test]
+    fn mlp_l_bigger_than_mlp_s() {
+        assert!(mlp_l().total_flops() > 20 * mlp_s().total_flops());
+    }
+
+    #[test]
+    fn encoder_cross_layer_dependency() {
+        let d = bert_layers(64, 2);
+        assert_eq!(d.len(), 16);
+        // Layer 1's q (index 8) depends on layer 0's ffn2 (index 7).
+        assert!(d.edges.contains(&(7, 8)));
+    }
+
+    #[test]
+    fn pointnet_has_tiny_and_huge_layers() {
+        let d = pointnet();
+        let macs: Vec<u64> = d.layers.iter().map(|l| l.shape.macs()).collect();
+        let mx = *macs.iter().max().unwrap();
+        let mn = *macs.iter().min().unwrap();
+        assert!(mx / mn > 1000, "PointNet should span >1000x op-count range");
+    }
+}

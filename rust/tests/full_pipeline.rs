@@ -1,0 +1,95 @@
+//! Integration: model zoo -> Stage-1 -> Stage-2 (GA) -> instruction
+//! generation -> binary codegen round-trip -> fabric simulation, for
+//! several models end to end.
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::instrgen;
+use filco::dse::{ga::GaConfig, stage1};
+use filco::isa::encode;
+use filco::platform::Platform;
+use filco::sim::{self, Fabric};
+use filco::workload::{zoo, Dag};
+
+fn run_pipeline(dag: &Dag) {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    cfg.validate(&p).unwrap();
+    dag.validate().unwrap();
+
+    let table = stage1::optimize(&p, &cfg, dag);
+    assert_eq!(table.num_layers(), dag.len());
+
+    let out = GaConfig { population: 24, generations: 30, seed: 9, ..Default::default() }
+        .solve(dag, &table, &cfg);
+    out.schedule.validate(dag, &table, cfg.n_fmus, cfg.m_cus).unwrap();
+    assert!(out.best_makespan.is_finite() && out.best_makespan > 0.0);
+
+    // Schedule quality sanity: not worse than fully-serial fastest-mode.
+    let serial: f64 = (0..dag.len()).map(|i| table.fastest(i).latency_s).sum();
+    assert!(
+        out.best_makespan <= serial * 1.0001,
+        "{}: GA {} worse than serial {serial}",
+        dag.name,
+        out.best_makespan
+    );
+
+    let prog = instrgen::generate(dag, &table, &out.schedule, 48);
+    prog.validate().unwrap();
+
+    // Binary round-trip of every stream.
+    for u in prog.units() {
+        let bytes = encode::encode_stream(prog.stream(u));
+        let back = encode::decode_stream(&bytes).unwrap();
+        assert_eq!(back.len(), prog.stream(u).len());
+    }
+
+    let report = sim::simulate(&p, &Fabric::from_config(&cfg), &prog)
+        .unwrap_or_else(|e| panic!("{}: {e}", dag.name));
+    assert!(report.makespan_s > 0.0);
+    // Simulated time within an order of magnitude of the analytical
+    // schedule (different fidelity levels; gross divergence = bug).
+    let ratio = report.makespan_s / out.best_makespan;
+    assert!(
+        (0.1..20.0).contains(&ratio),
+        "{}: sim/model ratio {ratio} (sim {} model {})",
+        dag.name,
+        report.makespan_s,
+        out.best_makespan
+    );
+}
+
+#[test]
+fn pipeline_bert_small() {
+    run_pipeline(&zoo::bert_layers(64, 2));
+}
+
+#[test]
+fn pipeline_bert_long_seq() {
+    run_pipeline(&zoo::bert_layers(512, 1));
+}
+
+#[test]
+fn pipeline_mlp_s() {
+    run_pipeline(&zoo::mlp_s());
+}
+
+#[test]
+fn pipeline_pointnet() {
+    run_pipeline(&zoo::pointnet());
+}
+
+#[test]
+fn pipeline_mixer() {
+    run_pipeline(&zoo::mlp_mixer());
+}
+
+#[test]
+fn pipeline_diverse_grid_cells() {
+    use filco::workload::diverse::{generate, Diversity, OpBucket};
+    for (b, d) in [
+        (OpBucket::Small, Diversity::High),
+        (OpBucket::Medium, Diversity::Medium),
+    ] {
+        run_pipeline(&generate(b, d, 10, 3));
+    }
+}

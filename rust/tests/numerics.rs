@@ -1,0 +1,120 @@
+//! Numerical integration tests: every AOT artifact executes via PJRT and
+//! matches host-side oracles (skipped when `make artifacts` hasn't run).
+
+use filco::runtime::tensor::{matmul_ref, HostTensor};
+use filco::runtime::Engine;
+use filco::util::rng::SplitMix64;
+
+fn engine() -> Option<Engine> {
+    let dir = filco::runtime::default_artifact_dir();
+    dir.join("manifest.json").exists().then(|| Engine::open(dir).expect("engine"))
+}
+
+#[test]
+fn every_mm_bucket_matches_oracle() {
+    let Some(e) = engine() else { return };
+    for (m, k, n) in e.manifest.mm_buckets() {
+        let a = HostTensor::randn(&[m, k], (m * 31 + k) as u64);
+        let b = HostTensor::randn(&[k, n], (k * 17 + n) as u64);
+        let got = e.execute(&format!("mm_{m}x{k}x{n}"), &[a.clone(), b.clone()]).unwrap();
+        let exp = matmul_ref(&a, &b);
+        let diff = got[0].max_abs_diff(&exp);
+        // fp32 accumulation error grows with k.
+        let tol = 1e-4 * (k as f32).sqrt().max(1.0);
+        assert!(diff < tol, "mm_{m}x{k}x{n}: diff {diff} tol {tol}");
+    }
+}
+
+#[test]
+fn random_shapes_through_bucket_padding() {
+    let Some(e) = engine() else { return };
+    let mut rng = SplitMix64::new(0x5EED);
+    for _ in 0..10 {
+        let m = rng.range(1, 120);
+        let k = rng.range(1, 120);
+        let n = rng.range(1, 120);
+        let a = HostTensor::randn(&[m, k], rng.next_u64());
+        let b = HostTensor::randn(&[k, n], rng.next_u64());
+        let got = e.mm(&a, &b).unwrap();
+        let exp = matmul_ref(&a, &b);
+        assert!(
+            got.allclose(&exp, 1e-3, 1e-3),
+            "{m}x{k}x{n}: diff {}",
+            got.max_abs_diff(&exp)
+        );
+    }
+}
+
+#[test]
+fn padding_region_does_not_leak() {
+    // Zero rows/cols in the bucket must not perturb the valid region.
+    let Some(e) = engine() else { return };
+    let a = HostTensor::randn(&[5, 7], 1);
+    let b = HostTensor::randn(&[7, 3], 2);
+    let direct = e.mm(&a, &b).unwrap();
+    // Same result when caller pre-pads to another covering size.
+    let got2 = e
+        .execute("mm_16x16x16", &[a.pad2(16, 16), b.pad2(16, 16)])
+        .unwrap()[0]
+        .slice2(5, 3);
+    assert!(direct.allclose(&got2, 1e-4, 1e-4));
+}
+
+#[test]
+fn bert_layer_artifact_runs_and_is_finite() {
+    let Some(e) = engine() else { return };
+    let entry = e.manifest.find("bert_layer_s32_h128_a4_f512");
+    if entry.is_none() {
+        return;
+    }
+    let model = filco::coordinator::serving::BertModel::synthetic(32, 128, 4, 512, 1, 3);
+    use filco::coordinator::serving::Servable;
+    let x = HostTensor::randn(&[32, 128], 4);
+    let y = model.run(&e, &x).unwrap();
+    assert_eq!(y.shape, vec![32, 128]);
+    assert!(y.data.iter().all(|v| v.is_finite()));
+    // LayerNorm output: each row ~zero mean (gain 1, bias 0).
+    let row: f32 = y.data[..128].iter().sum::<f32>() / 128.0;
+    assert!(row.abs() < 0.2, "row mean {row}");
+}
+
+#[test]
+fn mlp_artifact_matches_composition_of_buckets() {
+    let Some(e) = engine() else { return };
+    if e.manifest.find("mlp_b32_64x128x128x10").is_none() {
+        return;
+    }
+    // Run the MLP artifact and cross-check with per-layer bucketed MMs
+    // + host relu.
+    let dims = [64usize, 128, 128, 10];
+    let x = HostTensor::randn(&[32, 64], 9);
+    let ws: Vec<HostTensor> = (0..3)
+        .map(|i| {
+            let mut w = HostTensor::randn(&[dims[i], dims[i + 1]], 100 + i as u64);
+            for v in &mut w.data {
+                *v *= 1.0 / (dims[i] as f32).sqrt();
+            }
+            w
+        })
+        .collect();
+    let bs: Vec<HostTensor> = (0..3).map(|i| HostTensor::zeros(&[dims[i + 1]])).collect();
+    let mut args = vec![x.clone()];
+    args.extend(ws.iter().cloned());
+    args.extend(bs.iter().cloned());
+    let got = e.execute("mlp_b32_64x128x128x10", &args).unwrap();
+
+    let mut h = x;
+    for (i, w) in ws.iter().enumerate() {
+        h = matmul_ref(&h, w);
+        if i != 2 {
+            for v in &mut h.data {
+                *v = v.max(0.0);
+            }
+        }
+    }
+    assert!(
+        got[0].allclose(&h, 2e-3, 2e-3),
+        "mlp mismatch: {}",
+        got[0].max_abs_diff(&h)
+    );
+}

@@ -1,0 +1,80 @@
+//! Simulator-vs-analytical consistency: the two timing models are
+//! independent implementations of the same fabric; they must agree on
+//! *ordering* and stay within a bounded ratio.
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::instrgen;
+use filco::dse::{ga::GaConfig, stage1};
+use filco::platform::Platform;
+use filco::sim::{self, Fabric};
+use filco::workload::{Dag, MmShape};
+
+fn sim_and_model(shape: MmShape) -> (f64, f64) {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    let mut dag = Dag::new("one");
+    dag.add("mm", shape);
+    let table = stage1::optimize(&p, &cfg, &dag);
+    let sched = GaConfig { population: 8, generations: 6, seed: 1, ..Default::default() }
+        .solve(&dag, &table, &cfg)
+        .schedule;
+    let prog = instrgen::generate(&dag, &table, &sched, 64);
+    let rep = sim::simulate(&p, &Fabric::from_config(&cfg), &prog).expect("sim");
+    (rep.makespan_s, sched.makespan)
+}
+
+#[test]
+fn ordering_preserved_across_sizes() {
+    let sizes = [64u32, 128, 256, 512, 1024];
+    let mut sims = Vec::new();
+    for &s in &sizes {
+        let (sim_t, model_t) = sim_and_model(MmShape::new(s, s, s));
+        assert!(sim_t > 0.0 && model_t > 0.0);
+        sims.push(sim_t);
+    }
+    for w in sims.windows(2) {
+        assert!(w[1] > w[0], "sim time must grow with size: {sims:?}");
+    }
+}
+
+#[test]
+fn ratio_bounded_for_medium_mms() {
+    for &(m, k, n) in &[(256u32, 256u32, 256u32), (512, 256, 512), (128, 512, 128)] {
+        let (sim_t, model_t) = sim_and_model(MmShape::new(m, k, n));
+        let ratio = sim_t / model_t;
+        assert!(
+            (0.2..15.0).contains(&ratio),
+            "{m}x{k}x{n}: sim {sim_t} vs model {model_t} (ratio {ratio})"
+        );
+    }
+}
+
+#[test]
+fn ddr_accounting_matches_program() {
+    // The simulator's DDR byte counters equal what the generator emitted.
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    let mut dag = Dag::new("one");
+    dag.add("mm", MmShape::new(96, 96, 96));
+    let table = stage1::optimize(&p, &cfg, &dag);
+    let sched = GaConfig { population: 8, generations: 6, seed: 2, ..Default::default() }
+        .solve(&dag, &table, &cfg)
+        .schedule;
+    let prog = instrgen::generate(&dag, &table, &sched, 64);
+    let rep = sim::simulate(&p, &Fabric::from_config(&cfg), &prog).unwrap();
+    let mut expect_in = 0u64;
+    let mut expect_out = 0u64;
+    for u in prog.units() {
+        for i in prog.stream(u) {
+            match i {
+                filco::isa::Instr::IomLoad(l) => expect_in += l.view.elements() * 4,
+                filco::isa::Instr::IomStore(s) => expect_out += s.view.elements() * 4,
+                _ => {}
+            }
+        }
+    }
+    assert_eq!(rep.ddr_in_bytes, expect_in);
+    assert_eq!(rep.ddr_out_bytes, expect_out);
+    // Output C equals the matrix exactly once.
+    assert_eq!(expect_out, 96 * 96 * 4);
+}

@@ -1,0 +1,168 @@
+//! Cross-validation of the two Stage-2 solvers against each other and
+//! against exhaustive enumeration on tiny instances.
+
+use filco::arch::FilcoConfig;
+use filco::dse::ga::GaConfig;
+use filco::dse::milp::MilpStatus;
+use filco::dse::sched_milp;
+use filco::dse::schedule::{list_schedule, CandidateTable, Mode};
+use filco::platform::Platform;
+use filco::util::prop::Cases;
+use filco::util::rng::SplitMix64;
+use filco::workload::{Dag, MmShape};
+
+fn cfg_fc(f: u32, c: u32) -> FilcoConfig {
+    let p = Platform::vck190();
+    let mut cfg = FilcoConfig::default_for(&p);
+    cfg.n_fmus = f;
+    cfg.m_cus = c;
+    cfg
+}
+
+/// Exhaustive optimum over (mode choice x topological order) via
+/// permutations — only for tiny n.
+fn brute_force(dag: &Dag, table: &CandidateTable, f: u32, c: u32) -> f64 {
+    let n = dag.len();
+    let mut best = f64::INFINITY;
+    // All permutations of 0..n that are valid orders get checked inside
+    // list_schedule via ready times; restrict to topological permutations.
+    let mut perm: Vec<usize> = (0..n).collect();
+    let preds = dag.preds();
+    fn is_topo(perm: &[usize], preds: &[Vec<usize>]) -> bool {
+        let mut pos = vec![0usize; perm.len()];
+        for (i, &l) in perm.iter().enumerate() {
+            pos[l] = i;
+        }
+        perm.iter().all(|&l| preds[l].iter().all(|&q| pos[q] < pos[l]))
+    }
+    let mut mode_counts = 1usize;
+    for ms in &table.modes {
+        mode_counts *= ms.len();
+    }
+    // Heap's algorithm over permutations.
+    fn heaps(k: usize, arr: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if k <= 1 {
+            out.push(arr.clone());
+            return;
+        }
+        for i in 0..k {
+            heaps(k - 1, arr, out);
+            if k % 2 == 0 {
+                arr.swap(i, k - 1);
+            } else {
+                arr.swap(0, k - 1);
+            }
+        }
+    }
+    let mut perms = Vec::new();
+    heaps(n, &mut perm, &mut perms);
+    for order in perms.iter().filter(|p| is_topo(p, &preds)) {
+        for mode_id in 0..mode_counts {
+            let mut mid = mode_id;
+            let mode_of: Vec<usize> = table
+                .modes
+                .iter()
+                .map(|ms| {
+                    let m = mid % ms.len();
+                    mid /= ms.len();
+                    m
+                })
+                .collect();
+            let s = list_schedule(dag, table, order, &mode_of, f, c);
+            best = best.min(s.makespan);
+        }
+    }
+    best
+}
+
+fn random_instance(rng: &mut SplitMix64, n: usize, cands: usize) -> (Dag, CandidateTable) {
+    let mut dag = Dag::new("rand");
+    for i in 0..n {
+        dag.add(format!("l{i}"), MmShape::new(8, 8, 8));
+        if i > 0 && rng.below(2) == 0 {
+            let from = rng.range(0, i);
+            dag.dep(from, i);
+        }
+    }
+    let modes = (0..n)
+        .map(|_| {
+            (0..cands)
+                .map(|_| {
+                    let f = 1 + rng.below(2) as u32;
+                    let c = 1 + rng.below(2) as u32;
+                    Mode {
+                        fmus: f,
+                        cus: c,
+                        latency_s: (1.0 + rng.next_f64() * 3.0) / (f * c) as f64,
+                        tile: (8, 8, 8),
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    (dag, CandidateTable { modes })
+}
+
+#[test]
+// Branch-and-bound over a dense simplex is ~10x slower without
+// optimizations; run these exactness suites in release only
+// (`cargo test --release`).
+#[cfg_attr(debug_assertions, ignore = "slow MILP: run with --release")]
+fn milp_matches_brute_force_on_tiny_instances() {
+    Cases::with_seed(6, 0xC0FFEE).run(|rng| {
+        let (dag, table) = random_instance(rng, 4, 2);
+        let cfg = cfg_fc(2, 2);
+        let milp = sched_milp::solve(&dag, &table, &cfg, 120.0);
+        assert_eq!(milp.status, MilpStatus::Optimal);
+        let bf = brute_force(&dag, &table, 2, 2);
+        // MILP may beat the list-scheduler-restricted brute force (it can
+        // idle units strategically), never lose to it.
+        assert!(
+            milp.schedule.makespan <= bf + 1e-6,
+            "milp {} vs brute {bf}",
+            milp.schedule.makespan
+        );
+        milp.schedule.validate(&dag, &table, 2, 2).unwrap();
+    });
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "slow MILP: run with --release")]
+fn ga_never_below_milp_optimum() {
+    Cases::with_seed(5, 0xBEEF).run(|rng| {
+        let (dag, table) = random_instance(rng, 5, 3);
+        let cfg = cfg_fc(2, 2);
+        let milp = sched_milp::solve(&dag, &table, &cfg, 120.0);
+        if milp.status != MilpStatus::Optimal {
+            return; // budget-dependent; only check proven optima
+        }
+        let ga = GaConfig { population: 32, generations: 60, seed: rng.next_u64(), ..Default::default() }
+            .solve(&dag, &table, &cfg);
+        assert!(
+            ga.best_makespan >= milp.schedule.makespan - 1e-9,
+            "GA {} below proven optimum {}",
+            ga.best_makespan,
+            milp.schedule.makespan
+        );
+        // And near-optimal (paper: ~3% gap; tiny instances: <= 10%).
+        assert!(
+            ga.best_makespan <= milp.schedule.makespan * 1.10 + 1e-9,
+            "GA {} too far from optimum {}",
+            ga.best_makespan,
+            milp.schedule.makespan
+        );
+    });
+}
+
+#[test]
+fn ga_valid_on_random_instances() {
+    Cases::with_seed(10, 0xABCD).run(|rng| {
+        let n = rng.range(3, 20);
+        let cands = rng.range(1, 6);
+        let (dag, table) = random_instance(rng, n, cands);
+        let cfg = cfg_fc(4, 4);
+        let ga = GaConfig { population: 16, generations: 15, seed: rng.next_u64(), ..Default::default() }
+            .solve(&dag, &table, &cfg);
+        ga.schedule.validate(&dag, &table, 4, 4).unwrap();
+    });
+}
