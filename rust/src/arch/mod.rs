@@ -8,7 +8,7 @@
 use crate::platform::Platform;
 
 /// The three flexibility features ablated in Fig 10.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Features {
     /// Flexible parallelism (§2.2): runtime-flexible AIE tile sizes.
     pub fp: bool,
@@ -60,7 +60,10 @@ pub const MAX_TILE_K: u32 = 32;
 pub const MAX_TILE_N: u32 = 32;
 
 /// Static FILCO configuration: N FMUs, M CUs, K AIEs per CU (§2.1).
-#[derive(Debug, Clone)]
+///
+/// `Eq`/`Hash` (all fields are integers or flags) make a config usable
+/// as part of a cache key — see [`crate::serve::cache::ScheduleCache`].
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct FilcoConfig {
     /// N — number of Flexible Memory Units.
     pub n_fmus: u32,

@@ -1,4 +1,5 @@
-//! Serving metrics: per-request latency tracking and throughput summary.
+//! Serving metrics: per-request latency tracking, log-bucketed latency
+//! histograms (per-tenant p50/p95/p99), and throughput summaries.
 
 use std::time::Instant;
 
@@ -53,6 +54,10 @@ impl Metrics {
         percentile(&self.latencies_s, 0.50)
     }
 
+    pub fn p95(&self) -> f64 {
+        percentile(&self.latencies_s, 0.95)
+    }
+
     pub fn p99(&self) -> f64 {
         percentile(&self.latencies_s, 0.99)
     }
@@ -72,14 +77,150 @@ impl Metrics {
             return "no requests".to_string();
         }
         format!(
-            "n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms rps={:.1} errors={}",
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms rps={:.1} errors={}",
             self.count(),
             self.mean_latency_s() * 1e3,
             self.p50() * 1e3,
+            self.p95() * 1e3,
             self.p99() * 1e3,
             self.running.max() * 1e3,
             self.throughput_rps(),
             self.errors,
+        )
+    }
+}
+
+/// Smallest latency the histogram resolves (100 ns).
+const HIST_FLOOR_S: f64 = 1e-7;
+/// Log-spaced buckets per decade.
+const HIST_PER_DECADE: usize = 8;
+/// Decades covered: 1e-7 s .. 1e+3 s.
+const HIST_DECADES: usize = 10;
+const HIST_BUCKETS: usize = HIST_PER_DECADE * HIST_DECADES;
+
+/// Fixed-memory log-bucketed latency histogram: O(1) record, O(buckets)
+/// quantiles, mergeable across workers. Resolution is one bucket,
+/// `10^(1/8)` ≈ 33% — plenty for p50/p95/p99 serving dashboards, and
+/// unlike [`Metrics`] it never grows with request count.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; HIST_BUCKETS],
+    total: u64,
+    sum_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: [0; HIST_BUCKETS],
+            total: 0,
+            sum_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(latency_s: f64) -> usize {
+        let x = latency_s.max(HIST_FLOOR_S);
+        let idx = ((x / HIST_FLOOR_S).log10() * HIST_PER_DECADE as f64).floor();
+        (idx as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i`'s bounds.
+    fn bucket_mid(i: usize) -> f64 {
+        let lo = HIST_FLOOR_S * 10f64.powf(i as f64 / HIST_PER_DECADE as f64);
+        let hi = HIST_FLOOR_S * 10f64.powf((i + 1) as f64 / HIST_PER_DECADE as f64);
+        (lo * hi).sqrt()
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        self.counts[Self::bucket_of(latency_s)] += 1;
+        self.total += 1;
+        self.sum_s += latency_s;
+        self.min_s = self.min_s.min(latency_s);
+        self.max_s = self.max_s.max(latency_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_s / self.total as f64
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max_s
+        }
+    }
+
+    /// Quantile estimate, `q` in [0, 1]; 0 when empty. Accurate to one
+    /// bucket (~33%), then clamped into the observed [min, max] range.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_mid(i).clamp(self.min_s, self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram into this one (worker merge).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_s += other.sum_s;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+    }
+
+    pub fn summary(&self) -> String {
+        if self.total == 0 {
+            return "no requests".to_string();
+        }
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.total,
+            self.mean_s() * 1e3,
+            self.p50() * 1e3,
+            self.p95() * 1e3,
+            self.p99() * 1e3,
+            self.max_s * 1e3,
         )
     }
 }
@@ -96,6 +237,7 @@ mod tests {
         }
         assert_eq!(m.count(), 100);
         assert!((m.p50() - 0.0505).abs() < 1e-3);
+        assert!(m.p95() > 0.094);
         assert!(m.p99() > 0.098);
         assert_eq!(m.total_flops, 100_000);
         assert!(m.summary().contains("n=100"));
@@ -104,5 +246,74 @@ mod tests {
     #[test]
     fn empty_summary_safe() {
         assert_eq!(Metrics::new().summary(), "no requests");
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket() {
+        let mut h = LatencyHistogram::new();
+        for _ in 0..99 {
+            h.record(1e-3);
+        }
+        h.record(1.0);
+        assert_eq!(h.count(), 100);
+        // p50 lands in the 1 ms bucket (exactly 1 ms after clamping).
+        assert!((h.p50() - 1e-3).abs() < 1e-3 * 0.5, "p50 {}", h.p50());
+        // p99 must not see the 1 s outlier below its rank... the outlier
+        // IS the 100th value, so p99 < 1 s but p100-ish max is 1 s.
+        assert!(h.max_s() == 1.0);
+        assert!(h.p95() < 0.1, "p95 {}", h.p95());
+    }
+
+    #[test]
+    fn histogram_orders_quantiles() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record(i as f64 * 1e-5); // 10 µs .. 10 ms
+        }
+        assert!(h.p50() <= h.p95());
+        assert!(h.p95() <= h.p99());
+        assert!(h.p99() <= h.max_s());
+        // p50 around 5 ms, one bucket (~33%) tolerance.
+        assert!(h.p50() > 5e-3 / 1.4 && h.p50() < 5e-3 * 1.4, "p50 {}", h.p50());
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut c = LatencyHistogram::new();
+        for i in 0..50 {
+            let x = 1e-4 * (1.0 + i as f64);
+            a.record(x);
+            c.record(x);
+        }
+        for i in 0..50 {
+            let x = 2e-3 * (1.0 + i as f64);
+            b.record(x);
+            c.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert!((a.p95() - c.p95()).abs() < 1e-12);
+        assert!((a.mean_s() - c.mean_s()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_empty_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.max_s(), 0.0);
+        assert_eq!(h.summary(), "no requests");
+    }
+
+    #[test]
+    fn histogram_extremes_clamped() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.0); // below floor
+        h.record(1e6); // above ceiling
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) >= 0.0);
+        assert_eq!(h.max_s(), 1e6);
     }
 }

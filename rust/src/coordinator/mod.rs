@@ -10,8 +10,10 @@
 //! * [`reconfig`] — real-time reconfiguration manager: composes the
 //!   fabric into one unified accelerator or several independent ones
 //!   (the paper's headline capability) by repartitioning FMUs/CUs
-//!   between tenants at runtime.
-//! * [`metrics`] — latency/throughput accounting.
+//!   between tenants at runtime. Driven online by
+//!   [`crate::serve::FabricScheduler`].
+//! * [`metrics`] — latency/throughput accounting, including the
+//!   log-bucketed per-tenant latency histograms the serve layer uses.
 
 pub mod instrgen;
 pub mod metrics;

@@ -229,6 +229,79 @@ mod tests {
     }
 
     #[test]
+    fn zero_weight_tenant_still_gets_a_floor() {
+        let mut r = Reconfigurator::new(base());
+        // A zero-weight tenant is admitted but floored to one unit each.
+        let parts = r.split(&[("hot", 4), ("idle", 0)]).unwrap();
+        r.validate().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(parts[1].n_fmus() >= 1 && parts[1].m_cus() >= 1);
+        assert!(parts[0].m_cus() > parts[1].m_cus());
+    }
+
+    #[test]
+    fn all_zero_weights_rejected() {
+        let mut r = Reconfigurator::new(base());
+        assert!(r.split(&[("a", 0), ("b", 0)]).is_err());
+        assert!(r.split(&[]).is_err());
+    }
+
+    #[test]
+    fn more_tenants_than_fmus_rejected() {
+        // CU-rich, FMU-poor fabric: the FMU side must also bound tenancy.
+        let mut cfg = base();
+        cfg.n_fmus = 2;
+        let mut r = Reconfigurator::new(cfg);
+        assert!(r.split(&[("a", 1), ("b", 1)]).is_ok());
+        let mut r = Reconfigurator::new({
+            let mut c = base();
+            c.n_fmus = 2;
+            c
+        });
+        assert!(r.split(&[("a", 1), ("b", 1), ("c", 1)]).is_err());
+    }
+
+    #[test]
+    fn single_tenant_split_round_trips_to_unified() {
+        let mut r = Reconfigurator::new(base());
+        r.split(&[("a", 1), ("b", 3)]).unwrap();
+        let solo = r.split(&[("everything", 7)]).unwrap();
+        assert_eq!(solo.len(), 1);
+        // One tenant owns the whole fabric — identical to the unified
+        // composition apart from the name.
+        let unified = r.compose_unified();
+        assert_eq!(solo[0].fmus, unified.fmus);
+        assert_eq!(solo[0].cus, unified.cus);
+        r.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let mut r = Reconfigurator::new(base());
+        r.split(&[("a", 1), ("b", 1)]).unwrap();
+        // Corrupt: b's FMU range now overlaps a's.
+        r.partitions[1].fmus.0 = 0;
+        let err = r.validate().unwrap_err();
+        assert!(err.contains("double-assigned"), "got {err}");
+    }
+
+    #[test]
+    fn validate_catches_out_of_range() {
+        let mut r = Reconfigurator::new(base());
+        r.split(&[("a", 1), ("b", 1)]).unwrap();
+        r.partitions[1].cus.1 = base().m_cus + 5;
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_empty_partition() {
+        let mut r = Reconfigurator::new(base());
+        r.split(&[("a", 1), ("b", 1)]).unwrap();
+        r.partitions[0].cus = (3, 3);
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
     fn partition_config_slices() {
         let mut r = Reconfigurator::new(base());
         let parts = r.split(&[("a", 1), ("b", 3)]).unwrap();

@@ -6,13 +6,13 @@
 //! *fabric time* the FILCO schedule would take on the modelled VCK190
 //! (the quantity the paper reports).
 
-use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::runtime::{Engine, HostTensor};
+use crate::serve::queue::{BoundedQueue, PushError};
 
 use super::metrics::Metrics;
 
@@ -182,11 +182,12 @@ pub struct Response {
     pub fabric_latency_s: f64,
 }
 
-/// Bounded FIFO with blocking pop — the leader's request queue.
+/// FIFO with blocking batched pop — the leader's request queue. A thin
+/// wrapper over [`BoundedQueue`], which keeps the deque and the closed
+/// flag under one lock (the old two-mutex `closed` check could observe
+/// the flag without the queue state it guards).
 pub struct RequestQueue {
-    inner: Mutex<VecDeque<Request>>,
-    cv: Condvar,
-    closed: Mutex<bool>,
+    inner: BoundedQueue<Request>,
 }
 
 impl Default for RequestQueue {
@@ -196,42 +197,46 @@ impl Default for RequestQueue {
 }
 
 impl RequestQueue {
+    /// Unbounded queue (the single-model leader's historical behavior).
     pub fn new() -> Self {
-        Self { inner: Mutex::new(VecDeque::new()), cv: Condvar::new(), closed: Mutex::new(false) }
+        Self { inner: BoundedQueue::unbounded() }
     }
 
+    /// Bounded queue: [`Self::try_push`] rejects beyond `capacity`.
+    pub fn bounded(capacity: usize) -> Self {
+        Self { inner: BoundedQueue::new(capacity) }
+    }
+
+    /// Infallible push; a request offered to a full or closed queue is
+    /// dropped with a warning. Use [`Self::try_push`] for backpressure.
     pub fn push(&self, r: Request) {
-        self.inner.lock().unwrap().push_back(r);
-        self.cv.notify_one();
+        let id = r.id;
+        if let Err(e) = self.inner.try_push(r) {
+            log::warn!("request {id} dropped: {e}");
+        }
+    }
+
+    /// Admission-controlled push.
+    pub fn try_push(&self, r: Request) -> Result<(), PushError> {
+        self.inner.try_push(r)
     }
 
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
-        self.cv.notify_all();
+        self.inner.close();
     }
 
     /// Pop up to `max_batch` requests; blocks until at least one is
     /// available or the queue is closed (then returns None when empty).
     pub fn pop_batch(&self, max_batch: usize) -> Option<Vec<Request>> {
-        let mut q = self.inner.lock().unwrap();
-        loop {
-            if !q.is_empty() {
-                let take = q.len().min(max_batch.max(1));
-                return Some(q.drain(..take).collect());
-            }
-            if *self.closed.lock().unwrap() {
-                return None;
-            }
-            q = self.cv.wait(q).unwrap();
-        }
+        self.inner.pop_batch(max_batch)
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.is_empty()
     }
 }
 
@@ -295,6 +300,20 @@ mod tests {
         assert_eq!(b.len(), 2);
         q.close();
         assert!(q.pop_batch(3).is_none());
+    }
+
+    #[test]
+    fn bounded_queue_admission_control() {
+        let q = RequestQueue::bounded(2);
+        let req = |i| Request { id: i, input: HostTensor::zeros(&[1]), enqueued: Instant::now() };
+        q.try_push(req(0)).unwrap();
+        q.try_push(req(1)).unwrap();
+        assert_eq!(q.try_push(req(2)).unwrap_err(), PushError::Full);
+        q.close();
+        assert_eq!(q.try_push(req(3)).unwrap_err(), PushError::Closed);
+        // Infallible push drops (with a warning) instead of panicking.
+        q.push(req(4));
+        assert_eq!(q.pop_batch(8).unwrap().len(), 2);
     }
 
     #[test]

@@ -10,8 +10,12 @@
 //!   ([`baseline`]), the two-stage DSE with an in-house MILP
 //!   branch-and-bound and a genetic algorithm ([`dse`]), the DNN workload
 //!   zoo ([`workload`]), instruction generation + serving
-//!   ([`coordinator`], [`codegen`]) and the PJRT runtime that executes
-//!   AOT-compiled JAX/Pallas artifacts ([`runtime`]).
+//!   ([`coordinator`], [`codegen`]), the multi-tenant live-serving
+//!   subsystem ([`serve`]: bounded tenant queues with admission
+//!   control, a worker per fabric partition, a backlog-driven
+//!   re-composition policy and a DSE schedule cache) and the PJRT
+//!   runtime that executes AOT-compiled JAX/Pallas artifacts
+//!   ([`runtime`]; native fallback without the `pjrt` feature).
 //! * **L2 (python/compile/model.py)** — JAX compute graphs (BERT, MLP,
 //!   bucketed MM) that call the L1 kernel; lowered once to HLO text.
 //! * **L1 (python/compile/kernels/flexmm.py)** — the Pallas
@@ -30,6 +34,7 @@ pub mod isa;
 pub mod platform;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 pub mod workload;

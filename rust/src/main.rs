@@ -6,7 +6,12 @@
 //!   sim     --model M [..]    DSE -> instrgen -> fabric simulation
 //!   disasm  --model M [..]    print the generated instruction streams
 //!   codegen --model M --out D write binaries/schedule.json/dataflow.h
-//!   serve   --requests N      serve MM inferences through PJRT
+//!   serve   [--requests N] [--mode live|sim] [--epoch-ms E] [--timescale S]
+//!           multi-tenant serving on the live re-composable fabric:
+//!           worker per partition, backlog policy re-splits via the
+//!           Reconfigurator, schedules memoized in the ScheduleCache.
+//!           `--mode sim` runs the deterministic unified/static/dynamic
+//!           comparison instead.
 //!   gantt   --model M [..]    ASCII utilization timeline from the sim
 //!
 //! Models: bert-32|64|128|256|512, mlp-l, mlp-s, deit-l, deit-s,
@@ -14,13 +19,18 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Duration;
 
 use filco::arch::FilcoConfig;
-use filco::coordinator::{instrgen, serving};
+use filco::coordinator::instrgen;
 use filco::dse::{self, Solver};
 use filco::isa::disasm;
 use filco::platform::Platform;
-use filco::runtime::{Engine, HostTensor};
+use filco::runtime::Engine;
+use filco::serve::{
+    equal_split_per_request, poisson_trace, simulate, FabricScheduler, LiveConfig, LiveRequest,
+    PolicyConfig, Scenario, ScheduleCache, Strategy, TenantSpec,
+};
 use filco::sim::{self, Fabric};
 use filco::workload::{zoo, Dag};
 
@@ -154,21 +164,100 @@ fn cmd_gantt(flags: &HashMap<String, String>) {
     }
 }
 
+/// Multi-tenant serving demo: MLP-L flooded, MLP-S and PointNet light.
+/// Fabric time is modelled (no artifacts needed); the live mode paces
+/// workers with a wall-clock timescale so the policy thread sees real
+/// queue depths and re-composes the fabric mid-run.
 fn cmd_serve(flags: &HashMap<String, String>) {
-    let n: u64 = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(32);
-    let engine = Arc::new(Engine::open_default().expect("artifacts missing — run `make artifacts`"));
-    let model = Arc::new(serving::MmModel::new(64, 64, 64, 1));
-    let server = serving::Server::new(engine, model, 8);
-    for i in 0..n {
-        server.queue.push(serving::Request {
-            id: i,
-            input: HostTensor::randn(&[64, 64], i),
-            enqueued: std::time::Instant::now(),
-        });
+    // Floor of 1: `--requests 0` would otherwise divide by zero in the
+    // pacing/timescale math below.
+    let n: u64 = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(480).max(1);
+    let epoch_ms: f64 = flags.get("epoch-ms").and_then(|s| s.parse().ok()).unwrap_or(200.0);
+    let mode = flags.get("mode").map(String::as_str).unwrap_or("live");
+    if mode != "live" && mode != "sim" {
+        eprintln!("unknown --mode {mode:?}; expected \"live\" or \"sim\"");
+        std::process::exit(2);
     }
-    server.queue.close();
-    let (responses, metrics) = server.run_to_completion();
-    println!("served {} responses: {}", responses.len(), metrics.summary());
+
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let cache = Arc::new(ScheduleCache::new(ScheduleCache::serving_solver()));
+    let specs = || {
+        vec![
+            TenantSpec::new("mlp-l", zoo::mlp_l()).with_queue_capacity(1 << 14),
+            TenantSpec::new("mlp-s", zoo::mlp_s()).with_queue_capacity(1 << 14),
+            TenantSpec::new("pointnet", zoo::pointnet()).with_queue_capacity(1 << 14),
+        ]
+    };
+    let tenants = specs();
+
+    // Calibrate against the measured equal-split service times.
+    let per = equal_split_per_request(&platform, &base, &tenants, &cache);
+    for (t, p) in tenants.iter().zip(&per) {
+        println!("{:<9} equal-split per-request fabric time {:.4e} s", t.name, p);
+    }
+
+    if mode == "sim" {
+        let rates = [2.5 / per[0], 0.1 / per[1], 0.1 / per[2]];
+        let arrivals = poisson_trace(&rates, (n as f64 / 2.5) * per[0], 0xF11C0);
+        println!("trace: {} arrivals (heavy mlp-l at 2.5x slice capacity)\n", arrivals.len());
+        let sc = Scenario { platform, base, tenants, arrivals };
+        let policy = PolicyConfig::calibrated(per[0]);
+        for strat in
+            [Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)]
+        {
+            println!("{}", simulate(&sc, &strat, &cache).summary());
+        }
+        println!("schedule cache: {}", cache.stats());
+        return;
+    }
+
+    // Live mode: 80% of requests hit mlp-l; a timescale that maps the
+    // heavy tenant's total fabric time to ~2 s wall keeps the demo
+    // short while leaving the policy thread epochs to react in.
+    let n_heavy = n * 8 / 10;
+    let timescale: f64 = flags
+        .get("timescale")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2.0 / (n_heavy as f64 * per[0] * 0.9).max(1e-9));
+    let cfg = LiveConfig {
+        policy: PolicyConfig {
+            epoch_s: epoch_ms / 1e3,
+            max_weight: 8,
+            min_backlog_factor: 5.0,
+        },
+        timescale,
+        max_sleep: Duration::from_millis(100),
+    };
+    let sched = FabricScheduler::new(platform, base, specs(), cache.clone(), cfg)
+        .expect("build scheduler");
+    println!("composition at start: {:?}", sched.composition());
+    std::thread::scope(|s| {
+        let producer = s.spawn(|| {
+            let gap = Duration::from_secs_f64(1.5 / n as f64);
+            let mut rejected = 0u64;
+            for i in 0..n {
+                let t = match i % 10 {
+                    0..=7 => 0,
+                    8 => 1,
+                    _ => 2,
+                };
+                if sched.push(t, LiveRequest::new(i)).is_err() {
+                    rejected += 1;
+                }
+                std::thread::sleep(gap);
+            }
+            sched.close();
+            rejected
+        });
+        let report = sched.run();
+        let rejected = producer.join().expect("producer panicked");
+        println!("composition at end:   {:?}", sched.composition());
+        println!("{}", report.summary());
+        if rejected > 0 {
+            println!("admission control rejected {rejected} requests");
+        }
+    });
 }
 
 fn main() {

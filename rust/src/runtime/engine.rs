@@ -1,31 +1,92 @@
-//! PJRT execution engine: HLO-text artifacts -> compiled executables ->
-//! typed execute calls, with a per-artifact executable cache.
+//! Execution engine behind the serving path.
 //!
-//! Interchange is HLO *text* (never serialized HloModuleProto): jax
-//! >= 0.5 emits protos with 64-bit instruction ids that xla_extension
-//! 0.5.1 rejects; `HloModuleProto::from_text_file` reassigns ids. The
-//! AOT side lowers with `return_tuple=True`, so outputs are unwrapped
-//! with `to_tuple()` here.
+//! Two backends, selected at compile time:
+//!
+//! * **`pjrt` feature** — the real thing: HLO-text artifacts compiled
+//!   by the PJRT CPU client (xla-rs bindings), with a per-artifact
+//!   executable cache. Interchange is HLO *text* (never serialized
+//!   HloModuleProto): jax >= 0.5 emits protos with 64-bit instruction
+//!   ids that xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file`
+//!   reassigns ids. The AOT side lowers with `return_tuple=True`, so
+//!   outputs are unwrapped with `to_tuple()`.
+//! * **default (native fallback)** — no external toolchain: `mm_*`
+//!   bucket artifacts execute through the host reference matmul, other
+//!   artifacts report that the `pjrt` feature is required. This keeps
+//!   the whole serving stack buildable and runnable offline.
+//!
+//! Both backends expose the same API: `open`/`open_default`,
+//! `platform_name`, `compiled_count`, `execute`, `mm`.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::manifest::Manifest;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+
+use super::manifest::{ArtifactEntry, Manifest};
 use super::tensor::HostTensor;
 
-/// Loads artifacts lazily, compiles once, executes many times.
-/// Thread-safe: the cache is mutex-guarded; PJRT execution itself is
-/// serialised per call (the CPU client is internally threaded).
+/// Loads artifacts lazily, compiles (or interprets) once, executes many
+/// times. Thread-safe: caches are mutex-guarded.
 pub struct Engine {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     dir: PathBuf,
-    pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Native backend: names executed at least once (mirrors the
+    /// executable cache for `compiled_count`).
+    #[cfg(not(feature = "pjrt"))]
+    cache: Mutex<HashMap<String, u64>>,
+    pub manifest: Manifest,
 }
 
+/// Shape/arity validation shared by both backends.
+fn validate_inputs(entry: &ArtifactEntry, name: &str, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        bail!("{name}: {} inputs given, {} expected", inputs.len(), entry.inputs.len());
+    }
+    for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        if t.shape != spec.shape {
+            bail!("{name}: input {i} shape {:?} != expected {:?}", t.shape, spec.shape);
+        }
+    }
+    Ok(())
+}
+
+impl Engine {
+    /// Open the default artifact dir (env `FILCO_ARTIFACTS` or
+    /// `artifacts/`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(super::default_artifact_dir())
+    }
+
+    /// Run an `(m, k, n)` MM through the smallest covering bucket
+    /// artifact: pad inputs to the bucket, execute, slice the result —
+    /// the runtime mirror of FILCO's atomic-granularity padding.
+    pub fn mm(&self, a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let (k2, n) = (b.shape[0], b.shape[1]);
+        if k != k2 {
+            bail!("mm: contraction mismatch {k} vs {k2}");
+        }
+        let (bm, bk, bn) = self
+            .manifest
+            .best_mm_bucket(m, k, n)
+            .ok_or_else(|| anyhow!("no MM bucket covers {m}x{k}x{n}"))?;
+        let name = format!("mm_{bm}x{bk}x{bn}");
+        let ap = if (m, k) == (bm, bk) { a.clone() } else { a.pad2(bm, bk) };
+        let bp = if (k, n) == (bk, bn) { b.clone() } else { b.pad2(bk, bn) };
+        let out = self.execute(&name, &[ap, bp])?;
+        Ok(out.into_iter().next().unwrap().slice2(m, n))
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Open the artifact directory (expects `manifest.json`).
     pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
@@ -33,12 +94,6 @@ impl Engine {
         let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
-    }
-
-    /// Open the default artifact dir (env `FILCO_ARTIFACTS` or
-    /// `artifacts/`).
-    pub fn open_default() -> Result<Self> {
-        Self::open(super::default_artifact_dir())
     }
 
     pub fn platform_name(&self) -> String {
@@ -76,14 +131,7 @@ impl Engine {
             .find(name)
             .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
             .clone();
-        if inputs.len() != entry.inputs.len() {
-            bail!("{name}: {} inputs given, {} expected", inputs.len(), entry.inputs.len());
-        }
-        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
-            if t.shape != spec.shape {
-                bail!("{name}: input {i} shape {:?} != expected {:?}", t.shape, spec.shape);
-            }
-        }
+        validate_inputs(&entry, name, inputs)?;
         self.compile(name)?;
 
         let literals: Vec<xla::Literal> = inputs
@@ -116,25 +164,50 @@ impl Engine {
             })
             .collect()
     }
+}
 
-    /// Run an `(m, k, n)` MM through the smallest covering bucket
-    /// artifact: pad inputs to the bucket, execute, slice the result —
-    /// the runtime mirror of FILCO's atomic-granularity padding.
-    pub fn mm(&self, a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
-        let (m, k) = (a.shape[0], a.shape[1]);
-        let (k2, n) = (b.shape[0], b.shape[1]);
-        if k != k2 {
-            bail!("mm: contraction mismatch {k} vs {k2}");
-        }
-        let (bm, bk, bn) = self
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Open the artifact directory (expects `manifest.json`).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir: PathBuf = dir.into();
+        let manifest = Manifest::load(&dir).map_err(|e| anyhow!(e))?;
+        Ok(Self { manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "native-fallback".to_string()
+    }
+
+    /// Number of distinct artifacts executed so far.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Execute artifact `name` with host inputs; returns host outputs.
+    /// The native backend interprets `mm_{M}x{K}x{N}` buckets with the
+    /// reference matmul; anything else needs the `pjrt` feature.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let entry = self
             .manifest
-            .best_mm_bucket(m, k, n)
-            .ok_or_else(|| anyhow!("no MM bucket covers {m}x{k}x{n}"))?;
-        let name = format!("mm_{bm}x{bk}x{bn}");
-        let ap = if (m, k) == (bm, bk) { a.clone() } else { a.pad2(bm, bk) };
-        let bp = if (k, n) == (bk, bn) { b.clone() } else { b.pad2(bk, bn) };
-        let out = self.execute(&name, &[ap, bp])?;
-        Ok(out.into_iter().next().unwrap().slice2(m, n))
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?
+            .clone();
+        validate_inputs(&entry, name, inputs)?;
+        let dims: Option<Vec<usize>> = name
+            .strip_prefix("mm_")
+            .and_then(|rest| rest.split('x').map(|d| d.parse().ok()).collect());
+        let out = match dims.as_deref() {
+            Some([_m, _k, _n]) if inputs.len() == 2 => {
+                super::tensor::matmul_ref(&inputs[0], &inputs[1])
+            }
+            _ => bail!(
+                "artifact {name:?} needs the `pjrt` feature (native fallback only \
+                 executes mm_* buckets)"
+            ),
+        };
+        *self.cache.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        Ok(vec![out])
     }
 }
 

@@ -1,0 +1,212 @@
+//! Schedule cache: memoized two-stage DSE results keyed on
+//! `(FilcoConfig, Dag)`.
+//!
+//! Live re-composition changes each tenant's fabric slice every policy
+//! epoch, but the set of distinct `(slice config, tenant DAG)` pairs a
+//! serving process ever sees is tiny — weights oscillate between a few
+//! load regimes. Caching the Stage-1 + Stage-2 result means the GA/MILP
+//! never runs on the re-partition hot path after the first time a
+//! composition is seen: a repartition into a previously-seen shape is a
+//! hash lookup (~ns) instead of a DSE run (~ms–s).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::arch::FilcoConfig;
+use crate::dse::{self, Schedule, Solver};
+use crate::platform::Platform;
+use crate::workload::Dag;
+
+/// Structural fingerprint of a DAG: name, layer names/shapes and edges.
+/// Two DAGs with the same fingerprint get the same schedule.
+pub fn dag_fingerprint(dag: &Dag) -> u64 {
+    let mut h = DefaultHasher::new();
+    dag.name.hash(&mut h);
+    dag.layers.len().hash(&mut h);
+    for l in &dag.layers {
+        l.name.hash(&mut h);
+        l.shape.hash(&mut h);
+    }
+    dag.edges.hash(&mut h);
+    h.finish()
+}
+
+/// Fingerprint of the platform model a schedule was computed against.
+/// `Platform`'s fields are public and tunable (DDR-bandwidth what-ifs
+/// etc.), so the key must not assume one cache == one platform. Fields
+/// are hashed directly — no allocation on the lookup hot path.
+fn platform_fingerprint(p: &Platform) -> u64 {
+    let mut h = DefaultHasher::new();
+    p.name.hash(&mut h);
+    p.aie_tiles.hash(&mut h);
+    p.aie_ghz.to_bits().hash(&mut h);
+    p.aie_macs_per_cycle.hash(&mut h);
+    p.aie_local_bytes.hash(&mut h);
+    p.aie_pm_bytes.hash(&mut h);
+    p.pl_mhz.to_bits().hash(&mut h);
+    p.pl_sram_bytes.hash(&mut h);
+    p.plio_bits.hash(&mut h);
+    p.plio_ports.hash(&mut h);
+    p.ddr.peak_bytes_per_sec.to_bits().hash(&mut h);
+    p.ddr.txn_latency_s.to_bits().hash(&mut h);
+    for &(burst, frac) in &p.ddr.efficiency_points {
+        burst.hash(&mut h);
+        frac.to_bits().hash(&mut h);
+    }
+    h.finish()
+}
+
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct Key {
+    cfg: FilcoConfig,
+    platform: u64,
+    dag: u64,
+}
+
+/// One memoized DSE result.
+#[derive(Debug, Clone)]
+pub struct CachedSchedule {
+    pub schedule: Schedule,
+    /// Fabric seconds one request (one DAG traversal) takes on this
+    /// slice — the schedule makespan.
+    pub per_request_s: f64,
+}
+
+/// Thread-safe memo table for two-stage DSE results.
+pub struct ScheduleCache {
+    solver: Solver,
+    inner: Mutex<HashMap<Key, Arc<CachedSchedule>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScheduleCache {
+    pub fn new(solver: Solver) -> Self {
+        Self {
+            solver,
+            inner: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// A solver sized for serving-time re-scheduling: small GA, fixed
+    /// seed (deterministic across runs).
+    pub fn serving_solver() -> Solver {
+        Solver::Ga { population: 24, generations: 40, seed: 0xF11C0 }
+    }
+
+    /// Look up the schedule for `dag` on fabric slice `cfg`, running the
+    /// two-stage DSE on a miss. Misses compute outside the map lock so
+    /// concurrent lookups of *different* keys don't serialize.
+    pub fn get_or_compute(
+        &self,
+        platform: &Platform,
+        cfg: &FilcoConfig,
+        dag: &Dag,
+    ) -> Arc<CachedSchedule> {
+        let key = Key {
+            cfg: cfg.clone(),
+            platform: platform_fingerprint(platform),
+            dag: dag_fingerprint(dag),
+        };
+        if let Some(hit) = self.inner.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit.clone();
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Known trade-off: two threads missing on the same key both run
+        // the DSE and one result is discarded. In practice one policy
+        // thread is the only writer; if that changes, add an in-flight
+        // marker so the second caller waits instead of recomputing.
+        let schedule = dse::two_stage(platform, cfg, dag, self.solver);
+        let cached = Arc::new(CachedSchedule { per_request_s: schedule.makespan, schedule });
+        let mut map = self.inner.lock().unwrap();
+        // A racing thread may have inserted meanwhile; keep one copy.
+        map.entry(key).or_insert_with(|| cached.clone()).clone()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct `(config, dag)` schedules held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> String {
+        format!("{} entries, {} hits, {} misses", self.len(), self.hits(), self.misses())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn hit_on_second_lookup() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        let a = cache.get_or_compute(&p, &cfg, &dag);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.get_or_compute(&p, &cfg, &dag);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the memoized Arc");
+        assert!(a.per_request_s > 0.0);
+    }
+
+    #[test]
+    fn distinct_configs_distinct_entries() {
+        let p = Platform::vck190();
+        let base = FilcoConfig::default_for(&p);
+        let mut half = base.clone();
+        half.m_cus = base.m_cus / 2;
+        half.n_fmus = base.n_fmus / 2;
+        let dag = zoo::mlp_s();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        let full = cache.get_or_compute(&p, &base, &dag);
+        let small = cache.get_or_compute(&p, &half, &dag);
+        assert_eq!(cache.len(), 2);
+        // Fewer CUs can never make the schedule faster.
+        assert!(small.per_request_s >= full.per_request_s * 0.999);
+    }
+
+    #[test]
+    fn platform_changes_miss_the_cache() {
+        let p = Platform::vck190();
+        let mut slower = Platform::vck190();
+        slower.ddr.peak_bytes_per_sec /= 2.0;
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        let a = cache.get_or_compute(&p, &cfg, &dag);
+        let b = cache.get_or_compute(&slower, &cfg, &dag);
+        assert_eq!(cache.len(), 2, "a different platform model must be a distinct entry");
+        // Half the DDR bandwidth can never speed a schedule up.
+        assert!(b.per_request_s >= a.per_request_s * 0.999);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_structure() {
+        let a = zoo::mlp_s();
+        let mut b = zoo::mlp_s();
+        b.edges.pop();
+        assert_ne!(dag_fingerprint(&a), dag_fingerprint(&b));
+        assert_eq!(dag_fingerprint(&a), dag_fingerprint(&zoo::mlp_s()));
+    }
+}

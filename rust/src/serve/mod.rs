@@ -1,0 +1,47 @@
+//! Multi-tenant serving on a live re-composable fabric — the paper's
+//! "reconfigured in real-time and flexibly composed into a unified or
+//! multiple independent accelerators" exercised *online*, not as an
+//! offline what-if.
+//!
+//! Layering:
+//!
+//! * [`queue`] — bounded MPMC request queues with admission control
+//!   (single lock for items + closed flag).
+//! * [`tenant`] — tenant specs, the batch fabric-time model, and
+//!   deterministic Poisson / phased traffic generators.
+//! * [`cache`] — the schedule cache: two-stage DSE results memoized on
+//!   `(FilcoConfig, Dag)`, so re-partitioning never re-runs the GA/MILP
+//!   on the hot path once a composition has been seen.
+//! * [`policy`] — backlog-time → partition-weight mapping with
+//!   hysteresis; decides when a re-split pays for its switch cost.
+//! * [`sim`] — deterministic virtual-time serving simulator comparing
+//!   unified time-sharing vs. a static equal split vs. dynamic
+//!   re-composition on the same trace.
+//! * [`scheduler`] — the live threaded scheduler: one worker per
+//!   tenant owning its current [`Partition`], a policy thread driving
+//!   [`Reconfigurator::split`] from observed queue depths, switch
+//!   costs charged into the per-tenant fabric-time accounting.
+//!
+//! The single-model serving leader ([`Server`]) and its building blocks
+//! ([`Servable`], [`Request`], [`RequestQueue`], [`Metrics`]) are
+//! re-exported here: the serve layer generalizes them to N tenants.
+//!
+//! [`Partition`]: crate::coordinator::reconfig::Partition
+//! [`Reconfigurator::split`]: crate::coordinator::reconfig::Reconfigurator::split
+
+pub mod cache;
+pub mod policy;
+pub mod queue;
+pub mod scheduler;
+pub mod sim;
+pub mod tenant;
+
+pub use crate::coordinator::metrics::{LatencyHistogram, Metrics};
+pub use crate::coordinator::serving::{Request, RequestQueue, Response, Servable, Server};
+
+pub use cache::{dag_fingerprint, CachedSchedule, ScheduleCache};
+pub use policy::{backlog_weights, reduce_weights, should_resplit, PolicyConfig};
+pub use queue::{BoundedQueue, PushError};
+pub use scheduler::{FabricScheduler, LiveConfig, LiveReport, LiveRequest, TenantReport};
+pub use sim::{equal_split_per_request, simulate, Scenario, ServeReport, Strategy};
+pub use tenant::{batch_fabric_s, phased_trace, poisson_trace, Arrival, TenantSpec};

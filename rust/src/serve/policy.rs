@@ -1,0 +1,140 @@
+//! Re-composition policy: when and how to re-split the fabric.
+//!
+//! The signal is per-tenant *backlog time* — queue depth × the fabric
+//! seconds one request costs on the tenant's current slice. Weights
+//! proportional to backlog time hand FMUs/CUs to the tenants that are
+//! actually falling behind (queue depth alone would over-reward cheap
+//! requests). Hysteresis keeps the fabric still when the backlog is too
+//! small to be worth a switch, and proportional weight reduction keeps
+//! `[2,2,2]` from being treated as different from `[1,1,1]`.
+
+fn gcd(a: u32, b: u32) -> u32 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Reduce weights by their GCD so proportionally-equal vectors compare
+/// equal (`[4, 2, 2]` → `[2, 1, 1]`).
+pub fn reduce_weights(w: &[u32]) -> Vec<u32> {
+    let g = w.iter().fold(0u32, |acc, &x| gcd(acc, x)).max(1);
+    w.iter().map(|&x| x / g).collect()
+}
+
+/// Map per-tenant backlog times to partition weights in `1..=max_weight`
+/// (every tenant keeps at least one unit — starvation-free), reduced to
+/// lowest terms. All-idle backlogs yield an equal split.
+pub fn backlog_weights(backlog_s: &[f64], max_weight: u32) -> Vec<u32> {
+    let max_weight = max_weight.max(1);
+    let mx = backlog_s.iter().cloned().fold(0.0f64, f64::max);
+    if mx <= 0.0 {
+        return vec![1; backlog_s.len()];
+    }
+    let w: Vec<u32> = backlog_s
+        .iter()
+        .map(|&b| ((b / mx * max_weight as f64).ceil() as u32).clamp(1, max_weight))
+        .collect();
+    reduce_weights(&w)
+}
+
+/// Policy knobs for the dynamic re-composer.
+#[derive(Debug, Clone)]
+pub struct PolicyConfig {
+    /// Seconds between policy evaluations (virtual fabric time in the
+    /// simulator, wall-clock in the live scheduler).
+    pub epoch_s: f64,
+    /// Largest weight a single tenant can take.
+    pub max_weight: u32,
+    /// Re-split only when total backlog time exceeds this multiple of
+    /// the switch cost (hysteresis against churn at idle).
+    pub min_backlog_factor: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        Self { epoch_s: 0.05, max_weight: 8, min_backlog_factor: 50.0 }
+    }
+}
+
+impl PolicyConfig {
+    /// Policy tuned to a measured per-request service time: evaluate
+    /// every ~10 requests' worth of fabric time, with low hysteresis.
+    /// The single source of the constants behind every calibrated
+    /// scenario (example, bench, CLI `--mode sim`, acceptance test).
+    pub fn calibrated(per_request_s: f64) -> Self {
+        Self { epoch_s: 10.0 * per_request_s, max_weight: 8, min_backlog_factor: 5.0 }
+    }
+}
+
+/// Should the fabric be re-split from `current` to `proposed` weights?
+///
+/// A proposal that merely *restores the equal split* (all weights equal)
+/// is exempt from the backlog hysteresis: relaxing a skewed composition
+/// once load subsides costs one switch on an idle fabric and leaves it
+/// in the neutral shape — which the schedule cache has always seen.
+pub fn should_resplit(
+    current: &[u32],
+    proposed: &[u32],
+    total_backlog_s: f64,
+    switch_cost_s: f64,
+    cfg: &PolicyConfig,
+) -> bool {
+    if reduce_weights(current) == reduce_weights(proposed) {
+        return false;
+    }
+    let equalizes = proposed.windows(2).all(|w| w[0] == w[1]);
+    equalizes || total_backlog_s > cfg.min_backlog_factor * switch_cost_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_backlog_equal_weights() {
+        assert_eq!(backlog_weights(&[0.5, 0.5, 0.5], 8), vec![1, 1, 1]);
+        assert_eq!(backlog_weights(&[0.0, 0.0], 8), vec![1, 1]);
+    }
+
+    #[test]
+    fn skewed_backlog_skews_weights() {
+        let w = backlog_weights(&[0.8, 0.1, 0.1], 8);
+        assert_eq!(w[0], 8);
+        assert_eq!(&w[1..], &[1, 1]);
+        // Idle tenants still get a floor of one.
+        let w = backlog_weights(&[1.0, 0.0, 0.0], 8);
+        assert_eq!(w, vec![8, 1, 1]);
+    }
+
+    #[test]
+    fn weights_reduced_to_lowest_terms() {
+        assert_eq!(reduce_weights(&[4, 2, 2]), vec![2, 1, 1]);
+        assert_eq!(reduce_weights(&[8, 8, 8]), vec![1, 1, 1]);
+        assert_eq!(reduce_weights(&[0, 0]), vec![0, 0]);
+    }
+
+    #[test]
+    fn hysteresis_blocks_idle_resplit() {
+        let cfg = PolicyConfig::default();
+        let cur = [1, 1, 1];
+        let new = [8, 1, 1];
+        // Large backlog: switch.
+        assert!(should_resplit(&cur, &new, 1.0, 1e-6, &cfg));
+        // Tiny backlog vs switch cost: hold.
+        assert!(!should_resplit(&cur, &new, 1e-6, 1e-6, &cfg));
+        // Proportionally identical: hold regardless.
+        assert!(!should_resplit(&[2, 2, 2], &[1, 1, 1], 1.0, 1e-6, &cfg));
+    }
+
+    #[test]
+    fn equal_split_restored_at_idle() {
+        let cfg = PolicyConfig::default();
+        // Skewed fabric, backlog gone: relax back to equal despite the
+        // hysteresis…
+        assert!(should_resplit(&[8, 1, 1], &[1, 1, 1], 0.0, 1e-6, &cfg));
+        // …but never churn between two skewed shapes at idle.
+        assert!(!should_resplit(&[8, 1, 1], &[1, 4, 1], 0.0, 1e-6, &cfg));
+    }
+}

@@ -1,0 +1,219 @@
+//! Bounded MPMC request queue with admission control.
+//!
+//! Generalizes the serving leader's FIFO
+//! ([`crate::coordinator::serving::RequestQueue`], now a thin wrapper
+//! over this type): one mutex guards *both* the deque and the closed
+//! flag — the state transition "closed while waiters sleep" is visible
+//! atomically with the emptiness check, so there is no two-lock dance
+//! and no missed-wakeup window.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue is at capacity — admission control rejected the request.
+    Full,
+    /// Queue was closed; no new work is accepted.
+    Closed,
+}
+
+impl std::fmt::Display for PushError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PushError::Full => write!(f, "queue full"),
+            PushError::Closed => write!(f, "queue closed"),
+        }
+    }
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded blocking FIFO. `capacity == usize::MAX` means unbounded.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> Default for BoundedQueue<T> {
+    fn default() -> Self {
+        Self::unbounded()
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn unbounded() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admission-controlled push: rejects instead of blocking when the
+    /// queue is full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), PushError> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(PushError::Closed);
+        }
+        if s.items.len() >= self.capacity {
+            return Err(PushError::Full);
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue: pending items stay poppable, new pushes fail,
+    /// blocked consumers wake up.
+    pub fn close(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.closed = true;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Pop up to `max_batch` items; blocks until at least one is
+    /// available, or returns `None` once the queue is closed and empty.
+    pub fn pop_batch(&self, max_batch: usize) -> Option<Vec<T>> {
+        self.pop_batch_deadline(max_batch, None)
+    }
+
+    /// Like [`Self::pop_batch`] but gives up at a deadline, returning
+    /// `Some(vec![])` — lets worker loops periodically re-read their
+    /// partition plan while idle. `None` still means closed and drained.
+    pub fn pop_batch_timeout(&self, max_batch: usize, timeout: Duration) -> Option<Vec<T>> {
+        self.pop_batch_deadline(max_batch, Some(Instant::now() + timeout))
+    }
+
+    fn pop_batch_deadline(&self, max_batch: usize, deadline: Option<Instant>) -> Option<Vec<T>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.items.is_empty() {
+                let take = s.items.len().min(max_batch.max(1));
+                return Some(s.items.drain(..take).collect());
+            }
+            if s.closed {
+                return None;
+            }
+            match deadline {
+                None => s = self.cv.wait(s).unwrap(),
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Some(Vec::new());
+                    }
+                    s = self.cv.wait_timeout(s, d - now).unwrap().0;
+                }
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_batching() {
+        let q = BoundedQueue::unbounded();
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.pop_batch(3).unwrap(), vec![0, 1, 2]);
+        assert_eq!(q.pop_batch(3).unwrap(), vec![3, 4]);
+    }
+
+    #[test]
+    fn admission_control_rejects_when_full() {
+        let q = BoundedQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full));
+        // Draining reopens admission.
+        assert_eq!(q.pop_batch(1).unwrap(), vec![1]);
+        q.try_push(3).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_rejects_push_but_drains() {
+        let q = BoundedQueue::unbounded();
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(PushError::Closed));
+        assert_eq!(q.pop_batch(4).unwrap(), vec![7]);
+        assert!(q.pop_batch(4).is_none());
+    }
+
+    #[test]
+    fn close_unblocks_waiter() {
+        let q = Arc::new(BoundedQueue::<u32>::unbounded());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch(4));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn timeout_returns_empty_batch() {
+        let q = BoundedQueue::<u32>::unbounded();
+        let got = q.pop_batch_timeout(4, Duration::from_millis(10));
+        assert_eq!(got, Some(Vec::new()));
+        q.try_push(1).unwrap();
+        assert_eq!(q.pop_batch_timeout(4, Duration::from_millis(10)), Some(vec![1]));
+    }
+
+    #[test]
+    fn cross_thread_producers() {
+        let q = Arc::new(BoundedQueue::unbounded());
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25 {
+                    q.try_push(t * 100 + i).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut n = 0;
+        while let Some(b) = q.pop_batch(8) {
+            n += b.len();
+        }
+        assert_eq!(n, 100);
+    }
+}

@@ -1,0 +1,451 @@
+//! Live multi-tenant fabric scheduler: real threads, real queues.
+//!
+//! One worker thread per tenant, each owning that tenant's current
+//! fabric [`Partition`](crate::coordinator::reconfig::Partition) and
+//! draining its bounded queue in batches; a policy thread that
+//! periodically observes queue depths and re-splits the fabric through
+//! the [`Reconfigurator`], resolving the new slices' schedules through
+//! the [`ScheduleCache`] so the DSE never runs on the hot path after a
+//! composition has been seen once.
+//!
+//! Fabric time is *accounted* (the modelled VCK190 is not attached);
+//! `timescale` optionally paces workers by sleeping a scaled-down
+//! multiple of the fabric time so queue depths — and therefore the
+//! policy — behave like they would on hardware.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::arch::FilcoConfig;
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::coordinator::reconfig::Reconfigurator;
+use crate::platform::Platform;
+
+use super::cache::ScheduleCache;
+use super::policy::{backlog_weights, should_resplit, PolicyConfig};
+use super::queue::{BoundedQueue, PushError};
+use super::tenant::{batch_fabric_s, TenantSpec};
+
+/// Live-mode knobs.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    pub policy: PolicyConfig,
+    /// Wall seconds slept per fabric second to emulate device pacing;
+    /// 0.0 drains at host speed (tests).
+    pub timescale: f64,
+    /// Cap on any single pacing sleep, so demos stay responsive.
+    pub max_sleep: Duration,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        Self {
+            policy: PolicyConfig::default(),
+            timescale: 0.0,
+            max_sleep: Duration::from_millis(100),
+        }
+    }
+}
+
+/// One request in the live path.
+#[derive(Debug)]
+pub struct LiveRequest {
+    pub id: u64,
+    pub enqueued: Instant,
+}
+
+impl LiveRequest {
+    pub fn new(id: u64) -> Self {
+        Self { id, enqueued: Instant::now() }
+    }
+}
+
+/// The slice a tenant's worker currently runs on.
+#[derive(Debug, Clone)]
+struct Plan {
+    fmus: u32,
+    cus: u32,
+    per_request_s: f64,
+}
+
+struct TenantRuntime {
+    spec: TenantSpec,
+    queue: BoundedQueue<LiveRequest>,
+    plan: Mutex<Plan>,
+    hist: Mutex<LatencyHistogram>,
+    /// Fabric seconds this tenant's slice has consumed (batches +
+    /// switch charges).
+    fabric_s: Mutex<f64>,
+    served: AtomicU64,
+}
+
+/// Per-tenant outcome of a live run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    pub name: String,
+    pub served: u64,
+    pub fabric_s: f64,
+    pub wall_latency: LatencyHistogram,
+}
+
+/// Outcome of a live run.
+#[derive(Debug, Clone)]
+pub struct LiveReport {
+    pub tenants: Vec<TenantReport>,
+    /// Re-compositions performed (setup split excluded).
+    pub switches: u64,
+    /// Schedule-cache activity during this run only (the cache may be
+    /// shared with calibration or simulation phases).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub wall_s: f64,
+}
+
+impl LiveReport {
+    pub fn total_served(&self) -> u64 {
+        self.tenants.iter().map(|t| t.served).sum()
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for t in &self.tenants {
+            s.push_str(&format!(
+                "  {:<10} served {:>6}  fabric {:.4e} s  wall {}\n",
+                t.name,
+                t.served,
+                t.fabric_s,
+                t.wall_latency.summary()
+            ));
+        }
+        s.push_str(&format!(
+            "  {} re-compositions | schedule cache: {} hits, {} misses | {:.2} s wall",
+            self.switches, self.cache_hits, self.cache_misses, self.wall_s
+        ));
+        s
+    }
+}
+
+/// Live multi-tenant scheduler over a dynamically re-partitioned fabric.
+pub struct FabricScheduler {
+    platform: Platform,
+    base: FilcoConfig,
+    cfg: LiveConfig,
+    cache: Arc<ScheduleCache>,
+    recon: Mutex<Reconfigurator>,
+    weights: Mutex<Vec<u32>>,
+    tenants: Vec<TenantRuntime>,
+    /// Re-compositions after setup.
+    switches: AtomicU64,
+    stop_policy: AtomicBool,
+}
+
+impl FabricScheduler {
+    /// Build the scheduler: equal initial split, schedules resolved
+    /// through `cache` (pre-warming it counts as misses here, hits on
+    /// every later re-composition into a seen shape).
+    pub fn new(
+        platform: Platform,
+        base: FilcoConfig,
+        specs: Vec<TenantSpec>,
+        cache: Arc<ScheduleCache>,
+        cfg: LiveConfig,
+    ) -> Result<Self, String> {
+        if specs.is_empty() {
+            return Err("no tenants".into());
+        }
+        let mut recon = Reconfigurator::new(base.clone());
+        let weights = vec![1u32; specs.len()];
+        let named: Vec<(&str, u32)> =
+            specs.iter().zip(&weights).map(|(s, &w)| (s.name.as_str(), w)).collect();
+        let parts = recon.split(&named)?;
+        recon.validate()?;
+        let tenants = specs
+            .into_iter()
+            .zip(&parts)
+            .map(|(spec, part)| {
+                let slice = part.config(&base);
+                let cached = cache.get_or_compute(&platform, &slice, &spec.dag);
+                let queue = BoundedQueue::new(spec.queue_capacity);
+                TenantRuntime {
+                    queue,
+                    plan: Mutex::new(Plan {
+                        fmus: part.n_fmus(),
+                        cus: part.m_cus(),
+                        per_request_s: cached.per_request_s,
+                    }),
+                    hist: Mutex::new(LatencyHistogram::new()),
+                    fabric_s: Mutex::new(0.0),
+                    served: AtomicU64::new(0),
+                    spec,
+                }
+            })
+            .collect();
+        Ok(Self {
+            platform,
+            base,
+            cfg,
+            cache,
+            recon: Mutex::new(recon),
+            weights: Mutex::new(weights),
+            tenants,
+            switches: AtomicU64::new(0),
+            stop_policy: AtomicBool::new(false),
+        })
+    }
+
+    pub fn num_tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Admission-controlled enqueue for tenant `t`.
+    pub fn push(&self, t: usize, req: LiveRequest) -> Result<(), PushError> {
+        self.tenants[t].queue.try_push(req)
+    }
+
+    /// Close every tenant queue; workers exit once drained.
+    pub fn close(&self) {
+        for t in &self.tenants {
+            t.queue.close();
+        }
+    }
+
+    /// Current composition as `(name, fmus, cus)` triples.
+    pub fn composition(&self) -> Vec<(String, u32, u32)> {
+        self.tenants
+            .iter()
+            .map(|t| {
+                let p = t.plan.lock().unwrap();
+                (t.spec.name.clone(), p.fmus, p.cus)
+            })
+            .collect()
+    }
+
+    fn worker(&self, i: usize) {
+        let t = &self.tenants[i];
+        loop {
+            let Some(batch) = t.queue.pop_batch_timeout(t.spec.max_batch, Duration::from_millis(20))
+            else {
+                break; // closed and drained
+            };
+            if batch.is_empty() {
+                continue; // timeout — re-read plan, check for close
+            }
+            let plan = t.plan.lock().unwrap().clone();
+            let dur = batch_fabric_s(plan.per_request_s, batch.len());
+            *t.fabric_s.lock().unwrap() += dur;
+            if self.cfg.timescale > 0.0 {
+                // Clamp before Duration conversion: an extreme timescale
+                // (inf/NaN overflow) must not panic the worker.
+                let secs = (dur * self.cfg.timescale)
+                    .min(self.cfg.max_sleep.as_secs_f64())
+                    .max(0.0);
+                std::thread::sleep(Duration::from_secs_f64(secs));
+            }
+            let mut hist = t.hist.lock().unwrap();
+            for req in &batch {
+                hist.record(req.enqueued.elapsed().as_secs_f64());
+            }
+            drop(hist);
+            t.served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// One policy evaluation: observe backlog, re-split if warranted.
+    /// Public so step-driven callers (and tests) can run it without the
+    /// wall-clock loop.
+    pub fn policy_step(&self) -> bool {
+        let backlog: Vec<f64> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let depth = t.queue.len() as f64;
+                depth * t.plan.lock().unwrap().per_request_s
+            })
+            .collect();
+        let total: f64 = backlog.iter().sum();
+        let proposed = backlog_weights(&backlog, self.cfg.policy.max_weight);
+        let mut recon = self.recon.lock().unwrap();
+        let mut weights = self.weights.lock().unwrap();
+        if !should_resplit(&weights[..], &proposed, total, recon.switch_cost_s(), &self.cfg.policy)
+        {
+            return false;
+        }
+        let named: Vec<(&str, u32)> = self
+            .tenants
+            .iter()
+            .zip(&proposed)
+            .map(|(t, &w)| (t.spec.name.as_str(), w))
+            .collect();
+        let parts = match recon.split(&named) {
+            Ok(p) => p,
+            Err(e) => {
+                log::warn!("re-split rejected: {e}");
+                return false;
+            }
+        };
+        debug_assert!(recon.validate().is_ok());
+        let switch_cost = recon.switch_cost_s();
+        for (t, part) in self.tenants.iter().zip(&parts) {
+            let slice = part.config(&self.base);
+            let cached = self.cache.get_or_compute(&self.platform, &slice, &t.spec.dag);
+            *t.plan.lock().unwrap() = Plan {
+                fmus: part.n_fmus(),
+                cus: part.m_cus(),
+                per_request_s: cached.per_request_s,
+            };
+            *t.fabric_s.lock().unwrap() += switch_cost;
+        }
+        *weights = proposed;
+        self.switches.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    fn policy_loop(&self) {
+        let epoch = Duration::from_secs_f64(self.cfg.policy.epoch_s.max(1e-3));
+        // Sleep in short slices so shutdown never waits a whole epoch.
+        let slice = epoch.min(Duration::from_millis(20));
+        let mut slept = Duration::ZERO;
+        while !self.stop_policy.load(Ordering::Relaxed) {
+            std::thread::sleep(slice);
+            slept += slice;
+            if slept < epoch {
+                continue;
+            }
+            slept = Duration::ZERO;
+            if self.stop_policy.load(Ordering::Relaxed) {
+                break;
+            }
+            self.policy_step();
+        }
+    }
+
+    /// Run workers + policy until every queue is closed and drained.
+    /// Producers push concurrently from other threads via [`Self::push`].
+    pub fn run(&self) -> LiveReport {
+        let t0 = Instant::now();
+        // The cache may be shared with calibration / sim phases; report
+        // only this run's activity.
+        let (hits0, misses0) = (self.cache.hits(), self.cache.misses());
+        std::thread::scope(|s| {
+            let workers: Vec<_> =
+                (0..self.tenants.len()).map(|i| s.spawn(move || self.worker(i))).collect();
+            let policy = s.spawn(|| self.policy_loop());
+            // Stop the policy thread before propagating any worker
+            // panic: panicking while it still runs would leave the
+            // scope blocked on a loop that never observes the flag.
+            let worker_panicked =
+                workers.into_iter().map(|w| usize::from(w.join().is_err())).sum::<usize>();
+            self.stop_policy.store(true, Ordering::Relaxed);
+            let policy_result = policy.join();
+            assert_eq!(worker_panicked, 0, "{worker_panicked} worker thread(s) panicked");
+            policy_result.expect("policy thread panicked");
+        });
+        LiveReport {
+            tenants: self
+                .tenants
+                .iter()
+                .map(|t| TenantReport {
+                    name: t.spec.name.clone(),
+                    served: t.served.load(Ordering::Relaxed),
+                    fabric_s: *t.fabric_s.lock().unwrap(),
+                    wall_latency: t.hist.lock().unwrap().clone(),
+                })
+                .collect(),
+            switches: self.switches.load(Ordering::Relaxed),
+            cache_hits: self.cache.hits() - hits0,
+            cache_misses: self.cache.misses() - misses0,
+            wall_s: t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::Solver;
+    use crate::workload::zoo;
+
+    fn tiny_solver() -> Solver {
+        Solver::Ga { population: 12, generations: 12, seed: 5 }
+    }
+
+    fn scheduler(caps: usize) -> FabricScheduler {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let specs = vec![
+            TenantSpec::new("a", zoo::mlp_s()).with_queue_capacity(caps),
+            TenantSpec::new("b", zoo::mlp_s()).with_queue_capacity(caps),
+        ];
+        let cache = Arc::new(ScheduleCache::new(tiny_solver()));
+        FabricScheduler::new(platform, base, specs, cache, LiveConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn serves_all_pushed_requests() {
+        let sched = scheduler(10_000);
+        for i in 0..200 {
+            sched.push(i as usize % 2, LiveRequest::new(i)).unwrap();
+        }
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.total_served(), 200);
+        assert_eq!(report.tenants[0].served, 100);
+        assert!(report.tenants[0].fabric_s > 0.0);
+        assert_eq!(report.tenants[0].wall_latency.count(), 100);
+    }
+
+    #[test]
+    fn admission_control_is_per_tenant() {
+        let sched = scheduler(4);
+        // Workers aren't running: the 4-deep queue must overflow.
+        let mut rejected = 0;
+        for i in 0..10 {
+            if sched.push(0, LiveRequest::new(i)).is_err() {
+                rejected += 1;
+            }
+        }
+        assert_eq!(rejected, 6);
+        assert_eq!(sched.tenants[1].queue.len(), 0);
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.total_served(), 4);
+    }
+
+    #[test]
+    fn policy_step_resplits_under_skew() {
+        let sched = scheduler(10_000);
+        // Flood tenant a while workers are not yet running.
+        for i in 0..500 {
+            sched.push(0, LiveRequest::new(i)).unwrap();
+        }
+        let before = sched.composition();
+        assert!(sched.policy_step(), "skewed backlog must trigger a re-split");
+        let after = sched.composition();
+        assert!(after[0].2 > before[0].2, "tenant a must gain CUs: {before:?} -> {after:?}");
+        assert_eq!(sched.switches.load(Ordering::Relaxed), 1);
+        // An idle fabric proposes the equal split again — a shape the
+        // cache has already seen, so re-splitting back is pure hits.
+        loop {
+            match sched.tenants[0].queue.pop_batch_timeout(64, Duration::from_millis(1)) {
+                Some(b) if !b.is_empty() => continue,
+                _ => break,
+            }
+        }
+        let h0 = sched.cache.hits();
+        assert!(sched.policy_step(), "drained backlog must restore the equal split");
+        assert!(sched.cache.hits() > h0, "returning to a seen composition must hit the cache");
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.switches, 2);
+    }
+
+    #[test]
+    fn push_after_close_rejected() {
+        let sched = scheduler(16);
+        sched.close();
+        assert_eq!(sched.push(0, LiveRequest::new(1)).unwrap_err(), PushError::Closed);
+        let report = sched.run();
+        assert_eq!(report.total_served(), 0);
+    }
+}

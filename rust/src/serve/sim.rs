@@ -1,0 +1,429 @@
+//! Deterministic virtual-time serving simulator.
+//!
+//! Drives the full serving data path — per-tenant bounded queues with
+//! admission control, per-partition workers with batching, the backlog
+//! re-composition policy, and the schedule cache — over a traffic trace
+//! in *fabric time*, with no threads and no wall clock. Every run is
+//! exactly reproducible, which is what the comparison harness (example,
+//! bench, acceptance test) needs to claim "dynamic strictly beats the
+//! static split".
+//!
+//! Time model: each tenant's worker owns one fabric slice and serves
+//! one batch at a time; a batch of `b` requests costs
+//! [`batch_fabric_s`] of the slice's cached schedule makespan.
+//! A re-composition charges [`Reconfigurator::switch_cost_s`] to every
+//! slice (all units reprogram before their next batch).
+
+use std::collections::VecDeque;
+
+use crate::arch::FilcoConfig;
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::coordinator::reconfig::Reconfigurator;
+use crate::platform::Platform;
+
+use super::cache::ScheduleCache;
+use super::policy::{backlog_weights, should_resplit, PolicyConfig};
+use super::tenant::{batch_fabric_s, Arrival, TenantSpec};
+
+/// How the fabric is composed for the tenants.
+#[derive(Debug, Clone)]
+pub enum Strategy {
+    /// One unified accelerator; tenants time-share it round-robin.
+    Unified,
+    /// One equal-weight partition per tenant, fixed for the whole run.
+    StaticEqual,
+    /// Live re-composition driven by the backlog policy.
+    Dynamic(PolicyConfig),
+}
+
+impl Strategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Strategy::Unified => "unified",
+            Strategy::StaticEqual => "static-equal",
+            Strategy::Dynamic(_) => "dynamic",
+        }
+    }
+}
+
+/// A serving scenario: fabric, tenants, and a traffic trace.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub platform: Platform,
+    pub base: FilcoConfig,
+    pub tenants: Vec<TenantSpec>,
+    /// Must be sorted by `t_s` (as produced by the trace generators).
+    pub arrivals: Vec<Arrival>,
+}
+
+/// Outcome of one simulated serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub strategy: String,
+    /// Fabric time at which the last batch finishes.
+    pub completion_s: f64,
+    pub served: Vec<u64>,
+    pub rejected: Vec<u64>,
+    /// Re-compositions performed (the setup split is not counted).
+    pub switches: u64,
+    /// Policy epochs evaluated.
+    pub epochs: u64,
+    /// Per-tenant fabric latency (queueing + service).
+    pub histograms: Vec<LatencyHistogram>,
+}
+
+impl ServeReport {
+    pub fn total_served(&self) -> u64 {
+        self.served.iter().sum()
+    }
+
+    pub fn total_rejected(&self) -> u64 {
+        self.rejected.iter().sum()
+    }
+
+    /// Worst per-tenant p99 fabric latency.
+    pub fn worst_p99_s(&self) -> f64 {
+        self.histograms.iter().map(|h| h.p99()).fold(0.0, f64::max)
+    }
+
+    /// Served requests per fabric second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.total_served() as f64 / self.completion_s.max(1e-12)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} completion {:.4e} s | {} served, {} rejected | {:.0} req/s | \
+             worst p99 {:.3e} s | {} switches",
+            self.strategy,
+            self.completion_s,
+            self.total_served(),
+            self.total_rejected(),
+            self.throughput_rps(),
+            self.worst_p99_s(),
+            self.switches,
+        )
+    }
+}
+
+/// Per-request fabric seconds for each tenant on the equal-weight
+/// split — the calibration baseline the example, bench, CLI and tests
+/// share to derive traffic rates that are independent of the
+/// analytical model's absolute latency scale.
+pub fn equal_split_per_request(
+    platform: &Platform,
+    base: &FilcoConfig,
+    tenants: &[TenantSpec],
+    cache: &ScheduleCache,
+) -> Vec<f64> {
+    let mut recon = Reconfigurator::new(base.clone());
+    let named: Vec<(&str, u32)> = tenants.iter().map(|t| (t.name.as_str(), 1)).collect();
+    let parts = recon.split(&named).expect("equal split");
+    parts
+        .iter()
+        .zip(tenants)
+        .map(|(p, t)| cache.get_or_compute(platform, &p.config(base), &t.dag).per_request_s)
+        .collect()
+}
+
+/// Admit arrivals up to virtual time `now` into the per-tenant queues.
+fn ingest(
+    arrivals: &[Arrival],
+    ai: &mut usize,
+    now: f64,
+    pending: &mut [VecDeque<(u64, f64)>],
+    rejected: &mut [u64],
+    caps: &[usize],
+) {
+    while *ai < arrivals.len() && arrivals[*ai].t_s <= now {
+        let a = &arrivals[*ai];
+        if pending[a.tenant].len() >= caps[a.tenant] {
+            rejected[a.tenant] += 1;
+        } else {
+            pending[a.tenant].push_back((a.id, a.t_s));
+        }
+        *ai += 1;
+    }
+}
+
+/// Run `scenario` under `strategy`, resolving schedules through `cache`.
+pub fn simulate(scenario: &Scenario, strategy: &Strategy, cache: &ScheduleCache) -> ServeReport {
+    match strategy {
+        Strategy::Unified => simulate_unified(scenario, cache),
+        Strategy::StaticEqual => simulate_partitioned(scenario, cache, None),
+        Strategy::Dynamic(p) => simulate_partitioned(scenario, cache, Some(p)),
+    }
+}
+
+fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
+    let t_n = sc.tenants.len();
+    let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
+    let per_req: Vec<f64> = sc
+        .tenants
+        .iter()
+        .map(|t| cache.get_or_compute(&sc.platform, &sc.base, &t.dag).per_request_s)
+        .collect();
+
+    let mut pending: Vec<VecDeque<(u64, f64)>> = vec![VecDeque::new(); t_n];
+    let mut hist = vec![LatencyHistogram::new(); t_n];
+    let mut served = vec![0u64; t_n];
+    let mut rejected = vec![0u64; t_n];
+    let mut free = 0.0f64;
+    let mut now = 0.0f64;
+    let mut ai = 0usize;
+    let mut rr = 0usize;
+
+    loop {
+        ingest(&sc.arrivals, &mut ai, now, &mut pending, &mut rejected, &caps);
+        if free <= now {
+            // The single worker picks the next non-empty tenant round-robin.
+            for k in 0..t_n {
+                let t = (rr + k) % t_n;
+                let take = pending[t].len().min(sc.tenants[t].max_batch);
+                if take == 0 {
+                    continue;
+                }
+                let done = now + batch_fabric_s(per_req[t], take);
+                for _ in 0..take {
+                    let (_id, arr) = pending[t].pop_front().unwrap();
+                    hist[t].record(done - arr);
+                    served[t] += 1;
+                }
+                free = done;
+                rr = (t + 1) % t_n;
+                break;
+            }
+        }
+        let mut next = f64::INFINITY;
+        if ai < sc.arrivals.len() {
+            next = next.min(sc.arrivals[ai].t_s);
+        }
+        if pending.iter().any(|q| !q.is_empty()) {
+            next = next.min(free);
+        }
+        if !next.is_finite() {
+            break;
+        }
+        now = next;
+    }
+
+    ServeReport {
+        strategy: Strategy::Unified.label().to_string(),
+        completion_s: free,
+        served,
+        rejected,
+        switches: 0,
+        epochs: 0,
+        histograms: hist,
+    }
+}
+
+fn simulate_partitioned(
+    sc: &Scenario,
+    cache: &ScheduleCache,
+    policy: Option<&PolicyConfig>,
+) -> ServeReport {
+    let t_n = sc.tenants.len();
+    let names: Vec<&str> = sc.tenants.iter().map(|t| t.name.as_str()).collect();
+    let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
+
+    let mut recon = Reconfigurator::new(sc.base.clone());
+    let mut weights: Vec<u32> = vec![1; t_n];
+    let named: Vec<(&str, u32)> = names.iter().zip(&weights).map(|(&n, &w)| (n, w)).collect();
+    let parts = recon.split(&named).expect("equal split");
+    recon.validate().expect("equal split tiles the fabric");
+    let setup_switches = recon.switches;
+    let mut per_req: Vec<f64> = parts
+        .iter()
+        .zip(&sc.tenants)
+        .map(|(part, t)| {
+            cache.get_or_compute(&sc.platform, &part.config(&sc.base), &t.dag).per_request_s
+        })
+        .collect();
+
+    let mut pending: Vec<VecDeque<(u64, f64)>> = vec![VecDeque::new(); t_n];
+    let mut hist = vec![LatencyHistogram::new(); t_n];
+    let mut served = vec![0u64; t_n];
+    let mut rejected = vec![0u64; t_n];
+    let mut free = vec![0.0f64; t_n];
+    let mut now = 0.0f64;
+    let mut ai = 0usize;
+    let mut epochs = 0u64;
+    let mut next_epoch = policy.map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
+
+    loop {
+        ingest(&sc.arrivals, &mut ai, now, &mut pending, &mut rejected, &caps);
+
+        // Each tenant's worker starts its next batch if idle.
+        for t in 0..t_n {
+            if free[t] > now {
+                continue;
+            }
+            let take = pending[t].len().min(sc.tenants[t].max_batch);
+            if take == 0 {
+                continue;
+            }
+            let done = now + batch_fabric_s(per_req[t], take);
+            for _ in 0..take {
+                let (_id, arr) = pending[t].pop_front().unwrap();
+                hist[t].record(done - arr);
+                served[t] += 1;
+            }
+            free[t] = done;
+        }
+
+        // Policy epoch: observe backlog, maybe re-compose.
+        if let Some(p) = policy {
+            if now >= next_epoch {
+                epochs += 1;
+                let backlog: Vec<f64> =
+                    (0..t_n).map(|t| pending[t].len() as f64 * per_req[t]).collect();
+                let total_backlog: f64 = backlog.iter().sum();
+                let proposed = backlog_weights(&backlog, p.max_weight);
+                if should_resplit(&weights, &proposed, total_backlog, recon.switch_cost_s(), p) {
+                    let named: Vec<(&str, u32)> =
+                        names.iter().zip(&proposed).map(|(&n, &w)| (n, w)).collect();
+                    let parts = recon.split(&named).expect("re-split");
+                    debug_assert!(recon.validate().is_ok());
+                    for t in 0..t_n {
+                        let slice = parts[t].config(&sc.base);
+                        per_req[t] = cache
+                            .get_or_compute(&sc.platform, &slice, &sc.tenants[t].dag)
+                            .per_request_s;
+                        // In-flight batches finish on the old composition,
+                        // then every slice pays the reprogram cost.
+                        free[t] = free[t].max(now) + recon.switch_cost_s();
+                    }
+                    weights = proposed;
+                }
+                while next_epoch <= now {
+                    next_epoch += p.epoch_s;
+                }
+            }
+        }
+
+        // Advance to the next event.
+        let mut next = f64::INFINITY;
+        if ai < sc.arrivals.len() {
+            next = next.min(sc.arrivals[ai].t_s);
+        }
+        let work_left = pending.iter().any(|q| !q.is_empty());
+        for t in 0..t_n {
+            if !pending[t].is_empty() {
+                next = next.min(free[t]);
+            }
+        }
+        if policy.is_some() && (ai < sc.arrivals.len() || work_left) {
+            next = next.min(next_epoch);
+        }
+        if !next.is_finite() {
+            break;
+        }
+        now = next;
+    }
+
+    let label = if policy.is_some() { "dynamic" } else { "static-equal" };
+    ServeReport {
+        strategy: label.to_string(),
+        completion_s: free.iter().cloned().fold(0.0f64, f64::max),
+        served,
+        rejected,
+        switches: recon.switches - setup_switches,
+        epochs,
+        histograms: hist,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::Solver;
+    use crate::serve::tenant::poisson_trace;
+    use crate::workload::zoo;
+
+    fn tiny_solver() -> Solver {
+        Solver::Ga { population: 12, generations: 12, seed: 3 }
+    }
+
+    /// Two-tenant scenario with rates calibrated to the measured
+    /// equal-split service time: tenant `a` overloaded (2x its slice's
+    /// service rate), tenant `b` lightly loaded. Absolute makespan scale
+    /// cancels out, so the test is robust to model changes.
+    fn calibrated_scenario(
+        cache: &ScheduleCache,
+        caps: usize,
+        duration_reqs: f64,
+        seed: u64,
+    ) -> (Scenario, f64) {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let tenants = vec![
+            TenantSpec::new("a", zoo::mlp_s()).with_queue_capacity(caps),
+            TenantSpec::new("b", zoo::mlp_s()).with_queue_capacity(caps),
+        ];
+        let per = equal_split_per_request(&platform, &base, &tenants, cache)[0];
+        let arrivals = poisson_trace(&[2.0 / per, 0.2 / per], duration_reqs * per, seed);
+        (Scenario { platform, base, tenants, arrivals }, per)
+    }
+
+    fn test_policy(per: f64) -> PolicyConfig {
+        PolicyConfig::calibrated(per)
+    }
+
+    #[test]
+    fn all_strategies_serve_everything() {
+        let cache = ScheduleCache::new(tiny_solver());
+        let (sc, per) = calibrated_scenario(&cache, 100_000, 40.0, 9);
+        let n = sc.arrivals.len() as u64;
+        assert!(n > 10, "calibrated trace too small: {n}");
+        for strat in
+            [Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(test_policy(per))]
+        {
+            let r = simulate(&sc, &strat, &cache);
+            assert_eq!(r.total_served(), n, "{} dropped requests", r.strategy);
+            assert_eq!(r.total_rejected(), 0);
+            assert!(r.completion_s > 0.0);
+            let hist_n: u64 = r.histograms.iter().map(|h| h.count()).sum();
+            assert_eq!(hist_n, n);
+            assert!(r.worst_p99_s() > 0.0);
+        }
+    }
+
+    #[test]
+    fn simulation_is_deterministic() {
+        let cache = ScheduleCache::new(tiny_solver());
+        let (sc, per) = calibrated_scenario(&cache, 100_000, 30.0, 11);
+        let strat = Strategy::Dynamic(test_policy(per));
+        let a = simulate(&sc, &strat, &cache);
+        let b = simulate(&sc, &strat, &cache);
+        assert_eq!(a.completion_s, b.completion_s);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.switches, b.switches);
+    }
+
+    #[test]
+    fn admission_control_rejects_floods() {
+        // Burst of simultaneous arrivals against a 2-deep queue.
+        let cache = ScheduleCache::new(tiny_solver());
+        let (mut sc, _per) = calibrated_scenario(&cache, 2, 0.0, 13);
+        sc.arrivals = (0..10).map(|i| Arrival { t_s: 0.0, tenant: 0, id: i }).collect();
+        let r = simulate(&sc, &Strategy::StaticEqual, &cache);
+        assert_eq!(r.total_served() + r.total_rejected(), 10);
+        assert!(r.total_rejected() > 0, "2-deep queue must reject part of a 10-burst");
+    }
+
+    #[test]
+    fn dynamic_resplits_and_reuses_cache() {
+        let cache = ScheduleCache::new(tiny_solver());
+        let (sc, per) = calibrated_scenario(&cache, 100_000, 200.0, 17);
+        let policy = test_policy(per);
+        let r = simulate(&sc, &Strategy::Dynamic(policy.clone()), &cache);
+        assert!(r.epochs > 0, "policy must have evaluated");
+        assert!(r.switches >= 1, "2x overload on tenant a must trigger a re-split");
+        assert!(cache.misses() >= 2);
+        let before = cache.misses();
+        let r2 = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+        assert_eq!(cache.misses(), before, "second identical run must be all cache hits");
+        assert_eq!(r2.completion_s, r.completion_s);
+    }
+}

@@ -1,0 +1,159 @@
+//! Tenants and traffic: who is being served, and how requests arrive.
+
+use crate::util::rng::SplitMix64;
+use crate::workload::Dag;
+
+/// Weight-reload amortization within a batch: requests after the first
+/// reuse the operand layouts already resident in the FMUs, so they pay
+/// this fraction of the full schedule makespan. Applies identically to
+/// every composition strategy, so comparisons are unaffected by it.
+pub const BATCH_AMORTIZATION: f64 = 0.9;
+
+/// Fabric seconds a batch of `batch` requests takes on a slice whose
+/// single-request schedule makespan is `per_request_s`.
+pub fn batch_fabric_s(per_request_s: f64, batch: usize) -> f64 {
+    if batch == 0 {
+        return 0.0;
+    }
+    per_request_s * (1.0 + BATCH_AMORTIZATION * (batch - 1) as f64)
+}
+
+/// One tenant of the fabric: a model (layer DAG) plus its serving knobs.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    pub dag: Dag,
+    /// Bounded-queue depth; pushes beyond it are rejected (admission
+    /// control).
+    pub queue_capacity: usize,
+    /// Max requests drained per worker batch.
+    pub max_batch: usize,
+}
+
+impl TenantSpec {
+    pub fn new(name: impl Into<String>, dag: Dag) -> Self {
+        Self { name: name.into(), dag, queue_capacity: 4096, max_batch: 8 }
+    }
+
+    pub fn with_queue_capacity(mut self, cap: usize) -> Self {
+        self.queue_capacity = cap.max(1);
+        self
+    }
+
+    pub fn with_max_batch(mut self, b: usize) -> Self {
+        self.max_batch = b.max(1);
+        self
+    }
+}
+
+/// One request arrival in a (virtual-time) traffic trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub t_s: f64,
+    pub tenant: usize,
+    pub id: u64,
+}
+
+/// Sort a merged trace by (time, tenant) and renumber ids to the
+/// global arrival order — shared epilogue of every trace generator.
+fn finalize_trace(all: &mut [Arrival]) {
+    all.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap().then(a.tenant.cmp(&b.tenant)));
+    for (i, a) in all.iter_mut().enumerate() {
+        a.id = i as u64;
+    }
+}
+
+/// Deterministic Poisson-process trace: per-tenant exponential
+/// inter-arrival times at `rates_rps[i]` requests/second, merged and
+/// sorted. A rate of 0 produces no arrivals for that tenant.
+pub fn poisson_trace(rates_rps: &[f64], duration_s: f64, seed: u64) -> Vec<Arrival> {
+    let mut rng = SplitMix64::new(seed);
+    let mut all: Vec<Arrival> = Vec::new();
+    for (tenant, &rate) in rates_rps.iter().enumerate() {
+        if rate <= 0.0 {
+            continue;
+        }
+        let mut fork = rng.fork();
+        let mut t = 0.0f64;
+        loop {
+            let u = fork.next_f64();
+            t += -(1.0 - u).ln() / rate;
+            if t >= duration_s {
+                break;
+            }
+            all.push(Arrival { t_s: t, tenant, id: 0 });
+        }
+    }
+    finalize_trace(&mut all);
+    all
+}
+
+/// A piecewise trace: concatenates phases, each with its own per-tenant
+/// rates, so load skew can move between tenants over time (the regime
+/// the dynamic re-composer exploits and a static split cannot).
+pub fn phased_trace(phases: &[(&[f64], f64)], seed: u64) -> Vec<Arrival> {
+    let mut all: Vec<Arrival> = Vec::new();
+    let mut t0 = 0.0f64;
+    for (k, &(rates, dur)) in phases.iter().enumerate() {
+        let mut phase = poisson_trace(rates, dur, seed.wrapping_add(k as u64 * 0x9E37_79B9));
+        for a in &mut phase {
+            a.t_s += t0;
+        }
+        all.extend(phase);
+        t0 += dur;
+    }
+    finalize_trace(&mut all);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn batch_amortizes() {
+        assert_eq!(batch_fabric_s(1.0, 0), 0.0);
+        assert!((batch_fabric_s(1.0, 1) - 1.0).abs() < 1e-12);
+        let b4 = batch_fabric_s(1.0, 4);
+        assert!(b4 < 4.0 && b4 > 1.0, "batching must amortize: {b4}");
+    }
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let a = poisson_trace(&[100.0, 10.0], 1.0, 42);
+        let b = poisson_trace(&[100.0, 10.0], 1.0, 42);
+        assert_eq!(a.len(), b.len());
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        assert!(a.iter().zip(&b).all(|(x, y)| x == y));
+        // Rate skew shows up in counts (100:10 within ~3x tolerance).
+        let n0 = a.iter().filter(|x| x.tenant == 0).count();
+        let n1 = a.iter().filter(|x| x.tenant == 1).count();
+        assert!(n0 > n1 * 3, "skewed rates must skew counts: {n0} vs {n1}");
+    }
+
+    #[test]
+    fn phased_trace_moves_skew() {
+        let heavy_a: &[f64] = &[100.0, 5.0];
+        let heavy_b: &[f64] = &[5.0, 100.0];
+        let tr = phased_trace(&[(heavy_a, 1.0), (heavy_b, 1.0)], 7);
+        let first: Vec<_> = tr.iter().filter(|x| x.t_s < 1.0).collect();
+        let second: Vec<_> = tr.iter().filter(|x| x.t_s >= 1.0).collect();
+        let frac_a_first =
+            first.iter().filter(|x| x.tenant == 0).count() as f64 / first.len() as f64;
+        let frac_a_second =
+            second.iter().filter(|x| x.tenant == 0).count() as f64 / second.len() as f64;
+        assert!(frac_a_first > 0.8 && frac_a_second < 0.2);
+        // ids are the global arrival order.
+        assert!(tr.windows(2).all(|w| w[0].id < w[1].id));
+    }
+
+    #[test]
+    fn tenant_spec_builders() {
+        let t = TenantSpec::new("mlp", zoo::mlp_s()).with_queue_capacity(16).with_max_batch(4);
+        assert_eq!(t.queue_capacity, 16);
+        assert_eq!(t.max_batch, 4);
+        assert_eq!(t.name, "mlp");
+    }
+}

@@ -1,0 +1,204 @@
+//! Minimal, dependency-free subset of the `anyhow` API (vendored so the
+//! workspace builds with no network access). Implements exactly what
+//! the `filco` crate uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait, and the [`anyhow!`] / [`bail!`] macros.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error: a message plus an optional source chain.
+///
+/// Like the real `anyhow::Error`, this type deliberately does *not*
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` impl below coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Create an error from an underlying `std::error::Error`.
+    pub fn new<E>(error: E) -> Self
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root-most source message, if any.
+    pub fn root_cause(&self) -> String {
+        let mut cur: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static));
+        let mut last = self.msg.clone();
+        while let Some(e) = cur {
+            last = e.to_string();
+            cur = e.source();
+        }
+        last
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur: Option<&(dyn StdError + 'static)> =
+                self.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static));
+            while let Some(e) = cur {
+                write!(f, ": {e}")?;
+                cur = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur: Option<&(dyn StdError + 'static)> =
+            self.source.as_ref().map(|s| s.as_ref() as &(dyn StdError + 'static));
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {e}")?;
+            cur = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option` (mirrors `anyhow::Context`).
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::new(e).context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn from_and_display() {
+        let e: Error = io_err().into();
+        assert_eq!(format!("{e}"), "disk on fire");
+    }
+
+    #[test]
+    fn context_chains_alternate() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening artifact").unwrap_err();
+        assert!(format!("{e:#}").contains("opening artifact"));
+        assert!(format!("{e:#}").contains("disk on fire"));
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("unknown artifact {name:?}");
+        assert_eq!(e.to_string(), "unknown artifact \"x\"");
+        fn f() -> Result<()> {
+            bail!("boom {}", 7)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 7");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Minimal stand-in for the `log` facade (vendored, no network):
+//! `error!`/`warn!`/`info!` print to stderr with a level prefix;
+//! `debug!`/`trace!` print only when `FILCO_LOG=debug` is set.
+
+use std::fmt;
+
+/// Emit one formatted record. Called by the macros; not user-facing.
+pub fn __emit(level: &str, args: fmt::Arguments<'_>) {
+    eprintln!("[{level}] {args}");
+}
+
+/// Whether verbose (`debug!`/`trace!`) records should be emitted.
+pub fn __verbose() -> bool {
+    std::env::var("FILCO_LOG").map(|v| v == "debug" || v == "trace").unwrap_or(false)
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit("error", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit("warn", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit("info", format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::__verbose() {
+            $crate::__emit("debug", format_args!($($arg)*))
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if $crate::__verbose() {
+            $crate::__emit("trace", format_args!($($arg)*))
+        }
+    };
+}
