@@ -61,7 +61,13 @@ fn main() {
     let span = 2.0 * phase_dur;
     println!("\ntrace: {} arrivals over {span:.3e} s of moving skew\n", arrivals.len());
 
-    let sc = Scenario { platform: platform.clone(), base: base.clone(), tenants, arrivals };
+    let sc = Scenario {
+        platform: platform.clone(),
+        base: base.clone(),
+        tenants,
+        arrivals,
+        switch_cost_s: None,
+    };
     let policy = PolicyConfig::calibrated(per[0]);
 
     let unified = simulate(&sc, &Strategy::Unified, &cache);

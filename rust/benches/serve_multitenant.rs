@@ -37,18 +37,18 @@ fn main() {
         arrivals.len()
     );
 
-    let sc = Scenario { platform, base, tenants, arrivals };
+    let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None };
     let policy = PolicyConfig::calibrated(per[0]);
 
     let t0 = std::time::Instant::now();
-    let reports: Vec<ServeReport> = [
-        Strategy::Unified,
-        Strategy::StaticEqual,
-        Strategy::Dynamic(policy),
-    ]
-    .iter()
-    .map(|s| simulate(&sc, s, &cache))
-    .collect();
+    let strategies = [
+        ("unified", Strategy::Unified),
+        ("static-equal", Strategy::StaticEqual),
+        ("dynamic-batch", Strategy::Dynamic(policy.clone().without_preemption())),
+        ("dynamic-preempt", Strategy::Dynamic(policy)),
+    ];
+    let reports: Vec<(&str, ServeReport)> =
+        strategies.iter().map(|(n, s)| (*n, simulate(&sc, s, &cache))).collect();
 
     let mut t = Table::new(
         "Serving under skewed 3-tenant traffic (fabric time)",
@@ -59,18 +59,20 @@ fn main() {
             "worst p99 s",
             "heavy p99 s",
             "switches",
+            "preempts",
             "served",
             "rejected",
         ],
     );
-    for rep in &reports {
+    for (name, rep) in &reports {
         t.row(&[
-            rep.strategy.clone(),
+            name.to_string(),
             eng(rep.completion_s),
             eng(rep.throughput_rps()),
             eng(rep.worst_p99_s()),
             eng(rep.histograms[0].p99()),
             rep.switches.to_string(),
+            rep.preemptions.to_string(),
             rep.total_served().to_string(),
             rep.total_rejected().to_string(),
         ]);
@@ -79,7 +81,7 @@ fn main() {
     println!("schedule cache: {}", cache.stats());
     println!("bench wall time: {:.2} s", t0.elapsed().as_secs_f64());
 
-    let (stat, dynr) = (&reports[1], &reports[2]);
+    let (stat, dynr) = (&reports[1].1, &reports[3].1);
     assert_eq!(dynr.total_served(), stat.total_served());
     assert!(
         dynr.completion_s < stat.completion_s,

@@ -40,11 +40,17 @@ impl Partition {
     }
 }
 
+/// Default composition-switch cost: ~150 PL cycles at 150 MHz — every
+/// unit decodes one ~32 B instruction word in parallel, plus
+/// control-plane dispatch.
+pub const DEFAULT_SWITCH_COST_S: f64 = 1e-6;
+
 /// Tracks the current fabric composition.
 #[derive(Debug)]
 pub struct Reconfigurator {
     base: FilcoConfig,
     partitions: Vec<Partition>,
+    switch_cost_s: f64,
     /// Number of reconfigurations performed.
     pub switches: u64,
 }
@@ -56,7 +62,12 @@ impl Reconfigurator {
             fmus: (0, base.n_fmus),
             cus: (0, base.m_cus),
         };
-        Self { base, partitions: vec![unified], switches: 0 }
+        Self {
+            base,
+            partitions: vec![unified],
+            switch_cost_s: DEFAULT_SWITCH_COST_S,
+            switches: 0,
+        }
     }
 
     pub fn partitions(&self) -> &[Partition] {
@@ -67,12 +78,17 @@ impl Reconfigurator {
         &self.base
     }
 
-    /// Cost of one composition switch: every unit decodes one ~32 B
-    /// instruction word at the PL clock, all units in parallel, plus
-    /// control-plane dispatch.
+    /// Cost of one composition switch (defaults to
+    /// [`DEFAULT_SWITCH_COST_S`]).
     pub fn switch_cost_s(&self) -> f64 {
-        // ~150 PL cycles at 150 MHz: 1 µs.
-        1e-6
+        self.switch_cost_s
+    }
+
+    /// Override the modelled switch cost (what-if studies: slower
+    /// control planes, bitstream-reload baselines). Negative values are
+    /// clamped to zero.
+    pub fn set_switch_cost_s(&mut self, cost_s: f64) {
+        self.switch_cost_s = cost_s.max(0.0);
     }
 
     /// Compose the whole fabric into one accelerator.
@@ -183,6 +199,16 @@ mod tests {
         assert_eq!(r.partitions().len(), 1);
         r.validate().unwrap();
         assert_eq!(r.partitions()[0].m_cus(), base().m_cus);
+    }
+
+    #[test]
+    fn switch_cost_is_overridable() {
+        let mut r = Reconfigurator::new(base());
+        assert_eq!(r.switch_cost_s(), DEFAULT_SWITCH_COST_S);
+        r.set_switch_cost_s(0.5);
+        assert_eq!(r.switch_cost_s(), 0.5);
+        r.set_switch_cost_s(-1.0);
+        assert_eq!(r.switch_cost_s(), 0.0);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod schedule;
 pub mod simplex;
 pub mod stage1;
 
-pub use schedule::{CandidateTable, Mode, Schedule, ScheduleEntry};
+pub use schedule::{CandidateTable, LayerStep, Mode, Schedule, ScheduleEntry};
 
 use crate::workload::Dag;
 

@@ -55,6 +55,27 @@ pub struct ScheduleEntry {
     pub cus: Vec<u32>,
 }
 
+/// One step of the steppable execution timeline derived from a
+/// [`Schedule`]: layers ordered by completion time. `dur_s` is the
+/// increment of the *completion frontier* (zero for a layer that
+/// retires while a longer concurrent layer is still running), `end_s`
+/// the cumulative fabric time from schedule start once this step
+/// retires. The final step's `end_s` equals the schedule makespan, so
+/// walking every step reproduces the batch-atomic total exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerStep {
+    pub layer: usize,
+    pub mode: usize,
+    /// Fabric seconds this step advances the completion frontier.
+    pub dur_s: f64,
+    /// Cumulative fabric time from schedule start at this step's retire.
+    pub end_s: f64,
+    /// FMUs the layer's mode occupies.
+    pub fmus: u32,
+    /// CUs the layer's mode occupies.
+    pub cus: u32,
+}
+
 /// A complete schedule (sorted by layer index).
 #[derive(Debug, Clone, Default)]
 pub struct Schedule {
@@ -63,6 +84,37 @@ pub struct Schedule {
 }
 
 impl Schedule {
+    /// The steppable timeline view: entries ordered by completion time,
+    /// each yielding the frontier increment and cumulative offset. This
+    /// is what makes mid-DAG preemption well-defined — a switch lands
+    /// at one of these step boundaries instead of waiting for the whole
+    /// DAG to drain.
+    pub fn steps(&self) -> Vec<LayerStep> {
+        let mut order: Vec<&ScheduleEntry> = self.entries.iter().collect();
+        order.sort_by(|a, b| {
+            a.end
+                .partial_cmp(&b.end)
+                .unwrap()
+                .then(a.start.partial_cmp(&b.start).unwrap())
+                .then(a.layer.cmp(&b.layer))
+        });
+        let mut frontier = 0.0f64;
+        let mut steps = Vec::with_capacity(order.len());
+        for e in order {
+            let end_s = e.end.max(frontier);
+            steps.push(LayerStep {
+                layer: e.layer,
+                mode: e.mode,
+                dur_s: end_s - frontier,
+                end_s,
+                fmus: e.fmus.len() as u32,
+                cus: e.cus.len() as u32,
+            });
+            frontier = end_s;
+        }
+        steps
+    }
+
     /// Validate against the paper's constraints:
     /// Eq 1 — every layer exactly one mode; Eq 2 — dependencies;
     /// Eq 3/4 — no time overlap on any shared FMU/CU;
@@ -437,6 +489,59 @@ mod tests {
             let fast = makespan_only(&dag, &t, &order, &mode_of, 4, 4, &mut scratch);
             assert!((full.makespan - fast).abs() < 1e-12, "{} vs {fast}", full.makespan);
         }
+    }
+
+    #[test]
+    fn steps_cover_makespan_and_order_by_completion() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..20 {
+            let n = rng.range(2, 10);
+            let mut dag = par_dag(n);
+            for i in 1..n {
+                if rng.below(2) == 0 {
+                    let from = rng.range(0, i);
+                    dag.dep(from, i);
+                }
+            }
+            let modes: Vec<Mode> = (0..2)
+                .map(|_| {
+                    mode(1 + rng.below(2) as u32, 1 + rng.below(2) as u32, 0.5 + rng.next_f64())
+                })
+                .collect();
+            let t = table_for(&dag, &modes);
+            let order = dag.topo_order().unwrap();
+            let mode_of: Vec<usize> = (0..n).map(|_| rng.range(0, 2)).collect();
+            let s = list_schedule(&dag, &t, &order, &mode_of, 4, 4);
+            let steps = s.steps();
+            assert_eq!(steps.len(), n, "one step per layer");
+            // Frontier is non-decreasing and ends exactly at the makespan.
+            assert!(steps.windows(2).all(|w| w[0].end_s <= w[1].end_s));
+            assert!(steps.iter().all(|st| st.dur_s >= 0.0));
+            let last = steps.last().unwrap();
+            assert_eq!(last.end_s, s.makespan, "final offset must be the makespan");
+            // Every layer appears exactly once, with its mode's resources.
+            let mut seen = vec![false; n];
+            for st in &steps {
+                assert!(!std::mem::replace(&mut seen[st.layer], true));
+                let m = &t.modes[st.layer][st.mode];
+                assert_eq!(st.fmus, m.fmus.min(4));
+                assert_eq!(st.cus, m.cus.min(4));
+            }
+        }
+    }
+
+    #[test]
+    fn steps_of_chain_are_layer_latencies() {
+        let mut dag = par_dag(3);
+        dag.dep(0, 1);
+        dag.dep(1, 2);
+        let t = table_for(&dag, &[mode(1, 1, 2.0)]);
+        let s = list_schedule(&dag, &t, &[0, 1, 2], &[0; 3], 8, 8);
+        let steps = s.steps();
+        assert_eq!(steps.iter().map(|st| st.layer).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert!(steps.iter().all(|st| (st.dur_s - 2.0).abs() < 1e-12));
+        assert_eq!(steps[2].end_s, s.makespan);
     }
 
     #[test]

@@ -18,15 +18,24 @@ const OP_CU: u8 = 0x05;
 /// Flags byte: bit0 = is_last.
 const FLAG_LAST: u8 = 0x01;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DecodeError {
-    #[error("truncated instruction at byte {0}")]
     Truncated(usize),
-    #[error("unknown opcode {0:#x} at byte {1}")]
     BadOpcode(u8, usize),
-    #[error("invalid field: {0}")]
     BadField(&'static str),
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated(at) => write!(f, "truncated instruction at byte {at}"),
+            DecodeError::BadOpcode(op, at) => write!(f, "unknown opcode {op:#x} at byte {at}"),
+            DecodeError::BadField(what) => write!(f, "invalid field: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 struct Writer {
     buf: Vec<u8>,

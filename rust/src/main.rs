@@ -7,11 +7,15 @@
 //!   disasm  --model M [..]    print the generated instruction streams
 //!   codegen --model M --out D write binaries/schedule.json/dataflow.h
 //!   serve   [--requests N] [--mode live|sim] [--epoch-ms E] [--timescale S]
+//!           [--preempt on|off] [--cache-file P]
 //!           multi-tenant serving on the live re-composable fabric:
-//!           worker per partition, backlog policy re-splits via the
-//!           Reconfigurator, schedules memoized in the ScheduleCache.
-//!           `--mode sim` runs the deterministic unified/static/dynamic
-//!           comparison instead.
+//!           worker per partition stepping batches layer-by-layer,
+//!           backlog policy re-splits via the Reconfigurator (mid-DAG
+//!           preemption at layer boundaries unless --preempt off),
+//!           schedules memoized in the ScheduleCache. --cache-file
+//!           persists the cache across restarts (loaded on startup,
+//!           saved on shutdown). `--mode sim` runs the deterministic
+//!           unified/static/dynamic comparison instead.
 //!   gantt   --model M [..]    ASCII utilization timeline from the sim
 //!
 //! Models: bert-32|64|128|256|512, mlp-l, mlp-s, deit-l, deit-s,
@@ -178,10 +182,36 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         eprintln!("unknown --mode {mode:?}; expected \"live\" or \"sim\"");
         std::process::exit(2);
     }
+    let preempt = match flags.get("preempt").map(String::as_str) {
+        None | Some("on") => true,
+        Some("off") => false,
+        Some(other) => {
+            eprintln!("unknown --preempt {other:?}; expected \"on\" or \"off\"");
+            std::process::exit(2);
+        }
+    };
 
     let platform = Platform::vck190();
     let base = FilcoConfig::default_for(&platform);
     let cache = Arc::new(ScheduleCache::new(ScheduleCache::serving_solver()));
+    // Warm from disk: restarts skip the GA/MILP for every composition
+    // this process has already seen.
+    let cache_file = flags.get("cache-file").map(std::path::PathBuf::from);
+    if let Some(path) = &cache_file {
+        match cache.load_from(path) {
+            Ok(0) => {}
+            Ok(k) => println!("schedule cache: warmed {k} entries from {}", path.display()),
+            Err(e) => eprintln!("schedule cache: ignoring {}: {e}", path.display()),
+        }
+    }
+    let save_cache = |cache: &ScheduleCache| {
+        if let Some(path) = &cache_file {
+            match cache.save_to(path) {
+                Ok(()) => println!("schedule cache: saved to {}", path.display()),
+                Err(e) => eprintln!("schedule cache: save to {} failed: {e}", path.display()),
+            }
+        }
+    };
     let specs = || {
         vec![
             TenantSpec::new("mlp-l", zoo::mlp_l()).with_queue_capacity(1 << 14),
@@ -201,14 +231,23 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         let rates = [2.5 / per[0], 0.1 / per[1], 0.1 / per[2]];
         let arrivals = poisson_trace(&rates, (n as f64 / 2.5) * per[0], 0xF11C0);
         println!("trace: {} arrivals (heavy mlp-l at 2.5x slice capacity)\n", arrivals.len());
-        let sc = Scenario { platform, base, tenants, arrivals };
-        let policy = PolicyConfig::calibrated(per[0]);
+        let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None };
+        let mut policy = PolicyConfig::calibrated(per[0]);
+        if !preempt {
+            policy = policy.without_preemption();
+        }
         for strat in
             [Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)]
         {
-            println!("{}", simulate(&sc, &strat, &cache).summary());
+            let rep = simulate(&sc, &strat, &cache);
+            println!("{}", rep.summary());
+            for (t, h) in sc.tenants.iter().zip(&rep.histograms) {
+                println!("    {:<9} p50 {:.3e} s  p95 {:.3e} s  p99 {:.3e} s",
+                    t.name, h.p50(), h.p95(), h.p99());
+            }
         }
         println!("schedule cache: {}", cache.stats());
+        save_cache(&cache);
         return;
     }
 
@@ -225,6 +264,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             epoch_s: epoch_ms / 1e3,
             max_weight: 8,
             min_backlog_factor: 5.0,
+            preempt_margin_factor: if preempt { 1.0 } else { f64::INFINITY },
         },
         timescale,
         max_sleep: Duration::from_millis(100),
@@ -254,10 +294,14 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         let rejected = producer.join().expect("producer panicked");
         println!("composition at end:   {:?}", sched.composition());
         println!("{}", report.summary());
+        for t in &report.tenants {
+            println!("  {:<9} p99 wall latency {:.3e} s", t.name, t.p99_s());
+        }
         if rejected > 0 {
             println!("admission control rejected {rejected} requests");
         }
     });
+    save_cache(&cache);
 }
 
 fn main() {

@@ -1,5 +1,5 @@
 //! Schedule cache: memoized two-stage DSE results keyed on
-//! `(FilcoConfig, Dag)`.
+//! `(FilcoConfig, Dag)`, persistable to disk.
 //!
 //! Live re-composition changes each tenant's fabric slice every policy
 //! epoch, but the set of distinct `(slice config, tenant DAG)` pairs a
@@ -8,29 +8,86 @@
 //! never runs on the re-partition hot path after the first time a
 //! composition is seen: a repartition into a previously-seen shape is a
 //! hash lookup (~ns) instead of a DSE run (~ms–s).
+//!
+//! Entries carry the steppable [`LayerStep`] timeline alongside the raw
+//! [`Schedule`], so the serving layer can drive batches layer-by-layer
+//! (preemption at step boundaries) without recomputing the view.
+//!
+//! [`Self::save_to`] / [`Self::load_from`] serialize the whole table
+//! through [`crate::util::json`] (deterministic key order), so a
+//! restarted serving process warms from disk instead of re-running the
+//! GA/MILP for every composition it had already seen.
 
-use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use std::collections::{BTreeMap, HashMap};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::arch::FilcoConfig;
-use crate::dse::{self, Schedule, Solver};
+use crate::arch::{Features, FilcoConfig};
+use crate::dse::{self, Schedule, ScheduleEntry, Solver};
 use crate::platform::Platform;
+use crate::util::json::Json;
 use crate::workload::Dag;
+
+/// Stable 64-bit FNV-1a. Fingerprints are persisted to disk by the
+/// cache (and must match after restarts on any toolchain), so they
+/// cannot use std's `DefaultHasher`, whose algorithm is explicitly not
+/// guaranteed across Rust releases.
+struct StableHasher(u64);
+
+impl StableHasher {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.bytes(&x.to_le_bytes());
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    /// Length-prefixed so concatenated strings can't collide.
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
 
 /// Structural fingerprint of a DAG: name, layer names/shapes and edges.
 /// Two DAGs with the same fingerprint get the same schedule.
 pub fn dag_fingerprint(dag: &Dag) -> u64 {
-    let mut h = DefaultHasher::new();
-    dag.name.hash(&mut h);
-    dag.layers.len().hash(&mut h);
+    let mut h = StableHasher::new();
+    h.str(&dag.name);
+    h.u64(dag.layers.len() as u64);
     for l in &dag.layers {
-        l.name.hash(&mut h);
-        l.shape.hash(&mut h);
+        h.str(&l.name);
+        h.u32(l.shape.batch);
+        h.u32(l.shape.m);
+        h.u32(l.shape.k);
+        h.u32(l.shape.n);
     }
-    dag.edges.hash(&mut h);
+    h.u64(dag.edges.len() as u64);
+    for &(a, b) in &dag.edges {
+        h.u64(a as u64);
+        h.u64(b as u64);
+    }
     h.finish()
 }
 
@@ -39,22 +96,22 @@ pub fn dag_fingerprint(dag: &Dag) -> u64 {
 /// etc.), so the key must not assume one cache == one platform. Fields
 /// are hashed directly — no allocation on the lookup hot path.
 fn platform_fingerprint(p: &Platform) -> u64 {
-    let mut h = DefaultHasher::new();
-    p.name.hash(&mut h);
-    p.aie_tiles.hash(&mut h);
-    p.aie_ghz.to_bits().hash(&mut h);
-    p.aie_macs_per_cycle.hash(&mut h);
-    p.aie_local_bytes.hash(&mut h);
-    p.aie_pm_bytes.hash(&mut h);
-    p.pl_mhz.to_bits().hash(&mut h);
-    p.pl_sram_bytes.hash(&mut h);
-    p.plio_bits.hash(&mut h);
-    p.plio_ports.hash(&mut h);
-    p.ddr.peak_bytes_per_sec.to_bits().hash(&mut h);
-    p.ddr.txn_latency_s.to_bits().hash(&mut h);
+    let mut h = StableHasher::new();
+    h.str(&p.name);
+    h.u32(p.aie_tiles);
+    h.f64(p.aie_ghz);
+    h.u32(p.aie_macs_per_cycle);
+    h.u64(p.aie_local_bytes);
+    h.u64(p.aie_pm_bytes);
+    h.f64(p.pl_mhz);
+    h.u64(p.pl_sram_bytes);
+    h.u32(p.plio_bits);
+    h.u32(p.plio_ports);
+    h.f64(p.ddr.peak_bytes_per_sec);
+    h.f64(p.ddr.txn_latency_s);
     for &(burst, frac) in &p.ddr.efficiency_points {
-        burst.hash(&mut h);
-        frac.to_bits().hash(&mut h);
+        h.u64(burst);
+        h.f64(frac);
     }
     h.finish()
 }
@@ -73,6 +130,27 @@ pub struct CachedSchedule {
     /// Fabric seconds one request (one DAG traversal) takes on this
     /// slice — the schedule makespan.
     pub per_request_s: f64,
+    /// Steppable timeline view of the schedule (never empty: a
+    /// degenerate entry-less schedule gets one synthetic whole-request
+    /// step so cursors always have a boundary to land on).
+    pub steps: Vec<crate::dse::LayerStep>,
+}
+
+impl CachedSchedule {
+    pub fn new(schedule: Schedule) -> Self {
+        let mut steps = schedule.steps();
+        if steps.is_empty() {
+            steps.push(crate::dse::LayerStep {
+                layer: 0,
+                mode: 0,
+                dur_s: schedule.makespan,
+                end_s: schedule.makespan,
+                fmus: 0,
+                cus: 0,
+            });
+        }
+        Self { per_request_s: schedule.makespan, steps, schedule }
+    }
 }
 
 /// Thread-safe memo table for two-stage DSE results.
@@ -123,7 +201,7 @@ impl ScheduleCache {
         // thread is the only writer; if that changes, add an in-flight
         // marker so the second caller waits instead of recomputing.
         let schedule = dse::two_stage(platform, cfg, dag, self.solver);
-        let cached = Arc::new(CachedSchedule { per_request_s: schedule.makespan, schedule });
+        let cached = Arc::new(CachedSchedule::new(schedule));
         let mut map = self.inner.lock().unwrap();
         // A racing thread may have inserted meanwhile; keep one copy.
         map.entry(key).or_insert_with(|| cached.clone()).clone()
@@ -149,6 +227,188 @@ impl ScheduleCache {
     pub fn stats(&self) -> String {
         format!("{} entries, {} hits, {} misses", self.len(), self.hits(), self.misses())
     }
+
+    // ---- persistence -----------------------------------------------------
+
+    /// Serialize every entry (key + schedule) to a JSON value. Keys are
+    /// the same `(FilcoConfig, platform fp, dag fp)` triple as the
+    /// in-memory map; fingerprints are hex strings (u64 does not fit an
+    /// f64 exactly). Deterministic: entries sorted by key.
+    pub fn to_json(&self) -> Json {
+        let map = self.inner.lock().unwrap();
+        let mut sorted: Vec<(&Key, &Arc<CachedSchedule>)> = map.iter().collect();
+        sorted.sort_by_key(|(k, _)| {
+            (
+                k.platform,
+                k.dag,
+                k.cfg.n_fmus,
+                k.cfg.m_cus,
+                k.cfg.aies_per_cu,
+                k.cfg.fmu_bytes,
+                k.cfg.cu_buf_bytes,
+                k.cfg.features.fp,
+                k.cfg.features.fmf,
+                k.cfg.features.fmv,
+            )
+        });
+        let entries: Vec<Json> = sorted
+            .into_iter()
+            .map(|(k, v)| {
+                let mut e = BTreeMap::new();
+                e.insert("cfg".to_string(), config_to_json(&k.cfg));
+                e.insert("platform".to_string(), Json::Str(format!("{:016x}", k.platform)));
+                e.insert("dag".to_string(), Json::Str(format!("{:016x}", k.dag)));
+                e.insert("makespan".to_string(), Json::Num(v.schedule.makespan));
+                e.insert(
+                    "entries".to_string(),
+                    Json::Arr(v.schedule.entries.iter().map(entry_to_json).collect()),
+                );
+                Json::Obj(e)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("version".to_string(), Json::Num(1.0));
+        root.insert("entries".to_string(), Json::Arr(entries));
+        Json::Obj(root)
+    }
+
+    /// Merge entries from a JSON value previously produced by
+    /// [`Self::to_json`]. Existing in-memory entries win on key clash.
+    /// Returns the number of entries inserted; counts as neither hits
+    /// nor misses.
+    pub fn load_json(&self, v: &Json) -> Result<usize, String> {
+        match v.get("version").and_then(Json::as_u64) {
+            Some(1) => {}
+            other => return Err(format!("unsupported schedule-cache version {other:?}")),
+        }
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing entries array".to_string())?;
+        // Parse everything before touching the map: a malformed file
+        // (e.g. truncated mid-write) must not leave the cache
+        // half-warmed from data we then report as ignored.
+        let mut parsed = Vec::with_capacity(entries.len());
+        for e in entries {
+            let cfg = config_from_json(e.get("cfg").ok_or("entry missing cfg")?)?;
+            let platform = hex_u64(e.get("platform"))?;
+            let dag = hex_u64(e.get("dag"))?;
+            let makespan =
+                e.get("makespan").and_then(Json::as_f64).ok_or("entry missing makespan")?;
+            let raw = e.get("entries").and_then(Json::as_arr).ok_or("entry missing entries")?;
+            let sched_entries = raw
+                .iter()
+                .map(entry_from_json)
+                .collect::<Result<Vec<ScheduleEntry>, String>>()?;
+            let schedule = Schedule { entries: sched_entries, makespan };
+            parsed.push((Key { cfg, platform, dag }, schedule));
+        }
+        let mut loaded = 0usize;
+        let mut map = self.inner.lock().unwrap();
+        for (key, schedule) in parsed {
+            if let std::collections::hash_map::Entry::Vacant(slot) = map.entry(key) {
+                slot.insert(Arc::new(CachedSchedule::new(schedule)));
+                loaded += 1;
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Write the cache to `path` (compact JSON). Writes a sibling temp
+    /// file and renames it into place, so a crash mid-save never leaves
+    /// a truncated cache behind.
+    pub fn save_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        std::fs::write(&tmp, self.to_json().to_string_compact())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    /// Load entries from `path`, merging into the in-memory table. A
+    /// missing file is not an error (fresh start): returns `Ok(0)`.
+    /// A malformed file is reported as `InvalidData`.
+    pub fn load_from(&self, path: &Path) -> std::io::Result<usize> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e),
+        };
+        let parsed = Json::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
+        self.load_json(&parsed)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+fn config_to_json(cfg: &FilcoConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("n_fmus".to_string(), Json::Num(cfg.n_fmus as f64));
+    m.insert("m_cus".to_string(), Json::Num(cfg.m_cus as f64));
+    m.insert("aies_per_cu".to_string(), Json::Num(cfg.aies_per_cu as f64));
+    m.insert("fmu_bytes".to_string(), Json::Num(cfg.fmu_bytes as f64));
+    m.insert("cu_buf_bytes".to_string(), Json::Num(cfg.cu_buf_bytes as f64));
+    m.insert("fp".to_string(), Json::Bool(cfg.features.fp));
+    m.insert("fmf".to_string(), Json::Bool(cfg.features.fmf));
+    m.insert("fmv".to_string(), Json::Bool(cfg.features.fmv));
+    Json::Obj(m)
+}
+
+fn config_from_json(v: &Json) -> Result<FilcoConfig, String> {
+    let u64_of = |k: &str| {
+        v.get(k).and_then(Json::as_u64).ok_or_else(|| format!("cfg missing field {k}"))
+    };
+    let bool_of = |k: &str| {
+        v.get(k).and_then(Json::as_bool).ok_or_else(|| format!("cfg missing field {k}"))
+    };
+    Ok(FilcoConfig {
+        n_fmus: u64_of("n_fmus")? as u32,
+        m_cus: u64_of("m_cus")? as u32,
+        aies_per_cu: u64_of("aies_per_cu")? as u32,
+        fmu_bytes: u64_of("fmu_bytes")?,
+        cu_buf_bytes: u64_of("cu_buf_bytes")?,
+        features: Features { fp: bool_of("fp")?, fmf: bool_of("fmf")?, fmv: bool_of("fmv")? },
+    })
+}
+
+fn entry_to_json(e: &ScheduleEntry) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("layer".to_string(), Json::Num(e.layer as f64));
+    m.insert("mode".to_string(), Json::Num(e.mode as f64));
+    m.insert("start".to_string(), Json::Num(e.start));
+    m.insert("end".to_string(), Json::Num(e.end));
+    m.insert("fmus".to_string(), Json::Arr(e.fmus.iter().map(|&f| Json::Num(f as f64)).collect()));
+    m.insert("cus".to_string(), Json::Arr(e.cus.iter().map(|&c| Json::Num(c as f64)).collect()));
+    Json::Obj(m)
+}
+
+fn entry_from_json(v: &Json) -> Result<ScheduleEntry, String> {
+    let ids = |k: &str| -> Result<Vec<u32>, String> {
+        v.get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("schedule entry missing {k}"))?
+            .iter()
+            .map(|x| x.as_u64().map(|u| u as u32).ok_or_else(|| format!("bad id in {k}")))
+            .collect()
+    };
+    Ok(ScheduleEntry {
+        layer: v.get("layer").and_then(Json::as_u64).ok_or("entry missing layer")? as usize,
+        mode: v.get("mode").and_then(Json::as_u64).ok_or("entry missing mode")? as usize,
+        start: v.get("start").and_then(Json::as_f64).ok_or("entry missing start")?,
+        end: v.get("end").and_then(Json::as_f64).ok_or("entry missing end")?,
+        fmus: ids("fmus")?,
+        cus: ids("cus")?,
+    })
+}
+
+fn hex_u64(v: Option<&Json>) -> Result<u64, String> {
+    let s = v.and_then(Json::as_str).ok_or("missing fingerprint")?;
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad fingerprint {s:?}: {e}"))
 }
 
 #[cfg(test)]
@@ -199,6 +459,49 @@ mod tests {
         assert_eq!(cache.len(), 2, "a different platform model must be a distinct entry");
         // Half the DDR bandwidth can never speed a schedule up.
         assert!(b.per_request_s >= a.per_request_s * 0.999);
+    }
+
+    #[test]
+    fn persistence_roundtrip_warms_a_fresh_cache() {
+        let p = Platform::vck190();
+        let base = FilcoConfig::default_for(&p);
+        let mut half = base.clone();
+        half.m_cus = base.m_cus / 2;
+        half.n_fmus = base.n_fmus / 2;
+        let dag = zoo::mlp_s();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        let a = cache.get_or_compute(&p, &base, &dag);
+        let b = cache.get_or_compute(&p, &half, &dag);
+
+        // Per-process name: concurrent test runs must not race on it.
+        let path = std::env::temp_dir()
+            .join(format!("filco_sched_cache_test_{}.json", std::process::id()));
+        cache.save_to(&path).expect("save");
+
+        let warm = ScheduleCache::new(ScheduleCache::serving_solver());
+        let loaded = warm.load_from(&path).expect("load");
+        assert_eq!(loaded, 2);
+        assert_eq!(warm.len(), 2);
+        // Lookups after a warm start are pure hits: the GA never runs.
+        let a2 = warm.get_or_compute(&p, &base, &dag);
+        let b2 = warm.get_or_compute(&p, &half, &dag);
+        assert_eq!((warm.hits(), warm.misses()), (2, 0));
+        assert_eq!(a2.per_request_s, a.per_request_s, "makespan must survive the roundtrip");
+        assert_eq!(b2.per_request_s, b.per_request_s);
+        assert_eq!(a2.schedule.entries.len(), a.schedule.entries.len());
+        assert_eq!(a2.steps.len(), a.steps.len());
+        assert_eq!(a2.steps.last().unwrap().end_s, a.steps.last().unwrap().end_s);
+        // Loading again merges idempotently.
+        assert_eq!(warm.load_from(&path).expect("reload"), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_missing_file_is_a_fresh_start() {
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        let path = std::env::temp_dir().join("filco_sched_cache_does_not_exist.json");
+        assert_eq!(cache.load_from(&path).expect("missing file tolerated"), 0);
+        assert!(cache.is_empty());
     }
 
     #[test]

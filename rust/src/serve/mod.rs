@@ -3,30 +3,57 @@
 //! multiple independent accelerators" exercised *online*, not as an
 //! offline what-if.
 //!
-//! Layering:
+//! # The cursor execution model
+//!
+//! FILCO's runtime parameters arrive per layer via instruction decode,
+//! so a re-composition does not have to wait for a whole DAG to drain.
+//! The serve layer therefore accounts execution as a *steppable
+//! timeline*, not an opaque per-batch blob:
+//!
+//! * a slice's cached schedule exposes per-layer
+//!   [`LayerStep`](crate::dse::LayerStep)s with cumulative offsets;
+//! * an in-flight batch is a [`BatchCursor`] walking that timeline once
+//!   per request (batch amortization applied); undisturbed, the walk
+//!   reproduces the batch-atomic closed form [`batch_fabric_s`]
+//!   bit-for-bit;
+//! * when the backlog policy re-splits the fabric, tenants whose
+//!   projected saving clears the switch-cost margin
+//!   ([`should_preempt`]) are *preempted at the next layer boundary*:
+//!   the cursor pays `switch_cost_s` mid-DAG and resumes the remaining
+//!   layers on the new slice's cached schedule. Everyone else drains
+//!   on the old composition and switches at the batch boundary.
+//!
+//! The live threaded scheduler and the virtual-time simulator share
+//! this one execution model, so simulated what-ifs and live runs agree
+//! by construction.
+//!
+//! # Layering
 //!
 //! * [`queue`] — bounded MPMC request queues with admission control
-//!   (single lock for items + closed flag).
-//! * [`tenant`] — tenant specs, the batch fabric-time model, and
-//!   deterministic Poisson / phased traffic generators.
+//!   (single lock for items + closed flag; [`PushError::Throttled`]
+//!   for fabric-time rate limits).
+//! * [`tenant`] — tenant specs (queue depth, max batch, optional
+//!   [`RateLimit`]), the [`BatchCursor`] / [`TokenBucket`] building
+//!   blocks, and deterministic Poisson / phased traffic generators.
 //! * [`cache`] — the schedule cache: two-stage DSE results memoized on
-//!   `(FilcoConfig, Dag)`, so re-partitioning never re-runs the GA/MILP
-//!   on the hot path once a composition has been seen.
+//!   `(FilcoConfig, Dag)` with their step timelines, persistable to
+//!   disk (JSON) so restarts skip the GA/MILP entirely.
 //! * [`policy`] — backlog-time → partition-weight mapping with
-//!   hysteresis; decides when a re-split pays for its switch cost.
+//!   hysteresis, plus the preemption-benefit term weighing remaining
+//!   in-flight work against the mid-DAG switch cost.
 //! * [`sim`] — deterministic virtual-time serving simulator comparing
 //!   unified time-sharing vs. a static equal split vs. dynamic
-//!   re-composition on the same trace.
+//!   re-composition (preemptive or batch-boundary) on the same trace.
 //! * [`scheduler`] — the live threaded scheduler: one worker per
-//!   tenant owning its current [`Partition`], a policy thread driving
-//!   [`Reconfigurator::split`] from observed queue depths, switch
-//!   costs charged into the per-tenant fabric-time accounting.
+//!   tenant stepping its cursor layer-by-layer, a policy thread driving
+//!   [`Reconfigurator::split`] from observed queue depths and in-flight
+//!   remaining work, preemptions landing at worker step boundaries,
+//!   switch costs charged into the per-tenant fabric-time accounting.
 //!
 //! The single-model serving leader ([`Server`]) and its building blocks
 //! ([`Servable`], [`Request`], [`RequestQueue`], [`Metrics`]) are
 //! re-exported here: the serve layer generalizes them to N tenants.
 //!
-//! [`Partition`]: crate::coordinator::reconfig::Partition
 //! [`Reconfigurator::split`]: crate::coordinator::reconfig::Reconfigurator::split
 
 pub mod cache;
@@ -40,8 +67,11 @@ pub use crate::coordinator::metrics::{LatencyHistogram, Metrics};
 pub use crate::coordinator::serving::{Request, RequestQueue, Response, Servable, Server};
 
 pub use cache::{dag_fingerprint, CachedSchedule, ScheduleCache};
-pub use policy::{backlog_weights, reduce_weights, should_resplit, PolicyConfig};
+pub use policy::{backlog_weights, reduce_weights, should_preempt, should_resplit, PolicyConfig};
 pub use queue::{BoundedQueue, PushError};
 pub use scheduler::{FabricScheduler, LiveConfig, LiveReport, LiveRequest, TenantReport};
 pub use sim::{equal_split_per_request, simulate, Scenario, ServeReport, Strategy};
-pub use tenant::{batch_fabric_s, phased_trace, poisson_trace, Arrival, TenantSpec};
+pub use tenant::{
+    batch_fabric_s, phased_trace, poisson_trace, Arrival, BatchCursor, CursorCheckpoint,
+    RateLimit, StepEvent, TenantSpec, TokenBucket,
+};

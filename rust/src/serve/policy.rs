@@ -50,11 +50,18 @@ pub struct PolicyConfig {
     /// Re-split only when total backlog time exceeds this multiple of
     /// the switch cost (hysteresis against churn at idle).
     pub min_backlog_factor: f64,
+    /// Mid-DAG preemption margin: preempt an in-flight batch at its
+    /// next layer boundary only when the projected saving — remaining
+    /// work on the old slice, minus remaining work re-costed on the new
+    /// slice and one switch — exceeds this multiple of the switch cost.
+    /// `f64::INFINITY` disables preemption entirely (re-compositions
+    /// then land only at batch boundaries, the pre-cursor behavior).
+    pub preempt_margin_factor: f64,
 }
 
 impl Default for PolicyConfig {
     fn default() -> Self {
-        Self { epoch_s: 0.05, max_weight: 8, min_backlog_factor: 50.0 }
+        Self { epoch_s: 0.05, max_weight: 8, min_backlog_factor: 50.0, preempt_margin_factor: 1.0 }
     }
 }
 
@@ -64,7 +71,24 @@ impl PolicyConfig {
     /// The single source of the constants behind every calibrated
     /// scenario (example, bench, CLI `--mode sim`, acceptance test).
     pub fn calibrated(per_request_s: f64) -> Self {
-        Self { epoch_s: 10.0 * per_request_s, max_weight: 8, min_backlog_factor: 5.0 }
+        Self {
+            epoch_s: 10.0 * per_request_s,
+            max_weight: 8,
+            min_backlog_factor: 5.0,
+            preempt_margin_factor: 1.0,
+        }
+    }
+
+    /// Same policy with mid-DAG preemption disabled: re-compositions
+    /// apply only to batches that start after them.
+    pub fn without_preemption(mut self) -> Self {
+        self.preempt_margin_factor = f64::INFINITY;
+        self
+    }
+
+    /// Is mid-DAG preemption enabled at all?
+    pub fn preemption_enabled(&self) -> bool {
+        self.preempt_margin_factor.is_finite()
     }
 }
 
@@ -86,6 +110,30 @@ pub fn should_resplit(
     }
     let equalizes = proposed.windows(2).all(|w| w[0] == w[1]);
     equalizes || total_backlog_s > cfg.min_backlog_factor * switch_cost_s
+}
+
+/// The preemption-benefit term: should an *in-flight* batch be
+/// interrupted at its next layer boundary when the fabric re-splits?
+///
+/// `remaining_old_s` is the work left if the batch drains on its
+/// current slice; `remaining_new_s` the same steps re-costed on the new
+/// slice. Preempting pays one mid-DAG `switch_cost_s`, so it only wins
+/// when the re-costing saves more than the switch — by at least
+/// `preempt_margin_factor` switches' worth of margin. A shrinking slice
+/// (`remaining_new_s > remaining_old_s`) therefore always declines and
+/// drains on the old composition, and inflating the switch cost above
+/// the outstanding work makes every tenant decline.
+pub fn should_preempt(
+    remaining_old_s: f64,
+    remaining_new_s: f64,
+    switch_cost_s: f64,
+    cfg: &PolicyConfig,
+) -> bool {
+    if !cfg.preemption_enabled() {
+        return false;
+    }
+    remaining_old_s - (remaining_new_s + switch_cost_s)
+        > cfg.preempt_margin_factor * switch_cost_s
 }
 
 #[cfg(test)]
@@ -126,6 +174,24 @@ mod tests {
         assert!(!should_resplit(&cur, &new, 1e-6, 1e-6, &cfg));
         // Proportionally identical: hold regardless.
         assert!(!should_resplit(&[2, 2, 2], &[1, 1, 1], 1.0, 1e-6, &cfg));
+    }
+
+    #[test]
+    fn preemption_weighs_remaining_work_against_switch_cost() {
+        let cfg = PolicyConfig { preempt_margin_factor: 1.0, ..PolicyConfig::default() };
+        let sw = 1e-6;
+        // Big saving: preempt.
+        assert!(should_preempt(1.0, 0.3, sw, &cfg));
+        // Shrinking slice: never preempt.
+        assert!(!should_preempt(0.3, 1.0, sw, &cfg));
+        // Switch cost inflated above the outstanding work: decline.
+        assert!(!should_preempt(1.0, 0.3, 0.5, &cfg));
+        // Saving must clear the margin, not just break even.
+        assert!(!should_preempt(1.0, 1.0 - 1.5 * sw, sw, &cfg));
+        // Disabled policy never preempts, whatever the numbers.
+        let off = cfg.without_preemption();
+        assert!(!off.preemption_enabled());
+        assert!(!should_preempt(1e9, 0.0, sw, &off));
     }
 
     #[test]

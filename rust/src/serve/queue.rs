@@ -18,6 +18,9 @@ pub enum PushError {
     Full,
     /// Queue was closed; no new work is accepted.
     Closed,
+    /// The tenant's fabric-time token bucket is empty — its share of
+    /// fabric time is exhausted even though the queue has room.
+    Throttled,
 }
 
 impl std::fmt::Display for PushError {
@@ -25,6 +28,7 @@ impl std::fmt::Display for PushError {
         match self {
             PushError::Full => write!(f, "queue full"),
             PushError::Closed => write!(f, "queue closed"),
+            PushError::Throttled => write!(f, "fabric-time share exhausted"),
         }
     }
 }

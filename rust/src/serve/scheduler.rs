@@ -1,17 +1,23 @@
-//! Live multi-tenant fabric scheduler: real threads, real queues.
+//! Live multi-tenant fabric scheduler: real threads, real queues,
+//! layer-granular preemption.
 //!
 //! One worker thread per tenant, each owning that tenant's current
 //! fabric [`Partition`](crate::coordinator::reconfig::Partition) and
-//! draining its bounded queue in batches; a policy thread that
-//! periodically observes queue depths and re-splits the fabric through
-//! the [`Reconfigurator`], resolving the new slices' schedules through
-//! the [`ScheduleCache`] so the DSE never runs on the hot path after a
-//! composition has been seen once.
+//! draining its bounded queue in batches. Batches execute through a
+//! [`BatchCursor`]: the worker retires one layer step at a time,
+//! charging each step's fabric seconds as it goes, and checks the
+//! tenant's preemption generation between steps — so when the policy
+//! thread re-splits the fabric through the
+//! [`Reconfigurator`], the switch lands at the *next layer boundary* of
+//! an in-flight batch (the remaining layers resume on the new slice's
+//! cached schedule) instead of waiting for the whole DAG to drain.
+//! Schedules resolve through the [`ScheduleCache`] so the DSE never
+//! runs on the hot path after a composition has been seen once.
 //!
 //! Fabric time is *accounted* (the modelled VCK190 is not attached);
 //! `timescale` optionally paces workers by sleeping a scaled-down
-//! multiple of the fabric time so queue depths — and therefore the
-//! policy — behave like they would on hardware.
+//! multiple of each step's fabric time so queue depths — and therefore
+//! the policy — behave like they would on hardware.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -22,10 +28,10 @@ use crate::coordinator::metrics::LatencyHistogram;
 use crate::coordinator::reconfig::Reconfigurator;
 use crate::platform::Platform;
 
-use super::cache::ScheduleCache;
-use super::policy::{backlog_weights, should_resplit, PolicyConfig};
+use super::cache::{CachedSchedule, ScheduleCache};
+use super::policy::{backlog_weights, should_preempt, should_resplit, PolicyConfig};
 use super::queue::{BoundedQueue, PushError};
-use super::tenant::{batch_fabric_s, TenantSpec};
+use super::tenant::{BatchCursor, TenantSpec, TokenBucket};
 
 /// Live-mode knobs.
 #[derive(Debug, Clone)]
@@ -62,11 +68,17 @@ impl LiveRequest {
 }
 
 /// The slice a tenant's worker currently runs on.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 struct Plan {
     fmus: u32,
     cus: u32,
-    per_request_s: f64,
+    sched: Arc<CachedSchedule>,
+}
+
+impl Plan {
+    fn per_request_s(&self) -> f64 {
+        self.sched.per_request_s
+    }
 }
 
 struct TenantRuntime {
@@ -74,10 +86,29 @@ struct TenantRuntime {
     queue: BoundedQueue<LiveRequest>,
     plan: Mutex<Plan>,
     hist: Mutex<LatencyHistogram>,
-    /// Fabric seconds this tenant's slice has consumed (batches +
+    /// Fabric seconds this tenant's slice has consumed (layer steps +
     /// switch charges).
     fabric_s: Mutex<f64>,
     served: AtomicU64,
+    /// Admission token bucket (fabric-time share), if configured.
+    bucket: Option<Mutex<TokenBucket>>,
+    /// Bumped by the policy thread when an approved preemption should
+    /// land at the worker's next layer boundary.
+    preempt_gen: AtomicU64,
+    /// Worker-published estimate of the in-flight batch's remaining
+    /// fabric seconds (f64 bits; 0 when idle) — the policy's
+    /// preemption-benefit signal.
+    inflight_remaining: AtomicU64,
+}
+
+impl TenantRuntime {
+    fn inflight_remaining_s(&self) -> f64 {
+        f64::from_bits(self.inflight_remaining.load(Ordering::Relaxed))
+    }
+
+    fn publish_remaining(&self, remaining_s: f64) {
+        self.inflight_remaining.store(remaining_s.to_bits(), Ordering::Relaxed);
+    }
 }
 
 /// Per-tenant outcome of a live run.
@@ -85,8 +116,16 @@ struct TenantRuntime {
 pub struct TenantReport {
     pub name: String,
     pub served: u64,
+    pub throttled: u64,
     pub fabric_s: f64,
     pub wall_latency: LatencyHistogram,
+}
+
+impl TenantReport {
+    /// Tail wall-clock latency (p99) of this tenant's served requests.
+    pub fn p99_s(&self) -> f64 {
+        self.wall_latency.p99()
+    }
 }
 
 /// Outcome of a live run.
@@ -95,6 +134,8 @@ pub struct LiveReport {
     pub tenants: Vec<TenantReport>,
     /// Re-compositions performed (setup split excluded).
     pub switches: u64,
+    /// In-flight batches preempted at a layer boundary.
+    pub preemptions: u64,
     /// Schedule-cache activity during this run only (the cache may be
     /// shared with calibration or simulation phases).
     pub cache_hits: u64,
@@ -107,20 +148,32 @@ impl LiveReport {
         self.tenants.iter().map(|t| t.served).sum()
     }
 
+    /// Worst per-tenant p99 wall latency.
+    pub fn worst_p99_s(&self) -> f64 {
+        self.tenants.iter().map(|t| t.p99_s()).fold(0.0, f64::max)
+    }
+
     pub fn summary(&self) -> String {
         let mut s = String::new();
         for t in &self.tenants {
             s.push_str(&format!(
-                "  {:<10} served {:>6}  fabric {:.4e} s  wall {}\n",
+                "  {:<10} served {:>6}  throttled {:>4}  fabric {:.4e} s  wall {}\n",
                 t.name,
                 t.served,
+                t.throttled,
                 t.fabric_s,
                 t.wall_latency.summary()
             ));
         }
         s.push_str(&format!(
-            "  {} re-compositions | schedule cache: {} hits, {} misses | {:.2} s wall",
-            self.switches, self.cache_hits, self.cache_misses, self.wall_s
+            "  {} re-compositions ({} preemptive) | worst p99 {:.3e} s | \
+             schedule cache: {} hits, {} misses | {:.2} s wall",
+            self.switches,
+            self.preemptions,
+            self.worst_p99_s(),
+            self.cache_hits,
+            self.cache_misses,
+            self.wall_s
         ));
         s
     }
@@ -135,8 +188,14 @@ pub struct FabricScheduler {
     recon: Mutex<Reconfigurator>,
     weights: Mutex<Vec<u32>>,
     tenants: Vec<TenantRuntime>,
+    /// Token-bucket clock origin.
+    t0: Instant,
     /// Re-compositions after setup.
     switches: AtomicU64,
+    /// Approved mid-DAG preemptions landed by workers.
+    preemptions: AtomicU64,
+    /// Bucket refusals per tenant index.
+    throttled: Vec<AtomicU64>,
     stop_policy: AtomicBool,
 }
 
@@ -160,6 +219,7 @@ impl FabricScheduler {
             specs.iter().zip(&weights).map(|(s, &w)| (s.name.as_str(), w)).collect();
         let parts = recon.split(&named)?;
         recon.validate()?;
+        let throttled = specs.iter().map(|_| AtomicU64::new(0)).collect();
         let tenants = specs
             .into_iter()
             .zip(&parts)
@@ -172,11 +232,14 @@ impl FabricScheduler {
                     plan: Mutex::new(Plan {
                         fmus: part.n_fmus(),
                         cus: part.m_cus(),
-                        per_request_s: cached.per_request_s,
+                        sched: cached,
                     }),
                     hist: Mutex::new(LatencyHistogram::new()),
                     fabric_s: Mutex::new(0.0),
                     served: AtomicU64::new(0),
+                    bucket: spec.rate_limit.map(|rl| Mutex::new(TokenBucket::from_limit(rl))),
+                    preempt_gen: AtomicU64::new(0),
+                    inflight_remaining: AtomicU64::new(0.0f64.to_bits()),
                     spec,
                 }
             })
@@ -189,7 +252,10 @@ impl FabricScheduler {
             recon: Mutex::new(recon),
             weights: Mutex::new(weights),
             tenants,
+            t0: Instant::now(),
             switches: AtomicU64::new(0),
+            preemptions: AtomicU64::new(0),
+            throttled,
             stop_policy: AtomicBool::new(false),
         })
     }
@@ -198,9 +264,40 @@ impl FabricScheduler {
         self.tenants.len()
     }
 
-    /// Admission-controlled enqueue for tenant `t`.
+    /// Admission-controlled enqueue for tenant `t`: closed check, then
+    /// queue depth, then the tenant's fabric-time token bucket (charged
+    /// the request's estimated cost on the current slice) — the same
+    /// classification order as the simulator's ingest, so a
+    /// full-queue-and-empty-bucket request counts as `Full` in both
+    /// paths. Tokens taken for a request the queue then refuses in a
+    /// concurrent-drain race are refunded.
     pub fn push(&self, t: usize, req: LiveRequest) -> Result<(), PushError> {
-        self.tenants[t].queue.try_push(req)
+        let tr = &self.tenants[t];
+        if tr.queue.is_closed() {
+            return Err(PushError::Closed);
+        }
+        if tr.queue.len() >= tr.queue.capacity() {
+            return Err(PushError::Full);
+        }
+        let cost = match &tr.bucket {
+            None => 0.0,
+            Some(b) => {
+                let cost = tr.plan.lock().unwrap().per_request_s();
+                let now_s = self.t0.elapsed().as_secs_f64();
+                if !b.lock().unwrap().try_take(cost, now_s) {
+                    self.throttled[t].fetch_add(1, Ordering::Relaxed);
+                    return Err(PushError::Throttled);
+                }
+                cost
+            }
+        };
+        let pushed = tr.queue.try_push(req);
+        if pushed.is_err() && cost > 0.0 {
+            if let Some(b) = &tr.bucket {
+                b.lock().unwrap().refund(cost);
+            }
+        }
+        pushed
     }
 
     /// Close every tenant queue; workers exit once drained.
@@ -221,6 +318,17 @@ impl FabricScheduler {
             .collect()
     }
 
+    fn pace(&self, fabric_dur_s: f64) {
+        if self.cfg.timescale > 0.0 {
+            // Clamp before Duration conversion: an extreme timescale
+            // (inf/NaN overflow) must not panic the worker.
+            let secs = (fabric_dur_s * self.cfg.timescale)
+                .min(self.cfg.max_sleep.as_secs_f64())
+                .max(0.0);
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+    }
+
     fn worker(&self, i: usize) {
         let t = &self.tenants[i];
         loop {
@@ -229,19 +337,37 @@ impl FabricScheduler {
                 break; // closed and drained
             };
             if batch.is_empty() {
-                continue; // timeout — re-read plan, check for close
+                continue; // timeout — check for close, re-observe plan
             }
-            let plan = t.plan.lock().unwrap().clone();
-            let dur = batch_fabric_s(plan.per_request_s, batch.len());
-            *t.fabric_s.lock().unwrap() += dur;
-            if self.cfg.timescale > 0.0 {
-                // Clamp before Duration conversion: an extreme timescale
-                // (inf/NaN overflow) must not panic the worker.
-                let secs = (dur * self.cfg.timescale)
-                    .min(self.cfg.max_sleep.as_secs_f64())
-                    .max(0.0);
-                std::thread::sleep(Duration::from_secs_f64(secs));
+            let (mut cursor, mut seen_gen) = {
+                let p = t.plan.lock().unwrap();
+                let g = t.preempt_gen.load(Ordering::Acquire);
+                (BatchCursor::new(p.sched.clone(), batch.len()), g)
+            };
+            t.publish_remaining(cursor.remaining_s());
+            // Retire the batch one layer step at a time; between steps,
+            // an approved preemption re-bases the remaining steps onto
+            // the slice the policy just assigned us.
+            while let Some(ev) = cursor.advance() {
+                *t.fabric_s.lock().unwrap() += ev.dur_s;
+                self.pace(ev.dur_s);
+                t.publish_remaining(cursor.remaining_s());
+                let cur_gen = t.preempt_gen.load(Ordering::Acquire);
+                if cur_gen != seen_gen {
+                    seen_gen = cur_gen;
+                    if !cursor.is_done() {
+                        let sched = t.plan.lock().unwrap().sched.clone();
+                        // The mid-DAG switch cost is charged by
+                        // policy_step into fabric_s (exactly once per
+                        // tenant per re-split); the cursor only
+                        // re-bases the remaining layers.
+                        cursor.retarget(sched, 0.0);
+                        self.preemptions.fetch_add(1, Ordering::Relaxed);
+                        t.publish_remaining(cursor.remaining_s());
+                    }
+                }
             }
+            t.publish_remaining(0.0);
             let mut hist = t.hist.lock().unwrap();
             for req in &batch {
                 hist.record(req.enqueued.elapsed().as_secs_f64());
@@ -251,16 +377,24 @@ impl FabricScheduler {
         }
     }
 
-    /// One policy evaluation: observe backlog, re-split if warranted.
+    /// One policy evaluation: observe backlog (queued work, plus
+    /// in-flight remaining work when preemption is enabled), re-split
+    /// if warranted, and approve per-tenant mid-DAG preemptions whose
+    /// projected saving clears the switch-cost margin.
     /// Public so step-driven callers (and tests) can run it without the
     /// wall-clock loop.
     pub fn policy_step(&self) -> bool {
+        let preempt_on = self.cfg.policy.preemption_enabled();
+        let per_req: Vec<f64> =
+            self.tenants.iter().map(|t| t.plan.lock().unwrap().per_request_s()).collect();
         let backlog: Vec<f64> = self
             .tenants
             .iter()
-            .map(|t| {
-                let depth = t.queue.len() as f64;
-                depth * t.plan.lock().unwrap().per_request_s
+            .zip(&per_req)
+            .map(|(t, &per)| {
+                let queued = t.queue.len() as f64 * per;
+                let inflight = if preempt_on { t.inflight_remaining_s() } else { 0.0 };
+                queued + inflight
             })
             .collect();
         let total: f64 = backlog.iter().sum();
@@ -286,14 +420,29 @@ impl FabricScheduler {
         };
         debug_assert!(recon.validate().is_ok());
         let switch_cost = recon.switch_cost_s();
-        for (t, part) in self.tenants.iter().zip(&parts) {
+        for ((t, part), &old_per) in self.tenants.iter().zip(&parts).zip(&per_req) {
             let slice = part.config(&self.base);
             let cached = self.cache.get_or_compute(&self.platform, &slice, &t.spec.dag);
-            *t.plan.lock().unwrap() = Plan {
-                fmus: part.n_fmus(),
-                cus: part.m_cus(),
-                per_request_s: cached.per_request_s,
-            };
+            let new_per = cached.per_request_s;
+            {
+                // Plan write and preemption-generation bump happen under
+                // one lock hold: a worker snapshots (plan, gen) under the
+                // same lock, so it can never pair the new schedule with a
+                // stale generation and count a phantom preemption.
+                let mut plan = t.plan.lock().unwrap();
+                *plan = Plan { fmus: part.n_fmus(), cus: part.m_cus(), sched: cached };
+                // Preemption-benefit term: interrupt the in-flight batch
+                // at its next layer boundary only when re-costing the
+                // rest on the new slice beats draining on the old one.
+                let rem_old = t.inflight_remaining_s();
+                if preempt_on && rem_old > 0.0 {
+                    let rem_new =
+                        if old_per > 0.0 { rem_old * (new_per / old_per) } else { rem_old };
+                    if should_preempt(rem_old, rem_new, switch_cost, &self.cfg.policy) {
+                        t.preempt_gen.fetch_add(1, Ordering::Release);
+                    }
+                }
+            }
             *t.fabric_s.lock().unwrap() += switch_cost;
         }
         *weights = proposed;
@@ -345,14 +494,17 @@ impl FabricScheduler {
             tenants: self
                 .tenants
                 .iter()
-                .map(|t| TenantReport {
+                .enumerate()
+                .map(|(i, t)| TenantReport {
                     name: t.spec.name.clone(),
                     served: t.served.load(Ordering::Relaxed),
+                    throttled: self.throttled[i].load(Ordering::Relaxed),
                     fabric_s: *t.fabric_s.lock().unwrap(),
                     wall_latency: t.hist.lock().unwrap().clone(),
                 })
                 .collect(),
             switches: self.switches.load(Ordering::Relaxed),
+            preemptions: self.preemptions.load(Ordering::Relaxed),
             cache_hits: self.cache.hits() - hits0,
             cache_misses: self.cache.misses() - misses0,
             wall_s: t0.elapsed().as_secs_f64(),
@@ -393,6 +545,7 @@ mod tests {
         assert_eq!(report.tenants[0].served, 100);
         assert!(report.tenants[0].fabric_s > 0.0);
         assert_eq!(report.tenants[0].wall_latency.count(), 100);
+        assert!(report.worst_p99_s() >= report.tenants[0].p99_s());
     }
 
     #[test]
@@ -413,6 +566,45 @@ mod tests {
     }
 
     #[test]
+    fn token_bucket_throttles_pushes() {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let cache = Arc::new(ScheduleCache::new(tiny_solver()));
+        // Measure the equal-split per-request cost, then allow tenant a
+        // a burst of exactly 3 requests and essentially no refill.
+        let probe = vec![
+            TenantSpec::new("a", zoo::mlp_s()),
+            TenantSpec::new("b", zoo::mlp_s()),
+        ];
+        let per =
+            crate::serve::equal_split_per_request(&platform, &base, &probe, &cache)[0];
+        // 3.5x: mid-bucket headroom keeps the pass/throttle boundary
+        // away from f64 rounding of repeated same-cost takes.
+        let specs = vec![
+            TenantSpec::new("a", zoo::mlp_s()).with_fabric_share(1e-12, 3.5 * per),
+            TenantSpec::new("b", zoo::mlp_s()),
+        ];
+        let sched =
+            FabricScheduler::new(platform, base, specs, cache, LiveConfig::default()).unwrap();
+        let mut throttled = 0;
+        for i in 0..6 {
+            match sched.push(0, LiveRequest::new(i)) {
+                Ok(()) => {}
+                Err(PushError::Throttled) => throttled += 1,
+                Err(e) => panic!("unexpected push error {e}"),
+            }
+        }
+        assert_eq!(throttled, 3, "burst of 3 requests' fabric time, then throttle");
+        // The unlimited tenant is unaffected.
+        sched.push(1, LiveRequest::new(99)).unwrap();
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.tenants[0].throttled, 3);
+        assert_eq!(report.tenants[0].served, 3);
+        assert_eq!(report.tenants[1].served, 1);
+    }
+
+    #[test]
     fn policy_step_resplits_under_skew() {
         let sched = scheduler(10_000);
         // Flood tenant a while workers are not yet running.
@@ -424,6 +616,8 @@ mod tests {
         let after = sched.composition();
         assert!(after[0].2 > before[0].2, "tenant a must gain CUs: {before:?} -> {after:?}");
         assert_eq!(sched.switches.load(Ordering::Relaxed), 1);
+        // No batch in flight: nothing to preempt.
+        assert_eq!(sched.preemptions.load(Ordering::Relaxed), 0);
         // An idle fabric proposes the equal split again — a shape the
         // cache has already seen, so re-splitting back is pure hits.
         loop {
@@ -438,6 +632,50 @@ mod tests {
         sched.close();
         let report = sched.run();
         assert_eq!(report.switches, 2);
+    }
+
+    #[test]
+    fn preemption_lands_at_a_layer_boundary_mid_batch() {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let cache = Arc::new(ScheduleCache::new(tiny_solver()));
+        let specs = vec![
+            TenantSpec::new("hot", zoo::mlp_s()).with_queue_capacity(10_000).with_max_batch(4096),
+            TenantSpec::new("cold", zoo::mlp_s()).with_queue_capacity(10_000),
+        ];
+        // Pace the fabric so one big batch takes ~1 s of wall time:
+        // plenty of layer boundaries for the policy thread (50 ms
+        // epochs) to land a preemption on.
+        let probe = vec![
+            TenantSpec::new("hot", zoo::mlp_s()),
+            TenantSpec::new("cold", zoo::mlp_s()),
+        ];
+        let per = crate::serve::equal_split_per_request(&platform, &base, &probe, &cache)[0];
+        let n = 400usize;
+        let batch_s = crate::serve::tenant::batch_fabric_s(per, n);
+        let cfg = LiveConfig {
+            policy: PolicyConfig {
+                epoch_s: 0.05,
+                max_weight: 8,
+                min_backlog_factor: 0.0,
+                preempt_margin_factor: 1.0,
+            },
+            timescale: 1.0 / batch_s,
+            max_sleep: Duration::from_millis(100),
+        };
+        let sched = FabricScheduler::new(platform, base, specs, cache, cfg).unwrap();
+        for i in 0..n {
+            sched.push(0, LiveRequest::new(i as u64)).unwrap();
+        }
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.total_served(), n as u64);
+        assert!(report.switches >= 1, "in-flight remaining work must trigger a re-split");
+        assert!(
+            report.preemptions >= 1,
+            "the worker must land at least one mid-batch preemption ({} switches)",
+            report.switches
+        );
     }
 
     #[test]

@@ -1,29 +1,41 @@
-//! Deterministic virtual-time serving simulator.
+//! Deterministic virtual-time serving simulator on the steppable
+//! cursor execution model.
 //!
 //! Drives the full serving data path — per-tenant bounded queues with
-//! admission control, per-partition workers with batching, the backlog
-//! re-composition policy, and the schedule cache — over a traffic trace
-//! in *fabric time*, with no threads and no wall clock. Every run is
-//! exactly reproducible, which is what the comparison harness (example,
-//! bench, acceptance test) needs to claim "dynamic strictly beats the
-//! static split".
+//! admission control (queue depth *and* optional fabric-time token
+//! buckets), per-partition workers with batching, the backlog
+//! re-composition policy with mid-DAG preemption, and the schedule
+//! cache — over a traffic trace in *fabric time*, with no threads and
+//! no wall clock. Every run is exactly reproducible, which is what the
+//! comparison harness (example, bench, acceptance tests) needs to claim
+//! "dynamic strictly beats the static split" and "preemptive strictly
+//! beats batch-boundary".
 //!
 //! Time model: each tenant's worker owns one fabric slice and serves
-//! one batch at a time; a batch of `b` requests costs
-//! [`batch_fabric_s`] of the slice's cached schedule makespan.
-//! A re-composition charges [`Reconfigurator::switch_cost_s`] to every
-//! slice (all units reprogram before their next batch).
+//! one batch at a time through a [`BatchCursor`] over the slice's
+//! cached [`LayerStep`](crate::dse::LayerStep) timeline. An undisturbed
+//! batch consumes exactly [`batch_fabric_s`] of fabric time — the
+//! pre-cursor batch-atomic accounting, bit-for-bit — so runs with
+//! preemption disabled reproduce the old simulator's makespans.
+//!
+//! A re-composition charges
+//! [`Reconfigurator::switch_cost_s`] to every slice. Idle slices and
+//! non-preempted busy slices pay it on availability (in-flight batches
+//! finish on the old composition first); a *preempted* slice lands the
+//! switch at the in-flight batch's next layer boundary and resumes the
+//! remaining layer steps on the new slice's cached schedule.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::arch::FilcoConfig;
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::coordinator::reconfig::Reconfigurator;
 use crate::platform::Platform;
 
-use super::cache::ScheduleCache;
-use super::policy::{backlog_weights, should_resplit, PolicyConfig};
-use super::tenant::{batch_fabric_s, Arrival, TenantSpec};
+use super::cache::{CachedSchedule, ScheduleCache};
+use super::policy::{backlog_weights, should_preempt, should_resplit, PolicyConfig};
+use super::tenant::{Arrival, BatchCursor, TenantSpec, TokenBucket};
 
 /// How the fabric is composed for the tenants.
 #[derive(Debug, Clone)]
@@ -32,7 +44,8 @@ pub enum Strategy {
     Unified,
     /// One equal-weight partition per tenant, fixed for the whole run.
     StaticEqual,
-    /// Live re-composition driven by the backlog policy.
+    /// Live re-composition driven by the backlog policy (mid-DAG
+    /// preemption per [`PolicyConfig::preempt_margin_factor`]).
     Dynamic(PolicyConfig),
 }
 
@@ -54,6 +67,10 @@ pub struct Scenario {
     pub tenants: Vec<TenantSpec>,
     /// Must be sorted by `t_s` (as produced by the trace generators).
     pub arrivals: Vec<Arrival>,
+    /// Override the modelled composition-switch cost (`None` keeps the
+    /// [`Reconfigurator`] default) — what-if studies on slower control
+    /// planes.
+    pub switch_cost_s: Option<f64>,
 }
 
 /// Outcome of one simulated serving run.
@@ -64,8 +81,12 @@ pub struct ServeReport {
     pub completion_s: f64,
     pub served: Vec<u64>,
     pub rejected: Vec<u64>,
+    /// Requests refused by per-tenant fabric-time token buckets.
+    pub throttled: Vec<u64>,
     /// Re-compositions performed (the setup split is not counted).
     pub switches: u64,
+    /// In-flight batches preempted at a layer boundary.
+    pub preemptions: u64,
     /// Policy epochs evaluated.
     pub epochs: u64,
     /// Per-tenant fabric latency (queueing + service).
@@ -81,6 +102,10 @@ impl ServeReport {
         self.rejected.iter().sum()
     }
 
+    pub fn total_throttled(&self) -> u64 {
+        self.throttled.iter().sum()
+    }
+
     /// Worst per-tenant p99 fabric latency.
     pub fn worst_p99_s(&self) -> f64 {
         self.histograms.iter().map(|h| h.p99()).fold(0.0, f64::max)
@@ -93,15 +118,17 @@ impl ServeReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "{:<12} completion {:.4e} s | {} served, {} rejected | {:.0} req/s | \
-             worst p99 {:.3e} s | {} switches",
+            "{:<12} completion {:.4e} s | {} served, {} rejected, {} throttled | \
+             {:.0} req/s | worst p99 {:.3e} s | {} switches, {} preemptions",
             self.strategy,
             self.completion_s,
             self.total_served(),
             self.total_rejected(),
+            self.total_throttled(),
             self.throughput_rps(),
             self.worst_p99_s(),
             self.switches,
+            self.preemptions,
         )
     }
 }
@@ -126,23 +153,36 @@ pub fn equal_split_per_request(
         .collect()
 }
 
-/// Admit arrivals up to virtual time `now` into the per-tenant queues.
+/// Admit arrivals up to virtual time `now` into the per-tenant queues:
+/// queue depth first (reject as full), then the fabric-time token
+/// bucket (throttle) — the same classification order as the live
+/// scheduler's `push`.
+#[allow(clippy::too_many_arguments)]
 fn ingest(
     arrivals: &[Arrival],
     ai: &mut usize,
     now: f64,
     pending: &mut [VecDeque<(u64, f64)>],
     rejected: &mut [u64],
+    throttled: &mut [u64],
     caps: &[usize],
+    buckets: &mut [Option<TokenBucket>],
+    per_req: &[f64],
 ) {
     while *ai < arrivals.len() && arrivals[*ai].t_s <= now {
         let a = &arrivals[*ai];
+        *ai += 1;
         if pending[a.tenant].len() >= caps[a.tenant] {
             rejected[a.tenant] += 1;
-        } else {
-            pending[a.tenant].push_back((a.id, a.t_s));
+            continue;
         }
-        *ai += 1;
+        if let Some(b) = &mut buckets[a.tenant] {
+            if !b.try_take(per_req[a.tenant], a.t_s) {
+                throttled[a.tenant] += 1;
+                continue;
+            }
+        }
+        pending[a.tenant].push_back((a.id, a.t_s));
     }
 }
 
@@ -158,23 +198,37 @@ pub fn simulate(scenario: &Scenario, strategy: &Strategy, cache: &ScheduleCache)
 fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
     let t_n = sc.tenants.len();
     let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
-    let per_req: Vec<f64> = sc
+    let scheds: Vec<Arc<CachedSchedule>> = sc
         .tenants
         .iter()
-        .map(|t| cache.get_or_compute(&sc.platform, &sc.base, &t.dag).per_request_s)
+        .map(|t| cache.get_or_compute(&sc.platform, &sc.base, &t.dag))
         .collect();
+    let per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
+    let mut buckets: Vec<Option<TokenBucket>> =
+        sc.tenants.iter().map(|t| t.rate_limit.map(TokenBucket::from_limit)).collect();
 
     let mut pending: Vec<VecDeque<(u64, f64)>> = vec![VecDeque::new(); t_n];
     let mut hist = vec![LatencyHistogram::new(); t_n];
     let mut served = vec![0u64; t_n];
     let mut rejected = vec![0u64; t_n];
+    let mut throttled = vec![0u64; t_n];
     let mut free = 0.0f64;
     let mut now = 0.0f64;
     let mut ai = 0usize;
     let mut rr = 0usize;
 
     loop {
-        ingest(&sc.arrivals, &mut ai, now, &mut pending, &mut rejected, &caps);
+        ingest(
+            &sc.arrivals,
+            &mut ai,
+            now,
+            &mut pending,
+            &mut rejected,
+            &mut throttled,
+            &caps,
+            &mut buckets,
+            &per_req,
+        );
         if free <= now {
             // The single worker picks the next non-empty tenant round-robin.
             for k in 0..t_n {
@@ -183,7 +237,10 @@ fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
                 if take == 0 {
                     continue;
                 }
-                let done = now + batch_fabric_s(per_req[t], take);
+                // One execution model everywhere: the unified worker
+                // walks the same cursor; undisturbed, the projected
+                // total is the closed-form batch time bit-for-bit.
+                let done = now + BatchCursor::new(scheds[t].clone(), take).projected_total_s();
                 for _ in 0..take {
                     let (_id, arr) = pending[t].pop_front().unwrap();
                     hist[t].record(done - arr);
@@ -212,9 +269,26 @@ fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
         completion_s: free,
         served,
         rejected,
+        throttled,
         switches: 0,
+        preemptions: 0,
         epochs: 0,
         histograms: hist,
+    }
+}
+
+/// One in-flight batch on a tenant's slice.
+struct InFlight {
+    cursor: BatchCursor,
+    start_s: f64,
+    /// Arrival times of the batch's requests (latency recording).
+    arrived: Vec<f64>,
+}
+
+impl InFlight {
+    /// Projected completion time on the cursor's current schedule.
+    fn fin_s(&self) -> f64 {
+        self.start_s + self.cursor.projected_total_s()
     }
 }
 
@@ -226,58 +300,130 @@ fn simulate_partitioned(
     let t_n = sc.tenants.len();
     let names: Vec<&str> = sc.tenants.iter().map(|t| t.name.as_str()).collect();
     let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
+    let preempt_on = policy.is_some_and(PolicyConfig::preemption_enabled);
 
     let mut recon = Reconfigurator::new(sc.base.clone());
+    if let Some(s) = sc.switch_cost_s {
+        recon.set_switch_cost_s(s);
+    }
     let mut weights: Vec<u32> = vec![1; t_n];
     let named: Vec<(&str, u32)> = names.iter().zip(&weights).map(|(&n, &w)| (n, w)).collect();
     let parts = recon.split(&named).expect("equal split");
     recon.validate().expect("equal split tiles the fabric");
     let setup_switches = recon.switches;
-    let mut per_req: Vec<f64> = parts
+    let mut scheds: Vec<Arc<CachedSchedule>> = parts
         .iter()
         .zip(&sc.tenants)
-        .map(|(part, t)| {
-            cache.get_or_compute(&sc.platform, &part.config(&sc.base), &t.dag).per_request_s
-        })
+        .map(|(part, t)| cache.get_or_compute(&sc.platform, &part.config(&sc.base), &t.dag))
         .collect();
+    let mut per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
+    let mut buckets: Vec<Option<TokenBucket>> =
+        sc.tenants.iter().map(|t| t.rate_limit.map(TokenBucket::from_limit)).collect();
 
     let mut pending: Vec<VecDeque<(u64, f64)>> = vec![VecDeque::new(); t_n];
     let mut hist = vec![LatencyHistogram::new(); t_n];
     let mut served = vec![0u64; t_n];
     let mut rejected = vec![0u64; t_n];
-    let mut free = vec![0.0f64; t_n];
+    let mut throttled = vec![0u64; t_n];
+    let mut busy: Vec<Option<InFlight>> = (0..t_n).map(|_| None).collect();
+    // Time each slice is next available for a new batch: batch
+    // completion plus any switch charges taken while busy or idle.
+    let mut avail = vec![0.0f64; t_n];
     let mut now = 0.0f64;
     let mut ai = 0usize;
     let mut epochs = 0u64;
+    let mut preemptions = 0u64;
     let mut next_epoch = policy.map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
 
     loop {
-        ingest(&sc.arrivals, &mut ai, now, &mut pending, &mut rejected, &caps);
+        ingest(
+            &sc.arrivals,
+            &mut ai,
+            now,
+            &mut pending,
+            &mut rejected,
+            &mut throttled,
+            &caps,
+            &mut buckets,
+            &per_req,
+        );
 
-        // Each tenant's worker starts its next batch if idle.
+        // Retire batches whose (projected) completion has been reached.
+        // Recording at completion: an undisturbed cursor's total is the
+        // closed-form batch time, so latencies match the batch-atomic
+        // model exactly; a preempted batch records its actual
+        // (re-costed, switch-charged) completion.
         for t in 0..t_n {
-            if free[t] > now {
+            let done = busy[t].as_ref().is_some_and(|fl| fl.fin_s() <= now);
+            if done {
+                let fl = busy[t].take().unwrap();
+                let fin = fl.fin_s();
+                for &arr in &fl.arrived {
+                    hist[t].record(fin - arr);
+                    served[t] += 1;
+                }
+            }
+        }
+
+        // Each tenant's worker starts its next batch if its slice is
+        // free.
+        for t in 0..t_n {
+            if busy[t].is_some() || avail[t] > now {
                 continue;
             }
             let take = pending[t].len().min(sc.tenants[t].max_batch);
             if take == 0 {
                 continue;
             }
-            let done = now + batch_fabric_s(per_req[t], take);
+            let mut arrived = Vec::with_capacity(take);
             for _ in 0..take {
                 let (_id, arr) = pending[t].pop_front().unwrap();
-                hist[t].record(done - arr);
-                served[t] += 1;
+                arrived.push(arr);
             }
-            free[t] = done;
+            let fl = InFlight {
+                cursor: BatchCursor::new(scheds[t].clone(), take),
+                start_s: now,
+                arrived,
+            };
+            avail[t] = fl.fin_s();
+            busy[t] = Some(fl);
         }
 
-        // Policy epoch: observe backlog, maybe re-compose.
+        // Policy epoch: observe backlog, maybe re-compose. With
+        // preemption enabled the signal includes in-flight remaining
+        // work (that work is movable); with it disabled only queued
+        // work counts — the pre-cursor behavior, preserved exactly.
         if let Some(p) = policy {
             if now >= next_epoch {
                 epochs += 1;
-                let backlog: Vec<f64> =
-                    (0..t_n).map(|t| pending[t].len() as f64 * per_req[t]).collect();
+                if preempt_on {
+                    // Sync in-flight cursors to virtual time (live
+                    // workers advance theirs continuously; the sim does
+                    // it lazily at epochs): commit the layer steps that
+                    // retired by `now`, so remaining-work signals and
+                    // preemption decisions reflect actual progress
+                    // rather than the batch-start position.
+                    for fl in busy.iter_mut().flatten() {
+                        while fl
+                            .cursor
+                            .peek_consumed_s()
+                            .is_some_and(|c| fl.start_s + c <= now)
+                        {
+                            let _ = fl.cursor.advance();
+                        }
+                    }
+                }
+                let backlog: Vec<f64> = (0..t_n)
+                    .map(|t| {
+                        let queued = pending[t].len() as f64 * per_req[t];
+                        let inflight = if preempt_on {
+                            busy[t].as_ref().map(|fl| fl.cursor.remaining_s()).unwrap_or(0.0)
+                        } else {
+                            0.0
+                        };
+                        queued + inflight
+                    })
+                    .collect();
                 let total_backlog: f64 = backlog.iter().sum();
                 let proposed = backlog_weights(&backlog, p.max_weight);
                 if should_resplit(&weights, &proposed, total_backlog, recon.switch_cost_s(), p) {
@@ -285,14 +431,55 @@ fn simulate_partitioned(
                         names.iter().zip(&proposed).map(|(&n, &w)| (n, w)).collect();
                     let parts = recon.split(&named).expect("re-split");
                     debug_assert!(recon.validate().is_ok());
+                    let switch = recon.switch_cost_s();
                     for t in 0..t_n {
                         let slice = parts[t].config(&sc.base);
-                        per_req[t] = cache
-                            .get_or_compute(&sc.platform, &slice, &sc.tenants[t].dag)
-                            .per_request_s;
-                        // In-flight batches finish on the old composition,
-                        // then every slice pays the reprogram cost.
-                        free[t] = free[t].max(now) + recon.switch_cost_s();
+                        let new_sched =
+                            cache.get_or_compute(&sc.platform, &slice, &sc.tenants[t].dag);
+                        let preempt = preempt_on
+                            && busy[t].as_ref().is_some_and(|fl| {
+                                // A potential switch lands at the next
+                                // layer boundary; everything before it
+                                // runs on the old slice either way, so
+                                // compare the paths from there. (The
+                                // in-flight step is also still counted
+                                // in `remaining_on` — at most one step
+                                // of conservative bias.) Charges parked
+                                // on `avail` by earlier re-splits are
+                                // owed on either path and excluded.
+                                let boundary_s = fl
+                                    .cursor
+                                    .peek_consumed_s()
+                                    .map_or(fl.fin_s(), |c| fl.start_s + c);
+                                let rem_old = (fl.fin_s() - boundary_s).max(0.0);
+                                let rem_new = fl.cursor.remaining_on(&new_sched);
+                                should_preempt(rem_old, rem_new, switch, p)
+                            });
+                        if preempt {
+                            // Land the switch at the next layer
+                            // boundary: steps that retired by `now`
+                            // stay on the old slice's accounting (the
+                            // epoch sync committed them), the in-flight
+                            // step finishes on it, then the cursor
+                            // re-bases onto the new schedule with the
+                            // mid-DAG switch charged.
+                            let fl = busy[t].as_mut().unwrap();
+                            // Reprogram charges from earlier re-splits
+                            // while this batch was in flight are still
+                            // owed after the re-basing.
+                            let extra = (avail[t] - fl.fin_s()).max(0.0);
+                            let _ = fl.cursor.advance();
+                            fl.cursor.retarget(new_sched.clone(), switch);
+                            avail[t] = fl.fin_s() + extra;
+                            preemptions += 1;
+                        } else {
+                            // In-flight batches finish on the old
+                            // composition, then every slice pays the
+                            // reprogram cost.
+                            avail[t] = avail[t].max(now) + switch;
+                        }
+                        per_req[t] = new_sched.per_request_s;
+                        scheds[t] = new_sched;
                     }
                     weights = proposed;
                 }
@@ -308,12 +495,23 @@ fn simulate_partitioned(
             next = next.min(sc.arrivals[ai].t_s);
         }
         let work_left = pending.iter().any(|q| !q.is_empty());
+        let inflight_left = busy.iter().any(|b| b.is_some());
         for t in 0..t_n {
             if !pending[t].is_empty() {
-                next = next.min(free[t]);
+                next = next.min(avail[t]);
             }
         }
-        if policy.is_some() && (ai < sc.arrivals.len() || work_left) {
+        if preempt_on && inflight_left {
+            // Completion events matter even with empty queues: later
+            // epochs may still preempt the in-flight work.
+            for t in 0..t_n {
+                if busy[t].is_some() {
+                    next = next.min(avail[t]);
+                }
+            }
+        }
+        let preemptible = preempt_on && inflight_left;
+        if policy.is_some() && (ai < sc.arrivals.len() || work_left || preemptible) {
             next = next.min(next_epoch);
         }
         if !next.is_finite() {
@@ -322,13 +520,27 @@ fn simulate_partitioned(
         now = next;
     }
 
+    // Retire whatever is still in flight (its completion needed no
+    // further events).
+    for t in 0..t_n {
+        if let Some(fl) = busy[t].take() {
+            let fin = fl.fin_s();
+            for &arr in &fl.arrived {
+                hist[t].record(fin - arr);
+                served[t] += 1;
+            }
+        }
+    }
+
     let label = if policy.is_some() { "dynamic" } else { "static-equal" };
     ServeReport {
         strategy: label.to_string(),
-        completion_s: free.iter().cloned().fold(0.0f64, f64::max),
+        completion_s: avail.iter().cloned().fold(0.0f64, f64::max),
         served,
         rejected,
+        throttled,
         switches: recon.switches - setup_switches,
+        preemptions,
         epochs,
         histograms: hist,
     }
@@ -338,7 +550,7 @@ fn simulate_partitioned(
 mod tests {
     use super::*;
     use crate::dse::Solver;
-    use crate::serve::tenant::poisson_trace;
+    use crate::serve::tenant::{batch_fabric_s, poisson_trace};
     use crate::workload::zoo;
 
     fn tiny_solver() -> Solver {
@@ -363,7 +575,7 @@ mod tests {
         ];
         let per = equal_split_per_request(&platform, &base, &tenants, cache)[0];
         let arrivals = poisson_trace(&[2.0 / per, 0.2 / per], duration_reqs * per, seed);
-        (Scenario { platform, base, tenants, arrivals }, per)
+        (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, per)
     }
 
     fn test_policy(per: f64) -> PolicyConfig {
@@ -376,12 +588,16 @@ mod tests {
         let (sc, per) = calibrated_scenario(&cache, 100_000, 40.0, 9);
         let n = sc.arrivals.len() as u64;
         assert!(n > 10, "calibrated trace too small: {n}");
-        for strat in
-            [Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(test_policy(per))]
-        {
+        for strat in [
+            Strategy::Unified,
+            Strategy::StaticEqual,
+            Strategy::Dynamic(test_policy(per)),
+            Strategy::Dynamic(test_policy(per).without_preemption()),
+        ] {
             let r = simulate(&sc, &strat, &cache);
             assert_eq!(r.total_served(), n, "{} dropped requests", r.strategy);
             assert_eq!(r.total_rejected(), 0);
+            assert_eq!(r.total_throttled(), 0);
             assert!(r.completion_s > 0.0);
             let hist_n: u64 = r.histograms.iter().map(|h| h.count()).sum();
             assert_eq!(hist_n, n);
@@ -399,6 +615,7 @@ mod tests {
         assert_eq!(a.completion_s, b.completion_s);
         assert_eq!(a.served, b.served);
         assert_eq!(a.switches, b.switches);
+        assert_eq!(a.preemptions, b.preemptions);
     }
 
     #[test]
@@ -410,6 +627,24 @@ mod tests {
         let r = simulate(&sc, &Strategy::StaticEqual, &cache);
         assert_eq!(r.total_served() + r.total_rejected(), 10);
         assert!(r.total_rejected() > 0, "2-deep queue must reject part of a 10-burst");
+    }
+
+    #[test]
+    fn token_bucket_throttles_fabric_share() {
+        let cache = ScheduleCache::new(tiny_solver());
+        let (mut sc, per) = calibrated_scenario(&cache, 100_000, 0.0, 15);
+        // Tenant a may burst 2 requests' worth of fabric time and then
+        // earns 10% of a slice; a 10-burst must lose most requests to
+        // the bucket while tenant b (unlimited) is untouched.
+        sc.tenants[0].rate_limit =
+            Some(crate::serve::tenant::RateLimit { fabric_share: 0.1, burst_s: 2.0 * per });
+        sc.arrivals = (0..12)
+            .map(|i| Arrival { t_s: 0.0, tenant: (i % 6 == 5) as usize, id: i })
+            .collect();
+        let r = simulate(&sc, &Strategy::StaticEqual, &cache);
+        assert_eq!(r.throttled[0], 8, "10-burst minus 2-request burst allowance");
+        assert_eq!(r.throttled[1], 0);
+        assert_eq!(r.total_served(), 4);
     }
 
     #[test]
@@ -425,5 +660,41 @@ mod tests {
         let r2 = simulate(&sc, &Strategy::Dynamic(policy), &cache);
         assert_eq!(cache.misses(), before, "second identical run must be all cache hits");
         assert_eq!(r2.completion_s, r.completion_s);
+    }
+
+    #[test]
+    fn preemption_never_loses_to_batch_boundary_switching() {
+        let cache = ScheduleCache::new(tiny_solver());
+        let (sc, per) = calibrated_scenario(&cache, 100_000, 120.0, 19);
+        let pre = simulate(&sc, &Strategy::Dynamic(test_policy(per)), &cache);
+        let bb =
+            simulate(&sc, &Strategy::Dynamic(test_policy(per).without_preemption()), &cache);
+        assert_eq!(pre.total_served(), bb.total_served());
+        assert_eq!(bb.preemptions, 0, "without_preemption must never preempt");
+        // The two runs see slightly different backlog signals, so exact
+        // dominance is not guaranteed on an arbitrary trace — but
+        // preemption must stay in the same ballpark (the crafted
+        // acceptance scenario in rust/tests asserts the strict win).
+        assert!(
+            pre.completion_s <= bb.completion_s * 1.1,
+            "preemption must not meaningfully slow completion: {:.6e} vs {:.6e}",
+            pre.completion_s,
+            bb.completion_s
+        );
+    }
+
+    #[test]
+    fn undisturbed_batch_costs_match_the_closed_form() {
+        // One tenant, one burst, static split: completion must be the
+        // closed-form batch cost chain (bit-for-bit), demonstrating the
+        // cursor model preserves the batch-atomic accounting.
+        let cache = ScheduleCache::new(tiny_solver());
+        let (mut sc, _per) = calibrated_scenario(&cache, 100_000, 0.0, 21);
+        sc.arrivals = (0..12).map(|i| Arrival { t_s: 0.0, tenant: 0, id: i }).collect();
+        sc.tenants[0] = sc.tenants[0].clone().with_max_batch(8);
+        let r = simulate(&sc, &Strategy::StaticEqual, &cache);
+        let per0 = equal_split_per_request(&sc.platform, &sc.base, &sc.tenants, &cache)[0];
+        let expect = batch_fabric_s(per0, 8) + batch_fabric_s(per0, 4);
+        assert_eq!(r.completion_s, expect, "cursor walk must equal batch-atomic accounting");
     }
 }

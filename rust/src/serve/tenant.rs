@@ -1,5 +1,11 @@
-//! Tenants and traffic: who is being served, and how requests arrive.
+//! Tenants and traffic: who is being served, how requests arrive, and
+//! the [`BatchCursor`] — the steppable per-batch execution state that
+//! replaced the old batch-atomic `batch_fabric_s` accounting in both
+//! the live scheduler and the virtual-time simulator.
 
+use std::sync::Arc;
+
+use super::cache::CachedSchedule;
 use crate::util::rng::SplitMix64;
 use crate::workload::Dag;
 
@@ -10,12 +16,292 @@ use crate::workload::Dag;
 pub const BATCH_AMORTIZATION: f64 = 0.9;
 
 /// Fabric seconds a batch of `batch` requests takes on a slice whose
-/// single-request schedule makespan is `per_request_s`.
+/// single-request schedule makespan is `per_request_s` — the closed
+/// form a [`BatchCursor`] walks incrementally. An undisturbed cursor
+/// reproduces this value bit-for-bit.
 pub fn batch_fabric_s(per_request_s: f64, batch: usize) -> f64 {
     if batch == 0 {
         return 0.0;
     }
     per_request_s * (1.0 + BATCH_AMORTIZATION * (batch - 1) as f64)
+}
+
+/// One retired layer step of an in-flight batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepEvent {
+    /// DAG layer index that retired.
+    pub layer: usize,
+    /// Candidate mode the schedule chose for it.
+    pub mode: usize,
+    /// FMUs / CUs the step occupied.
+    pub fmus: u32,
+    pub cus: u32,
+    /// Fabric seconds this step consumed.
+    pub dur_s: f64,
+    /// Total fabric seconds the batch has consumed after this step
+    /// (monotone; includes any mid-DAG switch charges).
+    pub consumed_s: f64,
+}
+
+/// Saved [`BatchCursor`] state. Resuming restores the cursor exactly
+/// (same schedule, same position, same consumed time) — losslessness is
+/// what lets a worker park an in-flight batch across a re-composition.
+#[derive(Debug, Clone)]
+pub struct CursorCheckpoint {
+    sched: Arc<CachedSchedule>,
+    batch: usize,
+    req: usize,
+    step: usize,
+    base_s: f64,
+    seg_req: usize,
+    seg_step: usize,
+    hwm_s: f64,
+}
+
+/// Steppable execution state of one batch on one fabric slice.
+///
+/// A batch of `b` requests traverses the slice's [`CachedSchedule`]
+/// timeline `b` times (requests after the first pay
+/// [`BATCH_AMORTIZATION`] of each step). The cursor yields one
+/// [`StepEvent`] per layer step and tracks consumed fabric time in
+/// closed form against the schedule's cumulative offsets, so:
+///
+/// * an undisturbed run consumes exactly [`batch_fabric_s`] — the
+///   pre-cursor batch-atomic accounting, bit-for-bit;
+/// * [`Self::retarget`] re-bases the *remaining* steps onto a different
+///   slice's schedule at a layer boundary (mid-DAG preemption),
+///   optionally charging the reconfiguration switch cost into the
+///   batch's timeline;
+/// * [`Self::checkpoint`] / [`Self::resume`] park and restore the state
+///   losslessly.
+#[derive(Debug, Clone)]
+pub struct BatchCursor {
+    sched: Arc<CachedSchedule>,
+    batch: usize,
+    /// Requests fully retired.
+    req: usize,
+    /// Steps retired within the current request.
+    step: usize,
+    /// Fabric time consumed before the current segment began (earlier
+    /// segments on previous schedules, plus mid-DAG switch charges).
+    base_s: f64,
+    /// Position at which the current segment began.
+    seg_req: usize,
+    seg_step: usize,
+    /// High-water mark on emitted consumed values (guards monotonicity
+    /// across the per-request closed-form seams).
+    hwm_s: f64,
+}
+
+impl BatchCursor {
+    pub fn new(sched: Arc<CachedSchedule>, batch: usize) -> Self {
+        Self { sched, batch, req: 0, step: 0, base_s: 0.0, seg_req: 0, seg_step: 0, hwm_s: 0.0 }
+    }
+
+    /// Closed-form fabric time from batch start to position `(req,
+    /// step)` under schedule `sched`: completed requests at the
+    /// batch-amortized rate, plus the current request's progress scaled
+    /// by its amortization factor.
+    fn elapsed_for(sched: &CachedSchedule, batch: usize, req: usize, step: usize) -> f64 {
+        let done = req.min(batch);
+        let scale = if done == 0 { 1.0 } else { BATCH_AMORTIZATION };
+        let within = if step == 0 {
+            0.0
+        } else {
+            sched.steps[(step - 1).min(sched.steps.len() - 1)].end_s
+        };
+        batch_fabric_s(sched.per_request_s, done) + scale * within
+    }
+
+    fn elapsed_at(&self, req: usize, step: usize) -> f64 {
+        Self::elapsed_for(&self.sched, self.batch, req, step)
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.req >= self.batch
+    }
+
+    pub fn requests_completed(&self) -> usize {
+        self.req.min(self.batch)
+    }
+
+    /// Layer steps per request on the current schedule.
+    pub fn steps_per_request(&self) -> usize {
+        self.sched.steps.len()
+    }
+
+    /// Fabric seconds consumed so far (monotone; includes charges).
+    pub fn consumed_s(&self) -> f64 {
+        let raw =
+            self.base_s + (self.elapsed_at(self.req, self.step)
+                - self.elapsed_at(self.seg_req, self.seg_step));
+        raw.max(self.hwm_s)
+    }
+
+    /// Total fabric seconds the batch will have consumed at completion
+    /// if it stays on the current schedule.
+    pub fn projected_total_s(&self) -> f64 {
+        let total = self.base_s
+            + (self.elapsed_at(self.batch, 0) - self.elapsed_at(self.seg_req, self.seg_step));
+        total.max(self.hwm_s)
+    }
+
+    /// Fabric seconds left on the current schedule.
+    pub fn remaining_s(&self) -> f64 {
+        (self.projected_total_s() - self.consumed_s()).max(0.0)
+    }
+
+    /// Fabric seconds the remaining steps would take if re-based onto
+    /// `sched` at the current boundary (what the preemption policy
+    /// weighs against the switch cost).
+    pub fn remaining_on(&self, sched: &CachedSchedule) -> f64 {
+        let l = sched.steps.len();
+        let step = self.step.min(l);
+        let here = Self::elapsed_for(sched, self.batch, self.req, step);
+        let end = Self::elapsed_for(sched, self.batch, self.batch, 0);
+        (end - here).max(0.0)
+    }
+
+    /// Consumed total after the next step retires, without committing
+    /// it (`None` when the batch is done) — lets callers find the next
+    /// layer boundary before deciding to land a preemption there.
+    pub fn peek_consumed_s(&self) -> Option<f64> {
+        let mut probe = self.clone();
+        probe.advance().map(|ev| ev.consumed_s)
+    }
+
+    /// Retire the next layer step. Returns `None` once every request in
+    /// the batch has traversed the whole timeline.
+    pub fn advance(&mut self) -> Option<StepEvent> {
+        if self.is_done() {
+            return None;
+        }
+        let l = self.sched.steps.len();
+        let cur = self.sched.steps[self.step.min(l - 1)];
+        let before = self.consumed_s();
+        if self.step + 1 >= l {
+            self.req += 1;
+            self.step = 0;
+        } else {
+            self.step += 1;
+        }
+        let after = self.consumed_s();
+        self.hwm_s = after;
+        Some(StepEvent {
+            layer: cur.layer,
+            mode: cur.mode,
+            fmus: cur.fmus,
+            cus: cur.cus,
+            dur_s: (after - before).max(0.0),
+            consumed_s: after,
+        })
+    }
+
+    /// Re-base the remaining steps onto `sched` at the current layer
+    /// boundary, charging `switch_charge_s` (the mid-DAG reconfiguration
+    /// cost) into the batch's consumed time. Completed work keeps its
+    /// old-schedule accounting.
+    pub fn retarget(&mut self, sched: Arc<CachedSchedule>, switch_charge_s: f64) {
+        let consumed = self.consumed_s();
+        self.base_s = consumed + switch_charge_s.max(0.0);
+        self.hwm_s = self.hwm_s.max(self.base_s);
+        // Same DAG, so step counts match; clamp defensively anyway.
+        self.step = self.step.min(sched.steps.len().saturating_sub(1));
+        self.seg_req = self.req;
+        self.seg_step = self.step;
+        self.sched = sched;
+    }
+
+    /// Snapshot the full cursor state.
+    pub fn checkpoint(&self) -> CursorCheckpoint {
+        CursorCheckpoint {
+            sched: self.sched.clone(),
+            batch: self.batch,
+            req: self.req,
+            step: self.step,
+            base_s: self.base_s,
+            seg_req: self.seg_req,
+            seg_step: self.seg_step,
+            hwm_s: self.hwm_s,
+        }
+    }
+
+    /// Restore a cursor exactly as checkpointed.
+    pub fn resume(ck: CursorCheckpoint) -> Self {
+        Self {
+            sched: ck.sched,
+            batch: ck.batch,
+            req: ck.req,
+            step: ck.step,
+            base_s: ck.base_s,
+            seg_req: ck.seg_req,
+            seg_step: ck.seg_step,
+            hwm_s: ck.hwm_s,
+        }
+    }
+}
+
+/// Per-tenant bound on fabric-time share: a token bucket refilled at
+/// `fabric_share` fabric-seconds per second, holding at most `burst_s`.
+/// Admission charges each request its estimated fabric cost, so a
+/// tenant's *time on the fabric* is bounded — not just its queue depth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RateLimit {
+    /// Sustained fabric seconds granted per second of (virtual or wall)
+    /// time.
+    pub fabric_share: f64,
+    /// Burst allowance in fabric seconds (bucket capacity).
+    pub burst_s: f64,
+}
+
+/// Deterministic token bucket over an externally supplied clock, so the
+/// same code limits both the live scheduler (wall time) and the
+/// simulator (virtual fabric time).
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    rate_per_s: f64,
+    burst: f64,
+    tokens: f64,
+    last_s: f64,
+}
+
+impl TokenBucket {
+    /// Bucket starts full (tenants may burst immediately).
+    pub fn new(rate_per_s: f64, burst: f64) -> Self {
+        let burst = burst.max(0.0);
+        Self { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last_s: 0.0 }
+    }
+
+    pub fn from_limit(rl: RateLimit) -> Self {
+        Self::new(rl.fabric_share, rl.burst_s)
+    }
+
+    /// Refill to `now_s`, then take `cost` tokens if available.
+    pub fn try_take(&mut self, cost: f64, now_s: f64) -> bool {
+        if now_s > self.last_s {
+            self.tokens = (self.tokens + (now_s - self.last_s) * self.rate_per_s).min(self.burst);
+            self.last_s = now_s;
+        }
+        if self.tokens >= cost {
+            self.tokens -= cost;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Return tokens taken for a request that was then refused elsewhere.
+    pub fn refund(&mut self, cost: f64) {
+        self.tokens = (self.tokens + cost.max(0.0)).min(self.burst);
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
 }
 
 /// One tenant of the fabric: a model (layer DAG) plus its serving knobs.
@@ -28,11 +314,14 @@ pub struct TenantSpec {
     pub queue_capacity: usize,
     /// Max requests drained per worker batch.
     pub max_batch: usize,
+    /// Optional bound on this tenant's share of *fabric time* (token
+    /// bucket); `None` leaves only the queue-depth bound.
+    pub rate_limit: Option<RateLimit>,
 }
 
 impl TenantSpec {
     pub fn new(name: impl Into<String>, dag: Dag) -> Self {
-        Self { name: name.into(), dag, queue_capacity: 4096, max_batch: 8 }
+        Self { name: name.into(), dag, queue_capacity: 4096, max_batch: 8, rate_limit: None }
     }
 
     pub fn with_queue_capacity(mut self, cap: usize) -> Self {
@@ -42,6 +331,13 @@ impl TenantSpec {
 
     pub fn with_max_batch(mut self, b: usize) -> Self {
         self.max_batch = b.max(1);
+        self
+    }
+
+    /// Bound the tenant to `fabric_share` fabric-seconds per second with
+    /// a `burst_s` allowance; excess requests are throttled at admission.
+    pub fn with_fabric_share(mut self, fabric_share: f64, burst_s: f64) -> Self {
+        self.rate_limit = Some(RateLimit { fabric_share, burst_s });
         self
     }
 }
@@ -151,9 +447,173 @@ mod tests {
 
     #[test]
     fn tenant_spec_builders() {
-        let t = TenantSpec::new("mlp", zoo::mlp_s()).with_queue_capacity(16).with_max_batch(4);
+        let t = TenantSpec::new("mlp", zoo::mlp_s())
+            .with_queue_capacity(16)
+            .with_max_batch(4)
+            .with_fabric_share(0.5, 2.0);
         assert_eq!(t.queue_capacity, 16);
         assert_eq!(t.max_batch, 4);
         assert_eq!(t.name, "mlp");
+        assert_eq!(t.rate_limit, Some(RateLimit { fabric_share: 0.5, burst_s: 2.0 }));
+    }
+
+    // ---- BatchCursor -----------------------------------------------------
+
+    use crate::dse::{Schedule, ScheduleEntry};
+    use crate::serve::cache::CachedSchedule;
+
+    /// A synthetic chain schedule: `durs[i]` seconds per layer, serial.
+    fn chain_sched(durs: &[f64]) -> Arc<CachedSchedule> {
+        let mut entries = Vec::new();
+        let mut t = 0.0;
+        for (i, &d) in durs.iter().enumerate() {
+            entries.push(ScheduleEntry {
+                layer: i,
+                mode: 0,
+                start: t,
+                end: t + d,
+                fmus: vec![0],
+                cus: vec![0],
+            });
+            t += d;
+        }
+        Arc::new(CachedSchedule::new(Schedule { entries, makespan: t }))
+    }
+
+    #[test]
+    fn undisturbed_cursor_reproduces_batch_fabric_s_exactly() {
+        let sched = chain_sched(&[0.3, 0.7, 0.15, 0.85]);
+        for batch in [1usize, 2, 5, 8] {
+            let mut c = BatchCursor::new(sched.clone(), batch);
+            assert_eq!(c.projected_total_s(), batch_fabric_s(sched.per_request_s, batch));
+            let mut n_steps = 0;
+            let mut last = 0.0;
+            while let Some(ev) = c.advance() {
+                n_steps += 1;
+                assert!(ev.dur_s >= 0.0);
+                assert!(ev.consumed_s >= last, "consumed must be monotone");
+                last = ev.consumed_s;
+            }
+            assert_eq!(n_steps, batch * 4);
+            assert!(c.is_done());
+            assert_eq!(c.requests_completed(), batch);
+            // Bit-for-bit: the steppable walk lands exactly on the old
+            // batch-atomic total.
+            assert_eq!(c.consumed_s(), batch_fabric_s(sched.per_request_s, batch));
+            assert_eq!(c.remaining_s(), 0.0);
+        }
+    }
+
+    #[test]
+    fn cursor_step_events_follow_the_timeline() {
+        let sched = chain_sched(&[1.0, 2.0]);
+        let mut c = BatchCursor::new(sched, 2);
+        let e0 = c.advance().unwrap();
+        assert_eq!((e0.layer, e0.fmus, e0.cus), (0, 1, 1));
+        assert!((e0.dur_s - 1.0).abs() < 1e-12);
+        let e1 = c.advance().unwrap();
+        assert_eq!(e1.layer, 1);
+        assert!((e1.dur_s - 2.0).abs() < 1e-12);
+        // Second request pays the amortized rate.
+        let e2 = c.advance().unwrap();
+        assert_eq!(e2.layer, 0);
+        assert!((e2.dur_s - BATCH_AMORTIZATION).abs() < 1e-12);
+        let e3 = c.advance().unwrap();
+        assert!((e3.dur_s - 2.0 * BATCH_AMORTIZATION).abs() < 1e-12);
+        assert!(c.advance().is_none());
+    }
+
+    #[test]
+    fn retarget_charges_one_switch_and_recosts_remaining_layers() {
+        let slow = chain_sched(&[1.0, 1.0, 1.0, 1.0]);
+        let fast = chain_sched(&[0.25, 0.25, 0.25, 0.25]);
+        let switch = 0.125;
+        let mut c = BatchCursor::new(slow.clone(), 1);
+        c.advance().unwrap();
+        c.advance().unwrap(); // 2 of 4 layers done on the slow slice
+        let consumed_before = c.consumed_s();
+        assert!((consumed_before - 2.0).abs() < 1e-12);
+        c.retarget(fast.clone(), switch);
+        assert!((c.consumed_s() - (2.0 + switch)).abs() < 1e-12, "switch charged at the boundary");
+        let mut total_after = 0.0;
+        while let Some(ev) = c.advance() {
+            total_after = ev.consumed_s;
+        }
+        // old part + exactly one switch + remaining layers at new speed
+        let expect = 2.0 + switch + 0.5;
+        assert!((total_after - expect).abs() < 1e-12, "{total_after} vs {expect}");
+        assert!(c.is_done());
+    }
+
+    #[test]
+    fn retarget_mid_request_in_a_batch_scales_remaining_by_amortization() {
+        let slow = chain_sched(&[1.0, 1.0]);
+        let fast = chain_sched(&[0.5, 0.5]);
+        let mut c = BatchCursor::new(slow.clone(), 2);
+        // Finish request 0 (2 steps) and one step of request 1.
+        c.advance().unwrap();
+        c.advance().unwrap();
+        c.advance().unwrap();
+        let at_boundary = c.consumed_s();
+        assert!((at_boundary - (2.0 + 0.9)).abs() < 1e-12);
+        c.retarget(fast, 0.0);
+        let mut last = at_boundary;
+        while let Some(ev) = c.advance() {
+            last = ev.consumed_s;
+        }
+        // Remaining: request 1's second layer on the fast slice, amortized.
+        assert!((last - (2.9 + 0.5 * 0.9)).abs() < 1e-12, "got {last}");
+    }
+
+    #[test]
+    fn checkpoint_resume_is_lossless() {
+        let sched = chain_sched(&[0.4, 0.6, 1.1]);
+        let mut a = BatchCursor::new(sched.clone(), 3);
+        for _ in 0..4 {
+            a.advance().unwrap();
+        }
+        let ck = a.checkpoint();
+        let mut b = BatchCursor::resume(ck);
+        assert_eq!(a.consumed_s(), b.consumed_s());
+        assert_eq!(a.remaining_s(), b.remaining_s());
+        // Both cursors finish identically, event by event.
+        loop {
+            match (a.advance(), b.advance()) {
+                (None, None) => break,
+                (Some(x), Some(y)) => assert_eq!(x, y),
+                (x, y) => panic!("cursors diverged: {x:?} vs {y:?}"),
+            }
+        }
+        assert_eq!(a.consumed_s(), b.consumed_s());
+        assert_eq!(a.consumed_s(), batch_fabric_s(sched.per_request_s, 3));
+    }
+
+    #[test]
+    fn remaining_on_estimates_the_new_slice() {
+        let slow = chain_sched(&[1.0, 1.0]);
+        let fast = chain_sched(&[0.25, 0.25]);
+        let mut c = BatchCursor::new(slow, 1);
+        c.advance().unwrap();
+        assert!((c.remaining_s() - 1.0).abs() < 1e-12);
+        assert!((c.remaining_on(&fast) - 0.25).abs() < 1e-12);
+    }
+
+    // ---- TokenBucket -----------------------------------------------------
+
+    #[test]
+    fn token_bucket_bounds_sustained_rate() {
+        let mut b = TokenBucket::new(1.0, 2.0);
+        // Burst: two 1-second requests pass immediately.
+        assert!(b.try_take(1.0, 0.0));
+        assert!(b.try_take(1.0, 0.0));
+        assert!(!b.try_take(1.0, 0.0), "bucket exhausted");
+        // Refill at 1 fabric-second per second.
+        assert!(b.try_take(1.0, 1.0));
+        assert!(!b.try_take(1.0, 1.0));
+        // A refund restores capacity (up to the burst cap).
+        b.refund(0.5);
+        assert!(b.try_take(0.5, 1.0));
+        // Clock going backwards never mints tokens.
+        assert!(!b.try_take(0.5, 0.5));
     }
 }

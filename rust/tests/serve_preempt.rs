@@ -1,0 +1,312 @@
+//! Acceptance tests for layer-granular preemptive execution.
+//!
+//! 1. On a skewed 3-tenant scenario with long-DAG batches, preemptive
+//!    re-composition (mid-DAG switch at a layer boundary) strictly
+//!    beats batch-boundary re-composition on the heavy tenant's p99 —
+//!    switch costs charged either way.
+//! 2. With the switch cost inflated above the outstanding work, the
+//!    policy still re-splits but *declines to preempt*.
+//! 3. A run with preemption disabled reproduces the pre-cursor
+//!    batch-atomic simulator bit-for-bit (an in-test reimplementation
+//!    of the old `free[]`-based event loop is the oracle).
+
+use std::collections::VecDeque;
+
+use filco::arch::FilcoConfig;
+use filco::coordinator::reconfig::Reconfigurator;
+use filco::dse::Solver;
+use filco::platform::Platform;
+use filco::serve::{
+    backlog_weights, batch_fabric_s, equal_split_per_request, poisson_trace, should_resplit,
+    simulate, Arrival, LatencyHistogram, PolicyConfig, Scenario, ScheduleCache, Strategy,
+    TenantSpec,
+};
+use filco::workload::zoo;
+
+fn small_solver() -> Solver {
+    Solver::Ga { population: 16, generations: 20, seed: 42 }
+}
+
+/// Skewed 3-tenant scenario with *long-DAG* batches: the heavy tenant
+/// (a 2-block BERT, 16 layers) receives one 64-request burst served as
+/// two 32-deep batches, so most of the run is in-flight work that only
+/// preemption can move to a bigger slice. Light tenants trickle.
+fn long_batch_burst(cache: &ScheduleCache) -> (Scenario, PolicyConfig, f64) {
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let cap = 1 << 20;
+    let tenants = vec![
+        TenantSpec::new("bert", zoo::bert_layers(64, 2))
+            .with_queue_capacity(cap)
+            .with_max_batch(32),
+        TenantSpec::new("mlp", zoo::mlp_s()).with_queue_capacity(cap),
+        TenantSpec::new("pointnet", zoo::pointnet()).with_queue_capacity(cap),
+    ];
+    let per = equal_split_per_request(&platform, &base, &tenants, cache);
+    let per0 = per[0];
+    assert!(per0 > 0.0);
+
+    let mut arrivals: Vec<Arrival> =
+        (0..64).map(|i| Arrival { t_s: 0.0, tenant: 0, id: i }).collect();
+    arrivals.push(Arrival { t_s: 0.0, tenant: 1, id: 64 });
+    arrivals.push(Arrival { t_s: 0.0, tenant: 2, id: 65 });
+
+    let policy = PolicyConfig {
+        // First epoch lands ~7% into the first 32-deep batch.
+        epoch_s: 2.0 * per0,
+        max_weight: 8,
+        min_backlog_factor: 0.0,
+        preempt_margin_factor: 1.0,
+    };
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy, per0)
+}
+
+#[test]
+fn preemptive_recomposition_beats_batch_boundary_on_p99() {
+    let cache = ScheduleCache::new(small_solver());
+    let (sc, policy, _per0) = long_batch_burst(&cache);
+
+    let bb = simulate(&sc, &Strategy::Dynamic(policy.clone().without_preemption()), &cache);
+    let pre = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+
+    // Same work served either way.
+    assert_eq!(pre.total_served(), sc.arrivals.len() as u64);
+    assert_eq!(bb.total_served(), pre.total_served());
+
+    // Both runs re-compose; only the preemptive one interrupts the
+    // in-flight long-DAG batch at a layer boundary.
+    assert!(bb.switches >= 1, "batch-boundary run must still re-split");
+    assert_eq!(bb.preemptions, 0);
+    assert!(pre.switches >= 1);
+    assert!(pre.preemptions >= 1, "in-flight burst must be preempted mid-DAG");
+
+    // The headline claim: the heavy tenant's p99 strictly improves when
+    // the switch lands mid-DAG instead of waiting ~a whole 32-deep
+    // batch of 16-layer DAG traversals.
+    assert!(
+        pre.histograms[0].p99() < bb.histograms[0].p99(),
+        "preemptive p99 {:.4e} s must strictly beat batch-boundary p99 {:.4e} s",
+        pre.histograms[0].p99(),
+        bb.histograms[0].p99()
+    );
+    assert!(
+        pre.completion_s < bb.completion_s,
+        "preemptive completion {:.4e} s vs batch-boundary {:.4e} s",
+        pre.completion_s,
+        bb.completion_s
+    );
+}
+
+#[test]
+fn policy_declines_preemption_when_switch_cost_dominates() {
+    let cache = ScheduleCache::new(small_solver());
+    let (mut sc, policy, per0) = long_batch_burst(&cache);
+    // Inflate the switch cost above all outstanding work: re-splitting
+    // is still allowed (hysteresis is zero), but interrupting the
+    // in-flight batch can never pay for the mid-DAG switch.
+    sc.switch_cost_s = Some(100.0 * per0 * batch_fabric_s(1.0, 32));
+
+    let r = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+    assert_eq!(r.total_served(), sc.arrivals.len() as u64);
+    assert!(r.switches >= 1, "the policy still re-splits at batch boundaries");
+    assert_eq!(
+        r.preemptions, 0,
+        "with the switch cost above the backlog the policy must decline to preempt"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Bit-for-bit regression: the cursor-based simulator with preemption
+// disabled must reproduce the pre-refactor batch-atomic simulator
+// exactly. This is a faithful reimplementation of the old event loop
+// (batch-atomic `free[]` accounting, eager latency recording).
+// ---------------------------------------------------------------------------
+
+struct OldReport {
+    completion_s: f64,
+    served: Vec<u64>,
+    rejected: Vec<u64>,
+    switches: u64,
+    epochs: u64,
+    histograms: Vec<LatencyHistogram>,
+}
+
+fn old_ingest(
+    arrivals: &[Arrival],
+    ai: &mut usize,
+    now: f64,
+    pending: &mut [VecDeque<(u64, f64)>],
+    rejected: &mut [u64],
+    caps: &[usize],
+) {
+    while *ai < arrivals.len() && arrivals[*ai].t_s <= now {
+        let a = &arrivals[*ai];
+        if pending[a.tenant].len() >= caps[a.tenant] {
+            rejected[a.tenant] += 1;
+        } else {
+            pending[a.tenant].push_back((a.id, a.t_s));
+        }
+        *ai += 1;
+    }
+}
+
+/// The pre-refactor partitioned simulator, verbatim semantics: batches
+/// are atomic `batch_fabric_s` blobs, latencies recorded at batch
+/// start, re-compositions charged onto `free[]` after in-flight work.
+fn old_simulate_partitioned(
+    sc: &Scenario,
+    cache: &ScheduleCache,
+    policy: Option<&PolicyConfig>,
+) -> OldReport {
+    let t_n = sc.tenants.len();
+    let names: Vec<&str> = sc.tenants.iter().map(|t| t.name.as_str()).collect();
+    let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
+
+    let mut recon = Reconfigurator::new(sc.base.clone());
+    let mut weights: Vec<u32> = vec![1; t_n];
+    let named: Vec<(&str, u32)> = names.iter().zip(&weights).map(|(&n, &w)| (n, w)).collect();
+    let parts = recon.split(&named).expect("equal split");
+    let setup_switches = recon.switches;
+    let mut per_req: Vec<f64> = parts
+        .iter()
+        .zip(&sc.tenants)
+        .map(|(part, t)| {
+            cache.get_or_compute(&sc.platform, &part.config(&sc.base), &t.dag).per_request_s
+        })
+        .collect();
+
+    let mut pending: Vec<VecDeque<(u64, f64)>> = vec![VecDeque::new(); t_n];
+    let mut hist = vec![LatencyHistogram::new(); t_n];
+    let mut served = vec![0u64; t_n];
+    let mut rejected = vec![0u64; t_n];
+    let mut free = vec![0.0f64; t_n];
+    let mut now = 0.0f64;
+    let mut ai = 0usize;
+    let mut epochs = 0u64;
+    let mut next_epoch = policy.map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
+
+    loop {
+        old_ingest(&sc.arrivals, &mut ai, now, &mut pending, &mut rejected, &caps);
+
+        for t in 0..t_n {
+            if free[t] > now {
+                continue;
+            }
+            let take = pending[t].len().min(sc.tenants[t].max_batch);
+            if take == 0 {
+                continue;
+            }
+            let done = now + batch_fabric_s(per_req[t], take);
+            for _ in 0..take {
+                let (_id, arr) = pending[t].pop_front().unwrap();
+                hist[t].record(done - arr);
+                served[t] += 1;
+            }
+            free[t] = done;
+        }
+
+        if let Some(p) = policy {
+            if now >= next_epoch {
+                epochs += 1;
+                let backlog: Vec<f64> =
+                    (0..t_n).map(|t| pending[t].len() as f64 * per_req[t]).collect();
+                let total_backlog: f64 = backlog.iter().sum();
+                let proposed = backlog_weights(&backlog, p.max_weight);
+                if should_resplit(&weights, &proposed, total_backlog, recon.switch_cost_s(), p) {
+                    let named: Vec<(&str, u32)> =
+                        names.iter().zip(&proposed).map(|(&n, &w)| (n, w)).collect();
+                    let parts = recon.split(&named).expect("re-split");
+                    for t in 0..t_n {
+                        let slice = parts[t].config(&sc.base);
+                        per_req[t] = cache
+                            .get_or_compute(&sc.platform, &slice, &sc.tenants[t].dag)
+                            .per_request_s;
+                        free[t] = free[t].max(now) + recon.switch_cost_s();
+                    }
+                    weights = proposed;
+                }
+                while next_epoch <= now {
+                    next_epoch += p.epoch_s;
+                }
+            }
+        }
+
+        let mut next = f64::INFINITY;
+        if ai < sc.arrivals.len() {
+            next = next.min(sc.arrivals[ai].t_s);
+        }
+        let work_left = pending.iter().any(|q| !q.is_empty());
+        for t in 0..t_n {
+            if !pending[t].is_empty() {
+                next = next.min(free[t]);
+            }
+        }
+        if policy.is_some() && (ai < sc.arrivals.len() || work_left) {
+            next = next.min(next_epoch);
+        }
+        if !next.is_finite() {
+            break;
+        }
+        now = next;
+    }
+
+    OldReport {
+        completion_s: free.iter().cloned().fold(0.0f64, f64::max),
+        served,
+        rejected,
+        switches: recon.switches - setup_switches,
+        epochs,
+        histograms: hist,
+    }
+}
+
+fn calibrated_poisson(cache: &ScheduleCache) -> (Scenario, PolicyConfig) {
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let tenants = vec![
+        TenantSpec::new("a", zoo::mlp_l()).with_queue_capacity(1 << 20),
+        TenantSpec::new("b", zoo::mlp_s()).with_queue_capacity(1 << 20),
+        TenantSpec::new("c", zoo::pointnet()).with_queue_capacity(1 << 20),
+    ];
+    let per = equal_split_per_request(&platform, &base, &tenants, cache);
+    let rates = [2.5 / per[0], 0.1 / per[1], 0.1 / per[2]];
+    let arrivals = poisson_trace(&rates, 60.0 * per[0], 9001);
+    let policy = PolicyConfig::calibrated(per[0]).without_preemption();
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy)
+}
+
+#[test]
+fn no_preemption_reproduces_batch_atomic_simulator_bit_for_bit() {
+    let cache = ScheduleCache::new(small_solver());
+    let (sc, policy) = calibrated_poisson(&cache);
+    assert!(sc.arrivals.len() > 50, "trace too small: {}", sc.arrivals.len());
+
+    // Static equal split.
+    let old = old_simulate_partitioned(&sc, &cache, None);
+    let new = simulate(&sc, &Strategy::StaticEqual, &cache);
+    assert_eq!(new.completion_s, old.completion_s, "static: completion must match exactly");
+    assert_eq!(new.served, old.served);
+    assert_eq!(new.rejected, old.rejected);
+    for (h_new, h_old) in new.histograms.iter().zip(&old.histograms) {
+        assert_eq!(h_new.count(), h_old.count());
+        assert_eq!(h_new.p50(), h_old.p50());
+        assert_eq!(h_new.p95(), h_old.p95());
+        assert_eq!(h_new.p99(), h_old.p99());
+        assert_eq!(h_new.mean_s(), h_old.mean_s());
+    }
+
+    // Dynamic re-composition with preemption disabled.
+    let old = old_simulate_partitioned(&sc, &cache, Some(&policy));
+    let new = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+    assert!(old.switches >= 1, "overload must re-split in the oracle too");
+    assert_eq!(new.switches, old.switches);
+    assert_eq!(new.epochs, old.epochs);
+    assert_eq!(new.preemptions, 0);
+    assert_eq!(new.completion_s, old.completion_s, "dynamic: completion must match exactly");
+    assert_eq!(new.served, old.served);
+    for (h_new, h_old) in new.histograms.iter().zip(&old.histograms) {
+        assert_eq!(h_new.count(), h_old.count());
+        assert_eq!(h_new.p99(), h_old.p99());
+        assert_eq!(h_new.mean_s(), h_old.mean_s());
+    }
+}
