@@ -109,6 +109,10 @@ fn main() {
         assert!(mk / best_overall < 1.25, "GA ({pop},{mr}) off by {:.2}x", mk / best_overall);
     }
     let default_mk = results.iter().find(|(p2, m2, _)| *p2 == 64 && *m2 == 0.1).unwrap().2;
-    assert!(default_mk / best_overall < 1.10, "default hparams off: {:.3}x", default_mk / best_overall);
+    assert!(
+        default_mk / best_overall < 1.10,
+        "default hparams off: {:.3}x",
+        default_mk / best_overall
+    );
     println!("ablations OK");
 }

@@ -75,8 +75,10 @@ fn main() {
     // Shape: moving from the large/low corner to the small/high corner,
     // the fixed-dataflow baseline collapses much harder than FILCO
     // (paper: "the performance drops sharply in CHARM").
-    let charm_drop = cell(OpBucket::Large, Diversity::Low).2 / cell(OpBucket::Small, Diversity::High).2;
-    let filco_drop = cell(OpBucket::Large, Diversity::Low).4 / cell(OpBucket::Small, Diversity::High).4;
+    let charm_drop =
+        cell(OpBucket::Large, Diversity::Low).2 / cell(OpBucket::Small, Diversity::High).2;
+    let filco_drop =
+        cell(OpBucket::Large, Diversity::Low).4 / cell(OpBucket::Small, Diversity::High).4;
     println!(
         "large/low -> small/high collapse: CHARM {charm_drop:.0}x vs FILCO {filco_drop:.0}x"
     );

@@ -41,11 +41,16 @@ fn main() {
     let policy = PolicyConfig::calibrated(per[0]);
 
     let t0 = std::time::Instant::now();
+    // Packed variant: the two light tenants may share one partition,
+    // time-multiplexed; the amortization gate is opened wide so the
+    // row depends only on the fit bound, not absolute model scale.
+    let packed = PolicyConfig { pack_swap_margin: 10.0, ..policy.clone().with_packing() };
     let strategies = [
         ("unified", Strategy::Unified),
         ("static-equal", Strategy::StaticEqual),
         ("dynamic-batch", Strategy::Dynamic(policy.clone().without_preemption())),
         ("dynamic-preempt", Strategy::Dynamic(policy)),
+        ("dynamic-packed", Strategy::Dynamic(packed)),
     ];
     let reports: Vec<(&str, ServeReport)> =
         strategies.iter().map(|(n, s)| (*n, simulate(&sc, s, &cache))).collect();
@@ -60,6 +65,8 @@ fn main() {
             "heavy p99 s",
             "switches",
             "preempts",
+            "packs",
+            "swaps",
             "served",
             "rejected",
         ],
@@ -73,6 +80,8 @@ fn main() {
             eng(rep.histograms[0].p99()),
             rep.switches.to_string(),
             rep.preemptions.to_string(),
+            rep.packs.to_string(),
+            rep.pack_swaps.to_string(),
             rep.total_served().to_string(),
             rep.total_rejected().to_string(),
         ]);
@@ -95,6 +104,16 @@ fn main() {
         "dynamic vs static: completion {:.2}x, heavy-tenant p99 {:.2}x",
         stat.completion_s / dynr.completion_s,
         stat.histograms[0].p99() / dynr.histograms[0].p99().max(1e-12)
+    );
+    let pk = &reports[4].1;
+    assert_eq!(pk.total_served(), stat.total_served());
+    println!(
+        "packed: {} packs, {} unpacks, {} swaps, worst p99 {:.3e} s (unpacked {:.3e} s)",
+        pk.packs,
+        pk.unpacks,
+        pk.pack_swaps,
+        pk.worst_p99_s(),
+        dynr.worst_p99_s()
     );
     println!("serve_multitenant OK");
 }

@@ -55,7 +55,8 @@ mod tests {
         let p = Platform::vck190();
         let dag = zoo::deit_l();
         let g_rsn = rsn(&p).dag_gflops(&p, &dag);
-        let g_charm = super::super::charm::charm_gflops(&p, &[super::super::charm::charm1(&p)], &dag);
+        let charm1 = super::super::charm::charm1(&p);
+        let g_charm = super::super::charm::charm_gflops(&p, &[charm1], &dag);
         assert!(g_rsn > g_charm, "rsn {g_rsn} vs charm1 {g_charm}");
     }
 

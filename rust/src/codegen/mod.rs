@@ -22,7 +22,12 @@ pub struct GeneratedArtifacts {
 }
 
 /// Generate binary streams + metadata from a scheduled workload.
-pub fn generate(dag: &Dag, table: &CandidateTable, schedule: &Schedule, program: &Program) -> GeneratedArtifacts {
+pub fn generate(
+    dag: &Dag,
+    table: &CandidateTable,
+    schedule: &Schedule,
+    program: &Program,
+) -> GeneratedArtifacts {
     let mut streams = Vec::new();
     let mut units: Vec<UnitId> = program.units().collect();
     units.sort();

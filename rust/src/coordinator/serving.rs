@@ -44,7 +44,14 @@ pub struct BertModel {
 
 impl BertModel {
     /// Synthesise a model with random (deterministic) weights.
-    pub fn synthetic(seq: usize, hidden: usize, heads: usize, ffn: usize, layers: usize, seed: u64) -> Self {
+    pub fn synthetic(
+        seq: usize,
+        hidden: usize,
+        heads: usize,
+        ffn: usize,
+        layers: usize,
+        seed: u64,
+    ) -> Self {
         let artifact = format!("bert_layer_s{seq}_h{hidden}_a{heads}_f{ffn}");
         let shapes: Vec<Vec<usize>> = vec![
             vec![hidden, hidden], vec![hidden], // wq bq

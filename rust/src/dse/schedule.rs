@@ -347,12 +347,12 @@ pub fn makespan_only(
             ready = ready.max(if d.is_nan() { f64::INFINITY } else { d });
         }
         let (fmu_free, cu_free) = (&mut scratch.fmu_free, &mut scratch.cu_free);
-        scratch
-            .fmu_idx
-            .sort_unstable_by(|&a, &b| fmu_free[a as usize].partial_cmp(&fmu_free[b as usize]).unwrap());
-        scratch
-            .cu_idx
-            .sort_unstable_by(|&a, &b| cu_free[a as usize].partial_cmp(&cu_free[b as usize]).unwrap());
+        scratch.fmu_idx.sort_unstable_by(|&a, &b| {
+            fmu_free[a as usize].partial_cmp(&fmu_free[b as usize]).unwrap()
+        });
+        scratch.cu_idx.sort_unstable_by(|&a, &b| {
+            cu_free[a as usize].partial_cmp(&cu_free[b as usize]).unwrap()
+        });
         let f_avail = if need_f > 0 { fmu_free[scratch.fmu_idx[need_f - 1] as usize] } else { 0.0 };
         let c_avail = if need_c > 0 { cu_free[scratch.cu_idx[need_c - 1] as usize] } else { 0.0 };
         let start = ready.max(f_avail).max(c_avail);
@@ -479,7 +479,9 @@ mod tests {
                 }
             }
             let modes: Vec<Mode> = (0..3)
-                .map(|_| mode(1 + rng.below(3) as u32, 1 + rng.below(3) as u32, 0.5 + rng.next_f64()))
+                .map(|_| {
+                    mode(1 + rng.below(3) as u32, 1 + rng.below(3) as u32, 0.5 + rng.next_f64())
+                })
                 .collect();
             let t = table_for(&dag, &modes);
             let order = dag.topo_order().unwrap();

@@ -68,7 +68,11 @@ mod tests {
     #[test]
     fn renders_all_kinds() {
         let instrs = [
-            Instr::Header(HeaderInstr { is_last: false, des_unit: UnitId::Fmu(2), valid_length: 4 }),
+            Instr::Header(HeaderInstr {
+                is_last: false,
+                des_unit: UnitId::Fmu(2),
+                valid_length: 4,
+            }),
             Instr::IomLoad(IomLoadInstr {
                 is_last: false,
                 ddr_addr: 0x1000,

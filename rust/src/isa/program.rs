@@ -145,7 +145,14 @@ mod tests {
 
     #[test]
     fn unit_code_roundtrip() {
-        for u in [UnitId::IomLoader, UnitId::IomStorer, UnitId::Fmu(0), UnitId::Fmu(41), UnitId::Cu(0), UnitId::Cu(7)] {
+        for u in [
+            UnitId::IomLoader,
+            UnitId::IomStorer,
+            UnitId::Fmu(0),
+            UnitId::Fmu(41),
+            UnitId::Cu(0),
+            UnitId::Cu(7),
+        ] {
             assert_eq!(UnitId::from_code(u.code()), Some(u));
         }
     }

@@ -23,6 +23,15 @@
 //!
 //! Python never runs on the request path: `make artifacts` AOT-compiles
 //! everything; the Rust binary is self-contained afterwards.
+//!
+//! **Where to start reading:** `ARCHITECTURE.md` at the repository
+//! root maps the paper section by section onto these modules (Sec. III
+//! composing fabric → [`arch`]/[`coordinator`], Sec. IV analytical
+//! model + two-stage DSE → [`analytical`]/[`dse`], the ISA → [`isa`],
+//! evaluation figures → `rust/benches/fig*`), walks the serve
+//! subsystem's data flow (queue → policy → scheduler/sim → report)
+//! including the cursor/interleaver lifecycle, and documents the
+//! `filco serve` CLI end to end.
 
 pub mod analytical;
 pub mod arch;

@@ -1,22 +1,29 @@
 //! `filco` — CLI for the FILCO framework reproduction.
 //!
+//! Run `filco help` for the full flag reference (or see
+//! `ARCHITECTURE.md` at the repository root, which documents the
+//! `serve` subcommand end to end).
+//!
 //! Subcommands:
 //!   info                      platform + fabric + artifact summary
 //!   dse     --model M [..]    run two-stage DSE, print the schedule
 //!   sim     --model M [..]    DSE -> instrgen -> fabric simulation
 //!   disasm  --model M [..]    print the generated instruction streams
 //!   codegen --model M --out D write binaries/schedule.json/dataflow.h
-//!   serve   [--requests N] [--mode live|sim] [--epoch-ms E] [--timescale S]
-//!           [--preempt on|off] [--cache-file P]
+//!   serve   [--requests N] [--mode live|sim] [--epoch-ms E]
+//!           [--timescale S] [--preempt on|off] [--pack on|off]
+//!           [--cache-file P]
 //!           multi-tenant serving on the live re-composable fabric:
 //!           worker per partition stepping batches layer-by-layer,
 //!           backlog policy re-splits via the Reconfigurator (mid-DAG
-//!           preemption at layer boundaries unless --preempt off),
-//!           schedules memoized in the ScheduleCache. --cache-file
-//!           persists the cache across restarts (loaded on startup,
-//!           saved on shutdown). `--mode sim` runs the deterministic
-//!           unified/static/dynamic comparison instead.
+//!           preemption at layer boundaries unless --preempt off;
+//!           cross-tenant packing onto time-multiplexed partitions
+//!           with --pack on), schedules memoized in the ScheduleCache.
+//!           --cache-file persists the cache across restarts (loaded
+//!           on startup, saved on shutdown). `--mode sim` runs the
+//!           deterministic unified/static/dynamic comparison instead.
 //!   gantt   --model M [..]    ASCII utilization timeline from the sim
+//!   help                      print the flag-by-flag usage reference
 //!
 //! Models: bert-32|64|128|256|512, mlp-l, mlp-s, deit-l, deit-s,
 //! pointnet, mixer (and bertN-L for N layers, e.g. bert-128x2).
@@ -89,6 +96,60 @@ fn solver_of(flags: &HashMap<String, String>) -> Solver {
     }
 }
 
+/// The flag-by-flag usage reference (`filco help`). Every flag of
+/// every subcommand gets one doc line here; `ARCHITECTURE.md` carries
+/// the long-form walkthrough.
+fn print_usage() {
+    println!(
+        "\
+filco — FILCO framework reproduction CLI
+
+USAGE: filco <command> [--flag value]...
+
+COMMANDS
+  info      platform + fabric + runtime-artifact summary (no flags)
+  dse       two-stage DSE for one model, print the layer schedule
+  sim       DSE -> instruction generation -> cycle-approximate fabric sim
+  disasm    print the generated instruction streams
+  codegen   write instruction binaries + schedule.json + dataflow.h
+  gantt     ASCII per-unit utilization timeline from the fabric sim
+  serve     multi-tenant serving on the live re-composable fabric
+  help      this reference
+
+FLAGS (dse / sim / disasm / codegen / gantt)
+  --model M       workload: bert-32|64|128|256|512, bert-<seq>x<layers>,
+                  mlp-l, mlp-s, deit-l, deit-s, pointnet, mixer
+                  (default bert-128x1)
+  --solver S      schedule solver: ga (default) or milp
+  --out D         codegen only: output directory (default target/filco-out)
+
+FLAGS (serve)
+  --mode M        live (default): threaded scheduler, wall-clock pacing;
+                  sim: deterministic virtual-time comparison of the
+                  unified / static-equal / dynamic strategies
+  --requests N    total requests to generate (default 480, min 1)
+  --epoch-ms E    live policy-evaluation period in milliseconds
+                  (default 200); the simulator derives its epoch from
+                  the measured per-request fabric time instead
+  --timescale S   live only: wall seconds slept per fabric second
+                  (default sized so the demo runs ~2 s); 0 disables
+                  pacing and drains at host speed
+  --preempt on|off  mid-DAG preemption at layer-step boundaries
+                  (default on); off lands re-compositions only at
+                  batch boundaries
+  --pack on|off   cross-tenant packing (default off): two low-backlog
+                  tenants share one partition, time-multiplexed by the
+                  per-partition interleaver with the switch cost
+                  charged per cursor swap
+  --cache-file P  schedule-cache persistence: load on startup, save on
+                  shutdown, so restarts never re-run the DSE for a
+                  composition seen before
+
+EXAMPLE (end to end, copy-pasteable)
+  filco serve --mode sim --requests 600 --pack on --cache-file /tmp/filco-cache.json"
+    );
+}
+
 fn cmd_info() {
     let p = Platform::vck190();
     let cfg = FilcoConfig::default_for(&p);
@@ -99,12 +160,17 @@ fn cmd_info() {
     println!("fabric:   {} FMUs x {} KB | {} CUs x {} AIEs | features {}",
         cfg.n_fmus, cfg.fmu_bytes / 1024, cfg.m_cus, cfg.aies_per_cu, cfg.features.label());
     match Engine::open_default() {
-        Ok(e) => println!("runtime:  PJRT {} | {} artifacts", e.platform_name(), e.manifest.entries.len()),
+        Ok(e) => {
+            let n = e.manifest.entries.len();
+            println!("runtime:  PJRT {} | {n} artifacts", e.platform_name());
+        }
         Err(e) => println!("runtime:  unavailable ({e})"),
     }
 }
 
-fn pipeline(flags: &HashMap<String, String>) -> (Platform, FilcoConfig, Dag, dse::CandidateTable, dse::Schedule) {
+fn pipeline(
+    flags: &HashMap<String, String>,
+) -> (Platform, FilcoConfig, Dag, dse::CandidateTable, dse::Schedule) {
     let (p, cfg, dag) = prepared(flags);
     let table = dse::stage1::optimize(&p, &cfg, &dag);
     let schedule = dse::two_stage(&p, &cfg, &dag, solver_of(flags));
@@ -131,7 +197,10 @@ fn cmd_sim(flags: &HashMap<String, String>) {
     match sim::simulate(&p, &fabric, &prog) {
         Ok(r) => {
             println!("workload {}: {} instructions", dag.name, r.instructions);
-            println!("sim makespan {:.6e} s (schedule model {:.6e} s)", r.makespan_s, schedule.makespan);
+            println!(
+                "sim makespan {:.6e} s (schedule model {:.6e} s)",
+                r.makespan_s, schedule.makespan
+            );
             println!("DDR in {} MB out {} MB", r.ddr_in_bytes >> 20, r.ddr_out_bytes >> 20);
             println!("mean CU utilization {:.1}%", r.mean_cu_utilization() * 100.0);
         }
@@ -151,7 +220,10 @@ fn cmd_codegen(flags: &HashMap<String, String>) {
     let arts = filco::codegen::generate(&dag, &table, &schedule, &prog);
     let out = flags.get("out").cloned().unwrap_or_else(|| "target/filco-out".into());
     arts.write_to(std::path::Path::new(&out)).expect("write artifacts");
-    println!("wrote {} instruction bytes + schedule.json + dataflow.h to {out}", arts.total_bytes());
+    println!(
+        "wrote {} instruction bytes + schedule.json + dataflow.h to {out}",
+        arts.total_bytes()
+    );
 }
 
 fn cmd_gantt(flags: &HashMap<String, String>) {
@@ -187,6 +259,14 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         Some("off") => false,
         Some(other) => {
             eprintln!("unknown --preempt {other:?}; expected \"on\" or \"off\"");
+            std::process::exit(2);
+        }
+    };
+    let pack = match flags.get("pack").map(String::as_str) {
+        None | Some("off") => false,
+        Some("on") => true,
+        Some(other) => {
+            eprintln!("unknown --pack {other:?}; expected \"on\" or \"off\"");
             std::process::exit(2);
         }
     };
@@ -236,6 +316,9 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         if !preempt {
             policy = policy.without_preemption();
         }
+        if pack {
+            policy = policy.with_packing();
+        }
         for strat in
             [Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)]
         {
@@ -259,16 +342,17 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         .get("timescale")
         .and_then(|s| s.parse().ok())
         .unwrap_or(2.0 / (n_heavy as f64 * per[0] * 0.9).max(1e-9));
-    let cfg = LiveConfig {
-        policy: PolicyConfig {
-            epoch_s: epoch_ms / 1e3,
-            max_weight: 8,
-            min_backlog_factor: 5.0,
-            preempt_margin_factor: if preempt { 1.0 } else { f64::INFINITY },
-        },
-        timescale,
-        max_sleep: Duration::from_millis(100),
+    let mut policy = PolicyConfig {
+        epoch_s: epoch_ms / 1e3,
+        max_weight: 8,
+        min_backlog_factor: 5.0,
+        preempt_margin_factor: if preempt { 1.0 } else { f64::INFINITY },
+        ..PolicyConfig::default()
     };
+    if pack {
+        policy = policy.with_packing();
+    }
+    let cfg = LiveConfig { policy, timescale, max_sleep: Duration::from_millis(100) };
     let sched = FabricScheduler::new(platform, base, specs(), cache.clone(), cfg)
         .expect("build scheduler");
     println!("composition at start: {:?}", sched.composition());
@@ -316,8 +400,10 @@ fn main() {
         "codegen" => cmd_codegen(&flags),
         "serve" => cmd_serve(&flags),
         "gantt" => cmd_gantt(&flags),
+        "help" | "--help" | "-h" => print_usage(),
         other => {
-            eprintln!("unknown command {other:?}; see src/main.rs header for usage");
+            eprintln!("unknown command {other:?}");
+            print_usage();
             std::process::exit(2);
         }
     }

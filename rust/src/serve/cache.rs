@@ -9,7 +9,8 @@
 //! composition is seen: a repartition into a previously-seen shape is a
 //! hash lookup (~ns) instead of a DSE run (~ms–s).
 //!
-//! Entries carry the steppable [`LayerStep`] timeline alongside the raw
+//! Entries carry the steppable [`LayerStep`](crate::dse::LayerStep)
+//! timeline alongside the raw
 //! [`Schedule`], so the serving layer can drive batches layer-by-layer
 //! (preemption at step boundaries) without recomputing the view.
 //!
@@ -126,6 +127,7 @@ struct Key {
 /// One memoized DSE result.
 #[derive(Debug, Clone)]
 pub struct CachedSchedule {
+    /// The memoized two-stage DSE result.
     pub schedule: Schedule,
     /// Fabric seconds one request (one DAG traversal) takes on this
     /// slice — the schedule makespan.
@@ -137,6 +139,7 @@ pub struct CachedSchedule {
 }
 
 impl CachedSchedule {
+    /// Wrap a schedule with its precomputed steppable timeline view.
     pub fn new(schedule: Schedule) -> Self {
         let mut steps = schedule.steps();
         if steps.is_empty() {
@@ -162,6 +165,8 @@ pub struct ScheduleCache {
 }
 
 impl ScheduleCache {
+    /// Empty cache that resolves misses with `solver`. Thread-safe: the
+    /// internal map is mutex-guarded and misses compute outside it.
     pub fn new(solver: Solver) -> Self {
         Self {
             solver,
@@ -207,10 +212,12 @@ impl ScheduleCache {
         map.entry(key).or_insert_with(|| cached.clone()).clone()
     }
 
+    /// Lookups served from the memo table so far.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Lookups that had to run the two-stage DSE so far.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -220,10 +227,12 @@ impl ScheduleCache {
         self.inner.lock().unwrap().len()
     }
 
+    /// Does the cache hold no schedules at all?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// One-line entry/hit/miss summary for logs.
     pub fn stats(&self) -> String {
         format!("{} entries, {} hits, {} misses", self.len(), self.hits(), self.misses())
     }

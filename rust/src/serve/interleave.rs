@@ -1,0 +1,478 @@
+//! Per-partition time multiplexing: the [`Interleaver`] runs two (or
+//! more) [`BatchCursor`]s on *one* fabric slice, swapping between them
+//! at layer-step boundaries and charging the composition-switch cost
+//! for every context swap.
+//!
+//! This is the execution half of cross-tenant packing (Herald-style
+//! co-scheduling): when the policy decides two low-backlog tenants fit
+//! one partition, their batches no longer each strand a slice — they
+//! share one, round-robin, a quantum of layer steps at a time.
+//!
+//! # Fabric-time conservation
+//!
+//! Interleaving reorders steps but never changes them: each slot's
+//! cursor retires exactly the step sequence it would have retired solo,
+//! so its final [`BatchCursor::consumed_s`] is *bit-for-bit* the solo
+//! walk's total. The only extra fabric time is the swap charges:
+//!
+//! ```text
+//! interleaved total == Σ (solo walk totals) + swaps() × swap_cost_s
+//! ```
+//!
+//! [`Interleaver::consumed_s`] computes its left-hand side exactly that
+//! way (per-slot closed forms plus the swap term), so the identity is
+//! exact, not approximate — the conservation tests below and in
+//! `rust/tests/serve_pack.rs` assert `==` on `f64`s.
+//!
+//! All durations in this module are **fabric seconds** (modelled device
+//! time), never wall-clock seconds. The type is single-threaded; the
+//! live scheduler keeps each interleaver owned by one worker thread and
+//! the simulator is single-threaded by construction, so no locking is
+//! required or provided.
+
+use std::sync::Arc;
+
+use super::cache::CachedSchedule;
+use super::tenant::{BatchCursor, StepEvent};
+
+/// One batch being multiplexed on the slice: the owning tenant's index
+/// plus its in-flight cursor.
+#[derive(Debug, Clone)]
+struct Slot {
+    tenant: usize,
+    cursor: BatchCursor,
+}
+
+/// One retired layer step of an interleaved walk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InterleaveEvent {
+    /// Tenant whose cursor retired this step.
+    pub tenant: usize,
+    /// Swap charge (fabric seconds) paid *before* this step because the
+    /// slice had to load a different cursor's context; `0.0` when the
+    /// step continues the previously active cursor.
+    pub swap_charge_s: f64,
+    /// The underlying cursor step (durations in fabric seconds;
+    /// `step.consumed_s` is the owning *cursor's* total, excluding swap
+    /// charges, so it stays comparable to a solo walk).
+    pub step: StepEvent,
+    /// True when this step completed the tenant's batch; the slot has
+    /// been removed and the tenant may be admitted again.
+    pub done: bool,
+}
+
+/// Time-multiplexes several [`BatchCursor`]s on one fabric slice.
+///
+/// Rotation is round-robin with a configurable quantum: the active
+/// cursor runs up to `quantum_steps` layer steps, then the next live
+/// cursor is swapped in (paying `swap_cost_s` fabric seconds). A slot
+/// whose cursor completes is removed automatically and its tenant may
+/// be re-admitted with a fresh batch via [`Self::add`].
+///
+/// A single-slot interleaver degenerates to a plain cursor walk with
+/// zero swaps, which is how the live scheduler runs *un*packed tenants
+/// through the same code path.
+#[derive(Debug, Clone)]
+pub struct Interleaver {
+    slots: Vec<Slot>,
+    /// Rotation position into `slots`.
+    rr: usize,
+    /// Steps the slot at `rr` has run in its current quantum
+    /// (saturating at `quantum_steps`).
+    ran: usize,
+    /// Tenant whose context is resident on the slice (swap detection);
+    /// survives slot removal — re-admitting the same tenant while its
+    /// context is still resident costs no swap.
+    active: Option<usize>,
+    swap_cost_s: f64,
+    quantum_steps: usize,
+    swaps: u64,
+    /// Σ final `consumed_s` of completed (removed) cursors, accumulated
+    /// in completion order.
+    retired_s: f64,
+}
+
+impl Interleaver {
+    /// New empty interleaver charging `swap_cost_s` fabric seconds per
+    /// context swap and rotating after `quantum_steps` layer steps
+    /// (clamped to at least 1).
+    pub fn new(swap_cost_s: f64, quantum_steps: usize) -> Self {
+        Self {
+            slots: Vec::new(),
+            rr: 0,
+            ran: 0,
+            active: None,
+            swap_cost_s: swap_cost_s.max(0.0),
+            quantum_steps: quantum_steps.max(1),
+            swaps: 0,
+            retired_s: 0.0,
+        }
+    }
+
+    /// Fabric seconds charged per context swap.
+    pub fn swap_cost_s(&self) -> f64 {
+        self.swap_cost_s
+    }
+
+    /// Layer steps a cursor runs before the rotation moves on.
+    pub fn quantum_steps(&self) -> usize {
+        self.quantum_steps
+    }
+
+    /// Context swaps performed so far.
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Live (incomplete) slots.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True when no batch is in flight.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Is a batch of `tenant` currently in flight?
+    pub fn contains(&self, tenant: usize) -> bool {
+        self.slots.iter().any(|s| s.tenant == tenant)
+    }
+
+    /// Tenants with a live slot, in rotation-vector order.
+    pub fn tenants(&self) -> Vec<usize> {
+        self.slots.iter().map(|s| s.tenant).collect()
+    }
+
+    /// Tenant whose context is resident on the slice (the last one that
+    /// retired a step), if any.
+    pub fn active_tenant(&self) -> Option<usize> {
+        self.active
+    }
+
+    /// Admit `tenant`'s batch. Panics if the tenant already has a live
+    /// slot (one in-flight batch per tenant) or the cursor is already
+    /// done — both are caller bugs, not runtime conditions.
+    pub fn add(&mut self, tenant: usize, cursor: BatchCursor) {
+        assert!(!self.contains(tenant), "tenant {tenant} already has a live slot");
+        assert!(!cursor.is_done(), "cannot admit a completed cursor");
+        self.slots.push(Slot { tenant, cursor });
+    }
+
+    /// Remove `tenant`'s in-flight cursor without completing it.
+    /// Returns `None` when the tenant has no live slot.
+    ///
+    /// Note: neither production unpack path calls this today — the live
+    /// scheduler lets the host drain adopted slots to completion and
+    /// the simulator drains before dissolving a pack, so batches never
+    /// migrate between execution models mid-flight. It exists (and is
+    /// tested) as the building block for step-granular pack handoff.
+    pub fn take(&mut self, tenant: usize) -> Option<BatchCursor> {
+        let pos = self.slots.iter().position(|s| s.tenant == tenant)?;
+        Some(self.remove_at(pos).cursor)
+    }
+
+    /// Fabric seconds left across every live slot (on each cursor's
+    /// current schedule; excludes future swap charges).
+    pub fn remaining_s(&self) -> f64 {
+        self.slots.iter().map(|s| s.cursor.remaining_s()).sum()
+    }
+
+    /// Fabric seconds left on `tenant`'s in-flight batch (`0.0` when it
+    /// has no live slot).
+    pub fn slot_remaining_s(&self, tenant: usize) -> f64 {
+        self.slots
+            .iter()
+            .find(|s| s.tenant == tenant)
+            .map(|s| s.cursor.remaining_s())
+            .unwrap_or(0.0)
+    }
+
+    /// Total fabric seconds the interleaved walk has consumed: retired
+    /// cursors' closed-form totals, live cursors' progress, plus the
+    /// accumulated swap charges. Computed so that, once every slot has
+    /// drained, it equals the solo-walk totals plus `swaps × swap_cost`
+    /// exactly (see the module docs).
+    pub fn consumed_s(&self) -> f64 {
+        let live: f64 = self.slots.iter().map(|s| s.cursor.consumed_s()).sum();
+        self.retired_s + live + self.swaps as f64 * self.swap_cost_s
+    }
+
+    /// Re-base `tenant`'s remaining steps onto `sched` (the slice was
+    /// re-composed), charging `switch_charge_s` into the cursor's own
+    /// timeline — same contract as [`BatchCursor::retarget`]. Returns
+    /// false when the tenant has no live slot.
+    pub fn retarget(
+        &mut self,
+        tenant: usize,
+        sched: Arc<CachedSchedule>,
+        switch_charge_s: f64,
+    ) -> bool {
+        match self.slots.iter_mut().find(|s| s.tenant == tenant) {
+            Some(s) => {
+                s.cursor.retarget(sched, switch_charge_s);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Fabric seconds the next [`Self::advance`] will consume (swap
+    /// charge plus step duration), without committing it — what the
+    /// virtual-time simulator schedules its next event on. `None` when
+    /// every slot has drained. Read-only: replays the rotation decision
+    /// and probes only the chosen cursor (this sits on the simulator's
+    /// per-step hot path, so it must not clone the slot vector).
+    pub fn peek_next_s(&self) -> Option<f64> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        let mut rr = self.rr;
+        let mut ran = self.ran;
+        if rr >= self.slots.len() {
+            rr = 0;
+            ran = 0;
+        }
+        if ran >= self.quantum_steps && self.slots.len() > 1 {
+            rr = (rr + 1) % self.slots.len();
+        }
+        let slot = &self.slots[rr];
+        let swap = match self.active {
+            Some(t) if t == slot.tenant => 0.0,
+            None => 0.0,
+            Some(_) => self.swap_cost_s,
+        };
+        // Same arithmetic as advance(): the next step's duration is the
+        // cursor's consumed delta across one step, clamped like
+        // StepEvent::dur_s — bit-identical to what advance() will emit.
+        let before = slot.cursor.consumed_s();
+        let after = slot.cursor.peek_consumed_s()?;
+        Some(swap + (after - before).max(0.0))
+    }
+
+    fn remove_at(&mut self, pos: usize) -> Slot {
+        let slot = self.slots.remove(pos);
+        if pos < self.rr {
+            self.rr -= 1;
+        } else if pos == self.rr {
+            // The rotation now points at the next slot; give it a fresh
+            // quantum.
+            self.ran = 0;
+        }
+        if self.rr >= self.slots.len() {
+            self.rr = 0;
+        }
+        slot
+    }
+
+    /// Retire one layer step of the multiplexed walk: rotate if the
+    /// active slot's quantum is exhausted (charging the swap), advance
+    /// the chosen cursor one step, and remove its slot if that
+    /// completed the batch. Returns `None` once no slot is live.
+    pub fn advance(&mut self) -> Option<InterleaveEvent> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        if self.rr >= self.slots.len() {
+            self.rr = 0;
+            self.ran = 0;
+        }
+        if self.ran >= self.quantum_steps && self.slots.len() > 1 {
+            self.rr = (self.rr + 1) % self.slots.len();
+            self.ran = 0;
+        }
+        let tenant = self.slots[self.rr].tenant;
+        let swap_charge_s = match self.active {
+            Some(t) if t == tenant => 0.0,
+            None => 0.0,
+            Some(_) => {
+                self.swaps += 1;
+                self.swap_cost_s
+            }
+        };
+        self.active = Some(tenant);
+        let step = self.slots[self.rr].cursor.advance().expect("live slot has steps left");
+        self.ran = (self.ran + 1).min(self.quantum_steps);
+        let done = self.slots[self.rr].cursor.is_done();
+        if done {
+            let slot = self.remove_at(self.rr);
+            self.retired_s += slot.cursor.consumed_s();
+        }
+        Some(InterleaveEvent { tenant, swap_charge_s, step, done })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{Schedule, ScheduleEntry};
+    use crate::serve::tenant::batch_fabric_s;
+
+    /// A synthetic serial chain schedule: `durs[i]` seconds per layer.
+    fn chain_sched(durs: &[f64]) -> Arc<CachedSchedule> {
+        let mut entries = Vec::new();
+        let mut t = 0.0;
+        for (i, &d) in durs.iter().enumerate() {
+            entries.push(ScheduleEntry {
+                layer: i,
+                mode: 0,
+                start: t,
+                end: t + d,
+                fmus: vec![0],
+                cus: vec![0],
+            });
+            t += d;
+        }
+        Arc::new(CachedSchedule::new(Schedule { entries, makespan: t }))
+    }
+
+    /// Walk a cursor solo to completion and return its final consumed.
+    fn solo_total(sched: &Arc<CachedSchedule>, batch: usize) -> f64 {
+        let mut c = BatchCursor::new(sched.clone(), batch);
+        while c.advance().is_some() {}
+        c.consumed_s()
+    }
+
+    #[test]
+    fn single_slot_degenerates_to_a_plain_cursor_walk() {
+        let sched = chain_sched(&[0.3, 0.7, 0.15]);
+        let mut il = Interleaver::new(1e-3, 2);
+        il.add(7, BatchCursor::new(sched.clone(), 3));
+        let mut steps = 0;
+        let mut last_done = false;
+        while let Some(ev) = il.advance() {
+            assert_eq!(ev.tenant, 7);
+            assert_eq!(ev.swap_charge_s, 0.0, "solo walk never swaps");
+            steps += 1;
+            last_done = ev.done;
+        }
+        assert_eq!(steps, 9);
+        assert!(last_done);
+        assert_eq!(il.swaps(), 0);
+        assert!(il.is_empty());
+        // Conservation degenerates to the solo identity.
+        assert_eq!(il.consumed_s(), solo_total(&sched, 3));
+        assert_eq!(il.consumed_s(), batch_fabric_s(sched.per_request_s, 3));
+    }
+
+    #[test]
+    fn conservation_holds_bit_for_bit_with_swap_charges() {
+        let a = chain_sched(&[0.4, 0.6, 1.1]);
+        let b = chain_sched(&[0.25, 0.25, 0.25, 0.25]);
+        let swap = 0.0625; // exactly representable: charges add exactly
+        for quantum in [1usize, 2, 3, 7] {
+            let mut il = Interleaver::new(swap, quantum);
+            il.add(0, BatchCursor::new(a.clone(), 2));
+            il.add(1, BatchCursor::new(b.clone(), 3));
+            let mut finals = [0.0f64; 2];
+            while let Some(ev) = il.advance() {
+                if ev.done {
+                    finals[ev.tenant] = ev.step.consumed_s;
+                }
+            }
+            assert!(il.is_empty());
+            assert!(il.swaps() >= 1, "two live cursors must swap at least once");
+            // Each cursor's interleaved walk is the solo walk bit-for-bit.
+            assert_eq!(finals[0], solo_total(&a, 2), "quantum {quantum}");
+            assert_eq!(finals[1], solo_total(&b, 3), "quantum {quantum}");
+            // Sum of interleaved step durations + swap charges == sum of
+            // solo walks + charges, exactly.
+            let expect =
+                solo_total(&a, 2) + solo_total(&b, 3) + il.swaps() as f64 * swap;
+            assert_eq!(il.consumed_s(), expect, "quantum {quantum}");
+        }
+    }
+
+    #[test]
+    fn quantum_bounds_swap_frequency() {
+        let a = chain_sched(&[1.0, 1.0]);
+        let b = chain_sched(&[1.0, 1.0]);
+        // Quantum 1: every step rotates -> swap per step (minus the
+        // first activation). 2 requests x 2 steps x 2 tenants = 8 steps.
+        let mut il1 = Interleaver::new(0.5, 1);
+        il1.add(0, BatchCursor::new(a.clone(), 2));
+        il1.add(1, BatchCursor::new(b.clone(), 2));
+        while il1.advance().is_some() {}
+        assert_eq!(il1.swaps(), 7);
+        // Quantum 4: each tenant runs a whole batch's steps per turn.
+        let mut il4 = Interleaver::new(0.5, 4);
+        il4.add(0, BatchCursor::new(a, 2));
+        il4.add(1, BatchCursor::new(b, 2));
+        while il4.advance().is_some() {}
+        assert_eq!(il4.swaps(), 1, "one swap: a's 4 steps, then b's 4 steps");
+    }
+
+    #[test]
+    fn readmission_after_completion_reuses_resident_context() {
+        let s = chain_sched(&[1.0]);
+        let mut il = Interleaver::new(0.25, 8);
+        il.add(0, BatchCursor::new(s.clone(), 1));
+        let ev = il.advance().unwrap();
+        assert!(ev.done);
+        assert!(il.is_empty());
+        // Same tenant again: its context never left the slice.
+        il.add(0, BatchCursor::new(s.clone(), 1));
+        let ev = il.advance().unwrap();
+        assert_eq!(ev.swap_charge_s, 0.0);
+        assert_eq!(il.swaps(), 0);
+        // A different tenant does pay the swap.
+        il.add(1, BatchCursor::new(s, 1));
+        let ev = il.advance().unwrap();
+        assert_eq!(ev.tenant, 1);
+        assert_eq!(ev.swap_charge_s, 0.25);
+        assert_eq!(il.swaps(), 1);
+    }
+
+    #[test]
+    fn peek_matches_the_next_advance() {
+        let a = chain_sched(&[0.5, 1.5]);
+        let b = chain_sched(&[0.75]);
+        let mut il = Interleaver::new(0.125, 1);
+        il.add(0, BatchCursor::new(a, 1));
+        il.add(1, BatchCursor::new(b, 1));
+        while let Some(peek) = il.peek_next_s() {
+            let ev = il.advance().unwrap();
+            assert_eq!(peek, ev.swap_charge_s + ev.step.dur_s);
+        }
+        assert!(il.advance().is_none());
+    }
+
+    #[test]
+    fn take_removes_a_live_cursor_for_unpacking() {
+        let a = chain_sched(&[1.0, 1.0]);
+        let b = chain_sched(&[1.0, 1.0]);
+        let mut il = Interleaver::new(0.0, 1);
+        il.add(0, BatchCursor::new(a, 1));
+        il.add(1, BatchCursor::new(b, 1));
+        il.advance().unwrap();
+        assert!(il.contains(0) && il.contains(1));
+        let cur = il.take(1).expect("tenant 1 has a live slot");
+        assert!(cur.remaining_s() > 0.0);
+        assert!(!il.contains(1));
+        assert!(il.take(1).is_none());
+        // The remaining slot still drains cleanly.
+        let mut steps = 0;
+        while il.advance().is_some() {
+            steps += 1;
+        }
+        assert_eq!(steps, 1);
+    }
+
+    #[test]
+    fn retarget_rebases_one_slot_mid_flight() {
+        let slow = chain_sched(&[1.0, 1.0, 1.0, 1.0]);
+        let fast = chain_sched(&[0.25, 0.25, 0.25, 0.25]);
+        let mut il = Interleaver::new(0.0, 2);
+        il.add(0, BatchCursor::new(slow.clone(), 1));
+        il.advance().unwrap();
+        il.advance().unwrap();
+        assert!(il.retarget(0, fast, 0.5));
+        assert!(!il.retarget(9, chain_sched(&[1.0]), 0.0));
+        let mut last = 0.0;
+        while let Some(ev) = il.advance() {
+            last = ev.step.consumed_s;
+        }
+        // 2 slow layers + one 0.5 charge + 2 fast layers.
+        assert!((last - (2.0 + 0.5 + 0.5)).abs() < 1e-12, "got {last}");
+    }
+}

@@ -3,6 +3,11 @@
 //! multiple independent accelerators" exercised *online*, not as an
 //! offline what-if.
 //!
+//! See `ARCHITECTURE.md` at the repository root for the full
+//! paper-to-code map and a data-flow walkthrough of this subsystem
+//! (queue → policy → scheduler/sim → report), including the
+//! cursor/interleaver lifecycle diagram.
+//!
 //! # The cursor execution model
 //!
 //! FILCO's runtime parameters arrive per layer via instruction decode,
@@ -21,7 +26,14 @@
 //!   ([`should_preempt`]) are *preempted at the next layer boundary*:
 //!   the cursor pays `switch_cost_s` mid-DAG and resumes the remaining
 //!   layers on the new slice's cached schedule. Everyone else drains
-//!   on the old composition and switches at the batch boundary.
+//!   on the old composition and switches at the batch boundary;
+//! * two low-backlog tenants that together fit one partition
+//!   ([`should_pack`]) are *packed*: their cursors time-multiplex one
+//!   slice through an [`Interleaver`], a quantum of layer steps at a
+//!   time, paying `switch_cost_s` per context swap — fabric-time
+//!   conservation holds exactly (interleaved walk == solo walks + swap
+//!   charges, bit-for-bit), and the freed partition goes to whoever is
+//!   actually backlogged.
 //!
 //! The live threaded scheduler and the virtual-time simulator share
 //! this one execution model, so simulated what-ifs and live runs agree
@@ -35,28 +47,36 @@
 //! * [`tenant`] — tenant specs (queue depth, max batch, optional
 //!   [`RateLimit`]), the [`BatchCursor`] / [`TokenBucket`] building
 //!   blocks, and deterministic Poisson / phased traffic generators.
+//! * [`interleave`] — the per-partition [`Interleaver`]: two or more
+//!   cursors on one slice, swap charges, exact conservation.
 //! * [`cache`] — the schedule cache: two-stage DSE results memoized on
 //!   `(FilcoConfig, Dag)` with their step timelines, persistable to
 //!   disk (JSON) so restarts skip the GA/MILP entirely.
 //! * [`policy`] — backlog-time → partition-weight mapping with
-//!   hysteresis, plus the preemption-benefit term weighing remaining
-//!   in-flight work against the mid-DAG switch cost.
+//!   hysteresis, the preemption-benefit term weighing remaining
+//!   in-flight work against the mid-DAG switch cost, and the packing
+//!   fit/amortization terms ([`should_pack`] / [`should_unpack`]).
 //! * [`sim`] — deterministic virtual-time serving simulator comparing
 //!   unified time-sharing vs. a static equal split vs. dynamic
-//!   re-composition (preemptive or batch-boundary) on the same trace.
+//!   re-composition (preemptive or batch-boundary, packed or not) on
+//!   the same trace.
 //! * [`scheduler`] — the live threaded scheduler: one worker per
-//!   tenant stepping its cursor layer-by-layer, a policy thread driving
+//!   tenant stepping an interleaver layer-by-layer (solo tenants are
+//!   the one-slot case), a policy thread driving
 //!   [`Reconfigurator::split`] from observed queue depths and in-flight
 //!   remaining work, preemptions landing at worker step boundaries,
-//!   switch costs charged into the per-tenant fabric-time accounting.
+//!   pack/unpack transitions landing at batch boundaries, switch costs
+//!   charged into the per-tenant fabric-time accounting.
 //!
 //! The single-model serving leader ([`Server`]) and its building blocks
 //! ([`Servable`], [`Request`], [`RequestQueue`], [`Metrics`]) are
 //! re-exported here: the serve layer generalizes them to N tenants.
 //!
 //! [`Reconfigurator::split`]: crate::coordinator::reconfig::Reconfigurator::split
+#![warn(missing_docs)]
 
 pub mod cache;
+pub mod interleave;
 pub mod policy;
 pub mod queue;
 pub mod scheduler;
@@ -67,7 +87,11 @@ pub use crate::coordinator::metrics::{LatencyHistogram, Metrics};
 pub use crate::coordinator::serving::{Request, RequestQueue, Response, Servable, Server};
 
 pub use cache::{dag_fingerprint, CachedSchedule, ScheduleCache};
-pub use policy::{backlog_weights, reduce_weights, should_preempt, should_resplit, PolicyConfig};
+pub use interleave::{InterleaveEvent, Interleaver};
+pub use policy::{
+    backlog_weights, pack_candidates, pack_quantum_s, reduce_weights, should_pack,
+    should_preempt, should_resplit, should_unpack, PolicyConfig,
+};
 pub use queue::{BoundedQueue, PushError};
 pub use scheduler::{FabricScheduler, LiveConfig, LiveReport, LiveRequest, TenantReport};
 pub use sim::{equal_split_per_request, simulate, Scenario, ServeReport, Strategy};

@@ -57,11 +57,40 @@ pub struct PolicyConfig {
     /// `f64::INFINITY` disables preemption entirely (re-compositions
     /// then land only at batch boundaries, the pre-cursor behavior).
     pub preempt_margin_factor: f64,
+    /// Cross-tenant packing fit: two tenants may share one partition
+    /// (time-multiplexed by the [`Interleaver`](super::Interleaver))
+    /// only while their combined backlog time, scaled by this factor,
+    /// still fits inside one policy epoch of that partition's fabric
+    /// time. Larger is more conservative. `f64::INFINITY` disables
+    /// packing entirely (the default — every tenant keeps its own
+    /// partition, the pre-packing behavior).
+    pub pack_headroom_factor: f64,
+    /// Per-swap amortization gate: pack only while one context swap
+    /// (`switch_cost_s`) costs no more than this fraction of the fabric
+    /// time a packed cursor runs between swaps (its quantum).
+    pub pack_swap_margin: f64,
+    /// Layer steps a packed cursor runs before the interleaver rotates
+    /// to the next tenant (clamped to at least 1 at use).
+    pub pack_quantum_steps: usize,
+    /// Unpack hysteresis: a packed pair is split back onto their own
+    /// partitions once their combined backlog exceeds this multiple of
+    /// the pack-fit bound (`epoch / pack_headroom_factor`). Must be
+    /// > 1 to avoid pack/unpack churn at the boundary.
+    pub pack_unpack_factor: f64,
 }
 
 impl Default for PolicyConfig {
     fn default() -> Self {
-        Self { epoch_s: 0.05, max_weight: 8, min_backlog_factor: 50.0, preempt_margin_factor: 1.0 }
+        Self {
+            epoch_s: 0.05,
+            max_weight: 8,
+            min_backlog_factor: 50.0,
+            preempt_margin_factor: 1.0,
+            pack_headroom_factor: f64::INFINITY,
+            pack_swap_margin: 0.25,
+            pack_quantum_steps: 4,
+            pack_unpack_factor: 2.0,
+        }
     }
 }
 
@@ -76,6 +105,7 @@ impl PolicyConfig {
             max_weight: 8,
             min_backlog_factor: 5.0,
             preempt_margin_factor: 1.0,
+            ..Self::default()
         }
     }
 
@@ -89,6 +119,19 @@ impl PolicyConfig {
     /// Is mid-DAG preemption enabled at all?
     pub fn preemption_enabled(&self) -> bool {
         self.preempt_margin_factor.is_finite()
+    }
+
+    /// Same policy with cross-tenant packing enabled at the default fit
+    /// bound (combined backlog must fit half an epoch of one
+    /// partition's fabric time).
+    pub fn with_packing(mut self) -> Self {
+        self.pack_headroom_factor = 2.0;
+        self
+    }
+
+    /// Is cross-tenant packing enabled at all?
+    pub fn packing_enabled(&self) -> bool {
+        self.pack_headroom_factor.is_finite()
     }
 }
 
@@ -134,6 +177,80 @@ pub fn should_preempt(
     }
     remaining_old_s - (remaining_new_s + switch_cost_s)
         > cfg.preempt_margin_factor * switch_cost_s
+}
+
+/// The packing-benefit term: should two tenants share one partition,
+/// time-multiplexed at layer-step granularity?
+///
+/// Mirrors [`should_preempt`]'s cost-vs-benefit shape with two gates:
+///
+/// * **fit** — `combined_backlog_s` (the candidates' queued + in-flight
+///   fabric seconds) scaled by `pack_headroom_factor` must fit inside
+///   one policy epoch (`epoch_s`) of the shared partition's fabric
+///   time, i.e. the pair must be light enough that one slice serves
+///   both without falling behind;
+/// * **amortization** — one context swap (`switch_cost_s`) must cost at
+///   most `pack_swap_margin` of the fabric time a packed cursor runs
+///   between swaps (`quantum_s`), so the swap overhead stays a bounded
+///   fraction of useful work.
+///
+/// All arguments are fabric seconds. With packing disabled
+/// (`pack_headroom_factor == INFINITY`, the default) this always
+/// returns false.
+pub fn should_pack(
+    combined_backlog_s: f64,
+    epoch_s: f64,
+    quantum_s: f64,
+    switch_cost_s: f64,
+    cfg: &PolicyConfig,
+) -> bool {
+    cfg.packing_enabled()
+        && combined_backlog_s * cfg.pack_headroom_factor <= epoch_s
+        && switch_cost_s <= cfg.pack_swap_margin * quantum_s
+}
+
+/// Pick the pack-candidate pair from per-tenant backlog times (fabric
+/// seconds): the two lightest tenants (index tiebreak), gated on
+/// *demonstrated skew* — the rest of the fabric must carry strictly
+/// more backlog than the pair, so an all-idle fabric (ties) never
+/// packs its heavy tenant by accident, and packing always frees
+/// capacity someone else wants. Returns `None` when there are fewer
+/// than two tenants or no skew. Shared by the live scheduler and the
+/// simulator so their candidate selection can never diverge.
+pub fn pack_candidates(backlog_s: &[f64]) -> Option<(usize, usize)> {
+    if backlog_s.len() < 2 {
+        return None;
+    }
+    let mut order: Vec<usize> = (0..backlog_s.len()).collect();
+    order.sort_by(|&x, &y| backlog_s[x].partial_cmp(&backlog_s[y]).unwrap().then(x.cmp(&y)));
+    let (a, b) = (order[0].min(order[1]), order[0].max(order[1]));
+    let combined = backlog_s[a] + backlog_s[b];
+    let total: f64 = backlog_s.iter().sum();
+    (combined < total - combined).then_some((a, b))
+}
+
+/// Fabric seconds a packed cursor runs between context swaps: the
+/// quantum's step count at the *slower* candidate's per-step rate.
+/// Each candidate is `(per_request_s, steps_per_request)` on its
+/// current schedule. Shared by the live scheduler and the simulator.
+pub fn pack_quantum_s(quantum_steps: usize, candidates: [(f64, usize); 2]) -> f64 {
+    let q = quantum_steps.max(1) as f64;
+    candidates
+        .iter()
+        .map(|&(per, steps)| q * per / steps.max(1) as f64)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Should a packed pair be split back onto their own partitions?
+///
+/// Unpacks once the combined backlog exceeds the pack-fit bound
+/// (`epoch_s / pack_headroom_factor`) by the `pack_unpack_factor`
+/// hysteresis — strictly above the [`should_pack`] threshold, so a pair
+/// sitting exactly at the fit bound never churns. All arguments are
+/// fabric seconds.
+pub fn should_unpack(combined_backlog_s: f64, epoch_s: f64, cfg: &PolicyConfig) -> bool {
+    cfg.packing_enabled()
+        && combined_backlog_s * cfg.pack_headroom_factor > cfg.pack_unpack_factor * epoch_s
 }
 
 #[cfg(test)]
@@ -192,6 +309,69 @@ mod tests {
         let off = cfg.without_preemption();
         assert!(!off.preemption_enabled());
         assert!(!should_preempt(1e9, 0.0, sw, &off));
+    }
+
+    #[test]
+    fn packing_disabled_by_default() {
+        let cfg = PolicyConfig::default();
+        assert!(!cfg.packing_enabled());
+        // Whatever the numbers, a disabled policy never packs.
+        assert!(!should_pack(0.0, 1.0, 1.0, 0.0, &cfg));
+        assert!(!should_unpack(1e9, 1.0, &cfg));
+        let on = cfg.with_packing();
+        assert!(on.packing_enabled());
+        assert!(on.preemption_enabled(), "packing must not disturb preemption");
+    }
+
+    #[test]
+    fn packing_weighs_fit_and_swap_amortization() {
+        let cfg = PolicyConfig { pack_headroom_factor: 2.0, ..PolicyConfig::default() };
+        let (epoch, quantum, sw) = (1.0, 0.1, 1e-3);
+        // Light pair, cheap swaps: pack.
+        assert!(should_pack(0.2, epoch, quantum, sw, &cfg));
+        // Combined backlog above epoch/headroom: decline.
+        assert!(!should_pack(0.6, epoch, quantum, sw, &cfg));
+        // Swap cost above the amortization margin of a quantum: decline.
+        assert!(!should_pack(0.2, epoch, quantum, 0.5 * quantum, &cfg));
+    }
+
+    #[test]
+    fn pack_candidates_need_skew() {
+        // The two lightest tenants, only when the rest out-backlogs them.
+        assert_eq!(pack_candidates(&[10.0, 0.5, 0.25]), Some((1, 2)));
+        // Index tiebreak is deterministic.
+        assert_eq!(pack_candidates(&[10.0, 0.0, 0.0, 0.0]), Some((1, 2)));
+        // All idle (ties): no skew, no pack — never grab the heavy
+        // tenant by accident.
+        assert_eq!(pack_candidates(&[0.0, 0.0, 0.0]), None);
+        // Two tenants: the pair IS the fabric; packing frees nothing.
+        assert_eq!(pack_candidates(&[1.0, 2.0]), None);
+        assert_eq!(pack_candidates(&[1.0]), None);
+    }
+
+    #[test]
+    fn pack_quantum_uses_the_slower_candidate() {
+        // 4 steps at per-step 0.25 vs per-step 1.0: the slower (finer)
+        // amortization window wins.
+        let q = pack_quantum_s(4, [(1.0, 4), (4.0, 4)]);
+        assert!((q - 1.0).abs() < 1e-12);
+        // Degenerate step counts are clamped.
+        assert!(pack_quantum_s(0, [(1.0, 0), (1.0, 1)]).is_finite());
+    }
+
+    #[test]
+    fn unpack_hysteresis_sits_above_the_pack_bound() {
+        let cfg = PolicyConfig {
+            pack_headroom_factor: 2.0,
+            pack_unpack_factor: 2.0,
+            ..PolicyConfig::default()
+        };
+        let epoch = 1.0;
+        // Fit bound is epoch/headroom = 0.5; unpack bound is 1.0.
+        assert!(should_pack(0.5, epoch, 1.0, 0.0, &cfg));
+        assert!(!should_unpack(0.5, epoch, &cfg), "at the fit bound: no churn");
+        assert!(!should_unpack(1.0, epoch, &cfg), "hysteresis band holds the pack");
+        assert!(should_unpack(1.5, epoch, &cfg), "well past the band: unpack");
     }
 
     #[test]

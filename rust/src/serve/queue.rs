@@ -52,6 +52,9 @@ impl<T> Default for BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Queue admitting at most `capacity` items (min 1). All methods
+    /// are safe to call from any thread; one internal mutex guards the
+    /// deque and the closed flag together.
     pub fn new(capacity: usize) -> Self {
         Self {
             state: Mutex::new(State { items: VecDeque::new(), closed: false }),
@@ -60,10 +63,12 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Queue with no admission bound (`capacity == usize::MAX`).
     pub fn unbounded() -> Self {
         Self::new(usize::MAX)
     }
 
+    /// Admission bound this queue was built with.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -93,6 +98,7 @@ impl<T> BoundedQueue<T> {
         self.cv.notify_all();
     }
 
+    /// Has [`Self::close`] been called? (Pending items may remain.)
     pub fn is_closed(&self) -> bool {
         self.state.lock().unwrap().closed
     }
@@ -133,10 +139,12 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Items currently queued (a racy snapshot under concurrency).
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().items.len()
     }
 
+    /// Is the queue currently empty? (A racy snapshot, like [`Self::len`].)
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

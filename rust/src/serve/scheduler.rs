@@ -1,25 +1,39 @@
 //! Live multi-tenant fabric scheduler: real threads, real queues,
-//! layer-granular preemption.
+//! layer-granular preemption, cross-tenant packing.
 //!
-//! One worker thread per tenant, each owning that tenant's current
-//! fabric [`Partition`](crate::coordinator::reconfig::Partition) and
-//! draining its bounded queue in batches. Batches execute through a
-//! [`BatchCursor`]: the worker retires one layer step at a time,
-//! charging each step's fabric seconds as it goes, and checks the
-//! tenant's preemption generation between steps — so when the policy
-//! thread re-splits the fabric through the
-//! [`Reconfigurator`], the switch lands at the *next layer boundary* of
-//! an in-flight batch (the remaining layers resume on the new slice's
-//! cached schedule) instead of waiting for the whole DAG to drain.
-//! Schedules resolve through the [`ScheduleCache`] so the DSE never
-//! runs on the hot path after a composition has been seen once.
+//! One worker thread per tenant. A worker that *leads* a partition
+//! drains its tenant's bounded queue in batches and executes them
+//! through an [`Interleaver`] — a solo tenant's interleaver holds one
+//! [`BatchCursor`]; a packed partition's holds one per co-located
+//! tenant, time-multiplexed a quantum of layer steps at a time with
+//! the composition-switch cost charged per context swap. The worker
+//! retires one layer step at a time, charging each step's fabric
+//! seconds as it goes, and checks each slot tenant's preemption
+//! generation between steps — so when the policy thread re-splits the
+//! fabric through the [`Reconfigurator`], the switch lands at the
+//! *next layer boundary* of an in-flight batch (the remaining layers
+//! resume on the new slice's cached schedule) instead of waiting for
+//! the whole DAG to drain.
+//!
+//! Cross-tenant packing ([`should_pack`]) assigns a light tenant to
+//! another tenant's partition: the hosted tenant's worker parks and the
+//! host worker drains both queues into its interleaver. Pack and
+//! unpack transitions are published by the policy thread under the
+//! same lock discipline as preemptions (plan lock + generation bump)
+//! and observed by workers at batch boundaries — which are layer-step
+//! boundaries of the interleaved walk. Schedules resolve through the
+//! [`ScheduleCache`] so the DSE never runs on the hot path after a
+//! composition has been seen once.
 //!
 //! Fabric time is *accounted* (the modelled VCK190 is not attached);
-//! `timescale` optionally paces workers by sleeping a scaled-down
-//! multiple of each step's fabric time so queue depths — and therefore
-//! the policy — behave like they would on hardware.
+//! `timescale` optionally paces workers so queue depths — and
+//! therefore the policy — behave like they would on hardware. Pacing
+//! is deadline-based (an internal pacer sleeps until `start +
+//! consumed × timescale`) rather than per-step, so the
+//! scheduler-jitter of thousands of sub-millisecond sleeps does not
+//! accumulate into drift on long runs.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -29,13 +43,19 @@ use crate::coordinator::reconfig::Reconfigurator;
 use crate::platform::Platform;
 
 use super::cache::{CachedSchedule, ScheduleCache};
-use super::policy::{backlog_weights, should_preempt, should_resplit, PolicyConfig};
+use super::interleave::Interleaver;
+use super::policy::{
+    backlog_weights, pack_candidates, pack_quantum_s, should_pack, should_preempt,
+    should_resplit, should_unpack, PolicyConfig,
+};
 use super::queue::{BoundedQueue, PushError};
 use super::tenant::{BatchCursor, TenantSpec, TokenBucket};
 
 /// Live-mode knobs.
 #[derive(Debug, Clone)]
 pub struct LiveConfig {
+    /// Re-composition / preemption / packing policy (epochs in wall
+    /// seconds for the live scheduler).
     pub policy: PolicyConfig,
     /// Wall seconds slept per fabric second to emulate device pacing;
     /// 0.0 drains at host speed (tests).
@@ -57,13 +77,47 @@ impl Default for LiveConfig {
 /// One request in the live path.
 #[derive(Debug)]
 pub struct LiveRequest {
+    /// Caller-assigned request id (reporting only).
     pub id: u64,
+    /// Wall-clock admission instant; latency is measured from here.
     pub enqueued: Instant,
 }
 
 impl LiveRequest {
+    /// A request enqueued now.
     pub fn new(id: u64) -> Self {
         Self { id, enqueued: Instant::now() }
+    }
+}
+
+/// Deadline-based pacer: tracks fabric seconds consumed since an
+/// anchor instant and sleeps until `anchor + consumed × timescale`,
+/// so per-sleep overshoot (OS scheduler granularity) is absorbed by
+/// later steps instead of accumulating — a run of thousands of
+/// sub-millisecond steps drifts by at most one sleep's overshoot, not
+/// the sum of all of them. Workers anchor one pacer per batch.
+struct Pacer {
+    anchor: Instant,
+    consumed_s: f64,
+}
+
+impl Pacer {
+    fn new() -> Self {
+        Self { anchor: Instant::now(), consumed_s: 0.0 }
+    }
+
+    /// Account `fabric_dur_s` and sleep off any lead over the
+    /// deadline, capped at `max_sleep` per call (an extreme or
+    /// non-finite timescale must throttle, not panic or hang).
+    fn pace(&mut self, fabric_dur_s: f64, timescale: f64, max_sleep: Duration) {
+        if timescale <= 0.0 {
+            return;
+        }
+        self.consumed_s += fabric_dur_s.max(0.0);
+        let lead = self.consumed_s * timescale - self.anchor.elapsed().as_secs_f64();
+        if lead > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(lead.min(max_sleep.as_secs_f64())));
+        }
     }
 }
 
@@ -114,10 +168,17 @@ impl TenantRuntime {
 /// Per-tenant outcome of a live run.
 #[derive(Debug, Clone)]
 pub struct TenantReport {
+    /// Tenant name (from its [`TenantSpec`]).
     pub name: String,
+    /// Requests fully served.
     pub served: u64,
+    /// Requests refused by the tenant's fabric-time token bucket.
     pub throttled: u64,
+    /// Fabric seconds consumed on this tenant's behalf (layer steps,
+    /// swap charges while packed, and switch charges while leading a
+    /// partition).
     pub fabric_s: f64,
+    /// Wall-clock latency distribution of served requests (seconds).
     pub wall_latency: LatencyHistogram,
 }
 
@@ -131,28 +192,41 @@ impl TenantReport {
 /// Outcome of a live run.
 #[derive(Debug, Clone)]
 pub struct LiveReport {
+    /// One entry per tenant, in spec order.
     pub tenants: Vec<TenantReport>,
     /// Re-compositions performed (setup split excluded).
     pub switches: u64,
     /// In-flight batches preempted at a layer boundary.
     pub preemptions: u64,
+    /// Pack transitions (a tenant moved onto another's partition).
+    pub packs: u64,
+    /// Unpack transitions (a packed tenant given back its own slice).
+    pub unpacks: u64,
+    /// Cursor context swaps charged by partition interleavers.
+    pub pack_swaps: u64,
+    /// Interleaved walks that multiplexed two or more tenants.
+    pub packed_batches: u64,
     /// Schedule-cache activity during this run only (the cache may be
     /// shared with calibration or simulation phases).
     pub cache_hits: u64,
+    /// Schedule-cache misses during this run only.
     pub cache_misses: u64,
+    /// Wall-clock seconds from [`FabricScheduler::run`] entry to exit.
     pub wall_s: f64,
 }
 
 impl LiveReport {
+    /// Requests served across every tenant.
     pub fn total_served(&self) -> u64 {
         self.tenants.iter().map(|t| t.served).sum()
     }
 
-    /// Worst per-tenant p99 wall latency.
+    /// Worst per-tenant p99 wall latency (seconds).
     pub fn worst_p99_s(&self) -> f64 {
         self.tenants.iter().map(|t| t.p99_s()).fold(0.0, f64::max)
     }
 
+    /// Multi-line human-readable summary.
     pub fn summary(&self) -> String {
         let mut s = String::new();
         for t in &self.tenants {
@@ -166,10 +240,15 @@ impl LiveReport {
             ));
         }
         s.push_str(&format!(
-            "  {} re-compositions ({} preemptive) | worst p99 {:.3e} s | \
+            "  {} re-compositions ({} preemptive) | {} packs, {} unpacks, {} swaps, \
+             {} packed batches | worst p99 {:.3e} s | \
              schedule cache: {} hits, {} misses | {:.2} s wall",
             self.switches,
             self.preemptions,
+            self.packs,
+            self.unpacks,
+            self.pack_swaps,
+            self.packed_batches,
             self.worst_p99_s(),
             self.cache_hits,
             self.cache_misses,
@@ -180,29 +259,53 @@ impl LiveReport {
 }
 
 /// Live multi-tenant scheduler over a dynamically re-partitioned fabric.
+///
+/// Locking: per-tenant `plan` mutexes guard the (slice, schedule,
+/// preemption-generation) snapshot; `recon` + `weights` are held only
+/// by [`Self::policy_step`]; pack assignments (`host`) are written only
+/// by the policy thread while holding `recon` and read by workers with
+/// atomics at batch boundaries. No lock is held across a DSE run
+/// except a cache-miss's own computation.
 pub struct FabricScheduler {
     platform: Platform,
     base: FilcoConfig,
     cfg: LiveConfig,
     cache: Arc<ScheduleCache>,
     recon: Mutex<Reconfigurator>,
+    /// Per-*group* partition weights (one entry per partition leader).
     weights: Mutex<Vec<u32>>,
     tenants: Vec<TenantRuntime>,
+    /// `host[t]` is the tenant whose worker leads `t`'s partition;
+    /// `host[t] == t` means `t` leads its own. Written only by the
+    /// policy thread (under the `recon` lock), read by workers.
+    host: Vec<AtomicUsize>,
     /// Token-bucket clock origin.
     t0: Instant,
     /// Re-compositions after setup.
     switches: AtomicU64,
     /// Approved mid-DAG preemptions landed by workers.
     preemptions: AtomicU64,
+    /// Pack / unpack transitions decided by the policy.
+    packs: AtomicU64,
+    unpacks: AtomicU64,
+    /// Context swaps charged by worker interleavers.
+    pack_swaps: AtomicU64,
+    /// Interleaved walks holding two or more tenants' cursors.
+    packed_batches: AtomicU64,
     /// Bucket refusals per tenant index.
     throttled: Vec<AtomicU64>,
     stop_policy: AtomicBool,
+    /// Copy of the reconfigurator's switch cost (fabric seconds), so
+    /// workers never touch the `recon` lock on the hot path — the
+    /// policy thread may hold it across a schedule-cache miss.
+    switch_cost_s: f64,
 }
 
 impl FabricScheduler {
-    /// Build the scheduler: equal initial split, schedules resolved
-    /// through `cache` (pre-warming it counts as misses here, hits on
-    /// every later re-composition into a seen shape).
+    /// Build the scheduler: equal initial split (every tenant leads its
+    /// own partition), schedules resolved through `cache` (pre-warming
+    /// it counts as misses here, hits on every later re-composition
+    /// into a seen shape).
     pub fn new(
         platform: Platform,
         base: FilcoConfig,
@@ -220,6 +323,8 @@ impl FabricScheduler {
         let parts = recon.split(&named)?;
         recon.validate()?;
         let throttled = specs.iter().map(|_| AtomicU64::new(0)).collect();
+        let host = (0..specs.len()).map(AtomicUsize::new).collect();
+        let switch_cost_s = recon.switch_cost_s();
         let tenants = specs
             .into_iter()
             .zip(&parts)
@@ -252,16 +357,34 @@ impl FabricScheduler {
             recon: Mutex::new(recon),
             weights: Mutex::new(weights),
             tenants,
+            host,
             t0: Instant::now(),
             switches: AtomicU64::new(0),
             preemptions: AtomicU64::new(0),
+            packs: AtomicU64::new(0),
+            unpacks: AtomicU64::new(0),
+            pack_swaps: AtomicU64::new(0),
+            packed_batches: AtomicU64::new(0),
             throttled,
             stop_policy: AtomicBool::new(false),
+            switch_cost_s,
         })
     }
 
+    /// Number of tenants this scheduler serves.
     pub fn num_tenants(&self) -> usize {
         self.tenants.len()
+    }
+
+    /// The tenant whose worker currently leads `t`'s partition (`t`
+    /// itself unless the policy packed `t` onto another's slice).
+    pub fn host_of(&self, t: usize) -> usize {
+        let h = self.host[t].load(Ordering::Acquire);
+        if h < self.tenants.len() {
+            h
+        } else {
+            t
+        }
     }
 
     /// Admission-controlled enqueue for tenant `t`: closed check, then
@@ -307,7 +430,8 @@ impl FabricScheduler {
         }
     }
 
-    /// Current composition as `(name, fmus, cus)` triples.
+    /// Current composition as `(name, fmus, cus)` triples. Packed
+    /// tenants report their shared partition's dimensions.
     pub fn composition(&self) -> Vec<(String, u32, u32)> {
         self.tenants
             .iter()
@@ -318,73 +442,128 @@ impl FabricScheduler {
             .collect()
     }
 
-    fn pace(&self, fabric_dur_s: f64) {
-        if self.cfg.timescale > 0.0 {
-            // Clamp before Duration conversion: an extreme timescale
-            // (inf/NaN overflow) must not panic the worker.
-            let secs = (fabric_dur_s * self.cfg.timescale)
-                .min(self.cfg.max_sleep.as_secs_f64())
-                .max(0.0);
-            std::thread::sleep(Duration::from_secs_f64(secs));
+    /// Execute one interleaved walk over `batches` (one entry per
+    /// tenant with work; a solo walk is the one-slot case). Charges
+    /// step durations and swap costs into per-tenant fabric time,
+    /// paces by the deadline pacer, lands approved preemptions at step
+    /// boundaries, and records latencies as each slot's batch retires.
+    fn serve_interleaved(&self, batches: Vec<(usize, Vec<LiveRequest>)>) {
+        let mut il = Interleaver::new(self.switch_cost_s, self.cfg.policy.pack_quantum_steps);
+        // Snapshot (plan, preemption generation) under each tenant's
+        // plan lock: the policy writes both under the same lock, so a
+        // worker can never pair a new schedule with a stale generation
+        // and count a phantom preemption.
+        let mut gens: Vec<(usize, u64)> = Vec::with_capacity(batches.len());
+        for (tenant, reqs) in &batches {
+            let tr = &self.tenants[*tenant];
+            {
+                let p = tr.plan.lock().unwrap();
+                let g = tr.preempt_gen.load(Ordering::Acquire);
+                il.add(*tenant, BatchCursor::new(p.sched.clone(), reqs.len()));
+                gens.push((*tenant, g));
+            }
+            tr.publish_remaining(il.slot_remaining_s(*tenant));
         }
+        if batches.len() > 1 {
+            self.packed_batches.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut pacer = Pacer::new();
+        while let Some(ev) = il.advance() {
+            let dur = ev.step.dur_s + ev.swap_charge_s;
+            let tr = &self.tenants[ev.tenant];
+            *tr.fabric_s.lock().unwrap() += dur;
+            pacer.pace(dur, self.cfg.timescale, self.cfg.max_sleep);
+            tr.publish_remaining(il.slot_remaining_s(ev.tenant));
+            if ev.done {
+                let (_, reqs) = batches.iter().find(|(t, _)| *t == ev.tenant).unwrap();
+                let mut hist = tr.hist.lock().unwrap();
+                for req in reqs {
+                    hist.record(req.enqueued.elapsed().as_secs_f64());
+                }
+                drop(hist);
+                tr.served.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+            }
+            // Approved preemptions land here, at the step boundary: the
+            // affected slot re-bases its remaining layers onto the
+            // slice the policy just assigned its tenant.
+            for g in gens.iter_mut() {
+                let (tenant, seen) = *g;
+                if !il.contains(tenant) {
+                    continue;
+                }
+                let tt = &self.tenants[tenant];
+                let cur = tt.preempt_gen.load(Ordering::Acquire);
+                if cur != seen {
+                    g.1 = cur;
+                    let sched = tt.plan.lock().unwrap().sched.clone();
+                    // The mid-DAG switch cost is charged by policy_step
+                    // into fabric_s (exactly once per slice per
+                    // re-split); the cursor only re-bases.
+                    il.retarget(tenant, sched, 0.0);
+                    self.preemptions.fetch_add(1, Ordering::Relaxed);
+                    tt.publish_remaining(il.slot_remaining_s(tenant));
+                }
+            }
+        }
+        for (tenant, _) in &batches {
+            self.tenants[*tenant].publish_remaining(0.0);
+        }
+        self.pack_swaps.fetch_add(il.swaps(), Ordering::Relaxed);
     }
 
     fn worker(&self, i: usize) {
         let t = &self.tenants[i];
         loop {
-            let Some(batch) = t.queue.pop_batch_timeout(t.spec.max_batch, Duration::from_millis(20))
+            // Parked: the policy packed this tenant onto another's
+            // partition, whose worker drains our queue. Once the queue
+            // closes, fall through and serve any remainder ourselves —
+            // the host may exit before us and requests must not strand.
+            // Poll at the idle pop's cadence: transitions land at
+            // policy epochs (default 200 ms), so faster wakeups would
+            // buy nothing.
+            if self.host_of(i) != i && !t.queue.is_closed() {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            let Some(own) = t.queue.pop_batch_timeout(t.spec.max_batch, Duration::from_millis(20))
             else {
                 break; // closed and drained
             };
-            if batch.is_empty() {
-                continue; // timeout — check for close, re-observe plan
+            let mut batches: Vec<(usize, Vec<LiveRequest>)> = Vec::new();
+            if !own.is_empty() {
+                batches.push((i, own));
             }
-            let (mut cursor, mut seen_gen) = {
-                let p = t.plan.lock().unwrap();
-                let g = t.preempt_gen.load(Ordering::Acquire);
-                (BatchCursor::new(p.sched.clone(), batch.len()), g)
-            };
-            t.publish_remaining(cursor.remaining_s());
-            // Retire the batch one layer step at a time; between steps,
-            // an approved preemption re-bases the remaining steps onto
-            // the slice the policy just assigned us.
-            while let Some(ev) = cursor.advance() {
-                *t.fabric_s.lock().unwrap() += ev.dur_s;
-                self.pace(ev.dur_s);
-                t.publish_remaining(cursor.remaining_s());
-                let cur_gen = t.preempt_gen.load(Ordering::Acquire);
-                if cur_gen != seen_gen {
-                    seen_gen = cur_gen;
-                    if !cursor.is_done() {
-                        let sched = t.plan.lock().unwrap().sched.clone();
-                        // The mid-DAG switch cost is charged by
-                        // policy_step into fabric_s (exactly once per
-                        // tenant per re-split); the cursor only
-                        // re-bases the remaining layers.
-                        cursor.retarget(sched, 0.0);
-                        self.preemptions.fetch_add(1, Ordering::Relaxed);
-                        t.publish_remaining(cursor.remaining_s());
+            // Drain packed partners' queues into extra interleaver
+            // slots (non-blocking; partnership is re-observed every
+            // batch, so pack/unpack transitions land at batch
+            // boundaries — themselves layer-step boundaries).
+            for (j, tj) in self.tenants.iter().enumerate() {
+                if j != i && self.host_of(j) == i {
+                    if let Some(b) = tj.queue.pop_batch_timeout(tj.spec.max_batch, Duration::ZERO)
+                    {
+                        if !b.is_empty() {
+                            batches.push((j, b));
+                        }
                     }
                 }
             }
-            t.publish_remaining(0.0);
-            let mut hist = t.hist.lock().unwrap();
-            for req in &batch {
-                hist.record(req.enqueued.elapsed().as_secs_f64());
+            if batches.is_empty() {
+                continue; // timeout — re-observe pack state and plan
             }
-            drop(hist);
-            t.served.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            self.serve_interleaved(batches);
         }
     }
 
     /// One policy evaluation: observe backlog (queued work, plus
-    /// in-flight remaining work when preemption is enabled), re-split
-    /// if warranted, and approve per-tenant mid-DAG preemptions whose
-    /// projected saving clears the switch-cost margin.
-    /// Public so step-driven callers (and tests) can run it without the
-    /// wall-clock loop.
+    /// in-flight remaining work when preemption is enabled), decide
+    /// pack/unpack transitions, re-split if warranted, and approve
+    /// per-tenant mid-DAG preemptions whose projected saving clears
+    /// the switch-cost margin. Public so step-driven callers (and
+    /// tests) can run it without the wall-clock loop.
     pub fn policy_step(&self) -> bool {
         let preempt_on = self.cfg.policy.preemption_enabled();
+        let pack_on = self.cfg.policy.packing_enabled();
+        let n = self.tenants.len();
         let per_req: Vec<f64> =
             self.tenants.iter().map(|t| t.plan.lock().unwrap().per_request_s()).collect();
         let backlog: Vec<f64> = self
@@ -398,18 +577,86 @@ impl FabricScheduler {
             })
             .collect();
         let total: f64 = backlog.iter().sum();
-        let proposed = backlog_weights(&backlog, self.cfg.policy.max_weight);
         let mut recon = self.recon.lock().unwrap();
         let mut weights = self.weights.lock().unwrap();
-        if !should_resplit(&weights[..], &proposed, total, recon.switch_cost_s(), &self.cfg.policy)
-        {
+        // ---- pack / unpack transitions (this thread is the only
+        // host[] writer; at most one packed pair at a time) ----
+        //
+        // Live epochs are wall-clock, but the pack fit bound is about
+        // the shared slice's *fabric* throughput per epoch: with pacing
+        // on, one wall epoch executes epoch_s/timescale fabric seconds.
+        // Unpaced runs drain at host speed, where the wall epoch itself
+        // is the only meaningful budget.
+        let epoch_fabric_s = if self.cfg.timescale > 0.0 {
+            self.cfg.policy.epoch_s / self.cfg.timescale
+        } else {
+            self.cfg.policy.epoch_s
+        };
+        let mut grouping_changed = false;
+        if pack_on && n >= 2 {
+            let pair = (0..n).find_map(|j| {
+                let h = self.host_of(j);
+                (h != j).then_some((h, j))
+            });
+            match pair {
+                Some((a, b)) => {
+                    let combined = backlog[a] + backlog[b];
+                    if should_unpack(combined, epoch_fabric_s, &self.cfg.policy) {
+                        self.host[b].store(b, Ordering::Release);
+                        self.unpacks.fetch_add(1, Ordering::Relaxed);
+                        grouping_changed = true;
+                    }
+                }
+                None => {
+                    // Candidate selection and the swap-amortization
+                    // window are shared with the simulator (policy.rs)
+                    // so the two paths cannot drift apart.
+                    if let Some((a, b)) = pack_candidates(&backlog) {
+                        let cand = |t: usize| {
+                            let steps = self.tenants[t].plan.lock().unwrap().sched.steps.len();
+                            (per_req[t], steps)
+                        };
+                        let quantum_s = pack_quantum_s(
+                            self.cfg.policy.pack_quantum_steps,
+                            [cand(a), cand(b)],
+                        );
+                        if should_pack(
+                            backlog[a] + backlog[b],
+                            epoch_fabric_s,
+                            quantum_s,
+                            recon.switch_cost_s(),
+                            &self.cfg.policy,
+                        ) {
+                            self.host[b].store(a, Ordering::Release);
+                            self.packs.fetch_add(1, Ordering::Relaxed);
+                            grouping_changed = true;
+                        }
+                    }
+                }
+            }
+        }
+        // ---- group weights (one partition per leader) ----
+        let groups: Vec<Vec<usize>> = (0..n)
+            .filter(|&t| self.host_of(t) == t)
+            .map(|t| {
+                let mut g = vec![t];
+                g.extend((0..n).filter(|&j| j != t && self.host_of(j) == t));
+                g
+            })
+            .collect();
+        let group_backlog: Vec<f64> =
+            groups.iter().map(|g| g.iter().map(|&t| backlog[t]).sum()).collect();
+        let proposed = backlog_weights(&group_backlog, self.cfg.policy.max_weight);
+        let switch_cost = recon.switch_cost_s();
+        let resplit =
+            should_resplit(&weights[..], &proposed, total, switch_cost, &self.cfg.policy);
+        if !grouping_changed && !resplit {
             return false;
         }
-        let named: Vec<(&str, u32)> = self
-            .tenants
+        let named: Vec<(&str, u32)> = groups
             .iter()
             .zip(&proposed)
-            .map(|(t, &w)| (t.spec.name.as_str(), w))
+            .map(|(g, &w)| (self.tenants[g[0]].spec.name.as_str(), w))
             .collect();
         let parts = match recon.split(&named) {
             Ok(p) => p,
@@ -419,31 +666,34 @@ impl FabricScheduler {
             }
         };
         debug_assert!(recon.validate().is_ok());
-        let switch_cost = recon.switch_cost_s();
-        for ((t, part), &old_per) in self.tenants.iter().zip(&parts).zip(&per_req) {
-            let slice = part.config(&self.base);
-            let cached = self.cache.get_or_compute(&self.platform, &slice, &t.spec.dag);
-            let new_per = cached.per_request_s;
-            {
+        for (g, part) in groups.iter().zip(&parts) {
+            for &t in g {
+                let tr = &self.tenants[t];
+                let slice = part.config(&self.base);
+                let cached = self.cache.get_or_compute(&self.platform, &slice, &tr.spec.dag);
+                let new_per = cached.per_request_s;
+                let old_per = per_req[t];
                 // Plan write and preemption-generation bump happen under
                 // one lock hold: a worker snapshots (plan, gen) under the
                 // same lock, so it can never pair the new schedule with a
                 // stale generation and count a phantom preemption.
-                let mut plan = t.plan.lock().unwrap();
+                let mut plan = tr.plan.lock().unwrap();
                 *plan = Plan { fmus: part.n_fmus(), cus: part.m_cus(), sched: cached };
                 // Preemption-benefit term: interrupt the in-flight batch
                 // at its next layer boundary only when re-costing the
                 // rest on the new slice beats draining on the old one.
-                let rem_old = t.inflight_remaining_s();
+                let rem_old = tr.inflight_remaining_s();
                 if preempt_on && rem_old > 0.0 {
                     let rem_new =
                         if old_per > 0.0 { rem_old * (new_per / old_per) } else { rem_old };
                     if should_preempt(rem_old, rem_new, switch_cost, &self.cfg.policy) {
-                        t.preempt_gen.fetch_add(1, Ordering::Release);
+                        tr.preempt_gen.fetch_add(1, Ordering::Release);
                     }
                 }
             }
-            *t.fabric_s.lock().unwrap() += switch_cost;
+            // One reprogram per slice: charged to the partition leader
+            // (identical to per-tenant charging when nothing is packed).
+            *self.tenants[g[0]].fabric_s.lock().unwrap() += switch_cost;
         }
         *weights = proposed;
         self.switches.fetch_add(1, Ordering::Relaxed);
@@ -505,6 +755,10 @@ impl FabricScheduler {
                 .collect(),
             switches: self.switches.load(Ordering::Relaxed),
             preemptions: self.preemptions.load(Ordering::Relaxed),
+            packs: self.packs.load(Ordering::Relaxed),
+            unpacks: self.unpacks.load(Ordering::Relaxed),
+            pack_swaps: self.pack_swaps.load(Ordering::Relaxed),
+            packed_batches: self.packed_batches.load(Ordering::Relaxed),
             cache_hits: self.cache.hits() - hits0,
             cache_misses: self.cache.misses() - misses0,
             wall_s: t0.elapsed().as_secs_f64(),
@@ -546,6 +800,8 @@ mod tests {
         assert!(report.tenants[0].fabric_s > 0.0);
         assert_eq!(report.tenants[0].wall_latency.count(), 100);
         assert!(report.worst_p99_s() >= report.tenants[0].p99_s());
+        // Packing never engaged: it is off by default.
+        assert_eq!((report.packs, report.unpacks, report.packed_batches), (0, 0, 0));
     }
 
     #[test]
@@ -659,6 +915,7 @@ mod tests {
                 max_weight: 8,
                 min_backlog_factor: 0.0,
                 preempt_margin_factor: 1.0,
+                ..PolicyConfig::default()
             },
             timescale: 1.0 / batch_s,
             max_sleep: Duration::from_millis(100),
@@ -675,6 +932,135 @@ mod tests {
             report.preemptions >= 1,
             "the worker must land at least one mid-batch preemption ({} switches)",
             report.switches
+        );
+    }
+
+    #[test]
+    fn policy_packs_and_unpacks_light_tenants() {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let cache = Arc::new(ScheduleCache::new(tiny_solver()));
+        let probe = vec![
+            TenantSpec::new("heavy", zoo::mlp_s()),
+            TenantSpec::new("s1", zoo::mlp_s()),
+            TenantSpec::new("s2", zoo::mlp_s()),
+        ];
+        let per = crate::serve::equal_split_per_request(&platform, &base, &probe, &cache)[0];
+        let specs = vec![
+            TenantSpec::new("heavy", zoo::mlp_s()).with_queue_capacity(10_000),
+            TenantSpec::new("s1", zoo::mlp_s()).with_queue_capacity(10_000),
+            TenantSpec::new("s2", zoo::mlp_s()).with_queue_capacity(10_000),
+        ];
+        let cfg = LiveConfig {
+            policy: PolicyConfig {
+                epoch_s: 5.0 * per,
+                max_weight: 8,
+                min_backlog_factor: 0.0,
+                preempt_margin_factor: 1.0,
+                pack_headroom_factor: 2.0,
+                // Decouple the amortization gate from the model's
+                // absolute time scale: this test is about transitions.
+                pack_swap_margin: 1e9,
+                ..PolicyConfig::default()
+            },
+            timescale: 0.0,
+            max_sleep: Duration::from_millis(100),
+        };
+        let sched = FabricScheduler::new(platform, base, specs, cache, cfg).unwrap();
+        // Flood the heavy tenant while workers are not yet running; the
+        // light tenants are idle, so the pack fit is trivially met.
+        for i in 0..300 {
+            sched.push(0, LiveRequest::new(i)).unwrap();
+        }
+        assert!(sched.policy_step(), "skew must trigger a re-split");
+        assert_eq!(sched.packs.load(Ordering::Relaxed), 1, "light pair must pack");
+        assert_eq!(sched.host_of(2), 1, "s2 is hosted on s1's partition");
+        assert_eq!(sched.host_of(1), 1);
+        let comp = sched.composition();
+        assert_eq!(
+            (comp[1].1, comp[1].2),
+            (comp[2].1, comp[2].2),
+            "a packed pair shares one partition's dimensions: {comp:?}"
+        );
+        assert!(comp[0].2 > comp[1].2, "the heavy tenant gains the freed capacity: {comp:?}");
+        // Flood a packed member past the unpack hysteresis: backlog of
+        // 200 requests dwarfs the 5-request-epoch fit bound.
+        for i in 0..200 {
+            sched.push(2, LiveRequest::new(1000 + i)).unwrap();
+        }
+        assert!(sched.policy_step(), "unpack is a forced re-composition");
+        assert_eq!(sched.unpacks.load(Ordering::Relaxed), 1, "flooded member must unpack");
+        assert_eq!(sched.host_of(2), 2);
+        // Everything still gets served after the transitions.
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.total_served(), 500);
+        assert_eq!(report.packs, 1);
+        assert_eq!(report.unpacks, 1);
+    }
+
+    #[test]
+    fn packed_host_serves_its_partner_queue() {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let cache = Arc::new(ScheduleCache::new(tiny_solver()));
+        let specs = vec![
+            TenantSpec::new("heavy", zoo::mlp_s()).with_queue_capacity(10_000),
+            TenantSpec::new("s1", zoo::mlp_s()).with_queue_capacity(10_000),
+            TenantSpec::new("s2", zoo::mlp_s()).with_queue_capacity(10_000),
+        ];
+        let cfg = LiveConfig {
+            policy: PolicyConfig {
+                epoch_s: 0.05,
+                max_weight: 8,
+                min_backlog_factor: 0.0,
+                preempt_margin_factor: 1.0,
+                pack_headroom_factor: 2.0,
+                pack_swap_margin: 1e9,
+                ..PolicyConfig::default()
+            },
+            timescale: 0.0,
+            max_sleep: Duration::from_millis(100),
+        };
+        let sched = FabricScheduler::new(platform, base, specs, cache, cfg).unwrap();
+        for i in 0..100 {
+            sched.push(0, LiveRequest::new(i)).unwrap();
+        }
+        // Pack the idle pair before the workers start.
+        assert!(sched.policy_step());
+        assert_eq!(sched.host_of(2), 1);
+        // Traffic for both packed members lands after the transition.
+        for i in 0..40 {
+            sched.push(1, LiveRequest::new(500 + i)).unwrap();
+            sched.push(2, LiveRequest::new(600 + i)).unwrap();
+        }
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.total_served(), 180, "no request may strand across packing");
+        assert_eq!(report.tenants[1].served, 40);
+        assert_eq!(report.tenants[2].served, 40);
+    }
+
+    #[test]
+    fn deadline_pacer_bounds_cumulative_drift() {
+        // 5000 sub-millisecond steps, 0.1 s of paced fabric time in
+        // total. A per-step sleeper accumulates one OS-granularity
+        // overshoot per step (hundreds of ms in aggregate); the
+        // deadline pacer absorbs overshoot into later steps, so the
+        // total drift stays bounded by roughly one sleep's overshoot.
+        let mut p = Pacer::new();
+        let steps = 5000usize;
+        let dur = 2e-5f64;
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            p.pace(dur, 1.0, Duration::from_millis(100));
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let target = steps as f64 * dur;
+        assert!(elapsed >= 0.9 * target, "pacer must actually pace: {elapsed:.3} s");
+        assert!(
+            elapsed < target + 0.35,
+            "deadline pacing must not accumulate per-step jitter: {elapsed:.3} s vs {target:.3} s"
         );
     }
 

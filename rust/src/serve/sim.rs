@@ -4,19 +4,25 @@
 //! Drives the full serving data path — per-tenant bounded queues with
 //! admission control (queue depth *and* optional fabric-time token
 //! buckets), per-partition workers with batching, the backlog
-//! re-composition policy with mid-DAG preemption, and the schedule
-//! cache — over a traffic trace in *fabric time*, with no threads and
-//! no wall clock. Every run is exactly reproducible, which is what the
-//! comparison harness (example, bench, acceptance tests) needs to claim
-//! "dynamic strictly beats the static split" and "preemptive strictly
-//! beats batch-boundary".
+//! re-composition policy with mid-DAG preemption and cross-tenant
+//! packing, and the schedule cache — over a traffic trace in *fabric
+//! time*, with no threads and no wall clock. Every run is exactly
+//! reproducible, which is what the comparison harness (example, bench,
+//! acceptance tests) needs to claim "dynamic strictly beats the static
+//! split", "preemptive strictly beats batch-boundary", and "packed
+//! strictly beats unpacked".
 //!
 //! Time model: each tenant's worker owns one fabric slice and serves
 //! one batch at a time through a [`BatchCursor`] over the slice's
 //! cached [`LayerStep`](crate::dse::LayerStep) timeline. An undisturbed
-//! batch consumes exactly [`batch_fabric_s`] of fabric time — the
-//! pre-cursor batch-atomic accounting, bit-for-bit — so runs with
-//! preemption disabled reproduce the old simulator's makespans.
+//! batch consumes exactly
+//! [`batch_fabric_s`](super::tenant::batch_fabric_s) of fabric time —
+//! the pre-cursor batch-atomic accounting, bit-for-bit — so runs with
+//! preemption disabled reproduce the old simulator's makespans, and
+//! runs with packing disabled (the default) reproduce the pre-packing
+//! simulator exactly: the packed code paths below are guarded so no
+//! floating-point operation changes when
+//! [`PolicyConfig::packing_enabled`] is false.
 //!
 //! A re-composition charges
 //! [`Reconfigurator::switch_cost_s`] to every slice. Idle slices and
@@ -24,6 +30,14 @@
 //! finish on the old composition first); a *preempted* slice lands the
 //! switch at the in-flight batch's next layer boundary and resumes the
 //! remaining layer steps on the new slice's cached schedule.
+//!
+//! Cross-tenant packing ([`should_pack`]) merges the two lightest
+//! tenants onto one shared partition, executed through an
+//! [`Interleaver`] at layer-step granularity with the switch cost
+//! charged per cursor swap. A pack lands only while both candidates
+//! have no in-flight solo batch; an unpack ([`should_unpack`]) drains
+//! the interleaver before dissolving, so batches never migrate between
+//! execution models mid-flight. Both transitions force a re-split.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -34,7 +48,11 @@ use crate::coordinator::reconfig::Reconfigurator;
 use crate::platform::Platform;
 
 use super::cache::{CachedSchedule, ScheduleCache};
-use super::policy::{backlog_weights, should_preempt, should_resplit, PolicyConfig};
+use super::interleave::Interleaver;
+use super::policy::{
+    backlog_weights, pack_candidates, pack_quantum_s, should_pack, should_preempt,
+    should_resplit, should_unpack, PolicyConfig,
+};
 use super::tenant::{Arrival, BatchCursor, TenantSpec, TokenBucket};
 
 /// How the fabric is composed for the tenants.
@@ -45,11 +63,13 @@ pub enum Strategy {
     /// One equal-weight partition per tenant, fixed for the whole run.
     StaticEqual,
     /// Live re-composition driven by the backlog policy (mid-DAG
-    /// preemption per [`PolicyConfig::preempt_margin_factor`]).
+    /// preemption per [`PolicyConfig::preempt_margin_factor`],
+    /// cross-tenant packing per [`PolicyConfig::pack_headroom_factor`]).
     Dynamic(PolicyConfig),
 }
 
 impl Strategy {
+    /// Short stable label for reports and tables.
     pub fn label(&self) -> &'static str {
         match self {
             Strategy::Unified => "unified",
@@ -62,8 +82,11 @@ impl Strategy {
 /// A serving scenario: fabric, tenants, and a traffic trace.
 #[derive(Debug, Clone)]
 pub struct Scenario {
+    /// Hardware model the analytical schedules are computed against.
     pub platform: Platform,
+    /// Whole-fabric FILCO configuration that gets partitioned.
     pub base: FilcoConfig,
+    /// The tenants sharing the fabric.
     pub tenants: Vec<TenantSpec>,
     /// Must be sorted by `t_s` (as produced by the trace generators).
     pub arrivals: Vec<Arrival>,
@@ -73,13 +96,17 @@ pub struct Scenario {
     pub switch_cost_s: Option<f64>,
 }
 
-/// Outcome of one simulated serving run.
+/// Outcome of one simulated serving run. All times are fabric seconds
+/// (virtual device time), never wall-clock.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
+    /// Label of the strategy that produced this report.
     pub strategy: String,
     /// Fabric time at which the last batch finishes.
     pub completion_s: f64,
+    /// Requests served, per tenant.
     pub served: Vec<u64>,
+    /// Requests rejected by queue-depth admission control, per tenant.
     pub rejected: Vec<u64>,
     /// Requests refused by per-tenant fabric-time token buckets.
     pub throttled: Vec<u64>,
@@ -87,6 +114,12 @@ pub struct ServeReport {
     pub switches: u64,
     /// In-flight batches preempted at a layer boundary.
     pub preemptions: u64,
+    /// Pack transitions (two tenants merged onto one partition).
+    pub packs: u64,
+    /// Unpack transitions (a packed pair dissolved after draining).
+    pub unpacks: u64,
+    /// Cursor context swaps charged by the partition interleaver.
+    pub pack_swaps: u64,
     /// Policy epochs evaluated.
     pub epochs: u64,
     /// Per-tenant fabric latency (queueing + service).
@@ -94,14 +127,17 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
+    /// Requests served across every tenant.
     pub fn total_served(&self) -> u64 {
         self.served.iter().sum()
     }
 
+    /// Requests rejected (queue depth) across every tenant.
     pub fn total_rejected(&self) -> u64 {
         self.rejected.iter().sum()
     }
 
+    /// Requests throttled (token buckets) across every tenant.
     pub fn total_throttled(&self) -> u64 {
         self.throttled.iter().sum()
     }
@@ -116,10 +152,12 @@ impl ServeReport {
         self.total_served() as f64 / self.completion_s.max(1e-12)
     }
 
+    /// One-line human-readable summary.
     pub fn summary(&self) -> String {
         format!(
             "{:<12} completion {:.4e} s | {} served, {} rejected, {} throttled | \
-             {:.0} req/s | worst p99 {:.3e} s | {} switches, {} preemptions",
+             {:.0} req/s | worst p99 {:.3e} s | {} switches, {} preemptions | \
+             {} packs, {} unpacks, {} swaps",
             self.strategy,
             self.completion_s,
             self.total_served(),
@@ -129,6 +167,9 @@ impl ServeReport {
             self.worst_p99_s(),
             self.switches,
             self.preemptions,
+            self.packs,
+            self.unpacks,
+            self.pack_swaps,
         )
     }
 }
@@ -272,6 +313,9 @@ fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
         throttled,
         switches: 0,
         preemptions: 0,
+        packs: 0,
+        unpacks: 0,
+        pack_swaps: 0,
         epochs: 0,
         histograms: hist,
     }
@@ -292,6 +336,23 @@ impl InFlight {
     }
 }
 
+/// The packed pair's shared partition in the simulator: an interleaved
+/// walk over its members' in-flight batches, advanced lazily as
+/// virtual time passes step boundaries.
+struct PackedSim {
+    /// Member tenant indices, ascending; `members[0]` leads the group.
+    members: Vec<usize>,
+    il: Interleaver,
+    /// Arrival times of each live slot's requests, keyed by tenant.
+    arrived: Vec<(usize, Vec<f64>)>,
+    /// Fabric time the shared slice has been simulated through; its
+    /// next step retires at `t + il.peek_next_s()`.
+    t: f64,
+    /// Unpack in progress: no new batches are admitted; the pack
+    /// dissolves once the interleaver drains.
+    unpacking: bool,
+}
+
 fn simulate_partitioned(
     sc: &Scenario,
     cache: &ScheduleCache,
@@ -301,6 +362,7 @@ fn simulate_partitioned(
     let names: Vec<&str> = sc.tenants.iter().map(|t| t.name.as_str()).collect();
     let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
     let preempt_on = policy.is_some_and(PolicyConfig::preemption_enabled);
+    let pack_on = policy.is_some_and(PolicyConfig::packing_enabled);
 
     let mut recon = Reconfigurator::new(sc.base.clone());
     if let Some(s) = sc.switch_cost_s {
@@ -333,6 +395,10 @@ fn simulate_partitioned(
     let mut ai = 0usize;
     let mut epochs = 0u64;
     let mut preemptions = 0u64;
+    let mut packs = 0u64;
+    let mut unpacks = 0u64;
+    let mut pack_swaps = 0u64;
+    let mut packed: Option<PackedSim> = None;
     let mut next_epoch = policy.map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
 
     loop {
@@ -347,6 +413,58 @@ fn simulate_partitioned(
             &mut buckets,
             &per_req,
         );
+
+        // The packed partition: admit member batches into interleaver
+        // slots and retire the steps whose end has been reached.
+        // Alternating admission and retirement lets a tenant's next
+        // batch start the moment its previous one drains, exactly like
+        // a solo slice at the same virtual instant.
+        if let Some(pk) = packed.as_mut() {
+            loop {
+                let mut progressed = false;
+                if !pk.unpacking {
+                    let members = pk.members.clone();
+                    for m in members {
+                        if !pk.il.contains(m) && !pending[m].is_empty() {
+                            let take = pending[m].len().min(sc.tenants[m].max_batch);
+                            let mut arrived = Vec::with_capacity(take);
+                            for _ in 0..take {
+                                let (_id, arr) = pending[m].pop_front().unwrap();
+                                arrived.push(arr);
+                            }
+                            if pk.il.is_empty() {
+                                // Idle slice: its clock catches up to now
+                                // before the new batch's first step.
+                                pk.t = pk.t.max(now);
+                            }
+                            pk.il.add(m, BatchCursor::new(scheds[m].clone(), take));
+                            pk.arrived.push((m, arrived));
+                            progressed = true;
+                        }
+                    }
+                }
+                while let Some(d) = pk.il.peek_next_s() {
+                    if pk.t + d > now {
+                        break;
+                    }
+                    let ev = pk.il.advance().unwrap();
+                    pk.t += ev.swap_charge_s + ev.step.dur_s;
+                    if ev.done {
+                        let pos =
+                            pk.arrived.iter().position(|(m, _)| *m == ev.tenant).unwrap();
+                        let (_, arrs) = pk.arrived.remove(pos);
+                        for &arr in &arrs {
+                            hist[ev.tenant].record(pk.t - arr);
+                            served[ev.tenant] += 1;
+                        }
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+        }
 
         // Retire batches whose (projected) completion has been reached.
         // Recording at completion: an undisturbed cursor's total is the
@@ -366,8 +484,12 @@ fn simulate_partitioned(
         }
 
         // Each tenant's worker starts its next batch if its slice is
-        // free.
+        // free. Packed members have no slice of their own — their
+        // batches are admitted by the interleaver block above.
         for t in 0..t_n {
+            if packed.as_ref().is_some_and(|pk| pk.members.contains(&t)) {
+                continue;
+            }
             if busy[t].is_some() || avail[t] > now {
                 continue;
             }
@@ -389,10 +511,13 @@ fn simulate_partitioned(
             busy[t] = Some(fl);
         }
 
-        // Policy epoch: observe backlog, maybe re-compose. With
-        // preemption enabled the signal includes in-flight remaining
-        // work (that work is movable); with it disabled only queued
-        // work counts — the pre-cursor behavior, preserved exactly.
+        // Policy epoch: observe backlog, maybe pack/unpack, maybe
+        // re-compose. With preemption enabled the signal includes
+        // in-flight remaining work (that work is movable); with it
+        // disabled only queued work counts — the pre-cursor behavior,
+        // preserved exactly. Packed slots' remaining work is always
+        // movable (they re-base on every re-split) and is counted
+        // whenever packing is live.
         if let Some(p) = policy {
             if now >= next_epoch {
                 epochs += 1;
@@ -421,19 +546,127 @@ fn simulate_partitioned(
                         } else {
                             0.0
                         };
-                        queued + inflight
+                        let packed_inflight = match &packed {
+                            Some(pk) if pk.members.contains(&t) => pk.il.slot_remaining_s(t),
+                            _ => 0.0,
+                        };
+                        queued + inflight + packed_inflight
                     })
                     .collect();
+                // Pack / unpack transitions. At most one packed pair at
+                // a time; a pack lands only when both candidates are
+                // idle (no in-flight solo batch), an unpack only once
+                // the interleaver has drained — batches never migrate
+                // between execution models mid-flight.
                 let total_backlog: f64 = backlog.iter().sum();
-                let proposed = backlog_weights(&backlog, p.max_weight);
-                if should_resplit(&weights, &proposed, total_backlog, recon.switch_cost_s(), p) {
+                let mut grouping_changed = false;
+                if pack_on {
+                    if packed.is_some() {
+                        {
+                            let pk = packed.as_mut().unwrap();
+                            let combined: f64 =
+                                pk.members.iter().map(|&m| backlog[m]).sum();
+                            if !pk.unpacking && should_unpack(combined, p.epoch_s, p) {
+                                pk.unpacking = true;
+                            }
+                        }
+                        let drained =
+                            packed.as_ref().is_some_and(|pk| pk.unpacking && pk.il.is_empty());
+                        if drained {
+                            let pk = packed.take().unwrap();
+                            for &m in &pk.members {
+                                // Members resume solo where the shared
+                                // slice clock left off (owed charges
+                                // carry over).
+                                avail[m] = pk.t;
+                            }
+                            pack_swaps += pk.il.swaps();
+                            unpacks += 1;
+                            grouping_changed = true;
+                        }
+                    } else if let Some((a, b)) = pack_candidates(&backlog) {
+                        // Candidate selection and the swap-amortization
+                        // window are shared with the live scheduler
+                        // (policy.rs) so the two paths cannot drift
+                        // apart. The extra *idle* gate is sim-only: a
+                        // pack lands only between solo batches, so in
+                        // virtual time batches never migrate execution
+                        // models mid-flight.
+                        let idle = busy[a].is_none() && busy[b].is_none();
+                        let quantum_s = pack_quantum_s(
+                            p.pack_quantum_steps,
+                            [
+                                (per_req[a], scheds[a].steps.len()),
+                                (per_req[b], scheds[b].steps.len()),
+                            ],
+                        );
+                        if idle
+                            && should_pack(
+                                backlog[a] + backlog[b],
+                                p.epoch_s,
+                                quantum_s,
+                                recon.switch_cost_s(),
+                                p,
+                            )
+                        {
+                            packed = Some(PackedSim {
+                                members: vec![a, b],
+                                il: Interleaver::new(
+                                    recon.switch_cost_s(),
+                                    p.pack_quantum_steps,
+                                ),
+                                arrived: Vec::new(),
+                                // The shared slice inherits the members'
+                                // outstanding availability charges.
+                                t: avail[a].max(avail[b]),
+                                unpacking: false,
+                            });
+                            packs += 1;
+                            grouping_changed = true;
+                        }
+                    }
+                }
+                // One group per partition leader; all singletons unless
+                // a pair is packed, in which case the pack sits at its
+                // leader's position.
+                let groups: Vec<Vec<usize>> = (0..t_n)
+                    .filter_map(|t| match &packed {
+                        Some(pk) if pk.members.contains(&t) => {
+                            (pk.members[0] == t).then(|| pk.members.clone())
+                        }
+                        _ => Some(vec![t]),
+                    })
+                    .collect();
+                let group_backlog: Vec<f64> =
+                    groups.iter().map(|g| g.iter().map(|&t| backlog[t]).sum()).collect();
+                let proposed = backlog_weights(&group_backlog, p.max_weight);
+                if grouping_changed
+                    || should_resplit(&weights, &proposed, total_backlog, recon.switch_cost_s(), p)
+                {
                     let named: Vec<(&str, u32)> =
-                        names.iter().zip(&proposed).map(|(&n, &w)| (n, w)).collect();
+                        groups.iter().zip(&proposed).map(|(g, &w)| (names[g[0]], w)).collect();
                     let parts = recon.split(&named).expect("re-split");
                     debug_assert!(recon.validate().is_ok());
                     let switch = recon.switch_cost_s();
-                    for t in 0..t_n {
-                        let slice = parts[t].config(&sc.base);
+                    for (gi, g) in groups.iter().enumerate() {
+                        let slice = parts[gi].config(&sc.base);
+                        if g.len() > 1 {
+                            // The shared slice reprograms once; live
+                            // slots re-base onto their tenants' new
+                            // schedules at the current step boundary
+                            // (the charge sits on the group clock).
+                            let pk = packed.as_mut().expect("multi-member group is the pack");
+                            pk.t = pk.t.max(now) + switch;
+                            for &m in g {
+                                let ns =
+                                    cache.get_or_compute(&sc.platform, &slice, &sc.tenants[m].dag);
+                                pk.il.retarget(m, ns.clone(), 0.0);
+                                per_req[m] = ns.per_request_s;
+                                scheds[m] = ns;
+                            }
+                            continue;
+                        }
+                        let t = g[0];
                         let new_sched =
                             cache.get_or_compute(&sc.platform, &slice, &sc.tenants[t].dag);
                         let preempt = preempt_on
@@ -497,6 +730,11 @@ fn simulate_partitioned(
         let work_left = pending.iter().any(|q| !q.is_empty());
         let inflight_left = busy.iter().any(|b| b.is_some());
         for t in 0..t_n {
+            if packed.as_ref().is_some_and(|pk| pk.members.contains(&t)) {
+                // Packed members have no solo slice; their events come
+                // from the interleaver below.
+                continue;
+            }
             if !pending[t].is_empty() {
                 next = next.min(avail[t]);
             }
@@ -510,8 +748,16 @@ fn simulate_partitioned(
                 }
             }
         }
+        if let Some(pk) = &packed {
+            if let Some(d) = pk.il.peek_next_s() {
+                next = next.min(pk.t + d);
+            }
+        }
         let preemptible = preempt_on && inflight_left;
-        if policy.is_some() && (ai < sc.arrivals.len() || work_left || preemptible) {
+        let packed_active = packed.as_ref().is_some_and(|pk| !pk.il.is_empty());
+        if policy.is_some()
+            && (ai < sc.arrivals.len() || work_left || preemptible || packed_active)
+        {
             next = next.min(next_epoch);
         }
         if !next.is_finite() {
@@ -531,16 +777,38 @@ fn simulate_partitioned(
             }
         }
     }
+    let mut packed_completion = 0.0f64;
+    if let Some(mut pk) = packed.take() {
+        // Drain any remaining interleaved work (the event loop schedules
+        // packed steps, so this is normally already empty) and fold the
+        // pack's swap count into the run totals.
+        while let Some(ev) = pk.il.advance() {
+            pk.t += ev.swap_charge_s + ev.step.dur_s;
+            if ev.done {
+                let pos = pk.arrived.iter().position(|(m, _)| *m == ev.tenant).unwrap();
+                let (_, arrs) = pk.arrived.remove(pos);
+                for &arr in &arrs {
+                    hist[ev.tenant].record(pk.t - arr);
+                    served[ev.tenant] += 1;
+                }
+            }
+        }
+        pack_swaps += pk.il.swaps();
+        packed_completion = pk.t;
+    }
 
     let label = if policy.is_some() { "dynamic" } else { "static-equal" };
     ServeReport {
         strategy: label.to_string(),
-        completion_s: avail.iter().cloned().fold(0.0f64, f64::max),
+        completion_s: avail.iter().cloned().fold(0.0f64, f64::max).max(packed_completion),
         served,
         rejected,
         throttled,
         switches: recon.switches - setup_switches,
         preemptions,
+        packs,
+        unpacks,
+        pack_swaps,
         epochs,
         histograms: hist,
     }
@@ -602,6 +870,8 @@ mod tests {
             let hist_n: u64 = r.histograms.iter().map(|h| h.count()).sum();
             assert_eq!(hist_n, n);
             assert!(r.worst_p99_s() > 0.0);
+            // Packing is off by default in every one of these runs.
+            assert_eq!((r.packs, r.unpacks, r.pack_swaps), (0, 0, 0));
         }
     }
 
@@ -696,5 +966,77 @@ mod tests {
         let per0 = equal_split_per_request(&sc.platform, &sc.base, &sc.tenants, &cache)[0];
         let expect = batch_fabric_s(per0, 8) + batch_fabric_s(per0, 4);
         assert_eq!(r.completion_s, expect, "cursor walk must equal batch-atomic accounting");
+    }
+
+    /// Three tenants: one overloaded, two light — the packing regime.
+    fn packable_scenario(cache: &ScheduleCache, seed: u64) -> (Scenario, PolicyConfig) {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let tenants = vec![
+            TenantSpec::new("heavy", zoo::mlp_l()).with_queue_capacity(1 << 20),
+            TenantSpec::new("s1", zoo::mlp_s()).with_queue_capacity(1 << 20),
+            TenantSpec::new("s2", zoo::pointnet()).with_queue_capacity(1 << 20),
+        ];
+        let per = equal_split_per_request(&platform, &base, &tenants, cache);
+        let arrivals =
+            poisson_trace(&[2.5 / per[0], 0.05 / per[1], 0.05 / per[2]], 120.0 * per[0], seed);
+        let policy = PolicyConfig {
+            // Decouple the swap-amortization gate from the model's
+            // absolute scale; the interleave tests pin its semantics.
+            pack_swap_margin: 10.0,
+            ..PolicyConfig::calibrated(per[0]).with_packing()
+        };
+        (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy)
+    }
+
+    #[test]
+    fn packing_engages_and_serves_everything() {
+        let cache = ScheduleCache::new(tiny_solver());
+        let (sc, policy) = packable_scenario(&cache, 23);
+        let n = sc.arrivals.len() as u64;
+        assert!(n > 50, "trace too small: {n}");
+        let r = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+        assert_eq!(r.total_served(), n, "packing must not drop requests");
+        assert!(r.packs >= 1, "two light tenants must pack");
+        assert!(r.pack_swaps >= 1, "packed batches must time-multiplex");
+        let hist_n: u64 = r.histograms.iter().map(|h| h.count()).sum();
+        assert_eq!(hist_n, n);
+    }
+
+    #[test]
+    fn packed_runs_are_deterministic() {
+        let cache = ScheduleCache::new(tiny_solver());
+        let (sc, policy) = packable_scenario(&cache, 29);
+        let a = simulate(&sc, &Strategy::Dynamic(policy.clone()), &cache);
+        let b = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+        assert_eq!(a.completion_s, b.completion_s);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.switches, b.switches);
+        assert_eq!((a.packs, a.unpacks, a.pack_swaps), (b.packs, b.unpacks, b.pack_swaps));
+        for (x, y) in a.histograms.iter().zip(&b.histograms) {
+            assert_eq!(x.p99(), y.p99());
+        }
+    }
+
+    #[test]
+    fn overloaded_pair_unpacks_again() {
+        // Both light tenants pack at the start, then a mid-trace flood
+        // on one of them blows past the unpack hysteresis.
+        let cache = ScheduleCache::new(tiny_solver());
+        let (mut sc, policy) = packable_scenario(&cache, 31);
+        let per = equal_split_per_request(&sc.platform, &sc.base, &sc.tenants, &cache);
+        let t_end = sc.arrivals.last().map(|a| a.t_s).unwrap_or(0.0);
+        let mut extra: Vec<Arrival> = (0..2000)
+            .map(|i| Arrival { t_s: 0.5 * t_end, tenant: 1, id: 1_000_000 + i })
+            .collect();
+        sc.arrivals.append(&mut extra);
+        sc.arrivals.sort_by(|a, b| {
+            a.t_s.partial_cmp(&b.t_s).unwrap().then(a.tenant.cmp(&b.tenant))
+        });
+        assert!(per[1] > 0.0);
+        let r = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+        assert!(r.packs >= 1, "light pair must pack before the flood");
+        assert!(r.unpacks >= 1, "a 2000-request flood must dissolve the pack");
+        assert_eq!(r.total_served(), sc.arrivals.len() as u64);
     }
 }

@@ -33,8 +33,9 @@ pub struct StepEvent {
     pub layer: usize,
     /// Candidate mode the schedule chose for it.
     pub mode: usize,
-    /// FMUs / CUs the step occupied.
+    /// FMUs the step occupied.
     pub fmus: u32,
+    /// CUs the step occupied.
     pub cus: u32,
     /// Fabric seconds this step consumed.
     pub dur_s: f64,
@@ -94,6 +95,9 @@ pub struct BatchCursor {
 }
 
 impl BatchCursor {
+    /// Cursor at the start of a `batch`-request walk over `sched`.
+    /// Single-threaded: callers (one worker thread, or the simulator)
+    /// own the cursor exclusively; no internal locking.
     pub fn new(sched: Arc<CachedSchedule>, batch: usize) -> Self {
         Self { sched, batch, req: 0, step: 0, base_s: 0.0, seg_req: 0, seg_step: 0, hwm_s: 0.0 }
     }
@@ -117,14 +121,17 @@ impl BatchCursor {
         Self::elapsed_for(&self.sched, self.batch, req, step)
     }
 
+    /// Number of requests in the batch this cursor walks.
     pub fn batch(&self) -> usize {
         self.batch
     }
 
+    /// Has every request in the batch traversed the whole timeline?
     pub fn is_done(&self) -> bool {
         self.req >= self.batch
     }
 
+    /// Requests that have fully retired so far.
     pub fn requests_completed(&self) -> usize {
         self.req.min(self.batch)
     }
@@ -276,6 +283,7 @@ impl TokenBucket {
         Self { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last_s: 0.0 }
     }
 
+    /// Bucket configured from a tenant's [`RateLimit`].
     pub fn from_limit(rl: RateLimit) -> Self {
         Self::new(rl.fabric_share, rl.burst_s)
     }
@@ -299,6 +307,7 @@ impl TokenBucket {
         self.tokens = (self.tokens + cost.max(0.0)).min(self.burst);
     }
 
+    /// Fabric seconds currently available in the bucket.
     pub fn tokens(&self) -> f64 {
         self.tokens
     }
@@ -307,7 +316,9 @@ impl TokenBucket {
 /// One tenant of the fabric: a model (layer DAG) plus its serving knobs.
 #[derive(Debug, Clone)]
 pub struct TenantSpec {
+    /// Display / partition name (unique per scheduler).
     pub name: String,
+    /// The tenant's model as a layer DAG.
     pub dag: Dag,
     /// Bounded-queue depth; pushes beyond it are rejected (admission
     /// control).
@@ -320,15 +331,20 @@ pub struct TenantSpec {
 }
 
 impl TenantSpec {
+    /// Spec with default serving knobs (4096-deep queue, batches of 8,
+    /// no rate limit).
     pub fn new(name: impl Into<String>, dag: Dag) -> Self {
         Self { name: name.into(), dag, queue_capacity: 4096, max_batch: 8, rate_limit: None }
     }
 
+    /// Bound the tenant's queue to `cap` requests (min 1); pushes
+    /// beyond it are rejected at admission.
     pub fn with_queue_capacity(mut self, cap: usize) -> Self {
         self.queue_capacity = cap.max(1);
         self
     }
 
+    /// Cap the requests drained per worker batch (min 1).
     pub fn with_max_batch(mut self, b: usize) -> Self {
         self.max_batch = b.max(1);
         self
@@ -345,8 +361,11 @@ impl TenantSpec {
 /// One request arrival in a (virtual-time) traffic trace.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Arrival {
+    /// Arrival time in (virtual) fabric seconds from trace start.
     pub t_s: f64,
+    /// Index of the tenant this request belongs to.
     pub tenant: usize,
+    /// Global arrival-order id (assigned by the trace generators).
     pub id: u64,
 }
 

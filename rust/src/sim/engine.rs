@@ -380,11 +380,25 @@ mod tests {
         let c = TileView::full(m, n);
         p.push(
             UnitId::IomLoader,
-            Instr::IomLoad(IomLoadInstr { is_last: false, ddr_addr: 0, des_fmu: 0, m, n: k, view: a }),
+            Instr::IomLoad(IomLoadInstr {
+                is_last: false,
+                ddr_addr: 0,
+                des_fmu: 0,
+                m,
+                n: k,
+                view: a,
+            }),
         );
         p.push(
             UnitId::IomLoader,
-            Instr::IomLoad(IomLoadInstr { is_last: false, ddr_addr: 0x1000, des_fmu: 1, m: k, n, view: b }),
+            Instr::IomLoad(IomLoadInstr {
+                is_last: false,
+                ddr_addr: 0x1000,
+                des_fmu: 1,
+                m: k,
+                n,
+                view: b,
+            }),
         );
         p.push(
             UnitId::Fmu(0),

@@ -57,6 +57,7 @@ fn long_batch_burst(cache: &ScheduleCache) -> (Scenario, PolicyConfig, f64) {
         max_weight: 8,
         min_backlog_factor: 0.0,
         preempt_margin_factor: 1.0,
+        ..PolicyConfig::default()
     };
     (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy, per0)
 }

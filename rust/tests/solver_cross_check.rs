@@ -136,8 +136,13 @@ fn ga_never_below_milp_optimum() {
         if milp.status != MilpStatus::Optimal {
             return; // budget-dependent; only check proven optima
         }
-        let ga = GaConfig { population: 32, generations: 60, seed: rng.next_u64(), ..Default::default() }
-            .solve(&dag, &table, &cfg);
+        let ga = GaConfig {
+            population: 32,
+            generations: 60,
+            seed: rng.next_u64(),
+            ..Default::default()
+        }
+        .solve(&dag, &table, &cfg);
         assert!(
             ga.best_makespan >= milp.schedule.makespan - 1e-9,
             "GA {} below proven optimum {}",
@@ -161,8 +166,13 @@ fn ga_valid_on_random_instances() {
         let cands = rng.range(1, 6);
         let (dag, table) = random_instance(rng, n, cands);
         let cfg = cfg_fc(4, 4);
-        let ga = GaConfig { population: 16, generations: 15, seed: rng.next_u64(), ..Default::default() }
-            .solve(&dag, &table, &cfg);
+        let ga = GaConfig {
+            population: 16,
+            generations: 15,
+            seed: rng.next_u64(),
+            ..Default::default()
+        }
+        .solve(&dag, &table, &cfg);
         ga.schedule.validate(&dag, &table, 4, 4).unwrap();
     });
 }
