@@ -108,8 +108,10 @@ fn main() {
     let pk = &reports[4].1;
     assert_eq!(pk.total_served(), stat.total_served());
     println!(
-        "packed: {} packs, {} unpacks, {} swaps, worst p99 {:.3e} s (unpacked {:.3e} s)",
+        "packed: {} packs (group sizes {:?}), {} unpacks, {} swaps, \
+         worst p99 {:.3e} s (unpacked {:.3e} s)",
         pk.packs,
+        pk.pack_group_sizes,
         pk.unpacks,
         pk.pack_swaps,
         pk.worst_p99_s(),

@@ -241,9 +241,11 @@ fn cmd_gantt(flags: &HashMap<String, String>) {
 }
 
 /// Multi-tenant serving demo: MLP-L flooded, MLP-S and PointNet light.
-/// Fabric time is modelled (no artifacts needed); the live mode paces
-/// workers with a wall-clock timescale so the policy thread sees real
-/// queue depths and re-composes the fabric mid-run.
+/// Fabric time is modelled (no artifacts needed); both modes drive the
+/// same deterministic `FabricEngine` — the sim on a virtual clock, the
+/// live mode on a wall clock whose timescale paces the worker shells so
+/// policy epochs see real queue depths and re-compose the fabric
+/// mid-run.
 fn cmd_serve(flags: &HashMap<String, String>) {
     // Floor of 1: `--requests 0` would otherwise divide by zero in the
     // pacing/timescale math below.

@@ -1,0 +1,229 @@
+//! The two clocks of the unified fabric engine.
+//!
+//! The [`FabricEngine`](super::FabricEngine) is a deterministic state
+//! machine over *fabric time* (modelled device seconds). What varies
+//! between the virtual-time simulator and the live threaded scheduler
+//! is only *when* the driver lets the engine reach a given fabric
+//! instant:
+//!
+//! * [`VirtualClock`] jumps instantly — the simulator drains the engine
+//!   as fast as the host can compute, one event at a time;
+//! * [`WallClock`] maps fabric seconds to wall seconds through a
+//!   `timescale` and sleeps toward each deadline using the [`Pacer`]
+//!   discipline, so a paced live run behaves (queue depths, policy
+//!   epochs, preemption opportunities) like it would on hardware.
+//!
+//! Because the engine's decisions depend only on the fabric instants it
+//! is stepped to — never on the wall clock — the two drivers produce
+//! identical engine event traces for the same scenario (asserted by
+//! `rust/tests/serve_engine.rs`).
+
+use std::time::{Duration, Instant};
+
+/// Deadline-based pacing primitive: sleeps *toward* absolute wall
+/// deadlines measured from an anchor instant, so per-sleep overshoot
+/// (OS scheduler granularity) is absorbed by later deadlines instead of
+/// accumulating — a run of thousands of sub-millisecond steps drifts by
+/// at most one sleep's overshoot, not the sum of all of them.
+#[derive(Debug, Clone)]
+pub struct Pacer {
+    anchor: Instant,
+}
+
+impl Default for Pacer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Pacer {
+    /// Pacer anchored at the current instant.
+    pub fn new() -> Self {
+        Self { anchor: Instant::now() }
+    }
+
+    /// Wall seconds elapsed since the anchor.
+    pub fn elapsed_s(&self) -> f64 {
+        self.anchor.elapsed().as_secs_f64()
+    }
+
+    /// Sleep toward the absolute wall deadline `deadline_s` (seconds
+    /// after the anchor), capped at `max_sleep` per call so an extreme
+    /// or non-finite deadline throttles instead of hanging. Returns
+    /// true once the deadline has been reached (callers loop until
+    /// then, re-checking their own state between sleeps).
+    pub fn sleep_toward(&self, deadline_s: f64, max_sleep: Duration) -> bool {
+        let lead = deadline_s - self.elapsed_s();
+        if lead <= 0.0 {
+            return true;
+        }
+        std::thread::sleep(Duration::from_secs_f64(lead.min(max_sleep.as_secs_f64())));
+        deadline_s - self.elapsed_s() <= 0.0
+    }
+}
+
+/// A driver's view of time, in fabric seconds.
+///
+/// `advance_to` blocks (or jumps) until the clock has reached fabric
+/// instant `t_s`; it may return `false` when only partial progress was
+/// made (bounded sleep), in which case the driver re-checks its state
+/// and calls again.
+pub trait Clock {
+    /// Current driver time in fabric seconds.
+    fn now_s(&self) -> f64;
+
+    /// Move toward fabric instant `t_s`. Returns true once reached.
+    fn advance_to(&mut self, t_s: f64) -> bool;
+}
+
+/// Virtual time: `advance_to` jumps instantly. The simulator's clock.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now_s: f64,
+}
+
+impl VirtualClock {
+    /// Virtual clock at fabric time zero.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    fn advance_to(&mut self, t_s: f64) -> bool {
+        if t_s > self.now_s {
+            self.now_s = t_s;
+        }
+        true
+    }
+}
+
+/// Wall time paced at `timescale` wall seconds per fabric second
+/// through a [`Pacer`]. A `timescale` of 0 drains at host speed: every
+/// fabric instant is immediately due and `now_s` reports wall seconds
+/// 1:1 (the only meaningful clock left for token-bucket refills).
+///
+/// The mapping is an anchor pair (wall anchor, fabric `origin_s`).
+/// [`Self::resync`] re-anchors it — a driver whose fabric clock stood
+/// still (idle engine, no producers) must re-anchor when work resumes,
+/// or the idle wall time would be banked as pacing lead and the next
+/// burst would drain unpaced at host speed.
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    pacer: Pacer,
+    origin_s: f64,
+    timescale: f64,
+    max_sleep: Duration,
+}
+
+impl WallClock {
+    /// Wall clock anchored now at fabric time zero, mapping 1 fabric
+    /// second to `timescale` wall seconds; single sleeps are capped at
+    /// `max_sleep`.
+    pub fn new(timescale: f64, max_sleep: Duration) -> Self {
+        Self { pacer: Pacer::new(), origin_s: 0.0, timescale: timescale.max(0.0), max_sleep }
+    }
+
+    /// The wall→fabric scale this clock was built with.
+    pub fn timescale(&self) -> f64 {
+        self.timescale
+    }
+
+    /// Re-anchor: fabric instant `fabric_now_s` maps to the current
+    /// wall instant from here on, discarding any pacing lead banked
+    /// while the fabric clock stood still.
+    pub fn resync(&mut self, fabric_now_s: f64) {
+        self.pacer = Pacer::new();
+        self.origin_s = fabric_now_s;
+    }
+
+    /// Wall seconds until fabric instant `t_s` is due (`<= 0.0` means
+    /// already due; always due when unpaced).
+    pub fn lead_s(&self, t_s: f64) -> f64 {
+        if self.timescale <= 0.0 {
+            return 0.0;
+        }
+        (t_s - self.origin_s) * self.timescale - self.pacer.elapsed_s()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_s(&self) -> f64 {
+        if self.timescale > 0.0 {
+            self.origin_s + self.pacer.elapsed_s() / self.timescale
+        } else {
+            self.pacer.elapsed_s()
+        }
+    }
+
+    fn advance_to(&mut self, t_s: f64) -> bool {
+        if self.timescale <= 0.0 {
+            return true;
+        }
+        self.pacer.sleep_toward((t_s - self.origin_s) * self.timescale, self.max_sleep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_jumps_and_never_goes_backwards() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now_s(), 0.0);
+        assert!(c.advance_to(1.5));
+        assert_eq!(c.now_s(), 1.5);
+        assert!(c.advance_to(0.5), "a past instant is already reached");
+        assert_eq!(c.now_s(), 1.5);
+    }
+
+    #[test]
+    fn unpaced_wall_clock_is_always_due() {
+        let mut c = WallClock::new(0.0, Duration::from_millis(100));
+        assert!(c.advance_to(1e9), "timescale 0 drains at host speed");
+        assert_eq!(c.lead_s(1e9), 0.0);
+    }
+
+    #[test]
+    fn resync_discards_banked_pacing_lead() {
+        let mut c = WallClock::new(1.0, Duration::from_millis(100));
+        std::thread::sleep(Duration::from_millis(30));
+        // 30 ms of wall time passed with the fabric clock at 0: without
+        // a resync, fabric instants up to ~0.03 are already "due".
+        assert!(c.lead_s(0.02) < 0.0, "idle wall time banks as lead");
+        c.resync(5.0);
+        // After re-anchoring at fabric 5.0, an instant 20 ms of fabric
+        // time ahead is 20 ms of wall time away again.
+        let lead = c.lead_s(5.02);
+        assert!(lead > 0.0 && lead <= 0.02 + 1e-3, "resync must restore pacing: {lead}");
+        assert!(c.now_s() >= 5.0);
+    }
+
+    #[test]
+    fn deadline_pacing_bounds_cumulative_drift() {
+        // 5000 sub-millisecond deadlines, 0.1 s of paced fabric time in
+        // total. A per-step sleeper accumulates one OS-granularity
+        // overshoot per step (hundreds of ms in aggregate); the
+        // deadline pacer absorbs overshoot into later deadlines, so the
+        // total drift stays bounded by roughly one sleep's overshoot.
+        let mut c = WallClock::new(1.0, Duration::from_millis(100));
+        let steps = 5000usize;
+        let dur = 2e-5f64;
+        let t0 = Instant::now();
+        for k in 1..=steps {
+            while !c.advance_to(k as f64 * dur) {}
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let target = steps as f64 * dur;
+        assert!(elapsed >= 0.9 * target, "pacer must actually pace: {elapsed:.3} s");
+        assert!(
+            elapsed < target + 0.35,
+            "deadline pacing must not accumulate per-step jitter: {elapsed:.3} s vs {target:.3} s"
+        );
+    }
+}

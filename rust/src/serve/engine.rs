@@ -1,0 +1,1186 @@
+//! The one fabric engine: a deterministic execution core shared by the
+//! virtual-time simulator and the live threaded scheduler.
+//!
+//! FILCO's fabric exists once; this module models it once. The engine
+//! owns everything that used to be duplicated between
+//! [`sim`](super::sim) and [`scheduler`](super::scheduler): per-tenant
+//! pending queues with admission control (queue depth and fabric-time
+//! [`TokenBucket`]s), the fabric partitions with their in-flight
+//! [`BatchCursor`]s, the per-partition [`Interleaver`]s of packed
+//! groups, the [`Reconfigurator`] and weight state, and — crucially —
+//! every composition transition. Resplit, mid-DAG preemption, pack and
+//! unpack all land through the [`Transition`] enum applied at exactly
+//! one site ([`FabricEngine::apply`]), so the live path and the
+//! simulated path cannot drift apart: they *are* the same path.
+//!
+//! # Time model
+//!
+//! The engine advances only in *fabric seconds* and only when a driver
+//! calls [`FabricEngine::step`] with a fabric instant. Between steps it
+//! is inert. [`FabricEngine::next_time`] reports the earliest fabric
+//! instant at which anything can happen (a trace arrival, a batch
+//! completion, a packed interleaver step, a policy epoch), so a driver
+//! is a loop of `next_time` → advance its [`Clock`](super::Clock) →
+//! `step`:
+//!
+//! * the simulator runs the loop on a
+//!   [`VirtualClock`](super::VirtualClock) (instant jumps);
+//! * the live scheduler's worker shells run the same loop on a
+//!   [`WallClock`](super::WallClock) (deadline-paced sleeps), feeding
+//!   external requests in through [`FabricEngine::push`].
+//!
+//! Because no decision reads the wall clock, a paced live run and a
+//! simulated run of the same scenario produce identical
+//! [`EngineEvent`] traces (asserted by `rust/tests/serve_engine.rs`).
+//!
+//! # Execution accounting
+//!
+//! Solo partitions account batches in closed form: an in-flight batch's
+//! completion is `start + projected_total_s()`, bit-for-bit the
+//! batch-atomic [`batch_fabric_s`](super::batch_fabric_s) when
+//! undisturbed — which is what keeps the pre-refactor simulator oracles
+//! (`rust/tests/serve_preempt.rs`) binding. Packed partitions execute
+//! step-by-step through their interleaver on a per-group fabric clock.
+//! A policy epoch reads *exact* cursor positions (the epoch sync
+//! commits retired layer steps first), so `remaining_on` feeds the
+//! preemption benefit term precisely in both drivers.
+//!
+//! # Mid-flight pack handoff
+//!
+//! A pack transition no longer waits for its members to go idle: a
+//! member with an in-flight solo batch has its cursor committed to the
+//! last layer boundary, checkpointed, and resumed inside the new shared
+//! partition's interleaver ([`EngineEvent::PackHandoff`]). The cursor's
+//! consumed-time ledger is positional, so the handed-off batch's final
+//! consumed fabric time equals the undisturbed solo walk bit-for-bit —
+//! no fabric time is lost or minted by the migration (asserted on
+//! `f64`s in `rust/tests/serve_engine.rs`).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::arch::FilcoConfig;
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::coordinator::reconfig::Reconfigurator;
+use crate::platform::Platform;
+
+use super::cache::{CachedSchedule, ScheduleCache};
+use super::interleave::Interleaver;
+use super::policy::{
+    backlog_weights, inflight_backlog_s, pack_groups, pack_quantum_s, should_pack,
+    should_preempt, should_resplit, should_unpack, PolicyConfig,
+};
+use super::queue::PushError;
+use super::tenant::{admit_arrival, Arrival, BatchCursor, TenantSpec, TokenBucket};
+
+/// One observable state change of the engine, stamped with the fabric
+/// instant it is accounted at. Event traces are bit-comparable between
+/// drivers: every `f64` in here is produced by the engine's own
+/// deterministic arithmetic, never by a driver's clock.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineEvent {
+    /// A batch left a tenant's pending queue and began executing.
+    BatchStarted {
+        /// Tenant whose batch started.
+        tenant: usize,
+        /// Requests in the batch.
+        n: usize,
+        /// Fabric instant the batch was admitted at.
+        at_s: f64,
+    },
+    /// A batch finished; its requests' latencies were recorded.
+    BatchDone {
+        /// Tenant whose batch finished.
+        tenant: usize,
+        /// Requests in the batch.
+        n: usize,
+        /// Fabric instant the batch completed at.
+        at_s: f64,
+        /// The batch cursor's final consumed fabric seconds (solo walk
+        /// total plus any mid-DAG switch charges) — what the handoff
+        /// conservation test asserts on.
+        consumed_s: f64,
+    },
+    /// A request was refused by queue-depth admission control.
+    Rejected {
+        /// Tenant whose request was rejected.
+        tenant: usize,
+        /// Fabric instant of the refusal.
+        at_s: f64,
+    },
+    /// A request was refused by the tenant's fabric-time token bucket.
+    Throttled {
+        /// Tenant whose request was throttled.
+        tenant: usize,
+        /// Fabric instant of the refusal.
+        at_s: f64,
+    },
+    /// The fabric was re-split onto new partition weights.
+    Resplit {
+        /// The (reduced) per-group weights applied.
+        weights: Vec<u32>,
+        /// Fabric instant of the re-composition.
+        at_s: f64,
+    },
+    /// An in-flight batch was preempted at a layer boundary and
+    /// re-based onto its tenant's new slice.
+    Preempted {
+        /// Tenant whose in-flight batch was preempted.
+        tenant: usize,
+        /// Fabric instant of the policy epoch that approved it.
+        at_s: f64,
+    },
+    /// Tenants were packed onto one shared time-multiplexed partition.
+    Packed {
+        /// Member tenant indices, ascending; the first leads.
+        members: Vec<usize>,
+        /// Fabric instant of the transition.
+        at_s: f64,
+    },
+    /// A running solo cursor was checkpointed and resumed inside the
+    /// shared partition's interleaver (step-granular pack handoff).
+    PackHandoff {
+        /// Tenant whose in-flight batch migrated.
+        tenant: usize,
+        /// The cursor's consumed fabric seconds at the handoff
+        /// boundary (continuity anchor for the conservation check).
+        consumed_s: f64,
+        /// Fabric instant of the handoff.
+        at_s: f64,
+    },
+    /// A packed group drained and dissolved back onto solo partitions.
+    Unpacked {
+        /// The dissolved group's member tenant indices.
+        members: Vec<usize>,
+        /// Fabric instant of the transition.
+        at_s: f64,
+    },
+}
+
+/// A composition transition. Every way the fabric can change shape is
+/// one of these, and all of them are applied at exactly one site —
+/// [`FabricEngine::apply`] — by both drivers.
+///
+/// Mid-DAG preemption is not a standalone variant: its benefit term
+/// weighs remaining work *re-costed on the new slice*, which only
+/// exists while a [`Transition::Resplit`] is being applied, so the
+/// preemption decision and landing live inside that one site.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Transition {
+    /// Merge `members` onto one shared partition (interleaved), with
+    /// step-granular handoff of any in-flight member batches.
+    Pack {
+        /// Member tenant indices, ascending; the first leads.
+        members: Vec<usize>,
+    },
+    /// Dissolve the drained packed group led by `leader` back onto
+    /// solo partitions.
+    Unpack {
+        /// Leader (first member) of the group to dissolve.
+        leader: usize,
+    },
+    /// Re-split the fabric onto new per-group weights; in-flight
+    /// batches whose projected saving clears the switch-cost margin
+    /// are preempted at their next layer boundary as part of the
+    /// application.
+    Resplit {
+        /// Proposed per-group partition weights (one per leader).
+        weights: Vec<u32>,
+    },
+}
+
+/// One in-flight batch on a solo partition (closed-form accounting).
+struct InFlight {
+    cursor: BatchCursor,
+    start_s: f64,
+    /// Arrival times of the batch's requests (latency recording).
+    arrived: Vec<f64>,
+}
+
+impl InFlight {
+    /// Projected completion time on the cursor's current schedule.
+    fn fin_s(&self) -> f64 {
+        self.start_s + self.cursor.projected_total_s()
+    }
+}
+
+/// A packed group's shared partition: an interleaved walk over its
+/// members' in-flight batches, advanced lazily as fabric time passes
+/// step boundaries.
+struct PackedGroup {
+    /// Member tenant indices, ascending; `members[0]` leads the group.
+    members: Vec<usize>,
+    il: Interleaver,
+    /// Arrival times of each live slot's requests, keyed by tenant.
+    arrived: Vec<(usize, Vec<f64>)>,
+    /// Fabric time the shared slice has been simulated through; its
+    /// next step retires at `t + il.peek_next_s()`.
+    t: f64,
+    /// Unpack in progress: no new batches are admitted; the pack
+    /// dissolves once the interleaver drains.
+    unpacking: bool,
+}
+
+/// The deterministic fabric execution core. See the module docs for
+/// the full story; drivers interact through [`Self::push`],
+/// [`Self::next_time`], [`Self::step`] and [`Self::finish`], and read
+/// results through the accessor methods.
+pub struct FabricEngine {
+    platform: Platform,
+    base: FilcoConfig,
+    policy: Option<PolicyConfig>,
+    recon: Reconfigurator,
+    specs: Vec<TenantSpec>,
+    caps: Vec<usize>,
+    weights: Vec<u32>,
+    scheds: Vec<Arc<CachedSchedule>>,
+    per_req: Vec<f64>,
+    dims: Vec<(u32, u32)>,
+    buckets: Vec<Option<TokenBucket>>,
+    pending: Vec<VecDeque<(u64, f64)>>,
+    hist: Vec<LatencyHistogram>,
+    served: Vec<u64>,
+    rejected: Vec<u64>,
+    throttled: Vec<u64>,
+    fabric_s: Vec<f64>,
+    busy: Vec<Option<InFlight>>,
+    avail: Vec<f64>,
+    packs: Vec<PackedGroup>,
+    arrivals: Vec<Arrival>,
+    ai: usize,
+    now: f64,
+    next_epoch: f64,
+    setup_switches: u64,
+    epochs: u64,
+    preemptions: u64,
+    pack_count: u64,
+    unpacks: u64,
+    retired_swaps: u64,
+    packed_batches: u64,
+    pack_group_sizes: Vec<usize>,
+    drained_completion: f64,
+    /// Schedule solo-batch completion events even when no queue is
+    /// waiting and preemption is off (live drivers want timely
+    /// retirement; the simulator keeps the oracle's lazier gating).
+    eager_completions: bool,
+    trace: Option<Vec<EngineEvent>>,
+}
+
+impl FabricEngine {
+    /// Build the engine on an equal initial split (every tenant leads
+    /// its own partition). `arrivals` is an optional virtual-time
+    /// traffic trace the engine ingests itself (sorted by `t_s`, as
+    /// the trace generators produce); live drivers pass an empty trace
+    /// and feed [`Self::push`] instead. `switch_cost_s` overrides the
+    /// modelled composition-switch cost.
+    pub fn new(
+        platform: Platform,
+        base: FilcoConfig,
+        specs: Vec<TenantSpec>,
+        policy: Option<PolicyConfig>,
+        switch_cost_s: Option<f64>,
+        arrivals: Vec<Arrival>,
+        cache: &ScheduleCache,
+    ) -> Result<Self, String> {
+        if specs.is_empty() {
+            return Err("no tenants".into());
+        }
+        let t_n = specs.len();
+        let mut recon = Reconfigurator::new(base.clone());
+        if let Some(s) = switch_cost_s {
+            recon.set_switch_cost_s(s);
+        }
+        let weights: Vec<u32> = vec![1; t_n];
+        let named: Vec<(&str, u32)> =
+            specs.iter().zip(&weights).map(|(s, &w)| (s.name.as_str(), w)).collect();
+        let parts = recon.split(&named)?;
+        recon.validate()?;
+        let setup_switches = recon.switches;
+        let scheds: Vec<Arc<CachedSchedule>> = parts
+            .iter()
+            .zip(&specs)
+            .map(|(part, t)| cache.get_or_compute(&platform, &part.config(&base), &t.dag))
+            .collect();
+        let per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
+        let dims: Vec<(u32, u32)> = parts.iter().map(|p| (p.n_fmus(), p.m_cus())).collect();
+        let buckets: Vec<Option<TokenBucket>> =
+            specs.iter().map(|t| t.rate_limit.map(TokenBucket::from_limit)).collect();
+        let caps: Vec<usize> = specs.iter().map(|t| t.queue_capacity).collect();
+        let next_epoch = policy.as_ref().map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
+        Ok(Self {
+            platform,
+            base,
+            policy,
+            recon,
+            caps,
+            weights,
+            scheds,
+            per_req,
+            dims,
+            buckets,
+            pending: vec![VecDeque::new(); t_n],
+            hist: vec![LatencyHistogram::new(); t_n],
+            served: vec![0; t_n],
+            rejected: vec![0; t_n],
+            throttled: vec![0; t_n],
+            fabric_s: vec![0.0; t_n],
+            busy: (0..t_n).map(|_| None).collect(),
+            avail: vec![0.0; t_n],
+            packs: Vec::new(),
+            arrivals,
+            ai: 0,
+            now: 0.0,
+            next_epoch,
+            setup_switches,
+            epochs: 0,
+            preemptions: 0,
+            pack_count: 0,
+            unpacks: 0,
+            retired_swaps: 0,
+            packed_batches: 0,
+            pack_group_sizes: Vec::new(),
+            drained_completion: 0.0,
+            eager_completions: false,
+            trace: None,
+            specs,
+        })
+    }
+
+    // ---- driver knobs ----------------------------------------------------
+
+    /// Record every emitted [`EngineEvent`] for later retrieval with
+    /// [`Self::take_trace`] (off by default; traces grow with the run).
+    pub fn record_trace(&mut self, on: bool) {
+        self.trace = if on { Some(Vec::new()) } else { None };
+    }
+
+    /// The recorded event trace so far (empty unless
+    /// [`Self::record_trace`] was enabled).
+    pub fn take_trace(&mut self) -> Vec<EngineEvent> {
+        self.trace.take().unwrap_or_default()
+    }
+
+    /// Schedule completion events for in-flight solo batches even when
+    /// their queues are empty and preemption is off. Live drivers turn
+    /// this on so batches retire (and latencies record) as soon as
+    /// they complete; the simulator leaves it off to keep the
+    /// pre-refactor oracle's event gating bit-for-bit. Extra wakeups
+    /// never change any decision — only when already-determined
+    /// retirements are observed.
+    pub fn eager_completions(&mut self, on: bool) {
+        self.eager_completions = on;
+    }
+
+    // ---- admission -------------------------------------------------------
+
+    /// Admit one external request for `tenant` arriving at fabric
+    /// instant `arr_s`: queue depth first (reject as full), then the
+    /// fabric-time token bucket (throttle) — the same classification
+    /// order as trace ingest, so both drivers count refusals
+    /// identically.
+    pub fn push(&mut self, tenant: usize, id: u64, arr_s: f64) -> Result<(), PushError> {
+        let res = admit_arrival(
+            &mut self.pending[tenant],
+            self.caps[tenant],
+            &mut self.buckets[tenant],
+            self.per_req[tenant],
+            id,
+            arr_s,
+        );
+        match res {
+            Err(PushError::Full) => {
+                self.rejected[tenant] += 1;
+                self.emit(EngineEvent::Rejected { tenant, at_s: arr_s });
+            }
+            Err(PushError::Throttled) => {
+                self.throttled[tenant] += 1;
+                self.emit(EngineEvent::Throttled { tenant, at_s: arr_s });
+            }
+            Err(PushError::Closed) | Ok(()) => {}
+        }
+        res
+    }
+
+    /// Ingest own-trace arrivals up to `now` (same classification
+    /// order as [`Self::push`]).
+    fn ingest(&mut self, now: f64) {
+        while self.ai < self.arrivals.len() && self.arrivals[self.ai].t_s <= now {
+            let a = self.arrivals[self.ai];
+            self.ai += 1;
+            let _ = self.push(a.tenant, a.id, a.t_s);
+        }
+    }
+
+    // ---- stepping --------------------------------------------------------
+
+    fn emit(&mut self, ev: EngineEvent) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(ev);
+        }
+    }
+
+    /// Advance the engine to fabric instant `now`: ingest due trace
+    /// arrivals, progress packed partitions through their step
+    /// boundaries, retire and start solo batches, and run the policy
+    /// epoch if one is due. Returns the events of this step (also
+    /// appended to the trace when recording). Idempotent at a given
+    /// instant once everything due has been processed.
+    ///
+    /// Fabric time is monotone: a `now` behind the engine's clock is
+    /// clamped to it. A live driver can legitimately propose a stale
+    /// instant — [`Self::next_time`] reports an idle tenant's old
+    /// `avail` once an external push lands in its queue — and without
+    /// the clamp that batch would start (and instantly retire) in the
+    /// past, skipping wall pacing entirely. The simulator's instants
+    /// are monotone already, so the clamp is the identity there.
+    pub fn step(&mut self, now: f64, cache: &ScheduleCache) -> Vec<EngineEvent> {
+        let now = now.max(self.now);
+        self.now = now;
+        // Whether a due epoch may fire is decided by the state at the
+        // *start* of the step — exactly the condition under which the
+        // event horizon would have scheduled the epoch instant. Live
+        // drivers step at extra instants (external pushes, eager
+        // completions) the simulator never visits; without this guard
+        // those instants could fire epochs the simulator's gating
+        // would never schedule, breaking trace equivalence.
+        let epoch_armed = self.epoch_relevant();
+        let mut out = Vec::new();
+        self.ingest(now);
+        self.groups_progress(now, &mut out);
+        self.retire_solo(now, &mut out);
+        self.start_solo(now, &mut out);
+        if epoch_armed {
+            self.maybe_epoch(now, cache, &mut out);
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.extend(out.iter().cloned());
+        }
+        out
+    }
+
+    /// The policy-epoch gating term, shared between [`Self::next_time`]
+    /// (should an epoch instant be scheduled?) and [`Self::step`]
+    /// (may a due epoch fire?): queued work, preemptible in-flight
+    /// work, live packed slots, or unconsumed trace arrivals.
+    fn epoch_relevant(&self) -> bool {
+        let preempt_on = self.policy.as_ref().is_some_and(PolicyConfig::preemption_enabled);
+        self.pending.iter().any(|q| !q.is_empty())
+            || (preempt_on && self.busy.iter().any(Option::is_some))
+            || self.packs.iter().any(|pk| !pk.il.is_empty())
+            || self.trace_pending()
+    }
+
+    /// The packed partitions: admit member batches into interleaver
+    /// slots and retire the steps whose end has been reached.
+    /// Alternating admission and retirement lets a tenant's next batch
+    /// start the moment its previous one drains, exactly like a solo
+    /// slice at the same fabric instant.
+    fn groups_progress(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
+        let mut gi = 0;
+        while gi < self.packs.len() {
+            loop {
+                let mut progressed = false;
+                if !self.packs[gi].unpacking {
+                    let members = self.packs[gi].members.clone();
+                    for m in members {
+                        if !self.packs[gi].il.contains(m) && !self.pending[m].is_empty() {
+                            let take = self.pending[m].len().min(self.specs[m].max_batch);
+                            let mut arrived = Vec::with_capacity(take);
+                            for _ in 0..take {
+                                let (_id, arr) = self.pending[m].pop_front().unwrap();
+                                arrived.push(arr);
+                            }
+                            let sched = self.scheds[m].clone();
+                            let pk = &mut self.packs[gi];
+                            if pk.il.is_empty() {
+                                // Idle slice: its clock catches up to now
+                                // before the new batch's first step.
+                                pk.t = pk.t.max(now);
+                            }
+                            pk.il.add(m, BatchCursor::new(sched, take));
+                            pk.arrived.push((m, arrived));
+                            self.packed_batches += 1;
+                            out.push(EngineEvent::BatchStarted { tenant: m, n: take, at_s: now });
+                            progressed = true;
+                        }
+                    }
+                }
+                if self.drain_group_steps(gi, now, out) > 0 {
+                    progressed = true;
+                }
+                if !progressed {
+                    break;
+                }
+            }
+            gi += 1;
+        }
+    }
+
+    /// Retire group `gi`'s interleaver steps whose end lies at or
+    /// before `bound_s`, advancing the group clock, charging fabric
+    /// time, and recording completed batches. Returns how many batches
+    /// completed — the one accounting site for packed retirement, used
+    /// by [`Self::groups_progress`] (bounded by the step instant) and
+    /// [`Self::finish`] (bound opened).
+    fn drain_group_steps(&mut self, gi: usize, bound_s: f64, out: &mut Vec<EngineEvent>) -> usize {
+        let mut completed = 0;
+        loop {
+            let pk = &mut self.packs[gi];
+            let Some(d) = pk.il.peek_next_s() else { break };
+            if pk.t + d > bound_s {
+                break;
+            }
+            let ev = pk.il.advance().unwrap();
+            pk.t += ev.swap_charge_s + ev.step.dur_s;
+            let t_done = pk.t;
+            self.fabric_s[ev.tenant] += ev.swap_charge_s + ev.step.dur_s;
+            if ev.done {
+                let pk = &mut self.packs[gi];
+                let pos = pk.arrived.iter().position(|(m, _)| *m == ev.tenant).unwrap();
+                let (_, arrs) = pk.arrived.remove(pos);
+                for &arr in &arrs {
+                    self.hist[ev.tenant].record((t_done - arr).max(0.0));
+                    self.served[ev.tenant] += 1;
+                }
+                out.push(EngineEvent::BatchDone {
+                    tenant: ev.tenant,
+                    n: arrs.len(),
+                    at_s: t_done,
+                    consumed_s: ev.step.consumed_s,
+                });
+                completed += 1;
+            }
+        }
+        completed
+    }
+
+    /// Retire solo batches whose (projected) completion has been
+    /// reached. Recording at completion: an undisturbed cursor's total
+    /// is the closed-form batch time, so latencies match the
+    /// batch-atomic model exactly; a preempted batch records its
+    /// actual (re-costed, switch-charged) completion.
+    fn retire_solo(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
+        for t in 0..self.specs.len() {
+            let done = self.busy[t].as_ref().is_some_and(|fl| fl.fin_s() <= now);
+            if done {
+                let fl = self.busy[t].take().unwrap();
+                let fin = fl.fin_s();
+                for &arr in &fl.arrived {
+                    self.hist[t].record((fin - arr).max(0.0));
+                    self.served[t] += 1;
+                }
+                self.fabric_s[t] += fl.cursor.projected_total_s();
+                out.push(EngineEvent::BatchDone {
+                    tenant: t,
+                    n: fl.arrived.len(),
+                    at_s: fin,
+                    consumed_s: fl.cursor.projected_total_s(),
+                });
+            }
+        }
+    }
+
+    /// Each tenant's solo partition starts its next batch if its slice
+    /// is free. Packed members have no slice of their own — their
+    /// batches are admitted by [`Self::groups_progress`].
+    fn start_solo(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
+        for t in 0..self.specs.len() {
+            if self.in_pack(t) {
+                continue;
+            }
+            if self.busy[t].is_some() || self.avail[t] > now {
+                continue;
+            }
+            let take = self.pending[t].len().min(self.specs[t].max_batch);
+            if take == 0 {
+                continue;
+            }
+            let mut arrived = Vec::with_capacity(take);
+            for _ in 0..take {
+                let (_id, arr) = self.pending[t].pop_front().unwrap();
+                arrived.push(arr);
+            }
+            let fl = InFlight {
+                cursor: BatchCursor::new(self.scheds[t].clone(), take),
+                start_s: now,
+                arrived,
+            };
+            self.avail[t] = fl.fin_s();
+            out.push(EngineEvent::BatchStarted { tenant: t, n: take, at_s: now });
+            self.busy[t] = Some(fl);
+        }
+    }
+
+    // ---- policy epoch ----------------------------------------------------
+
+    /// Run the policy epoch if one is due at `now`.
+    fn maybe_epoch(&mut self, now: f64, cache: &ScheduleCache, out: &mut Vec<EngineEvent>) {
+        if self.policy.is_none() || now < self.next_epoch {
+            return;
+        }
+        self.run_epoch(now, cache, out);
+        let epoch_s = self.policy.as_ref().unwrap().epoch_s;
+        while self.next_epoch <= now {
+            self.next_epoch += epoch_s;
+        }
+    }
+
+    /// Force a policy evaluation at the engine's current fabric
+    /// instant, regardless of the epoch schedule — the live
+    /// scheduler's `policy_step` entry point. Returns true when the
+    /// composition changed (a grouping transition or a re-split
+    /// landed).
+    pub fn epoch_now(&mut self, cache: &ScheduleCache) -> bool {
+        if self.policy.is_none() {
+            return false;
+        }
+        let mut out = Vec::new();
+        let changed = self.run_epoch(self.now, cache, &mut out);
+        if let Some(tr) = self.trace.as_mut() {
+            tr.extend(out.iter().cloned());
+        }
+        changed
+    }
+
+    /// One policy evaluation: observe backlog (queued work, plus
+    /// migration-discounted in-flight work when preemption is
+    /// enabled), decide pack/unpack transitions, and re-split if
+    /// warranted — every decision applied through [`Self::apply`].
+    fn run_epoch(&mut self, now: f64, cache: &ScheduleCache, out: &mut Vec<EngineEvent>) -> bool {
+        let p = self.policy.clone().expect("run_epoch requires a policy");
+        let preempt_on = p.preemption_enabled();
+        let pack_on = p.packing_enabled();
+        let t_n = self.specs.len();
+        self.epochs += 1;
+        if preempt_on {
+            // Sync in-flight cursors to fabric time (packed slices
+            // advance eagerly; solo slices account in closed form, so
+            // commit the layer steps that retired by `now`) — the
+            // remaining-work signals and preemption decisions below
+            // then reflect *exact* cursor positions, not batch-start
+            // estimates, in both drivers.
+            for fl in self.busy.iter_mut().flatten() {
+                while fl.cursor.peek_consumed_s().is_some_and(|c| fl.start_s + c <= now) {
+                    let _ = fl.cursor.advance();
+                }
+            }
+        }
+        let switch_cost = self.recon.switch_cost_s();
+        let backlog: Vec<f64> = (0..t_n)
+            .map(|t| {
+                let queued = self.pending[t].len() as f64 * self.per_req[t];
+                let inflight = if preempt_on {
+                    self.busy[t]
+                        .as_ref()
+                        .map(|fl| inflight_backlog_s(fl.cursor.remaining_s(), switch_cost, &p))
+                        .unwrap_or(0.0)
+                } else {
+                    0.0
+                };
+                // Packed slots' remaining work is always movable (they
+                // re-base on every re-split) and is counted, without a
+                // migration discount, whenever packing is live.
+                let packed_inflight = self
+                    .packs
+                    .iter()
+                    .find(|pk| pk.members.contains(&t))
+                    .map(|pk| pk.il.slot_remaining_s(t))
+                    .unwrap_or(0.0);
+                queued + inflight + packed_inflight
+            })
+            .collect();
+        let total_backlog: f64 = backlog.iter().sum();
+        let mut grouping_changed = false;
+        if pack_on {
+            // Unpack transitions: mark overloaded groups, dissolve the
+            // drained ones.
+            for pk in &mut self.packs {
+                let combined: f64 = pk.members.iter().map(|&m| backlog[m]).sum();
+                if !pk.unpacking && should_unpack(combined, p.epoch_s, &p) {
+                    pk.unpacking = true;
+                }
+            }
+            let drained: Vec<usize> = self
+                .packs
+                .iter()
+                .filter(|pk| pk.unpacking && pk.il.is_empty())
+                .map(|pk| pk.members[0])
+                .collect();
+            for leader in drained {
+                grouping_changed |= self.apply(Transition::Unpack { leader }, now, cache, out);
+            }
+            // New packs among unpacked tenants: first-fit-decreasing
+            // bin packing against the fit bound, each proposed group
+            // re-validated by the shared fit + amortization terms. A
+            // tenant's in-flight batch is only movable (mid-flight
+            // handoff) when preemption is enabled — with it disabled
+            // the work is immovable (and invisible to the fit gate),
+            // so a busy tenant must not be packed at all.
+            let eligible: Vec<bool> = (0..t_n)
+                .map(|t| !self.in_pack(t) && (preempt_on || self.busy[t].is_none()))
+                .collect();
+            let capacity_s = p.epoch_s / p.pack_headroom_factor;
+            for members in pack_groups(&backlog, &eligible, capacity_s) {
+                let combined: f64 = members.iter().map(|&m| backlog[m]).sum();
+                let cand: Vec<(f64, usize)> = members
+                    .iter()
+                    .map(|&m| (self.per_req[m], self.scheds[m].steps.len()))
+                    .collect();
+                let quantum_s = pack_quantum_s(p.pack_quantum_steps, &cand);
+                if should_pack(combined, p.epoch_s, quantum_s, switch_cost, &p) {
+                    grouping_changed |= self.apply(Transition::Pack { members }, now, cache, out);
+                }
+            }
+        }
+        // One group per partition leader; weights proposed from the
+        // grouped backlog signal.
+        let groups = self.leader_groups();
+        let group_backlog: Vec<f64> =
+            groups.iter().map(|g| g.iter().map(|&t| backlog[t]).sum()).collect();
+        let proposed = backlog_weights(&group_backlog, p.max_weight);
+        let resplit = grouping_changed
+            || should_resplit(&self.weights, &proposed, total_backlog, switch_cost, &p);
+        let mut applied = false;
+        if resplit {
+            applied = self.apply(Transition::Resplit { weights: proposed }, now, cache, out);
+        }
+        grouping_changed || applied
+    }
+
+    // ---- transitions: the one site ---------------------------------------
+
+    /// Apply a composition [`Transition`] — the single site where the
+    /// fabric changes shape for both drivers. Returns false when the
+    /// transition could not be applied (an invalid split proposal is
+    /// logged and skipped; the fabric keeps its current shape).
+    pub fn apply(
+        &mut self,
+        tr: Transition,
+        now: f64,
+        cache: &ScheduleCache,
+        out: &mut Vec<EngineEvent>,
+    ) -> bool {
+        match tr {
+            Transition::Pack { members } => self.apply_pack(members, now, out),
+            Transition::Unpack { leader } => self.apply_unpack(leader, out),
+            Transition::Resplit { weights } => self.apply_resplit(weights, now, cache, out),
+        }
+    }
+
+    /// Merge `members` onto one shared partition. Members with an
+    /// in-flight solo batch are handed off mid-flight: the cursor is
+    /// committed to its last layer boundary, checkpointed, and resumed
+    /// inside the group's interleaver — the in-flight step between the
+    /// boundary and `now` re-runs on the shared slice (the same
+    /// at-most-one-step conservative bias as preemption), and the
+    /// cursor's consumed-time ledger carries over exactly.
+    fn apply_pack(&mut self, members: Vec<usize>, now: f64, out: &mut Vec<EngineEvent>) -> bool {
+        debug_assert!(members.len() >= 2);
+        debug_assert!(members.iter().all(|&m| !self.in_pack(m)));
+        let quantum_steps =
+            self.policy.as_ref().expect("packing requires a policy").pack_quantum_steps;
+        let mut il = Interleaver::new(self.recon.switch_cost_s(), quantum_steps);
+        let mut arrived: Vec<(usize, Vec<f64>)> = Vec::new();
+        // The shared slice inherits the members' outstanding
+        // availability charges (and starts no earlier than now once a
+        // handoff seeds it with live work).
+        let mut t0 = now;
+        for &m in &members {
+            match self.busy[m].take() {
+                None => t0 = t0.max(self.avail[m]),
+                Some(mut fl) => {
+                    // Commit the layer steps that retired by `now`
+                    // (idempotent with the epoch sync), then move the
+                    // cursor — checkpoint/resume keeps the consumed
+                    // ledger bit-for-bit.
+                    while fl.cursor.peek_consumed_s().is_some_and(|c| fl.start_s + c <= now) {
+                        let _ = fl.cursor.advance();
+                    }
+                    debug_assert!(!fl.cursor.is_done(), "a done batch would have retired");
+                    // Reprogram charges parked on `avail` by earlier
+                    // re-splits are still owed after the migration.
+                    let extra = (self.avail[m] - fl.fin_s()).max(0.0);
+                    t0 = t0.max(now + extra);
+                    // The solo projection is void once the batch
+                    // migrates; `avail` is rewritten at unpack and must
+                    // not carry a stale (possibly later) completion
+                    // into `completion_s`.
+                    self.avail[m] = now + extra;
+                    // Solo batches charge fabric_s at retirement; a
+                    // handed-off batch retires through the interleaver,
+                    // which charges only the *remaining* steps — so the
+                    // pre-handoff work is charged here, keeping the
+                    // per-tenant ledger whole.
+                    self.fabric_s[m] += fl.cursor.consumed_s();
+                    out.push(EngineEvent::PackHandoff {
+                        tenant: m,
+                        consumed_s: fl.cursor.consumed_s(),
+                        at_s: now,
+                    });
+                    let ck = fl.cursor.checkpoint();
+                    il.add(m, BatchCursor::resume(ck));
+                    arrived.push((m, fl.arrived));
+                    self.packed_batches += 1;
+                }
+            }
+        }
+        self.pack_count += 1;
+        self.pack_group_sizes.push(members.len());
+        out.push(EngineEvent::Packed { members: members.clone(), at_s: now });
+        self.packs.push(PackedGroup { members, il, arrived, t: t0, unpacking: false });
+        self.packs.sort_by_key(|pk| pk.members[0]);
+        true
+    }
+
+    /// Dissolve the drained group led by `leader`: members resume solo
+    /// where the shared slice clock left off (owed charges carry
+    /// over).
+    fn apply_unpack(&mut self, leader: usize, out: &mut Vec<EngineEvent>) -> bool {
+        let Some(gi) = self.packs.iter().position(|pk| pk.members[0] == leader) else {
+            return false;
+        };
+        debug_assert!(self.packs[gi].il.is_empty(), "unpack only lands on a drained group");
+        let pk = self.packs.remove(gi);
+        for &m in &pk.members {
+            self.avail[m] = pk.t;
+        }
+        self.retired_swaps += pk.il.swaps();
+        self.unpacks += 1;
+        out.push(EngineEvent::Unpacked { members: pk.members, at_s: self.now });
+        true
+    }
+
+    /// Re-split the fabric onto `proposed` per-group weights. Shared
+    /// slices reprogram once (live slots re-base at the current step
+    /// boundary, the charge on the group clock); solo slices either
+    /// preempt their in-flight batch at its next layer boundary — when
+    /// re-costing the remainder on the new slice beats draining on the
+    /// old one by the margin — or drain first and pay the reprogram
+    /// cost on availability.
+    fn apply_resplit(
+        &mut self,
+        proposed: Vec<u32>,
+        now: f64,
+        cache: &ScheduleCache,
+        out: &mut Vec<EngineEvent>,
+    ) -> bool {
+        let p = self.policy.clone().expect("re-split requires a policy");
+        let preempt_on = p.preemption_enabled();
+        let groups = self.leader_groups();
+        let named: Vec<(&str, u32)> = groups
+            .iter()
+            .zip(&proposed)
+            .map(|(g, &w)| (self.specs[g[0]].name.as_str(), w))
+            .collect();
+        let parts = match self.recon.split(&named) {
+            Ok(parts) => parts,
+            Err(e) => {
+                log::warn!("re-split rejected: {e}");
+                return false;
+            }
+        };
+        debug_assert!(self.recon.validate().is_ok());
+        let switch = self.recon.switch_cost_s();
+        for (gi, g) in groups.iter().enumerate() {
+            let slice = parts[gi].config(&self.base);
+            let dims = (parts[gi].n_fmus(), parts[gi].m_cus());
+            if g.len() > 1 {
+                // The shared slice reprograms once; live slots re-base
+                // onto their tenants' new schedules at the current
+                // step boundary (the charge sits on the group clock).
+                let pki = self.packs.iter().position(|pk| pk.members == *g);
+                let pki = pki.expect("multi-member group is the pack");
+                self.packs[pki].t = self.packs[pki].t.max(now) + switch;
+                self.fabric_s[g[0]] += switch;
+                for &m in g {
+                    let ns = cache.get_or_compute(&self.platform, &slice, &self.specs[m].dag);
+                    self.packs[pki].il.retarget(m, ns.clone(), 0.0);
+                    self.per_req[m] = ns.per_request_s;
+                    self.scheds[m] = ns;
+                    self.dims[m] = dims;
+                }
+                continue;
+            }
+            let t = g[0];
+            let new_sched = cache.get_or_compute(&self.platform, &slice, &self.specs[t].dag);
+            let preempt = preempt_on
+                && self.busy[t].as_ref().is_some_and(|fl| {
+                    // A potential switch lands at the next layer
+                    // boundary; everything before it runs on the old
+                    // slice either way, so compare the paths from
+                    // there. (The in-flight step is also still counted
+                    // in `remaining_on` — at most one step of
+                    // conservative bias.) Charges parked on `avail` by
+                    // earlier re-splits are owed on either path and
+                    // excluded.
+                    let boundary_s =
+                        fl.cursor.peek_consumed_s().map_or(fl.fin_s(), |c| fl.start_s + c);
+                    let rem_old = (fl.fin_s() - boundary_s).max(0.0);
+                    let rem_new = fl.cursor.remaining_on(&new_sched);
+                    should_preempt(rem_old, rem_new, switch, &p)
+                });
+            if preempt {
+                // Land the switch at the next layer boundary: steps
+                // that retired by `now` stay on the old slice's
+                // accounting (the epoch sync committed them), the
+                // in-flight step finishes on it, then the cursor
+                // re-bases onto the new schedule with the mid-DAG
+                // switch charged.
+                let fl = self.busy[t].as_mut().unwrap();
+                let extra = (self.avail[t] - fl.fin_s()).max(0.0);
+                let _ = fl.cursor.advance();
+                fl.cursor.retarget(new_sched.clone(), switch);
+                self.avail[t] = fl.fin_s() + extra;
+                self.preemptions += 1;
+                out.push(EngineEvent::Preempted { tenant: t, at_s: now });
+            } else {
+                // In-flight batches finish on the old composition,
+                // then every slice pays the reprogram cost.
+                self.avail[t] = self.avail[t].max(now) + switch;
+                self.fabric_s[t] += switch;
+            }
+            self.per_req[t] = new_sched.per_request_s;
+            self.scheds[t] = new_sched;
+            self.dims[t] = dims;
+        }
+        out.push(EngineEvent::Resplit { weights: proposed.clone(), at_s: now });
+        self.weights = proposed;
+        true
+    }
+
+    // ---- event horizon ---------------------------------------------------
+
+    /// The earliest fabric instant at which anything can happen: a
+    /// trace arrival, a solo batch completion that matters, a packed
+    /// interleaver step, or a due policy epoch (scheduled exactly when
+    /// [`Self::epoch_relevant`] holds — the same gate [`Self::step`]
+    /// fires on, so a scheduled epoch always fires and advances).
+    /// `None` means the engine is quiescent — a driver then either
+    /// waits for external input or calls [`Self::finish`].
+    pub fn next_time(&self) -> Option<f64> {
+        let mut next = f64::INFINITY;
+        if self.ai < self.arrivals.len() {
+            next = next.min(self.arrivals[self.ai].t_s);
+        }
+        let inflight_left = self.busy.iter().any(|b| b.is_some());
+        let preempt_on = self.policy.as_ref().is_some_and(PolicyConfig::preemption_enabled);
+        for t in 0..self.specs.len() {
+            if self.in_pack(t) {
+                // Packed members have no solo slice; their events come
+                // from the interleaver below.
+                continue;
+            }
+            if !self.pending[t].is_empty() {
+                next = next.min(self.avail[t]);
+            }
+        }
+        if (preempt_on || self.eager_completions) && inflight_left {
+            // Completion events matter even with empty queues: later
+            // epochs may still preempt the in-flight work (and live
+            // drivers retire eagerly either way).
+            for t in 0..self.specs.len() {
+                if self.busy[t].is_some() {
+                    next = next.min(self.avail[t]);
+                }
+            }
+        }
+        for pk in &self.packs {
+            if let Some(d) = pk.il.peek_next_s() {
+                next = next.min(pk.t + d);
+            } else if !pk.unpacking && pk.members.iter().any(|&m| !self.pending[m].is_empty()) {
+                // A drained group with queued member work can admit a
+                // batch immediately. Only a live push between steps
+                // creates this state — the simulator admits within the
+                // arrival's own step — so this instant never fires
+                // there and trace equivalence is untouched.
+                next = next.min(self.now);
+            }
+        }
+        if self.policy.is_some() && self.epoch_relevant() {
+            next = next.min(self.next_epoch);
+        }
+        next.is_finite().then_some(next)
+    }
+
+    /// Retire whatever is still in flight (its completion needed no
+    /// further events) and drain any remaining interleaved work.
+    /// Called once by a driver after [`Self::next_time`] returns
+    /// `None` and no further external input is coming.
+    pub fn finish(&mut self) -> Vec<EngineEvent> {
+        let mut out = Vec::new();
+        // Solo leftovers retire unconditionally — the same accounting
+        // as a step, with the time bound opened.
+        self.retire_solo(f64::INFINITY, &mut out);
+        // Packed leftovers drain their interleavers with the bound
+        // opened. This is *not* `groups_progress`: end-of-run drains
+        // never admit still-pending member batches, matching the
+        // pre-engine simulator's final drain exactly.
+        let mut gi = 0;
+        while gi < self.packs.len() {
+            self.drain_group_steps(gi, f64::INFINITY, &mut out);
+            gi += 1;
+        }
+        for pk in &self.packs {
+            self.drained_completion = self.drained_completion.max(pk.t);
+        }
+        if let Some(tr) = self.trace.as_mut() {
+            tr.extend(out.iter().cloned());
+        }
+        out
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    fn in_pack(&self, t: usize) -> bool {
+        self.packs.iter().any(|pk| pk.members.contains(&t))
+    }
+
+    /// One group per partition leader, in leader order: packed groups
+    /// at their leader's position, everyone else a singleton.
+    fn leader_groups(&self) -> Vec<Vec<usize>> {
+        (0..self.specs.len())
+            .filter_map(|t| match self.packs.iter().find(|pk| pk.members.contains(&t)) {
+                Some(pk) => (pk.members[0] == t).then(|| pk.members.clone()),
+                None => Some(vec![t]),
+            })
+            .collect()
+    }
+
+    /// Number of tenants the engine serves.
+    pub fn num_tenants(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// The tenant leading `t`'s partition (`t` itself unless packed
+    /// onto another's slice).
+    pub fn host(&self, t: usize) -> usize {
+        self.packs.iter().find(|pk| pk.members.contains(&t)).map_or(t, |pk| pk.members[0])
+    }
+
+    /// Tenant `t`'s current slice dimensions as `(fmus, cus)`.
+    pub fn dims(&self, t: usize) -> (u32, u32) {
+        self.dims[t]
+    }
+
+    /// Tenant `t`'s display name.
+    pub fn tenant_name(&self, t: usize) -> &str {
+        &self.specs[t].name
+    }
+
+    /// Fabric seconds one request currently costs tenant `t`.
+    pub fn per_request_s(&self, t: usize) -> f64 {
+        self.per_req[t]
+    }
+
+    /// Requests waiting in tenant `t`'s pending queue.
+    pub fn pending_len(&self, t: usize) -> usize {
+        self.pending[t].len()
+    }
+
+    /// Drop every request pending for tenant `t`, returning how many
+    /// were discarded (test and shutdown aid; no latency is recorded).
+    pub fn drain_pending(&mut self, t: usize) -> usize {
+        let n = self.pending[t].len();
+        self.pending[t].clear();
+        n
+    }
+
+    /// Does the engine hold any work at all (pending requests,
+    /// in-flight solo batches, or live interleaver slots)?
+    pub fn has_work(&self) -> bool {
+        self.pending.iter().any(|q| !q.is_empty())
+            || self.busy.iter().any(|b| b.is_some())
+            || self.packs.iter().any(|pk| !pk.il.is_empty())
+    }
+
+    /// Are there still unconsumed arrivals in the engine's own trace?
+    pub fn trace_pending(&self) -> bool {
+        self.ai < self.arrivals.len()
+    }
+
+    /// Is the current composition the equal split?
+    pub fn weights_equal(&self) -> bool {
+        self.weights.windows(2).all(|w| w[0] == w[1])
+    }
+
+    /// Fabric instant the engine has been stepped to.
+    pub fn now_s(&self) -> f64 {
+        self.now
+    }
+
+    /// Fabric time at which the last work finished (max over solo
+    /// availability and packed group clocks).
+    pub fn completion_s(&self) -> f64 {
+        let solo = self.avail.iter().cloned().fold(0.0f64, f64::max);
+        let packed = self.packs.iter().map(|pk| pk.t).fold(self.drained_completion, f64::max);
+        solo.max(packed)
+    }
+
+    /// Requests served, per tenant.
+    pub fn served(&self) -> &[u64] {
+        &self.served
+    }
+
+    /// Requests rejected by queue-depth admission control, per tenant.
+    pub fn rejected(&self) -> &[u64] {
+        &self.rejected
+    }
+
+    /// Requests refused by fabric-time token buckets, per tenant.
+    pub fn throttled(&self) -> &[u64] {
+        &self.throttled
+    }
+
+    /// Fabric seconds consumed on each tenant's behalf (layer steps,
+    /// swap charges while packed, switch charges while leading).
+    pub fn fabric_s(&self, t: usize) -> f64 {
+        self.fabric_s[t]
+    }
+
+    /// Per-tenant fabric latency histograms (queueing + service).
+    pub fn histograms(&self) -> &[LatencyHistogram] {
+        &self.hist
+    }
+
+    /// Re-compositions performed (the setup split is not counted).
+    pub fn switches(&self) -> u64 {
+        self.recon.switches - self.setup_switches
+    }
+
+    /// In-flight batches preempted at a layer boundary.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
+    }
+
+    /// Policy epochs evaluated.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Pack transitions applied.
+    pub fn packs(&self) -> u64 {
+        self.pack_count
+    }
+
+    /// Unpack transitions applied.
+    pub fn unpacks(&self) -> u64 {
+        self.unpacks
+    }
+
+    /// Cursor context swaps charged by partition interleavers
+    /// (dissolved groups plus live ones).
+    pub fn pack_swaps(&self) -> u64 {
+        self.retired_swaps + self.packs.iter().map(|pk| pk.il.swaps()).sum::<u64>()
+    }
+
+    /// Batches that executed inside a packed group's interleaver
+    /// (admissions and mid-flight handoffs).
+    pub fn packed_batches(&self) -> u64 {
+        self.packed_batches
+    }
+
+    /// Size of every pack group formed, in transition order.
+    pub fn pack_group_sizes(&self) -> &[usize] {
+        &self.pack_group_sizes
+    }
+}

@@ -25,10 +25,11 @@
 //! `rust/tests/serve_pack.rs` assert `==` on `f64`s.
 //!
 //! All durations in this module are **fabric seconds** (modelled device
-//! time), never wall-clock seconds. The type is single-threaded; the
-//! live scheduler keeps each interleaver owned by one worker thread and
-//! the simulator is single-threaded by construction, so no locking is
-//! required or provided.
+//! time), never wall-clock seconds. The type is single-threaded; every
+//! interleaver is owned by the [`FabricEngine`](super::FabricEngine),
+//! which both drivers access under one lock (the live scheduler) or
+//! from one thread (the simulator), so no locking is required or
+//! provided.
 
 use std::sync::Arc;
 
@@ -162,11 +163,11 @@ impl Interleaver {
     /// Remove `tenant`'s in-flight cursor without completing it.
     /// Returns `None` when the tenant has no live slot.
     ///
-    /// Note: neither production unpack path calls this today — the live
-    /// scheduler lets the host drain adopted slots to completion and
-    /// the simulator drains before dissolving a pack, so batches never
-    /// migrate between execution models mid-flight. It exists (and is
-    /// tested) as the building block for step-granular pack handoff.
+    /// Note: the engine's unpack path drains a group before dissolving
+    /// it (batches never migrate *out* of an interleaver mid-flight);
+    /// mid-flight pack handoff migrates cursors *in*, via
+    /// checkpoint/resume into [`Self::add`]. `take` remains the
+    /// building block for the outbound direction.
     pub fn take(&mut self, tenant: usize) -> Option<BatchCursor> {
         let pos = self.slots.iter().position(|s| s.tenant == tenant)?;
         Some(self.remove_at(pos).cursor)

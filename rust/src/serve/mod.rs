@@ -5,15 +5,39 @@
 //!
 //! See `ARCHITECTURE.md` at the repository root for the full
 //! paper-to-code map and a data-flow walkthrough of this subsystem
-//! (queue → policy → scheduler/sim → report), including the
+//! (queues → engine ← clock; drivers as shells), including the
 //! cursor/interleaver lifecycle diagram.
+//!
+//! # One engine, two clocks
+//!
+//! The fabric exists once, so it is modelled once: the
+//! [`FabricEngine`] is a deterministic state machine over *fabric
+//! time* that owns the partitions, the in-flight [`BatchCursor`]s and
+//! per-partition [`Interleaver`]s, the admission state (queue depths
+//! and fabric-time [`TokenBucket`]s), the schedule cache handle, and
+//! every composition transition — resplit, mid-DAG preemption, pack,
+//! unpack — applied through one [`Transition`] enum at one site.
+//! What differs between deployment modes is only the [`Clock`] that
+//! paces the driver loop:
+//!
+//! * [`sim`] drains the engine on a [`VirtualClock`] (instant jumps):
+//!   deterministic what-if runs comparing unified time-sharing vs. a
+//!   static equal split vs. dynamic re-composition on the same trace;
+//! * [`scheduler`] drives the *same* engine from worker thread shells
+//!   on a [`WallClock`] (deadline-paced sleeps), with producers
+//!   pushing live requests into the engine's queues.
+//!
+//! Engine decisions never read the wall clock, so a live run replays
+//! the simulator's event trace bit-for-bit — "live and sim agree" is
+//! structural, not a test-enforced convention (though
+//! `rust/tests/serve_engine.rs` enforces it anyway).
 //!
 //! # The cursor execution model
 //!
 //! FILCO's runtime parameters arrive per layer via instruction decode,
 //! so a re-composition does not have to wait for a whole DAG to drain.
-//! The serve layer therefore accounts execution as a *steppable
-//! timeline*, not an opaque per-batch blob:
+//! The engine therefore accounts execution as a *steppable timeline*,
+//! not an opaque per-batch blob:
 //!
 //! * a slice's cached schedule exposes per-layer
 //!   [`LayerStep`](crate::dse::LayerStep)s with cumulative offsets;
@@ -23,27 +47,23 @@
 //!   bit-for-bit;
 //! * when the backlog policy re-splits the fabric, tenants whose
 //!   projected saving clears the switch-cost margin
-//!   ([`should_preempt`]) are *preempted at the next layer boundary*:
-//!   the cursor pays `switch_cost_s` mid-DAG and resumes the remaining
-//!   layers on the new slice's cached schedule. Everyone else drains
-//!   on the old composition and switches at the batch boundary;
-//! * two low-backlog tenants that together fit one partition
-//!   ([`should_pack`]) are *packed*: their cursors time-multiplex one
-//!   slice through an [`Interleaver`], a quantum of layer steps at a
-//!   time, paying `switch_cost_s` per context swap — fabric-time
-//!   conservation holds exactly (interleaved walk == solo walks + swap
-//!   charges, bit-for-bit), and the freed partition goes to whoever is
-//!   actually backlogged.
-//!
-//! The live threaded scheduler and the virtual-time simulator share
-//! this one execution model, so simulated what-ifs and live runs agree
-//! by construction.
+//!   ([`should_preempt`], fed by *exact* cursor positions in both
+//!   drivers) are *preempted at the next layer boundary*: the cursor
+//!   pays `switch_cost_s` mid-DAG and resumes the remaining layers on
+//!   the new slice's cached schedule;
+//! * light tenants that together fit one partition ([`should_pack`]
+//!   over first-fit-decreasing [`pack_groups`]) are *packed*: their
+//!   cursors time-multiplex one slice through an [`Interleaver`], a
+//!   quantum of layer steps at a time, paying `switch_cost_s` per
+//!   context swap — fabric-time conservation holds exactly. A member
+//!   caught mid-batch is handed off *mid-flight*: its cursor is
+//!   checkpointed at a layer boundary and resumed inside the shared
+//!   partition's interleaver, losing no fabric time.
 //!
 //! # Layering
 //!
 //! * [`queue`] — bounded MPMC request queues with admission control
-//!   (single lock for items + closed flag; [`PushError::Throttled`]
-//!   for fabric-time rate limits).
+//!   ([`PushError`] classifications; monotonic-deadline batch pops).
 //! * [`tenant`] — tenant specs (queue depth, max batch, optional
 //!   [`RateLimit`]), the [`BatchCursor`] / [`TokenBucket`] building
 //!   blocks, and deterministic Poisson / phased traffic generators.
@@ -52,30 +72,29 @@
 //! * [`cache`] — the schedule cache: two-stage DSE results memoized on
 //!   `(FilcoConfig, Dag)` with their step timelines, persistable to
 //!   disk (JSON) so restarts skip the GA/MILP entirely.
-//! * [`policy`] — backlog-time → partition-weight mapping with
-//!   hysteresis, the preemption-benefit term weighing remaining
-//!   in-flight work against the mid-DAG switch cost, and the packing
-//!   fit/amortization terms ([`should_pack`] / [`should_unpack`]).
-//! * [`sim`] — deterministic virtual-time serving simulator comparing
-//!   unified time-sharing vs. a static equal split vs. dynamic
-//!   re-composition (preemptive or batch-boundary, packed or not) on
-//!   the same trace.
-//! * [`scheduler`] — the live threaded scheduler: one worker per
-//!   tenant stepping an interleaver layer-by-layer (solo tenants are
-//!   the one-slot case), a policy thread driving
-//!   [`Reconfigurator::split`] from observed queue depths and in-flight
-//!   remaining work, preemptions landing at worker step boundaries,
-//!   pack/unpack transitions landing at batch boundaries, switch costs
-//!   charged into the per-tenant fabric-time accounting.
+//! * [`policy`] — pure decision terms: backlog-time → partition-weight
+//!   mapping with hysteresis, the preemption benefit and the
+//!   migration-discounted in-flight signal ([`inflight_backlog_s`]),
+//!   the packing fit/amortization terms and the multi-way
+//!   first-fit-decreasing group proposal ([`pack_groups`]).
+//! * [`engine`] — the deterministic execution core shared by both
+//!   drivers (see above).
+//! * [`clock`] — the [`Clock`] trait with its [`VirtualClock`] and
+//!   [`WallClock`]/[`Pacer`] implementations.
+//! * [`sim`] — the virtual-time driver and the [`ServeReport`]
+//!   comparison harness.
+//! * [`scheduler`] — the live driver: producer ingress, worker and
+//!   policy thread shells, wall-clock latency accounting,
+//!   [`LiveReport`].
 //!
 //! The single-model serving leader ([`Server`]) and its building blocks
 //! ([`Servable`], [`Request`], [`RequestQueue`], [`Metrics`]) are
 //! re-exported here: the serve layer generalizes them to N tenants.
-//!
-//! [`Reconfigurator::split`]: crate::coordinator::reconfig::Reconfigurator::split
 #![warn(missing_docs)]
 
 pub mod cache;
+pub mod clock;
+pub mod engine;
 pub mod interleave;
 pub mod policy;
 pub mod queue;
@@ -87,14 +106,18 @@ pub use crate::coordinator::metrics::{LatencyHistogram, Metrics};
 pub use crate::coordinator::serving::{Request, RequestQueue, Response, Servable, Server};
 
 pub use cache::{dag_fingerprint, CachedSchedule, ScheduleCache};
+pub use clock::{Clock, Pacer, VirtualClock, WallClock};
+pub use engine::{EngineEvent, FabricEngine, Transition};
 pub use interleave::{InterleaveEvent, Interleaver};
 pub use policy::{
-    backlog_weights, pack_candidates, pack_quantum_s, reduce_weights, should_pack,
+    backlog_weights, inflight_backlog_s, pack_groups, pack_quantum_s, reduce_weights, should_pack,
     should_preempt, should_resplit, should_unpack, PolicyConfig,
 };
 pub use queue::{BoundedQueue, PushError};
 pub use scheduler::{FabricScheduler, LiveConfig, LiveReport, LiveRequest, TenantReport};
-pub use sim::{equal_split_per_request, simulate, Scenario, ServeReport, Strategy};
+pub use sim::{
+    equal_split_per_request, simulate, simulate_traced, Scenario, ServeReport, Strategy,
+};
 pub use tenant::{
     batch_fabric_s, phased_trace, poisson_trace, Arrival, BatchCursor, CursorCheckpoint,
     RateLimit, StepEvent, TenantSpec, TokenBucket,

@@ -57,13 +57,14 @@ pub struct PolicyConfig {
     /// `f64::INFINITY` disables preemption entirely (re-compositions
     /// then land only at batch boundaries, the pre-cursor behavior).
     pub preempt_margin_factor: f64,
-    /// Cross-tenant packing fit: two tenants may share one partition
-    /// (time-multiplexed by the [`Interleaver`](super::Interleaver))
-    /// only while their combined backlog time, scaled by this factor,
-    /// still fits inside one policy epoch of that partition's fabric
-    /// time. Larger is more conservative. `f64::INFINITY` disables
-    /// packing entirely (the default — every tenant keeps its own
-    /// partition, the pre-packing behavior).
+    /// Cross-tenant packing fit: a group of tenants may share one
+    /// partition (time-multiplexed by the
+    /// [`Interleaver`](super::Interleaver)) only while their combined
+    /// backlog time, scaled by this factor, still fits inside one
+    /// policy epoch of that partition's fabric time. Larger is more
+    /// conservative. `f64::INFINITY` disables packing entirely (the
+    /// default — every tenant keeps its own partition, the pre-packing
+    /// behavior).
     pub pack_headroom_factor: f64,
     /// Per-swap amortization gate: pack only while one context swap
     /// (`switch_cost_s`) costs no more than this fraction of the fabric
@@ -72,7 +73,7 @@ pub struct PolicyConfig {
     /// Layer steps a packed cursor runs before the interleaver rotates
     /// to the next tenant (clamped to at least 1 at use).
     pub pack_quantum_steps: usize,
-    /// Unpack hysteresis: a packed pair is split back onto their own
+    /// Unpack hysteresis: a packed group is split back onto their own
     /// partitions once their combined backlog exceeds this multiple of
     /// the pack-fit bound (`epoch / pack_headroom_factor`). Must be
     /// > 1 to avoid pack/unpack churn at the boundary.
@@ -179,16 +180,16 @@ pub fn should_preempt(
         > cfg.preempt_margin_factor * switch_cost_s
 }
 
-/// The packing-benefit term: should two tenants share one partition,
-/// time-multiplexed at layer-step granularity?
+/// The packing-benefit term: should a group of tenants share one
+/// partition, time-multiplexed at layer-step granularity?
 ///
 /// Mirrors [`should_preempt`]'s cost-vs-benefit shape with two gates:
 ///
-/// * **fit** — `combined_backlog_s` (the candidates' queued + in-flight
+/// * **fit** — `combined_backlog_s` (the group's queued + in-flight
 ///   fabric seconds) scaled by `pack_headroom_factor` must fit inside
 ///   one policy epoch (`epoch_s`) of the shared partition's fabric
-///   time, i.e. the pair must be light enough that one slice serves
-///   both without falling behind;
+///   time, i.e. the group must be light enough that one slice serves
+///   all of it without falling behind;
 /// * **amortization** — one context swap (`switch_cost_s`) must cost at
 ///   most `pack_swap_margin` of the fabric time a packed cursor runs
 ///   between swaps (`quantum_s`), so the swap overhead stays a bounded
@@ -209,45 +210,93 @@ pub fn should_pack(
         && switch_cost_s <= cfg.pack_swap_margin * quantum_s
 }
 
-/// Pick the pack-candidate pair from per-tenant backlog times (fabric
-/// seconds): the two lightest tenants (index tiebreak), gated on
-/// *demonstrated skew* — the rest of the fabric must carry strictly
-/// more backlog than the pair, so an all-idle fabric (ties) never
-/// packs its heavy tenant by accident, and packing always frees
-/// capacity someone else wants. Returns `None` when there are fewer
-/// than two tenants or no skew. Shared by the live scheduler and the
-/// simulator so their candidate selection can never diverge.
-pub fn pack_candidates(backlog_s: &[f64]) -> Option<(usize, usize)> {
-    if backlog_s.len() < 2 {
-        return None;
+/// Propose multi-way pack groups from per-tenant backlog times (fabric
+/// seconds) by first-fit-decreasing bin packing: tenants marked
+/// `eligible` (not already packed) are placed, heaviest first with an
+/// index tiebreak, into bins of `capacity_s` — the pack-fit bound
+/// `epoch_s / pack_headroom_factor`. Bins that end up with a single
+/// member are not packs and are dropped.
+///
+/// The whole proposal is gated on *demonstrated skew*: the rest of the
+/// fabric must carry strictly more backlog than everything proposed
+/// for packing, so an all-idle fabric (ties) never packs its heavy
+/// tenant by accident, and packing always frees capacity someone else
+/// wants. Returns member index lists, each sorted ascending (the first
+/// member leads the shared partition), ordered by leader. One shared
+/// site for both drivers — the engine applies the result, so candidate
+/// selection can never diverge between live and sim.
+pub fn pack_groups(backlog_s: &[f64], eligible: &[bool], capacity_s: f64) -> Vec<Vec<usize>> {
+    let n = backlog_s.len();
+    if n < 2 || !capacity_s.is_finite() {
+        return Vec::new();
     }
-    let mut order: Vec<usize> = (0..backlog_s.len()).collect();
-    order.sort_by(|&x, &y| backlog_s[x].partial_cmp(&backlog_s[y]).unwrap().then(x.cmp(&y)));
-    let (a, b) = (order[0].min(order[1]), order[0].max(order[1]));
-    let combined = backlog_s[a] + backlog_s[b];
+    let mut order: Vec<usize> = (0..n).filter(|&t| eligible[t]).collect();
+    if order.len() < 2 {
+        return Vec::new();
+    }
+    order.sort_by(|&x, &y| backlog_s[y].partial_cmp(&backlog_s[x]).unwrap().then(x.cmp(&y)));
+    let mut bins: Vec<(f64, Vec<usize>)> = Vec::new();
+    for t in order {
+        match bins.iter_mut().find(|(load, _)| *load + backlog_s[t] <= capacity_s) {
+            Some((load, members)) => {
+                *load += backlog_s[t];
+                members.push(t);
+            }
+            None => bins.push((backlog_s[t], vec![t])),
+        }
+    }
+    let mut groups: Vec<Vec<usize>> =
+        bins.into_iter().map(|(_, m)| m).filter(|m| m.len() >= 2).collect();
+    for g in &mut groups {
+        g.sort_unstable();
+    }
+    groups.sort_by_key(|g| g[0]);
+    let packed: f64 = groups.iter().flatten().map(|&t| backlog_s[t]).sum();
     let total: f64 = backlog_s.iter().sum();
-    (combined < total - combined).then_some((a, b))
+    if packed < total - packed {
+        groups
+    } else {
+        Vec::new()
+    }
 }
 
 /// Fabric seconds a packed cursor runs between context swaps: the
-/// quantum's step count at the *slower* candidate's per-step rate.
-/// Each candidate is `(per_request_s, steps_per_request)` on its
-/// current schedule. Shared by the live scheduler and the simulator.
-pub fn pack_quantum_s(quantum_steps: usize, candidates: [(f64, usize); 2]) -> f64 {
+/// quantum's step count at the *slowest* member's per-step rate. Each
+/// member is `(per_request_s, steps_per_request)` on its current
+/// schedule. Shared by the live scheduler and the simulator.
+pub fn pack_quantum_s(quantum_steps: usize, members: &[(f64, usize)]) -> f64 {
     let q = quantum_steps.max(1) as f64;
-    candidates
+    members
         .iter()
         .map(|&(per, steps)| q * per / steps.max(1) as f64)
         .fold(f64::INFINITY, f64::min)
 }
 
-/// Should a packed pair be split back onto their own partitions?
+/// How much of an in-flight batch's remaining work should count toward
+/// the *weight proposal* backlog signal.
+///
+/// With preemption disabled, in-flight work is immovable and counts
+/// for nothing (the pre-cursor behavior). With it enabled, the work is
+/// movable but migrating it costs one mid-DAG switch — so instead of
+/// the old all-or-nothing accounting, the signal is discounted by the
+/// migration cost: `max(0, remaining - switch_cost)`. A batch with
+/// less remaining work than a switch no longer inflates its tenant's
+/// weight (preempting it could never pay off anyway, per
+/// [`should_preempt`]'s margin).
+pub fn inflight_backlog_s(remaining_s: f64, switch_cost_s: f64, cfg: &PolicyConfig) -> f64 {
+    if !cfg.preemption_enabled() {
+        return 0.0;
+    }
+    (remaining_s - switch_cost_s).max(0.0)
+}
+
+/// Should a packed group be split back onto their own partitions?
 ///
 /// Unpacks once the combined backlog exceeds the pack-fit bound
 /// (`epoch_s / pack_headroom_factor`) by the `pack_unpack_factor`
-/// hysteresis — strictly above the [`should_pack`] threshold, so a pair
-/// sitting exactly at the fit bound never churns. All arguments are
-/// fabric seconds.
+/// hysteresis — strictly above the [`should_pack`] threshold, so a
+/// group sitting exactly at the fit bound never churns. All arguments
+/// are fabric seconds.
 pub fn should_unpack(combined_backlog_s: f64, epoch_s: f64, cfg: &PolicyConfig) -> bool {
     cfg.packing_enabled()
         && combined_backlog_s * cfg.pack_headroom_factor > cfg.pack_unpack_factor * epoch_s
@@ -336,27 +385,51 @@ mod tests {
     }
 
     #[test]
-    fn pack_candidates_need_skew() {
-        // The two lightest tenants, only when the rest out-backlogs them.
-        assert_eq!(pack_candidates(&[10.0, 0.5, 0.25]), Some((1, 2)));
-        // Index tiebreak is deterministic.
-        assert_eq!(pack_candidates(&[10.0, 0.0, 0.0, 0.0]), Some((1, 2)));
+    fn pack_groups_bin_packs_light_tenants() {
+        let all = [true; 8];
+        // The two light tenants group; the heavy one stays out.
+        assert_eq!(pack_groups(&[10.0, 0.5, 0.25], &all[..3], 1.0), vec![vec![1, 2]]);
+        // Ties break deterministically by index.
+        assert_eq!(pack_groups(&[10.0, 0.0, 0.0, 0.0], &all[..4], 1.0), vec![vec![1, 2, 3]]);
+        // Several packs at once: two pairs that each fit the bound but
+        // together do not.
+        assert_eq!(
+            pack_groups(&[10.0, 0.6, 0.6, 0.3, 0.3], &all[..5], 1.0),
+            vec![vec![1, 3], vec![2, 4]]
+        );
         // All idle (ties): no skew, no pack — never grab the heavy
         // tenant by accident.
-        assert_eq!(pack_candidates(&[0.0, 0.0, 0.0]), None);
+        assert!(pack_groups(&[0.0, 0.0, 0.0], &all[..3], 1.0).is_empty());
         // Two tenants: the pair IS the fabric; packing frees nothing.
-        assert_eq!(pack_candidates(&[1.0, 2.0]), None);
-        assert_eq!(pack_candidates(&[1.0]), None);
+        assert!(pack_groups(&[1.0, 2.0], &all[..2], 100.0).is_empty());
+        assert!(pack_groups(&[1.0], &all[..1], 100.0).is_empty());
+        // Ineligible (already-packed) tenants are never re-proposed.
+        assert!(pack_groups(&[10.0, 0.1, 0.1], &[true, true, false], 1.0).is_empty());
+        // A tenant too heavy for the bound on its own stays solo even
+        // when lighter tenants would fit beside it.
+        assert_eq!(pack_groups(&[10.0, 2.0, 0.1, 0.1], &all[..4], 1.0), vec![vec![2, 3]]);
     }
 
     #[test]
-    fn pack_quantum_uses_the_slower_candidate() {
+    fn pack_quantum_uses_the_slowest_member() {
         // 4 steps at per-step 0.25 vs per-step 1.0: the slower (finer)
         // amortization window wins.
-        let q = pack_quantum_s(4, [(1.0, 4), (4.0, 4)]);
+        let q = pack_quantum_s(4, &[(1.0, 4), (4.0, 4)]);
         assert!((q - 1.0).abs() < 1e-12);
         // Degenerate step counts are clamped.
-        assert!(pack_quantum_s(0, [(1.0, 0), (1.0, 1)]).is_finite());
+        assert!(pack_quantum_s(0, &[(1.0, 0), (1.0, 1)]).is_finite());
+    }
+
+    #[test]
+    fn inflight_signal_discounts_migration_cost() {
+        let cfg = PolicyConfig { preempt_margin_factor: 1.0, ..PolicyConfig::default() };
+        // Movable work counts minus one switch's worth of migration.
+        assert_eq!(inflight_backlog_s(1.0, 0.25, &cfg), 0.75);
+        // Less remaining than a switch: contributes nothing (moving it
+        // could never pay off).
+        assert_eq!(inflight_backlog_s(0.1, 0.25, &cfg), 0.0);
+        // Preemption off: in-flight work is immovable, signal is zero.
+        assert_eq!(inflight_backlog_s(1e9, 0.25, &cfg.without_preemption()), 0.0);
     }
 
     #[test]

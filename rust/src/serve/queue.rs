@@ -112,8 +112,16 @@ impl<T> BoundedQueue<T> {
     /// Like [`Self::pop_batch`] but gives up at a deadline, returning
     /// `Some(vec![])` — lets worker loops periodically re-read their
     /// partition plan while idle. `None` still means closed and drained.
+    ///
+    /// The deadline is a *monotonic* instant computed once up front
+    /// (`checked_add`: a timeout too large to represent waits
+    /// unbounded instead of panicking), and every wakeup — notified,
+    /// timed out, or spurious — re-evaluates items, closed flag, and
+    /// deadline under the lock in that order, so a wakeup racing the
+    /// deadline returns whatever items actually arrived rather than
+    /// a stale empty batch.
     pub fn pop_batch_timeout(&self, max_batch: usize, timeout: Duration) -> Option<Vec<T>> {
-        self.pop_batch_deadline(max_batch, Some(Instant::now() + timeout))
+        self.pop_batch_deadline(max_batch, Instant::now().checked_add(timeout))
     }
 
     fn pop_batch_deadline(&self, max_batch: usize, deadline: Option<Instant>) -> Option<Vec<T>> {
@@ -129,6 +137,11 @@ impl<T> BoundedQueue<T> {
             match deadline {
                 None => s = self.cv.wait(s).unwrap(),
                 Some(d) => {
+                    // Re-sample the monotonic clock on every pass: a
+                    // spurious wakeup before the deadline goes back to
+                    // sleep for exactly the remainder, never returns
+                    // early, and never panics on remainder arithmetic
+                    // (`now >= d` is checked first).
                     let now = Instant::now();
                     if now >= d {
                         return Some(Vec::new());
@@ -204,6 +217,48 @@ mod tests {
         assert_eq!(got, Some(Vec::new()));
         q.try_push(1).unwrap();
         assert_eq!(q.pop_batch_timeout(4, Duration::from_millis(10)), Some(vec![1]));
+    }
+
+    #[test]
+    fn timeout_deadline_is_monotonic_and_overflow_safe() {
+        // Regression: `Instant::now() + timeout` panicked on a
+        // deadline past the representable range; `checked_add` treats
+        // it as an unbounded wait instead. Close from another thread
+        // so the call returns.
+        let q = Arc::new(BoundedQueue::<u32>::unbounded());
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.pop_batch_timeout(4, Duration::MAX));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_none(), "closed-and-drained, not a timeout");
+
+        // Regression: an empty timeout pop must wait out its full
+        // monotonic deadline — wakeups (including the notify from a
+        // push that a racing consumer steals) never return early.
+        let q = Arc::new(BoundedQueue::<u32>::unbounded());
+        let waiter = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let t0 = Instant::now();
+                let got = q.pop_batch_timeout(4, Duration::from_millis(80));
+                (got, t0.elapsed())
+            })
+        };
+        // Push then immediately try to steal the item back on this
+        // thread: the waiter may observe the notify with the queue
+        // empty again (a spurious wakeup from its point of view).
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(7).unwrap();
+        let _ = q.pop_batch_timeout(4, Duration::ZERO);
+        let (got, waited) = waiter.join().unwrap();
+        if got == Some(Vec::new()) {
+            assert!(
+                waited >= Duration::from_millis(80),
+                "an empty return must mean the full deadline elapsed, waited {waited:?}"
+            );
+        } else {
+            assert_eq!(got, Some(vec![7]), "or the waiter won the race for the item");
+        }
     }
 
     #[test]

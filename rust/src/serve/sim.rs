@@ -1,59 +1,38 @@
-//! Deterministic virtual-time serving simulator on the steppable
-//! cursor execution model.
+//! Deterministic virtual-time serving simulator: a thin driver loop
+//! that drains the shared [`FabricEngine`] on a [`VirtualClock`].
 //!
-//! Drives the full serving data path — per-tenant bounded queues with
-//! admission control (queue depth *and* optional fabric-time token
-//! buckets), per-partition workers with batching, the backlog
-//! re-composition policy with mid-DAG preemption and cross-tenant
-//! packing, and the schedule cache — over a traffic trace in *fabric
-//! time*, with no threads and no wall clock. Every run is exactly
-//! reproducible, which is what the comparison harness (example, bench,
-//! acceptance tests) needs to claim "dynamic strictly beats the static
-//! split", "preemptive strictly beats batch-boundary", and "packed
-//! strictly beats unpacked".
+//! All execution semantics — per-tenant bounded queues with admission
+//! control (queue depth *and* optional fabric-time token buckets),
+//! solo batches in closed-form accounting, packed partitions
+//! interleaved at layer-step granularity, the backlog re-composition
+//! policy with mid-DAG preemption, mid-flight pack handoff and
+//! cross-tenant packing, and the schedule cache — live in
+//! [`FabricEngine`](super::FabricEngine). This module only supplies
+//! the clock (virtual: jump to the next event) and the traffic trace,
+//! then shapes the engine's state into a [`ServeReport`]. The live
+//! scheduler drives the *same* engine on a wall clock, which is why
+//! simulated what-ifs and live runs agree by construction.
 //!
-//! Time model: each tenant's worker owns one fabric slice and serves
-//! one batch at a time through a [`BatchCursor`] over the slice's
-//! cached [`LayerStep`](crate::dse::LayerStep) timeline. An undisturbed
-//! batch consumes exactly
-//! [`batch_fabric_s`](super::tenant::batch_fabric_s) of fabric time —
-//! the pre-cursor batch-atomic accounting, bit-for-bit — so runs with
-//! preemption disabled reproduce the old simulator's makespans, and
-//! runs with packing disabled (the default) reproduce the pre-packing
-//! simulator exactly: the packed code paths below are guarded so no
-//! floating-point operation changes when
-//! [`PolicyConfig::packing_enabled`] is false.
-//!
-//! A re-composition charges
-//! [`Reconfigurator::switch_cost_s`] to every slice. Idle slices and
-//! non-preempted busy slices pay it on availability (in-flight batches
-//! finish on the old composition first); a *preempted* slice lands the
-//! switch at the in-flight batch's next layer boundary and resumes the
-//! remaining layer steps on the new slice's cached schedule.
-//!
-//! Cross-tenant packing ([`should_pack`]) merges the two lightest
-//! tenants onto one shared partition, executed through an
-//! [`Interleaver`] at layer-step granularity with the switch cost
-//! charged per cursor swap. A pack lands only while both candidates
-//! have no in-flight solo batch; an unpack ([`should_unpack`]) drains
-//! the interleaver before dissolving, so batches never migrate between
-//! execution models mid-flight. Both transitions force a re-split.
-
-use std::collections::VecDeque;
-use std::sync::Arc;
+//! Every run is exactly reproducible, which is what the comparison
+//! harness (example, bench, acceptance tests) needs to claim "dynamic
+//! strictly beats the static split", "preemptive strictly beats
+//! batch-boundary", and "packed strictly beats unpacked". Runs with
+//! preemption disabled reproduce the pre-cursor batch-atomic
+//! simulator's makespans bit-for-bit, and runs with packing disabled
+//! (the default) reproduce the pre-packing simulator exactly — the
+//! oracle tests in `rust/tests/serve_preempt.rs` and
+//! `rust/tests/serve_pack.rs` hold the engine to it.
 
 use crate::arch::FilcoConfig;
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::coordinator::reconfig::Reconfigurator;
 use crate::platform::Platform;
 
-use super::cache::{CachedSchedule, ScheduleCache};
-use super::interleave::Interleaver;
-use super::policy::{
-    backlog_weights, pack_candidates, pack_quantum_s, should_pack, should_preempt,
-    should_resplit, should_unpack, PolicyConfig,
-};
-use super::tenant::{Arrival, BatchCursor, TenantSpec, TokenBucket};
+use super::cache::ScheduleCache;
+use super::clock::{Clock, VirtualClock};
+use super::engine::{EngineEvent, FabricEngine};
+use super::policy::PolicyConfig;
+use super::tenant::{Arrival, BatchCursor, TenantSpec};
 
 /// How the fabric is composed for the tenants.
 #[derive(Debug, Clone)]
@@ -114,12 +93,15 @@ pub struct ServeReport {
     pub switches: u64,
     /// In-flight batches preempted at a layer boundary.
     pub preemptions: u64,
-    /// Pack transitions (two tenants merged onto one partition).
+    /// Pack transitions (tenants merged onto one partition).
     pub packs: u64,
-    /// Unpack transitions (a packed pair dissolved after draining).
+    /// Unpack transitions (a packed group dissolved after draining).
     pub unpacks: u64,
-    /// Cursor context swaps charged by the partition interleaver.
+    /// Cursor context swaps charged by partition interleavers.
     pub pack_swaps: u64,
+    /// Size of every pack group formed, in transition order (pairs and
+    /// wider multi-way groups from the first-fit-decreasing proposal).
+    pub pack_group_sizes: Vec<usize>,
     /// Policy epochs evaluated.
     pub epochs: u64,
     /// Per-tenant fabric latency (queueing + service).
@@ -157,7 +139,7 @@ impl ServeReport {
         format!(
             "{:<12} completion {:.4e} s | {} served, {} rejected, {} throttled | \
              {:.0} req/s | worst p99 {:.3e} s | {} switches, {} preemptions | \
-             {} packs, {} unpacks, {} swaps",
+             {} packs {:?}, {} unpacks, {} swaps",
             self.strategy,
             self.completion_s,
             self.total_served(),
@@ -168,6 +150,7 @@ impl ServeReport {
             self.switches,
             self.preemptions,
             self.packs,
+            self.pack_group_sizes,
             self.unpacks,
             self.pack_swaps,
         )
@@ -194,49 +177,85 @@ pub fn equal_split_per_request(
         .collect()
 }
 
-/// Admit arrivals up to virtual time `now` into the per-tenant queues:
-/// queue depth first (reject as full), then the fabric-time token
-/// bucket (throttle) — the same classification order as the live
-/// scheduler's `push`.
-#[allow(clippy::too_many_arguments)]
-fn ingest(
-    arrivals: &[Arrival],
-    ai: &mut usize,
-    now: f64,
-    pending: &mut [VecDeque<(u64, f64)>],
-    rejected: &mut [u64],
-    throttled: &mut [u64],
-    caps: &[usize],
-    buckets: &mut [Option<TokenBucket>],
-    per_req: &[f64],
-) {
-    while *ai < arrivals.len() && arrivals[*ai].t_s <= now {
-        let a = &arrivals[*ai];
-        *ai += 1;
-        if pending[a.tenant].len() >= caps[a.tenant] {
-            rejected[a.tenant] += 1;
-            continue;
-        }
-        if let Some(b) = &mut buckets[a.tenant] {
-            if !b.try_take(per_req[a.tenant], a.t_s) {
-                throttled[a.tenant] += 1;
-                continue;
-            }
-        }
-        pending[a.tenant].push_back((a.id, a.t_s));
-    }
-}
-
 /// Run `scenario` under `strategy`, resolving schedules through `cache`.
 pub fn simulate(scenario: &Scenario, strategy: &Strategy, cache: &ScheduleCache) -> ServeReport {
-    match strategy {
-        Strategy::Unified => simulate_unified(scenario, cache),
-        Strategy::StaticEqual => simulate_partitioned(scenario, cache, None),
-        Strategy::Dynamic(p) => simulate_partitioned(scenario, cache, Some(p)),
+    simulate_traced(scenario, strategy, cache, false).0
+}
+
+/// Like [`simulate`], optionally recording the engine's event trace —
+/// what the live-vs-sim differential test compares bit-for-bit.
+/// [`Strategy::Unified`] has no engine (it is a closed-form baseline
+/// with no composition transitions) and returns an empty trace.
+pub fn simulate_traced(
+    scenario: &Scenario,
+    strategy: &Strategy,
+    cache: &ScheduleCache,
+    record_trace: bool,
+) -> (ServeReport, Vec<EngineEvent>) {
+    let policy = match strategy {
+        Strategy::Unified => return (simulate_unified(scenario, cache), Vec::new()),
+        Strategy::StaticEqual => None,
+        Strategy::Dynamic(p) => Some(p.clone()),
+    };
+    let mut engine = FabricEngine::new(
+        scenario.platform.clone(),
+        scenario.base.clone(),
+        scenario.tenants.clone(),
+        policy,
+        scenario.switch_cost_s,
+        scenario.arrivals.clone(),
+        cache,
+    )
+    .expect("engine setup");
+    engine.record_trace(record_trace);
+    // The thin driver loop: the engine decides *what* happens at each
+    // fabric instant; the virtual clock merely jumps there.
+    let mut clock = VirtualClock::new();
+    engine.step(clock.now_s(), cache);
+    while let Some(t) = engine.next_time() {
+        clock.advance_to(t);
+        engine.step(clock.now_s(), cache);
+    }
+    engine.finish();
+    let label = match strategy {
+        Strategy::Dynamic(_) => "dynamic",
+        _ => "static-equal",
+    };
+    let report = report_from_engine(&engine, label);
+    (report, engine.take_trace())
+}
+
+fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeReport {
+    ServeReport {
+        strategy: label.to_string(),
+        completion_s: engine.completion_s(),
+        served: engine.served().to_vec(),
+        rejected: engine.rejected().to_vec(),
+        throttled: engine.throttled().to_vec(),
+        switches: engine.switches(),
+        preemptions: engine.preemptions(),
+        packs: engine.packs(),
+        unpacks: engine.unpacks(),
+        pack_swaps: engine.pack_swaps(),
+        pack_group_sizes: engine.pack_group_sizes().to_vec(),
+        epochs: engine.epochs(),
+        histograms: engine.histograms().to_vec(),
     }
 }
 
+/// The unified baseline: one whole-fabric accelerator, tenants
+/// time-sharing it round-robin, batches accounted in closed form. No
+/// partitions exist, so none of the engine's composition transitions
+/// can occur — it stays a standalone closed-form model rather than an
+/// engine configuration.
 fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+
+    use super::cache::CachedSchedule;
+    use super::queue::PushError;
+    use super::tenant::{admit_arrival, TokenBucket};
+
     let t_n = sc.tenants.len();
     let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
     let scheds: Vec<Arc<CachedSchedule>> = sc
@@ -259,17 +278,22 @@ fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
     let mut rr = 0usize;
 
     loop {
-        ingest(
-            &sc.arrivals,
-            &mut ai,
-            now,
-            &mut pending,
-            &mut rejected,
-            &mut throttled,
-            &caps,
-            &mut buckets,
-            &per_req,
-        );
+        while ai < sc.arrivals.len() && sc.arrivals[ai].t_s <= now {
+            let a = &sc.arrivals[ai];
+            ai += 1;
+            match admit_arrival(
+                &mut pending[a.tenant],
+                caps[a.tenant],
+                &mut buckets[a.tenant],
+                per_req[a.tenant],
+                a.id,
+                a.t_s,
+            ) {
+                Err(PushError::Full) => rejected[a.tenant] += 1,
+                Err(PushError::Throttled) => throttled[a.tenant] += 1,
+                _ => {}
+            }
+        }
         if free <= now {
             // The single worker picks the next non-empty tenant round-robin.
             for k in 0..t_n {
@@ -316,500 +340,8 @@ fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
         packs: 0,
         unpacks: 0,
         pack_swaps: 0,
+        pack_group_sizes: Vec::new(),
         epochs: 0,
-        histograms: hist,
-    }
-}
-
-/// One in-flight batch on a tenant's slice.
-struct InFlight {
-    cursor: BatchCursor,
-    start_s: f64,
-    /// Arrival times of the batch's requests (latency recording).
-    arrived: Vec<f64>,
-}
-
-impl InFlight {
-    /// Projected completion time on the cursor's current schedule.
-    fn fin_s(&self) -> f64 {
-        self.start_s + self.cursor.projected_total_s()
-    }
-}
-
-/// The packed pair's shared partition in the simulator: an interleaved
-/// walk over its members' in-flight batches, advanced lazily as
-/// virtual time passes step boundaries.
-struct PackedSim {
-    /// Member tenant indices, ascending; `members[0]` leads the group.
-    members: Vec<usize>,
-    il: Interleaver,
-    /// Arrival times of each live slot's requests, keyed by tenant.
-    arrived: Vec<(usize, Vec<f64>)>,
-    /// Fabric time the shared slice has been simulated through; its
-    /// next step retires at `t + il.peek_next_s()`.
-    t: f64,
-    /// Unpack in progress: no new batches are admitted; the pack
-    /// dissolves once the interleaver drains.
-    unpacking: bool,
-}
-
-fn simulate_partitioned(
-    sc: &Scenario,
-    cache: &ScheduleCache,
-    policy: Option<&PolicyConfig>,
-) -> ServeReport {
-    let t_n = sc.tenants.len();
-    let names: Vec<&str> = sc.tenants.iter().map(|t| t.name.as_str()).collect();
-    let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
-    let preempt_on = policy.is_some_and(PolicyConfig::preemption_enabled);
-    let pack_on = policy.is_some_and(PolicyConfig::packing_enabled);
-
-    let mut recon = Reconfigurator::new(sc.base.clone());
-    if let Some(s) = sc.switch_cost_s {
-        recon.set_switch_cost_s(s);
-    }
-    let mut weights: Vec<u32> = vec![1; t_n];
-    let named: Vec<(&str, u32)> = names.iter().zip(&weights).map(|(&n, &w)| (n, w)).collect();
-    let parts = recon.split(&named).expect("equal split");
-    recon.validate().expect("equal split tiles the fabric");
-    let setup_switches = recon.switches;
-    let mut scheds: Vec<Arc<CachedSchedule>> = parts
-        .iter()
-        .zip(&sc.tenants)
-        .map(|(part, t)| cache.get_or_compute(&sc.platform, &part.config(&sc.base), &t.dag))
-        .collect();
-    let mut per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
-    let mut buckets: Vec<Option<TokenBucket>> =
-        sc.tenants.iter().map(|t| t.rate_limit.map(TokenBucket::from_limit)).collect();
-
-    let mut pending: Vec<VecDeque<(u64, f64)>> = vec![VecDeque::new(); t_n];
-    let mut hist = vec![LatencyHistogram::new(); t_n];
-    let mut served = vec![0u64; t_n];
-    let mut rejected = vec![0u64; t_n];
-    let mut throttled = vec![0u64; t_n];
-    let mut busy: Vec<Option<InFlight>> = (0..t_n).map(|_| None).collect();
-    // Time each slice is next available for a new batch: batch
-    // completion plus any switch charges taken while busy or idle.
-    let mut avail = vec![0.0f64; t_n];
-    let mut now = 0.0f64;
-    let mut ai = 0usize;
-    let mut epochs = 0u64;
-    let mut preemptions = 0u64;
-    let mut packs = 0u64;
-    let mut unpacks = 0u64;
-    let mut pack_swaps = 0u64;
-    let mut packed: Option<PackedSim> = None;
-    let mut next_epoch = policy.map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
-
-    loop {
-        ingest(
-            &sc.arrivals,
-            &mut ai,
-            now,
-            &mut pending,
-            &mut rejected,
-            &mut throttled,
-            &caps,
-            &mut buckets,
-            &per_req,
-        );
-
-        // The packed partition: admit member batches into interleaver
-        // slots and retire the steps whose end has been reached.
-        // Alternating admission and retirement lets a tenant's next
-        // batch start the moment its previous one drains, exactly like
-        // a solo slice at the same virtual instant.
-        if let Some(pk) = packed.as_mut() {
-            loop {
-                let mut progressed = false;
-                if !pk.unpacking {
-                    let members = pk.members.clone();
-                    for m in members {
-                        if !pk.il.contains(m) && !pending[m].is_empty() {
-                            let take = pending[m].len().min(sc.tenants[m].max_batch);
-                            let mut arrived = Vec::with_capacity(take);
-                            for _ in 0..take {
-                                let (_id, arr) = pending[m].pop_front().unwrap();
-                                arrived.push(arr);
-                            }
-                            if pk.il.is_empty() {
-                                // Idle slice: its clock catches up to now
-                                // before the new batch's first step.
-                                pk.t = pk.t.max(now);
-                            }
-                            pk.il.add(m, BatchCursor::new(scheds[m].clone(), take));
-                            pk.arrived.push((m, arrived));
-                            progressed = true;
-                        }
-                    }
-                }
-                while let Some(d) = pk.il.peek_next_s() {
-                    if pk.t + d > now {
-                        break;
-                    }
-                    let ev = pk.il.advance().unwrap();
-                    pk.t += ev.swap_charge_s + ev.step.dur_s;
-                    if ev.done {
-                        let pos =
-                            pk.arrived.iter().position(|(m, _)| *m == ev.tenant).unwrap();
-                        let (_, arrs) = pk.arrived.remove(pos);
-                        for &arr in &arrs {
-                            hist[ev.tenant].record(pk.t - arr);
-                            served[ev.tenant] += 1;
-                        }
-                        progressed = true;
-                    }
-                }
-                if !progressed {
-                    break;
-                }
-            }
-        }
-
-        // Retire batches whose (projected) completion has been reached.
-        // Recording at completion: an undisturbed cursor's total is the
-        // closed-form batch time, so latencies match the batch-atomic
-        // model exactly; a preempted batch records its actual
-        // (re-costed, switch-charged) completion.
-        for t in 0..t_n {
-            let done = busy[t].as_ref().is_some_and(|fl| fl.fin_s() <= now);
-            if done {
-                let fl = busy[t].take().unwrap();
-                let fin = fl.fin_s();
-                for &arr in &fl.arrived {
-                    hist[t].record(fin - arr);
-                    served[t] += 1;
-                }
-            }
-        }
-
-        // Each tenant's worker starts its next batch if its slice is
-        // free. Packed members have no slice of their own — their
-        // batches are admitted by the interleaver block above.
-        for t in 0..t_n {
-            if packed.as_ref().is_some_and(|pk| pk.members.contains(&t)) {
-                continue;
-            }
-            if busy[t].is_some() || avail[t] > now {
-                continue;
-            }
-            let take = pending[t].len().min(sc.tenants[t].max_batch);
-            if take == 0 {
-                continue;
-            }
-            let mut arrived = Vec::with_capacity(take);
-            for _ in 0..take {
-                let (_id, arr) = pending[t].pop_front().unwrap();
-                arrived.push(arr);
-            }
-            let fl = InFlight {
-                cursor: BatchCursor::new(scheds[t].clone(), take),
-                start_s: now,
-                arrived,
-            };
-            avail[t] = fl.fin_s();
-            busy[t] = Some(fl);
-        }
-
-        // Policy epoch: observe backlog, maybe pack/unpack, maybe
-        // re-compose. With preemption enabled the signal includes
-        // in-flight remaining work (that work is movable); with it
-        // disabled only queued work counts — the pre-cursor behavior,
-        // preserved exactly. Packed slots' remaining work is always
-        // movable (they re-base on every re-split) and is counted
-        // whenever packing is live.
-        if let Some(p) = policy {
-            if now >= next_epoch {
-                epochs += 1;
-                if preempt_on {
-                    // Sync in-flight cursors to virtual time (live
-                    // workers advance theirs continuously; the sim does
-                    // it lazily at epochs): commit the layer steps that
-                    // retired by `now`, so remaining-work signals and
-                    // preemption decisions reflect actual progress
-                    // rather than the batch-start position.
-                    for fl in busy.iter_mut().flatten() {
-                        while fl
-                            .cursor
-                            .peek_consumed_s()
-                            .is_some_and(|c| fl.start_s + c <= now)
-                        {
-                            let _ = fl.cursor.advance();
-                        }
-                    }
-                }
-                let backlog: Vec<f64> = (0..t_n)
-                    .map(|t| {
-                        let queued = pending[t].len() as f64 * per_req[t];
-                        let inflight = if preempt_on {
-                            busy[t].as_ref().map(|fl| fl.cursor.remaining_s()).unwrap_or(0.0)
-                        } else {
-                            0.0
-                        };
-                        let packed_inflight = match &packed {
-                            Some(pk) if pk.members.contains(&t) => pk.il.slot_remaining_s(t),
-                            _ => 0.0,
-                        };
-                        queued + inflight + packed_inflight
-                    })
-                    .collect();
-                // Pack / unpack transitions. At most one packed pair at
-                // a time; a pack lands only when both candidates are
-                // idle (no in-flight solo batch), an unpack only once
-                // the interleaver has drained — batches never migrate
-                // between execution models mid-flight.
-                let total_backlog: f64 = backlog.iter().sum();
-                let mut grouping_changed = false;
-                if pack_on {
-                    if packed.is_some() {
-                        {
-                            let pk = packed.as_mut().unwrap();
-                            let combined: f64 =
-                                pk.members.iter().map(|&m| backlog[m]).sum();
-                            if !pk.unpacking && should_unpack(combined, p.epoch_s, p) {
-                                pk.unpacking = true;
-                            }
-                        }
-                        let drained =
-                            packed.as_ref().is_some_and(|pk| pk.unpacking && pk.il.is_empty());
-                        if drained {
-                            let pk = packed.take().unwrap();
-                            for &m in &pk.members {
-                                // Members resume solo where the shared
-                                // slice clock left off (owed charges
-                                // carry over).
-                                avail[m] = pk.t;
-                            }
-                            pack_swaps += pk.il.swaps();
-                            unpacks += 1;
-                            grouping_changed = true;
-                        }
-                    } else if let Some((a, b)) = pack_candidates(&backlog) {
-                        // Candidate selection and the swap-amortization
-                        // window are shared with the live scheduler
-                        // (policy.rs) so the two paths cannot drift
-                        // apart. The extra *idle* gate is sim-only: a
-                        // pack lands only between solo batches, so in
-                        // virtual time batches never migrate execution
-                        // models mid-flight.
-                        let idle = busy[a].is_none() && busy[b].is_none();
-                        let quantum_s = pack_quantum_s(
-                            p.pack_quantum_steps,
-                            [
-                                (per_req[a], scheds[a].steps.len()),
-                                (per_req[b], scheds[b].steps.len()),
-                            ],
-                        );
-                        if idle
-                            && should_pack(
-                                backlog[a] + backlog[b],
-                                p.epoch_s,
-                                quantum_s,
-                                recon.switch_cost_s(),
-                                p,
-                            )
-                        {
-                            packed = Some(PackedSim {
-                                members: vec![a, b],
-                                il: Interleaver::new(
-                                    recon.switch_cost_s(),
-                                    p.pack_quantum_steps,
-                                ),
-                                arrived: Vec::new(),
-                                // The shared slice inherits the members'
-                                // outstanding availability charges.
-                                t: avail[a].max(avail[b]),
-                                unpacking: false,
-                            });
-                            packs += 1;
-                            grouping_changed = true;
-                        }
-                    }
-                }
-                // One group per partition leader; all singletons unless
-                // a pair is packed, in which case the pack sits at its
-                // leader's position.
-                let groups: Vec<Vec<usize>> = (0..t_n)
-                    .filter_map(|t| match &packed {
-                        Some(pk) if pk.members.contains(&t) => {
-                            (pk.members[0] == t).then(|| pk.members.clone())
-                        }
-                        _ => Some(vec![t]),
-                    })
-                    .collect();
-                let group_backlog: Vec<f64> =
-                    groups.iter().map(|g| g.iter().map(|&t| backlog[t]).sum()).collect();
-                let proposed = backlog_weights(&group_backlog, p.max_weight);
-                if grouping_changed
-                    || should_resplit(&weights, &proposed, total_backlog, recon.switch_cost_s(), p)
-                {
-                    let named: Vec<(&str, u32)> =
-                        groups.iter().zip(&proposed).map(|(g, &w)| (names[g[0]], w)).collect();
-                    let parts = recon.split(&named).expect("re-split");
-                    debug_assert!(recon.validate().is_ok());
-                    let switch = recon.switch_cost_s();
-                    for (gi, g) in groups.iter().enumerate() {
-                        let slice = parts[gi].config(&sc.base);
-                        if g.len() > 1 {
-                            // The shared slice reprograms once; live
-                            // slots re-base onto their tenants' new
-                            // schedules at the current step boundary
-                            // (the charge sits on the group clock).
-                            let pk = packed.as_mut().expect("multi-member group is the pack");
-                            pk.t = pk.t.max(now) + switch;
-                            for &m in g {
-                                let ns =
-                                    cache.get_or_compute(&sc.platform, &slice, &sc.tenants[m].dag);
-                                pk.il.retarget(m, ns.clone(), 0.0);
-                                per_req[m] = ns.per_request_s;
-                                scheds[m] = ns;
-                            }
-                            continue;
-                        }
-                        let t = g[0];
-                        let new_sched =
-                            cache.get_or_compute(&sc.platform, &slice, &sc.tenants[t].dag);
-                        let preempt = preempt_on
-                            && busy[t].as_ref().is_some_and(|fl| {
-                                // A potential switch lands at the next
-                                // layer boundary; everything before it
-                                // runs on the old slice either way, so
-                                // compare the paths from there. (The
-                                // in-flight step is also still counted
-                                // in `remaining_on` — at most one step
-                                // of conservative bias.) Charges parked
-                                // on `avail` by earlier re-splits are
-                                // owed on either path and excluded.
-                                let boundary_s = fl
-                                    .cursor
-                                    .peek_consumed_s()
-                                    .map_or(fl.fin_s(), |c| fl.start_s + c);
-                                let rem_old = (fl.fin_s() - boundary_s).max(0.0);
-                                let rem_new = fl.cursor.remaining_on(&new_sched);
-                                should_preempt(rem_old, rem_new, switch, p)
-                            });
-                        if preempt {
-                            // Land the switch at the next layer
-                            // boundary: steps that retired by `now`
-                            // stay on the old slice's accounting (the
-                            // epoch sync committed them), the in-flight
-                            // step finishes on it, then the cursor
-                            // re-bases onto the new schedule with the
-                            // mid-DAG switch charged.
-                            let fl = busy[t].as_mut().unwrap();
-                            // Reprogram charges from earlier re-splits
-                            // while this batch was in flight are still
-                            // owed after the re-basing.
-                            let extra = (avail[t] - fl.fin_s()).max(0.0);
-                            let _ = fl.cursor.advance();
-                            fl.cursor.retarget(new_sched.clone(), switch);
-                            avail[t] = fl.fin_s() + extra;
-                            preemptions += 1;
-                        } else {
-                            // In-flight batches finish on the old
-                            // composition, then every slice pays the
-                            // reprogram cost.
-                            avail[t] = avail[t].max(now) + switch;
-                        }
-                        per_req[t] = new_sched.per_request_s;
-                        scheds[t] = new_sched;
-                    }
-                    weights = proposed;
-                }
-                while next_epoch <= now {
-                    next_epoch += p.epoch_s;
-                }
-            }
-        }
-
-        // Advance to the next event.
-        let mut next = f64::INFINITY;
-        if ai < sc.arrivals.len() {
-            next = next.min(sc.arrivals[ai].t_s);
-        }
-        let work_left = pending.iter().any(|q| !q.is_empty());
-        let inflight_left = busy.iter().any(|b| b.is_some());
-        for t in 0..t_n {
-            if packed.as_ref().is_some_and(|pk| pk.members.contains(&t)) {
-                // Packed members have no solo slice; their events come
-                // from the interleaver below.
-                continue;
-            }
-            if !pending[t].is_empty() {
-                next = next.min(avail[t]);
-            }
-        }
-        if preempt_on && inflight_left {
-            // Completion events matter even with empty queues: later
-            // epochs may still preempt the in-flight work.
-            for t in 0..t_n {
-                if busy[t].is_some() {
-                    next = next.min(avail[t]);
-                }
-            }
-        }
-        if let Some(pk) = &packed {
-            if let Some(d) = pk.il.peek_next_s() {
-                next = next.min(pk.t + d);
-            }
-        }
-        let preemptible = preempt_on && inflight_left;
-        let packed_active = packed.as_ref().is_some_and(|pk| !pk.il.is_empty());
-        if policy.is_some()
-            && (ai < sc.arrivals.len() || work_left || preemptible || packed_active)
-        {
-            next = next.min(next_epoch);
-        }
-        if !next.is_finite() {
-            break;
-        }
-        now = next;
-    }
-
-    // Retire whatever is still in flight (its completion needed no
-    // further events).
-    for t in 0..t_n {
-        if let Some(fl) = busy[t].take() {
-            let fin = fl.fin_s();
-            for &arr in &fl.arrived {
-                hist[t].record(fin - arr);
-                served[t] += 1;
-            }
-        }
-    }
-    let mut packed_completion = 0.0f64;
-    if let Some(mut pk) = packed.take() {
-        // Drain any remaining interleaved work (the event loop schedules
-        // packed steps, so this is normally already empty) and fold the
-        // pack's swap count into the run totals.
-        while let Some(ev) = pk.il.advance() {
-            pk.t += ev.swap_charge_s + ev.step.dur_s;
-            if ev.done {
-                let pos = pk.arrived.iter().position(|(m, _)| *m == ev.tenant).unwrap();
-                let (_, arrs) = pk.arrived.remove(pos);
-                for &arr in &arrs {
-                    hist[ev.tenant].record(pk.t - arr);
-                    served[ev.tenant] += 1;
-                }
-            }
-        }
-        pack_swaps += pk.il.swaps();
-        packed_completion = pk.t;
-    }
-
-    let label = if policy.is_some() { "dynamic" } else { "static-equal" };
-    ServeReport {
-        strategy: label.to_string(),
-        completion_s: avail.iter().cloned().fold(0.0f64, f64::max).max(packed_completion),
-        served,
-        rejected,
-        throttled,
-        switches: recon.switches - setup_switches,
-        preemptions,
-        packs,
-        unpacks,
-        pack_swaps,
-        epochs,
         histograms: hist,
     }
 }
@@ -872,6 +404,7 @@ mod tests {
             assert!(r.worst_p99_s() > 0.0);
             // Packing is off by default in every one of these runs.
             assert_eq!((r.packs, r.unpacks, r.pack_swaps), (0, 0, 0));
+            assert!(r.pack_group_sizes.is_empty());
         }
     }
 
@@ -999,6 +532,8 @@ mod tests {
         assert_eq!(r.total_served(), n, "packing must not drop requests");
         assert!(r.packs >= 1, "two light tenants must pack");
         assert!(r.pack_swaps >= 1, "packed batches must time-multiplex");
+        assert_eq!(r.pack_group_sizes.len(), r.packs as usize);
+        assert!(r.pack_group_sizes.iter().all(|&s| s >= 2));
         let hist_n: u64 = r.histograms.iter().map(|h| h.count()).sum();
         assert_eq!(hist_n, n);
     }
@@ -1038,5 +573,40 @@ mod tests {
         assert!(r.packs >= 1, "light pair must pack before the flood");
         assert!(r.unpacks >= 1, "a 2000-request flood must dissolve the pack");
         assert_eq!(r.total_served(), sc.arrivals.len() as u64);
+    }
+
+    #[test]
+    fn four_light_tenants_form_a_multiway_group() {
+        // One heavy tenant, three near-idle light ones: the FFD
+        // proposal packs all three lights into one shared partition.
+        let cache = ScheduleCache::new(tiny_solver());
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let tenants = vec![
+            TenantSpec::new("heavy", zoo::mlp_l()).with_queue_capacity(1 << 20),
+            TenantSpec::new("s1", zoo::mlp_s()).with_queue_capacity(1 << 20),
+            TenantSpec::new("s2", zoo::mlp_s()).with_queue_capacity(1 << 20),
+            TenantSpec::new("s3", zoo::pointnet()).with_queue_capacity(1 << 20),
+        ];
+        let per = equal_split_per_request(&platform, &base, &tenants, &cache);
+        let arrivals = poisson_trace(
+            &[2.5 / per[0], 0.02 / per[1], 0.02 / per[2], 0.02 / per[3]],
+            100.0 * per[0],
+            37,
+        );
+        let policy = PolicyConfig {
+            pack_swap_margin: 10.0,
+            ..PolicyConfig::calibrated(per[0]).with_packing()
+        };
+        let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None };
+        let n = sc.arrivals.len() as u64;
+        let r = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+        assert_eq!(r.total_served(), n, "multi-way packing must not drop requests");
+        assert!(r.packs >= 1);
+        assert!(
+            r.pack_group_sizes.iter().any(|&s| s >= 3),
+            "three light tenants must form one multi-way group: {:?}",
+            r.pack_group_sizes
+        );
     }
 }

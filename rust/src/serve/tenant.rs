@@ -3,9 +3,11 @@
 //! replaced the old batch-atomic `batch_fabric_s` accounting in both
 //! the live scheduler and the virtual-time simulator.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 
 use super::cache::CachedSchedule;
+use super::queue::PushError;
 use crate::util::rng::SplitMix64;
 use crate::workload::Dag;
 
@@ -311,6 +313,32 @@ impl TokenBucket {
     pub fn tokens(&self) -> f64 {
         self.tokens
     }
+}
+
+/// Classify one arrival against a tenant's admission state: queue
+/// depth first (reject as [`PushError::Full`]), then the fabric-time
+/// token bucket (refuse as [`PushError::Throttled`]) — the single
+/// admission-order site shared by the engine's push path and the
+/// unified baseline's ingest, so refusal classification can never
+/// diverge between them.
+pub(crate) fn admit_arrival(
+    pending: &mut VecDeque<(u64, f64)>,
+    cap: usize,
+    bucket: &mut Option<TokenBucket>,
+    per_request_s: f64,
+    id: u64,
+    arr_s: f64,
+) -> Result<(), PushError> {
+    if pending.len() >= cap {
+        return Err(PushError::Full);
+    }
+    if let Some(b) = bucket {
+        if !b.try_take(per_request_s, arr_s) {
+            return Err(PushError::Throttled);
+        }
+    }
+    pending.push_back((id, arr_s));
+    Ok(())
 }
 
 /// One tenant of the fabric: a model (layer DAG) plus its serving knobs.

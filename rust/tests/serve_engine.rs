@@ -1,0 +1,202 @@
+//! Acceptance tests for the unified fabric engine.
+//!
+//! 1. **Two clocks, one trace**: the live scheduler (worker thread
+//!    shells on a timescale-compressed wall clock) and the virtual-time
+//!    simulator drive the same [`FabricEngine`] — for a fixed scenario
+//!    and seed they must produce *identical* engine event traces and
+//!    identical served/switch/preempt/pack counters, bit for bit.
+//!    Resplit, preemption, pack and unpack are applied at exactly one
+//!    site (the engine), so there is no driver-specific transition code
+//!    left to drift.
+//! 2. **Mid-flight pack handoff conserves fabric time**: a running solo
+//!    cursor checkpointed and resumed inside a host partition's
+//!    interleaver finishes with exactly the undisturbed solo walk's
+//!    consumed fabric seconds — asserted with `==` on `f64`s, swap
+//!    charges and co-resident batches notwithstanding.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use filco::arch::FilcoConfig;
+use filco::dse::Solver;
+use filco::platform::Platform;
+use filco::serve::{
+    batch_fabric_s, equal_split_per_request, poisson_trace, simulate_traced, EngineEvent,
+    FabricEngine, FabricScheduler, LiveConfig, PolicyConfig, Scenario, ScheduleCache, Strategy,
+    TenantSpec, Transition,
+};
+use filco::workload::zoo;
+
+fn small_solver() -> Solver {
+    Solver::Ga { population: 16, generations: 20, seed: 42 }
+}
+
+/// Skewed 3-tenant scenario with preemption and packing both live —
+/// every transition kind shows up in the trace.
+fn traced_scenario(cache: &ScheduleCache) -> (Scenario, PolicyConfig, f64) {
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let cap = 1 << 22;
+    let tenants = vec![
+        TenantSpec::new("heavy", zoo::mlp_l()).with_queue_capacity(cap),
+        TenantSpec::new("s1", zoo::mlp_s()).with_queue_capacity(cap),
+        TenantSpec::new("s2", zoo::pointnet()).with_queue_capacity(cap),
+    ];
+    let per = equal_split_per_request(&platform, &base, &tenants, cache);
+    let arrivals =
+        poisson_trace(&[2.5 / per[0], 0.05 / per[1], 0.05 / per[2]], 60.0 * per[0], 4711);
+    assert!(arrivals.len() > 50, "calibrated trace too small: {}", arrivals.len());
+    let policy = PolicyConfig {
+        pack_swap_margin: 10.0,
+        ..PolicyConfig::calibrated(per[0]).with_packing()
+    };
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy, per[0])
+}
+
+#[test]
+fn live_and_sim_produce_identical_engine_traces() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let (sc, policy, per0) = traced_scenario(&cache);
+
+    // Virtual clock: the simulator drains the engine instantly.
+    let (sim_report, sim_trace) =
+        simulate_traced(&sc, &Strategy::Dynamic(policy.clone()), &cache, true);
+    assert!(!sim_trace.is_empty(), "trace recording must capture events");
+    assert!(sim_report.switches >= 1, "the scenario must re-compose");
+    assert!(
+        sim_trace.iter().any(|e| matches!(e, EngineEvent::Resplit { .. })),
+        "re-compositions must appear in the trace"
+    );
+    assert!(sim_report.packs >= 1, "the light pair must pack");
+
+    // Wall clock, timescale-compressed: worker thread shells race for
+    // the engine lock, pacing sleeps toward each fabric deadline. The
+    // wall run of the whole trace lasts well under a second. A power
+    // of two, so the scheduler's wall→fabric epoch conversion
+    // (`epoch_s * ts` here, `/ ts` inside) round-trips bit-exactly —
+    // the engine must see the simulator's epoch value to the last bit.
+    let fabric_total_s = 70.0 * per0;
+    let timescale = 2f64.powi((0.5 / fabric_total_s).log2().floor() as i32);
+    let live_cfg = LiveConfig {
+        // The scheduler maps wall epochs onto the engine's fabric
+        // timeline through the timescale; feed it the value that lands
+        // exactly on the simulator's fabric epoch.
+        policy: PolicyConfig { epoch_s: policy.epoch_s * timescale, ..policy.clone() },
+        timescale,
+        max_sleep: Duration::from_millis(100),
+    };
+    let sched = FabricScheduler::with_arrivals(
+        sc.platform.clone(),
+        sc.base.clone(),
+        sc.tenants.clone(),
+        cache.clone(),
+        live_cfg,
+        sc.arrivals.clone(),
+    )
+    .expect("live scheduler");
+    sched.close();
+    let live_report = sched.run();
+    let live_trace = sched.take_trace();
+
+    // The differential claim: identical traces, identical counters.
+    assert_eq!(live_trace.len(), sim_trace.len(), "event counts must match");
+    for (i, (l, s)) in live_trace.iter().zip(&sim_trace).enumerate() {
+        assert_eq!(l, s, "trace diverges at event {i}");
+    }
+    assert_eq!(
+        live_report.tenants.iter().map(|t| t.served).collect::<Vec<_>>(),
+        sim_report.served
+    );
+    assert_eq!(live_report.switches, sim_report.switches);
+    assert_eq!(live_report.preemptions, sim_report.preemptions);
+    assert_eq!(live_report.packs, sim_report.packs);
+    assert_eq!(live_report.unpacks, sim_report.unpacks);
+    assert_eq!(live_report.pack_swaps, sim_report.pack_swaps);
+    assert_eq!(live_report.pack_group_sizes, sim_report.pack_group_sizes);
+}
+
+#[test]
+fn midflight_handoff_conserves_fabric_time_bit_for_bit() {
+    let cache = ScheduleCache::new(small_solver());
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let specs = vec![
+        TenantSpec::new("solo", zoo::mlp_l()).with_queue_capacity(1 << 20),
+        TenantSpec::new("lx", zoo::mlp_s()).with_queue_capacity(1 << 20),
+        TenantSpec::new("ly", zoo::pointnet()).with_queue_capacity(1 << 20),
+    ];
+    // Policy present (the pack mechanism reads its quantum) but with an
+    // unreachable epoch: this test drives the Transition directly and
+    // asserts the *mechanism's* conservation, independent of when the
+    // policy would choose to fire it.
+    let policy = PolicyConfig { epoch_s: f64::INFINITY, ..PolicyConfig::default().with_packing() };
+    let engine = FabricEngine::new(platform, base, specs, Some(policy), None, Vec::new(), &cache);
+    let mut engine = engine.expect("engine");
+
+    // One 8-request batch for lx starts solo at t = 0.
+    for i in 0..8 {
+        engine.push(1, i, 0.0).unwrap();
+    }
+    let mut out = engine.step(0.0, &cache);
+    let started =
+        out.iter().any(|e| matches!(e, EngineEvent::BatchStarted { tenant: 1, n: 8, .. }));
+    assert!(started, "lx's batch must start solo at t = 0");
+    let per_lx = engine.per_request_s(1);
+    let solo_total = batch_fabric_s(per_lx, 8);
+
+    // Midway through the batch, pack {lx, ly}: the running cursor is
+    // checkpointed at its last layer boundary and resumed inside the
+    // shared partition's interleaver.
+    let t_mid = 0.5 * solo_total;
+    engine.step(t_mid, &cache);
+    out.clear();
+    let pack = Transition::Pack { members: vec![1, 2] };
+    assert!(engine.apply(pack, t_mid, &cache, &mut out));
+    let handoff = out
+        .iter()
+        .find_map(|e| match e {
+            EngineEvent::PackHandoff { tenant: 1, consumed_s, .. } => Some(*consumed_s),
+            _ => None,
+        })
+        .expect("the in-flight cursor must be handed off");
+    assert!(
+        handoff > 0.0 && handoff < solo_total,
+        "handoff must land mid-flight: {handoff:.6e} of {solo_total:.6e}"
+    );
+    assert_eq!(engine.host(1), 1);
+    assert_eq!(engine.host(2), 1);
+
+    // Give the host a co-resident batch so the remainder really runs
+    // interleaved, swap charges and all.
+    for i in 0..3 {
+        engine.push(2, 100 + i, t_mid).unwrap();
+    }
+    let per_ly = engine.per_request_s(2);
+
+    // Drain the engine and collect both batches' final consumed times.
+    let mut done: Vec<EngineEvent> = Vec::new();
+    while let Some(t) = engine.next_time() {
+        done.extend(engine.step(t, &cache));
+    }
+    done.extend(engine.finish());
+    let final_of = |tenant: usize| {
+        done.iter()
+            .find_map(|e| match e {
+                EngineEvent::BatchDone { tenant: t, consumed_s, .. } if *t == tenant => {
+                    Some(*consumed_s)
+                }
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("tenant {tenant} batch must complete"))
+    };
+    // The conservation claim, exact on f64s: checkpoint/resume across
+    // the handoff loses no fabric time — the migrated batch's total is
+    // the undisturbed solo walk, and the co-resident batch is likewise
+    // untouched (swap charges land on the group clock, never inside a
+    // cursor's ledger).
+    assert_eq!(final_of(1), solo_total, "handed-off batch must equal the solo closed form");
+    assert_eq!(final_of(2), batch_fabric_s(per_ly, 3));
+    assert!(engine.pack_swaps() >= 1, "the shared partition must have swapped contexts");
+    assert_eq!(engine.served()[1], 8);
+    assert_eq!(engine.served()[2], 3);
+}
