@@ -1,7 +1,9 @@
 //! Serving bench: throughput and p99 fabric latency under skewed
 //! 3-tenant traffic — unified time-share vs. static equal split vs.
 //! FILCO dynamic re-composition (switch costs included, schedules
-//! resolved through the serve-layer cache).
+//! resolved through the serve-layer cache). Every row — the unified
+//! baseline included — runs through the same `FabricEngine`, so the
+//! comparison shares one cost model by construction.
 //!
 //! Run: `cargo bench --bench serve_multitenant`
 

@@ -153,6 +153,13 @@ impl LatencyHistogram {
         self.total
     }
 
+    /// Raw log-spaced bucket counts (see the constants above for the
+    /// layout). Lets oracle tests assert *full-distribution* equality
+    /// between two runs, not just the summary quantiles.
+    pub fn buckets(&self) -> &[u64] {
+        &self.counts
+    }
+
     pub fn mean_s(&self) -> f64 {
         if self.total == 0 {
             0.0

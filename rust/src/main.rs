@@ -10,7 +10,8 @@
 //!   sim     --model M [..]    DSE -> instrgen -> fabric simulation
 //!   disasm  --model M [..]    print the generated instruction streams
 //!   codegen --model M --out D write binaries/schedule.json/dataflow.h
-//!   serve   [--requests N] [--mode live|sim] [--epoch-ms E]
+//!   serve   [--requests N] [--mode live|sim]
+//!           [--strategy dynamic|static|unified] [--epoch-ms E]
 //!           [--timescale S] [--preempt on|off] [--pack on|off]
 //!           [--cache-file P]
 //!           multi-tenant serving on the live re-composable fabric:
@@ -19,9 +20,13 @@
 //!           preemption at layer boundaries unless --preempt off;
 //!           cross-tenant packing onto time-multiplexed partitions
 //!           with --pack on), schedules memoized in the ScheduleCache.
-//!           --cache-file persists the cache across restarts (loaded
-//!           on startup, saved on shutdown). `--mode sim` runs the
-//!           deterministic unified/static/dynamic comparison instead.
+//!           --strategy picks the composition: dynamic (default),
+//!           static equal split, or unified (whole fabric as one
+//!           accelerator, batch round-robin). --cache-file persists
+//!           the cache across restarts (loaded on startup, saved on
+//!           shutdown). `--mode sim` runs the deterministic
+//!           unified/static/dynamic comparison instead (--strategy
+//!           narrows it to one).
 //!   gantt   --model M [..]    ASCII utilization timeline from the sim
 //!   help                      print the flag-by-flag usage reference
 //!
@@ -39,8 +44,8 @@ use filco::isa::disasm;
 use filco::platform::Platform;
 use filco::runtime::Engine;
 use filco::serve::{
-    equal_split_per_request, poisson_trace, simulate, FabricScheduler, LiveConfig, LiveRequest,
-    PolicyConfig, Scenario, ScheduleCache, Strategy, TenantSpec,
+    equal_split_per_request, poisson_trace, simulate, FabricScheduler, LiveConfig, LiveMode,
+    LiveRequest, PolicyConfig, Scenario, ScheduleCache, Strategy, TenantSpec,
 };
 use filco::sim::{self, Fabric};
 use filco::workload::{zoo, Dag};
@@ -127,6 +132,12 @@ FLAGS (serve)
   --mode M        live (default): threaded scheduler, wall-clock pacing;
                   sim: deterministic virtual-time comparison of the
                   unified / static-equal / dynamic strategies
+  --strategy S    composition strategy: dynamic (default; the backlog
+                  policy re-composes the fabric), static (fixed equal
+                  split), or unified (whole fabric as one accelerator,
+                  tenants round-robin at batch granularity). live mode
+                  runs the selected strategy; sim mode runs the
+                  three-way comparison unless --strategy narrows it
   --requests N    total requests to generate (default 480, min 1)
   --epoch-ms E    live policy-evaluation period in milliseconds
                   (default 200); the simulator derives its epoch from
@@ -256,6 +267,15 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         eprintln!("unknown --mode {mode:?}; expected \"live\" or \"sim\"");
         std::process::exit(2);
     }
+    let strategy_flag = flags.get("strategy").map(String::as_str);
+    if let Some(s) = strategy_flag {
+        if !matches!(s, "dynamic" | "static" | "unified") {
+            eprintln!(
+                "unknown --strategy {s:?}; expected \"dynamic\", \"static\" or \"unified\""
+            );
+            std::process::exit(2);
+        }
+    }
     let preempt = match flags.get("preempt").map(String::as_str) {
         None | Some("on") => true,
         Some("off") => false,
@@ -321,9 +341,15 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         if pack {
             policy = policy.with_packing();
         }
-        for strat in
-            [Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)]
-        {
+        // Every strategy — unified included — runs through the same
+        // FabricEngine; --strategy narrows the comparison to one row.
+        let strategies = match strategy_flag {
+            Some("unified") => vec![Strategy::Unified],
+            Some("static") => vec![Strategy::StaticEqual],
+            Some("dynamic") => vec![Strategy::Dynamic(policy)],
+            _ => vec![Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)],
+        };
+        for strat in strategies {
             let rep = simulate(&sc, &strat, &cache);
             println!("{}", rep.summary());
             for (t, h) in sc.tenants.iter().zip(&rep.histograms) {
@@ -354,7 +380,17 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     if pack {
         policy = policy.with_packing();
     }
-    let cfg = LiveConfig { policy, timescale, max_sleep: Duration::from_millis(100) };
+    let live_mode = match strategy_flag {
+        Some("unified") => LiveMode::Unified,
+        Some("static") => LiveMode::StaticEqual,
+        _ => LiveMode::Dynamic,
+    };
+    let cfg = LiveConfig {
+        policy,
+        mode: live_mode,
+        timescale,
+        max_sleep: Duration::from_millis(100),
+    };
     let sched = FabricScheduler::new(platform, base, specs(), cache.clone(), cfg)
         .expect("build scheduler");
     println!("composition at start: {:?}", sched.composition());

@@ -55,6 +55,23 @@
 //! consumed fabric time equals the undisturbed solo walk bit-for-bit —
 //! no fabric time is lost or minted by the migration (asserted on
 //! `f64`s in `rust/tests/serve_engine.rs`).
+//!
+//! # The unified composition
+//!
+//! The paper's other headline shape — the whole fabric composed into
+//! *one* accelerator — is an engine mode too, not a separate model:
+//! [`Transition::Unify`] (applied once, at construction, by
+//! [`FabricEngine::new_unified`]) puts every tenant into a permanent
+//! round-robin group on the whole-fabric slice. The group serves one
+//! batch at a time with the same closed-form accounting as a solo
+//! partition (`start + projected_total_s()`), picks the next tenant by
+//! scanning from a rotating cursor that advances past the served
+//! tenant, and admits arrivals *before* the pick at any given instant
+//! — exactly the retired closed-form baseline's event order, which the
+//! oracle in `rust/tests/serve_engine.rs` holds it to bit-for-bit
+//! (`completion_s`, served/rejected/throttled, every histogram value).
+//! While unified, every other transition is refused and no policy
+//! runs: there are no partitions to re-split, pack or preempt across.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -155,6 +172,18 @@ pub enum EngineEvent {
         /// Fabric instant of the transition.
         at_s: f64,
     },
+    /// The whole fabric was composed into one unified accelerator:
+    /// every tenant time-shares it round-robin at batch granularity
+    /// from here on (the one-way [`Transition::Unify`]). Emitted into
+    /// the caller's event buffer by [`FabricEngine::apply`]; note that
+    /// the stock drivers apply the transition at *construction*,
+    /// before trace recording is enabled, so this event never appears
+    /// in a driver-recorded trace — a unified trace is recognizable by
+    /// containing only batch and admission events.
+    Unified {
+        /// Fabric instant of the composition.
+        at_s: f64,
+    },
 }
 
 /// A composition transition. Every way the fabric can change shape is
@@ -187,6 +216,14 @@ pub enum Transition {
         /// Proposed per-group partition weights (one per leader).
         weights: Vec<u32>,
     },
+    /// Compose the whole fabric into one accelerator hosting every
+    /// tenant in a permanent round-robin group at batch granularity —
+    /// the paper's "unified" shape. One-way: applied once on an idle
+    /// engine (at construction, by [`FabricEngine::new_unified`]);
+    /// while unified every other transition is refused and no policy
+    /// runs, so the engine's walk reproduces the closed-form unified
+    /// baseline bit-for-bit.
+    Unify,
 }
 
 /// One in-flight batch on a solo partition (closed-form accounting).
@@ -221,6 +258,33 @@ struct PackedGroup {
     unpacking: bool,
 }
 
+/// The unified composition's execution state: the whole fabric as one
+/// accelerator, every tenant time-sharing it round-robin at batch
+/// granularity. Mirrors the retired closed-form baseline exactly —
+/// one batch in flight at a time, accounted like a solo slice
+/// ([`InFlight::fin_s`], so an undisturbed batch is the closed form
+/// bit-for-bit), with the round-robin cursor advanced past the served
+/// tenant after every pick.
+///
+/// Deliberately *not* an [`Interleaver`] group: an interleaver
+/// advances a per-group clock by summing individual step durations,
+/// and `t0 + Σ(cᵢ − cᵢ₋₁)` is not `t0 + cₙ` on `f64`s — the
+/// step-accumulated clock would drift from the closed form in the
+/// last bits and break the bit-for-bit oracle. At batch granularity
+/// with zero swap cost the interleaved walk degenerates to one cursor
+/// at a time anyway, so the closed-form completion (`start +
+/// projected_total_s()`) is both the exact and the simpler model.
+struct UnifiedGroup {
+    /// Tenant index the next round-robin pick scans from.
+    rr: usize,
+    /// The one in-flight batch: owning tenant plus its closed-form
+    /// execution state.
+    busy: Option<(usize, InFlight)>,
+    /// Fabric instant the whole-fabric slice frees up (the last
+    /// batch's projected completion; the run's completion at drain).
+    avail_s: f64,
+}
+
 /// The deterministic fabric execution core. See the module docs for
 /// the full story; drivers interact through [`Self::push`],
 /// [`Self::next_time`], [`Self::step`] and [`Self::finish`], and read
@@ -246,6 +310,10 @@ pub struct FabricEngine {
     busy: Vec<Option<InFlight>>,
     avail: Vec<f64>,
     packs: Vec<PackedGroup>,
+    /// `Some` while the fabric is composed as one unified accelerator
+    /// ([`Transition::Unify`]); the partitioned state above is then
+    /// inert (no solo slices, no packs, no policy).
+    unified: Option<UnifiedGroup>,
     arrivals: Vec<Arrival>,
     ai: usize,
     now: f64,
@@ -285,35 +353,102 @@ impl FabricEngine {
         if specs.is_empty() {
             return Err("no tenants".into());
         }
-        let t_n = specs.len();
         let mut recon = Reconfigurator::new(base.clone());
         if let Some(s) = switch_cost_s {
             recon.set_switch_cost_s(s);
         }
-        let weights: Vec<u32> = vec![1; t_n];
-        let named: Vec<(&str, u32)> =
-            specs.iter().zip(&weights).map(|(s, &w)| (s.name.as_str(), w)).collect();
+        let named: Vec<(&str, u32)> = specs.iter().map(|s| (s.name.as_str(), 1)).collect();
         let parts = recon.split(&named)?;
         recon.validate()?;
-        let setup_switches = recon.switches;
         let scheds: Vec<Arc<CachedSchedule>> = parts
             .iter()
             .zip(&specs)
             .map(|(part, t)| cache.get_or_compute(&platform, &part.config(&base), &t.dag))
             .collect();
-        let per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
         let dims: Vec<(u32, u32)> = parts.iter().map(|p| (p.n_fmus(), p.m_cus())).collect();
+        Ok(Self::scaffold(platform, base, specs, policy, recon, scheds, dims, arrivals))
+    }
+
+    /// Build the engine in the *unified* composition: the whole fabric
+    /// as one accelerator, every tenant in a permanent round-robin
+    /// group at batch granularity ([`Transition::Unify`], applied here
+    /// through the one transition site). Tenant schedules are solved
+    /// against the whole-fabric config; no policy ever runs and no
+    /// other transition is accepted, so the run reproduces the
+    /// closed-form unified baseline bit-for-bit. `arrivals` and
+    /// `switch_cost_s` behave as in [`Self::new`].
+    pub fn new_unified(
+        platform: Platform,
+        base: FilcoConfig,
+        specs: Vec<TenantSpec>,
+        switch_cost_s: Option<f64>,
+        arrivals: Vec<Arrival>,
+        cache: &ScheduleCache,
+    ) -> Result<Self, String> {
+        if specs.is_empty() {
+            return Err("no tenants".into());
+        }
+        let mut recon = Reconfigurator::new(base.clone());
+        if let Some(s) = switch_cost_s {
+            recon.set_switch_cost_s(s);
+        }
+        // Scaffold against the same whole-fabric schedules the Unify
+        // transition resolves (one shared site, so the pre- and
+        // post-apply state cannot disagree; the apply's lookups are
+        // cache hits of these).
+        let scheds = Self::unified_scheds(&platform, &base, &specs, cache);
+        let dims = vec![(base.n_fmus, base.m_cus); specs.len()];
+        let mut eng = Self::scaffold(platform, base, specs, None, recon, scheds, dims, arrivals);
+        // The composition is established through the one transition
+        // site, like every other shape change.
+        let mut out = Vec::new();
+        if !eng.apply(Transition::Unify, 0.0, cache, &mut out) {
+            return Err("unified composition rejected".into());
+        }
+        eng.setup_switches = eng.recon.switches;
+        Ok(eng)
+    }
+
+    /// The whole-fabric schedule of every tenant — the single
+    /// resolution site shared by [`Self::new_unified`] and the
+    /// [`Transition::Unify`] application.
+    fn unified_scheds(
+        platform: &Platform,
+        base: &FilcoConfig,
+        specs: &[TenantSpec],
+        cache: &ScheduleCache,
+    ) -> Vec<Arc<CachedSchedule>> {
+        specs.iter().map(|t| cache.get_or_compute(platform, base, &t.dag)).collect()
+    }
+
+    /// Shared constructor tail: the per-tenant admission / accounting
+    /// state every composition mode starts from. `recon` and `scheds`
+    /// arrive already shaped by the caller (equal split or unified).
+    #[allow(clippy::too_many_arguments)]
+    fn scaffold(
+        platform: Platform,
+        base: FilcoConfig,
+        specs: Vec<TenantSpec>,
+        policy: Option<PolicyConfig>,
+        recon: Reconfigurator,
+        scheds: Vec<Arc<CachedSchedule>>,
+        dims: Vec<(u32, u32)>,
+        arrivals: Vec<Arrival>,
+    ) -> Self {
+        let t_n = specs.len();
+        let per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
         let buckets: Vec<Option<TokenBucket>> =
             specs.iter().map(|t| t.rate_limit.map(TokenBucket::from_limit)).collect();
         let caps: Vec<usize> = specs.iter().map(|t| t.queue_capacity).collect();
         let next_epoch = policy.as_ref().map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
-        Ok(Self {
+        let setup_switches = recon.switches;
+        Self {
             platform,
             base,
             policy,
             recon,
             caps,
-            weights,
+            weights: vec![1; t_n],
             scheds,
             per_req,
             dims,
@@ -327,6 +462,7 @@ impl FabricEngine {
             busy: (0..t_n).map(|_| None).collect(),
             avail: vec![0.0; t_n],
             packs: Vec::new(),
+            unified: None,
             arrivals,
             ai: 0,
             now: 0.0,
@@ -343,7 +479,7 @@ impl FabricEngine {
             eager_completions: false,
             trace: None,
             specs,
-        })
+        }
     }
 
     // ---- driver knobs ----------------------------------------------------
@@ -446,11 +582,21 @@ impl FabricEngine {
         let epoch_armed = self.epoch_relevant();
         let mut out = Vec::new();
         self.ingest(now);
-        self.groups_progress(now, &mut out);
-        self.retire_solo(now, &mut out);
-        self.start_solo(now, &mut out);
-        if epoch_armed {
-            self.maybe_epoch(now, cache, &mut out);
+        if self.unified.is_some() {
+            // Unified composition: the ingest above lands every
+            // arrival at or before `now` *first* — the closed-form
+            // baseline's documented tie-break (admission before
+            // service at the same instant) — then retirement frees
+            // the fabric for the next round-robin pick.
+            self.retire_unified(now, &mut out);
+            self.start_unified(now, &mut out);
+        } else {
+            self.groups_progress(now, &mut out);
+            self.retire_solo(now, &mut out);
+            self.start_solo(now, &mut out);
+            if epoch_armed {
+                self.maybe_epoch(now, cache, &mut out);
+            }
         }
         if let Some(tr) = self.trace.as_mut() {
             tr.extend(out.iter().cloned());
@@ -487,7 +633,9 @@ impl FabricEngine {
                             let take = self.pending[m].len().min(self.specs[m].max_batch);
                             let mut arrived = Vec::with_capacity(take);
                             for _ in 0..take {
-                                let (_id, arr) = self.pending[m].pop_front().unwrap();
+                                let (_id, arr) = self.pending[m]
+                                    .pop_front()
+                                    .expect("group admission: pending length was checked");
                                 arrived.push(arr);
                             }
                             let sched = self.scheds[m].clone();
@@ -530,13 +678,22 @@ impl FabricEngine {
             if pk.t + d > bound_s {
                 break;
             }
-            let ev = pk.il.advance().unwrap();
+            let ev = pk
+                .il
+                .advance()
+                .expect("interleaver peeked a next step, so a live slot must advance");
             pk.t += ev.swap_charge_s + ev.step.dur_s;
             let t_done = pk.t;
             self.fabric_s[ev.tenant] += ev.swap_charge_s + ev.step.dur_s;
             if ev.done {
                 let pk = &mut self.packs[gi];
-                let pos = pk.arrived.iter().position(|(m, _)| *m == ev.tenant).unwrap();
+                let Some(pos) = pk.arrived.iter().position(|(m, _)| *m == ev.tenant) else {
+                    panic!(
+                        "tenant {} completed a packed batch with no arrival record in its \
+                         group (members {:?})",
+                        ev.tenant, pk.members
+                    )
+                };
                 let (_, arrs) = pk.arrived.remove(pos);
                 for &arr in &arrs {
                     self.hist[ev.tenant].record((t_done - arr).max(0.0));
@@ -554,6 +711,87 @@ impl FabricEngine {
         completed
     }
 
+    /// Retire the unified group's in-flight batch once its closed-form
+    /// completion has been reached — the same accounting as a solo
+    /// slice (`start + projected_total_s()`), so an undisturbed
+    /// batch's latencies and completion are the batch-atomic closed
+    /// form bit-for-bit, which is what keeps the unified oracle in
+    /// `rust/tests/serve_engine.rs` binding.
+    fn retire_unified(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
+        let Some(u) = self.unified.as_mut() else { return };
+        let due = u.busy.as_ref().is_some_and(|(_, fl)| fl.fin_s() <= now);
+        if !due {
+            return;
+        }
+        let (t, fl) = u.busy.take().expect("unified batch was checked in flight just above");
+        self.retire_inflight(t, fl, out);
+    }
+
+    /// Retire one closed-form in-flight batch — the single accounting
+    /// site shared by solo and unified retirement: record each
+    /// request's fabric latency, bump `served`, charge the tenant's
+    /// fabric-time ledger, and emit [`EngineEvent::BatchDone`].
+    fn retire_inflight(&mut self, t: usize, fl: InFlight, out: &mut Vec<EngineEvent>) {
+        let fin = fl.fin_s();
+        for &arr in &fl.arrived {
+            self.hist[t].record((fin - arr).max(0.0));
+            self.served[t] += 1;
+        }
+        self.fabric_s[t] += fl.cursor.projected_total_s();
+        out.push(EngineEvent::BatchDone {
+            tenant: t,
+            n: fl.arrived.len(),
+            at_s: fin,
+            consumed_s: fl.cursor.projected_total_s(),
+        });
+    }
+
+    /// Drain up to `max_batch` queued requests of tenant `t` into a
+    /// fresh closed-form batch starting at `now` — the single
+    /// batch-assembly site shared by the solo and unified starts.
+    /// `None` when the tenant has nothing queued.
+    fn take_batch(&mut self, t: usize, now: f64) -> Option<InFlight> {
+        let take = self.pending[t].len().min(self.specs[t].max_batch);
+        if take == 0 {
+            return None;
+        }
+        let mut arrived = Vec::with_capacity(take);
+        for _ in 0..take {
+            let (_id, arr) = self.pending[t]
+                .pop_front()
+                .expect("batch assembly: pending length was checked against the take");
+            arrived.push(arr);
+        }
+        let cursor = BatchCursor::new(self.scheds[t].clone(), take);
+        Some(InFlight { cursor, start_s: now, arrived })
+    }
+
+    /// The unified round-robin pick: when the whole-fabric slice is
+    /// free, scan from the rotating cursor for the next tenant with
+    /// queued work, start one batch, and advance the cursor past the
+    /// served tenant — the closed-form baseline's scheduling order,
+    /// verbatim. At most one batch is ever in flight: the next pick
+    /// happens at this batch's completion instant, with the queue
+    /// contents (and arrivals) of *that* instant.
+    fn start_unified(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
+        let t_n = self.specs.len();
+        let Some(u) = self.unified.as_ref() else { return };
+        if u.busy.is_some() || u.avail_s > now {
+            return;
+        }
+        let rr = u.rr;
+        for k in 0..t_n {
+            let t = (rr + k) % t_n;
+            let Some(fl) = self.take_batch(t, now) else { continue };
+            let u = self.unified.as_mut().expect("unified mode was checked at entry");
+            u.avail_s = fl.fin_s();
+            u.rr = (t + 1) % t_n;
+            out.push(EngineEvent::BatchStarted { tenant: t, n: fl.arrived.len(), at_s: now });
+            u.busy = Some((t, fl));
+            return;
+        }
+    }
+
     /// Retire solo batches whose (projected) completion has been
     /// reached. Recording at completion: an undisturbed cursor's total
     /// is the closed-form batch time, so latencies match the
@@ -563,19 +801,10 @@ impl FabricEngine {
         for t in 0..self.specs.len() {
             let done = self.busy[t].as_ref().is_some_and(|fl| fl.fin_s() <= now);
             if done {
-                let fl = self.busy[t].take().unwrap();
-                let fin = fl.fin_s();
-                for &arr in &fl.arrived {
-                    self.hist[t].record((fin - arr).max(0.0));
-                    self.served[t] += 1;
-                }
-                self.fabric_s[t] += fl.cursor.projected_total_s();
-                out.push(EngineEvent::BatchDone {
-                    tenant: t,
-                    n: fl.arrived.len(),
-                    at_s: fin,
-                    consumed_s: fl.cursor.projected_total_s(),
-                });
+                let Some(fl) = self.busy[t].take() else {
+                    panic!("tenant {t}: in-flight batch vanished after its completion check")
+                };
+                self.retire_inflight(t, fl, out);
             }
         }
     }
@@ -591,22 +820,9 @@ impl FabricEngine {
             if self.busy[t].is_some() || self.avail[t] > now {
                 continue;
             }
-            let take = self.pending[t].len().min(self.specs[t].max_batch);
-            if take == 0 {
-                continue;
-            }
-            let mut arrived = Vec::with_capacity(take);
-            for _ in 0..take {
-                let (_id, arr) = self.pending[t].pop_front().unwrap();
-                arrived.push(arr);
-            }
-            let fl = InFlight {
-                cursor: BatchCursor::new(self.scheds[t].clone(), take),
-                start_s: now,
-                arrived,
-            };
+            let Some(fl) = self.take_batch(t, now) else { continue };
             self.avail[t] = fl.fin_s();
-            out.push(EngineEvent::BatchStarted { tenant: t, n: take, at_s: now });
+            out.push(EngineEvent::BatchStarted { tenant: t, n: fl.arrived.len(), at_s: now });
             self.busy[t] = Some(fl);
         }
     }
@@ -619,7 +835,7 @@ impl FabricEngine {
             return;
         }
         self.run_epoch(now, cache, out);
-        let epoch_s = self.policy.as_ref().unwrap().epoch_s;
+        let epoch_s = self.policy.as_ref().expect("policy presence was checked at entry").epoch_s;
         while self.next_epoch <= now {
             self.next_epoch += epoch_s;
         }
@@ -752,7 +968,9 @@ impl FabricEngine {
     /// Apply a composition [`Transition`] — the single site where the
     /// fabric changes shape for both drivers. Returns false when the
     /// transition could not be applied (an invalid split proposal is
-    /// logged and skipped; the fabric keeps its current shape).
+    /// logged and skipped; the fabric keeps its current shape; a
+    /// unified fabric refuses everything — the unified composition is
+    /// permanent).
     pub fn apply(
         &mut self,
         tr: Transition,
@@ -760,11 +978,40 @@ impl FabricEngine {
         cache: &ScheduleCache,
         out: &mut Vec<EngineEvent>,
     ) -> bool {
+        if self.unified.is_some() {
+            log::warn!("transition rejected: the unified composition is permanent");
+            return false;
+        }
         match tr {
             Transition::Pack { members } => self.apply_pack(members, now, out),
             Transition::Unpack { leader } => self.apply_unpack(leader, out),
             Transition::Resplit { weights } => self.apply_resplit(weights, now, cache, out),
+            Transition::Unify => self.apply_unify(now, cache, out),
         }
+    }
+
+    /// Compose the whole fabric into one accelerator hosting every
+    /// tenant in a permanent round-robin group. Refused (false) unless
+    /// the partitioned fabric is idle — the constructor applies it
+    /// before any work exists, and there is no inverse transition.
+    fn apply_unify(&mut self, now: f64, cache: &ScheduleCache, out: &mut Vec<EngineEvent>) -> bool {
+        if self.busy.iter().any(Option::is_some) || self.packs.iter().any(|pk| !pk.il.is_empty()) {
+            log::warn!("unify rejected: in-flight work on partitioned slices");
+            return false;
+        }
+        self.packs.clear();
+        let part = self.recon.compose_unified();
+        debug_assert!(self.recon.validate().is_ok());
+        let dims = (part.n_fmus(), part.m_cus());
+        let scheds = Self::unified_scheds(&self.platform, &self.base, &self.specs, cache);
+        for (t, ns) in scheds.into_iter().enumerate() {
+            self.per_req[t] = ns.per_request_s;
+            self.scheds[t] = ns;
+            self.dims[t] = dims;
+        }
+        out.push(EngineEvent::Unified { at_s: now });
+        self.unified = Some(UnifiedGroup { rr: 0, busy: None, avail_s: now });
+        true
     }
 
     /// Merge `members` onto one shared partition. Members with an
@@ -894,7 +1141,13 @@ impl FabricEngine {
                 self.fabric_s[g[0]] += switch;
                 for &m in g {
                     let ns = cache.get_or_compute(&self.platform, &slice, &self.specs[m].dag);
-                    self.packs[pki].il.retarget(m, ns.clone(), 0.0);
+                    // Parked members (no live slot) report Ok(false);
+                    // a step-count mismatch would mean the cache handed
+                    // back a schedule for a different DAG.
+                    self.packs[pki]
+                        .il
+                        .retarget(m, ns.clone(), 0.0)
+                        .expect("packed slot re-bases onto its own tenant's re-solved DAG");
                     self.per_req[m] = ns.per_request_s;
                     self.scheds[m] = ns;
                     self.dims[m] = dims;
@@ -926,10 +1179,14 @@ impl FabricEngine {
                 // in-flight step finishes on it, then the cursor
                 // re-bases onto the new schedule with the mid-DAG
                 // switch charged.
-                let fl = self.busy[t].as_mut().unwrap();
+                let Some(fl) = self.busy[t].as_mut() else {
+                    panic!("tenant {t}: preemption approved with no batch in flight")
+                };
                 let extra = (self.avail[t] - fl.fin_s()).max(0.0);
                 let _ = fl.cursor.advance();
-                fl.cursor.retarget(new_sched.clone(), switch);
+                fl.cursor
+                    .retarget(new_sched.clone(), switch)
+                    .expect("preempted cursor re-bases onto its own tenant's re-solved DAG");
                 self.avail[t] = fl.fin_s() + extra;
                 self.preemptions += 1;
                 out.push(EngineEvent::Preempted { tenant: t, at_s: now });
@@ -961,6 +1218,22 @@ impl FabricEngine {
         let mut next = f64::INFINITY;
         if self.ai < self.arrivals.len() {
             next = next.min(self.arrivals[self.ai].t_s);
+        }
+        if let Some(u) = &self.unified {
+            // The unified fabric frees at `avail_s`: that is the next
+            // round-robin pick when a batch is running or work is
+            // queued. Scheduling the completion instant even with
+            // empty queues is a harmless extra wakeup (no decision
+            // depends on it — retirement values are closed-form) that
+            // keeps both drivers stepping at identical instants. A
+            // live push onto a free fabric between steps wakes
+            // immediately (`self.now`), like the drained-group branch
+            // below — the simulator picks within the arrival's own
+            // step, so that instant never fires there.
+            if u.busy.is_some() || self.pending.iter().any(|q| !q.is_empty()) {
+                next = next.min(u.avail_s.max(self.now));
+            }
+            return next.is_finite().then_some(next);
         }
         let inflight_left = self.busy.iter().any(|b| b.is_some());
         let preempt_on = self.policy.as_ref().is_some_and(PolicyConfig::preemption_enabled);
@@ -1008,6 +1281,10 @@ impl FabricEngine {
     /// `None` and no further external input is coming.
     pub fn finish(&mut self) -> Vec<EngineEvent> {
         let mut out = Vec::new();
+        // A unified in-flight batch retires unconditionally: its
+        // completion (and every latency in it) was determined at the
+        // pick, exactly like the closed form's eager recording.
+        self.retire_unified(f64::INFINITY, &mut out);
         // Solo leftovers retire unconditionally — the same accounting
         // as a step, with the time bound opened.
         self.retire_solo(f64::INFINITY, &mut out);
@@ -1052,7 +1329,8 @@ impl FabricEngine {
     }
 
     /// The tenant leading `t`'s partition (`t` itself unless packed
-    /// onto another's slice).
+    /// onto another's slice; in the unified composition every tenant
+    /// "leads" the one whole-fabric slice, reported as itself).
     pub fn host(&self, t: usize) -> usize {
         self.packs.iter().find(|pk| pk.members.contains(&t)).map_or(t, |pk| pk.members[0])
     }
@@ -1090,6 +1368,7 @@ impl FabricEngine {
     pub fn has_work(&self) -> bool {
         self.pending.iter().any(|q| !q.is_empty())
             || self.busy.iter().any(|b| b.is_some())
+            || self.unified.as_ref().is_some_and(|u| u.busy.is_some())
             || self.packs.iter().any(|pk| !pk.il.is_empty())
     }
 
@@ -1109,8 +1388,12 @@ impl FabricEngine {
     }
 
     /// Fabric time at which the last work finished (max over solo
-    /// availability and packed group clocks).
+    /// availability and packed group clocks; the whole-fabric slice's
+    /// availability when unified).
     pub fn completion_s(&self) -> f64 {
+        if let Some(u) = &self.unified {
+            return u.avail_s;
+        }
         let solo = self.avail.iter().cloned().fold(0.0f64, f64::max);
         let packed = self.packs.iter().map(|pk| pk.t).fold(self.drained_completion, f64::max);
         solo.max(packed)

@@ -34,7 +34,7 @@
 use std::sync::Arc;
 
 use super::cache::CachedSchedule;
-use super::tenant::{BatchCursor, StepEvent};
+use super::tenant::{BatchCursor, RetargetError, StepEvent};
 
 /// One batch being multiplexed on the slice: the owning tenant's index
 /// plus its in-flight cursor.
@@ -201,20 +201,19 @@ impl Interleaver {
 
     /// Re-base `tenant`'s remaining steps onto `sched` (the slice was
     /// re-composed), charging `switch_charge_s` into the cursor's own
-    /// timeline — same contract as [`BatchCursor::retarget`]. Returns
-    /// false when the tenant has no live slot.
+    /// timeline — same contract as [`BatchCursor::retarget`], including
+    /// the same-timeline check (a mismatched step count is refused with
+    /// a [`RetargetError`] and the slot is untouched). Returns
+    /// `Ok(false)` when the tenant has no live slot.
     pub fn retarget(
         &mut self,
         tenant: usize,
         sched: Arc<CachedSchedule>,
         switch_charge_s: f64,
-    ) -> bool {
+    ) -> Result<bool, RetargetError> {
         match self.slots.iter_mut().find(|s| s.tenant == tenant) {
-            Some(s) => {
-                s.cursor.retarget(sched, switch_charge_s);
-                true
-            }
-            None => false,
+            Some(s) => s.cursor.retarget(sched, switch_charge_s).map(|()| true),
+            None => Ok(false),
         }
     }
 
@@ -467,8 +466,10 @@ mod tests {
         il.add(0, BatchCursor::new(slow.clone(), 1));
         il.advance().unwrap();
         il.advance().unwrap();
-        assert!(il.retarget(0, fast, 0.5));
-        assert!(!il.retarget(9, chain_sched(&[1.0]), 0.0));
+        assert!(il.retarget(0, fast, 0.5).unwrap());
+        assert!(!il.retarget(9, chain_sched(&[1.0]), 0.0).unwrap());
+        // A mismatched timeline is refused, not clamped.
+        assert!(il.retarget(0, chain_sched(&[1.0]), 0.0).is_err());
         let mut last = 0.0;
         while let Some(ev) = il.advance() {
             last = ev.step.consumed_s;

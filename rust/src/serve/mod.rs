@@ -25,7 +25,15 @@
 //!   static equal split vs. dynamic re-composition on the same trace;
 //! * [`scheduler`] drives the *same* engine from worker thread shells
 //!   on a [`WallClock`] (deadline-paced sleeps), with producers
-//!   pushing live requests into the engine's queues.
+//!   pushing live requests into the engine's queues — in any of the
+//!   three compositions ([`LiveMode`], `filco serve --strategy`).
+//!
+//! All three strategies are engine compositions — the *unified*
+//! baseline included: [`Transition::Unify`] puts every tenant into a
+//! permanent round-robin group on the whole-fabric slice, reproducing
+//! the retired closed-form unified model bit-for-bit (oracle in
+//! `rust/tests/serve_engine.rs`). Unified-vs-partitioned comparisons
+//! therefore share one cost model and one event-trace format.
 //!
 //! Engine decisions never read the wall clock, so a live run replays
 //! the simulator's event trace bit-for-bit — "live and sim agree" is
@@ -114,11 +122,11 @@ pub use policy::{
     should_preempt, should_resplit, should_unpack, PolicyConfig,
 };
 pub use queue::{BoundedQueue, PushError};
-pub use scheduler::{FabricScheduler, LiveConfig, LiveReport, LiveRequest, TenantReport};
+pub use scheduler::{FabricScheduler, LiveConfig, LiveMode, LiveReport, LiveRequest, TenantReport};
 pub use sim::{
     equal_split_per_request, simulate, simulate_traced, Scenario, ServeReport, Strategy,
 };
 pub use tenant::{
     batch_fabric_s, phased_trace, poisson_trace, Arrival, BatchCursor, CursorCheckpoint,
-    RateLimit, StepEvent, TenantSpec, TokenBucket,
+    RateLimit, RetargetError, StepEvent, TenantSpec, TokenBucket,
 };

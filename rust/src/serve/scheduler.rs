@@ -30,7 +30,11 @@
 //! * **a policy shell** — policy *epochs* fire on the engine's fabric
 //!   timeline (wall epochs are converted through the timescale); the
 //!   shell thread only relaxes an idle, skewed fabric back to the
-//!   equal split between bursts;
+//!   equal split between bursts. Only [`LiveMode::Dynamic`] runs a
+//!   policy at all: `--strategy static` fixes the equal split and
+//!   `--strategy unified` composes the whole fabric into one
+//!   round-robin accelerator ([`LiveMode`]), both with the policy
+//!   machinery statically disabled;
 //! * **wall-clock latency accounting** — fabric-time histograms live in
 //!   the engine; the shells record each request's wall latency when its
 //!   batch's [`EngineEvent::BatchDone`] fires.
@@ -51,14 +55,34 @@ use super::policy::PolicyConfig;
 use super::queue::PushError;
 use super::tenant::{Arrival, TenantSpec};
 
+/// Which composition the live scheduler runs — the same three
+/// strategies the simulator compares ([`Strategy`](super::Strategy)),
+/// selected by `filco serve --strategy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LiveMode {
+    /// The whole fabric as one unified accelerator: tenants time-share
+    /// it round-robin at batch granularity
+    /// ([`FabricEngine::new_unified`]); no policy runs and no
+    /// transition is accepted.
+    Unified,
+    /// Fixed equal split, one partition per tenant, no policy epochs.
+    StaticEqual,
+    /// Backlog-driven live re-composition via [`LiveConfig::policy`]
+    /// (the default).
+    #[default]
+    Dynamic,
+}
+
 /// Live-mode knobs.
 #[derive(Debug, Clone)]
 pub struct LiveConfig {
     /// Re-composition / preemption / packing policy. `epoch_s` is in
     /// wall seconds; the scheduler converts it onto the engine's
     /// fabric timeline through `timescale` (an unpaced run uses it as
-    /// fabric seconds directly).
+    /// fabric seconds directly). Ignored outside [`LiveMode::Dynamic`].
     pub policy: PolicyConfig,
+    /// Composition strategy ([`LiveMode::Dynamic`] by default).
+    pub mode: LiveMode,
     /// Wall seconds slept per fabric second to emulate device pacing;
     /// 0.0 drains at host speed (tests).
     pub timescale: f64,
@@ -70,6 +94,7 @@ impl Default for LiveConfig {
     fn default() -> Self {
         Self {
             policy: PolicyConfig::default(),
+            mode: LiveMode::Dynamic,
             timescale: 0.0,
             max_sleep: Duration::from_millis(100),
         }
@@ -264,16 +289,28 @@ impl FabricScheduler {
         deterministic: bool,
     ) -> Result<Self, String> {
         let t_n = specs.len();
-        // Policy epochs live on the engine's fabric timeline; a paced
-        // run converts the wall-clock epoch through the timescale (an
-        // unpaced run drains at host speed, where the configured value
-        // is the only meaningful fabric budget).
-        let mut policy = cfg.policy.clone();
-        if cfg.timescale > 0.0 {
-            policy.epoch_s = cfg.policy.epoch_s / cfg.timescale;
-        }
-        let mut engine =
-            FabricEngine::new(platform, base, specs, Some(policy), None, arrivals, &cache)?;
+        let mut engine = match cfg.mode {
+            // The unified and static compositions run no policy: the
+            // fabric's shape is fixed for the whole run.
+            LiveMode::Unified => {
+                FabricEngine::new_unified(platform, base, specs, None, arrivals, &cache)?
+            }
+            LiveMode::StaticEqual => {
+                FabricEngine::new(platform, base, specs, None, None, arrivals, &cache)?
+            }
+            LiveMode::Dynamic => {
+                // Policy epochs live on the engine's fabric timeline; a
+                // paced run converts the wall-clock epoch through the
+                // timescale (an unpaced run drains at host speed, where
+                // the configured value is the only meaningful fabric
+                // budget).
+                let mut policy = cfg.policy.clone();
+                if cfg.timescale > 0.0 {
+                    policy.epoch_s = cfg.policy.epoch_s / cfg.timescale;
+                }
+                FabricEngine::new(platform, base, specs, Some(policy), None, arrivals, &cache)?
+            }
+        };
         engine.eager_completions(true);
         if deterministic {
             engine.record_trace(true);
@@ -499,14 +536,17 @@ impl FabricScheduler {
         let n = self.num_tenants();
         std::thread::scope(|s| {
             let workers: Vec<_> = (0..n).map(|_| s.spawn(|| self.worker_loop())).collect();
-            let policy = s.spawn(|| self.policy_loop());
+            // Fixed compositions (unified / static) run no policy, so
+            // no relaxation shell is spawned for them.
+            let policy =
+                (self.cfg.mode == LiveMode::Dynamic).then(|| s.spawn(|| self.policy_loop()));
             // Stop the policy thread before propagating any worker
             // panic: panicking while it still runs would leave the
             // scope blocked on a loop that never observes the flag.
             let worker_panicked =
                 workers.into_iter().map(|w| usize::from(w.join().is_err())).sum::<usize>();
             self.stop_policy.store(true, Ordering::Relaxed);
-            let policy_result = policy.join();
+            let policy_result = policy.map_or(Ok(()), |p| p.join());
             assert_eq!(worker_panicked, 0, "{worker_panicked} worker thread(s) panicked");
             policy_result.expect("policy thread panicked");
         });
@@ -689,7 +729,7 @@ mod tests {
                 ..PolicyConfig::default()
             },
             timescale: 1.0 / batch_s,
-            max_sleep: Duration::from_millis(100),
+            ..LiveConfig::default()
         };
         let sched = FabricScheduler::new(platform, base, specs, cache, cfg).unwrap();
         for i in 0..n {
@@ -735,7 +775,7 @@ mod tests {
                 ..PolicyConfig::default()
             },
             timescale: 0.0,
-            max_sleep: Duration::from_millis(100),
+            ..LiveConfig::default()
         };
         let sched = FabricScheduler::new(platform, base, specs, cache, cfg).unwrap();
         // Flood the heavy tenant while the shells are not yet running;
@@ -802,7 +842,7 @@ mod tests {
                 ..PolicyConfig::default()
             },
             timescale: 0.0,
-            max_sleep: Duration::from_millis(100),
+            ..LiveConfig::default()
         };
         let sched = FabricScheduler::new(platform, base, specs, cache, cfg).unwrap();
         for i in 0..100 {

@@ -6,22 +6,28 @@
 //! solo batches in closed-form accounting, packed partitions
 //! interleaved at layer-step granularity, the backlog re-composition
 //! policy with mid-DAG preemption, mid-flight pack handoff and
-//! cross-tenant packing, and the schedule cache — live in
-//! [`FabricEngine`](super::FabricEngine). This module only supplies
-//! the clock (virtual: jump to the next event) and the traffic trace,
-//! then shapes the engine's state into a [`ServeReport`]. The live
-//! scheduler drives the *same* engine on a wall clock, which is why
-//! simulated what-ifs and live runs agree by construction.
+//! cross-tenant packing, the unified whole-fabric composition, and
+//! the schedule cache — live in [`FabricEngine`](super::FabricEngine).
+//! This module only supplies the clock (virtual: jump to the next
+//! event) and the traffic trace, then shapes the engine's state into
+//! a [`ServeReport`]. The live scheduler drives the *same* engine on
+//! a wall clock, which is why simulated what-ifs and live runs agree
+//! by construction. Every strategy — unified included — runs through
+//! the engine, so the three-way comparison shares one cost model and
+//! one event-trace format; there is no separate closed-form baseline
+//! left to drift.
 //!
 //! Every run is exactly reproducible, which is what the comparison
 //! harness (example, bench, acceptance tests) needs to claim "dynamic
 //! strictly beats the static split", "preemptive strictly beats
 //! batch-boundary", and "packed strictly beats unpacked". Runs with
 //! preemption disabled reproduce the pre-cursor batch-atomic
-//! simulator's makespans bit-for-bit, and runs with packing disabled
-//! (the default) reproduce the pre-packing simulator exactly — the
-//! oracle tests in `rust/tests/serve_preempt.rs` and
-//! `rust/tests/serve_pack.rs` hold the engine to it.
+//! simulator's makespans bit-for-bit, runs with packing disabled
+//! (the default) reproduce the pre-packing simulator exactly, and
+//! unified runs reproduce the retired closed-form unified baseline
+//! bit-for-bit — the oracle tests in `rust/tests/serve_preempt.rs`,
+//! `rust/tests/serve_pack.rs` and `rust/tests/serve_engine.rs` hold
+//! the engine to it.
 
 use crate::arch::FilcoConfig;
 use crate::coordinator::metrics::LatencyHistogram;
@@ -32,12 +38,15 @@ use super::cache::ScheduleCache;
 use super::clock::{Clock, VirtualClock};
 use super::engine::{EngineEvent, FabricEngine};
 use super::policy::PolicyConfig;
-use super::tenant::{Arrival, BatchCursor, TenantSpec};
+use super::tenant::{Arrival, TenantSpec};
 
 /// How the fabric is composed for the tenants.
 #[derive(Debug, Clone)]
 pub enum Strategy {
-    /// One unified accelerator; tenants time-share it round-robin.
+    /// One unified accelerator; tenants time-share it round-robin at
+    /// batch granularity (the engine's unified composition mode —
+    /// [`FabricEngine::new_unified`] — which reproduces the retired
+    /// closed-form baseline bit-for-bit).
     Unified,
     /// One equal-weight partition per tenant, fixed for the whole run.
     StaticEqual,
@@ -183,29 +192,41 @@ pub fn simulate(scenario: &Scenario, strategy: &Strategy, cache: &ScheduleCache)
 }
 
 /// Like [`simulate`], optionally recording the engine's event trace —
-/// what the live-vs-sim differential test compares bit-for-bit.
-/// [`Strategy::Unified`] has no engine (it is a closed-form baseline
-/// with no composition transitions) and returns an empty trace.
+/// what the live-vs-sim differential test compares bit-for-bit. Every
+/// strategy runs through the engine: [`Strategy::Unified`] drains the
+/// unified composition mode and emits a real event trace like the
+/// partitioned strategies do.
 pub fn simulate_traced(
     scenario: &Scenario,
     strategy: &Strategy,
     cache: &ScheduleCache,
     record_trace: bool,
 ) -> (ServeReport, Vec<EngineEvent>) {
-    let policy = match strategy {
-        Strategy::Unified => return (simulate_unified(scenario, cache), Vec::new()),
-        Strategy::StaticEqual => None,
-        Strategy::Dynamic(p) => Some(p.clone()),
-    };
-    let mut engine = FabricEngine::new(
-        scenario.platform.clone(),
-        scenario.base.clone(),
-        scenario.tenants.clone(),
-        policy,
-        scenario.switch_cost_s,
-        scenario.arrivals.clone(),
-        cache,
-    )
+    let mut engine = match strategy {
+        Strategy::Unified => FabricEngine::new_unified(
+            scenario.platform.clone(),
+            scenario.base.clone(),
+            scenario.tenants.clone(),
+            scenario.switch_cost_s,
+            scenario.arrivals.clone(),
+            cache,
+        ),
+        Strategy::StaticEqual | Strategy::Dynamic(_) => {
+            let policy = match strategy {
+                Strategy::Dynamic(p) => Some(p.clone()),
+                _ => None,
+            };
+            FabricEngine::new(
+                scenario.platform.clone(),
+                scenario.base.clone(),
+                scenario.tenants.clone(),
+                policy,
+                scenario.switch_cost_s,
+                scenario.arrivals.clone(),
+                cache,
+            )
+        }
+    }
     .expect("engine setup");
     engine.record_trace(record_trace);
     // The thin driver loop: the engine decides *what* happens at each
@@ -217,11 +238,7 @@ pub fn simulate_traced(
         engine.step(clock.now_s(), cache);
     }
     engine.finish();
-    let label = match strategy {
-        Strategy::Dynamic(_) => "dynamic",
-        _ => "static-equal",
-    };
-    let report = report_from_engine(&engine, label);
+    let report = report_from_engine(&engine, strategy.label());
     (report, engine.take_trace())
 }
 
@@ -240,109 +257,6 @@ fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeReport {
         pack_group_sizes: engine.pack_group_sizes().to_vec(),
         epochs: engine.epochs(),
         histograms: engine.histograms().to_vec(),
-    }
-}
-
-/// The unified baseline: one whole-fabric accelerator, tenants
-/// time-sharing it round-robin, batches accounted in closed form. No
-/// partitions exist, so none of the engine's composition transitions
-/// can occur — it stays a standalone closed-form model rather than an
-/// engine configuration.
-fn simulate_unified(sc: &Scenario, cache: &ScheduleCache) -> ServeReport {
-    use std::collections::VecDeque;
-    use std::sync::Arc;
-
-    use super::cache::CachedSchedule;
-    use super::queue::PushError;
-    use super::tenant::{admit_arrival, TokenBucket};
-
-    let t_n = sc.tenants.len();
-    let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
-    let scheds: Vec<Arc<CachedSchedule>> = sc
-        .tenants
-        .iter()
-        .map(|t| cache.get_or_compute(&sc.platform, &sc.base, &t.dag))
-        .collect();
-    let per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
-    let mut buckets: Vec<Option<TokenBucket>> =
-        sc.tenants.iter().map(|t| t.rate_limit.map(TokenBucket::from_limit)).collect();
-
-    let mut pending: Vec<VecDeque<(u64, f64)>> = vec![VecDeque::new(); t_n];
-    let mut hist = vec![LatencyHistogram::new(); t_n];
-    let mut served = vec![0u64; t_n];
-    let mut rejected = vec![0u64; t_n];
-    let mut throttled = vec![0u64; t_n];
-    let mut free = 0.0f64;
-    let mut now = 0.0f64;
-    let mut ai = 0usize;
-    let mut rr = 0usize;
-
-    loop {
-        while ai < sc.arrivals.len() && sc.arrivals[ai].t_s <= now {
-            let a = &sc.arrivals[ai];
-            ai += 1;
-            match admit_arrival(
-                &mut pending[a.tenant],
-                caps[a.tenant],
-                &mut buckets[a.tenant],
-                per_req[a.tenant],
-                a.id,
-                a.t_s,
-            ) {
-                Err(PushError::Full) => rejected[a.tenant] += 1,
-                Err(PushError::Throttled) => throttled[a.tenant] += 1,
-                _ => {}
-            }
-        }
-        if free <= now {
-            // The single worker picks the next non-empty tenant round-robin.
-            for k in 0..t_n {
-                let t = (rr + k) % t_n;
-                let take = pending[t].len().min(sc.tenants[t].max_batch);
-                if take == 0 {
-                    continue;
-                }
-                // One execution model everywhere: the unified worker
-                // walks the same cursor; undisturbed, the projected
-                // total is the closed-form batch time bit-for-bit.
-                let done = now + BatchCursor::new(scheds[t].clone(), take).projected_total_s();
-                for _ in 0..take {
-                    let (_id, arr) = pending[t].pop_front().unwrap();
-                    hist[t].record(done - arr);
-                    served[t] += 1;
-                }
-                free = done;
-                rr = (t + 1) % t_n;
-                break;
-            }
-        }
-        let mut next = f64::INFINITY;
-        if ai < sc.arrivals.len() {
-            next = next.min(sc.arrivals[ai].t_s);
-        }
-        if pending.iter().any(|q| !q.is_empty()) {
-            next = next.min(free);
-        }
-        if !next.is_finite() {
-            break;
-        }
-        now = next;
-    }
-
-    ServeReport {
-        strategy: Strategy::Unified.label().to_string(),
-        completion_s: free,
-        served,
-        rejected,
-        throttled,
-        switches: 0,
-        preemptions: 0,
-        packs: 0,
-        unpacks: 0,
-        pack_swaps: 0,
-        pack_group_sizes: Vec::new(),
-        epochs: 0,
-        histograms: hist,
     }
 }
 

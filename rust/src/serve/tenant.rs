@@ -46,6 +46,38 @@ pub struct StepEvent {
     pub consumed_s: f64,
 }
 
+/// Why a [`BatchCursor::retarget`] was refused: the proposed schedule
+/// walks a different timeline than the cursor's current one.
+///
+/// A cursor's position is a *step index* into its schedule's per-layer
+/// timeline. Re-solving the same DAG for a different slice always
+/// yields the same step count (one step per layer), so a mismatch
+/// means the caller handed over a schedule for a different DAG — and
+/// re-basing onto it would silently mis-position the cursor (the old
+/// code clamped `step` to the new last step, shrinking the
+/// remaining-work accounting and misaligning the segment anchor). The
+/// cursor is left untouched when this error is returned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetargetError {
+    /// Steps per request on the cursor's current schedule.
+    pub expected_steps: usize,
+    /// Steps per request on the schedule the caller proposed.
+    pub got_steps: usize,
+}
+
+impl std::fmt::Display for RetargetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "retarget refused: proposed schedule has {} steps per request, cursor walks {} \
+             (different DAG timeline)",
+            self.got_steps, self.expected_steps
+        )
+    }
+}
+
+impl std::error::Error for RetargetError {}
+
 /// Saved [`BatchCursor`] state. Resuming restores the cursor exactly
 /// (same schedule, same position, same consumed time) — losslessness is
 /// what lets a worker park an in-flight batch across a re-composition.
@@ -214,15 +246,29 @@ impl BatchCursor {
     /// boundary, charging `switch_charge_s` (the mid-DAG reconfiguration
     /// cost) into the batch's consumed time. Completed work keeps its
     /// old-schedule accounting.
-    pub fn retarget(&mut self, sched: Arc<CachedSchedule>, switch_charge_s: f64) {
+    ///
+    /// `sched` must walk the same DAG timeline (one step per layer, so
+    /// the step counts must match); a mismatched schedule is refused
+    /// with a [`RetargetError`] and the cursor is left untouched —
+    /// never silently clamped onto a foreign timeline.
+    pub fn retarget(
+        &mut self,
+        sched: Arc<CachedSchedule>,
+        switch_charge_s: f64,
+    ) -> Result<(), RetargetError> {
+        if sched.steps.len() != self.sched.steps.len() {
+            return Err(RetargetError {
+                expected_steps: self.sched.steps.len(),
+                got_steps: sched.steps.len(),
+            });
+        }
         let consumed = self.consumed_s();
         self.base_s = consumed + switch_charge_s.max(0.0);
         self.hwm_s = self.hwm_s.max(self.base_s);
-        // Same DAG, so step counts match; clamp defensively anyway.
-        self.step = self.step.min(sched.steps.len().saturating_sub(1));
         self.seg_req = self.req;
         self.seg_step = self.step;
         self.sched = sched;
+        Ok(())
     }
 
     /// Snapshot the full cursor state.
@@ -318,9 +364,9 @@ impl TokenBucket {
 /// Classify one arrival against a tenant's admission state: queue
 /// depth first (reject as [`PushError::Full`]), then the fabric-time
 /// token bucket (refuse as [`PushError::Throttled`]) — the single
-/// admission-order site shared by the engine's push path and the
-/// unified baseline's ingest, so refusal classification can never
-/// diverge between them.
+/// admission-order site behind the engine's push path (and therefore
+/// behind every composition mode, unified included), so refusal
+/// classification can never diverge between deployment modes.
 pub(crate) fn admit_arrival(
     pending: &mut VecDeque<(u64, f64)>,
     cap: usize,
@@ -580,7 +626,7 @@ mod tests {
         c.advance().unwrap(); // 2 of 4 layers done on the slow slice
         let consumed_before = c.consumed_s();
         assert!((consumed_before - 2.0).abs() < 1e-12);
-        c.retarget(fast.clone(), switch);
+        c.retarget(fast.clone(), switch).unwrap();
         assert!((c.consumed_s() - (2.0 + switch)).abs() < 1e-12, "switch charged at the boundary");
         let mut total_after = 0.0;
         while let Some(ev) = c.advance() {
@@ -603,13 +649,43 @@ mod tests {
         c.advance().unwrap();
         let at_boundary = c.consumed_s();
         assert!((at_boundary - (2.0 + 0.9)).abs() < 1e-12);
-        c.retarget(fast, 0.0);
+        c.retarget(fast, 0.0).unwrap();
         let mut last = at_boundary;
         while let Some(ev) = c.advance() {
             last = ev.consumed_s;
         }
         // Remaining: request 1's second layer on the fast slice, amortized.
         assert!((last - (2.9 + 0.5 * 0.9)).abs() < 1e-12, "got {last}");
+    }
+
+    #[test]
+    fn retarget_refuses_mismatched_step_counts() {
+        // Retargeting onto a schedule with a different step count used
+        // to clamp `step` silently, mis-positioning the cursor; it must
+        // now refuse with a structured error and change nothing.
+        let four = chain_sched(&[1.0, 1.0, 1.0, 1.0]);
+        let three = chain_sched(&[1.0, 1.0, 1.0]);
+        let mut c = BatchCursor::new(four.clone(), 2);
+        for _ in 0..3 {
+            c.advance().unwrap();
+        }
+        let consumed_before = c.consumed_s();
+        let remaining_before = c.remaining_s();
+        let err = c.retarget(three, 0.25).unwrap_err();
+        assert_eq!((err.expected_steps, err.got_steps), (4, 3));
+        let msg = err.to_string();
+        assert!(msg.contains('4') && msg.contains('3'), "error must name both counts: {msg}");
+        // No charge, no re-base, no clamp: the cursor is untouched…
+        assert_eq!(c.consumed_s(), consumed_before);
+        assert_eq!(c.remaining_s(), remaining_before);
+        // …and still walks its original schedule to the exact closed form.
+        while c.advance().is_some() {}
+        assert_eq!(c.consumed_s(), batch_fabric_s(four.per_request_s, 2));
+        // A same-length schedule is accepted as before.
+        let other = chain_sched(&[0.5, 0.5, 0.5, 0.5]);
+        let mut c = BatchCursor::new(four, 1);
+        c.advance().unwrap();
+        assert!(c.retarget(other, 0.0).is_ok());
     }
 
     #[test]

@@ -7,13 +7,25 @@
 //!    identical served/switch/preempt/pack counters, bit for bit.
 //!    Resplit, preemption, pack and unpack are applied at exactly one
 //!    site (the engine), so there is no driver-specific transition code
-//!    left to drift.
-//! 2. **Mid-flight pack handoff conserves fabric time**: a running solo
+//!    left to drift. The differential runs across a seed matrix
+//!    (override with `FILCO_TEST_SEEDS=1,2,3`), and covers the unified
+//!    composition mode as well as the dynamic one, so trace equality is
+//!    not an artifact of one lucky trace.
+//! 2. **Unified-on-the-engine oracle**: `Strategy::Unified` now runs
+//!    through the engine (one whole-fabric partition, all tenants in a
+//!    permanent round-robin group). The retired closed-form baseline is
+//!    kept here as a test oracle, and the engine run must reproduce it
+//!    **bit-for-bit**: `completion_s`, served/rejected/throttled, and
+//!    every histogram value (bucket counts included), asserted `==` on
+//!    `f64`s — admission before service at equal instants, round-robin
+//!    cursor advanced past the served tenant.
+//! 3. **Mid-flight pack handoff conserves fabric time**: a running solo
 //!    cursor checkpointed and resumed inside a host partition's
 //!    interleaver finishes with exactly the undisturbed solo walk's
 //!    consumed fabric seconds — asserted with `==` on `f64`s, swap
 //!    charges and co-resident batches notwithstanding.
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -21,9 +33,9 @@ use filco::arch::FilcoConfig;
 use filco::dse::Solver;
 use filco::platform::Platform;
 use filco::serve::{
-    batch_fabric_s, equal_split_per_request, poisson_trace, simulate_traced, EngineEvent,
-    FabricEngine, FabricScheduler, LiveConfig, PolicyConfig, Scenario, ScheduleCache, Strategy,
-    TenantSpec, Transition,
+    batch_fabric_s, equal_split_per_request, poisson_trace, simulate_traced, Arrival, BatchCursor,
+    EngineEvent, FabricEngine, FabricScheduler, LatencyHistogram, LiveConfig, LiveMode,
+    PolicyConfig, Scenario, ScheduleCache, Strategy, TenantSpec, TokenBucket, Transition,
 };
 use filco::workload::zoo;
 
@@ -31,9 +43,32 @@ fn small_solver() -> Solver {
     Solver::Ga { population: 16, generations: 20, seed: 42 }
 }
 
+/// The seed whose trace is pinned rich (re-splits *and* packs occur);
+/// transition-richness asserts only apply to it, equality asserts to
+/// every seed.
+const RICH_SEED: u64 = 4711;
+
+/// Trace seeds for the differential matrix. Override with a
+/// comma-separated `FILCO_TEST_SEEDS` (e.g. `FILCO_TEST_SEEDS=1,2,3`).
+fn test_seeds() -> Vec<u64> {
+    match std::env::var("FILCO_TEST_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|x| {
+                // A typo must fail loudly, not silently shrink the
+                // matrix this test exists to provide.
+                x.trim().parse().unwrap_or_else(|_| {
+                    panic!("FILCO_TEST_SEEDS must be comma-separated integers; bad token {x:?}")
+                })
+            })
+            .collect(),
+        Err(_) => vec![RICH_SEED, 271_828, 3_141_592],
+    }
+}
+
 /// Skewed 3-tenant scenario with preemption and packing both live —
-/// every transition kind shows up in the trace.
-fn traced_scenario(cache: &ScheduleCache) -> (Scenario, PolicyConfig, f64) {
+/// every transition kind shows up in the (rich-seed) trace.
+fn traced_scenario(cache: &ScheduleCache, seed: u64) -> (Scenario, PolicyConfig, f64) {
     let platform = Platform::vck190();
     let base = FilcoConfig::default_for(&platform);
     let cap = 1 << 22;
@@ -44,7 +79,7 @@ fn traced_scenario(cache: &ScheduleCache) -> (Scenario, PolicyConfig, f64) {
     ];
     let per = equal_split_per_request(&platform, &base, &tenants, cache);
     let arrivals =
-        poisson_trace(&[2.5 / per[0], 0.05 / per[1], 0.05 / per[2]], 60.0 * per[0], 4711);
+        poisson_trace(&[2.5 / per[0], 0.05 / per[1], 0.05 / per[2]], 60.0 * per[0], seed);
     assert!(arrivals.len() > 50, "calibrated trace too small: {}", arrivals.len());
     let policy = PolicyConfig {
         pack_swap_margin: 10.0,
@@ -53,38 +88,22 @@ fn traced_scenario(cache: &ScheduleCache) -> (Scenario, PolicyConfig, f64) {
     (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy, per[0])
 }
 
-#[test]
-fn live_and_sim_produce_identical_engine_traces() {
-    let cache = Arc::new(ScheduleCache::new(small_solver()));
-    let (sc, policy, per0) = traced_scenario(&cache);
+/// A timescale that compresses `fabric_total_s` of fabric time to
+/// roughly half a second of wall time. A power of two, so the
+/// scheduler's wall→fabric epoch conversion (`epoch_s * ts` outside,
+/// `/ ts` inside) round-trips bit-exactly — the engine must see the
+/// simulator's epoch value to the last bit.
+fn pow2_timescale(fabric_total_s: f64) -> f64 {
+    2f64.powi((0.5 / fabric_total_s).log2().floor() as i32)
+}
 
-    // Virtual clock: the simulator drains the engine instantly.
-    let (sim_report, sim_trace) =
-        simulate_traced(&sc, &Strategy::Dynamic(policy.clone()), &cache, true);
-    assert!(!sim_trace.is_empty(), "trace recording must capture events");
-    assert!(sim_report.switches >= 1, "the scenario must re-compose");
-    assert!(
-        sim_trace.iter().any(|e| matches!(e, EngineEvent::Resplit { .. })),
-        "re-compositions must appear in the trace"
-    );
-    assert!(sim_report.packs >= 1, "the light pair must pack");
-
-    // Wall clock, timescale-compressed: worker thread shells race for
-    // the engine lock, pacing sleeps toward each fabric deadline. The
-    // wall run of the whole trace lasts well under a second. A power
-    // of two, so the scheduler's wall→fabric epoch conversion
-    // (`epoch_s * ts` here, `/ ts` inside) round-trips bit-exactly —
-    // the engine must see the simulator's epoch value to the last bit.
-    let fabric_total_s = 70.0 * per0;
-    let timescale = 2f64.powi((0.5 / fabric_total_s).log2().floor() as i32);
-    let live_cfg = LiveConfig {
-        // The scheduler maps wall epochs onto the engine's fabric
-        // timeline through the timescale; feed it the value that lands
-        // exactly on the simulator's fabric epoch.
-        policy: PolicyConfig { epoch_s: policy.epoch_s * timescale, ..policy.clone() },
-        timescale,
-        max_sleep: Duration::from_millis(100),
-    };
+/// Run the deterministic live scheduler over `sc`'s trace in `mode`
+/// and return its report + engine event trace.
+fn live_run(
+    sc: &Scenario,
+    cache: &Arc<ScheduleCache>,
+    live_cfg: LiveConfig,
+) -> (filco::serve::LiveReport, Vec<EngineEvent>) {
     let sched = FabricScheduler::with_arrivals(
         sc.platform.clone(),
         sc.base.clone(),
@@ -95,24 +114,275 @@ fn live_and_sim_produce_identical_engine_traces() {
     )
     .expect("live scheduler");
     sched.close();
-    let live_report = sched.run();
-    let live_trace = sched.take_trace();
+    let report = sched.run();
+    let trace = sched.take_trace();
+    (report, trace)
+}
 
-    // The differential claim: identical traces, identical counters.
-    assert_eq!(live_trace.len(), sim_trace.len(), "event counts must match");
-    for (i, (l, s)) in live_trace.iter().zip(&sim_trace).enumerate() {
-        assert_eq!(l, s, "trace diverges at event {i}");
+fn assert_traces_equal(seed: u64, live: &[EngineEvent], sim: &[EngineEvent]) {
+    assert_eq!(live.len(), sim.len(), "seed {seed}: event counts must match");
+    for (i, (l, s)) in live.iter().zip(sim).enumerate() {
+        assert_eq!(l, s, "seed {seed}: trace diverges at event {i}");
     }
+}
+
+#[test]
+fn live_and_sim_produce_identical_engine_traces() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    for seed in test_seeds() {
+        let (sc, policy, per0) = traced_scenario(&cache, seed);
+
+        // Virtual clock: the simulator drains the engine instantly.
+        let (sim_report, sim_trace) =
+            simulate_traced(&sc, &Strategy::Dynamic(policy.clone()), &cache, true);
+        assert!(!sim_trace.is_empty(), "seed {seed}: trace recording must capture events");
+        if seed == RICH_SEED {
+            assert!(sim_report.switches >= 1, "the pinned scenario must re-compose");
+            assert!(
+                sim_trace.iter().any(|e| matches!(e, EngineEvent::Resplit { .. })),
+                "re-compositions must appear in the trace"
+            );
+            assert!(sim_report.packs >= 1, "the light pair must pack");
+        }
+
+        // Wall clock, timescale-compressed: worker thread shells race
+        // for the engine lock, pacing sleeps toward each fabric
+        // deadline. The wall run of the whole trace lasts well under a
+        // second.
+        let timescale = pow2_timescale(70.0 * per0);
+        let live_cfg = LiveConfig {
+            // The scheduler maps wall epochs onto the engine's fabric
+            // timeline through the timescale; feed it the value that
+            // lands exactly on the simulator's fabric epoch.
+            policy: PolicyConfig { epoch_s: policy.epoch_s * timescale, ..policy.clone() },
+            mode: LiveMode::Dynamic,
+            timescale,
+            max_sleep: Duration::from_millis(100),
+        };
+        let (live_report, live_trace) = live_run(&sc, &cache, live_cfg);
+
+        // The differential claim: identical traces, identical counters.
+        assert_traces_equal(seed, &live_trace, &sim_trace);
+        assert_eq!(
+            live_report.tenants.iter().map(|t| t.served).collect::<Vec<_>>(),
+            sim_report.served,
+            "seed {seed}"
+        );
+        assert_eq!(live_report.switches, sim_report.switches, "seed {seed}");
+        assert_eq!(live_report.preemptions, sim_report.preemptions, "seed {seed}");
+        assert_eq!(live_report.packs, sim_report.packs, "seed {seed}");
+        assert_eq!(live_report.unpacks, sim_report.unpacks, "seed {seed}");
+        assert_eq!(live_report.pack_swaps, sim_report.pack_swaps, "seed {seed}");
+        assert_eq!(live_report.pack_group_sizes, sim_report.pack_group_sizes, "seed {seed}");
+    }
+}
+
+#[test]
+fn live_and_sim_unified_produce_identical_engine_traces() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    for seed in test_seeds() {
+        let (sc, _policy, per0) = traced_scenario(&cache, seed);
+
+        let (sim_report, sim_trace) = simulate_traced(&sc, &Strategy::Unified, &cache, true);
+        assert_eq!(sim_report.strategy, "unified");
+        assert!(
+            sim_trace.iter().any(|e| matches!(e, EngineEvent::BatchStarted { .. })),
+            "seed {seed}: the unified run must emit a real event trace"
+        );
+        assert_eq!(
+            (sim_report.switches, sim_report.preemptions, sim_report.packs, sim_report.epochs),
+            (0, 0, 0, 0),
+            "the unified composition is permanent: no transitions, no policy"
+        );
+
+        // The same trace through the live scheduler's unified mode.
+        let live_cfg = LiveConfig {
+            mode: LiveMode::Unified,
+            timescale: pow2_timescale(70.0 * per0),
+            ..LiveConfig::default()
+        };
+        let (live_report, live_trace) = live_run(&sc, &cache, live_cfg);
+        assert_traces_equal(seed, &live_trace, &sim_trace);
+        assert_eq!(
+            live_report.tenants.iter().map(|t| t.served).collect::<Vec<_>>(),
+            sim_report.served,
+            "seed {seed}"
+        );
+        assert_eq!((live_report.switches, live_report.preemptions), (0, 0));
+        assert_eq!((live_report.packs, live_report.unpacks, live_report.packed_batches), (0, 0, 0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Unified oracle: the retired closed-form baseline, kept verbatim. The
+// engine-unified run must reproduce it bit-for-bit.
+// ---------------------------------------------------------------------------
+
+struct UnifiedOracle {
+    completion_s: f64,
+    served: Vec<u64>,
+    rejected: Vec<u64>,
+    throttled: Vec<u64>,
+    histograms: Vec<LatencyHistogram>,
+}
+
+/// The pre-engine closed-form unified baseline, verbatim semantics:
+/// one whole-fabric accelerator; a single worker picks the next
+/// non-empty tenant round-robin (cursor advanced past the served
+/// tenant); batches are accounted in closed form (`now +` the fresh
+/// cursor's projected total); every arrival at or before `now` is
+/// admitted *before* the pick at that instant — queue depth first,
+/// then the fabric-time token bucket; latencies are recorded eagerly
+/// at the pick.
+fn closed_form_unified(sc: &Scenario, cache: &ScheduleCache) -> UnifiedOracle {
+    let t_n = sc.tenants.len();
+    let caps: Vec<usize> = sc.tenants.iter().map(|t| t.queue_capacity).collect();
+    let scheds: Vec<_> = sc
+        .tenants
+        .iter()
+        .map(|t| cache.get_or_compute(&sc.platform, &sc.base, &t.dag))
+        .collect();
+    let per_req: Vec<f64> = scheds.iter().map(|s| s.per_request_s).collect();
+    let mut buckets: Vec<Option<TokenBucket>> =
+        sc.tenants.iter().map(|t| t.rate_limit.map(TokenBucket::from_limit)).collect();
+
+    let mut pending: Vec<VecDeque<f64>> = vec![VecDeque::new(); t_n];
+    let mut hist = vec![LatencyHistogram::new(); t_n];
+    let mut served = vec![0u64; t_n];
+    let mut rejected = vec![0u64; t_n];
+    let mut throttled = vec![0u64; t_n];
+    let mut free = 0.0f64;
+    let mut now = 0.0f64;
+    let mut ai = 0usize;
+    let mut rr = 0usize;
+
+    loop {
+        while ai < sc.arrivals.len() && sc.arrivals[ai].t_s <= now {
+            let a = &sc.arrivals[ai];
+            ai += 1;
+            if pending[a.tenant].len() >= caps[a.tenant] {
+                rejected[a.tenant] += 1;
+            } else if buckets[a.tenant]
+                .as_mut()
+                .is_some_and(|b| !b.try_take(per_req[a.tenant], a.t_s))
+            {
+                throttled[a.tenant] += 1;
+            } else {
+                pending[a.tenant].push_back(a.t_s);
+            }
+        }
+        if free <= now {
+            for k in 0..t_n {
+                let t = (rr + k) % t_n;
+                let take = pending[t].len().min(sc.tenants[t].max_batch);
+                if take == 0 {
+                    continue;
+                }
+                let done = now + BatchCursor::new(scheds[t].clone(), take).projected_total_s();
+                for _ in 0..take {
+                    let arr = pending[t].pop_front().unwrap();
+                    hist[t].record(done - arr);
+                    served[t] += 1;
+                }
+                free = done;
+                rr = (t + 1) % t_n;
+                break;
+            }
+        }
+        let mut next = f64::INFINITY;
+        if ai < sc.arrivals.len() {
+            next = next.min(sc.arrivals[ai].t_s);
+        }
+        if pending.iter().any(|q| !q.is_empty()) {
+            next = next.min(free);
+        }
+        if !next.is_finite() {
+            break;
+        }
+        now = next;
+    }
+
+    UnifiedOracle { completion_s: free, served, rejected, throttled, histograms: hist }
+}
+
+/// The bit-for-bit claim: engine-unified == closed form, `==` on every
+/// `f64`, full histogram distributions included.
+fn assert_unified_matches_oracle(sc: &Scenario, cache: &ScheduleCache) {
+    let oracle = closed_form_unified(sc, cache);
+    let (r, trace) = simulate_traced(sc, &Strategy::Unified, cache, true);
+    assert_eq!(r.strategy, "unified");
+    assert_eq!(r.completion_s, oracle.completion_s, "completion must match bit-for-bit");
+    assert_eq!(r.served, oracle.served);
+    assert_eq!(r.rejected, oracle.rejected);
+    assert_eq!(r.throttled, oracle.throttled);
     assert_eq!(
-        live_report.tenants.iter().map(|t| t.served).collect::<Vec<_>>(),
-        sim_report.served
+        (r.switches, r.preemptions, r.packs, r.unpacks, r.pack_swaps, r.epochs),
+        (0, 0, 0, 0, 0, 0)
     );
-    assert_eq!(live_report.switches, sim_report.switches);
-    assert_eq!(live_report.preemptions, sim_report.preemptions);
-    assert_eq!(live_report.packs, sim_report.packs);
-    assert_eq!(live_report.unpacks, sim_report.unpacks);
-    assert_eq!(live_report.pack_swaps, sim_report.pack_swaps);
-    assert_eq!(live_report.pack_group_sizes, sim_report.pack_group_sizes);
+    assert!(r.pack_group_sizes.is_empty());
+    for (t, (h, oh)) in r.histograms.iter().zip(&oracle.histograms).enumerate() {
+        assert_eq!(h.count(), oh.count(), "tenant {t}: histogram count");
+        assert_eq!(h.buckets(), oh.buckets(), "tenant {t}: bucket counts");
+        assert_eq!(h.mean_s(), oh.mean_s(), "tenant {t}: mean");
+        assert_eq!(h.max_s(), oh.max_s(), "tenant {t}: max");
+        assert_eq!(h.p50(), oh.p50(), "tenant {t}: p50");
+        assert_eq!(h.p95(), oh.p95(), "tenant {t}: p95");
+        assert_eq!(h.p99(), oh.p99(), "tenant {t}: p99");
+    }
+    if r.served.iter().sum::<u64>() > 0 {
+        assert!(trace.iter().any(|e| matches!(e, EngineEvent::BatchStarted { .. })));
+        assert!(trace.iter().any(|e| matches!(e, EngineEvent::BatchDone { .. })));
+    }
+}
+
+#[test]
+fn engine_unified_reproduces_the_closed_form_oracle_bit_for_bit() {
+    let cache = ScheduleCache::new(small_solver());
+    for seed in test_seeds() {
+        let (sc, _policy, _per0) = traced_scenario(&cache, seed);
+        assert_unified_matches_oracle(&sc, &cache);
+    }
+}
+
+#[test]
+fn engine_unified_matches_oracle_under_admission_pressure() {
+    // Tight queues, a drained token bucket, and equal-instant arrival
+    // waves: exercises the Full/Throttled classification order, the
+    // round-robin tie-break among simultaneous arrivals (admission
+    // before service at the same instant), and re-admission after
+    // batches drain — all of which must classify identically in the
+    // engine and the closed form.
+    let cache = ScheduleCache::new(small_solver());
+    let (mut sc, _policy, _per0) = traced_scenario(&cache, RICH_SEED);
+    let per: Vec<f64> = sc
+        .tenants
+        .iter()
+        .map(|t| cache.get_or_compute(&sc.platform, &sc.base, &t.dag).per_request_s)
+        .collect();
+    for t in &mut sc.tenants {
+        t.queue_capacity = 3;
+    }
+    // Tenant 2 may burst 1.5 requests' worth of fabric time and never
+    // earns more (rate 0): exactly one of its requests is admitted.
+    sc.tenants[2] = sc.tenants[2].clone().with_fabric_share(0.0, 1.5 * per[2]);
+    let mut arrivals = Vec::new();
+    for i in 0..8u64 {
+        for t in 0..3usize {
+            arrivals.push(Arrival { t_s: 0.0, tenant: t, id: i * 3 + t as u64 });
+        }
+    }
+    // A second simultaneous wave after the first batches drained.
+    let t2 = 4.0 * (per[0] + per[1] + per[2]);
+    for i in 0..6u64 {
+        arrivals.push(Arrival { t_s: t2, tenant: (i % 3) as usize, id: 100 + i });
+    }
+    sc.arrivals = arrivals;
+
+    assert_unified_matches_oracle(&sc, &cache);
+    // The pressure actually materialized: both refusal classes occur.
+    let oracle = closed_form_unified(&sc, &cache);
+    assert!(oracle.rejected.iter().sum::<u64>() > 0, "3-deep queues must reject the 8-burst");
+    assert!(oracle.throttled[2] > 0, "the drained bucket must throttle tenant 2");
 }
 
 #[test]
