@@ -5,22 +5,74 @@
 //! baseline included — runs through the same `FabricEngine`, so the
 //! comparison shares one cost model by construction.
 //!
+//! Besides the table, the bench writes a machine-readable
+//! `BENCH_serve.json` snapshot to the repository root (override the
+//! location with `FILCO_BENCH_OUT=<path>`): per-strategy throughput /
+//! worst-tenant p99 / engine step ns/op, plus the DSE solve and
+//! schedule-cache lookup wall times the serving path depends on. The
+//! committed copy tracks serving performance across PRs.
+//!
 //! Run: `cargo bench --bench serve_multitenant`
+//!
+//! `FILCO_BENCH_SAMPLE=1` runs a shortened trace with a small solver
+//! and skips the strict comparison asserts — CI uses it to validate
+//! the snapshot schema without paying the full GA budget.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 use filco::arch::FilcoConfig;
 use filco::dse::Solver;
 use filco::platform::Platform;
 use filco::report::{eng, Table};
 use filco::serve::{
-    equal_split_per_request, poisson_trace, simulate, PolicyConfig, Scenario, ScheduleCache,
-    ServeReport, Strategy, TenantSpec,
+    equal_split_per_request, poisson_trace, simulate_instrumented, PolicyConfig, RunTelemetry,
+    Scenario, ScheduleCache, ServeReport, Strategy, TelemetryConfig, TenantSpec,
 };
+use filco::util::json::Json;
 use filco::workload::zoo;
 
+/// Where the snapshot goes: `FILCO_BENCH_OUT`, or `BENCH_serve.json`
+/// at the repository root (the crate directory's parent).
+fn snapshot_path() -> PathBuf {
+    match std::env::var("FILCO_BENCH_OUT") {
+        Ok(p) if !p.is_empty() => PathBuf::from(p),
+        _ => Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("crate dir has a parent")
+            .join("BENCH_serve.json"),
+    }
+}
+
+fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+
+/// One strategy row of the snapshot.
+fn row_json(rep: &ServeReport, tel: &RunTelemetry) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("completion_s".to_string(), num(rep.completion_s));
+    m.insert("throughput_rps".to_string(), num(rep.throughput_rps()));
+    m.insert("worst_p99_s".to_string(), num(rep.worst_p99_s()));
+    m.insert("heavy_p99_s".to_string(), num(rep.histograms[0].p99()));
+    m.insert("served".to_string(), num(rep.total_served() as f64));
+    m.insert("switches".to_string(), num(rep.switches as f64));
+    m.insert("preemptions".to_string(), num(rep.preemptions as f64));
+    m.insert("packs".to_string(), num(rep.packs as f64));
+    m.insert("engine_steps".to_string(), num(tel.step_profile.steps as f64));
+    m.insert("step_ns_per_op".to_string(), num(tel.step_profile.ns_per_step()));
+    Json::Obj(m)
+}
+
 fn main() {
+    let sample = std::env::var("FILCO_BENCH_SAMPLE").is_ok_and(|v| !v.is_empty() && v != "0");
     let platform = Platform::vck190();
     let base = FilcoConfig::default_for(&platform);
-    let solver = Solver::Ga { population: 32, generations: 60, seed: 0xF11C0 };
+    let solver = if sample {
+        Solver::Ga { population: 16, generations: 20, seed: 0xF11C0 }
+    } else {
+        Solver::Ga { population: 32, generations: 60, seed: 0xF11C0 }
+    };
     let cache = ScheduleCache::new(solver);
 
     let tenants = vec![
@@ -33,10 +85,12 @@ fn main() {
     // heavy tenant is pushed to 2.5x its slice's capacity.
     let per = equal_split_per_request(&platform, &base, &tenants, &cache);
     let rates = [2.5 / per[0], 0.1 / per[1], 0.1 / per[2]];
-    let arrivals = poisson_trace(&rates, 100.0 * per[0], 0xBEEF);
+    let duration = if sample { 25.0 } else { 100.0 } * per[0];
+    let arrivals = poisson_trace(&rates, duration, 0xBEEF);
     println!(
-        "skewed trace: {} arrivals, heavy tenant mlp-l at 2.5x equal-split capacity\n",
-        arrivals.len()
+        "skewed trace: {} arrivals, heavy tenant mlp-l at 2.5x equal-split capacity{}\n",
+        arrivals.len(),
+        if sample { " (sample mode)" } else { "" }
     );
 
     let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None };
@@ -54,8 +108,16 @@ fn main() {
         ("dynamic-preempt", Strategy::Dynamic(policy)),
         ("dynamic-packed", Strategy::Dynamic(packed)),
     ];
-    let reports: Vec<(&str, ServeReport)> =
-        strategies.iter().map(|(n, s)| (*n, simulate(&sc, s, &cache))).collect();
+    // Step profiles ride along for free (two counters); no trace or
+    // timeline, so the runs stay pure.
+    let tcfg = TelemetryConfig::default();
+    let reports: Vec<(&str, ServeReport, RunTelemetry)> = strategies
+        .iter()
+        .map(|(n, s)| {
+            let (rep, tel) = simulate_instrumented(&sc, s, &cache, &tcfg);
+            (*n, rep, tel)
+        })
+        .collect();
 
     let mut t = Table::new(
         "Serving under skewed 3-tenant traffic (fabric time)",
@@ -70,10 +132,10 @@ fn main() {
             "packs",
             "swaps",
             "served",
-            "rejected",
+            "step ns/op",
         ],
     );
-    for (name, rep) in &reports {
+    for (name, rep, tel) in &reports {
         t.row(&[
             name.to_string(),
             eng(rep.completion_s),
@@ -85,15 +147,62 @@ fn main() {
             rep.packs.to_string(),
             rep.pack_swaps.to_string(),
             rep.total_served().to_string(),
-            rep.total_rejected().to_string(),
+            format!("{:.0}", tel.step_profile.ns_per_step()),
         ]);
     }
     t.emit("serve_multitenant");
     println!("schedule cache: {}", cache.stats());
+    println!(
+        "DSE: {} solves, {:.1} ms wall total; cache lookups {:.1} us wall total",
+        cache.solve_count(),
+        cache.solve_ns() as f64 / 1e6,
+        cache.lookup_ns() as f64 / 1e3
+    );
     println!("bench wall time: {:.2} s", t0.elapsed().as_secs_f64());
+
+    // The machine-readable snapshot. Headline numbers come from the
+    // dynamic-preempt row — the configuration the serving claims are
+    // about.
+    let headline = &reports[3];
+    let mut snap = BTreeMap::new();
+    snap.insert("bench".to_string(), Json::Str("serve_multitenant".to_string()));
+    snap.insert("sample_mode".to_string(), Json::Bool(sample));
+    snap.insert("arrivals".to_string(), num(sc.arrivals.len() as f64));
+    snap.insert("throughput_rps".to_string(), num(headline.1.throughput_rps()));
+    snap.insert("worst_p99_s".to_string(), num(headline.1.worst_p99_s()));
+    snap.insert("step_ns_per_op".to_string(), num(headline.2.step_profile.ns_per_step()));
+    snap.insert("dse_solve_ms".to_string(), num(cache.solve_ns() as f64 / 1e6));
+    snap.insert("dse_solves".to_string(), num(cache.solve_count() as f64));
+    snap.insert("cache_lookup_us".to_string(), num(cache.lookup_ns() as f64 / 1e3));
+    snap.insert(
+        "strategies".to_string(),
+        Json::Obj(
+            reports
+                .iter()
+                .map(|(n, rep, tel)| (n.to_string(), row_json(rep, tel)))
+                .collect(),
+        ),
+    );
+    let out = snapshot_path();
+    let mut text = Json::Obj(snap).to_string_compact();
+    text.push('\n');
+    match std::fs::write(&out, &text) {
+        Ok(()) => println!("snapshot -> {}", out.display()),
+        Err(e) => {
+            eprintln!("snapshot write to {} failed: {e}", out.display());
+            std::process::exit(1);
+        }
+    }
 
     let (stat, dynr) = (&reports[1].1, &reports[3].1);
     assert_eq!(dynr.total_served(), stat.total_served());
+    assert!(cache.solve_count() > 0, "the bench must exercise real DSE solves");
+    if sample {
+        // Sample mode exists to validate the snapshot schema cheaply;
+        // the short trace makes the strict dominance asserts noisy.
+        println!("serve_multitenant OK (sample mode)");
+        return;
+    }
     assert!(
         dynr.completion_s < stat.completion_s,
         "dynamic ({:.4e} s) must beat static equal split ({:.4e} s)",

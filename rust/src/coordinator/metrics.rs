@@ -3,13 +3,19 @@
 
 use std::time::Instant;
 
-use crate::util::stats::{percentile, Running};
+use crate::util::stats::Running;
 
 /// Accumulates request latencies + byte/flop counters for a serving run.
+///
+/// Latencies land in a fixed-memory [`LatencyHistogram`] (the same
+/// log-bucketed structure the serve layer uses per tenant), so the
+/// quantiles are O(buckets) and memory never grows with request count —
+/// the old unbounded `Vec<f64>` re-sorted on every percentile call is
+/// gone. The mean stays exact through the streaming [`Running`].
 #[derive(Debug)]
 pub struct Metrics {
     started: Instant,
-    latencies_s: Vec<f64>,
+    hist: LatencyHistogram,
     running: Running,
     pub total_flops: u64,
     pub errors: u64,
@@ -25,7 +31,7 @@ impl Metrics {
     pub fn new() -> Self {
         Self {
             started: Instant::now(),
-            latencies_s: Vec::new(),
+            hist: LatencyHistogram::new(),
             running: Running::new(),
             total_flops: 0,
             errors: 0,
@@ -33,7 +39,7 @@ impl Metrics {
     }
 
     pub fn record(&mut self, latency_s: f64, flops: u64) {
-        self.latencies_s.push(latency_s);
+        self.hist.record(latency_s);
         self.running.push(latency_s);
         self.total_flops += flops;
     }
@@ -43,23 +49,27 @@ impl Metrics {
     }
 
     pub fn count(&self) -> usize {
-        self.latencies_s.len()
+        self.hist.count() as usize
     }
 
+    /// Exact mean latency (streaming, not bucketed).
     pub fn mean_latency_s(&self) -> f64 {
         self.running.mean()
     }
 
+    /// Median latency, accurate to one histogram bucket (~33%).
     pub fn p50(&self) -> f64 {
-        percentile(&self.latencies_s, 0.50)
+        self.hist.p50()
     }
 
+    /// 95th-percentile latency, accurate to one histogram bucket.
     pub fn p95(&self) -> f64 {
-        percentile(&self.latencies_s, 0.95)
+        self.hist.p95()
     }
 
+    /// 99th-percentile latency, accurate to one histogram bucket.
     pub fn p99(&self) -> f64 {
-        percentile(&self.latencies_s, 0.99)
+        self.hist.p99()
     }
 
     /// Requests per second over the wall-clock window so far.
@@ -73,7 +83,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        if self.latencies_s.is_empty() {
+        if self.count() == 0 {
             return "no requests".to_string();
         }
         format!(
@@ -176,6 +186,47 @@ impl LatencyHistogram {
         }
     }
 
+    /// Smallest recorded latency; 0 when empty (mirrors [`Self::max_s`]).
+    pub fn min_s(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    /// Exact sum of all recorded latencies (seconds).
+    pub fn sum_s(&self) -> f64 {
+        self.sum_s
+    }
+
+    /// Rebuild a histogram from its serialized parts (trace footers).
+    ///
+    /// `buckets` longer than the fixed layout is rejected with `None`;
+    /// shorter is zero-padded (forward-compatible with narrower dumps).
+    /// An empty histogram (`total == 0`) restores the `±inf` min/max
+    /// sentinels regardless of the passed extremes, so a round-tripped
+    /// empty histogram behaves identically to a fresh one.
+    pub fn from_parts(buckets: &[u64], sum_s: f64, min_s: f64, max_s: f64) -> Option<Self> {
+        if buckets.len() > HIST_BUCKETS {
+            return None;
+        }
+        let mut counts = [0u64; HIST_BUCKETS];
+        counts[..buckets.len()].copy_from_slice(buckets);
+        let total: u64 = counts.iter().sum();
+        Some(if total == 0 {
+            Self::new()
+        } else {
+            Self {
+                counts,
+                total,
+                sum_s,
+                min_s,
+                max_s,
+            }
+        })
+    }
+
     /// Quantile estimate, `q` in [0, 1]; 0 when empty. Accurate to one
     /// bucket (~33%), then clamped into the observed [min, max] range.
     pub fn quantile(&self, q: f64) -> f64 {
@@ -243,9 +294,13 @@ mod tests {
             m.record(i as f64 / 1000.0, 1000);
         }
         assert_eq!(m.count(), 100);
-        assert!((m.p50() - 0.0505).abs() < 1e-3);
-        assert!(m.p95() > 0.094);
-        assert!(m.p99() > 0.098);
+        // Exact mean via Running; quantiles accurate to one log bucket
+        // (~33%), same tolerance discipline as histogram_orders_quantiles.
+        assert!((m.mean_latency_s() - 0.0505).abs() < 1e-9);
+        assert!(m.p50() > 0.0505 / 1.4 && m.p50() < 0.0505 * 1.4, "p50 {}", m.p50());
+        assert!(m.p95() > 0.095 / 1.4, "p95 {}", m.p95());
+        assert!(m.p99() > 0.099 / 1.4, "p99 {}", m.p99());
+        assert!(m.p50() <= m.p95() && m.p95() <= m.p99());
         assert_eq!(m.total_flops, 100_000);
         assert!(m.summary().contains("n=100"));
     }
@@ -312,6 +367,30 @@ mod tests {
         assert_eq!(h.mean_s(), 0.0);
         assert_eq!(h.max_s(), 0.0);
         assert_eq!(h.summary(), "no requests");
+    }
+
+    #[test]
+    fn histogram_from_parts_roundtrips() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=200u64 {
+            h.record(i as f64 * 3e-5);
+        }
+        let r = LatencyHistogram::from_parts(h.buckets(), h.sum_s(), h.min_s(), h.max_s())
+            .expect("matching layout");
+        assert_eq!(r.buckets(), h.buckets());
+        assert_eq!(r.count(), h.count());
+        assert_eq!(r.sum_s(), h.sum_s());
+        assert_eq!(r.min_s(), h.min_s());
+        assert_eq!(r.max_s(), h.max_s());
+        assert_eq!(r.p99(), h.p99());
+
+        // Empty parts restore the fresh-histogram sentinels.
+        let e = LatencyHistogram::from_parts(&[], 0.0, 0.0, 0.0).unwrap();
+        assert_eq!(e.count(), 0);
+        assert_eq!(e.summary(), "no requests");
+
+        // Oversized layouts are rejected, not truncated.
+        assert!(LatencyHistogram::from_parts(&[0; 81], 0.0, 0.0, 0.0).is_none());
     }
 
     #[test]

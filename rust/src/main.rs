@@ -13,7 +13,7 @@
 //!   serve   [--requests N] [--mode live|sim]
 //!           [--strategy dynamic|static|unified] [--epoch-ms E]
 //!           [--timescale S] [--preempt on|off] [--pack on|off]
-//!           [--cache-file P]
+//!           [--cache-file P] [--trace-out P] [--timeline-out P]
 //!           multi-tenant serving on the live re-composable fabric:
 //!           worker per partition stepping batches layer-by-layer,
 //!           backlog policy re-splits via the Reconfigurator (mid-DAG
@@ -26,7 +26,14 @@
 //!           the cache across restarts (loaded on startup, saved on
 //!           shutdown). `--mode sim` runs the deterministic
 //!           unified/static/dynamic comparison instead (--strategy
-//!           narrows it to one).
+//!           narrows it to one). --trace-out records the engine event
+//!           stream as a replayable JSONL trace; --timeline-out dumps
+//!           the per-epoch metrics timeline next to it.
+//!   trace   summarize|replay <path>
+//!           inspect a recorded trace: summarize digests it; replay
+//!           reconstructs the report from the event stream and holds
+//!           it to the recorded footer bit-for-bit (exit 1 on any
+//!           mismatch).
 //!   gantt   --model M [..]    ASCII utilization timeline from the sim
 //!   help                      print the flag-by-flag usage reference
 //!
@@ -44,8 +51,9 @@ use filco::isa::disasm;
 use filco::platform::Platform;
 use filco::runtime::Engine;
 use filco::serve::{
-    equal_split_per_request, poisson_trace, simulate, FabricScheduler, LiveConfig, LiveMode,
-    LiveRequest, PolicyConfig, Scenario, ScheduleCache, Strategy, TenantSpec,
+    equal_split_per_request, poisson_trace, simulate, simulate_instrumented, write_trace,
+    FabricScheduler, LiveConfig, LiveMode, LiveRequest, PolicyConfig, RecordedTrace, Scenario,
+    ScheduleCache, Strategy, TelemetryConfig, TenantSpec, TimelineReport,
 };
 use filco::sim::{self, Fabric};
 use filco::workload::{zoo, Dag};
@@ -119,6 +127,7 @@ COMMANDS
   codegen   write instruction binaries + schedule.json + dataflow.h
   gantt     ASCII per-unit utilization timeline from the fabric sim
   serve     multi-tenant serving on the live re-composable fabric
+  trace     inspect a recorded serve trace (summarize | replay)
   help      this reference
 
 FLAGS (dse / sim / disasm / codegen / gantt)
@@ -155,9 +164,31 @@ FLAGS (serve)
   --cache-file P  schedule-cache persistence: load on startup, save on
                   shutdown, so restarts never re-run the DSE for a
                   composition seen before
+  --trace-out P   record the engine event stream (admissions, batch
+                  lifecycle, every composition transition) to P as a
+                  replayable JSONL trace: header, one event per line,
+                  then the run's full report as the footer. sim mode
+                  records the strategy --strategy selects (the dynamic
+                  row of the comparison by default); live mode records
+                  the run itself
+  --timeline-out P  dump the per-epoch metrics timeline to P (JSONL):
+                  per-tenant queue depth / backlog / token-bucket
+                  level, partition weights, pack shapes, cache
+                  hit/miss totals, and each policy decision with the
+                  margin that approved or declined it (dynamic
+                  strategy only — fixed compositions run no epochs)
+
+FLAGS (trace)
+  filco trace summarize <path>   header, per-kind event counts, span,
+                                 and the recorded report
+  filco trace replay <path>      rebuild the report from the event
+                                 stream and hold it to the recorded
+                                 footer bit-for-bit; exit 1 on any
+                                 mismatch
 
 EXAMPLE (end to end, copy-pasteable)
-  filco serve --mode sim --requests 600 --pack on --cache-file /tmp/filco-cache.json"
+  filco serve --mode sim --requests 600 --pack on --trace-out /tmp/filco-trace.jsonl
+  filco trace replay /tmp/filco-trace.jsonl"
     );
 }
 
@@ -293,6 +324,10 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         }
     };
 
+    let trace_out = flags.get("trace-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
+    let timeline_out =
+        flags.get("timeline-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
+
     let platform = Platform::vck190();
     let base = FilcoConfig::default_for(&platform);
     let cache = Arc::new(ScheduleCache::new(ScheduleCache::serving_solver()));
@@ -349,8 +384,48 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             Some("dynamic") => vec![Strategy::Dynamic(policy)],
             _ => vec![Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)],
         };
+        // Telemetry attaches to one row: the strategy --strategy
+        // selects, or the dynamic row of the three-way comparison.
+        let recorded_label = match strategy_flag {
+            Some("unified") => "unified",
+            Some("static") => "static-equal",
+            _ => "dynamic",
+        };
         for strat in strategies {
-            let rep = simulate(&sc, &strat, &cache);
+            let record_here = (trace_out.is_some() || timeline_out.is_some())
+                && strat.label() == recorded_label;
+            let rep = if record_here {
+                let tcfg = TelemetryConfig {
+                    trace: trace_out.is_some(),
+                    timeline: timeline_out.is_some(),
+                };
+                let (rep, tel) = simulate_instrumented(&sc, &strat, &cache, &tcfg);
+                let names: Vec<String> = sc.tenants.iter().map(|t| t.name.clone()).collect();
+                if let (Some(path), Some(events)) = (&trace_out, &tel.trace) {
+                    match write_trace(path, strat.label(), &names, events, &rep) {
+                        Ok(()) => println!(
+                            "trace: {} events -> {}",
+                            events.len(),
+                            path.display()
+                        ),
+                        Err(e) => eprintln!("trace: write to {} failed: {e}", path.display()),
+                    }
+                }
+                if let (Some(path), Some(tl)) = (&timeline_out, &tel.timeline) {
+                    match tl.save_to(path) {
+                        Ok(()) => println!("{} -> {}", tl.summary(), path.display()),
+                        Err(e) => eprintln!("timeline: write to {} failed: {e}", path.display()),
+                    }
+                }
+                println!(
+                    "profile: {} engine steps, {:.0} ns/step",
+                    tel.step_profile.steps,
+                    tel.step_profile.ns_per_step()
+                );
+                rep
+            } else {
+                simulate(&sc, &strat, &cache)
+            };
             println!("{}", rep.summary());
             for (t, h) in sc.tenants.iter().zip(&rep.histograms) {
                 println!("    {:<9} p50 {:.3e} s  p95 {:.3e} s  p99 {:.3e} s",
@@ -393,6 +468,12 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     };
     let sched = FabricScheduler::new(platform, base, specs(), cache.clone(), cfg)
         .expect("build scheduler");
+    if trace_out.is_some() {
+        sched.record_trace(true);
+    }
+    if timeline_out.is_some() {
+        sched.record_timeline(true);
+    }
     println!("composition at start: {:?}", sched.composition());
     std::thread::scope(|s| {
         let producer = s.spawn(|| {
@@ -423,7 +504,62 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             println!("admission control rejected {rejected} requests");
         }
     });
+    if trace_out.is_some() || timeline_out.is_some() {
+        let names: Vec<String> =
+            sched.composition().into_iter().map(|(name, _, _)| name).collect();
+        if let Some(path) = &trace_out {
+            let events = sched.take_trace();
+            let rep = sched.serve_report();
+            match write_trace(path, &rep.strategy, &names, &events, &rep) {
+                Ok(()) => println!("trace: {} events -> {}", events.len(), path.display()),
+                Err(e) => eprintln!("trace: write to {} failed: {e}", path.display()),
+            }
+        }
+        if let Some(path) = &timeline_out {
+            let tl = TimelineReport { tenants: names, samples: sched.take_timeline() };
+            match tl.save_to(path) {
+                Ok(()) => println!("{} -> {}", tl.summary(), path.display()),
+                Err(e) => eprintln!("timeline: write to {} failed: {e}", path.display()),
+            }
+        }
+    }
     save_cache(&cache);
+}
+
+/// `filco trace summarize|replay <path>` — inspect a recorded trace.
+fn cmd_trace(args: &[String]) {
+    let action = args.first().map(String::as_str);
+    let path = args.get(1).map(std::path::PathBuf::from);
+    let (action, path) = match (action, path) {
+        (Some(a @ ("summarize" | "replay")), Some(p)) => (a, p),
+        _ => {
+            eprintln!("usage: filco trace summarize|replay <trace.jsonl>");
+            std::process::exit(2);
+        }
+    };
+    let trace = match RecordedTrace::load(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trace: cannot load {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    };
+    match action {
+        "summarize" => println!("{}", trace.summarize()),
+        _ => match trace.verify() {
+            Ok(rep) => {
+                println!(
+                    "replay OK: {} events reproduce the recorded report bit-for-bit",
+                    trace.events.len()
+                );
+                println!("{}", rep.summary());
+            }
+            Err(e) => {
+                eprintln!("replay MISMATCH: {e}");
+                std::process::exit(1);
+            }
+        },
+    }
 }
 
 fn main() {
@@ -437,6 +573,7 @@ fn main() {
         "disasm" => cmd_disasm(&flags),
         "codegen" => cmd_codegen(&flags),
         "serve" => cmd_serve(&flags),
+        "trace" => cmd_trace(&args[1..]),
         "gantt" => cmd_gantt(&flags),
         "help" | "--help" | "-h" => print_usage(),
         other => {

@@ -162,6 +162,9 @@ pub struct ScheduleCache {
     inner: Mutex<HashMap<Key, Arc<CachedSchedule>>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    lookup_ns: AtomicU64,
+    solve_ns: AtomicU64,
+    solve_count: AtomicU64,
 }
 
 impl ScheduleCache {
@@ -173,6 +176,9 @@ impl ScheduleCache {
             inner: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            lookup_ns: AtomicU64::new(0),
+            solve_ns: AtomicU64::new(0),
+            solve_count: AtomicU64::new(0),
         }
     }
 
@@ -196,16 +202,25 @@ impl ScheduleCache {
             platform: platform_fingerprint(platform),
             dag: dag_fingerprint(dag),
         };
+        // Timing below is observability-only: the counters are never
+        // read by any scheduling decision, so wall-clock jitter cannot
+        // perturb the deterministic fabric-time trace.
+        let t0 = std::time::Instant::now();
         if let Some(hit) = self.inner.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
+            self.lookup_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             return hit.clone();
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        self.lookup_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         // Known trade-off: two threads missing on the same key both run
         // the DSE and one result is discarded. In practice one policy
         // thread is the only writer; if that changes, add an in-flight
         // marker so the second caller waits instead of recomputing.
+        let t1 = std::time::Instant::now();
         let schedule = dse::two_stage(platform, cfg, dag, self.solver);
+        self.solve_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.solve_count.fetch_add(1, Ordering::Relaxed);
         let cached = Arc::new(CachedSchedule::new(schedule));
         let mut map = self.inner.lock().unwrap();
         // A racing thread may have inserted meanwhile; keep one copy.
@@ -220,6 +235,24 @@ impl ScheduleCache {
     /// Lookups that had to run the two-stage DSE so far.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative wall time spent in map lookups (both hits and
+    /// misses), nanoseconds. Profiling only — never read by decisions.
+    pub fn lookup_ns(&self) -> u64 {
+        self.lookup_ns.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative wall time spent inside the two-stage DSE on misses,
+    /// nanoseconds. Profiling only — never read by decisions.
+    pub fn solve_ns(&self) -> u64 {
+        self.solve_ns.load(Ordering::Relaxed)
+    }
+
+    /// Number of DSE solves timed into [`Self::solve_ns`] (one per
+    /// miss, counted when the solve finishes).
+    pub fn solve_count(&self) -> u64 {
+        self.solve_count.load(Ordering::Relaxed)
     }
 
     /// Number of distinct `(config, dag)` schedules held.

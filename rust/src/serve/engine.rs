@@ -88,6 +88,7 @@ use super::policy::{
     should_preempt, should_resplit, should_unpack, PolicyConfig,
 };
 use super::queue::PushError;
+use super::telemetry::{DecisionKind, DecisionSample, EpochSample, TenantSample};
 use super::tenant::{admit_arrival, Arrival, BatchCursor, TenantSpec, TokenBucket};
 
 /// One observable state change of the engine, stamped with the fabric
@@ -96,6 +97,21 @@ use super::tenant::{admit_arrival, Arrival, BatchCursor, TenantSpec, TokenBucket
 /// deterministic arithmetic, never by a driver's clock.
 #[derive(Debug, Clone, PartialEq)]
 pub enum EngineEvent {
+    /// A request passed admission control and joined its tenant's
+    /// pending queue. Recorded into the trace only (never in a step's
+    /// returned event buffer, like the refusal events): together with
+    /// [`Self::BatchDone`] it makes a recorded trace self-contained —
+    /// per-tenant FIFO pairing of admissions with completions
+    /// reproduces every latency record bit-for-bit (see
+    /// [`telemetry`](super::telemetry)).
+    Admitted {
+        /// Tenant whose request was admitted.
+        tenant: usize,
+        /// The request's caller-assigned id.
+        id: u64,
+        /// Fabric instant the request arrived at.
+        at_s: f64,
+    },
     /// A batch left a tenant's pending queue and began executing.
     BatchStarted {
         /// Tenant whose batch started.
@@ -332,6 +348,13 @@ pub struct FabricEngine {
     /// retirement; the simulator keeps the oracle's lazier gating).
     eager_completions: bool,
     trace: Option<Vec<EngineEvent>>,
+    /// `Some` while timeline sampling is on: one [`EpochSample`] per
+    /// policy epoch evaluated.
+    timeline: Option<Vec<EpochSample>>,
+    /// Decisions evaluated since the current epoch's sample was built
+    /// — bridges [`Self::apply_resplit`]'s per-tenant preemption
+    /// verdicts into the epoch's sample.
+    epoch_decisions: Vec<DecisionSample>,
 }
 
 impl FabricEngine {
@@ -478,6 +501,8 @@ impl FabricEngine {
             drained_completion: 0.0,
             eager_completions: false,
             trace: None,
+            timeline: None,
+            epoch_decisions: Vec::new(),
             specs,
         }
     }
@@ -494,6 +519,22 @@ impl FabricEngine {
     /// [`Self::record_trace`] was enabled).
     pub fn take_trace(&mut self) -> Vec<EngineEvent> {
         self.trace.take().unwrap_or_default()
+    }
+
+    /// Sample engine state and policy decisions at every epoch into an
+    /// [`EpochSample`] timeline, retrievable with
+    /// [`Self::take_timeline`] (off by default). Sampling reads state
+    /// the epoch already computed and never feeds anything back, so it
+    /// cannot change any decision.
+    pub fn record_timeline(&mut self, on: bool) {
+        self.timeline = if on { Some(Vec::new()) } else { None };
+        self.epoch_decisions.clear();
+    }
+
+    /// The epoch samples recorded so far (empty unless
+    /// [`Self::record_timeline`] was enabled).
+    pub fn take_timeline(&mut self) -> Vec<EpochSample> {
+        self.timeline.take().unwrap_or_default()
     }
 
     /// Schedule completion events for in-flight solo batches even when
@@ -532,7 +573,10 @@ impl FabricEngine {
                 self.throttled[tenant] += 1;
                 self.emit(EngineEvent::Throttled { tenant, at_s: arr_s });
             }
-            Err(PushError::Closed) | Ok(()) => {}
+            Ok(()) => {
+                self.emit(EngineEvent::Admitted { tenant, id, at_s: arr_s });
+            }
+            Err(PushError::Closed) => {}
         }
         res
     }
@@ -907,12 +951,29 @@ impl FabricEngine {
             .collect();
         let total_backlog: f64 = backlog.iter().sum();
         let mut grouping_changed = false;
+        let sample_on = self.timeline.is_some();
         if pack_on {
             // Unpack transitions: mark overloaded groups, dissolve the
             // drained ones.
             for pk in &mut self.packs {
+                if pk.unpacking {
+                    continue;
+                }
                 let combined: f64 = pk.members.iter().map(|&m| backlog[m]).sum();
-                if !pk.unpacking && should_unpack(combined, p.epoch_s, &p) {
+                let approved = should_unpack(combined, p.epoch_s, &p);
+                if sample_on {
+                    // Signed distance past the unpack hysteresis bound
+                    // (`should_unpack`'s terms, both sides in scaled
+                    // fabric seconds).
+                    self.epoch_decisions.push(DecisionSample {
+                        kind: DecisionKind::Unpack,
+                        tenants: pk.members.clone(),
+                        margin_s: combined * p.pack_headroom_factor
+                            - p.pack_unpack_factor * p.epoch_s,
+                        approved,
+                    });
+                }
+                if approved {
                     pk.unpacking = true;
                 }
             }
@@ -943,7 +1004,19 @@ impl FabricEngine {
                     .map(|&m| (self.per_req[m], self.scheds[m].steps.len()))
                     .collect();
                 let quantum_s = pack_quantum_s(p.pack_quantum_steps, &cand);
-                if should_pack(combined, p.epoch_s, quantum_s, switch_cost, &p) {
+                let approved = should_pack(combined, p.epoch_s, quantum_s, switch_cost, &p);
+                if sample_on {
+                    // The fit margin (`should_pack`'s first gate); the
+                    // swap-amortization gate can still decline a
+                    // positive fit, reflected in `approved`.
+                    self.epoch_decisions.push(DecisionSample {
+                        kind: DecisionKind::Pack,
+                        tenants: members.clone(),
+                        margin_s: p.epoch_s - combined * p.pack_headroom_factor,
+                        approved,
+                    });
+                }
+                if approved {
                     grouping_changed |= self.apply(Transition::Pack { members }, now, cache, out);
                 }
             }
@@ -956,9 +1029,44 @@ impl FabricEngine {
         let proposed = backlog_weights(&group_backlog, p.max_weight);
         let resplit = grouping_changed
             || should_resplit(&self.weights, &proposed, total_backlog, switch_cost, &p);
+        if sample_on {
+            // The backlog-hysteresis margin; an equal-split restore or
+            // a grouping change approves the re-split regardless.
+            self.epoch_decisions.push(DecisionSample {
+                kind: DecisionKind::Resplit,
+                tenants: Vec::new(),
+                margin_s: total_backlog - p.min_backlog_factor * switch_cost,
+                approved: resplit,
+            });
+        }
         let mut applied = false;
         if resplit {
             applied = self.apply(Transition::Resplit { weights: proposed }, now, cache, out);
+        }
+        if sample_on {
+            // Built at the end of the epoch: the weights and pack
+            // shapes reflect this epoch's transitions, while the
+            // backlog vector is the pre-transition signal the
+            // decisions above actually ran on.
+            let sample = EpochSample {
+                epoch: self.epochs,
+                at_s: now,
+                tenants: (0..t_n)
+                    .map(|t| TenantSample {
+                        queue_depth: self.pending[t].len(),
+                        backlog_s: backlog[t],
+                        bucket_tokens: self.buckets[t].as_ref().map(TokenBucket::tokens),
+                    })
+                    .collect(),
+                weights: self.weights.clone(),
+                pack_shapes: self.packs.iter().map(|pk| pk.members.clone()).collect(),
+                cache_hits: cache.hits(),
+                cache_misses: cache.misses(),
+                decisions: std::mem::take(&mut self.epoch_decisions),
+            };
+            if let Some(tl) = self.timeline.as_mut() {
+                tl.push(sample);
+            }
         }
         grouping_changed || applied
     }
@@ -1156,8 +1264,9 @@ impl FabricEngine {
             }
             let t = g[0];
             let new_sched = cache.get_or_compute(&self.platform, &slice, &self.specs[t].dag);
-            let preempt = preempt_on
-                && self.busy[t].as_ref().is_some_and(|fl| {
+            let mut preempt = false;
+            if preempt_on {
+                if let Some(fl) = self.busy[t].as_ref() {
                     // A potential switch lands at the next layer
                     // boundary; everything before it runs on the old
                     // slice either way, so compare the paths from
@@ -1170,8 +1279,22 @@ impl FabricEngine {
                         fl.cursor.peek_consumed_s().map_or(fl.fin_s(), |c| fl.start_s + c);
                     let rem_old = (fl.fin_s() - boundary_s).max(0.0);
                     let rem_new = fl.cursor.remaining_on(&new_sched);
-                    should_preempt(rem_old, rem_new, switch, &p)
-                });
+                    preempt = should_preempt(rem_old, rem_new, switch, &p);
+                    if self.timeline.is_some() {
+                        // `should_preempt`'s benefit term minus its
+                        // margin threshold, in fabric seconds.
+                        self.epoch_decisions.push(DecisionSample {
+                            kind: DecisionKind::Preempt,
+                            tenants: vec![t],
+                            margin_s: rem_old
+                                - rem_new
+                                - switch
+                                - p.preempt_margin_factor * switch,
+                            approved: preempt,
+                        });
+                    }
+                }
+            }
             if preempt {
                 // Land the switch at the next layer boundary: steps
                 // that retired by `now` stay on the old slice's

@@ -94,6 +94,11 @@
 //! * [`scheduler`] — the live driver: producer ingress, worker and
 //!   policy thread shells, wall-clock latency accounting,
 //!   [`LiveReport`].
+//! * [`telemetry`] — observability over everything above: the
+//!   persistent [`EngineEvent`] trace format ([`TraceSink`] /
+//!   [`RecordedTrace`], JSONL, replayable bit-for-bit into the
+//!   originating [`ServeReport`]), the per-epoch metrics timeline
+//!   ([`TimelineReport`]), and step-loop profiling ([`StepProfile`]).
 //!
 //! The single-model serving leader ([`Server`]) and its building blocks
 //! ([`Servable`], [`Request`], [`RequestQueue`], [`Metrics`]) are
@@ -108,6 +113,7 @@ pub mod policy;
 pub mod queue;
 pub mod scheduler;
 pub mod sim;
+pub mod telemetry;
 pub mod tenant;
 
 pub use crate::coordinator::metrics::{LatencyHistogram, Metrics};
@@ -124,7 +130,13 @@ pub use policy::{
 pub use queue::{BoundedQueue, PushError};
 pub use scheduler::{FabricScheduler, LiveConfig, LiveMode, LiveReport, LiveRequest, TenantReport};
 pub use sim::{
-    equal_split_per_request, simulate, simulate_traced, Scenario, ServeReport, Strategy,
+    equal_split_per_request, simulate, simulate_instrumented, simulate_traced, Scenario,
+    ServeReport, Strategy,
+};
+pub use telemetry::{
+    event_from_json, event_to_json, report_from_json, report_to_json, trace_to_jsonl, write_trace,
+    DecisionKind, DecisionSample, EpochSample, RecordedTrace, RunTelemetry, StepProfile,
+    TelemetryConfig, TenantSample, TimelineReport, TraceSink, TRACE_VERSION,
 };
 pub use tenant::{
     batch_fabric_s, phased_trace, poisson_trace, Arrival, BatchCursor, CursorCheckpoint,

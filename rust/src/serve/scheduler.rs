@@ -425,6 +425,42 @@ impl FabricScheduler {
         self.shared.lock().unwrap().engine.take_trace()
     }
 
+    /// Enable or disable engine event tracing for this run (on by
+    /// construction in [`Self::with_arrivals`]; call before
+    /// [`Self::run`] to capture a trace from an externally-pushed live
+    /// run, e.g. `filco serve --mode live --trace-out`).
+    pub fn record_trace(&self, on: bool) {
+        self.shared.lock().unwrap().engine.record_trace(on);
+    }
+
+    /// Enable or disable per-epoch timeline sampling
+    /// ([`super::telemetry::EpochSample`]). Only meaningful in
+    /// [`LiveMode::Dynamic`] — fixed compositions run no policy epochs,
+    /// so their timelines stay empty.
+    pub fn record_timeline(&self, on: bool) {
+        self.shared.lock().unwrap().engine.record_timeline(on);
+    }
+
+    /// The epoch samples recorded so far (empty unless
+    /// [`Self::record_timeline`] was enabled). Call after [`Self::run`]
+    /// returns.
+    pub fn take_timeline(&self) -> Vec<super::telemetry::EpochSample> {
+        self.shared.lock().unwrap().engine.take_timeline()
+    }
+
+    /// The engine-side fabric-time report for this run, in the same
+    /// shape the simulator emits ([`super::ServeReport`]) — the footer a
+    /// recorded live trace is verified against. Call after
+    /// [`Self::run`] returns.
+    pub fn serve_report(&self) -> super::ServeReport {
+        let label = match self.cfg.mode {
+            LiveMode::Unified => "unified",
+            LiveMode::StaticEqual => "static-equal",
+            LiveMode::Dynamic => "dynamic",
+        };
+        super::sim::report_from_engine(&self.shared.lock().unwrap().engine, label)
+    }
+
     /// Record wall latencies for the batches an engine step completed.
     fn record(s: &mut Shared, events: &[EngineEvent]) {
         for ev in events {

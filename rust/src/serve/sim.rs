@@ -38,6 +38,7 @@ use super::cache::ScheduleCache;
 use super::clock::{Clock, VirtualClock};
 use super::engine::{EngineEvent, FabricEngine};
 use super::policy::PolicyConfig;
+use super::telemetry::{RunTelemetry, TelemetryConfig, TimelineReport};
 use super::tenant::{Arrival, TenantSpec};
 
 /// How the fabric is composed for the tenants.
@@ -202,6 +203,24 @@ pub fn simulate_traced(
     cache: &ScheduleCache,
     record_trace: bool,
 ) -> (ServeReport, Vec<EngineEvent>) {
+    let tcfg = TelemetryConfig { trace: record_trace, timeline: false };
+    let (report, telemetry) = simulate_instrumented(scenario, strategy, cache, &tcfg);
+    (report, telemetry.trace.unwrap_or_default())
+}
+
+/// Like [`simulate`], recording whatever `telemetry` asks for: the
+/// full [`EngineEvent`] trace, the per-epoch metrics timeline, and
+/// (always) the wall-time step profile. The profile times each
+/// `FabricEngine::step` call around the otherwise-identical driver
+/// loop; nothing it measures is ever read by a decision, so an
+/// instrumented run's report and trace are bit-identical to an
+/// uninstrumented one's.
+pub fn simulate_instrumented(
+    scenario: &Scenario,
+    strategy: &Strategy,
+    cache: &ScheduleCache,
+    telemetry: &TelemetryConfig,
+) -> (ServeReport, RunTelemetry) {
     let mut engine = match strategy {
         Strategy::Unified => FabricEngine::new_unified(
             scenario.platform.clone(),
@@ -228,21 +247,33 @@ pub fn simulate_traced(
         }
     }
     .expect("engine setup");
-    engine.record_trace(record_trace);
+    engine.record_trace(telemetry.trace);
+    engine.record_timeline(telemetry.timeline);
+    let mut profile = super::telemetry::StepProfile::default();
+    let mut timed_step = |engine: &mut FabricEngine, now: f64| {
+        let t0 = std::time::Instant::now();
+        engine.step(now, cache);
+        profile.record_ns(t0.elapsed().as_nanos() as u64);
+    };
     // The thin driver loop: the engine decides *what* happens at each
     // fabric instant; the virtual clock merely jumps there.
     let mut clock = VirtualClock::new();
-    engine.step(clock.now_s(), cache);
+    timed_step(&mut engine, clock.now_s());
     while let Some(t) = engine.next_time() {
         clock.advance_to(t);
-        engine.step(clock.now_s(), cache);
+        timed_step(&mut engine, clock.now_s());
     }
     engine.finish();
     let report = report_from_engine(&engine, strategy.label());
-    (report, engine.take_trace())
+    let timeline = telemetry.timeline.then(|| TimelineReport {
+        tenants: scenario.tenants.iter().map(|t| t.name.clone()).collect(),
+        samples: engine.take_timeline(),
+    });
+    let trace = telemetry.trace.then(|| engine.take_trace());
+    (report, RunTelemetry { trace, timeline, step_profile: profile })
 }
 
-fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeReport {
+pub(crate) fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeReport {
     ServeReport {
         strategy: label.to_string(),
         completion_s: engine.completion_s(),

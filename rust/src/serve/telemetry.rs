@@ -1,0 +1,1038 @@
+//! Persistent fabric telemetry: recorded [`EngineEvent`] traces with
+//! bit-exact replay, the per-epoch metrics timeline, and the step-loop
+//! profiling counters behind the committed `BENCH_*.json` snapshots.
+//!
+//! # Trace format
+//!
+//! A trace is JSONL — one self-contained JSON object per line, written
+//! through [`crate::util::json`] (so a line can never be malformed:
+//! control characters are escaped and non-finite floats serialize as
+//! `null`):
+//!
+//! 1. a `{"kind":"header",...}` line with the format version
+//!    ([`TRACE_VERSION`]), the strategy label, and the tenant names;
+//! 2. one `{"kind":"event",...}` line per [`EngineEvent`] in engine
+//!    emission order, each stamped with its fabric instant;
+//! 3. a `{"kind":"summary",...}` footer carrying the originating run's
+//!    full [`ServeReport`], histograms included.
+//!
+//! # Replay guarantee
+//!
+//! [`RecordedTrace::replay`] reconstructs a [`ServeReport`] from the
+//! event stream alone (plus the footer's few non-derivable fields, see
+//! below), and [`RecordedTrace::verify`] holds it to the footer
+//! *bit-for-bit*: served/rejected/throttled counts, every transition
+//! counter, and every latency histogram bucket, sum, min and max must
+//! match exactly — the same discipline as the live-vs-sim differential
+//! in `rust/tests/serve_engine.rs`. Two properties make this possible:
+//!
+//! * the engine admits and retires batches per tenant in FIFO order,
+//!   so pairing each [`EngineEvent::BatchDone`] with the oldest
+//!   un-served [`EngineEvent::Admitted`] arrivals reproduces the exact
+//!   latency each request's histogram record was computed from;
+//! * every `f64` the engine stamps round-trips JSON exactly (shortest
+//!   round-trip formatting on write, `str::parse::<f64>` on read).
+//!
+//! Three counters are carried from the footer rather than recomputed,
+//! because the event stream does not determine them: `completion_s`
+//! (trailing reprogram charges on slice availability can land after
+//! the last `BatchDone`), `epochs` (an epoch that decides nothing
+//! emits no event), and `pack_swaps` (interleaver context swaps sit
+//! below event granularity).
+//!
+//! # Timeline
+//!
+//! The engine can additionally sample its state at every policy epoch
+//! ([`EpochSample`]): per-tenant queue depth, backlog seconds and
+//! token-bucket level, the partition weights and pack-group shapes in
+//! force, schedule-cache hit/miss totals, and every policy decision
+//! evaluated that epoch with the signed margin that approved or
+//! declined it ([`DecisionSample`]). A run's samples are exposed as a
+//! [`TimelineReport`], dumpable as JSONL alongside the trace.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::util::json::Json;
+
+use super::engine::EngineEvent;
+use super::sim::ServeReport;
+
+/// Format version written into trace headers; [`RecordedTrace::parse`]
+/// refuses anything else.
+pub const TRACE_VERSION: u64 = 1;
+
+// ---- JSON helpers ----------------------------------------------------------
+
+fn jnum(x: f64) -> Json {
+    Json::Num(x)
+}
+
+fn junum(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+fn f64_of(v: &Json, k: &str) -> Result<f64, String> {
+    v.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing number {k:?}"))
+}
+
+fn u64_of(v: &Json, k: &str) -> Result<u64, String> {
+    v.get(k).and_then(Json::as_u64).ok_or_else(|| format!("missing integer {k:?}"))
+}
+
+fn str_of(v: &Json, k: &str) -> Result<String, String> {
+    v.get(k)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string {k:?}"))
+}
+
+fn u64_arr_of(v: &Json, k: &str) -> Result<Vec<u64>, String> {
+    v.get(k)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("missing array {k:?}"))?
+        .iter()
+        .map(|x| x.as_u64().ok_or_else(|| format!("non-integer entry in {k:?}")))
+        .collect()
+}
+
+fn usize_arr_of(v: &Json, k: &str) -> Result<Vec<usize>, String> {
+    Ok(u64_arr_of(v, k)?.into_iter().map(|x| x as usize).collect())
+}
+
+// ---- event (de)serialization -----------------------------------------------
+
+/// Serialize one [`EngineEvent`] to its `{"kind":"event",...}` trace
+/// line value. Inverse of [`event_from_json`].
+pub fn event_to_json(ev: &EngineEvent) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), jstr("event"));
+    let name = match ev {
+        EngineEvent::Admitted { tenant, id, at_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("id".to_string(), junum(*id));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "admitted"
+        }
+        EngineEvent::BatchStarted { tenant, n, at_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("n".to_string(), junum(*n as u64));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "batch_started"
+        }
+        EngineEvent::BatchDone { tenant, n, at_s, consumed_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("n".to_string(), junum(*n as u64));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            m.insert("consumed_s".to_string(), jnum(*consumed_s));
+            "batch_done"
+        }
+        EngineEvent::Rejected { tenant, at_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "rejected"
+        }
+        EngineEvent::Throttled { tenant, at_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "throttled"
+        }
+        EngineEvent::Resplit { weights, at_s } => {
+            m.insert(
+                "weights".to_string(),
+                Json::Arr(weights.iter().map(|&w| junum(w as u64)).collect()),
+            );
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "resplit"
+        }
+        EngineEvent::Preempted { tenant, at_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "preempted"
+        }
+        EngineEvent::Packed { members, at_s } => {
+            m.insert(
+                "members".to_string(),
+                Json::Arr(members.iter().map(|&t| junum(t as u64)).collect()),
+            );
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "packed"
+        }
+        EngineEvent::PackHandoff { tenant, consumed_s, at_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("consumed_s".to_string(), jnum(*consumed_s));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "pack_handoff"
+        }
+        EngineEvent::Unpacked { members, at_s } => {
+            m.insert(
+                "members".to_string(),
+                Json::Arr(members.iter().map(|&t| junum(t as u64)).collect()),
+            );
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "unpacked"
+        }
+        EngineEvent::Unified { at_s } => {
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "unified"
+        }
+    };
+    m.insert("ev".to_string(), jstr(name));
+    Json::Obj(m)
+}
+
+/// Parse one `{"kind":"event",...}` trace line value back into an
+/// [`EngineEvent`]. Inverse of [`event_to_json`].
+pub fn event_from_json(v: &Json) -> Result<EngineEvent, String> {
+    let ev = str_of(v, "ev")?;
+    let tenant = || u64_of(v, "tenant").map(|t| t as usize);
+    let at_s = f64_of(v, "at_s")?;
+    match ev.as_str() {
+        "admitted" => Ok(EngineEvent::Admitted { tenant: tenant()?, id: u64_of(v, "id")?, at_s }),
+        "batch_started" => Ok(EngineEvent::BatchStarted {
+            tenant: tenant()?,
+            n: u64_of(v, "n")? as usize,
+            at_s,
+        }),
+        "batch_done" => Ok(EngineEvent::BatchDone {
+            tenant: tenant()?,
+            n: u64_of(v, "n")? as usize,
+            at_s,
+            consumed_s: f64_of(v, "consumed_s")?,
+        }),
+        "rejected" => Ok(EngineEvent::Rejected { tenant: tenant()?, at_s }),
+        "throttled" => Ok(EngineEvent::Throttled { tenant: tenant()?, at_s }),
+        "resplit" => Ok(EngineEvent::Resplit {
+            weights: u64_arr_of(v, "weights")?.into_iter().map(|w| w as u32).collect(),
+            at_s,
+        }),
+        "preempted" => Ok(EngineEvent::Preempted { tenant: tenant()?, at_s }),
+        "packed" => Ok(EngineEvent::Packed { members: usize_arr_of(v, "members")?, at_s }),
+        "pack_handoff" => Ok(EngineEvent::PackHandoff {
+            tenant: tenant()?,
+            consumed_s: f64_of(v, "consumed_s")?,
+            at_s,
+        }),
+        "unpacked" => Ok(EngineEvent::Unpacked { members: usize_arr_of(v, "members")?, at_s }),
+        "unified" => Ok(EngineEvent::Unified { at_s }),
+        other => Err(format!("unknown event kind {other:?}")),
+    }
+}
+
+// ---- report (de)serialization ----------------------------------------------
+
+fn hist_to_json(h: &LatencyHistogram) -> Json {
+    let mut m = BTreeMap::new();
+    // Trailing zero buckets are trimmed ([`LatencyHistogram::from_parts`]
+    // zero-pads them back), keeping footer lines compact.
+    let buckets = h.buckets();
+    let last = buckets.iter().rposition(|&c| c != 0).map_or(0, |i| i + 1);
+    m.insert(
+        "buckets".to_string(),
+        Json::Arr(buckets[..last].iter().map(|&c| junum(c)).collect()),
+    );
+    m.insert("sum_s".to_string(), jnum(h.sum_s()));
+    if h.count() > 0 {
+        // An empty histogram's min/max sentinels are ±inf, which would
+        // serialize as null; omitting them round-trips cleanly instead.
+        m.insert("min_s".to_string(), jnum(h.min_s()));
+        m.insert("max_s".to_string(), jnum(h.max_s()));
+    }
+    Json::Obj(m)
+}
+
+fn hist_from_json(v: &Json) -> Result<LatencyHistogram, String> {
+    let buckets = u64_arr_of(v, "buckets")?;
+    let sum_s = f64_of(v, "sum_s")?;
+    let nonempty = buckets.iter().any(|&c| c != 0);
+    let (min_s, max_s) = if nonempty {
+        (f64_of(v, "min_s")?, f64_of(v, "max_s")?)
+    } else {
+        (0.0, 0.0)
+    };
+    LatencyHistogram::from_parts(&buckets, sum_s, min_s, max_s)
+        .ok_or_else(|| format!("histogram has {} buckets, more than the layout", buckets.len()))
+}
+
+/// Serialize a full [`ServeReport`] to the `{"kind":"summary",...}`
+/// trace footer value. Inverse of [`report_from_json`].
+pub fn report_to_json(r: &ServeReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), jstr("summary"));
+    m.insert("strategy".to_string(), jstr(&r.strategy));
+    m.insert("completion_s".to_string(), jnum(r.completion_s));
+    m.insert("served".to_string(), Json::Arr(r.served.iter().map(|&x| junum(x)).collect()));
+    m.insert("rejected".to_string(), Json::Arr(r.rejected.iter().map(|&x| junum(x)).collect()));
+    m.insert(
+        "throttled".to_string(),
+        Json::Arr(r.throttled.iter().map(|&x| junum(x)).collect()),
+    );
+    m.insert("switches".to_string(), junum(r.switches));
+    m.insert("preemptions".to_string(), junum(r.preemptions));
+    m.insert("packs".to_string(), junum(r.packs));
+    m.insert("unpacks".to_string(), junum(r.unpacks));
+    m.insert("pack_swaps".to_string(), junum(r.pack_swaps));
+    m.insert(
+        "pack_group_sizes".to_string(),
+        Json::Arr(r.pack_group_sizes.iter().map(|&s| junum(s as u64)).collect()),
+    );
+    m.insert("epochs".to_string(), junum(r.epochs));
+    m.insert("histograms".to_string(), Json::Arr(r.histograms.iter().map(hist_to_json).collect()));
+    Json::Obj(m)
+}
+
+/// Parse a `{"kind":"summary",...}` trace footer value back into a
+/// [`ServeReport`]. Inverse of [`report_to_json`].
+pub fn report_from_json(v: &Json) -> Result<ServeReport, String> {
+    let histograms = v
+        .get("histograms")
+        .and_then(Json::as_arr)
+        .ok_or("summary missing histograms")?
+        .iter()
+        .map(hist_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(ServeReport {
+        strategy: str_of(v, "strategy")?,
+        completion_s: f64_of(v, "completion_s")?,
+        served: u64_arr_of(v, "served")?,
+        rejected: u64_arr_of(v, "rejected")?,
+        throttled: u64_arr_of(v, "throttled")?,
+        switches: u64_of(v, "switches")?,
+        preemptions: u64_of(v, "preemptions")?,
+        packs: u64_of(v, "packs")?,
+        unpacks: u64_of(v, "unpacks")?,
+        pack_swaps: u64_of(v, "pack_swaps")?,
+        pack_group_sizes: usize_arr_of(v, "pack_group_sizes")?,
+        epochs: u64_of(v, "epochs")?,
+        histograms,
+    })
+}
+
+// ---- the trace sink --------------------------------------------------------
+
+/// Incremental JSONL trace writer: header first, then events as they
+/// arrive, then the [`ServeReport`] footer at [`Self::finish`]. Both
+/// drivers buffer events anyway (`FabricEngine::take_trace`), so the
+/// one-shot [`trace_to_jsonl`] / [`write_trace`] wrappers are the
+/// usual entry points; the sink exists for callers that want to
+/// serialize incrementally.
+pub struct TraceSink {
+    text: String,
+}
+
+impl TraceSink {
+    /// Start a trace: writes the header line for `strategy` and the
+    /// tenant names.
+    pub fn new(strategy: &str, tenants: &[String]) -> Self {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), jstr("header"));
+        m.insert("version".to_string(), junum(TRACE_VERSION));
+        m.insert("strategy".to_string(), jstr(strategy));
+        m.insert(
+            "tenants".to_string(),
+            Json::Arr(tenants.iter().map(|t| jstr(t)).collect()),
+        );
+        let mut text = Json::Obj(m).to_string_compact();
+        text.push('\n');
+        Self { text }
+    }
+
+    /// Append one event line.
+    pub fn push(&mut self, ev: &EngineEvent) {
+        self.text.push_str(&event_to_json(ev).to_string_compact());
+        self.text.push('\n');
+    }
+
+    /// Append the summary footer and return the complete JSONL text.
+    pub fn finish(mut self, report: &ServeReport) -> String {
+        self.text.push_str(&report_to_json(report).to_string_compact());
+        self.text.push('\n');
+        self.text
+    }
+}
+
+/// Serialize a complete recorded run (header + events + footer) to
+/// JSONL text. See the module docs for the line schema.
+pub fn trace_to_jsonl(
+    strategy: &str,
+    tenants: &[String],
+    events: &[EngineEvent],
+    report: &ServeReport,
+) -> String {
+    let mut sink = TraceSink::new(strategy, tenants);
+    for ev in events {
+        sink.push(ev);
+    }
+    sink.finish(report)
+}
+
+/// Write `text` to `path` through a sibling temp file and an atomic
+/// rename, so a crash mid-write never leaves a truncated dump behind.
+/// Shared by trace and timeline writers.
+pub fn write_text(path: &Path, text: &str) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Serialize a recorded run and write it to `path` (JSONL, atomic
+/// rename). Convenience over [`trace_to_jsonl`] + [`write_text`].
+pub fn write_trace(
+    path: &Path,
+    strategy: &str,
+    tenants: &[String],
+    events: &[EngineEvent],
+    report: &ServeReport,
+) -> std::io::Result<()> {
+    write_text(path, &trace_to_jsonl(strategy, tenants, events, report))
+}
+
+// ---- the loader / replayer -------------------------------------------------
+
+/// A parsed trace: header metadata, the full event stream, and the
+/// originating run's [`ServeReport`] footer.
+pub struct RecordedTrace {
+    /// Strategy label from the header line.
+    pub strategy: String,
+    /// Tenant names from the header line (index = tenant id).
+    pub tenants: Vec<String>,
+    /// The recorded [`EngineEvent`] stream, in emission order.
+    pub events: Vec<EngineEvent>,
+    /// The originating run's report, from the summary footer.
+    pub report: ServeReport,
+}
+
+impl RecordedTrace {
+    /// Parse a JSONL trace produced by [`trace_to_jsonl`] /
+    /// [`write_trace`]. Strict: the header must come first with a
+    /// supported version, every line must parse, and the summary
+    /// footer must be present and last.
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut strategy = None;
+        let mut tenants = Vec::new();
+        let mut events = Vec::new();
+        let mut report = None;
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+            let kind = str_of(&v, "kind").map_err(|e| format!("line {}: {e}", i + 1))?;
+            if report.is_some() {
+                return Err(format!("line {}: content after the summary footer", i + 1));
+            }
+            match kind.as_str() {
+                "header" => {
+                    if strategy.is_some() {
+                        return Err(format!("line {}: duplicate header", i + 1));
+                    }
+                    match u64_of(&v, "version")? {
+                        TRACE_VERSION => {}
+                        other => return Err(format!("unsupported trace version {other}")),
+                    }
+                    strategy = Some(str_of(&v, "strategy")?);
+                    tenants = v
+                        .get("tenants")
+                        .and_then(Json::as_arr)
+                        .ok_or("header missing tenants")?
+                        .iter()
+                        .map(|t| t.as_str().map(str::to_string).ok_or("non-string tenant name"))
+                        .collect::<Result<Vec<_>, _>>()?;
+                }
+                "event" => {
+                    if strategy.is_none() {
+                        return Err(format!("line {}: event before the header", i + 1));
+                    }
+                    events.push(event_from_json(&v).map_err(|e| format!("line {}: {e}", i + 1))?);
+                }
+                "summary" => {
+                    report =
+                        Some(report_from_json(&v).map_err(|e| format!("line {}: {e}", i + 1))?);
+                }
+                other => return Err(format!("line {}: unknown line kind {other:?}", i + 1)),
+            }
+        }
+        Ok(Self {
+            strategy: strategy.ok_or("trace has no header line")?,
+            tenants,
+            events,
+            report: report.ok_or("trace has no summary footer")?,
+        })
+    }
+
+    /// Load and parse a trace file.
+    pub fn load(path: &Path) -> std::io::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    /// Reconstruct a [`ServeReport`] from the event stream alone.
+    ///
+    /// Counters are recomputed by counting events; latency histograms
+    /// are rebuilt by pairing each [`EngineEvent::BatchDone`] with the
+    /// oldest un-served [`EngineEvent::Admitted`] arrivals of its
+    /// tenant (the engine's own FIFO admission order), recording
+    /// `(done - arrival).max(0)` exactly as the engine did.
+    /// `completion_s`, `epochs` and `pack_swaps` are carried from the
+    /// footer (see the module docs for why they are not derivable).
+    pub fn replay(&self) -> ServeReport {
+        let t_n = self.tenants.len();
+        let mut fifo: Vec<VecDeque<f64>> = vec![VecDeque::new(); t_n];
+        let mut histograms = vec![LatencyHistogram::new(); t_n];
+        let mut served = vec![0u64; t_n];
+        let mut rejected = vec![0u64; t_n];
+        let mut throttled = vec![0u64; t_n];
+        let (mut switches, mut preemptions, mut packs, mut unpacks) = (0u64, 0u64, 0u64, 0u64);
+        let mut pack_group_sizes = Vec::new();
+        for ev in &self.events {
+            match ev {
+                EngineEvent::Admitted { tenant, at_s, .. } => fifo[*tenant].push_back(*at_s),
+                EngineEvent::BatchDone { tenant, n, at_s, .. } => {
+                    for _ in 0..*n {
+                        // An underflow (batch without a recorded
+                        // admission) records nothing; verify() then
+                        // reports the served-count mismatch.
+                        if let Some(arr) = fifo[*tenant].pop_front() {
+                            histograms[*tenant].record((*at_s - arr).max(0.0));
+                            served[*tenant] += 1;
+                        }
+                    }
+                }
+                EngineEvent::Rejected { tenant, .. } => rejected[*tenant] += 1,
+                EngineEvent::Throttled { tenant, .. } => throttled[*tenant] += 1,
+                EngineEvent::Resplit { .. } => switches += 1,
+                EngineEvent::Preempted { .. } => preemptions += 1,
+                EngineEvent::Packed { members, .. } => {
+                    packs += 1;
+                    pack_group_sizes.push(members.len());
+                }
+                EngineEvent::Unpacked { .. } => unpacks += 1,
+                EngineEvent::BatchStarted { .. }
+                | EngineEvent::PackHandoff { .. }
+                | EngineEvent::Unified { .. } => {}
+            }
+        }
+        ServeReport {
+            strategy: self.strategy.clone(),
+            completion_s: self.report.completion_s,
+            served,
+            rejected,
+            throttled,
+            switches,
+            preemptions,
+            packs,
+            unpacks,
+            pack_swaps: self.report.pack_swaps,
+            pack_group_sizes,
+            epochs: self.report.epochs,
+            histograms,
+        }
+    }
+
+    /// Replay the event stream and hold the result to the footer
+    /// bit-for-bit: counters, transition counts, and every histogram
+    /// bucket, sum, min and max compared with `==` on the `f64`s.
+    /// Returns the replayed report, or every mismatch found.
+    pub fn verify(&self) -> Result<ServeReport, String> {
+        let r = self.replay();
+        let f = &self.report;
+        let mut errs = Vec::new();
+        let mut chk = |name: &str, ok: bool, detail: String| {
+            if !ok {
+                errs.push(format!("{name}: {detail}"));
+            }
+        };
+        chk("strategy", r.strategy == f.strategy, format!("{} vs {}", r.strategy, f.strategy));
+        chk("served", r.served == f.served, format!("{:?} vs {:?}", r.served, f.served));
+        chk("rejected", r.rejected == f.rejected, format!("{:?} vs {:?}", r.rejected, f.rejected));
+        chk(
+            "throttled",
+            r.throttled == f.throttled,
+            format!("{:?} vs {:?}", r.throttled, f.throttled),
+        );
+        chk("switches", r.switches == f.switches, format!("{} vs {}", r.switches, f.switches));
+        chk(
+            "preemptions",
+            r.preemptions == f.preemptions,
+            format!("{} vs {}", r.preemptions, f.preemptions),
+        );
+        chk("packs", r.packs == f.packs, format!("{} vs {}", r.packs, f.packs));
+        chk("unpacks", r.unpacks == f.unpacks, format!("{} vs {}", r.unpacks, f.unpacks));
+        chk(
+            "pack_group_sizes",
+            r.pack_group_sizes == f.pack_group_sizes,
+            format!("{:?} vs {:?}", r.pack_group_sizes, f.pack_group_sizes),
+        );
+        chk(
+            "histogram count",
+            r.histograms.len() == f.histograms.len(),
+            format!("{} vs {}", r.histograms.len(), f.histograms.len()),
+        );
+        for (t, (a, b)) in r.histograms.iter().zip(&f.histograms).enumerate() {
+            let same = a.buckets() == b.buckets()
+                && a.count() == b.count()
+                && a.sum_s() == b.sum_s()
+                && a.min_s() == b.min_s()
+                && a.max_s() == b.max_s();
+            chk(
+                "histogram",
+                same,
+                format!(
+                    "tenant {t}: n {} vs {}, sum {:.17e} vs {:.17e}",
+                    a.count(),
+                    b.count(),
+                    a.sum_s(),
+                    b.sum_s()
+                ),
+            );
+        }
+        if errs.is_empty() {
+            Ok(r)
+        } else {
+            Err(errs.join("; "))
+        }
+    }
+
+    /// Multi-line human-readable digest: header metadata, per-kind
+    /// event counts, the recorded fabric-time span, and the footer's
+    /// one-line summary.
+    pub fn summarize(&self) -> String {
+        let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
+        let mut span = (f64::INFINITY, f64::NEG_INFINITY);
+        for ev in &self.events {
+            let (name, at) = match ev {
+                EngineEvent::Admitted { at_s, .. } => ("admitted", *at_s),
+                EngineEvent::BatchStarted { at_s, .. } => ("batch_started", *at_s),
+                EngineEvent::BatchDone { at_s, .. } => ("batch_done", *at_s),
+                EngineEvent::Rejected { at_s, .. } => ("rejected", *at_s),
+                EngineEvent::Throttled { at_s, .. } => ("throttled", *at_s),
+                EngineEvent::Resplit { at_s, .. } => ("resplit", *at_s),
+                EngineEvent::Preempted { at_s, .. } => ("preempted", *at_s),
+                EngineEvent::Packed { at_s, .. } => ("packed", *at_s),
+                EngineEvent::PackHandoff { at_s, .. } => ("pack_handoff", *at_s),
+                EngineEvent::Unpacked { at_s, .. } => ("unpacked", *at_s),
+                EngineEvent::Unified { at_s } => ("unified", *at_s),
+            };
+            *counts.entry(name).or_insert(0) += 1;
+            span = (span.0.min(at), span.1.max(at));
+        }
+        let kinds: Vec<String> =
+            counts.iter().map(|(k, n)| format!("{n} {k}")).collect();
+        let span_line = if self.events.is_empty() {
+            "span: empty".to_string()
+        } else {
+            format!("span: {:.6e} .. {:.6e} s (fabric time)", span.0, span.1)
+        };
+        format!(
+            "trace v{TRACE_VERSION}: strategy {}, tenants {:?}\nevents: {} ({})\n{}\n{}",
+            self.strategy,
+            self.tenants,
+            self.events.len(),
+            kinds.join(", "),
+            span_line,
+            self.report.summary(),
+        )
+    }
+}
+
+// ---- the metrics timeline --------------------------------------------------
+
+/// Which policy decision a [`DecisionSample`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// `should_resplit`: re-split the fabric onto proposed weights.
+    Resplit,
+    /// `should_preempt`: interrupt an in-flight batch at its next
+    /// layer boundary during a re-split.
+    Preempt,
+    /// `should_pack`: merge a proposed group onto one shared slice.
+    Pack,
+    /// `should_unpack`: mark a packed group for dissolution.
+    Unpack,
+}
+
+impl DecisionKind {
+    /// Stable lowercase label used in timeline JSONL lines.
+    pub fn label(self) -> &'static str {
+        match self {
+            DecisionKind::Resplit => "resplit",
+            DecisionKind::Preempt => "preempt",
+            DecisionKind::Pack => "pack",
+            DecisionKind::Unpack => "unpack",
+        }
+    }
+}
+
+/// One policy decision evaluated during an epoch, with the signed
+/// margin the policy computed. `margin_s > 0` means the policy's
+/// benefit term cleared its threshold; `approved` is the actual
+/// verdict (which can differ — e.g. a re-split that merely restores
+/// the equal split is approved regardless of the backlog margin, and
+/// a pack needs the swap-amortization gate on top of the fit margin).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionSample {
+    /// Which decision was evaluated.
+    pub kind: DecisionKind,
+    /// Tenants the decision is about (group members; the preempted
+    /// tenant; empty for a fabric-wide re-split).
+    pub tenants: Vec<usize>,
+    /// Signed margin in fabric seconds (see [`DecisionKind`] for each
+    /// formula's terms).
+    pub margin_s: f64,
+    /// Did the transition actually get approved?
+    pub approved: bool,
+}
+
+/// One tenant's admission state as sampled at a policy epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSample {
+    /// Requests waiting in the pending queue.
+    pub queue_depth: usize,
+    /// Backlog seconds (queued plus movable in-flight work) — the
+    /// signal the weight proposal ran on this epoch.
+    pub backlog_s: f64,
+    /// Token-bucket level in fabric seconds as of the last admission;
+    /// `None` when the tenant has no rate limit.
+    pub bucket_tokens: Option<f64>,
+}
+
+/// Everything the engine observed and decided at one policy epoch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochSample {
+    /// 1-based epoch ordinal (matches `ServeReport::epochs`).
+    pub epoch: u64,
+    /// Fabric instant the epoch ran at.
+    pub at_s: f64,
+    /// Per-tenant admission state (index = tenant id).
+    pub tenants: Vec<TenantSample>,
+    /// Partition weights in force after this epoch's transitions.
+    pub weights: Vec<u32>,
+    /// Members of each live packed group after this epoch.
+    pub pack_shapes: Vec<Vec<usize>>,
+    /// Schedule-cache hits so far (cumulative).
+    pub cache_hits: u64,
+    /// Schedule-cache misses so far (cumulative).
+    pub cache_misses: u64,
+    /// Every decision evaluated this epoch, in evaluation order.
+    pub decisions: Vec<DecisionSample>,
+}
+
+/// A run's epoch-sampled metrics timeline, dumpable as JSONL next to
+/// the event trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineReport {
+    /// Tenant names (index = tenant id in the samples).
+    pub tenants: Vec<String>,
+    /// One sample per policy epoch, in epoch order.
+    pub samples: Vec<EpochSample>,
+}
+
+impl TimelineReport {
+    /// Serialize to JSONL: a `{"kind":"timeline_header",...}` line,
+    /// then one `{"kind":"epoch",...}` line per sample.
+    pub fn to_jsonl(&self) -> String {
+        let mut text = String::new();
+        let mut h = BTreeMap::new();
+        h.insert("kind".to_string(), jstr("timeline_header"));
+        h.insert("version".to_string(), junum(TRACE_VERSION));
+        h.insert(
+            "tenants".to_string(),
+            Json::Arr(self.tenants.iter().map(|t| jstr(t)).collect()),
+        );
+        text.push_str(&Json::Obj(h).to_string_compact());
+        text.push('\n');
+        for s in &self.samples {
+            let mut m = BTreeMap::new();
+            m.insert("kind".to_string(), jstr("epoch"));
+            m.insert("epoch".to_string(), junum(s.epoch));
+            m.insert("at_s".to_string(), jnum(s.at_s));
+            m.insert(
+                "tenants".to_string(),
+                Json::Arr(
+                    s.tenants
+                        .iter()
+                        .map(|t| {
+                            let mut tm = BTreeMap::new();
+                            tm.insert("queue".to_string(), junum(t.queue_depth as u64));
+                            tm.insert("backlog_s".to_string(), jnum(t.backlog_s));
+                            tm.insert(
+                                "bucket_tokens".to_string(),
+                                t.bucket_tokens.map_or(Json::Null, jnum),
+                            );
+                            Json::Obj(tm)
+                        })
+                        .collect(),
+                ),
+            );
+            m.insert(
+                "weights".to_string(),
+                Json::Arr(s.weights.iter().map(|&w| junum(w as u64)).collect()),
+            );
+            m.insert(
+                "packs".to_string(),
+                Json::Arr(
+                    s.pack_shapes
+                        .iter()
+                        .map(|g| Json::Arr(g.iter().map(|&t| junum(t as u64)).collect()))
+                        .collect(),
+                ),
+            );
+            m.insert("cache_hits".to_string(), junum(s.cache_hits));
+            m.insert("cache_misses".to_string(), junum(s.cache_misses));
+            m.insert(
+                "decisions".to_string(),
+                Json::Arr(
+                    s.decisions
+                        .iter()
+                        .map(|d| {
+                            let mut dm = BTreeMap::new();
+                            dm.insert("kind".to_string(), jstr(d.kind.label()));
+                            dm.insert(
+                                "tenants".to_string(),
+                                Json::Arr(d.tenants.iter().map(|&t| junum(t as u64)).collect()),
+                            );
+                            dm.insert("margin_s".to_string(), jnum(d.margin_s));
+                            dm.insert("approved".to_string(), Json::Bool(d.approved));
+                            Json::Obj(dm)
+                        })
+                        .collect(),
+                ),
+            );
+            text.push_str(&Json::Obj(m).to_string_compact());
+            text.push('\n');
+        }
+        text
+    }
+
+    /// Write the JSONL dump to `path` (atomic rename).
+    pub fn save_to(&self, path: &Path) -> std::io::Result<()> {
+        write_text(path, &self.to_jsonl())
+    }
+
+    /// One-line digest: epochs sampled, decisions evaluated/approved.
+    pub fn summary(&self) -> String {
+        let decisions: usize = self.samples.iter().map(|s| s.decisions.len()).sum();
+        let approved: usize = self
+            .samples
+            .iter()
+            .flat_map(|s| &s.decisions)
+            .filter(|d| d.approved)
+            .count();
+        format!(
+            "timeline: {} epochs sampled, {} decisions evaluated ({} approved)",
+            self.samples.len(),
+            decisions,
+            approved,
+        )
+    }
+}
+
+// ---- run instrumentation ---------------------------------------------------
+
+/// What a driver should record during an instrumented run. The step
+/// profile is always collected (it is two counters).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TelemetryConfig {
+    /// Record the full [`EngineEvent`] trace.
+    pub trace: bool,
+    /// Sample the per-epoch metrics timeline.
+    pub timeline: bool,
+}
+
+impl TelemetryConfig {
+    /// Record everything (trace and timeline).
+    pub fn full() -> Self {
+        Self { trace: true, timeline: true }
+    }
+}
+
+/// Wall-time profile of a driver's `step()` loop. Observability only:
+/// the numbers are never fed back into any decision, so collecting
+/// them cannot perturb the deterministic fabric-time trace.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepProfile {
+    /// `FabricEngine::step` calls timed.
+    pub steps: u64,
+    /// Total wall nanoseconds across those calls.
+    pub total_ns: u64,
+}
+
+impl StepProfile {
+    /// Fold one timed step into the profile.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.steps += 1;
+        self.total_ns += ns;
+    }
+
+    /// Mean wall nanoseconds per engine step (0 before any step).
+    pub fn ns_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.total_ns as f64 / self.steps as f64
+        }
+    }
+}
+
+/// Everything an instrumented run recorded beyond its report.
+#[derive(Debug, Clone, Default)]
+pub struct RunTelemetry {
+    /// The event trace, when [`TelemetryConfig::trace`] was set.
+    pub trace: Option<Vec<EngineEvent>>,
+    /// The epoch timeline, when [`TelemetryConfig::timeline`] was set.
+    pub timeline: Option<TimelineReport>,
+    /// Step-loop wall-time profile (always collected).
+    pub step_profile: StepProfile,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_json_roundtrips_every_variant() {
+        let evs = vec![
+            EngineEvent::Admitted { tenant: 1, id: 42, at_s: 0.125 },
+            EngineEvent::BatchStarted { tenant: 0, n: 4, at_s: 1.0 / 3.0 },
+            EngineEvent::BatchDone { tenant: 2, n: 1, at_s: 0.7, consumed_s: 0.1 + 0.2 },
+            EngineEvent::Rejected { tenant: 0, at_s: 0.0 },
+            EngineEvent::Throttled { tenant: 1, at_s: 1e-9 },
+            EngineEvent::Resplit { weights: vec![8, 1, 1], at_s: 2.5 },
+            EngineEvent::Preempted { tenant: 0, at_s: 2.5 },
+            EngineEvent::Packed { members: vec![1, 2], at_s: 3.0 },
+            EngineEvent::PackHandoff { tenant: 1, consumed_s: 0.05, at_s: 3.0 },
+            EngineEvent::Unpacked { members: vec![1, 2], at_s: 4.0 },
+            EngineEvent::Unified { at_s: 0.0 },
+        ];
+        for ev in &evs {
+            let line = event_to_json(ev).to_string_compact();
+            let back = event_from_json(&Json::parse(&line).expect("line parses"))
+                .expect("event parses");
+            assert_eq!(&back, ev, "through {line}");
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips_bit_for_bit() {
+        let mut h0 = LatencyHistogram::new();
+        for i in 1..=57u64 {
+            h0.record(i as f64 * 7.3e-5);
+        }
+        let r = ServeReport {
+            strategy: "dynamic".to_string(),
+            completion_s: 1.0 / 3.0,
+            served: vec![40, 17],
+            rejected: vec![3, 0],
+            throttled: vec![0, 1],
+            switches: 5,
+            preemptions: 2,
+            packs: 1,
+            unpacks: 1,
+            pack_swaps: 9,
+            pack_group_sizes: vec![2],
+            epochs: 12,
+            histograms: vec![h0, LatencyHistogram::new()],
+        };
+        let v = report_to_json(&r);
+        let back = report_from_json(&Json::parse(&v.to_string_compact()).expect("parses"))
+            .expect("report parses");
+        assert_eq!(back.completion_s, r.completion_s);
+        assert_eq!(back.served, r.served);
+        assert_eq!(back.histograms[0].buckets(), r.histograms[0].buckets());
+        assert_eq!(back.histograms[0].sum_s(), r.histograms[0].sum_s());
+        assert_eq!(back.histograms[0].min_s(), r.histograms[0].min_s());
+        assert_eq!(back.histograms[0].max_s(), r.histograms[0].max_s());
+        // The empty histogram restores its fresh sentinels.
+        assert_eq!(back.histograms[1].count(), 0);
+        assert_eq!(back.histograms[1].summary(), "no requests");
+    }
+
+    #[test]
+    fn synthetic_trace_replays_exactly() {
+        // Hand-build a tiny consistent trace and check the full
+        // parse → replay → verify path.
+        let events = vec![
+            EngineEvent::Admitted { tenant: 0, id: 0, at_s: 0.0 },
+            EngineEvent::Admitted { tenant: 0, id: 1, at_s: 0.01 },
+            EngineEvent::Rejected { tenant: 1, at_s: 0.02 },
+            EngineEvent::BatchStarted { tenant: 0, n: 2, at_s: 0.02 },
+            EngineEvent::BatchDone { tenant: 0, n: 2, at_s: 0.3, consumed_s: 0.28 },
+        ];
+        let mut h = LatencyHistogram::new();
+        h.record(0.3);
+        h.record(0.3 - 0.01);
+        let report = ServeReport {
+            strategy: "static-equal".to_string(),
+            completion_s: 0.3,
+            served: vec![2, 0],
+            rejected: vec![0, 1],
+            throttled: vec![0, 0],
+            switches: 0,
+            preemptions: 0,
+            packs: 0,
+            unpacks: 0,
+            pack_swaps: 0,
+            pack_group_sizes: vec![],
+            epochs: 0,
+            histograms: vec![h, LatencyHistogram::new()],
+        };
+        let text = trace_to_jsonl(
+            "static-equal",
+            &["a".to_string(), "b".to_string()],
+            &events,
+            &report,
+        );
+        let tr = RecordedTrace::parse(&text).expect("trace parses");
+        assert_eq!(tr.events, events);
+        let replayed = tr.verify().expect("replay matches the footer");
+        assert_eq!(replayed.served, vec![2, 0]);
+        // Corrupt the footer: verify must fail loudly.
+        let mut bad = tr;
+        bad.report.served[0] = 3;
+        assert!(bad.verify().unwrap_err().contains("served"));
+    }
+
+    #[test]
+    fn timeline_jsonl_lines_all_parse() {
+        let tl = TimelineReport {
+            tenants: vec!["a".to_string(), "b".to_string()],
+            samples: vec![EpochSample {
+                epoch: 1,
+                at_s: 0.05,
+                tenants: vec![
+                    TenantSample { queue_depth: 3, backlog_s: 0.2, bucket_tokens: None },
+                    TenantSample { queue_depth: 0, backlog_s: 0.0, bucket_tokens: Some(0.7) },
+                ],
+                weights: vec![8, 1],
+                pack_shapes: vec![],
+                cache_hits: 2,
+                cache_misses: 2,
+                decisions: vec![DecisionSample {
+                    kind: DecisionKind::Resplit,
+                    tenants: vec![],
+                    margin_s: 0.15,
+                    approved: true,
+                }],
+            }],
+        };
+        let text = tl.to_jsonl();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            Json::parse(line).expect("timeline line parses");
+        }
+        assert!(tl.summary().contains("1 epochs sampled"));
+    }
+}

@@ -92,7 +92,13 @@ impl Json {
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // RFC 8259 has no NaN/Infinity tokens; emitting
+                    // them would make the line unparseable (including
+                    // by our own parser). `null` keeps the document
+                    // well-formed — readers treat it as "absent".
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -380,5 +386,38 @@ mod tests {
         let v = Json::Str("a\"b\\c\nd\te\u{1}".to_string());
         let parsed = Json::parse(&v.to_string_compact()).unwrap();
         assert_eq!(v, parsed);
+    }
+
+    #[test]
+    fn every_control_char_roundtrips() {
+        // JSONL trace lines embed tenant names verbatim; no control
+        // character may ever produce an unparseable line.
+        for c in (0u32..0x20).map(|c| char::from_u32(c).unwrap()) {
+            let v = Json::Str(format!("x{c}y"));
+            let text = v.to_string_compact();
+            assert!(!text.contains(c), "raw control char in {text:?}");
+            assert_eq!(Json::parse(&text).unwrap(), v, "control char {:#x}", c as u32);
+        }
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        // A JSONL trace line must never be malformed: NaN/inf have no
+        // JSON representation, so they degrade to null.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(bad).to_string_compact(), "null");
+        }
+        let mut m = BTreeMap::new();
+        m.insert("x".to_string(), Json::Num(f64::NAN));
+        m.insert("y".to_string(), Json::Num(1.5));
+        let text = Json::Obj(m).to_string_compact();
+        let back = Json::parse(&text).expect("non-finite member must not break the document");
+        assert_eq!(back.get("x"), Some(&Json::Null));
+        assert_eq!(back.get("y").and_then(Json::as_f64), Some(1.5));
+        // Finite values still round-trip exactly (shortest-roundtrip
+        // Display + full-precision parse).
+        let x = 0.1 + 0.2;
+        let again = Json::parse(&Json::Num(x).to_string_compact()).unwrap();
+        assert_eq!(again.as_f64(), Some(x));
     }
 }

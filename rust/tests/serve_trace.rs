@@ -1,0 +1,213 @@
+//! Acceptance tests for the fabric telemetry subsystem.
+//!
+//! 1. **Sim trace round-trip, bit-for-bit**: record a dynamic-strategy
+//!    simulation's engine event trace, serialize it to JSONL, load it
+//!    back, and replay the event stream into a fresh `ServeReport` —
+//!    which must equal the originating run's report exactly: served /
+//!    rejected / throttled per tenant, every transition counter, and
+//!    every latency histogram bucket, sum, min and max, asserted `==`
+//!    on the `f64`s. This holds the trace format to the same
+//!    discipline as the live-vs-sim differential in
+//!    `serve_engine.rs`: no information the accounting depends on may
+//!    be lost in serialization.
+//! 2. **Live trace smoke**: a deterministic live-scheduler run records
+//!    a trace whose JSONL dump parses line by line and replays
+//!    bit-for-bit against the engine's own fabric-time report.
+//! 3. **Timeline sampling**: an instrumented dynamic run samples one
+//!    `EpochSample` per policy epoch, carrying the decision margins
+//!    the policy actually evaluated.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use filco::arch::FilcoConfig;
+use filco::dse::Solver;
+use filco::platform::Platform;
+use filco::serve::{
+    equal_split_per_request, poisson_trace, simulate_instrumented, simulate_traced, trace_to_jsonl,
+    write_trace, DecisionKind, FabricScheduler, LiveConfig, LiveMode, PolicyConfig, RecordedTrace,
+    Scenario, ScheduleCache, Strategy, TelemetryConfig, TenantSpec,
+};
+use filco::util::json::Json;
+use filco::workload::zoo;
+
+fn small_solver() -> Solver {
+    Solver::Ga { population: 16, generations: 20, seed: 42 }
+}
+
+/// Skewed 3-tenant scenario with preemption and packing live, so the
+/// recorded trace carries every event kind worth replaying.
+fn traced_scenario(cache: &ScheduleCache, seed: u64) -> (Scenario, PolicyConfig) {
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let cap = 1 << 22;
+    let tenants = vec![
+        TenantSpec::new("heavy", zoo::mlp_l()).with_queue_capacity(cap),
+        TenantSpec::new("s1", zoo::mlp_s()).with_queue_capacity(cap),
+        TenantSpec::new("s2", zoo::pointnet()).with_queue_capacity(cap),
+    ];
+    let per = equal_split_per_request(&platform, &base, &tenants, cache);
+    let arrivals =
+        poisson_trace(&[2.5 / per[0], 0.05 / per[1], 0.05 / per[2]], 60.0 * per[0], seed);
+    assert!(arrivals.len() > 50, "calibrated trace too small: {}", arrivals.len());
+    let policy = PolicyConfig {
+        pack_swap_margin: 10.0,
+        ..PolicyConfig::calibrated(per[0]).with_packing()
+    };
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy)
+}
+
+fn tenant_names(sc: &Scenario) -> Vec<String> {
+    sc.tenants.iter().map(|t| t.name.clone()).collect()
+}
+
+/// Every field of two reports compared `==`, histograms to the bucket.
+fn assert_reports_identical(a: &filco::serve::ServeReport, b: &filco::serve::ServeReport) {
+    assert_eq!(a.strategy, b.strategy);
+    assert_eq!(a.completion_s, b.completion_s);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.throttled, b.throttled);
+    assert_eq!(a.switches, b.switches);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.packs, b.packs);
+    assert_eq!(a.unpacks, b.unpacks);
+    assert_eq!(a.pack_swaps, b.pack_swaps);
+    assert_eq!(a.pack_group_sizes, b.pack_group_sizes);
+    assert_eq!(a.epochs, b.epochs);
+    assert_eq!(a.histograms.len(), b.histograms.len());
+    for (t, (x, y)) in a.histograms.iter().zip(&b.histograms).enumerate() {
+        assert_eq!(x.buckets(), y.buckets(), "tenant {t}: histogram buckets");
+        assert_eq!(x.count(), y.count(), "tenant {t}: histogram count");
+        assert_eq!(x.sum_s(), y.sum_s(), "tenant {t}: histogram sum");
+        assert_eq!(x.min_s(), y.min_s(), "tenant {t}: histogram min");
+        assert_eq!(x.max_s(), y.max_s(), "tenant {t}: histogram max");
+    }
+}
+
+#[test]
+fn sim_trace_roundtrips_and_replays_bit_for_bit() {
+    let cache = ScheduleCache::new(small_solver());
+    let (sc, policy) = traced_scenario(&cache, 4711);
+    let (report, events) =
+        simulate_traced(&sc, &Strategy::Dynamic(policy), &cache, true);
+    assert!(report.switches >= 1, "the skewed scenario must re-compose");
+    assert!(!events.is_empty());
+
+    // Serialize through the file path (atomic write), then load.
+    let path = std::env::temp_dir()
+        .join(format!("filco-trace-test-{}.jsonl", std::process::id()));
+    write_trace(&path, "dynamic", &tenant_names(&sc), &events, &report)
+        .expect("trace writes");
+    let trace = RecordedTrace::load(&path).expect("trace loads");
+    std::fs::remove_file(&path).ok();
+
+    // Nothing lost in serialization: the event stream and the footer
+    // report both round-trip exactly.
+    assert_eq!(trace.events, events);
+    assert_eq!(trace.tenants, tenant_names(&sc));
+    assert_reports_identical(&trace.report, &report);
+
+    // The replay guarantee: the report rebuilt from events alone
+    // matches the originating run bit-for-bit.
+    let replayed = trace.verify().expect("replay must reproduce the footer");
+    assert_reports_identical(&replayed, &report);
+
+    // A corrupted footer must fail verification loudly.
+    let mut bad = trace;
+    bad.report.served[0] += 1;
+    assert!(bad.verify().unwrap_err().contains("served"));
+}
+
+#[test]
+fn live_trace_parses_line_by_line_and_replays() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let (sc, policy) = traced_scenario(&cache, 271_828);
+    // Deterministic live run: the scheduler ingests the virtual-time
+    // trace itself (the differential-test mode), tracing enabled by
+    // construction.
+    let sched = FabricScheduler::with_arrivals(
+        sc.platform.clone(),
+        sc.base.clone(),
+        sc.tenants.clone(),
+        cache.clone(),
+        LiveConfig {
+            policy,
+            mode: LiveMode::Dynamic,
+            timescale: 0.0,
+            max_sleep: Duration::from_millis(100),
+        },
+        sc.arrivals.clone(),
+    )
+    .expect("live scheduler");
+    sched.close();
+    let live_report = sched.run();
+    assert!(live_report.total_served() > 0);
+    let events = sched.take_trace();
+    let report = sched.serve_report();
+    assert_eq!(report.strategy, "dynamic");
+
+    let text = trace_to_jsonl(&report.strategy, &tenant_names(&sc), &events, &report);
+    // JSONL smoke: every line is one self-contained parseable object.
+    let mut lines = 0;
+    for line in text.lines() {
+        let v = Json::parse(line).expect("every trace line parses standalone");
+        assert!(v.get("kind").is_some(), "every line carries its kind");
+        lines += 1;
+    }
+    assert_eq!(lines, events.len() + 2, "header + one line per event + footer");
+
+    // And the live run's trace replays bit-for-bit too.
+    let trace = RecordedTrace::parse(&text).expect("live trace parses");
+    let replayed = trace.verify().expect("live replay must reproduce the footer");
+    assert_reports_identical(&replayed, &report);
+}
+
+#[test]
+fn timeline_samples_every_epoch_with_decisions() {
+    let cache = ScheduleCache::new(small_solver());
+    let (sc, policy) = traced_scenario(&cache, 3_141_592);
+    let (report, telemetry) = simulate_instrumented(
+        &sc,
+        &Strategy::Dynamic(policy),
+        &cache,
+        &TelemetryConfig::full(),
+    );
+    let tl = telemetry.timeline.expect("timeline was requested");
+    assert_eq!(
+        tl.samples.len() as u64,
+        report.epochs,
+        "one sample per policy epoch evaluated"
+    );
+    assert!(report.epochs > 0, "the skewed scenario must evaluate epochs");
+    assert_eq!(tl.tenants, tenant_names(&sc));
+    for s in &tl.samples {
+        assert_eq!(s.tenants.len(), sc.tenants.len());
+        assert_eq!(s.weights.len(), sc.tenants.len());
+        assert!(s.tenants.iter().all(|t| t.backlog_s >= 0.0));
+    }
+    // Epoch ordinals are 1-based and strictly increasing.
+    for w in tl.samples.windows(2) {
+        assert!(w[0].epoch < w[1].epoch);
+        assert!(w[0].at_s <= w[1].at_s);
+    }
+    // The run re-composed, so some epoch carries an approved re-split
+    // decision with its margin.
+    assert!(report.switches >= 1);
+    assert!(
+        tl.samples.iter().flat_map(|s| &s.decisions).any(|d| {
+            d.kind == DecisionKind::Resplit && d.approved && d.margin_s.is_finite()
+        }),
+        "an approved re-split decision must appear in the timeline"
+    );
+    // The dump parses line by line.
+    let text = tl.to_jsonl();
+    assert_eq!(text.lines().count(), tl.samples.len() + 1);
+    for line in text.lines() {
+        Json::parse(line).expect("every timeline line parses standalone");
+    }
+    // The step profile timed the whole drive loop.
+    assert!(telemetry.step_profile.steps > 0);
+    // The trace was recorded too (TelemetryConfig::full).
+    assert!(telemetry.trace.is_some_and(|t| !t.is_empty()));
+}
