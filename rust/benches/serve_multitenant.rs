@@ -48,8 +48,11 @@ fn num(x: f64) -> Json {
     Json::Num(x)
 }
 
-/// One strategy row of the snapshot.
-fn row_json(rep: &ServeReport, tel: &RunTelemetry) -> Json {
+/// One strategy row of the snapshot. Sharded rows carry their
+/// wall-clock step-loop speedup against the shards=1 walk of the same
+/// scenario (`step_speedup_vs_serial`); fabric-time results are
+/// bit-for-bit identical across shard counts by construction.
+fn row_json(rep: &ServeReport, tel: &RunTelemetry, speedup_vs_serial: Option<f64>) -> Json {
     let mut m = BTreeMap::new();
     m.insert("completion_s".to_string(), num(rep.completion_s));
     m.insert("throughput_rps".to_string(), num(rep.throughput_rps()));
@@ -61,6 +64,9 @@ fn row_json(rep: &ServeReport, tel: &RunTelemetry) -> Json {
     m.insert("packs".to_string(), num(rep.packs as f64));
     m.insert("engine_steps".to_string(), num(tel.step_profile.steps as f64));
     m.insert("step_ns_per_op".to_string(), num(tel.step_profile.ns_per_step()));
+    if let Some(s) = speedup_vs_serial {
+        m.insert("step_speedup_vs_serial".to_string(), num(s));
+    }
     Json::Obj(m)
 }
 
@@ -93,7 +99,7 @@ fn main() {
         if sample { " (sample mode)" } else { "" }
     );
 
-    let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None };
+    let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 };
     let policy = PolicyConfig::calibrated(per[0]);
 
     let t0 = std::time::Instant::now();
@@ -101,6 +107,7 @@ fn main() {
     // time-multiplexed; the amortization gate is opened wide so the
     // row depends only on the fit bound, not absolute model scale.
     let packed = PolicyConfig { pack_swap_margin: 10.0, ..policy.clone().with_packing() };
+    let preempt_policy = policy.clone();
     let strategies = [
         ("unified", Strategy::Unified),
         ("static-equal", Strategy::StaticEqual),
@@ -111,13 +118,29 @@ fn main() {
     // Step profiles ride along for free (two counters); no trace or
     // timeline, so the runs stay pure.
     let tcfg = TelemetryConfig::default();
-    let reports: Vec<(&str, ServeReport, RunTelemetry)> = strategies
+    let mut reports: Vec<(String, ServeReport, RunTelemetry)> = strategies
         .iter()
         .map(|(n, s)| {
             let (rep, tel) = simulate_instrumented(&sc, s, &cache, &tcfg);
-            (*n, rep, tel)
+            (n.to_string(), rep, tel)
         })
         .collect();
+
+    // Sharded rows: the dynamic-preempt configuration stepped on a
+    // worker pool. Fabric-time results are bit-for-bit identical for
+    // every shard count (the differential in
+    // rust/tests/serve_engine.rs holds the traces equal); these rows
+    // measure the wall-clock step loop, so the snapshot can track the
+    // speedup the pool buys on a multi-core host.
+    let shard_counts = [1usize, 2, 4];
+    for &n in &shard_counts {
+        let mut ssc = sc.clone();
+        ssc.shards = n;
+        let (rep, tel) =
+            simulate_instrumented(&ssc, &Strategy::Dynamic(preempt_policy.clone()), &cache, &tcfg);
+        reports.push((format!("dynamic-sharded-{n}"), rep, tel));
+    }
+    let serial_step_ns = reports[5].2.step_profile.ns_per_step();
 
     let mut t = Table::new(
         "Serving under skewed 3-tenant traffic (fabric time)",
@@ -175,11 +198,20 @@ fn main() {
     snap.insert("dse_solves".to_string(), num(cache.solve_count() as f64));
     snap.insert("cache_lookup_us".to_string(), num(cache.lookup_ns() as f64 / 1e3));
     snap.insert(
+        "sharded_step_speedup".to_string(),
+        num(serial_step_ns / reports[7].2.step_profile.ns_per_step().max(1e-9)),
+    );
+    snap.insert(
         "strategies".to_string(),
         Json::Obj(
             reports
                 .iter()
-                .map(|(n, rep, tel)| (n.to_string(), row_json(rep, tel)))
+                .map(|(n, rep, tel)| {
+                    let speedup = n
+                        .starts_with("dynamic-sharded")
+                        .then(|| serial_step_ns / tel.step_profile.ns_per_step().max(1e-9));
+                    (n.to_string(), row_json(rep, tel, speedup))
+                })
                 .collect(),
         ),
     );
@@ -197,6 +229,17 @@ fn main() {
     let (stat, dynr) = (&reports[1].1, &reports[3].1);
     assert_eq!(dynr.total_served(), stat.total_served());
     assert!(cache.solve_count() > 0, "the bench must exercise real DSE solves");
+    // The sharded rows must be the dynamic-preempt run, bit-for-bit —
+    // the pool is a throughput knob, never a semantic one.
+    for (n, rep, tel) in &reports[5..] {
+        assert_eq!(rep.completion_s, dynr.completion_s, "{n}: completion must match serial");
+        assert_eq!(rep.served, dynr.served, "{n}: served must match serial");
+        println!(
+            "{n}: {:.0} ns/step ({:.2}x vs serial)",
+            tel.step_profile.ns_per_step(),
+            serial_step_ns / tel.step_profile.ns_per_step().max(1e-9)
+        );
+    }
     if sample {
         // Sample mode exists to validate the snapshot schema cheaply;
         // the short trace makes the strict dominance asserts noisy.

@@ -103,10 +103,13 @@ impl Reconfigurator {
         unified
     }
 
-    /// Split the fabric into independent accelerators with the given
-    /// proportional weights (e.g. `[("bert", 2), ("mlp", 1), ("pnet", 1)]`).
-    /// Every partition receives at least one FMU and one CU.
-    pub fn split(&mut self, tenants: &[(&str, u32)]) -> Result<Vec<Partition>, String> {
+    /// Compute the partition layout [`Reconfigurator::split`] would
+    /// commit for the given proportional weights, without mutating the
+    /// composition: no switch is counted and the current partitions
+    /// are untouched. The async-DSE policy path uses this to probe the
+    /// schedule cache for the would-be slices before deciding whether
+    /// the resplit can land this epoch.
+    pub fn plan(&self, tenants: &[(&str, u32)]) -> Result<Vec<Partition>, String> {
         if tenants.is_empty() {
             return Err("no tenants".into());
         }
@@ -153,6 +156,14 @@ impl Reconfigurator {
             c0 += c_counts[i];
             parts.push(p);
         }
+        Ok(parts)
+    }
+
+    /// Split the fabric into independent accelerators with the given
+    /// proportional weights (e.g. `[("bert", 2), ("mlp", 1), ("pnet", 1)]`).
+    /// Every partition receives at least one FMU and one CU.
+    pub fn split(&mut self, tenants: &[(&str, u32)]) -> Result<Vec<Partition>, String> {
+        let parts = self.plan(tenants)?;
         self.switches += 1;
         self.partitions = parts.clone();
         Ok(parts)
@@ -234,6 +245,18 @@ mod tests {
         let parts = r.split(&tenants).unwrap();
         assert!(parts.iter().all(|p| p.m_cus() >= 1 && p.n_fmus() >= 1));
         r.validate().unwrap();
+    }
+
+    #[test]
+    fn plan_is_pure_and_matches_split() {
+        let mut r = Reconfigurator::new(base());
+        let planned = r.plan(&[("bert", 2), ("mlp", 1)]).unwrap();
+        // Planning commits nothing: still unified, no switch counted.
+        assert_eq!(r.partitions().len(), 1);
+        assert_eq!(r.switches, 0);
+        let committed = r.split(&[("bert", 2), ("mlp", 1)]).unwrap();
+        assert_eq!(planned, committed);
+        assert_eq!(r.switches, 1);
     }
 
     #[test]

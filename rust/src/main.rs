@@ -13,7 +13,8 @@
 //!   serve   [--requests N] [--mode live|sim]
 //!           [--strategy dynamic|static|unified] [--epoch-ms E]
 //!           [--timescale S] [--preempt on|off] [--pack on|off]
-//!           [--cache-file P] [--trace-out P] [--timeline-out P]
+//!           [--shards N] [--cache-file P] [--trace-out P]
+//!           [--timeline-out P]
 //!           multi-tenant serving on the live re-composable fabric:
 //!           worker per partition stepping batches layer-by-layer,
 //!           backlog policy re-splits via the Reconfigurator (mid-DAG
@@ -161,6 +162,10 @@ FLAGS (serve)
                   tenants share one partition, time-multiplexed by the
                   per-partition interleaver with the switch cost
                   charged per cursor swap
+  --shards N      step worker threads for the engine (default 1):
+                  partitions step in parallel on N workers with a
+                  deterministic merge, so the event trace is identical
+                  for every N — a throughput knob, not a semantic one
   --cache-file P  schedule-cache persistence: load on startup, save on
                   shutdown, so restarts never re-run the DSE for a
                   composition seen before
@@ -324,6 +329,11 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         }
     };
 
+    // Floor of 1: shards are a throughput knob, never a semantic one
+    // (the engine's merge keeps the event trace bit-for-bit identical),
+    // and 0 workers would mean no one steps the fabric.
+    let shards: usize = flags.get("shards").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+
     let trace_out = flags.get("trace-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
     let timeline_out =
         flags.get("timeline-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
@@ -368,7 +378,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         let rates = [2.5 / per[0], 0.1 / per[1], 0.1 / per[2]];
         let arrivals = poisson_trace(&rates, (n as f64 / 2.5) * per[0], 0xF11C0);
         println!("trace: {} arrivals (heavy mlp-l at 2.5x slice capacity)\n", arrivals.len());
-        let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None };
+        let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards };
         let mut policy = PolicyConfig::calibrated(per[0]);
         if !preempt {
             policy = policy.without_preemption();
@@ -465,6 +475,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         mode: live_mode,
         timescale,
         max_sleep: Duration::from_millis(100),
+        shards,
     };
     let sched = FabricScheduler::new(platform, base, specs(), cache.clone(), cfg)
         .expect("build scheduler");
@@ -474,7 +485,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     if timeline_out.is_some() {
         sched.record_timeline(true);
     }
-    println!("composition at start: {:?}", sched.composition());
+    println!("composition at start: {:?}", sched.snapshot().composition);
     std::thread::scope(|s| {
         let producer = s.spawn(|| {
             let gap = Duration::from_secs_f64(1.5 / n as f64);
@@ -495,7 +506,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         });
         let report = sched.run();
         let rejected = producer.join().expect("producer panicked");
-        println!("composition at end:   {:?}", sched.composition());
+        println!("composition at end:   {:?}", sched.snapshot().composition);
         println!("{}", report.summary());
         for t in &report.tenants {
             println!("  {:<9} p99 wall latency {:.3e} s", t.name, t.p99_s());
@@ -503,10 +514,18 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         if rejected > 0 {
             println!("admission control rejected {rejected} requests");
         }
+        let stats = sched.stall_stats();
+        println!(
+            "engine lock: {} holds, {:.3} ms held | DSE stalls: {}, {:.3} ms blocked",
+            stats.lock_holds,
+            stats.lock_held_ns as f64 / 1e6,
+            stats.dse_stalls,
+            stats.dse_stall_ns as f64 / 1e6
+        );
     });
     if trace_out.is_some() || timeline_out.is_some() {
         let names: Vec<String> =
-            sched.composition().into_iter().map(|(name, _, _)| name).collect();
+            sched.snapshot().composition.into_iter().map(|(name, _, _)| name).collect();
         if let Some(path) = &trace_out {
             let events = sched.take_trace();
             let rep = sched.serve_report();

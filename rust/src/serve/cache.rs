@@ -18,11 +18,23 @@
 //! through [`crate::util::json`] (deterministic key order), so a
 //! restarted serving process warms from disk instead of re-running the
 //! GA/MILP for every composition it had already seen.
+//!
+//! Concurrent misses on the *same* key are **single-flight**: the first
+//! caller becomes the leader and runs the DSE; later callers block on
+//! the leader's in-flight marker and share its result, so the expensive
+//! solve runs exactly once per key no matter how many threads race on
+//! it. Stall time spent waiting on someone else's solve is counted
+//! separately ([`ScheduleCache::stalls`] / [`ScheduleCache::stall_ns`]).
+//!
+//! For callers that must never block on a solve at all (the async-DSE
+//! policy path), [`ScheduleCache::get_cached`] probes for a ready entry
+//! without counting or waiting, and [`BackgroundSolver`] runs the
+//! solves on a dedicated thread fed by a [`SolveRequest`] channel.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 use crate::arch::{Features, FilcoConfig};
 use crate::dse::{self, Schedule, ScheduleEntry, Solver};
@@ -156,12 +168,28 @@ impl CachedSchedule {
     }
 }
 
+/// Rendezvous between the one thread running a solve (the leader) and
+/// any threads that missed on the same key while it was in flight.
+struct Flight {
+    done: Mutex<Option<Arc<CachedSchedule>>>,
+    cv: Condvar,
+}
+
+/// Map slot: either a finished schedule or a marker for a solve some
+/// thread is currently running (single-flight dedupe).
+enum Slot {
+    Ready(Arc<CachedSchedule>),
+    Pending(Arc<Flight>),
+}
+
 /// Thread-safe memo table for two-stage DSE results.
 pub struct ScheduleCache {
     solver: Solver,
-    inner: Mutex<HashMap<Key, Arc<CachedSchedule>>>,
+    inner: Mutex<HashMap<Key, Slot>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    stalls: AtomicU64,
+    stall_ns: AtomicU64,
     lookup_ns: AtomicU64,
     solve_ns: AtomicU64,
     solve_count: AtomicU64,
@@ -176,6 +204,8 @@ impl ScheduleCache {
             inner: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            stall_ns: AtomicU64::new(0),
             lookup_ns: AtomicU64::new(0),
             solve_ns: AtomicU64::new(0),
             solve_count: AtomicU64::new(0),
@@ -190,7 +220,11 @@ impl ScheduleCache {
 
     /// Look up the schedule for `dag` on fabric slice `cfg`, running the
     /// two-stage DSE on a miss. Misses compute outside the map lock so
-    /// concurrent lookups of *different* keys don't serialize.
+    /// concurrent lookups of *different* keys don't serialize, and
+    /// concurrent misses on the *same* key are single-flight: exactly
+    /// one caller (the leader) runs the DSE, everyone else blocks on
+    /// its in-flight marker and shares the result. Waiters count as
+    /// misses (the table had no ready entry for them) and as stalls.
     pub fn get_or_compute(
         &self,
         platform: &Platform,
@@ -202,29 +236,84 @@ impl ScheduleCache {
             platform: platform_fingerprint(platform),
             dag: dag_fingerprint(dag),
         };
+        enum Probe {
+            Hit(Arc<CachedSchedule>),
+            Wait(Arc<Flight>),
+            Lead(Arc<Flight>),
+        }
         // Timing below is observability-only: the counters are never
         // read by any scheduling decision, so wall-clock jitter cannot
         // perturb the deterministic fabric-time trace.
         let t0 = std::time::Instant::now();
-        if let Some(hit) = self.inner.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            self.lookup_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            return hit.clone();
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
+        // One lock acquisition decides this caller's role; the solve
+        // and the wait both happen outside the map lock.
+        let probe = {
+            let mut map = self.inner.lock().unwrap();
+            match map.get(&key) {
+                Some(Slot::Ready(hit)) => Probe::Hit(hit.clone()),
+                Some(Slot::Pending(flight)) => Probe::Wait(flight.clone()),
+                None => {
+                    let flight =
+                        Arc::new(Flight { done: Mutex::new(None), cv: Condvar::new() });
+                    map.insert(key.clone(), Slot::Pending(flight.clone()));
+                    Probe::Lead(flight)
+                }
+            }
+        };
         self.lookup_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        // Known trade-off: two threads missing on the same key both run
-        // the DSE and one result is discarded. In practice one policy
-        // thread is the only writer; if that changes, add an in-flight
-        // marker so the second caller waits instead of recomputing.
-        let t1 = std::time::Instant::now();
-        let schedule = dse::two_stage(platform, cfg, dag, self.solver);
-        self.solve_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        self.solve_count.fetch_add(1, Ordering::Relaxed);
-        let cached = Arc::new(CachedSchedule::new(schedule));
-        let mut map = self.inner.lock().unwrap();
-        // A racing thread may have inserted meanwhile; keep one copy.
-        map.entry(key).or_insert_with(|| cached.clone()).clone()
+        match probe {
+            Probe::Hit(hit) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                hit
+            }
+            Probe::Wait(flight) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.stalls.fetch_add(1, Ordering::Relaxed);
+                let t1 = std::time::Instant::now();
+                let mut done = flight.done.lock().unwrap();
+                while done.is_none() {
+                    done = flight.cv.wait(done).unwrap();
+                }
+                self.stall_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                done.clone().expect("flight signalled without a result")
+            }
+            Probe::Lead(flight) => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let t1 = std::time::Instant::now();
+                let schedule = dse::two_stage(platform, cfg, dag, self.solver);
+                self.solve_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                self.solve_count.fetch_add(1, Ordering::Relaxed);
+                let cached = Arc::new(CachedSchedule::new(schedule));
+                // Publish to waiters first, then flip the slot to Ready
+                // so later lookups hit without touching the flight.
+                *flight.done.lock().unwrap() = Some(cached.clone());
+                flight.cv.notify_all();
+                self.inner.lock().unwrap().insert(key, Slot::Ready(cached.clone()));
+                cached
+            }
+        }
+    }
+
+    /// Non-blocking probe: the ready entry for `(cfg, dag)` if one is
+    /// memoized, `None` on a cold or still-solving key. Counts neither
+    /// a hit nor a miss — the async-DSE policy path uses this to decide
+    /// whether a resplit can land this epoch without skewing the
+    /// hit/miss series the timeline reports.
+    pub fn get_cached(
+        &self,
+        platform: &Platform,
+        cfg: &FilcoConfig,
+        dag: &Dag,
+    ) -> Option<Arc<CachedSchedule>> {
+        let key = Key {
+            cfg: cfg.clone(),
+            platform: platform_fingerprint(platform),
+            dag: dag_fingerprint(dag),
+        };
+        match self.inner.lock().unwrap().get(&key) {
+            Some(Slot::Ready(hit)) => Some(hit.clone()),
+            _ => None,
+        }
     }
 
     /// Lookups served from the memo table so far.
@@ -232,9 +321,22 @@ impl ScheduleCache {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Lookups that had to run the two-stage DSE so far.
+    /// Lookups that had to run the two-stage DSE so far (including
+    /// waiters that blocked on another thread's in-flight solve).
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that blocked on *someone else's* in-flight solve
+    /// (single-flight waiters). A subset of [`Self::misses`].
+    pub fn stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative wall time waiters spent blocked on in-flight solves,
+    /// nanoseconds. Profiling only — never read by decisions.
+    pub fn stall_ns(&self) -> u64 {
+        self.stall_ns.load(Ordering::Relaxed)
     }
 
     /// Cumulative wall time spent in map lookups (both hits and
@@ -255,9 +357,15 @@ impl ScheduleCache {
         self.solve_count.load(Ordering::Relaxed)
     }
 
-    /// Number of distinct `(config, dag)` schedules held.
+    /// Number of distinct `(config, dag)` schedules held (ready
+    /// entries only; in-flight solves don't count until they land).
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Ready(_)))
+            .count()
     }
 
     /// Does the cache hold no schedules at all?
@@ -272,13 +380,20 @@ impl ScheduleCache {
 
     // ---- persistence -----------------------------------------------------
 
-    /// Serialize every entry (key + schedule) to a JSON value. Keys are
-    /// the same `(FilcoConfig, platform fp, dag fp)` triple as the
-    /// in-memory map; fingerprints are hex strings (u64 does not fit an
-    /// f64 exactly). Deterministic: entries sorted by key.
+    /// Serialize every ready entry (key + schedule) to a JSON value.
+    /// Keys are the same `(FilcoConfig, platform fp, dag fp)` triple as
+    /// the in-memory map; fingerprints are hex strings (u64 does not
+    /// fit an f64 exactly). Deterministic: entries sorted by key.
+    /// In-flight solves are skipped — they have no result to persist.
     pub fn to_json(&self) -> Json {
         let map = self.inner.lock().unwrap();
-        let mut sorted: Vec<(&Key, &Arc<CachedSchedule>)> = map.iter().collect();
+        let mut sorted: Vec<(&Key, &Arc<CachedSchedule>)> = map
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Ready(v) => Some((k, v)),
+                Slot::Pending(_) => None,
+            })
+            .collect();
         sorted.sort_by_key(|(k, _)| {
             (
                 k.platform,
@@ -349,7 +464,7 @@ impl ScheduleCache {
         let mut map = self.inner.lock().unwrap();
         for (key, schedule) in parsed {
             if let std::collections::hash_map::Entry::Vacant(slot) = map.entry(key) {
-                slot.insert(Arc::new(CachedSchedule::new(schedule)));
+                slot.insert(Slot::Ready(Arc::new(CachedSchedule::new(schedule))));
                 loaded += 1;
             }
         }
@@ -385,6 +500,64 @@ impl ScheduleCache {
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))?;
         self.load_json(&parsed)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+/// A cold-composition solve request for the [`BackgroundSolver`]: the
+/// fabric slice a planned resplit would give some tenant, plus that
+/// tenant's workload DAG.
+pub struct SolveRequest {
+    /// Fabric slice to schedule (a planned partition's config).
+    pub cfg: FilcoConfig,
+    /// The tenant's workload DAG.
+    pub dag: Dag,
+}
+
+/// Dedicated DSE thread taking cold-composition solves off the serving
+/// hot path: it drains [`SolveRequest`]s from a channel and resolves
+/// each through [`ScheduleCache::get_or_compute`], so the engine's
+/// policy epoch can defer a resplit whose slices are not yet cached and
+/// re-propose it once the background solves land. Duplicate requests
+/// (the same key re-deferred across epochs) collapse into cache hits or
+/// single-flight waits — the GA/MILP still runs once per key.
+pub struct BackgroundSolver {
+    tx: Option<mpsc::Sender<SolveRequest>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BackgroundSolver {
+    /// Spawn the solver thread. It exits when every requester handle
+    /// (including this struct's own) has been dropped.
+    pub fn spawn(platform: Platform, cache: Arc<ScheduleCache>) -> Self {
+        let (tx, rx) = mpsc::channel::<SolveRequest>();
+        let handle = std::thread::Builder::new()
+            .name("filco-dse".into())
+            .spawn(move || {
+                while let Ok(req) = rx.recv() {
+                    let _ = cache.get_or_compute(&platform, &req.cfg, &req.dag);
+                }
+            })
+            .expect("spawn background DSE solver thread");
+        Self { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// A cloneable handle for submitting solve requests (e.g. to hand
+    /// to a [`FabricEngine`](super::engine::FabricEngine)).
+    pub fn requester(&self) -> mpsc::Sender<SolveRequest> {
+        self.tx.as_ref().expect("solver not shut down").clone()
+    }
+}
+
+impl Drop for BackgroundSolver {
+    /// Closes the request channel and joins the thread, so every
+    /// submitted solve has landed in the cache by the time drop
+    /// returns. Any outstanding [`Self::requester`] clones must be
+    /// dropped first or the join blocks until they are.
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
     }
 }
 
@@ -470,6 +643,62 @@ mod tests {
         assert_eq!((cache.hits(), cache.misses()), (1, 1));
         assert!(Arc::ptr_eq(&a, &b), "hit must return the memoized Arc");
         assert!(a.per_request_s > 0.0);
+    }
+
+    #[test]
+    fn concurrent_misses_are_single_flight() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        const N: usize = 4;
+        let results: Vec<Arc<CachedSchedule>> = std::thread::scope(|s| {
+            let handles: Vec<_> =
+                (0..N).map(|_| s.spawn(|| cache.get_or_compute(&p, &cfg, &dag))).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // However the threads interleave, the expensive DSE ran once:
+        // one leader solved, everyone else hit or waited on its flight.
+        assert_eq!(cache.solve_count(), 1, "concurrent same-key misses must share one solve");
+        assert_eq!(cache.hits() + cache.misses(), N as u64);
+        assert!(cache.misses() >= 1);
+        assert_eq!(cache.stalls(), cache.misses() - 1, "every non-leader miss is a stall");
+        assert_eq!(cache.len(), 1);
+        for r in &results[1..] {
+            assert!(Arc::ptr_eq(&results[0], r), "all callers must share the leader's Arc");
+        }
+    }
+
+    #[test]
+    fn get_cached_probes_without_counting() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        assert!(cache.get_cached(&p, &cfg, &dag).is_none());
+        assert_eq!((cache.hits(), cache.misses()), (0, 0), "a probe is not a lookup");
+        let solved = cache.get_or_compute(&p, &cfg, &dag);
+        let probed = cache.get_cached(&p, &cfg, &dag).expect("ready after solve");
+        assert!(Arc::ptr_eq(&solved, &probed));
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+    }
+
+    #[test]
+    fn background_solver_lands_requests_in_the_cache() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s();
+        let cache = Arc::new(ScheduleCache::new(ScheduleCache::serving_solver()));
+        let solver = BackgroundSolver::spawn(p.clone(), cache.clone());
+        let tx = solver.requester();
+        tx.send(SolveRequest { cfg: cfg.clone(), dag: dag.clone() }).unwrap();
+        // Re-deferring the same key must not re-run the GA.
+        tx.send(SolveRequest { cfg: cfg.clone(), dag: dag.clone() }).unwrap();
+        drop(tx);
+        drop(solver); // join: both requests fully processed
+        assert!(cache.get_cached(&p, &cfg, &dag).is_some());
+        assert_eq!(cache.solve_count(), 1);
+        assert_eq!(cache.len(), 1);
     }
 
     #[test]

@@ -72,23 +72,50 @@
 //! (`completion_s`, served/rejected/throttled, every histogram value).
 //! While unified, every other transition is refused and no policy
 //! runs: there are no partitions to re-split, pack or preempt across.
+//!
+//! # Sharded stepping
+//!
+//! Partitions share no execution state — that is FILCO's whole pitch —
+//! so the partitioned step decomposes into *partition units*: each
+//! packed group (with its members' lanes) and each solo tenant's lane
+//! is one unit, moved wholesale into an owned task, stepped
+//! independently, and merged back in a fixed unit order. With
+//! [`FabricEngine::set_shards`] above 1 the units run on a pool of
+//! shard worker threads; at 1 they run inline through the *same* unit
+//! functions. Every float operation happens inside a unit and the
+//! merge only concatenates, so the emitted event stream is bit-for-bit
+//! identical for any shard count (the sharded-vs-serial differential
+//! in `rust/tests/serve_engine.rs` holds it there). Composition
+//! transitions and the policy epoch stay global barriers at the single
+//! [`FabricEngine::apply`] site, after every unit has merged.
+//!
+//! # Off-hot-path DSE (async solve)
+//!
+//! With [`PolicyConfig::async_solve`] set and a background solver
+//! attached ([`FabricEngine::set_solve_channel`]), a re-split whose new
+//! slices are not all memoized yet is *deferred*: the missing
+//! `(config, DAG)` keys are handed to the
+//! [`BackgroundSolver`](super::cache::BackgroundSolver) channel, the
+//! epoch keeps the last cached split, and the re-split is re-proposed
+//! at a later epoch boundary once the solves have landed — so the step
+//! and push hot paths never wait on a GA/MILP run.
 
 use std::collections::VecDeque;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc};
 
 use crate::arch::FilcoConfig;
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::coordinator::reconfig::Reconfigurator;
 use crate::platform::Platform;
 
-use super::cache::{CachedSchedule, ScheduleCache};
+use super::cache::{CachedSchedule, ScheduleCache, SolveRequest};
 use super::interleave::Interleaver;
 use super::policy::{
     backlog_weights, inflight_backlog_s, pack_groups, pack_quantum_s, should_pack,
     should_preempt, should_resplit, should_unpack, PolicyConfig,
 };
 use super::queue::PushError;
-use super::telemetry::{DecisionKind, DecisionSample, EpochSample, TenantSample};
+use super::telemetry::{DecisionKind, DecisionSample, EpochSample, LockMeter, TenantSample};
 use super::tenant::{admit_arrival, Arrival, BatchCursor, TenantSpec, TokenBucket};
 
 /// One observable state change of the engine, stamped with the fabric
@@ -301,6 +328,353 @@ struct UnifiedGroup {
     avail_s: f64,
 }
 
+// ---- sharded stepping ----------------------------------------------------
+
+/// Per-tenant mutable serving state, grouped so a partition unit's
+/// step can move it wholesale into a shard task and back: ownership is
+/// the synchronization — no locks, no sharing, no atomics on the step
+/// path.
+struct TenantLane {
+    /// Admitted requests waiting to be batched, as `(id, arrival_s)`.
+    pending: VecDeque<(u64, f64)>,
+    /// Fabric latency histogram (queueing + service).
+    hist: LatencyHistogram,
+    /// Requests served.
+    served: u64,
+    /// Fabric seconds consumed on this tenant's behalf.
+    fabric_s: f64,
+    /// The in-flight solo batch, if any (closed-form accounting).
+    busy: Option<InFlight>,
+    /// Fabric instant the tenant's solo slice frees up.
+    avail: f64,
+}
+
+impl Default for TenantLane {
+    fn default() -> Self {
+        Self {
+            pending: VecDeque::new(),
+            hist: LatencyHistogram::new(),
+            served: 0,
+            fabric_s: 0.0,
+            busy: None,
+            avail: 0.0,
+        }
+    }
+}
+
+/// One partition unit's owned state for a step: a solo tenant's lane,
+/// or a packed group with its members' lanes. Disjointness is
+/// structural — every tenant's lane is moved into at most one unit —
+/// so units can step on any thread without observing each other.
+enum UnitTask {
+    /// A non-packed tenant's solo slice.
+    Solo {
+        /// The tenant's index.
+        t: usize,
+        /// The tenant's serving state, moved out of the engine.
+        lane: TenantLane,
+        /// The tenant's current schedule.
+        sched: Arc<CachedSchedule>,
+        /// The tenant's batch cap.
+        max_batch: usize,
+    },
+    /// A packed group: the shared slice plus each member's lane,
+    /// schedule and batch cap (all parallel to `pk.members`).
+    Group {
+        /// The group's shared-slice state, moved out of the engine.
+        pk: PackedGroup,
+        /// Each member's `(tenant, lane)`, in member order.
+        lanes: Vec<(usize, TenantLane)>,
+        /// Each member's current schedule, in member order.
+        scheds: Vec<Arc<CachedSchedule>>,
+        /// Each member's batch cap, in member order.
+        max_batches: Vec<usize>,
+    },
+}
+
+/// What one unit's step produced, plus the state to reinstall.
+struct UnitOutcome {
+    /// Group progress and solo retirement events (merged first, in
+    /// unit order — the serial phase-1/phase-2 stream).
+    events: Vec<EngineEvent>,
+    /// Solo batch starts (merged after every unit's `events`, matching
+    /// the serial retire-everyone-then-start-everyone phase order).
+    start_events: Vec<EngineEvent>,
+    /// Batches admitted into the unit's interleaver this step.
+    packed_batches: u64,
+    /// The unit's state, handed back for reinstallation.
+    task: UnitTask,
+}
+
+/// Execute one partition unit's step on its owned state — the one
+/// function both the inline path and the shard workers run. Every
+/// float operation is unit-local, so the outcome is bit-identical
+/// regardless of which thread computes it.
+fn run_unit(mut unit: UnitTask, now: f64) -> UnitOutcome {
+    let mut events = Vec::new();
+    let mut start_events = Vec::new();
+    let mut packed_batches = 0u64;
+    match &mut unit {
+        UnitTask::Solo { t, lane, sched, max_batch } => {
+            // Retire, then start: a batch completing at `now` frees the
+            // slice for its tenant's next batch at the same instant,
+            // exactly like the serial retire/start phases.
+            if lane.busy.as_ref().is_some_and(|fl| fl.fin_s() <= now) {
+                let Some(fl) = lane.busy.take() else {
+                    panic!("tenant {t}: in-flight batch vanished after its completion check")
+                };
+                retire_inflight_lane(*t, lane, fl, &mut events);
+            }
+            if lane.busy.is_none() && lane.avail <= now {
+                if let Some(fl) = take_batch_lane(lane, sched, *max_batch, now) {
+                    lane.avail = fl.fin_s();
+                    start_events.push(EngineEvent::BatchStarted {
+                        tenant: *t,
+                        n: fl.arrived.len(),
+                        at_s: now,
+                    });
+                    lane.busy = Some(fl);
+                }
+            }
+        }
+        UnitTask::Group { pk, lanes, scheds, max_batches } => {
+            packed_batches = group_unit_step(pk, lanes, scheds, max_batches, now, &mut events);
+        }
+    }
+    UnitOutcome { events, start_events, packed_batches, task: unit }
+}
+
+/// One packed group's step on owned state: admit member batches into
+/// free interleaver slots and retire due steps, alternating until no
+/// progress — so a tenant's next batch starts the moment its previous
+/// one drains, exactly like a solo slice at the same fabric instant.
+/// Returns the number of batches admitted.
+fn group_unit_step(
+    pk: &mut PackedGroup,
+    lanes: &mut [(usize, TenantLane)],
+    scheds: &[Arc<CachedSchedule>],
+    max_batches: &[usize],
+    now: f64,
+    out: &mut Vec<EngineEvent>,
+) -> u64 {
+    let mut admitted = 0u64;
+    loop {
+        let mut progressed = false;
+        if !pk.unpacking {
+            for i in 0..lanes.len() {
+                let m = lanes[i].0;
+                let lane = &mut lanes[i].1;
+                if !pk.il.contains(m) && !lane.pending.is_empty() {
+                    let take = lane.pending.len().min(max_batches[i]);
+                    let mut arrived = Vec::with_capacity(take);
+                    for _ in 0..take {
+                        let (_id, arr) = lane
+                            .pending
+                            .pop_front()
+                            .expect("group admission: pending length was checked");
+                        arrived.push(arr);
+                    }
+                    if pk.il.is_empty() {
+                        // Idle slice: its clock catches up to now
+                        // before the new batch's first step.
+                        pk.t = pk.t.max(now);
+                    }
+                    pk.il.add(m, BatchCursor::new(scheds[i].clone(), take));
+                    pk.arrived.push((m, arrived));
+                    admitted += 1;
+                    out.push(EngineEvent::BatchStarted { tenant: m, n: take, at_s: now });
+                    progressed = true;
+                }
+            }
+        }
+        if drain_group_steps_lane(pk, lanes, now, out) > 0 {
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    admitted
+}
+
+/// Retire a group's interleaver steps whose end lies at or before
+/// `bound_s`, advancing the group clock, charging fabric time, and
+/// recording completed batches against the members' lanes. Returns how
+/// many batches completed — the one accounting site for packed
+/// retirement, used by [`group_unit_step`] (bounded by the step
+/// instant) and [`FabricEngine::finish`] (bound opened).
+fn drain_group_steps_lane(
+    pk: &mut PackedGroup,
+    lanes: &mut [(usize, TenantLane)],
+    bound_s: f64,
+    out: &mut Vec<EngineEvent>,
+) -> usize {
+    let mut completed = 0;
+    loop {
+        let Some(d) = pk.il.peek_next_s() else { break };
+        if pk.t + d > bound_s {
+            break;
+        }
+        let ev = pk
+            .il
+            .advance()
+            .expect("interleaver peeked a next step, so a live slot must advance");
+        pk.t += ev.swap_charge_s + ev.step.dur_s;
+        let t_done = pk.t;
+        let Some(li) = lanes.iter().position(|(m, _)| *m == ev.tenant) else {
+            panic!(
+                "tenant {} stepped in a group it is no member of (members {:?})",
+                ev.tenant, pk.members
+            )
+        };
+        lanes[li].1.fabric_s += ev.swap_charge_s + ev.step.dur_s;
+        if ev.done {
+            let Some(pos) = pk.arrived.iter().position(|(m, _)| *m == ev.tenant) else {
+                panic!(
+                    "tenant {} completed a packed batch with no arrival record in its \
+                     group (members {:?})",
+                    ev.tenant, pk.members
+                )
+            };
+            let (_, arrs) = pk.arrived.remove(pos);
+            let lane = &mut lanes[li].1;
+            for &arr in &arrs {
+                lane.hist.record((t_done - arr).max(0.0));
+                lane.served += 1;
+            }
+            out.push(EngineEvent::BatchDone {
+                tenant: ev.tenant,
+                n: arrs.len(),
+                at_s: t_done,
+                consumed_s: ev.step.consumed_s,
+            });
+            completed += 1;
+        }
+    }
+    completed
+}
+
+/// Retire one closed-form in-flight batch against its tenant's lane —
+/// the single accounting site shared by solo, unified and end-of-run
+/// retirement: record each request's fabric latency, bump `served`,
+/// charge the fabric-time ledger, emit [`EngineEvent::BatchDone`].
+fn retire_inflight_lane(t: usize, lane: &mut TenantLane, fl: InFlight, out: &mut Vec<EngineEvent>) {
+    let fin = fl.fin_s();
+    for &arr in &fl.arrived {
+        lane.hist.record((fin - arr).max(0.0));
+        lane.served += 1;
+    }
+    lane.fabric_s += fl.cursor.projected_total_s();
+    out.push(EngineEvent::BatchDone {
+        tenant: t,
+        n: fl.arrived.len(),
+        at_s: fin,
+        consumed_s: fl.cursor.projected_total_s(),
+    });
+}
+
+/// Drain up to `max_batch` queued requests of a lane into a fresh
+/// closed-form batch starting at `now` — the single batch-assembly
+/// site shared by the solo and unified starts. `None` when nothing is
+/// queued.
+fn take_batch_lane(
+    lane: &mut TenantLane,
+    sched: &Arc<CachedSchedule>,
+    max_batch: usize,
+    now: f64,
+) -> Option<InFlight> {
+    let take = lane.pending.len().min(max_batch);
+    if take == 0 {
+        return None;
+    }
+    let mut arrived = Vec::with_capacity(take);
+    for _ in 0..take {
+        let (_id, arr) = lane
+            .pending
+            .pop_front()
+            .expect("batch assembly: pending length was checked against the take");
+        arrived.push(arr);
+    }
+    let cursor = BatchCursor::new(sched.clone(), take);
+    Some(InFlight { cursor, start_s: now, arrived })
+}
+
+/// A unit-step job for a shard worker: which unit, stepped to what
+/// instant, and where its outcome sits in the merge order.
+struct ShardTask {
+    seq: usize,
+    now: f64,
+    unit: UnitTask,
+}
+
+struct ShardResult {
+    seq: usize,
+    outcome: UnitOutcome,
+}
+
+/// A fixed pool of shard worker threads stepping partition units in
+/// parallel. Tasks are distributed round-robin by merge sequence and
+/// results collected back into their sequence slots, so the merged
+/// outcome is a pure function of the tasks — thread interleaving can
+/// reorder *completion*, never the merge.
+struct ShardPool {
+    txs: Vec<mpsc::Sender<ShardTask>>,
+    results: mpsc::Receiver<ShardResult>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ShardPool {
+    fn new(workers: usize) -> Self {
+        let (res_tx, results) = mpsc::channel::<ShardResult>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::channel::<ShardTask>();
+            let res = res_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("filco-shard-{i}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        let outcome = run_unit(task.unit, task.now);
+                        if res.send(ShardResult { seq: task.seq, outcome }).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn shard worker thread");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Self { txs, results, handles }
+    }
+
+    /// Run every task to completion and return the outcomes in task
+    /// sequence order (a barrier: all units finish before the merge).
+    fn run(&self, tasks: Vec<ShardTask>) -> Vec<UnitOutcome> {
+        let n = tasks.len();
+        for task in tasks {
+            let w = task.seq % self.txs.len();
+            self.txs[w].send(task).expect("shard worker hung up mid-run");
+        }
+        let mut slots: Vec<Option<UnitOutcome>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let r = self.results.recv().expect("shard worker died mid-step");
+            slots[r.seq] = Some(r.outcome);
+        }
+        slots.into_iter().map(|s| s.expect("every sequence slot was filled")).collect()
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // Closing the task channels ends the workers' recv loops.
+        self.txs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
 /// The deterministic fabric execution core. See the module docs for
 /// the full story; drivers interact through [`Self::push`],
 /// [`Self::next_time`], [`Self::step`] and [`Self::finish`], and read
@@ -317,15 +691,26 @@ pub struct FabricEngine {
     per_req: Vec<f64>,
     dims: Vec<(u32, u32)>,
     buckets: Vec<Option<TokenBucket>>,
-    pending: Vec<VecDeque<(u64, f64)>>,
-    hist: Vec<LatencyHistogram>,
-    served: Vec<u64>,
+    /// Per-tenant serving state, one lane per tenant; lanes move
+    /// wholesale into partition-unit tasks during a step (see the
+    /// module docs' sharded-stepping section).
+    lanes: Vec<TenantLane>,
     rejected: Vec<u64>,
     throttled: Vec<u64>,
-    fabric_s: Vec<f64>,
-    busy: Vec<Option<InFlight>>,
-    avail: Vec<f64>,
     packs: Vec<PackedGroup>,
+    /// Configured shard count (1 = step units inline).
+    shards: usize,
+    /// The shard worker pool, spawned while `shards > 1`.
+    pool: Option<ShardPool>,
+    /// Background-solver request channel; with it attached and
+    /// [`PolicyConfig::async_solve`] set, re-splits onto uncached
+    /// slices are deferred instead of solved on the hot path.
+    solve_tx: Option<mpsc::Sender<SolveRequest>>,
+    /// Re-splits deferred to the background solver.
+    deferred: u64,
+    /// Engine-mutex hold-time meter shared with the live scheduler;
+    /// sampled into each [`EpochSample`] (zero when absent).
+    lock_meter: Option<Arc<LockMeter>>,
     /// `Some` while the fabric is composed as one unified accelerator
     /// ([`Transition::Unify`]); the partitioned state above is then
     /// inert (no solo slices, no packs, no policy).
@@ -476,15 +861,15 @@ impl FabricEngine {
             per_req,
             dims,
             buckets,
-            pending: vec![VecDeque::new(); t_n],
-            hist: vec![LatencyHistogram::new(); t_n],
-            served: vec![0; t_n],
+            lanes: (0..t_n).map(|_| TenantLane::default()).collect(),
             rejected: vec![0; t_n],
             throttled: vec![0; t_n],
-            fabric_s: vec![0.0; t_n],
-            busy: (0..t_n).map(|_| None).collect(),
-            avail: vec![0.0; t_n],
             packs: Vec::new(),
+            shards: 1,
+            pool: None,
+            solve_tx: None,
+            deferred: 0,
+            lock_meter: None,
             unified: None,
             arrivals,
             ai: 0,
@@ -548,6 +933,38 @@ impl FabricEngine {
         self.eager_completions = on;
     }
 
+    /// Step partition units on `n` parallel shard workers (`n <= 1`
+    /// steps them inline, through the same unit functions). The
+    /// emitted event stream is bit-for-bit identical for any shard
+    /// count — the merge order is fixed and all arithmetic is
+    /// unit-local — so this is purely a throughput knob.
+    pub fn set_shards(&mut self, n: usize) {
+        let n = n.max(1);
+        self.shards = n;
+        self.pool = (n > 1).then(|| ShardPool::new(n));
+    }
+
+    /// The configured shard count (1 = inline stepping).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Attach a background-solver request channel (see
+    /// [`BackgroundSolver::requester`](super::cache::BackgroundSolver::requester)).
+    /// Only consulted while [`PolicyConfig::async_solve`] is set:
+    /// re-splits whose new slices are not all memoized send the
+    /// missing keys here and defer instead of solving on the hot path.
+    pub fn set_solve_channel(&mut self, tx: mpsc::Sender<SolveRequest>) {
+        self.solve_tx = Some(tx);
+    }
+
+    /// Attach the live scheduler's engine-mutex hold-time meter; each
+    /// epoch's [`EpochSample`] then carries the cumulative hold time
+    /// (zero when detached, e.g. in the simulator).
+    pub fn set_lock_meter(&mut self, meter: Arc<LockMeter>) {
+        self.lock_meter = Some(meter);
+    }
+
     // ---- admission -------------------------------------------------------
 
     /// Admit one external request for `tenant` arriving at fabric
@@ -557,7 +974,7 @@ impl FabricEngine {
     /// identically.
     pub fn push(&mut self, tenant: usize, id: u64, arr_s: f64) -> Result<(), PushError> {
         let res = admit_arrival(
-            &mut self.pending[tenant],
+            &mut self.lanes[tenant].pending,
             self.caps[tenant],
             &mut self.buckets[tenant],
             self.per_req[tenant],
@@ -635,9 +1052,7 @@ impl FabricEngine {
             self.retire_unified(now, &mut out);
             self.start_unified(now, &mut out);
         } else {
-            self.groups_progress(now, &mut out);
-            self.retire_solo(now, &mut out);
-            self.start_solo(now, &mut out);
+            self.step_partitioned(now, &mut out);
             if epoch_armed {
                 self.maybe_epoch(now, cache, &mut out);
             }
@@ -654,103 +1069,108 @@ impl FabricEngine {
     /// work, live packed slots, or unconsumed trace arrivals.
     fn epoch_relevant(&self) -> bool {
         let preempt_on = self.policy.as_ref().is_some_and(PolicyConfig::preemption_enabled);
-        self.pending.iter().any(|q| !q.is_empty())
-            || (preempt_on && self.busy.iter().any(Option::is_some))
+        self.lanes.iter().any(|l| !l.pending.is_empty())
+            || (preempt_on && self.lanes.iter().any(|l| l.busy.is_some()))
             || self.packs.iter().any(|pk| !pk.il.is_empty())
             || self.trace_pending()
     }
 
-    /// The packed partitions: admit member batches into interleaver
-    /// slots and retire the steps whose end has been reached.
-    /// Alternating admission and retirement lets a tenant's next batch
-    /// start the moment its previous one drains, exactly like a solo
-    /// slice at the same fabric instant.
-    fn groups_progress(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
-        let mut gi = 0;
-        while gi < self.packs.len() {
-            loop {
-                let mut progressed = false;
-                if !self.packs[gi].unpacking {
-                    let members = self.packs[gi].members.clone();
-                    for m in members {
-                        if !self.packs[gi].il.contains(m) && !self.pending[m].is_empty() {
-                            let take = self.pending[m].len().min(self.specs[m].max_batch);
-                            let mut arrived = Vec::with_capacity(take);
-                            for _ in 0..take {
-                                let (_id, arr) = self.pending[m]
-                                    .pop_front()
-                                    .expect("group admission: pending length was checked");
-                                arrived.push(arr);
-                            }
-                            let sched = self.scheds[m].clone();
-                            let pk = &mut self.packs[gi];
-                            if pk.il.is_empty() {
-                                // Idle slice: its clock catches up to now
-                                // before the new batch's first step.
-                                pk.t = pk.t.max(now);
-                            }
-                            pk.il.add(m, BatchCursor::new(sched, take));
-                            pk.arrived.push((m, arrived));
-                            self.packed_batches += 1;
-                            out.push(EngineEvent::BatchStarted { tenant: m, n: take, at_s: now });
-                            progressed = true;
-                        }
+    /// The partitioned-mode step body: decompose the fabric into
+    /// partition units — packed groups in group order, then active
+    /// solo tenants ascending — step each unit (inline, or on the
+    /// shard pool when one is attached), and merge outcomes in unit
+    /// order. The merge performs no float arithmetic and the unit
+    /// order is fixed, so the event stream is bit-for-bit identical
+    /// for any shard count (held there by the sharded-vs-serial
+    /// differential in `rust/tests/serve_engine.rs`).
+    fn step_partitioned(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
+        let t_n = self.specs.len();
+        let packs = std::mem::take(&mut self.packs);
+        let mut lane_slots: Vec<Option<TenantLane>> =
+            std::mem::take(&mut self.lanes).into_iter().map(Some).collect();
+        let mut tasks: Vec<ShardTask> = Vec::new();
+        for pk in packs {
+            let lanes: Vec<(usize, TenantLane)> = pk
+                .members
+                .iter()
+                .map(|&m| (m, lane_slots[m].take().expect("a tenant sits in at most one pack")))
+                .collect();
+            let scheds = pk.members.iter().map(|&m| self.scheds[m].clone()).collect();
+            let max_batches = pk.members.iter().map(|&m| self.specs[m].max_batch).collect();
+            tasks.push(ShardTask {
+                seq: tasks.len(),
+                now,
+                unit: UnitTask::Group { pk, lanes, scheds, max_batches },
+            });
+        }
+        for t in 0..t_n {
+            // Packed members' lanes are already owned by their group
+            // task; idle solo lanes (nothing in flight, nothing
+            // queued) step as provable no-ops and are skipped.
+            let active = matches!(
+                &lane_slots[t],
+                Some(lane) if lane.busy.is_some() || !lane.pending.is_empty()
+            );
+            if !active {
+                continue;
+            }
+            let lane = lane_slots[t].take().expect("solo activity was just observed");
+            tasks.push(ShardTask {
+                seq: tasks.len(),
+                now,
+                unit: UnitTask::Solo {
+                    t,
+                    lane,
+                    sched: self.scheds[t].clone(),
+                    max_batch: self.specs[t].max_batch,
+                },
+            });
+        }
+        let outcomes: Vec<UnitOutcome> = match &self.pool {
+            Some(pool) if tasks.len() > 1 => pool.run(tasks),
+            _ => tasks.into_iter().map(|task| run_unit(task.unit, task.now)).collect(),
+        };
+        // Deterministic merge: every unit's progress/retire events in
+        // unit order, then every unit's start events in unit order —
+        // the serial phase order — while the moved state reinstalls.
+        let mut packs = Vec::new();
+        let mut starts: Vec<Vec<EngineEvent>> = Vec::with_capacity(outcomes.len());
+        for oc in outcomes {
+            out.extend(oc.events);
+            starts.push(oc.start_events);
+            self.packed_batches += oc.packed_batches;
+            match oc.task {
+                UnitTask::Group { pk, lanes, .. } => {
+                    for (m, lane) in lanes {
+                        lane_slots[m] = Some(lane);
                     }
+                    packs.push(pk);
                 }
-                if self.drain_group_steps(gi, now, out) > 0 {
-                    progressed = true;
-                }
-                if !progressed {
-                    break;
+                UnitTask::Solo { t, lane, .. } => {
+                    lane_slots[t] = Some(lane);
                 }
             }
-            gi += 1;
         }
+        for s in starts {
+            out.extend(s);
+        }
+        self.packs = packs;
+        self.lanes = lane_slots
+            .into_iter()
+            .map(|s| s.expect("every lane reinstalled after the merge"))
+            .collect();
     }
 
-    /// Retire group `gi`'s interleaver steps whose end lies at or
-    /// before `bound_s`, advancing the group clock, charging fabric
-    /// time, and recording completed batches. Returns how many batches
-    /// completed — the one accounting site for packed retirement, used
-    /// by [`Self::groups_progress`] (bounded by the step instant) and
-    /// [`Self::finish`] (bound opened).
+    /// Serial wrapper over [`drain_group_steps_lane`] for group `gi`
+    /// against the engine's own lanes — used by [`Self::finish`],
+    /// which drains without admitting (never through the unit step).
     fn drain_group_steps(&mut self, gi: usize, bound_s: f64, out: &mut Vec<EngineEvent>) -> usize {
-        let mut completed = 0;
-        loop {
-            let pk = &mut self.packs[gi];
-            let Some(d) = pk.il.peek_next_s() else { break };
-            if pk.t + d > bound_s {
-                break;
-            }
-            let ev = pk
-                .il
-                .advance()
-                .expect("interleaver peeked a next step, so a live slot must advance");
-            pk.t += ev.swap_charge_s + ev.step.dur_s;
-            let t_done = pk.t;
-            self.fabric_s[ev.tenant] += ev.swap_charge_s + ev.step.dur_s;
-            if ev.done {
-                let pk = &mut self.packs[gi];
-                let Some(pos) = pk.arrived.iter().position(|(m, _)| *m == ev.tenant) else {
-                    panic!(
-                        "tenant {} completed a packed batch with no arrival record in its \
-                         group (members {:?})",
-                        ev.tenant, pk.members
-                    )
-                };
-                let (_, arrs) = pk.arrived.remove(pos);
-                for &arr in &arrs {
-                    self.hist[ev.tenant].record((t_done - arr).max(0.0));
-                    self.served[ev.tenant] += 1;
-                }
-                out.push(EngineEvent::BatchDone {
-                    tenant: ev.tenant,
-                    n: arrs.len(),
-                    at_s: t_done,
-                    consumed_s: ev.step.consumed_s,
-                });
-                completed += 1;
-            }
+        let members = self.packs[gi].members.clone();
+        let mut lanes: Vec<(usize, TenantLane)> =
+            members.iter().map(|&m| (m, std::mem::take(&mut self.lanes[m]))).collect();
+        let completed = drain_group_steps_lane(&mut self.packs[gi], &mut lanes, bound_s, out);
+        for (m, lane) in lanes {
+            self.lanes[m] = lane;
         }
         completed
     }
@@ -771,43 +1191,18 @@ impl FabricEngine {
         self.retire_inflight(t, fl, out);
     }
 
-    /// Retire one closed-form in-flight batch — the single accounting
-    /// site shared by solo and unified retirement: record each
-    /// request's fabric latency, bump `served`, charge the tenant's
-    /// fabric-time ledger, and emit [`EngineEvent::BatchDone`].
+    /// Retire one closed-form in-flight batch against the engine's own
+    /// lanes (see [`retire_inflight_lane`] for the accounting) — the
+    /// unified composition's retirement site.
     fn retire_inflight(&mut self, t: usize, fl: InFlight, out: &mut Vec<EngineEvent>) {
-        let fin = fl.fin_s();
-        for &arr in &fl.arrived {
-            self.hist[t].record((fin - arr).max(0.0));
-            self.served[t] += 1;
-        }
-        self.fabric_s[t] += fl.cursor.projected_total_s();
-        out.push(EngineEvent::BatchDone {
-            tenant: t,
-            n: fl.arrived.len(),
-            at_s: fin,
-            consumed_s: fl.cursor.projected_total_s(),
-        });
+        retire_inflight_lane(t, &mut self.lanes[t], fl, out);
     }
 
-    /// Drain up to `max_batch` queued requests of tenant `t` into a
-    /// fresh closed-form batch starting at `now` — the single
-    /// batch-assembly site shared by the solo and unified starts.
-    /// `None` when the tenant has nothing queued.
+    /// Assemble tenant `t`'s next batch from the engine's own lanes
+    /// (see [`take_batch_lane`]) — the unified composition's
+    /// batch-assembly site.
     fn take_batch(&mut self, t: usize, now: f64) -> Option<InFlight> {
-        let take = self.pending[t].len().min(self.specs[t].max_batch);
-        if take == 0 {
-            return None;
-        }
-        let mut arrived = Vec::with_capacity(take);
-        for _ in 0..take {
-            let (_id, arr) = self.pending[t]
-                .pop_front()
-                .expect("batch assembly: pending length was checked against the take");
-            arrived.push(arr);
-        }
-        let cursor = BatchCursor::new(self.scheds[t].clone(), take);
-        Some(InFlight { cursor, start_s: now, arrived })
+        take_batch_lane(&mut self.lanes[t], &self.scheds[t], self.specs[t].max_batch, now)
     }
 
     /// The unified round-robin pick: when the whole-fabric slice is
@@ -833,41 +1228,6 @@ impl FabricEngine {
             out.push(EngineEvent::BatchStarted { tenant: t, n: fl.arrived.len(), at_s: now });
             u.busy = Some((t, fl));
             return;
-        }
-    }
-
-    /// Retire solo batches whose (projected) completion has been
-    /// reached. Recording at completion: an undisturbed cursor's total
-    /// is the closed-form batch time, so latencies match the
-    /// batch-atomic model exactly; a preempted batch records its
-    /// actual (re-costed, switch-charged) completion.
-    fn retire_solo(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
-        for t in 0..self.specs.len() {
-            let done = self.busy[t].as_ref().is_some_and(|fl| fl.fin_s() <= now);
-            if done {
-                let Some(fl) = self.busy[t].take() else {
-                    panic!("tenant {t}: in-flight batch vanished after its completion check")
-                };
-                self.retire_inflight(t, fl, out);
-            }
-        }
-    }
-
-    /// Each tenant's solo partition starts its next batch if its slice
-    /// is free. Packed members have no slice of their own — their
-    /// batches are admitted by [`Self::groups_progress`].
-    fn start_solo(&mut self, now: f64, out: &mut Vec<EngineEvent>) {
-        for t in 0..self.specs.len() {
-            if self.in_pack(t) {
-                continue;
-            }
-            if self.busy[t].is_some() || self.avail[t] > now {
-                continue;
-            }
-            let Some(fl) = self.take_batch(t, now) else { continue };
-            self.avail[t] = fl.fin_s();
-            out.push(EngineEvent::BatchStarted { tenant: t, n: fl.arrived.len(), at_s: now });
-            self.busy[t] = Some(fl);
         }
     }
 
@@ -919,7 +1279,7 @@ impl FabricEngine {
             // remaining-work signals and preemption decisions below
             // then reflect *exact* cursor positions, not batch-start
             // estimates, in both drivers.
-            for fl in self.busy.iter_mut().flatten() {
+            for fl in self.lanes.iter_mut().filter_map(|l| l.busy.as_mut()) {
                 while fl.cursor.peek_consumed_s().is_some_and(|c| fl.start_s + c <= now) {
                     let _ = fl.cursor.advance();
                 }
@@ -928,9 +1288,10 @@ impl FabricEngine {
         let switch_cost = self.recon.switch_cost_s();
         let backlog: Vec<f64> = (0..t_n)
             .map(|t| {
-                let queued = self.pending[t].len() as f64 * self.per_req[t];
+                let queued = self.lanes[t].pending.len() as f64 * self.per_req[t];
                 let inflight = if preempt_on {
-                    self.busy[t]
+                    self.lanes[t]
+                        .busy
                         .as_ref()
                         .map(|fl| inflight_backlog_s(fl.cursor.remaining_s(), switch_cost, &p))
                         .unwrap_or(0.0)
@@ -994,7 +1355,7 @@ impl FabricEngine {
             // the work is immovable (and invisible to the fit gate),
             // so a busy tenant must not be packed at all.
             let eligible: Vec<bool> = (0..t_n)
-                .map(|t| !self.in_pack(t) && (preempt_on || self.busy[t].is_none()))
+                .map(|t| !self.in_pack(t) && (preempt_on || self.lanes[t].busy.is_none()))
                 .collect();
             let capacity_s = p.epoch_s / p.pack_headroom_factor;
             for members in pack_groups(&backlog, &eligible, capacity_s) {
@@ -1053,7 +1414,7 @@ impl FabricEngine {
                 at_s: now,
                 tenants: (0..t_n)
                     .map(|t| TenantSample {
-                        queue_depth: self.pending[t].len(),
+                        queue_depth: self.lanes[t].pending.len(),
                         backlog_s: backlog[t],
                         bucket_tokens: self.buckets[t].as_ref().map(TokenBucket::tokens),
                     })
@@ -1062,6 +1423,8 @@ impl FabricEngine {
                 pack_shapes: self.packs.iter().map(|pk| pk.members.clone()).collect(),
                 cache_hits: cache.hits(),
                 cache_misses: cache.misses(),
+                lock_held_ns: self.lock_meter.as_ref().map_or(0, |m| m.held_ns()),
+                dse_stall_ns: cache.stall_ns(),
                 decisions: std::mem::take(&mut self.epoch_decisions),
             };
             if let Some(tl) = self.timeline.as_mut() {
@@ -1103,7 +1466,9 @@ impl FabricEngine {
     /// the partitioned fabric is idle — the constructor applies it
     /// before any work exists, and there is no inverse transition.
     fn apply_unify(&mut self, now: f64, cache: &ScheduleCache, out: &mut Vec<EngineEvent>) -> bool {
-        if self.busy.iter().any(Option::is_some) || self.packs.iter().any(|pk| !pk.il.is_empty()) {
+        if self.lanes.iter().any(|l| l.busy.is_some())
+            || self.packs.iter().any(|pk| !pk.il.is_empty())
+        {
             log::warn!("unify rejected: in-flight work on partitioned slices");
             return false;
         }
@@ -1141,8 +1506,8 @@ impl FabricEngine {
         // handoff seeds it with live work).
         let mut t0 = now;
         for &m in &members {
-            match self.busy[m].take() {
-                None => t0 = t0.max(self.avail[m]),
+            match self.lanes[m].busy.take() {
+                None => t0 = t0.max(self.lanes[m].avail),
                 Some(mut fl) => {
                     // Commit the layer steps that retired by `now`
                     // (idempotent with the epoch sync), then move the
@@ -1154,19 +1519,19 @@ impl FabricEngine {
                     debug_assert!(!fl.cursor.is_done(), "a done batch would have retired");
                     // Reprogram charges parked on `avail` by earlier
                     // re-splits are still owed after the migration.
-                    let extra = (self.avail[m] - fl.fin_s()).max(0.0);
+                    let extra = (self.lanes[m].avail - fl.fin_s()).max(0.0);
                     t0 = t0.max(now + extra);
                     // The solo projection is void once the batch
                     // migrates; `avail` is rewritten at unpack and must
                     // not carry a stale (possibly later) completion
                     // into `completion_s`.
-                    self.avail[m] = now + extra;
+                    self.lanes[m].avail = now + extra;
                     // Solo batches charge fabric_s at retirement; a
                     // handed-off batch retires through the interleaver,
                     // which charges only the *remaining* steps — so the
                     // pre-handoff work is charged here, keeping the
                     // per-tenant ledger whole.
-                    self.fabric_s[m] += fl.cursor.consumed_s();
+                    self.lanes[m].fabric_s += fl.cursor.consumed_s();
                     out.push(EngineEvent::PackHandoff {
                         tenant: m,
                         consumed_s: fl.cursor.consumed_s(),
@@ -1197,7 +1562,7 @@ impl FabricEngine {
         debug_assert!(self.packs[gi].il.is_empty(), "unpack only lands on a drained group");
         let pk = self.packs.remove(gi);
         for &m in &pk.members {
-            self.avail[m] = pk.t;
+            self.lanes[m].avail = pk.t;
         }
         self.retired_swaps += pk.il.swaps();
         self.unpacks += 1;
@@ -1227,6 +1592,52 @@ impl FabricEngine {
             .zip(&proposed)
             .map(|(g, &w)| (self.specs[g[0]].name.as_str(), w))
             .collect();
+        if p.async_solve {
+            if let Some(tx) = self.solve_tx.clone() {
+                // Off-hot-path DSE: plan the layout without committing,
+                // probe the cache for every new slice's schedule, and
+                // defer the whole re-split if any is missing — the
+                // missing keys go to the background solver and the
+                // epoch keeps the last cached split. A later epoch
+                // re-proposes the re-split; once every solve has
+                // landed, the probe passes and the commit below runs
+                // on pure cache hits.
+                let parts = match self.recon.plan(&named) {
+                    Ok(parts) => parts,
+                    Err(e) => {
+                        log::warn!("re-split rejected: {e}");
+                        return false;
+                    }
+                };
+                let mut cold: Vec<(usize, FilcoConfig)> = Vec::new();
+                for (gi, g) in groups.iter().enumerate() {
+                    let slice = parts[gi].config(&self.base);
+                    for &m in g {
+                        if cache.get_cached(&self.platform, &slice, &self.specs[m].dag).is_none() {
+                            cold.push((m, slice.clone()));
+                        }
+                    }
+                }
+                if !cold.is_empty() {
+                    if self.timeline.is_some() {
+                        // Margin carries how many schedules are still
+                        // being solved (a count, not seconds).
+                        self.epoch_decisions.push(DecisionSample {
+                            kind: DecisionKind::Defer,
+                            tenants: cold.iter().map(|(m, _)| *m).collect(),
+                            margin_s: cold.len() as f64,
+                            approved: false,
+                        });
+                    }
+                    self.deferred += 1;
+                    for (m, slice) in cold {
+                        let _ = tx
+                            .send(SolveRequest { cfg: slice, dag: self.specs[m].dag.clone() });
+                    }
+                    return false;
+                }
+            }
+        }
         let parts = match self.recon.split(&named) {
             Ok(parts) => parts,
             Err(e) => {
@@ -1246,7 +1657,7 @@ impl FabricEngine {
                 let pki = self.packs.iter().position(|pk| pk.members == *g);
                 let pki = pki.expect("multi-member group is the pack");
                 self.packs[pki].t = self.packs[pki].t.max(now) + switch;
-                self.fabric_s[g[0]] += switch;
+                self.lanes[g[0]].fabric_s += switch;
                 for &m in g {
                     let ns = cache.get_or_compute(&self.platform, &slice, &self.specs[m].dag);
                     // Parked members (no live slot) report Ok(false);
@@ -1266,7 +1677,7 @@ impl FabricEngine {
             let new_sched = cache.get_or_compute(&self.platform, &slice, &self.specs[t].dag);
             let mut preempt = false;
             if preempt_on {
-                if let Some(fl) = self.busy[t].as_ref() {
+                if let Some(fl) = self.lanes[t].busy.as_ref() {
                     // A potential switch lands at the next layer
                     // boundary; everything before it runs on the old
                     // slice either way, so compare the paths from
@@ -1302,22 +1713,24 @@ impl FabricEngine {
                 // in-flight step finishes on it, then the cursor
                 // re-bases onto the new schedule with the mid-DAG
                 // switch charged.
-                let Some(fl) = self.busy[t].as_mut() else {
+                let lane = &mut self.lanes[t];
+                let Some(fl) = lane.busy.as_mut() else {
                     panic!("tenant {t}: preemption approved with no batch in flight")
                 };
-                let extra = (self.avail[t] - fl.fin_s()).max(0.0);
+                let extra = (lane.avail - fl.fin_s()).max(0.0);
                 let _ = fl.cursor.advance();
                 fl.cursor
                     .retarget(new_sched.clone(), switch)
                     .expect("preempted cursor re-bases onto its own tenant's re-solved DAG");
-                self.avail[t] = fl.fin_s() + extra;
+                lane.avail = fl.fin_s() + extra;
                 self.preemptions += 1;
                 out.push(EngineEvent::Preempted { tenant: t, at_s: now });
             } else {
                 // In-flight batches finish on the old composition,
                 // then every slice pays the reprogram cost.
-                self.avail[t] = self.avail[t].max(now) + switch;
-                self.fabric_s[t] += switch;
+                let lane = &mut self.lanes[t];
+                lane.avail = lane.avail.max(now) + switch;
+                lane.fabric_s += switch;
             }
             self.per_req[t] = new_sched.per_request_s;
             self.scheds[t] = new_sched;
@@ -1353,12 +1766,12 @@ impl FabricEngine {
             // immediately (`self.now`), like the drained-group branch
             // below — the simulator picks within the arrival's own
             // step, so that instant never fires there.
-            if u.busy.is_some() || self.pending.iter().any(|q| !q.is_empty()) {
+            if u.busy.is_some() || self.lanes.iter().any(|l| !l.pending.is_empty()) {
                 next = next.min(u.avail_s.max(self.now));
             }
             return next.is_finite().then_some(next);
         }
-        let inflight_left = self.busy.iter().any(|b| b.is_some());
+        let inflight_left = self.lanes.iter().any(|l| l.busy.is_some());
         let preempt_on = self.policy.as_ref().is_some_and(PolicyConfig::preemption_enabled);
         for t in 0..self.specs.len() {
             if self.in_pack(t) {
@@ -1366,8 +1779,8 @@ impl FabricEngine {
                 // from the interleaver below.
                 continue;
             }
-            if !self.pending[t].is_empty() {
-                next = next.min(self.avail[t]);
+            if !self.lanes[t].pending.is_empty() {
+                next = next.min(self.lanes[t].avail);
             }
         }
         if (preempt_on || self.eager_completions) && inflight_left {
@@ -1375,15 +1788,17 @@ impl FabricEngine {
             // epochs may still preempt the in-flight work (and live
             // drivers retire eagerly either way).
             for t in 0..self.specs.len() {
-                if self.busy[t].is_some() {
-                    next = next.min(self.avail[t]);
+                if self.lanes[t].busy.is_some() {
+                    next = next.min(self.lanes[t].avail);
                 }
             }
         }
         for pk in &self.packs {
             if let Some(d) = pk.il.peek_next_s() {
                 next = next.min(pk.t + d);
-            } else if !pk.unpacking && pk.members.iter().any(|&m| !self.pending[m].is_empty()) {
+            } else if !pk.unpacking
+                && pk.members.iter().any(|&m| !self.lanes[m].pending.is_empty())
+            {
                 // A drained group with queued member work can admit a
                 // batch immediately. Only a live push between steps
                 // creates this state — the simulator admits within the
@@ -1409,10 +1824,15 @@ impl FabricEngine {
         // pick, exactly like the closed form's eager recording.
         self.retire_unified(f64::INFINITY, &mut out);
         // Solo leftovers retire unconditionally — the same accounting
-        // as a step, with the time bound opened.
-        self.retire_solo(f64::INFINITY, &mut out);
+        // as a step, with the time bound opened (every in-flight
+        // batch's projected completion is `<= INFINITY`).
+        for t in 0..self.specs.len() {
+            if let Some(fl) = self.lanes[t].busy.take() {
+                retire_inflight_lane(t, &mut self.lanes[t], fl, &mut out);
+            }
+        }
         // Packed leftovers drain their interleavers with the bound
-        // opened. This is *not* `groups_progress`: end-of-run drains
+        // opened. This is *not* the unit step: end-of-run drains
         // never admit still-pending member batches, matching the
         // pre-engine simulator's final drain exactly.
         let mut gi = 0;
@@ -1475,22 +1895,21 @@ impl FabricEngine {
 
     /// Requests waiting in tenant `t`'s pending queue.
     pub fn pending_len(&self, t: usize) -> usize {
-        self.pending[t].len()
+        self.lanes[t].pending.len()
     }
 
     /// Drop every request pending for tenant `t`, returning how many
     /// were discarded (test and shutdown aid; no latency is recorded).
     pub fn drain_pending(&mut self, t: usize) -> usize {
-        let n = self.pending[t].len();
-        self.pending[t].clear();
+        let n = self.lanes[t].pending.len();
+        self.lanes[t].pending.clear();
         n
     }
 
     /// Does the engine hold any work at all (pending requests,
     /// in-flight solo batches, or live interleaver slots)?
     pub fn has_work(&self) -> bool {
-        self.pending.iter().any(|q| !q.is_empty())
-            || self.busy.iter().any(|b| b.is_some())
+        self.lanes.iter().any(|l| !l.pending.is_empty() || l.busy.is_some())
             || self.unified.as_ref().is_some_and(|u| u.busy.is_some())
             || self.packs.iter().any(|pk| !pk.il.is_empty())
     }
@@ -1517,14 +1936,14 @@ impl FabricEngine {
         if let Some(u) = &self.unified {
             return u.avail_s;
         }
-        let solo = self.avail.iter().cloned().fold(0.0f64, f64::max);
+        let solo = self.lanes.iter().map(|l| l.avail).fold(0.0f64, f64::max);
         let packed = self.packs.iter().map(|pk| pk.t).fold(self.drained_completion, f64::max);
         solo.max(packed)
     }
 
     /// Requests served, per tenant.
-    pub fn served(&self) -> &[u64] {
-        &self.served
+    pub fn served(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.served).collect()
     }
 
     /// Requests rejected by queue-depth admission control, per tenant.
@@ -1540,12 +1959,12 @@ impl FabricEngine {
     /// Fabric seconds consumed on each tenant's behalf (layer steps,
     /// swap charges while packed, switch charges while leading).
     pub fn fabric_s(&self, t: usize) -> f64 {
-        self.fabric_s[t]
+        self.lanes[t].fabric_s
     }
 
     /// Per-tenant fabric latency histograms (queueing + service).
-    pub fn histograms(&self) -> &[LatencyHistogram] {
-        &self.hist
+    pub fn histograms(&self) -> Vec<LatencyHistogram> {
+        self.lanes.iter().map(|l| l.hist.clone()).collect()
     }
 
     /// Re-compositions performed (the setup split is not counted).
@@ -1556,6 +1975,12 @@ impl FabricEngine {
     /// In-flight batches preempted at a layer boundary.
     pub fn preemptions(&self) -> u64 {
         self.preemptions
+    }
+
+    /// Re-splits deferred because a new slice's schedule was still
+    /// being solved in the background (async-DSE mode only).
+    pub fn deferred_resplits(&self) -> u64 {
+        self.deferred
     }
 
     /// Policy epochs evaluated.

@@ -119,7 +119,7 @@ pub mod tenant;
 pub use crate::coordinator::metrics::{LatencyHistogram, Metrics};
 pub use crate::coordinator::serving::{Request, RequestQueue, Response, Servable, Server};
 
-pub use cache::{dag_fingerprint, CachedSchedule, ScheduleCache};
+pub use cache::{dag_fingerprint, BackgroundSolver, CachedSchedule, ScheduleCache, SolveRequest};
 pub use clock::{Clock, Pacer, VirtualClock, WallClock};
 pub use engine::{EngineEvent, FabricEngine, Transition};
 pub use interleave::{InterleaveEvent, Interleaver};
@@ -128,15 +128,19 @@ pub use policy::{
     should_preempt, should_resplit, should_unpack, PolicyConfig,
 };
 pub use queue::{BoundedQueue, PushError};
-pub use scheduler::{FabricScheduler, LiveConfig, LiveMode, LiveReport, LiveRequest, TenantReport};
+pub use scheduler::{
+    FabricScheduler, LiveConfig, LiveMode, LiveReport, LiveRequest, SchedulerSnapshot,
+    TenantReport,
+};
 pub use sim::{
     equal_split_per_request, simulate, simulate_instrumented, simulate_traced, Scenario,
     ServeReport, Strategy,
 };
 pub use telemetry::{
     event_from_json, event_to_json, report_from_json, report_to_json, trace_to_jsonl, write_trace,
-    DecisionKind, DecisionSample, EpochSample, RecordedTrace, RunTelemetry, StepProfile,
-    TelemetryConfig, TenantSample, TimelineReport, TraceSink, TRACE_VERSION,
+    DecisionKind, DecisionSample, EpochSample, LockMeter, RecordedTrace, RunTelemetry,
+    StallStats, StepProfile, TelemetryConfig, TenantSample, TimelineReport, TraceSink,
+    TRACE_VERSION,
 };
 pub use tenant::{
     batch_fabric_s, phased_trace, poisson_trace, Arrival, BatchCursor, CursorCheckpoint,

@@ -78,6 +78,14 @@ pub struct PolicyConfig {
     /// the pack-fit bound (`epoch / pack_headroom_factor`). Must be
     /// > 1 to avoid pack/unpack churn at the boundary.
     pub pack_unpack_factor: f64,
+    /// Run cold DSE solves off the hot path: when an approved re-split
+    /// needs a slice whose schedule is not cached yet, defer the
+    /// transition, hand the solves to the background solver, and keep
+    /// the last cached split until they land (the resplit is
+    /// re-proposed at a later epoch boundary). Off by default — the
+    /// synchronous path solves inline and the engine stays
+    /// single-threaded-deterministic with no solver thread attached.
+    pub async_solve: bool,
 }
 
 impl Default for PolicyConfig {
@@ -91,6 +99,7 @@ impl Default for PolicyConfig {
             pack_swap_margin: 0.25,
             pack_quantum_steps: 4,
             pack_unpack_factor: 2.0,
+            async_solve: false,
         }
     }
 }
@@ -133,6 +142,12 @@ impl PolicyConfig {
     /// Is cross-tenant packing enabled at all?
     pub fn packing_enabled(&self) -> bool {
         self.pack_headroom_factor.is_finite()
+    }
+
+    /// Enable deferred (off-hot-path) DSE solves for cold re-splits.
+    pub fn with_async_solve(mut self) -> Self {
+        self.async_solve = true;
+        self
     }
 }
 

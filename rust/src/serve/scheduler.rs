@@ -13,10 +13,17 @@
 //!   per-tenant queues under the one engine lock (the modern form of
 //!   the old per-tenant plan-lock/preempt-generation discipline: every
 //!   plan read and transition now happens under a single lock, so a
-//!   phantom preemption is structurally impossible). The tradeoff of
-//!   the single lock: a schedule-cache *miss* inside a policy epoch
-//!   runs the DSE solve while holding it, stalling pushes for the
-//!   solve's duration — warm the cache (`--cache-file`, or the
+//!   phantom preemption is structurally impossible). The lock's cost
+//!   is metered ([`LockMeter`] on `push` and [`Self::policy_step`],
+//!   surfaced per epoch in the timeline and by
+//!   [`Self::stall_stats`]). Historically a schedule-cache *miss*
+//!   inside a policy epoch ran the DSE solve while holding the lock,
+//!   stalling pushes for the solve's duration; with
+//!   [`PolicyConfig::async_solve`] the epoch instead hands the missing
+//!   `(config, DAG)` keys to a [`BackgroundSolver`] thread, keeps the
+//!   last cached split, and re-proposes at a later epoch — a cold
+//!   composition then costs `push` a cache *lookup*, never a solve.
+//!   Without async mode, warm the cache (`--cache-file`, or the
 //!   equal-split calibration every entry point performs) so the
 //!   serving path only ever hits;
 //! * **worker shells** — one thread per tenant, all running the same
@@ -48,11 +55,12 @@ use crate::arch::FilcoConfig;
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::platform::Platform;
 
-use super::cache::ScheduleCache;
+use super::cache::{BackgroundSolver, ScheduleCache};
 use super::clock::{Clock, WallClock};
 use super::engine::{EngineEvent, FabricEngine};
 use super::policy::PolicyConfig;
 use super::queue::PushError;
+use super::telemetry::{LockMeter, StallStats};
 use super::tenant::{Arrival, TenantSpec};
 
 /// Which composition the live scheduler runs — the same three
@@ -88,6 +96,11 @@ pub struct LiveConfig {
     pub timescale: f64,
     /// Cap on any single pacing sleep, so demos stay responsive.
     pub max_sleep: Duration,
+    /// Shard workers stepping partition units in parallel inside the
+    /// engine (1 = step inline). A throughput knob only: traces and
+    /// reports are bit-for-bit identical for any value
+    /// ([`FabricEngine::set_shards`]).
+    pub shards: usize,
 }
 
 impl Default for LiveConfig {
@@ -97,6 +110,7 @@ impl Default for LiveConfig {
             mode: LiveMode::Dynamic,
             timescale: 0.0,
             max_sleep: Duration::from_millis(100),
+            shards: 1,
         }
     }
 }
@@ -214,6 +228,25 @@ impl LiveReport {
     }
 }
 
+/// A point-in-time view of the scheduler's composition, captured under
+/// a single engine-lock acquisition by [`FabricScheduler::snapshot`].
+/// Per-field accessors would each take the lock separately, so a
+/// transition landing between two reads could pair tenant names with
+/// another composition's dimensions; the snapshot cannot tear.
+#[derive(Debug, Clone)]
+pub struct SchedulerSnapshot {
+    /// Number of tenants the scheduler serves.
+    pub num_tenants: usize,
+    /// For each tenant, the tenant whose partition currently hosts it
+    /// (itself unless the policy packed it onto another's slice).
+    pub hosts: Vec<usize>,
+    /// Current composition as `(name, fmus, cus)` triples, in tenant
+    /// order. Packed tenants report their shared partition's dimensions.
+    pub composition: Vec<(String, u32, u32)>,
+    /// The engine's fabric clock at capture time (seconds).
+    pub now_s: f64,
+}
+
 /// State behind the one engine lock: the deterministic core plus the
 /// shell-side bookkeeping that pairs live requests with engine events.
 struct Shared {
@@ -246,6 +279,16 @@ pub struct FabricScheduler {
     /// consumes its own virtual-time trace and the idle-relaxation
     /// shell stays out of the way, so the run replays the simulator.
     deterministic: bool,
+    /// Engine-mutex hold-time meter, fed by [`Self::push`] and
+    /// [`Self::policy_step`] and shared with the engine's timeline
+    /// sampling.
+    lock_meter: Arc<LockMeter>,
+    /// The async-DSE solver thread, spawned when the policy opts in
+    /// ([`PolicyConfig::async_solve`], [`LiveMode::Dynamic`] only).
+    /// Declared after `shared`: the engine's requester channel clone
+    /// drops with `shared` first, so the solver's shutdown join can
+    /// observe a disconnected queue and terminate.
+    background: Option<BackgroundSolver>,
 }
 
 impl FabricScheduler {
@@ -289,6 +332,11 @@ impl FabricScheduler {
         deterministic: bool,
     ) -> Result<Self, String> {
         let t_n = specs.len();
+        // The async-DSE solver works against the same shared cache and
+        // platform; spawn it before the engine so the engine can hold
+        // a requester channel from construction.
+        let background = (cfg.mode == LiveMode::Dynamic && cfg.policy.async_solve)
+            .then(|| BackgroundSolver::spawn(platform.clone(), cache.clone()));
         let mut engine = match cfg.mode {
             // The unified and static compositions run no policy: the
             // fabric's shape is fixed for the whole run.
@@ -312,6 +360,12 @@ impl FabricScheduler {
             }
         };
         engine.eager_completions(true);
+        engine.set_shards(cfg.shards);
+        let lock_meter = Arc::new(LockMeter::new());
+        engine.set_lock_meter(lock_meter.clone());
+        if let Some(solver) = &background {
+            engine.set_solve_channel(solver.requester());
+        }
         if deterministic {
             engine.record_trace(true);
         }
@@ -328,6 +382,8 @@ impl FabricScheduler {
             cv: Condvar::new(),
             stop_policy: AtomicBool::new(false),
             deterministic,
+            lock_meter,
+            background,
             cfg,
         })
     }
@@ -337,19 +393,46 @@ impl FabricScheduler {
         self.shared.lock().unwrap().engine.num_tenants()
     }
 
-    /// The tenant whose partition currently hosts `t` (`t` itself
-    /// unless the policy packed `t` onto another's slice).
-    pub fn host_of(&self, t: usize) -> usize {
-        self.shared.lock().unwrap().engine.host(t)
+    /// A consistent point-in-time view of the composition, read under
+    /// one lock acquisition — the accessor callers use instead of
+    /// stitching together per-field reads (each of which would take
+    /// and release the engine mutex, interleaving with transitions).
+    pub fn snapshot(&self) -> SchedulerSnapshot {
+        let s = self.shared.lock().unwrap();
+        let n = s.engine.num_tenants();
+        SchedulerSnapshot {
+            num_tenants: n,
+            hosts: (0..n).map(|t| s.engine.host(t)).collect(),
+            composition: (0..n)
+                .map(|t| {
+                    let (fmus, cus) = s.engine.dims(t);
+                    (s.engine.tenant_name(t).to_string(), fmus, cus)
+                })
+                .collect(),
+            now_s: s.engine.now_s(),
+        }
     }
 
     /// Admission-controlled enqueue for tenant `t`: closed check, then
     /// queue depth, then the tenant's fabric-time token bucket (charged
     /// the request's estimated cost on the current slice) — the same
     /// classification order as the simulator's trace ingest, because it
-    /// *is* the engine's one admission path.
+    /// *is* the engine's one admission path. The engine-lock hold time
+    /// is metered into [`Self::stall_stats`] and the epoch timeline.
     pub fn push(&self, t: usize, req: LiveRequest) -> Result<(), PushError> {
         let mut s = self.shared.lock().unwrap();
+        let t0 = Instant::now();
+        let res = self.push_locked(&mut s, t, req);
+        self.lock_meter.record_ns(t0.elapsed().as_nanos() as u64);
+        drop(s);
+        if res.is_ok() {
+            self.cv.notify_all();
+        }
+        res
+    }
+
+    /// The body of [`Self::push`], under the caller-held engine lock.
+    fn push_locked(&self, s: &mut Shared, t: usize, req: LiveRequest) -> Result<(), PushError> {
         if s.closed {
             return Err(PushError::Closed);
         }
@@ -372,12 +455,10 @@ impl FabricScheduler {
             && s.engine.next_time().is_none_or(|next| next > arr_s)
         {
             let events = s.engine.step(arr_s, &self.cache);
-            Self::record(&mut s, &events);
+            Self::record(s, &events);
         }
         s.engine.push(t, req.id, arr_s)?;
         s.reqs[t].push_back(req);
-        drop(s);
-        self.cv.notify_all();
         Ok(())
     }
 
@@ -387,24 +468,31 @@ impl FabricScheduler {
         self.cv.notify_all();
     }
 
-    /// Current composition as `(name, fmus, cus)` triples. Packed
-    /// tenants report their shared partition's dimensions.
-    pub fn composition(&self) -> Vec<(String, u32, u32)> {
-        let s = self.shared.lock().unwrap();
-        (0..s.engine.num_tenants())
-            .map(|t| {
-                let (fmus, cus) = s.engine.dims(t);
-                (s.engine.tenant_name(t).to_string(), fmus, cus)
-            })
-            .collect()
-    }
-
     /// Force one policy evaluation at the engine's current fabric
     /// instant (the epoch schedule is untouched). Returns true when
     /// the composition changed. Public so step-driven callers (and
-    /// tests) can exercise the policy without the wall-clock loop.
+    /// tests) can exercise the policy without the wall-clock loop. The
+    /// engine-lock hold time is metered into [`Self::stall_stats`].
     pub fn policy_step(&self) -> bool {
-        self.shared.lock().unwrap().engine.epoch_now(&self.cache)
+        let mut s = self.shared.lock().unwrap();
+        let t0 = Instant::now();
+        let changed = s.engine.epoch_now(&self.cache);
+        self.lock_meter.record_ns(t0.elapsed().as_nanos() as u64);
+        changed
+    }
+
+    /// Cumulative contention counters: engine-mutex hold time from
+    /// [`Self::push`] and [`Self::policy_step`], and DSE stalls from
+    /// the shared schedule cache (which may include other users of the
+    /// same cache — share a cache per serving stack to keep this
+    /// attribution clean).
+    pub fn stall_stats(&self) -> StallStats {
+        StallStats {
+            lock_held_ns: self.lock_meter.held_ns(),
+            lock_holds: self.lock_meter.holds(),
+            dse_stall_ns: self.cache.stall_ns(),
+            dse_stalls: self.cache.stalls(),
+        }
     }
 
     /// Drop every request still pending for tenant `t` (not yet in a
@@ -588,11 +676,12 @@ impl FabricScheduler {
         });
         let shared = self.shared.lock().unwrap();
         let engine = &shared.engine;
+        let served = engine.served();
         LiveReport {
             tenants: (0..n)
                 .map(|t| TenantReport {
                     name: engine.tenant_name(t).to_string(),
-                    served: engine.served()[t],
+                    served: served[t],
                     throttled: engine.throttled()[t],
                     fabric_s: engine.fabric_s(t),
                     wall_latency: shared.hist[t].clone(),
@@ -715,9 +804,9 @@ mod tests {
         for i in 0..500 {
             sched.push(0, LiveRequest::new(i)).unwrap();
         }
-        let before = sched.composition();
+        let before = sched.snapshot().composition;
         assert!(sched.policy_step(), "skewed backlog must trigger a re-split");
-        let after = sched.composition();
+        let after = sched.snapshot().composition;
         assert!(after[0].2 > before[0].2, "tenant a must gain CUs: {before:?} -> {after:?}");
         // No batch in flight: nothing to preempt.
         {
@@ -825,9 +914,10 @@ mod tests {
             assert_eq!(s.engine.packs(), 1, "light pair must pack");
             assert_eq!(s.engine.pack_group_sizes(), &[2]);
         }
-        assert_eq!(sched.host_of(2), 1, "s2 is hosted on s1's partition");
-        assert_eq!(sched.host_of(1), 1);
-        let comp = sched.composition();
+        let snap = sched.snapshot();
+        assert_eq!(snap.hosts[2], 1, "s2 is hosted on s1's partition");
+        assert_eq!(snap.hosts[1], 1);
+        let comp = snap.composition;
         assert_eq!(
             (comp[1].1, comp[1].2),
             (comp[2].1, comp[2].2),
@@ -844,7 +934,7 @@ mod tests {
             let s = sched.shared.lock().unwrap();
             assert_eq!(s.engine.unpacks(), 1, "flooded member must unpack");
         }
-        assert_eq!(sched.host_of(2), 2);
+        assert_eq!(sched.snapshot().hosts[2], 2);
         // Everything still gets served after the transitions. (Policy
         // epochs fire on the fabric timeline during the drain, so a
         // late re-pack of the emptied light pair is legitimate — the
@@ -886,7 +976,7 @@ mod tests {
         }
         // Pack the idle pair before the shells start.
         assert!(sched.policy_step());
-        assert_eq!(sched.host_of(2), 1);
+        assert_eq!(sched.snapshot().hosts[2], 1);
         // Traffic for both packed members lands after the transition.
         for i in 0..40 {
             sched.push(1, LiveRequest::new(500 + i)).unwrap();
@@ -907,5 +997,62 @@ mod tests {
         assert_eq!(sched.push(0, LiveRequest::new(1)).unwrap_err(), PushError::Closed);
         let report = sched.run();
         assert_eq!(report.total_served(), 0);
+    }
+
+    /// Cold-start contract of the async-DSE path: an epoch whose
+    /// proposed split is not cached defers to the background solver,
+    /// and neither that epoch nor any `push` during the pending solve
+    /// blocks longer than one policy epoch — the serving path's cost
+    /// is a cache lookup, never a solve.
+    #[test]
+    fn async_solve_keeps_cold_epochs_off_the_push_path() {
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let cache = Arc::new(ScheduleCache::new(tiny_solver()));
+        let specs = vec![
+            TenantSpec::new("a", zoo::mlp_s()).with_queue_capacity(10_000),
+            TenantSpec::new("b", zoo::mlp_s()).with_queue_capacity(10_000),
+        ];
+        let cfg = LiveConfig {
+            policy: PolicyConfig { epoch_s: 0.25, ..PolicyConfig::default() }.with_async_solve(),
+            timescale: 0.0,
+            ..LiveConfig::default()
+        };
+        let epoch = Duration::from_secs_f64(cfg.policy.epoch_s);
+        let sched = FabricScheduler::new(platform, base, specs, cache, cfg).unwrap();
+        // Flood tenant a while the shells are not running: the skewed
+        // proposal's unequal slices are shapes calibration never saw.
+        for i in 0..500 {
+            sched.push(0, LiveRequest::new(i)).unwrap();
+        }
+        let t0 = Instant::now();
+        let committed = sched.policy_step();
+        let epoch_wall = t0.elapsed();
+        assert!(!committed, "cold epoch must defer, not solve under the engine lock");
+        assert!(epoch_wall < epoch, "deferring epoch blocked {epoch_wall:?} (> one epoch)");
+        assert!(
+            sched.shared.lock().unwrap().engine.deferred_resplits() >= 1,
+            "the deferral must be counted"
+        );
+        // Ingress stays bounded by a cache lookup while the solve is
+        // in flight on the background thread.
+        let t1 = Instant::now();
+        sched.push(1, LiveRequest::new(9_000)).unwrap();
+        let push_wall = t1.elapsed();
+        assert!(push_wall < epoch, "push blocked {push_wall:?} during a pending solve");
+        // Once the background solve lands, a later epoch re-proposes
+        // the same split and commits it straight from the cache.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let mut committed = sched.policy_step();
+        while !committed && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+            committed = sched.policy_step();
+        }
+        assert!(committed, "deferred resplit must commit once the solve lands");
+        let stats = sched.stall_stats();
+        assert!(stats.lock_holds >= 502, "every push and epoch meters its hold: {stats:?}");
+        sched.close();
+        let report = sched.run();
+        assert_eq!(report.total_served(), 501, "the full backlog drains after the transition");
     }
 }

@@ -38,7 +38,7 @@ use super::cache::ScheduleCache;
 use super::clock::{Clock, VirtualClock};
 use super::engine::{EngineEvent, FabricEngine};
 use super::policy::PolicyConfig;
-use super::telemetry::{RunTelemetry, TelemetryConfig, TimelineReport};
+use super::telemetry::{RunTelemetry, StallStats, TelemetryConfig, TimelineReport};
 use super::tenant::{Arrival, TenantSpec};
 
 /// How the fabric is composed for the tenants.
@@ -83,6 +83,11 @@ pub struct Scenario {
     /// [`Reconfigurator`] default) — what-if studies on slower control
     /// planes.
     pub switch_cost_s: Option<f64>,
+    /// Shard workers stepping partition units in parallel (1 = step
+    /// inline). Purely a throughput knob: the event trace and report
+    /// are bit-for-bit identical for any value
+    /// ([`FabricEngine::set_shards`]).
+    pub shards: usize,
 }
 
 /// Outcome of one simulated serving run. All times are fabric seconds
@@ -247,8 +252,10 @@ pub fn simulate_instrumented(
         }
     }
     .expect("engine setup");
+    engine.set_shards(scenario.shards);
     engine.record_trace(telemetry.trace);
     engine.record_timeline(telemetry.timeline);
+    let stalls0 = (cache.stalls(), cache.stall_ns());
     let mut profile = super::telemetry::StepProfile::default();
     let mut timed_step = |engine: &mut FabricEngine, now: f64| {
         let t0 = std::time::Instant::now();
@@ -270,14 +277,23 @@ pub fn simulate_instrumented(
         samples: engine.take_timeline(),
     });
     let trace = telemetry.trace.then(|| engine.take_trace());
-    (report, RunTelemetry { trace, timeline, step_profile: profile })
+    // The simulator drives the engine without a mutex, so only the
+    // DSE-stall half of the stall ledger is meaningful here (and a
+    // warm-cache run reports zeros).
+    let stalls = StallStats {
+        lock_held_ns: 0,
+        lock_holds: 0,
+        dse_stall_ns: cache.stall_ns() - stalls0.1,
+        dse_stalls: cache.stalls() - stalls0.0,
+    };
+    (report, RunTelemetry { trace, timeline, step_profile: profile, stalls })
 }
 
 pub(crate) fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeReport {
     ServeReport {
         strategy: label.to_string(),
         completion_s: engine.completion_s(),
-        served: engine.served().to_vec(),
+        served: engine.served(),
         rejected: engine.rejected().to_vec(),
         throttled: engine.throttled().to_vec(),
         switches: engine.switches(),
@@ -287,7 +303,7 @@ pub(crate) fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeRep
         pack_swaps: engine.pack_swaps(),
         pack_group_sizes: engine.pack_group_sizes().to_vec(),
         epochs: engine.epochs(),
-        histograms: engine.histograms().to_vec(),
+        histograms: engine.histograms(),
     }
 }
 
@@ -320,7 +336,7 @@ mod tests {
         ];
         let per = equal_split_per_request(&platform, &base, &tenants, cache)[0];
         let arrivals = poisson_trace(&[2.0 / per, 0.2 / per], duration_reqs * per, seed);
-        (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, per)
+        (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, per)
     }
 
     fn test_policy(per: f64) -> PolicyConfig {
@@ -464,7 +480,7 @@ mod tests {
             pack_swap_margin: 10.0,
             ..PolicyConfig::calibrated(per[0]).with_packing()
         };
-        (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy)
+        (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, policy)
     }
 
     #[test]
@@ -543,7 +559,7 @@ mod tests {
             pack_swap_margin: 10.0,
             ..PolicyConfig::calibrated(per[0]).with_packing()
         };
-        let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None };
+        let sc = Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 };
         let n = sc.arrivals.len() as u64;
         let r = simulate(&sc, &Strategy::Dynamic(policy), &cache);
         assert_eq!(r.total_served(), n, "multi-way packing must not drop requests");

@@ -52,6 +52,7 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::coordinator::metrics::LatencyHistogram;
 use crate::util::json::Json;
@@ -662,6 +663,11 @@ pub enum DecisionKind {
     Pack,
     /// `should_unpack`: mark a packed group for dissolution.
     Unpack,
+    /// Async-DSE mode: an approved re-split whose slices were not all
+    /// cached yet was deferred; the background solver was asked to
+    /// compute them and the resplit will be re-proposed at a later
+    /// epoch once the solves land.
+    Defer,
 }
 
 impl DecisionKind {
@@ -672,6 +678,7 @@ impl DecisionKind {
             DecisionKind::Preempt => "preempt",
             DecisionKind::Pack => "pack",
             DecisionKind::Unpack => "unpack",
+            DecisionKind::Defer => "defer",
         }
     }
 }
@@ -726,6 +733,14 @@ pub struct EpochSample {
     pub cache_hits: u64,
     /// Schedule-cache misses so far (cumulative).
     pub cache_misses: u64,
+    /// Wall nanoseconds the engine mutex has been held so far across
+    /// instrumented critical sections (cumulative; 0 when no
+    /// [`LockMeter`] is attached, e.g. in the virtual-time simulator).
+    pub lock_held_ns: u64,
+    /// Wall nanoseconds lookups have stalled on someone else's
+    /// in-flight DSE solve so far (cumulative,
+    /// [`ScheduleCache::stall_ns`](super::cache::ScheduleCache::stall_ns)).
+    pub dse_stall_ns: u64,
     /// Every decision evaluated this epoch, in evaluation order.
     pub decisions: Vec<DecisionSample>,
 }
@@ -792,6 +807,8 @@ impl TimelineReport {
             );
             m.insert("cache_hits".to_string(), junum(s.cache_hits));
             m.insert("cache_misses".to_string(), junum(s.cache_misses));
+            m.insert("lock_held_ns".to_string(), junum(s.lock_held_ns));
+            m.insert("dse_stall_ns".to_string(), junum(s.dse_stall_ns));
             m.insert(
                 "decisions".to_string(),
                 Json::Arr(
@@ -887,6 +904,59 @@ impl StepProfile {
     }
 }
 
+/// Shared hold-time meter for a contended mutex — the same
+/// relaxed-atomics style as the [`ScheduleCache`] wall-time counters,
+/// so recording from several threads never serializes them.
+/// Observability only: nothing reads the meter back into a decision.
+///
+/// [`ScheduleCache`]: super::cache::ScheduleCache
+#[derive(Debug, Default)]
+pub struct LockMeter {
+    held_ns: AtomicU64,
+    holds: AtomicU64,
+}
+
+impl LockMeter {
+    /// Fresh meter with zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one instrumented critical section into the meter.
+    pub fn record_ns(&self, ns: u64) {
+        self.held_ns.fetch_add(ns, Ordering::Relaxed);
+        self.holds.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Cumulative wall nanoseconds of instrumented hold time.
+    pub fn held_ns(&self) -> u64 {
+        self.held_ns.load(Ordering::Relaxed)
+    }
+
+    /// Number of instrumented critical sections folded in.
+    pub fn holds(&self) -> u64 {
+        self.holds.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-contention and DSE-stall totals an instrumented run observed —
+/// the "is the mutex/solver the bottleneck?" half of [`RunTelemetry`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StallStats {
+    /// Wall nanoseconds the engine mutex was held across instrumented
+    /// critical sections (0 in the virtual-time simulator, which has no
+    /// contended mutex).
+    pub lock_held_ns: u64,
+    /// Instrumented critical sections counted into
+    /// [`Self::lock_held_ns`].
+    pub lock_holds: u64,
+    /// Wall nanoseconds schedule-cache lookups stalled on another
+    /// thread's in-flight DSE solve.
+    pub dse_stall_ns: u64,
+    /// Lookups that stalled that way.
+    pub dse_stalls: u64,
+}
+
 /// Everything an instrumented run recorded beyond its report.
 #[derive(Debug, Clone, Default)]
 pub struct RunTelemetry {
@@ -896,6 +966,9 @@ pub struct RunTelemetry {
     pub timeline: Option<TimelineReport>,
     /// Step-loop wall-time profile (always collected).
     pub step_profile: StepProfile,
+    /// Lock-hold and DSE-stall totals (always collected; zero where
+    /// the driver has no contended mutex).
+    pub stalls: StallStats,
 }
 
 #[cfg(test)]
@@ -1020,6 +1093,8 @@ mod tests {
                 pack_shapes: vec![],
                 cache_hits: 2,
                 cache_misses: 2,
+                lock_held_ns: 1500,
+                dse_stall_ns: 0,
                 decisions: vec![DecisionSample {
                     kind: DecisionKind::Resplit,
                     tenants: vec![],

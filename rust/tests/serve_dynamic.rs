@@ -39,7 +39,7 @@ fn skewed_scenario(cache: &ScheduleCache) -> (Scenario, PolicyConfig) {
     assert!(arrivals.len() > 50, "calibrated trace too small: {}", arrivals.len());
 
     let policy = PolicyConfig::calibrated(per[0]);
-    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy)
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, policy)
 }
 
 #[test]

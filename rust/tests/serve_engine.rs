@@ -85,7 +85,7 @@ fn traced_scenario(cache: &ScheduleCache, seed: u64) -> (Scenario, PolicyConfig,
         pack_swap_margin: 10.0,
         ..PolicyConfig::calibrated(per[0]).with_packing()
     };
-    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy, per[0])
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, policy, per[0])
 }
 
 /// A timescale that compresses `fabric_total_s` of fabric time to
@@ -211,6 +211,107 @@ fn live_and_sim_unified_produce_identical_engine_traces() {
         assert_eq!((live_report.switches, live_report.preemptions), (0, 0));
         assert_eq!((live_report.packs, live_report.unpacks, live_report.packed_batches), (0, 0, 0));
     }
+}
+
+#[test]
+fn sharded_stepping_is_bit_for_bit_identical_to_serial() {
+    // The shard pool is a throughput knob, never a semantic one: for
+    // every seed in the matrix and shards ∈ {1, 2, 4}, the dynamic run
+    // must emit the serial walk's exact event trace and report — `==`
+    // on every f64, full histogram distributions included. The unit
+    // merge does no float arithmetic, so this holds bit-for-bit on any
+    // host regardless of worker interleaving.
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    for seed in test_seeds() {
+        let (sc, policy, _per0) = traced_scenario(&cache, seed);
+        let (serial, serial_trace) =
+            simulate_traced(&sc, &Strategy::Dynamic(policy.clone()), &cache, true);
+        if seed == RICH_SEED {
+            assert!(
+                serial.switches >= 1 && serial.packs >= 1,
+                "the pinned scenario must exercise resplits and packs under sharding"
+            );
+        }
+        for shards in [1usize, 2, 4] {
+            let mut sharded = sc.clone();
+            sharded.shards = shards;
+            let (rep, trace) =
+                simulate_traced(&sharded, &Strategy::Dynamic(policy.clone()), &cache, true);
+            assert_eq!(
+                trace.len(),
+                serial_trace.len(),
+                "seed {seed} shards {shards}: event counts must match"
+            );
+            for (i, (a, b)) in trace.iter().zip(&serial_trace).enumerate() {
+                assert_eq!(a, b, "seed {seed} shards {shards}: trace diverges at event {i}");
+            }
+            let label = format!("seed {seed} shards {shards}");
+            assert_eq!(rep.completion_s, serial.completion_s, "{label}: completion");
+            assert_eq!(rep.served, serial.served, "{label}");
+            assert_eq!(rep.rejected, serial.rejected, "{label}");
+            assert_eq!(rep.throttled, serial.throttled, "{label}");
+            assert_eq!(
+                (rep.switches, rep.preemptions, rep.packs, rep.unpacks, rep.pack_swaps),
+                (
+                    serial.switches,
+                    serial.preemptions,
+                    serial.packs,
+                    serial.unpacks,
+                    serial.pack_swaps
+                ),
+                "{label}"
+            );
+            assert_eq!(rep.pack_group_sizes, serial.pack_group_sizes, "{label}");
+            assert_eq!(rep.epochs, serial.epochs, "{label}");
+            for (t, (h, sh)) in rep.histograms.iter().zip(&serial.histograms).enumerate() {
+                assert_eq!(h.count(), sh.count(), "{label} tenant {t}: histogram count");
+                assert_eq!(h.buckets(), sh.buckets(), "{label} tenant {t}: bucket counts");
+                assert_eq!(h.mean_s(), sh.mean_s(), "{label} tenant {t}: mean");
+                assert_eq!(h.max_s(), sh.max_s(), "{label} tenant {t}: max");
+                assert_eq!(h.p50(), sh.p50(), "{label} tenant {t}: p50");
+                assert_eq!(h.p95(), sh.p95(), "{label} tenant {t}: p95");
+                assert_eq!(h.p99(), sh.p99(), "{label} tenant {t}: p99");
+            }
+        }
+    }
+}
+
+#[test]
+fn async_solve_defers_resplit_until_the_background_result_lands() {
+    // Engine-level contract of the off-hot-path DSE: an epoch whose
+    // proposed split probes cold defers (no solve runs under the
+    // epoch), emits the missing keys on the solve channel, and keeps
+    // the last split; once the solves land in the cache, the next
+    // epoch commits the identical proposal.
+    let cache = ScheduleCache::new(small_solver());
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let specs = vec![
+        TenantSpec::new("heavy", zoo::mlp_l()).with_queue_capacity(1 << 20),
+        TenantSpec::new("light", zoo::mlp_s()).with_queue_capacity(1 << 20),
+    ];
+    let per = equal_split_per_request(&platform, &base, &specs, &cache);
+    let policy = PolicyConfig::calibrated(per[0]).with_async_solve();
+    let mut engine =
+        FabricEngine::new(platform.clone(), base, specs, Some(policy), None, Vec::new(), &cache)
+            .expect("engine");
+    let (tx, rx) = std::sync::mpsc::channel();
+    engine.set_solve_channel(tx);
+    for i in 0..500 {
+        engine.push(0, i, 0.0).unwrap();
+    }
+    let solves0 = cache.solve_count();
+    assert!(!engine.epoch_now(&cache), "cold epoch must defer, not commit");
+    assert!(engine.deferred_resplits() >= 1, "the deferral must be counted");
+    assert_eq!(cache.solve_count(), solves0, "a deferring epoch must never run the DSE");
+    // Drain the emitted miss requests and land them, playing the
+    // background solver synchronously so the test stays deterministic.
+    let reqs: Vec<_> = rx.try_iter().collect();
+    assert!(!reqs.is_empty(), "the cold keys must be handed to the solve channel");
+    for req in &reqs {
+        cache.get_or_compute(&platform, &req.cfg, &req.dag);
+    }
+    assert!(engine.epoch_now(&cache), "the warmed epoch must commit the deferred resplit");
 }
 
 // ---------------------------------------------------------------------------

@@ -109,7 +109,7 @@ fn two_small_one_heavy(cache: &ScheduleCache) -> (Scenario, PolicyConfig, Policy
         pack_swap_margin: 10.0,
         ..unpacked.clone().with_packing()
     };
-    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, unpacked, packed)
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, unpacked, packed)
 }
 
 #[test]

@@ -59,7 +59,7 @@ fn long_batch_burst(cache: &ScheduleCache) -> (Scenario, PolicyConfig, f64) {
         preempt_margin_factor: 1.0,
         ..PolicyConfig::default()
     };
-    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy, per0)
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, policy, per0)
 }
 
 #[test]
@@ -273,7 +273,7 @@ fn calibrated_poisson(cache: &ScheduleCache) -> (Scenario, PolicyConfig) {
     let rates = [2.5 / per[0], 0.1 / per[1], 0.1 / per[2]];
     let arrivals = poisson_trace(&rates, 60.0 * per[0], 9001);
     let policy = PolicyConfig::calibrated(per[0]).without_preemption();
-    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy)
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, policy)
 }
 
 #[test]

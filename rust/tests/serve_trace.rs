@@ -54,7 +54,7 @@ fn traced_scenario(cache: &ScheduleCache, seed: u64) -> (Scenario, PolicyConfig)
         pack_swap_margin: 10.0,
         ..PolicyConfig::calibrated(per[0]).with_packing()
     };
-    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None }, policy)
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, policy)
 }
 
 fn tenant_names(sc: &Scenario) -> Vec<String> {
