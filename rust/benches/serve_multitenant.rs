@@ -8,9 +8,11 @@
 //! Besides the table, the bench writes a machine-readable
 //! `BENCH_serve.json` snapshot to the repository root (override the
 //! location with `FILCO_BENCH_OUT=<path>`): per-strategy throughput /
-//! worst-tenant p99 / engine step ns/op, plus the DSE solve and
-//! schedule-cache lookup wall times the serving path depends on. The
-//! committed copy tracks serving performance across PRs.
+//! worst-tenant p99 / SLO attainment / engine step ns/op, plus the DSE
+//! solve and schedule-cache lookup wall times the serving path depends
+//! on, plus a `scenarios` object with static-vs-dynamic worst-p99 and
+//! SLO-attainment rows for every built-in zoo scenario. The committed
+//! copy tracks serving performance across PRs.
 //!
 //! Run: `cargo bench --bench serve_multitenant`
 //!
@@ -26,8 +28,9 @@ use filco::dse::Solver;
 use filco::platform::Platform;
 use filco::report::{eng, Table};
 use filco::serve::{
-    equal_split_per_request, poisson_trace, simulate_instrumented, PolicyConfig, RunTelemetry,
-    Scenario, ScheduleCache, ServeReport, Strategy, TelemetryConfig, TenantSpec,
+    equal_split_per_request, poisson_trace, scenario, simulate, simulate_instrumented,
+    PolicyConfig, RunTelemetry, Scenario, ScheduleCache, ServeReport, Strategy, TelemetryConfig,
+    TenantSpec,
 };
 use filco::util::json::Json;
 use filco::workload::zoo;
@@ -62,6 +65,7 @@ fn row_json(rep: &ServeReport, tel: &RunTelemetry, speedup_vs_serial: Option<f64
     m.insert("switches".to_string(), num(rep.switches as f64));
     m.insert("preemptions".to_string(), num(rep.preemptions as f64));
     m.insert("packs".to_string(), num(rep.packs as f64));
+    m.insert("slo_attainment".to_string(), num(rep.worst_slo_attainment()));
     m.insert("engine_steps".to_string(), num(tel.step_profile.steps as f64));
     m.insert("step_ns_per_op".to_string(), num(tel.step_profile.ns_per_step()));
     if let Some(s) = speedup_vs_serial {
@@ -174,6 +178,47 @@ fn main() {
         ]);
     }
     t.emit("serve_multitenant");
+
+    // Per-scenario rows: every built-in zoo shape, static equal split
+    // vs. dynamic re-composition, worst-tenant p99 and SLO attainment.
+    // `rust/tests/serve_scenarios.rs` proves the dominance claims; the
+    // snapshot tracks the margins across PRs.
+    let mut scen_rows = BTreeMap::new();
+    for &name in scenario::builtin_names() {
+        let mut spec = scenario::builtin(name).expect("zoo names resolve");
+        if sample {
+            spec.duration_reqs = 25.0;
+        }
+        let mat = match spec.materialize(&cache) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("scenario {name} failed to materialize: {e}");
+                std::process::exit(1);
+            }
+        };
+        let stat = simulate(&mat.scenario, &Strategy::StaticEqual, &cache);
+        let dynr = simulate(&mat.scenario, &Strategy::Dynamic(mat.policy.clone()), &cache);
+        let ratio = stat.worst_p99_s() / dynr.worst_p99_s().max(1e-12);
+        println!(
+            "scenario {name}: {} arrivals | static p99 {} slo {:.3} | \
+             dynamic p99 {} slo {:.3} | p99 ratio {:.2}x",
+            mat.scenario.arrivals.len(),
+            eng(stat.worst_p99_s()),
+            stat.worst_slo_attainment(),
+            eng(dynr.worst_p99_s()),
+            dynr.worst_slo_attainment(),
+            ratio
+        );
+        let mut row = BTreeMap::new();
+        row.insert("arrivals".to_string(), num(mat.scenario.arrivals.len() as f64));
+        row.insert("static_worst_p99_s".to_string(), num(stat.worst_p99_s()));
+        row.insert("dynamic_worst_p99_s".to_string(), num(dynr.worst_p99_s()));
+        row.insert("static_slo_attainment".to_string(), num(stat.worst_slo_attainment()));
+        row.insert("dynamic_slo_attainment".to_string(), num(dynr.worst_slo_attainment()));
+        row.insert("p99_ratio".to_string(), num(ratio));
+        scen_rows.insert(name.to_string(), Json::Obj(row));
+    }
+
     println!("schedule cache: {}", cache.stats());
     println!(
         "DSE: {} solves, {:.1} ms wall total; cache lookups {:.1} us wall total",
@@ -201,6 +246,7 @@ fn main() {
         "sharded_step_speedup".to_string(),
         num(serial_step_ns / reports[7].2.step_profile.ns_per_step().max(1e-9)),
     );
+    snap.insert("scenarios".to_string(), Json::Obj(scen_rows));
     snap.insert(
         "strategies".to_string(),
         Json::Obj(

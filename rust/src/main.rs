@@ -35,6 +35,13 @@
 //!           reconstructs the report from the event stream and holds
 //!           it to the recorded footer bit-for-bit (exit 1 on any
 //!           mismatch).
+//!   scenario list|describe <name>
+//!           the workload zoo: named, seeded, scale-free traffic
+//!           scenarios (steady, skewed, diurnal, flash-crowd, ramp,
+//!           epoch-burst) with per-tenant SLO deadlines. `filco serve
+//!           --scenario <name>` (or --scenario-file <json>) runs the
+//!           deterministic sim comparison on one and reports SLO
+//!           attainment next to the latency percentiles.
 //!   gantt   --model M [..]    ASCII utilization timeline from the sim
 //!   help                      print the flag-by-flag usage reference
 //!
@@ -52,11 +59,12 @@ use filco::isa::disasm;
 use filco::platform::Platform;
 use filco::runtime::Engine;
 use filco::serve::{
-    equal_split_per_request, poisson_trace, simulate, simulate_instrumented, write_trace,
-    FabricScheduler, LiveConfig, LiveMode, LiveRequest, PolicyConfig, RecordedTrace, Scenario,
-    ScheduleCache, Strategy, TelemetryConfig, TenantSpec, TimelineReport,
+    equal_split_per_request, poisson_trace, scenario, simulate, simulate_instrumented,
+    write_trace, FabricScheduler, LiveConfig, LiveMode, LiveRequest, PolicyConfig, RecordedTrace,
+    Scenario, ScenarioSpec, ScheduleCache, Strategy, TelemetryConfig, TenantSpec, TimelineReport,
 };
 use filco::sim::{self, Fabric};
+use filco::util::json::Json;
 use filco::workload::{zoo, Dag};
 
 fn model_by_name(name: &str) -> Option<Dag> {
@@ -129,6 +137,7 @@ COMMANDS
   gantt     ASCII per-unit utilization timeline from the fabric sim
   serve     multi-tenant serving on the live re-composable fabric
   trace     inspect a recorded serve trace (summarize | replay)
+  scenario  the workload zoo (list | describe <name>)
   help      this reference
 
 FLAGS (dse / sim / disasm / codegen / gantt)
@@ -183,6 +192,15 @@ FLAGS (serve)
                   margin that approved or declined it (dynamic
                   strategy only — fixed compositions run no epochs)
 
+  --scenario S    run a named zoo scenario instead of the default
+                  skewed demo (sim comparison; see `filco scenario
+                  list`): tenants, traffic shapes and SLO deadlines
+                  come from the scenario, calibrated to the measured
+                  equal-split service times. Reports per-tenant SLO
+                  attainment next to the latency percentiles
+  --scenario-file P  like --scenario, from a JSON spec file (the
+                  format `filco scenario describe <name>` prints)
+
 FLAGS (trace)
   filco trace summarize <path>   header, per-kind event counts, span,
                                  and the recorded report
@@ -191,9 +209,15 @@ FLAGS (trace)
                                  footer bit-for-bit; exit 1 on any
                                  mismatch
 
+FLAGS (scenario)
+  filco scenario list            one line per built-in scenario
+  filco scenario describe <name> tenants, shapes, SLO tiers, and the
+                                 JSON spec (--scenario-file format)
+
 EXAMPLE (end to end, copy-pasteable)
   filco serve --mode sim --requests 600 --pack on --trace-out /tmp/filco-trace.jsonl
-  filco trace replay /tmp/filco-trace.jsonl"
+  filco trace replay /tmp/filco-trace.jsonl
+  filco serve --scenario flash-crowd"
     );
 }
 
@@ -333,6 +357,18 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     // (the engine's merge keeps the event trace bit-for-bit identical),
     // and 0 workers would mean no one steps the fabric.
     let shards: usize = flags.get("shards").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+
+    // A zoo scenario replaces the default skewed demo entirely:
+    // tenants, traffic, and SLO deadlines come from the spec, and the
+    // run is the deterministic sim comparison.
+    if let Some(spec) = scenario_from_flags(flags) {
+        if flags.get("mode").map(String::as_str) == Some("live") {
+            eprintln!("--scenario/--scenario-file run the deterministic sim comparison; drop --mode live");
+            std::process::exit(2);
+        }
+        cmd_serve_scenario(&spec, strategy_flag, preempt, pack, shards);
+        return;
+    }
 
     let trace_out = flags.get("trace-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
     let timeline_out =
@@ -545,6 +581,122 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     save_cache(&cache);
 }
 
+/// Resolve `--scenario <name>` / `--scenario-file <path>` into a spec.
+/// `None` when neither flag is present; exits with a diagnostic on an
+/// unknown name or a malformed file.
+fn scenario_from_flags(flags: &HashMap<String, String>) -> Option<ScenarioSpec> {
+    if let Some(name) = flags.get("scenario").filter(|s| !s.is_empty()) {
+        return Some(scenario::builtin(name).unwrap_or_else(|| {
+            eprintln!("unknown scenario {name:?}; `filco scenario list` prints the zoo");
+            std::process::exit(2);
+        }));
+    }
+    let path = flags.get("scenario-file").filter(|s| !s.is_empty())?;
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        eprintln!("cannot read {path}: {e}");
+        std::process::exit(2);
+    });
+    let v = Json::parse(&text).unwrap_or_else(|e| {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    });
+    Some(ScenarioSpec::from_json(&v).unwrap_or_else(|e| {
+        eprintln!("{path}: {e}");
+        std::process::exit(2);
+    }))
+}
+
+/// Run one zoo scenario through the deterministic sim comparison,
+/// reporting SLO attainment next to the latency percentiles.
+fn cmd_serve_scenario(
+    spec: &ScenarioSpec,
+    strategy_flag: Option<&str>,
+    preempt: bool,
+    pack: bool,
+    shards: usize,
+) {
+    let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+    print!("{}", spec.describe());
+    let mat = match spec.materialize(&cache) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("scenario {:?}: {e}", spec.name);
+            std::process::exit(2);
+        }
+    };
+    let mut sc = mat.scenario;
+    sc.shards = shards;
+    for (t, p) in sc.tenants.iter().zip(&mat.per_request_s) {
+        println!("{:<10} equal-split per-request fabric time {:.4e} s", t.name, p);
+    }
+    println!("trace: {} arrivals\n", sc.arrivals.len());
+    let mut policy = mat.policy;
+    if !preempt {
+        policy = policy.without_preemption();
+    }
+    if pack {
+        policy = policy.with_packing();
+    }
+    let strategies = match strategy_flag {
+        Some("unified") => vec![Strategy::Unified],
+        Some("static") => vec![Strategy::StaticEqual],
+        Some("dynamic") => vec![Strategy::Dynamic(policy)],
+        _ => vec![Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)],
+    };
+    for strat in strategies {
+        let rep = simulate(&sc, &strat, &cache);
+        println!("{}", rep.summary());
+        for (t, spec_t) in sc.tenants.iter().enumerate() {
+            let h = &rep.histograms[t];
+            match rep.slo_deadline_s[t] {
+                Some(d) => println!(
+                    "    {:<10} p50 {:.3e} s  p99 {:.3e} s  slo[{:.2e} s] attainment {:.3}",
+                    spec_t.name,
+                    h.p50(),
+                    h.p99(),
+                    d,
+                    rep.slo_attainment(t)
+                ),
+                None => println!(
+                    "    {:<10} p50 {:.3e} s  p99 {:.3e} s",
+                    spec_t.name,
+                    h.p50(),
+                    h.p99()
+                ),
+            }
+        }
+    }
+    println!("schedule cache: {}", cache.stats());
+}
+
+/// `filco scenario list|describe <name>` — the workload zoo.
+fn cmd_scenario(args: &[String]) {
+    match args.first().map(String::as_str) {
+        Some("list") => {
+            for name in scenario::builtin_names() {
+                let s = scenario::builtin(name).expect("registry names resolve");
+                println!("{name:<12} {}", s.description);
+            }
+        }
+        Some("describe") => {
+            let Some(name) = args.get(1) else {
+                eprintln!("usage: filco scenario describe <name>");
+                std::process::exit(2);
+            };
+            let Some(spec) = scenario::builtin(name) else {
+                eprintln!("unknown scenario {name:?}; `filco scenario list` prints the zoo");
+                std::process::exit(2);
+            };
+            print!("{}", spec.describe());
+            println!("json: {}", spec.to_json().to_string_compact());
+        }
+        _ => {
+            eprintln!("usage: filco scenario list | describe <name>");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// `filco trace summarize|replay <path>` — inspect a recorded trace.
 fn cmd_trace(args: &[String]) {
     let action = args.first().map(String::as_str);
@@ -593,6 +745,7 @@ fn main() {
         "codegen" => cmd_codegen(&flags),
         "serve" => cmd_serve(&flags),
         "trace" => cmd_trace(&args[1..]),
+        "scenario" => cmd_scenario(&args[1..]),
         "gantt" => cmd_gantt(&flags),
         "help" | "--help" | "-h" => print_usage(),
         other => {

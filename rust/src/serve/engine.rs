@@ -112,7 +112,7 @@ use super::cache::{CachedSchedule, ScheduleCache, SolveRequest};
 use super::interleave::Interleaver;
 use super::policy::{
     backlog_weights, inflight_backlog_s, pack_groups, pack_quantum_s, should_pack,
-    should_preempt, should_resplit, should_unpack, PolicyConfig,
+    should_preempt, should_resplit, should_unpack, slo_backlog_boost, PolicyConfig,
 };
 use super::queue::PushError;
 use super::telemetry::{DecisionKind, DecisionSample, EpochSample, LockMeter, TenantSample};
@@ -347,6 +347,13 @@ struct TenantLane {
     busy: Option<InFlight>,
     /// Fabric instant the tenant's solo slice frees up.
     avail: f64,
+    /// Latency-SLO deadline copied from the tenant's [`SloClass`]
+    /// (`None` for throughput tiers — accounting is then inert).
+    deadline_s: Option<f64>,
+    /// Served requests whose fabric latency met the deadline.
+    slo_met: u64,
+    /// Served requests whose fabric latency missed the deadline.
+    slo_missed: u64,
 }
 
 impl Default for TenantLane {
@@ -358,6 +365,23 @@ impl Default for TenantLane {
             fabric_s: 0.0,
             busy: None,
             avail: 0.0,
+            deadline_s: None,
+            slo_met: 0,
+            slo_missed: 0,
+        }
+    }
+}
+
+/// Record one served request's SLO outcome on its lane — the single
+/// accounting site both retirement paths (solo/unified closed-form and
+/// packed interleaver drain) call, so attainment can never diverge
+/// between composition modes. A no-op for throughput tiers.
+fn record_slo(lane: &mut TenantLane, latency_s: f64) {
+    if let Some(d) = lane.deadline_s {
+        if latency_s <= d {
+            lane.slo_met += 1;
+        } else {
+            lane.slo_missed += 1;
         }
     }
 }
@@ -539,8 +563,10 @@ fn drain_group_steps_lane(
             let (_, arrs) = pk.arrived.remove(pos);
             let lane = &mut lanes[li].1;
             for &arr in &arrs {
-                lane.hist.record((t_done - arr).max(0.0));
+                let lat = (t_done - arr).max(0.0);
+                lane.hist.record(lat);
                 lane.served += 1;
+                record_slo(lane, lat);
             }
             out.push(EngineEvent::BatchDone {
                 tenant: ev.tenant,
@@ -561,8 +587,10 @@ fn drain_group_steps_lane(
 fn retire_inflight_lane(t: usize, lane: &mut TenantLane, fl: InFlight, out: &mut Vec<EngineEvent>) {
     let fin = fl.fin_s();
     for &arr in &fl.arrived {
-        lane.hist.record((fin - arr).max(0.0));
+        let lat = (fin - arr).max(0.0);
+        lane.hist.record(lat);
         lane.served += 1;
+        record_slo(lane, lat);
     }
     lane.fabric_s += fl.cursor.projected_total_s();
     out.push(EngineEvent::BatchDone {
@@ -861,7 +889,10 @@ impl FabricEngine {
             per_req,
             dims,
             buckets,
-            lanes: (0..t_n).map(|_| TenantLane::default()).collect(),
+            lanes: specs
+                .iter()
+                .map(|t| TenantLane { deadline_s: t.slo.deadline_s(), ..TenantLane::default() })
+                .collect(),
             rejected: vec![0; t_n],
             throttled: vec![0; t_n],
             packs: Vec::new(),
@@ -969,20 +1000,23 @@ impl FabricEngine {
 
     /// Admit one external request for `tenant` arriving at fabric
     /// instant `arr_s`: queue depth first (reject as full), then the
-    /// fabric-time token bucket (throttle) — the same classification
-    /// order as trace ingest, so both drivers count refusals
-    /// identically.
+    /// optional deadline shed, then the fabric-time token bucket
+    /// (throttle) — the same classification order as trace ingest, so
+    /// both drivers count refusals identically. A deadline shed is
+    /// traced as a `Rejected` event (callers still see the distinct
+    /// [`PushError::Deadline`]), so the trace format is unchanged.
     pub fn push(&mut self, tenant: usize, id: u64, arr_s: f64) -> Result<(), PushError> {
         let res = admit_arrival(
             &mut self.lanes[tenant].pending,
             self.caps[tenant],
             &mut self.buckets[tenant],
             self.per_req[tenant],
+            self.specs[tenant].shed_deadline_s(),
             id,
             arr_s,
         );
         match res {
-            Err(PushError::Full) => {
+            Err(PushError::Full) | Err(PushError::Deadline) => {
                 self.rejected[tenant] += 1;
                 self.emit(EngineEvent::Rejected { tenant, at_s: arr_s });
             }
@@ -1307,7 +1341,12 @@ impl FabricEngine {
                     .find(|pk| pk.members.contains(&t))
                     .map(|pk| pk.il.slot_remaining_s(t))
                     .unwrap_or(0.0);
-                queued + inflight + packed_inflight
+                // Latency-tier tenants see their backlog scaled by the
+                // SLO urgency boost; throughput tiers multiply by
+                // exactly 1.0, so every no-SLO run keeps its signal
+                // (and therefore its trace) bit-for-bit.
+                (queued + inflight + packed_inflight)
+                    * slo_backlog_boost(self.lanes[t].deadline_s, p.epoch_s)
             })
             .collect();
         let total_backlog: f64 = backlog.iter().sum();
@@ -1417,6 +1456,8 @@ impl FabricEngine {
                         queue_depth: self.lanes[t].pending.len(),
                         backlog_s: backlog[t],
                         bucket_tokens: self.buckets[t].as_ref().map(TokenBucket::tokens),
+                        slo_met: self.lanes[t].slo_met,
+                        slo_missed: self.lanes[t].slo_missed,
                     })
                     .collect(),
                 weights: self.weights.clone(),
@@ -1954,6 +1995,24 @@ impl FabricEngine {
     /// Requests refused by fabric-time token buckets, per tenant.
     pub fn throttled(&self) -> &[u64] {
         &self.throttled
+    }
+
+    /// Served requests that met their tenant's latency-SLO deadline,
+    /// per tenant (always 0 for throughput tiers).
+    pub fn slo_met(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.slo_met).collect()
+    }
+
+    /// Served requests that missed their tenant's latency-SLO
+    /// deadline, per tenant (always 0 for throughput tiers).
+    pub fn slo_missed(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.slo_missed).collect()
+    }
+
+    /// Each tenant's effective latency-SLO deadline (`None` for
+    /// throughput tiers and degenerate deadlines).
+    pub fn slo_deadlines(&self) -> Vec<Option<f64>> {
+        self.lanes.iter().map(|l| l.deadline_s).collect()
     }
 
     /// Fabric seconds consumed on each tenant's behalf (layer steps,

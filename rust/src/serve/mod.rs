@@ -73,8 +73,14 @@
 //! * [`queue`] — bounded MPMC request queues with admission control
 //!   ([`PushError`] classifications; monotonic-deadline batch pops).
 //! * [`tenant`] — tenant specs (queue depth, max batch, optional
-//!   [`RateLimit`]), the [`BatchCursor`] / [`TokenBucket`] building
-//!   blocks, and deterministic Poisson / phased traffic generators.
+//!   [`RateLimit`], [`SloClass`] latency/throughput tiers), the
+//!   [`BatchCursor`] / [`TokenBucket`] building blocks, and
+//!   deterministic Poisson / phased traffic generators.
+//! * [`scenario`] — the scenario zoo: named, seeded, scale-free
+//!   workload shapes ([`Shape`]: steady / diurnal / flash-crowd /
+//!   ramp / epoch-locked bursts), per-tenant SLO deadlines, trace
+//!   replay ([`replay_arrivals`]), and a JSON codec for
+//!   `filco serve --scenario-file`.
 //! * [`interleave`] — the per-partition [`Interleaver`]: two or more
 //!   cursors on one slice, swap charges, exact conservation.
 //! * [`cache`] — the schedule cache: two-stage DSE results memoized on
@@ -111,6 +117,7 @@ pub mod engine;
 pub mod interleave;
 pub mod policy;
 pub mod queue;
+pub mod scenario;
 pub mod scheduler;
 pub mod sim;
 pub mod telemetry;
@@ -125,9 +132,13 @@ pub use engine::{EngineEvent, FabricEngine, Transition};
 pub use interleave::{InterleaveEvent, Interleaver};
 pub use policy::{
     backlog_weights, inflight_backlog_s, pack_groups, pack_quantum_s, reduce_weights, should_pack,
-    should_preempt, should_resplit, should_unpack, PolicyConfig,
+    should_preempt, should_resplit, should_unpack, slo_backlog_boost, PolicyConfig,
 };
 pub use queue::{BoundedQueue, PushError};
+pub use scenario::{
+    builtin, builtin_names, generate_arrivals, model_dag, replay_arrivals, MaterializedScenario,
+    ScenarioSpec, ScenarioTenant, Shape,
+};
 pub use scheduler::{
     FabricScheduler, LiveConfig, LiveMode, LiveReport, LiveRequest, SchedulerSnapshot,
     TenantReport,
@@ -144,5 +155,5 @@ pub use telemetry::{
 };
 pub use tenant::{
     batch_fabric_s, phased_trace, poisson_trace, Arrival, BatchCursor, CursorCheckpoint,
-    RateLimit, RetargetError, StepEvent, TenantSpec, TokenBucket,
+    RateLimit, RetargetError, SloClass, StepEvent, TenantSpec, TokenBucket,
 };

@@ -317,6 +317,25 @@ pub fn should_unpack(combined_backlog_s: f64, epoch_s: f64, cfg: &PolicyConfig) 
         && combined_backlog_s * cfg.pack_headroom_factor > cfg.pack_unpack_factor * epoch_s
 }
 
+/// SLO urgency multiplier for the backlog signal: a latency-tier
+/// tenant whose deadline is shorter than one policy epoch cannot sit
+/// out an epoch of skew, so its backlog counts `epoch_s / deadline_s`
+/// times (never less than 1) toward weight proposals and pack fitting.
+///
+/// Throughput tiers (`deadline_s == None`) and deadlines at or above
+/// one epoch multiply by exactly `1.0` — the bit-for-bit identity on
+/// every finite `f64` — so a fabric with no latency tiers reproduces
+/// the unweighted signal, and therefore its whole event trace,
+/// unchanged. Degenerate deadlines (zero, negative, non-finite) are
+/// filtered upstream by `SloClass::deadline_s`, but a defensive guard
+/// here keeps the multiplier finite regardless.
+pub fn slo_backlog_boost(deadline_s: Option<f64>, epoch_s: f64) -> f64 {
+    match deadline_s {
+        Some(d) if d > 0.0 && d.is_finite() && epoch_s.is_finite() => (epoch_s / d).max(1.0),
+        _ => 1.0,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -470,5 +489,82 @@ mod tests {
         assert!(should_resplit(&[8, 1, 1], &[1, 1, 1], 0.0, 1e-6, &cfg));
         // …but never churn between two skewed shapes at idle.
         assert!(!should_resplit(&[8, 1, 1], &[1, 4, 1], 0.0, 1e-6, &cfg));
+    }
+
+    // ---- hysteresis boundary values --------------------------------------
+    // The pack/unpack gates compare with `<=` (pack admits at its
+    // bound) and `>` (unpack declines at its bound); these exact-edge
+    // cases pin the comparison directions down before anything new —
+    // like SLO backlog weighting — feeds the operands.
+
+    fn packing_cfg() -> PolicyConfig {
+        PolicyConfig {
+            pack_headroom_factor: 2.0,
+            pack_unpack_factor: 2.0,
+            pack_swap_margin: 0.25,
+            ..PolicyConfig::default()
+        }
+    }
+
+    #[test]
+    fn pack_admits_exactly_at_both_thresholds() {
+        let cfg = packing_cfg();
+        let epoch = 1.0;
+        // Fit gate at equality: backlog * headroom == epoch.
+        assert!(should_pack(0.5, epoch, 1.0, 0.0, &cfg), "fit bound is inclusive");
+        assert!(!should_pack(0.5 + 1e-12, epoch, 1.0, 0.0, &cfg), "just past it: declined");
+        // Swap-amortization gate at equality: switch == margin * quantum.
+        assert!(should_pack(0.25, epoch, 1.0, 0.25, &cfg), "swap bound is inclusive");
+        assert!(!should_pack(0.25, epoch, 1.0, 0.25 + 1e-12, &cfg), "just past it: declined");
+        // Both gates exactly at their bounds simultaneously.
+        assert!(should_pack(0.5, epoch, 1.0, 0.25, &cfg));
+    }
+
+    #[test]
+    fn unpack_declines_exactly_at_its_threshold() {
+        let cfg = packing_cfg();
+        let epoch = 1.0;
+        // Unpack bound: combined * headroom > unpack_factor * epoch,
+        // strict — equality holds the pack (no churn at the edge).
+        assert!(!should_unpack(1.0, epoch, &cfg), "unpack bound is exclusive");
+        assert!(should_unpack(1.0 + 1e-12, epoch, &cfg), "just past it: unpack");
+    }
+
+    #[test]
+    fn infinity_disables_both_gates() {
+        // The default INFINITY headroom disables packing outright…
+        let off = PolicyConfig::default();
+        assert!(!off.packing_enabled());
+        assert!(!should_pack(0.0, f64::INFINITY, f64::INFINITY, 0.0, &off));
+        assert!(!should_unpack(f64::INFINITY, 1.0, &off));
+        // …and with packing on, INFINITY operands still behave: an
+        // infinite epoch admits any finite backlog, an infinite
+        // backlog can never pack and always unpacks.
+        let on = packing_cfg();
+        assert!(should_pack(1e300, f64::INFINITY, 1.0, 0.0, &on));
+        assert!(!should_pack(f64::INFINITY, 1.0, 1.0, 0.0, &on), "inf backlog never fits");
+        assert!(should_unpack(f64::INFINITY, 1.0, &on));
+    }
+
+    // ---- SLO backlog boost -----------------------------------------------
+
+    #[test]
+    fn slo_boost_is_the_exact_identity_without_a_deadline() {
+        assert_eq!(slo_backlog_boost(None, 0.05), 1.0);
+        // Deadlines at or above one epoch boost nothing.
+        assert_eq!(slo_backlog_boost(Some(0.05), 0.05), 1.0);
+        assert_eq!(slo_backlog_boost(Some(1.0), 0.05), 1.0);
+    }
+
+    #[test]
+    fn slo_boost_scales_sub_epoch_deadlines() {
+        assert_eq!(slo_backlog_boost(Some(0.01), 0.05), 5.0);
+        assert_eq!(slo_backlog_boost(Some(0.025), 0.05), 2.0);
+        // Degenerate deadlines and epochs never produce a non-finite
+        // or sub-unit multiplier.
+        assert_eq!(slo_backlog_boost(Some(0.0), 0.05), 1.0);
+        assert_eq!(slo_backlog_boost(Some(-1.0), 0.05), 1.0);
+        assert_eq!(slo_backlog_boost(Some(f64::INFINITY), 0.05), 1.0);
+        assert_eq!(slo_backlog_boost(Some(0.01), f64::INFINITY), 1.0);
     }
 }

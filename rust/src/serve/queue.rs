@@ -21,6 +21,10 @@ pub enum PushError {
     /// The tenant's fabric-time token bucket is empty — its share of
     /// fabric time is exhausted even though the queue has room.
     Throttled,
+    /// Deadline-aware admission shed the request: the queue-wait
+    /// estimate already exceeds the tenant's latency-SLO deadline, so
+    /// queuing it could only produce a late answer.
+    Deadline,
 }
 
 impl std::fmt::Display for PushError {
@@ -29,6 +33,7 @@ impl std::fmt::Display for PushError {
             PushError::Full => write!(f, "queue full"),
             PushError::Closed => write!(f, "queue closed"),
             PushError::Throttled => write!(f, "fabric-time share exhausted"),
+            PushError::Deadline => write!(f, "deadline unmeetable at admission"),
         }
     }
 }

@@ -1,0 +1,893 @@
+//! The scenario zoo: deterministic workload generation for the serve
+//! layer.
+//!
+//! Every acceptance claim about dynamic re-composition is only as
+//! strong as the traffic it was demonstrated on. This module turns
+//! workload diversity into a first-class subsystem: a [`ScenarioSpec`]
+//! names a set of tenants, gives each a traffic [`Shape`] and an
+//! optional latency-SLO deadline, and materializes — against a
+//! [`ScheduleCache`], so rates calibrate to the *measured* equal-split
+//! service times — into a ready-to-run [`Scenario`] plus a calibrated
+//! [`PolicyConfig`]. The same spec always produces the same arrival
+//! stream: generation is seeded ([`SplitMix64`]), single-threaded, and
+//! independent of the strategy that later consumes it.
+//!
+//! # Scale-free rates
+//!
+//! Shapes express intensity as **multiples of the tenant's equal-split
+//! capacity** (`x = 1.0` means "exactly what a 1-of-N fabric slice can
+//! serve"), and durations/periods in **units of the first tenant's
+//! per-request time**. A scenario therefore stresses the *policy*, not
+//! an absolute latency scale: the same spec is meaningful on any
+//! platform or model mix the cache can schedule.
+//!
+//! # Shape catalog
+//!
+//! * [`Shape::Steady`] — homogeneous Poisson at a fixed multiple.
+//! * [`Shape::Diurnal`] — sinusoidal mean with a phase offset, so two
+//!   tenants can trade load back and forth (day/night skew).
+//! * [`Shape::FlashCrowd`] — a step to `peak_x` at a chosen fraction
+//!   of the run, decaying exponentially back toward `base_x`.
+//! * [`Shape::Ramp`] — linear drift between two multiples across the
+//!   run (grow-out / drain-down).
+//! * [`Shape::EpochBurst`] — adversarial square-wave bursts
+//!   phase-locked to the policy epoch (`period_epochs` multiples of
+//!   the calibrated epoch), the worst case for an epoch-sampled
+//!   policy: every burst starts just after a decision point.
+//!
+//! Non-homogeneous shapes are sampled by Lewis–Shedler thinning: a
+//! homogeneous Poisson process at the shape's peak rate, keeping each
+//! point with probability `x(t) / x_max`. One RNG fork per tenant (in
+//! tenant order) keeps streams independent and the whole trace
+//! reproducible.
+//!
+//! The sixth generator is **trace replay** ([`replay_arrivals`]): the
+//! `Admitted` events of a recorded [`RecordedTrace`] become the
+//! arrival stream of a new run, closing the loop with the telemetry
+//! layer. Replaying only the *admitted* arrivals through the same
+//! tenant specs reproduces the original run's admissions exactly:
+//! rejected arrivals never entered a queue, and a throttled arrival's
+//! failed bucket probe consumes no tokens, so dropping them from the
+//! input changes no queue or bucket state the surviving arrivals
+//! observe (`rust/tests/serve_scenarios.rs` holds this bit-for-bit).
+
+use std::collections::BTreeMap;
+
+use crate::arch::FilcoConfig;
+use crate::platform::Platform;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use crate::workload::{zoo, Dag};
+
+use super::cache::ScheduleCache;
+use super::engine::EngineEvent;
+use super::policy::PolicyConfig;
+use super::sim::{equal_split_per_request, Scenario};
+use super::telemetry::RecordedTrace;
+use super::tenant::{finalize_trace, Arrival, SloClass, TenantSpec};
+
+/// One tenant's traffic intensity over the run, in multiples of the
+/// tenant's equal-split capacity (see the module docs). Negative
+/// intensities are clamped to zero at sampling time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Shape {
+    /// Homogeneous Poisson at `rate_x` times the equal-split capacity.
+    Steady {
+        /// Arrival intensity, in capacity multiples.
+        rate_x: f64,
+    },
+    /// Sinusoidal intensity `mean_x + amplitude_x * sin(2π (t/period +
+    /// phase))` — a diurnal cycle. Two tenants with phases half a
+    /// period apart trade load back and forth.
+    Diurnal {
+        /// Mean intensity, in capacity multiples.
+        mean_x: f64,
+        /// Swing around the mean, in capacity multiples.
+        amplitude_x: f64,
+        /// Cycle length, in units of the first tenant's per-request
+        /// time (like `duration_reqs`).
+        period_reqs: f64,
+        /// Phase offset as a fraction of the period in `[0, 1)`.
+        phase: f64,
+    },
+    /// A flash crowd: `base_x` until `at_frac` of the run, then a step
+    /// to `peak_x` decaying exponentially back toward `base_x` with
+    /// time constant `decay_reqs`.
+    FlashCrowd {
+        /// Quiescent intensity before (and asymptotically after) the
+        /// crowd, in capacity multiples.
+        base_x: f64,
+        /// Intensity at the step, in capacity multiples.
+        peak_x: f64,
+        /// When the crowd hits, as a fraction of the run in `[0, 1]`.
+        at_frac: f64,
+        /// Exponential decay time constant, in per-request units.
+        decay_reqs: f64,
+    },
+    /// Linear drift from `from_x` to `to_x` across the run.
+    Ramp {
+        /// Intensity at the start of the run, in capacity multiples.
+        from_x: f64,
+        /// Intensity at the end of the run, in capacity multiples.
+        to_x: f64,
+    },
+    /// Adversarial square-wave bursts phase-locked to the policy
+    /// epoch: `burst_x` for the first `duty` fraction of every period,
+    /// `idle_x` for the rest. With an integer `period_epochs`, every
+    /// burst front lands exactly on an epoch boundary — right after
+    /// the policy sampled a calm queue.
+    EpochBurst {
+        /// Intensity between bursts, in capacity multiples.
+        idle_x: f64,
+        /// Intensity during a burst, in capacity multiples.
+        burst_x: f64,
+        /// Burst period, in multiples of the calibrated policy epoch.
+        period_epochs: f64,
+        /// Fraction of each period spent bursting, clamped to `[0, 1]`.
+        duty: f64,
+    },
+}
+
+impl Shape {
+    /// Stable kind tag used by the JSON codec and `describe`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Shape::Steady { .. } => "steady",
+            Shape::Diurnal { .. } => "diurnal",
+            Shape::FlashCrowd { .. } => "flash-crowd",
+            Shape::Ramp { .. } => "ramp",
+            Shape::EpochBurst { .. } => "epoch-burst",
+        }
+    }
+
+    /// Upper bound on the intensity multiple over the whole run — the
+    /// homogeneous rate the thinning sampler proposes at.
+    fn max_x(&self) -> f64 {
+        let m = match *self {
+            Shape::Steady { rate_x } => rate_x,
+            Shape::Diurnal { mean_x, amplitude_x, .. } => mean_x + amplitude_x.abs(),
+            Shape::FlashCrowd { base_x, peak_x, .. } => base_x.max(peak_x),
+            Shape::Ramp { from_x, to_x } => from_x.max(to_x),
+            Shape::EpochBurst { idle_x, burst_x, .. } => idle_x.max(burst_x),
+        };
+        m.max(0.0)
+    }
+
+    /// The intensity multiple at instant `t_s` of a run `duration_s`
+    /// long with policy epoch `epoch_s` (both fabric seconds; the
+    /// caller converts the spec's request-unit knobs). Never negative.
+    fn x_at(&self, t_s: f64, duration_s: f64, epoch_s: f64, unit_s: f64) -> f64 {
+        let x = match *self {
+            Shape::Steady { rate_x } => rate_x,
+            Shape::Diurnal { mean_x, amplitude_x, period_reqs, phase } => {
+                let period = period_reqs * unit_s;
+                if period <= 0.0 {
+                    mean_x
+                } else {
+                    mean_x + amplitude_x * (std::f64::consts::TAU * (t_s / period + phase)).sin()
+                }
+            }
+            Shape::FlashCrowd { base_x, peak_x, at_frac, decay_reqs } => {
+                let t0 = at_frac.clamp(0.0, 1.0) * duration_s;
+                let tau = decay_reqs * unit_s;
+                if t_s < t0 || tau <= 0.0 {
+                    base_x
+                } else {
+                    base_x + (peak_x - base_x) * (-(t_s - t0) / tau).exp()
+                }
+            }
+            Shape::Ramp { from_x, to_x } => {
+                let frac = if duration_s > 0.0 { (t_s / duration_s).clamp(0.0, 1.0) } else { 0.0 };
+                from_x + (to_x - from_x) * frac
+            }
+            Shape::EpochBurst { idle_x, burst_x, period_epochs, duty } => {
+                let period = period_epochs * epoch_s;
+                if period <= 0.0 {
+                    burst_x
+                } else {
+                    let frac = (t_s / period).fract();
+                    if frac < duty.clamp(0.0, 1.0) {
+                        burst_x
+                    } else {
+                        idle_x
+                    }
+                }
+            }
+        };
+        x.max(0.0)
+    }
+}
+
+/// One tenant of a scenario: which model it serves, how its traffic
+/// arrives, and its SLO class.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioTenant {
+    /// Display name (unique within the scenario).
+    pub name: String,
+    /// Model-zoo key resolved by [`model_dag`] (e.g. `"mlp-l"`).
+    pub model: String,
+    /// Traffic shape, in equal-split capacity multiples.
+    pub shape: Shape,
+    /// Latency-SLO deadline in multiples of *this tenant's* measured
+    /// per-request time (`None` = throughput tier). Converted to
+    /// fabric seconds at materialization.
+    pub deadline_reqs: Option<f64>,
+}
+
+/// A named, seeded, scale-free workload scenario — everything needed
+/// to reproduce one arrival stream and its SLO context.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Registry / CLI name.
+    pub name: String,
+    /// One-line description for `filco scenario list`.
+    pub description: String,
+    /// The tenants sharing the fabric.
+    pub tenants: Vec<ScenarioTenant>,
+    /// Run length in units of the first tenant's per-request time.
+    pub duration_reqs: f64,
+    /// RNG seed for the arrival streams.
+    pub seed: u64,
+    /// Queue depth for every tenant (deep by default so scenario
+    /// comparisons measure latency, not rejection policy).
+    pub queue_capacity: usize,
+}
+
+/// A spec resolved against real schedules: the runnable [`Scenario`],
+/// the policy calibrated to its service times, and the measured
+/// per-request seconds the rates were scaled by.
+#[derive(Debug, Clone)]
+pub struct MaterializedScenario {
+    /// The runnable scenario (tenants with SLO classes, generated
+    /// arrivals, shards 1).
+    pub scenario: Scenario,
+    /// `PolicyConfig::calibrated` to the first tenant's per-request
+    /// time — the epoch the `EpochBurst` shapes are locked to.
+    pub policy: PolicyConfig,
+    /// Measured equal-split per-request fabric seconds, per tenant.
+    pub per_request_s: Vec<f64>,
+}
+
+/// Resolve a model-zoo key to its layer DAG (`None` for unknown keys).
+pub fn model_dag(key: &str) -> Option<Dag> {
+    match key {
+        "mlp-s" => Some(zoo::mlp_s()),
+        "mlp-l" => Some(zoo::mlp_l()),
+        "deit-s" => Some(zoo::deit_s()),
+        "deit-l" => Some(zoo::deit_l()),
+        "pointnet" => Some(zoo::pointnet()),
+        "mlp-mixer" => Some(zoo::mlp_mixer()),
+        _ => None,
+    }
+}
+
+/// Generate the merged arrival stream for `(shape, per_request_s)`
+/// tenants over `duration_s` fabric seconds with policy epoch
+/// `epoch_s` and request unit `unit_s` (the first tenant's per-request
+/// time). Deterministic in `seed`: one [`SplitMix64`] fork per tenant,
+/// in tenant order, then the shared `(t, tenant)` sort + id renumber
+/// every trace generator uses.
+pub fn generate_arrivals(
+    tenants: &[(Shape, f64)],
+    duration_s: f64,
+    epoch_s: f64,
+    unit_s: f64,
+    seed: u64,
+) -> Vec<Arrival> {
+    let mut rng = SplitMix64::new(seed);
+    let mut all: Vec<Arrival> = Vec::new();
+    for (tenant, (shape, per_s)) in tenants.iter().enumerate() {
+        // Fork unconditionally so adding/removing load on one tenant
+        // never perturbs another tenant's stream.
+        let mut fork = rng.fork();
+        let max_x = shape.max_x();
+        if max_x <= 0.0 || *per_s <= 0.0 || duration_s <= 0.0 {
+            continue;
+        }
+        let max_rate = max_x / per_s;
+        let mut t = 0.0f64;
+        loop {
+            let u = fork.next_f64();
+            t += -(1.0 - u).ln() / max_rate;
+            if t >= duration_s {
+                break;
+            }
+            // Thinning: keep with probability x(t) / x_max.
+            if fork.next_f64() * max_x < shape.x_at(t, duration_s, epoch_s, unit_s) {
+                all.push(Arrival { t_s: t, tenant, id: 0 });
+            }
+        }
+    }
+    finalize_trace(&mut all);
+    all
+}
+
+/// Re-derive an arrival stream from a recorded trace's `Admitted`
+/// events, preserving the original request ids and admission instants.
+/// See the module docs for why running these through the same tenant
+/// specs reproduces the recording's admissions exactly.
+pub fn replay_arrivals(trace: &RecordedTrace) -> Vec<Arrival> {
+    trace
+        .events
+        .iter()
+        .filter_map(|ev| match ev {
+            EngineEvent::Admitted { tenant, id, at_s } => {
+                Some(Arrival { t_s: *at_s, tenant: *tenant, id: *id })
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+impl ScenarioSpec {
+    /// Resolve the spec against real schedules: compute the measured
+    /// equal-split per-request times through `cache` (on
+    /// [`Platform::vck190`] with its default FILCO config), convert
+    /// the scale-free knobs to fabric seconds, generate the arrival
+    /// streams, and attach each tenant's SLO class. Fails on an
+    /// unknown model key or an empty tenant list.
+    pub fn materialize(&self, cache: &ScheduleCache) -> Result<MaterializedScenario, String> {
+        if self.tenants.is_empty() {
+            return Err(format!("scenario '{}' has no tenants", self.name));
+        }
+        let platform = Platform::vck190();
+        let base = FilcoConfig::default_for(&platform);
+        let mut specs = Vec::with_capacity(self.tenants.len());
+        for t in &self.tenants {
+            let dag = model_dag(&t.model)
+                .ok_or_else(|| format!("unknown model '{}' for tenant '{}'", t.model, t.name))?;
+            specs.push(
+                TenantSpec::new(t.name.clone(), dag).with_queue_capacity(self.queue_capacity),
+            );
+        }
+        let per = equal_split_per_request(&platform, &base, &specs, cache);
+        for (spec, (t, &per_s)) in specs.iter_mut().zip(self.tenants.iter().zip(&per)) {
+            if let Some(reqs) = t.deadline_reqs {
+                spec.slo = SloClass::LatencyTier { deadline_s: reqs * per_s };
+            }
+        }
+        let unit_s = per[0];
+        let duration_s = self.duration_reqs * unit_s;
+        let policy = PolicyConfig::calibrated(unit_s);
+        let shaped: Vec<(Shape, f64)> = self
+            .tenants
+            .iter()
+            .zip(&per)
+            .map(|(t, &p)| (t.shape.clone(), p))
+            .collect();
+        let arrivals = generate_arrivals(&shaped, duration_s, policy.epoch_s, unit_s, self.seed);
+        Ok(MaterializedScenario {
+            scenario: Scenario {
+                platform,
+                base,
+                tenants: specs,
+                arrivals,
+                switch_cost_s: None,
+                shards: 1,
+            },
+            policy,
+            per_request_s: per,
+        })
+    }
+
+    /// Multi-line human-readable description (for `filco scenario
+    /// describe`).
+    pub fn describe(&self) -> String {
+        let mut s = format!(
+            "{}: {}\n  duration {} req-units, seed {:#x}, queue capacity {}\n",
+            self.name, self.description, self.duration_reqs, self.seed, self.queue_capacity
+        );
+        for t in &self.tenants {
+            let slo = match t.deadline_reqs {
+                Some(d) => format!("latency tier, deadline {d} req-units"),
+                None => "throughput tier".to_string(),
+            };
+            s.push_str(&format!(
+                "  {:<10} {:<9} {:<12} {:?}  [{}]\n",
+                t.name,
+                t.model,
+                t.shape.kind(),
+                t.shape,
+                slo,
+            ));
+        }
+        s
+    }
+
+    /// Serialize to the JSON object `--scenario-file` accepts.
+    /// Inverse of [`Self::from_json`].
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("description".to_string(), Json::Str(self.description.clone()));
+        m.insert("duration_reqs".to_string(), Json::Num(self.duration_reqs));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert("queue_capacity".to_string(), Json::Num(self.queue_capacity as f64));
+        m.insert(
+            "tenants".to_string(),
+            Json::Arr(
+                self.tenants
+                    .iter()
+                    .map(|t| {
+                        let mut tm = BTreeMap::new();
+                        tm.insert("name".to_string(), Json::Str(t.name.clone()));
+                        tm.insert("model".to_string(), Json::Str(t.model.clone()));
+                        tm.insert(
+                            "deadline_reqs".to_string(),
+                            t.deadline_reqs.map_or(Json::Null, Json::Num),
+                        );
+                        tm.insert("shape".to_string(), shape_to_json(&t.shape));
+                        Json::Obj(tm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+
+    /// Parse a scenario from its JSON object form. Inverse of
+    /// [`Self::to_json`]; every error names the offending field.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let name = req_str(v, "name")?;
+        let tenants = v
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .ok_or("scenario missing tenants array")?
+            .iter()
+            .map(|tv| {
+                Ok(ScenarioTenant {
+                    name: req_str(tv, "name")?,
+                    model: req_str(tv, "model")?,
+                    deadline_reqs: tv.get("deadline_reqs").and_then(Json::as_f64),
+                    shape: shape_from_json(
+                        tv.get("shape").ok_or("tenant missing shape")?,
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Self {
+            name,
+            description: v
+                .get("description")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            tenants,
+            duration_reqs: req_f64(v, "duration_reqs")?,
+            seed: v.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            queue_capacity: v
+                .get("queue_capacity")
+                .and_then(Json::as_u64)
+                .map(|c| (c as usize).max(1))
+                .unwrap_or(DEFAULT_QUEUE_CAPACITY),
+        })
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String, String> {
+    v.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("missing string field '{key}'"))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64, String> {
+    v.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing number field '{key}'"))
+}
+
+fn shape_to_json(s: &Shape) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Json::Str(s.kind().to_string()));
+    match *s {
+        Shape::Steady { rate_x } => {
+            m.insert("rate_x".to_string(), Json::Num(rate_x));
+        }
+        Shape::Diurnal { mean_x, amplitude_x, period_reqs, phase } => {
+            m.insert("mean_x".to_string(), Json::Num(mean_x));
+            m.insert("amplitude_x".to_string(), Json::Num(amplitude_x));
+            m.insert("period_reqs".to_string(), Json::Num(period_reqs));
+            m.insert("phase".to_string(), Json::Num(phase));
+        }
+        Shape::FlashCrowd { base_x, peak_x, at_frac, decay_reqs } => {
+            m.insert("base_x".to_string(), Json::Num(base_x));
+            m.insert("peak_x".to_string(), Json::Num(peak_x));
+            m.insert("at_frac".to_string(), Json::Num(at_frac));
+            m.insert("decay_reqs".to_string(), Json::Num(decay_reqs));
+        }
+        Shape::Ramp { from_x, to_x } => {
+            m.insert("from_x".to_string(), Json::Num(from_x));
+            m.insert("to_x".to_string(), Json::Num(to_x));
+        }
+        Shape::EpochBurst { idle_x, burst_x, period_epochs, duty } => {
+            m.insert("idle_x".to_string(), Json::Num(idle_x));
+            m.insert("burst_x".to_string(), Json::Num(burst_x));
+            m.insert("period_epochs".to_string(), Json::Num(period_epochs));
+            m.insert("duty".to_string(), Json::Num(duty));
+        }
+    }
+    Json::Obj(m)
+}
+
+fn shape_from_json(v: &Json) -> Result<Shape, String> {
+    let kind = req_str(v, "kind")?;
+    match kind.as_str() {
+        "steady" => Ok(Shape::Steady { rate_x: req_f64(v, "rate_x")? }),
+        "diurnal" => Ok(Shape::Diurnal {
+            mean_x: req_f64(v, "mean_x")?,
+            amplitude_x: req_f64(v, "amplitude_x")?,
+            period_reqs: req_f64(v, "period_reqs")?,
+            phase: v.get("phase").and_then(Json::as_f64).unwrap_or(0.0),
+        }),
+        "flash-crowd" => Ok(Shape::FlashCrowd {
+            base_x: req_f64(v, "base_x")?,
+            peak_x: req_f64(v, "peak_x")?,
+            at_frac: req_f64(v, "at_frac")?,
+            decay_reqs: req_f64(v, "decay_reqs")?,
+        }),
+        "ramp" => Ok(Shape::Ramp { from_x: req_f64(v, "from_x")?, to_x: req_f64(v, "to_x")? }),
+        "epoch-burst" => Ok(Shape::EpochBurst {
+            idle_x: req_f64(v, "idle_x")?,
+            burst_x: req_f64(v, "burst_x")?,
+            period_epochs: req_f64(v, "period_epochs")?,
+            duty: req_f64(v, "duty")?,
+        }),
+        other => Err(format!("unknown shape kind '{other}'")),
+    }
+}
+
+/// Default queue depth for zoo scenarios: deep enough that the
+/// comparison measures latency under load, not rejection policy.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 1 << 20;
+
+/// Names of the built-in scenarios, in registry order.
+pub fn builtin_names() -> &'static [&'static str] {
+    &["steady", "skewed", "diurnal", "flash-crowd", "ramp", "epoch-burst"]
+}
+
+/// Look up a built-in scenario by name (`None` for unknown names).
+pub fn builtin(name: &str) -> Option<ScenarioSpec> {
+    let spec = |description: &str, tenants: Vec<ScenarioTenant>, seed: u64| ScenarioSpec {
+        name: name.to_string(),
+        description: description.to_string(),
+        tenants,
+        duration_reqs: 80.0,
+        seed,
+        queue_capacity: DEFAULT_QUEUE_CAPACITY,
+    };
+    let tenant = |name: &str, model: &str, shape: Shape, deadline: Option<f64>| ScenarioTenant {
+        name: name.to_string(),
+        model: model.to_string(),
+        shape,
+        deadline_reqs: deadline,
+    };
+    match name {
+        "steady" => Some(spec(
+            "balanced steady Poisson on every tenant — the tie case a \
+             well-damped policy must not churn on",
+            vec![
+                tenant("a", "mlp-s", Shape::Steady { rate_x: 0.5 }, Some(40.0)),
+                tenant("b", "mlp-s", Shape::Steady { rate_x: 0.5 }, None),
+                tenant("c", "mlp-s", Shape::Steady { rate_x: 0.5 }, None),
+            ],
+            0x51EAD1,
+        )),
+        "skewed" => Some(spec(
+            "one latency-tier tenant pushed to 2.5x its equal-split \
+             capacity over two light tenants — the classic re-composition win",
+            vec![
+                tenant("heavy", "mlp-l", Shape::Steady { rate_x: 2.5 }, Some(25.0)),
+                tenant("light1", "mlp-s", Shape::Steady { rate_x: 0.1 }, None),
+                tenant("light2", "mlp-s", Shape::Steady { rate_x: 0.1 }, None),
+            ],
+            0xBEEF1,
+        )),
+        "diurnal" => Some(spec(
+            "two anti-phase sinusoidal tenants trading load each half-period \
+             over a light background — skew that keeps moving",
+            vec![
+                tenant(
+                    "day",
+                    "mlp-s",
+                    Shape::Diurnal {
+                        mean_x: 1.2,
+                        amplitude_x: 1.0,
+                        period_reqs: 40.0,
+                        phase: 0.0,
+                    },
+                    Some(20.0),
+                ),
+                tenant(
+                    "night",
+                    "mlp-s",
+                    Shape::Diurnal {
+                        mean_x: 1.2,
+                        amplitude_x: 1.0,
+                        period_reqs: 40.0,
+                        phase: 0.5,
+                    },
+                    None,
+                ),
+                tenant("base", "mlp-s", Shape::Steady { rate_x: 0.1 }, None),
+            ],
+            0xD1E1,
+        )),
+        "flash-crowd" => Some(spec(
+            "a quiet latency-tier tenant hit by a flash crowd (4x its slice \
+             capacity at 30% of the run, exponential decay)",
+            vec![
+                tenant(
+                    "flash",
+                    "mlp-l",
+                    Shape::FlashCrowd {
+                        base_x: 0.3,
+                        peak_x: 4.0,
+                        at_frac: 0.3,
+                        decay_reqs: 20.0,
+                    },
+                    Some(25.0),
+                ),
+                tenant("bg1", "mlp-s", Shape::Steady { rate_x: 0.4 }, None),
+                tenant("bg2", "mlp-s", Shape::Steady { rate_x: 0.4 }, None),
+            ],
+            0xF1A54,
+        )),
+        "ramp" => Some(spec(
+            "one tenant ramping up to 2.5x while another drains from 2x — \
+             crossing skew with no steady state",
+            vec![
+                tenant("ramp-up", "mlp-s", Shape::Ramp { from_x: 0.2, to_x: 2.5 }, Some(25.0)),
+                tenant("ramp-down", "mlp-s", Shape::Ramp { from_x: 2.0, to_x: 0.2 }, None),
+                tenant("base", "mlp-s", Shape::Steady { rate_x: 0.2 }, None),
+            ],
+            0x4A3B,
+        )),
+        "epoch-burst" => Some(spec(
+            "adversarial square-wave bursts phase-locked to the policy epoch: \
+             4x load starting right after every other decision point",
+            vec![
+                tenant(
+                    "burst",
+                    "mlp-l",
+                    Shape::EpochBurst {
+                        idle_x: 0.0,
+                        burst_x: 4.0,
+                        period_epochs: 2.0,
+                        duty: 0.5,
+                    },
+                    Some(25.0),
+                ),
+                tenant("bg1", "mlp-s", Shape::Steady { rate_x: 0.3 }, None),
+                tenant("bg2", "mlp-s", Shape::Steady { rate_x: 0.3 }, None),
+            ],
+            0xEB0B,
+        )),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zoo_shapes() -> Vec<(Shape, f64)> {
+        vec![
+            (Shape::Steady { rate_x: 1.5 }, 0.01),
+            (
+                Shape::Diurnal { mean_x: 1.0, amplitude_x: 0.8, period_reqs: 20.0, phase: 0.25 },
+                0.02,
+            ),
+            (
+                Shape::FlashCrowd { base_x: 0.2, peak_x: 3.0, at_frac: 0.4, decay_reqs: 10.0 },
+                0.01,
+            ),
+            (Shape::Ramp { from_x: 0.1, to_x: 2.0 }, 0.015),
+            (
+                Shape::EpochBurst { idle_x: 0.0, burst_x: 4.0, period_epochs: 2.0, duty: 0.5 },
+                0.01,
+            ),
+        ]
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        let shapes = zoo_shapes();
+        let a = generate_arrivals(&shapes, 1.0, 0.1, 0.01, 42);
+        let b = generate_arrivals(&shapes, 1.0, 0.1, 0.01, 42);
+        assert!(!a.is_empty());
+        assert_eq!(a, b, "same seed must reproduce the stream bit-for-bit");
+        let c = generate_arrivals(&shapes, 1.0, 0.1, 0.01, 43);
+        assert_ne!(a, c, "a different seed must move arrivals");
+        // Ids are the global arrival order.
+        for (i, arr) in a.iter().enumerate() {
+            assert_eq!(arr.id, i as u64);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].t_s <= w[1].t_s, "arrivals must be time-sorted");
+        }
+    }
+
+    #[test]
+    fn epoch_bursts_respect_their_windows() {
+        let shape = Shape::EpochBurst { idle_x: 0.0, burst_x: 2.0, period_epochs: 1.0, duty: 0.5 };
+        let arrivals = generate_arrivals(&[(shape, 0.001)], 1.0, 0.1, 0.001, 7);
+        assert!(!arrivals.is_empty());
+        for a in &arrivals {
+            let frac = (a.t_s / 0.1).fract();
+            assert!(frac < 0.5, "idle_x = 0: every arrival sits in a burst window ({frac})");
+        }
+    }
+
+    #[test]
+    fn flash_crowd_is_denser_after_the_step() {
+        let shape = Shape::FlashCrowd { base_x: 0.2, peak_x: 4.0, at_frac: 0.5, decay_reqs: 300.0 };
+        let arrivals = generate_arrivals(&[(shape, 0.001)], 1.0, 0.1, 0.001, 11);
+        let before = arrivals.iter().filter(|a| a.t_s < 0.5).count();
+        let after = arrivals.len() - before;
+        assert!(
+            after > 3 * before,
+            "the crowd must dominate: {before} before vs {after} after"
+        );
+    }
+
+    #[test]
+    fn builtins_roundtrip_through_json() {
+        for name in builtin_names() {
+            let spec = builtin(name).expect("builtin exists");
+            assert_eq!(&spec.name, name);
+            let text = spec.to_json().to_string_compact();
+            let back = ScenarioSpec::from_json(&Json::parse(&text).expect("parses"))
+                .expect("scenario parses");
+            assert_eq!(back, spec, "{name} must round-trip");
+        }
+        assert!(builtin("no-such-scenario").is_none());
+    }
+
+    fn fuzz_word(rng: &mut SplitMix64, n: usize) -> String {
+        // Hostile string palette: quotes, backslashes, control chars,
+        // JSON structure chars, non-BMP scalars, DEL.
+        const PALETTE: &[&str] =
+            &["a", "β", "\"", "\\", "\n", "\t", "\u{1}", "\u{1F600}", "]}", "{\"", ",", "\u{7f}"];
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push_str(PALETTE[(rng.next_u64() % PALETTE.len() as u64) as usize]);
+        }
+        s
+    }
+
+    /// Finite numbers exactly representable in f64 (multiples of 1/16),
+    /// so `==` after a serialize/parse round-trip is legitimate.
+    fn fuzz_num(rng: &mut SplitMix64) -> f64 {
+        (rng.next_u64() % 4096) as f64 / 16.0
+    }
+
+    fn fuzz_shape(rng: &mut SplitMix64) -> Shape {
+        match rng.next_u64() % 5 {
+            0 => Shape::Steady { rate_x: fuzz_num(rng) },
+            1 => Shape::Diurnal {
+                mean_x: fuzz_num(rng),
+                amplitude_x: fuzz_num(rng),
+                period_reqs: fuzz_num(rng),
+                phase: fuzz_num(rng),
+            },
+            2 => Shape::FlashCrowd {
+                base_x: fuzz_num(rng),
+                peak_x: fuzz_num(rng),
+                at_frac: fuzz_num(rng),
+                decay_reqs: fuzz_num(rng),
+            },
+            3 => Shape::Ramp { from_x: fuzz_num(rng), to_x: fuzz_num(rng) },
+            _ => Shape::EpochBurst {
+                idle_x: fuzz_num(rng),
+                burst_x: fuzz_num(rng),
+                period_epochs: fuzz_num(rng),
+                duty: fuzz_num(rng),
+            },
+        }
+    }
+
+    #[test]
+    fn fuzz_lite_specs_roundtrip_through_json() {
+        let mut rng = SplitMix64::new(0xF422);
+        for round in 0..64u64 {
+            let n_tenants = 1 + (rng.next_u64() % 6) as usize;
+            let tenants = (0..n_tenants)
+                .map(|_| ScenarioTenant {
+                    name: fuzz_word(&mut rng, 1 + (rng.next_u64() % 8) as usize),
+                    model: fuzz_word(&mut rng, 4),
+                    shape: fuzz_shape(&mut rng),
+                    deadline_reqs: if rng.next_u64() % 2 == 0 {
+                        Some(fuzz_num(&mut rng))
+                    } else {
+                        None
+                    },
+                })
+                .collect();
+            let spec = ScenarioSpec {
+                name: fuzz_word(&mut rng, 6),
+                description: fuzz_word(&mut rng, 12),
+                tenants,
+                duration_reqs: fuzz_num(&mut rng),
+                // Seeds stay under 2^53 so the f64 JSON carrier is exact.
+                seed: rng.next_u64() >> 12,
+                queue_capacity: 1 + (rng.next_u64() % 100_000) as usize,
+            };
+            let text = spec.to_json().to_string_compact();
+            let v = Json::parse(&text)
+                .unwrap_or_else(|e| panic!("round {round}: unparseable output: {e}\n{text}"));
+            let back = ScenarioSpec::from_json(&v)
+                .unwrap_or_else(|e| panic!("round {round}: spec rejected: {e}\n{text}"));
+            assert_eq!(back, spec, "round {round} must round-trip\n{text}");
+        }
+    }
+
+    #[test]
+    fn non_finite_spec_fields_degrade_gracefully() {
+        // An infinite deadline serializes as null (RFC 8259 has no inf
+        // token), which reads back as "no deadline" — a throughput
+        // tier, not a corrupt document.
+        let mut spec = builtin("steady").expect("builtin");
+        spec.tenants[0].deadline_reqs = Some(f64::INFINITY);
+        let v = Json::parse(&spec.to_json().to_string_compact())
+            .expect("non-finite fields must not corrupt the document");
+        let back = ScenarioSpec::from_json(&v).expect("spec still parses");
+        assert_eq!(back.tenants[0].deadline_reqs, None);
+
+        // A NaN rate is a loud, named error — never silent garbage.
+        let mut spec = builtin("steady").expect("builtin");
+        spec.tenants[1].shape = Shape::Steady { rate_x: f64::NAN };
+        let v = Json::parse(&spec.to_json().to_string_compact()).expect("document stays valid");
+        let err = ScenarioSpec::from_json(&v).expect_err("NaN rate must be rejected");
+        assert!(err.contains("rate_x"), "the error must name the field: {err}");
+    }
+
+    #[test]
+    fn model_keys_resolve() {
+        for key in ["mlp-s", "mlp-l", "deit-s", "deit-l", "pointnet", "mlp-mixer"] {
+            assert!(model_dag(key).is_some(), "{key} must resolve");
+        }
+        assert!(model_dag("resnet-9000").is_none());
+    }
+
+    #[test]
+    fn replay_arrivals_extracts_admissions_in_order() {
+        use crate::serve::sim::ServeReport;
+        let events = vec![
+            EngineEvent::Admitted { tenant: 0, id: 0, at_s: 0.0 },
+            EngineEvent::Rejected { tenant: 1, at_s: 0.005 },
+            EngineEvent::Admitted { tenant: 1, id: 2, at_s: 0.01 },
+            EngineEvent::BatchDone { tenant: 0, n: 1, at_s: 0.02, consumed_s: 0.02 },
+        ];
+        let trace = RecordedTrace {
+            strategy: "dynamic".to_string(),
+            tenants: vec!["a".to_string(), "b".to_string()],
+            events,
+            report: ServeReport {
+                strategy: "dynamic".to_string(),
+                completion_s: 0.02,
+                served: vec![1, 0],
+                rejected: vec![0, 1],
+                throttled: vec![0, 0],
+                switches: 0,
+                preemptions: 0,
+                packs: 0,
+                unpacks: 0,
+                pack_swaps: 0,
+                pack_group_sizes: vec![],
+                epochs: 0,
+                histograms: vec![],
+                slo_deadline_s: vec![None, None],
+                slo_met: vec![0, 0],
+                slo_missed: vec![0, 0],
+            },
+        };
+        let arrivals = replay_arrivals(&trace);
+        assert_eq!(
+            arrivals,
+            vec![
+                Arrival { t_s: 0.0, tenant: 0, id: 0 },
+                Arrival { t_s: 0.01, tenant: 1, id: 2 },
+            ],
+            "only admissions replay, ids preserved"
+        );
+    }
+}

@@ -146,12 +146,30 @@ pub struct TenantReport {
     pub fabric_s: f64,
     /// Wall-clock latency distribution of served requests (seconds).
     pub wall_latency: LatencyHistogram,
+    /// The tenant's effective latency-SLO deadline in fabric seconds
+    /// (`None` for throughput tiers).
+    pub slo_deadline_s: Option<f64>,
+    /// Served requests that met the deadline on the fabric timeline
+    /// (always 0 for throughput tiers).
+    pub slo_met: u64,
+    /// Served requests that missed it.
+    pub slo_missed: u64,
 }
 
 impl TenantReport {
     /// Tail wall-clock latency (p99) of this tenant's served requests.
     pub fn p99_s(&self) -> f64 {
         self.wall_latency.p99()
+    }
+
+    /// Fraction of served requests that met the latency-SLO deadline
+    /// (`1.0` for throughput tiers and when nothing was served).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.slo_met + self.slo_missed == 0 {
+            1.0
+        } else {
+            self.slo_met as f64 / (self.slo_met + self.slo_missed) as f64
+        }
     }
 }
 
@@ -195,17 +213,33 @@ impl LiveReport {
         self.tenants.iter().map(|t| t.p99_s()).fold(0.0, f64::max)
     }
 
+    /// Worst per-tenant SLO attainment across latency-tier tenants
+    /// (`1.0` when no tenant carries a deadline).
+    pub fn worst_slo_attainment(&self) -> f64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.slo_deadline_s.is_some())
+            .map(TenantReport::slo_attainment)
+            .fold(1.0, f64::min)
+    }
+
     /// Multi-line human-readable summary.
     pub fn summary(&self) -> String {
         let mut s = String::new();
         for t in &self.tenants {
+            let slo = if t.slo_deadline_s.is_some() {
+                format!("  slo {:.3}", t.slo_attainment())
+            } else {
+                String::new()
+            };
             s.push_str(&format!(
-                "  {:<10} served {:>6}  throttled {:>4}  fabric {:.4e} s  wall {}\n",
+                "  {:<10} served {:>6}  throttled {:>4}  fabric {:.4e} s  wall {}{}\n",
                 t.name,
                 t.served,
                 t.throttled,
                 t.fabric_s,
-                t.wall_latency.summary()
+                t.wall_latency.summary(),
+                slo,
             ));
         }
         s.push_str(&format!(
@@ -677,6 +711,8 @@ impl FabricScheduler {
         let shared = self.shared.lock().unwrap();
         let engine = &shared.engine;
         let served = engine.served();
+        let (slo_met, slo_missed, slo_deadlines) =
+            (engine.slo_met(), engine.slo_missed(), engine.slo_deadlines());
         LiveReport {
             tenants: (0..n)
                 .map(|t| TenantReport {
@@ -685,6 +721,9 @@ impl FabricScheduler {
                     throttled: engine.throttled()[t],
                     fabric_s: engine.fabric_s(t),
                     wall_latency: shared.hist[t].clone(),
+                    slo_deadline_s: slo_deadlines[t],
+                    slo_met: slo_met[t],
+                    slo_missed: slo_missed[t],
                 })
                 .collect(),
             switches: engine.switches(),

@@ -121,6 +121,15 @@ pub struct ServeReport {
     pub epochs: u64,
     /// Per-tenant fabric latency (queueing + service).
     pub histograms: Vec<LatencyHistogram>,
+    /// Each tenant's effective latency-SLO deadline (`None` for
+    /// throughput tiers), carried so attainment is computable from the
+    /// report alone.
+    pub slo_deadline_s: Vec<Option<f64>>,
+    /// Served requests that met their tenant's deadline, per tenant
+    /// (always 0 for throughput tiers).
+    pub slo_met: Vec<u64>,
+    /// Served requests that missed it, per tenant.
+    pub slo_missed: Vec<u64>,
 }
 
 impl ServeReport {
@@ -149,12 +158,40 @@ impl ServeReport {
         self.total_served() as f64 / self.completion_s.max(1e-12)
     }
 
-    /// One-line human-readable summary.
+    /// Fraction of tenant `t`'s served requests that met its
+    /// latency-SLO deadline. `1.0` for throughput tiers (no deadline —
+    /// vacuously attained) and for latency tiers that served nothing.
+    pub fn slo_attainment(&self, t: usize) -> f64 {
+        let met = self.slo_met.get(t).copied().unwrap_or(0);
+        let missed = self.slo_missed.get(t).copied().unwrap_or(0);
+        if met + missed == 0 {
+            1.0
+        } else {
+            met as f64 / (met + missed) as f64
+        }
+    }
+
+    /// Worst per-tenant SLO attainment across the latency-tier tenants
+    /// (`1.0` when no tenant carries a deadline).
+    pub fn worst_slo_attainment(&self) -> f64 {
+        (0..self.served.len())
+            .filter(|&t| self.slo_deadline_s.get(t).copied().flatten().is_some())
+            .map(|t| self.slo_attainment(t))
+            .fold(1.0, f64::min)
+    }
+
+    /// One-line human-readable summary (SLO attainment appended only
+    /// when some tenant carries a latency deadline).
     pub fn summary(&self) -> String {
+        let slo = if self.slo_deadline_s.iter().any(Option::is_some) {
+            format!(" | slo {:.3}", self.worst_slo_attainment())
+        } else {
+            String::new()
+        };
         format!(
             "{:<12} completion {:.4e} s | {} served, {} rejected, {} throttled | \
              {:.0} req/s | worst p99 {:.3e} s | {} switches, {} preemptions | \
-             {} packs {:?}, {} unpacks, {} swaps",
+             {} packs {:?}, {} unpacks, {} swaps{}",
             self.strategy,
             self.completion_s,
             self.total_served(),
@@ -168,6 +205,7 @@ impl ServeReport {
             self.pack_group_sizes,
             self.unpacks,
             self.pack_swaps,
+            slo,
         )
     }
 }
@@ -304,6 +342,9 @@ pub(crate) fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeRep
         pack_group_sizes: engine.pack_group_sizes().to_vec(),
         epochs: engine.epochs(),
         histograms: engine.histograms(),
+        slo_deadline_s: engine.slo_deadlines(),
+        slo_met: engine.slo_met(),
+        slo_missed: engine.slo_missed(),
     }
 }
 

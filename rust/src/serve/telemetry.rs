@@ -38,7 +38,11 @@
 //! (trailing reprogram charges on slice availability can land after
 //! the last `BatchDone`), `epochs` (an epoch that decides nothing
 //! emits no event), and `pack_swaps` (interleaver context swaps sit
-//! below event granularity).
+//! below event granularity). The per-tenant SLO deadlines
+//! (`slo_deadline_s`) also ride the footer — they are configuration,
+//! like the header's tenant names — but the `slo_met`/`slo_missed`
+//! counters are *recomputed* from the replayed latencies against those
+//! deadlines and verified like every other derived field.
 //!
 //! # Timeline
 //!
@@ -284,7 +288,34 @@ pub fn report_to_json(r: &ServeReport) -> Json {
     );
     m.insert("epochs".to_string(), junum(r.epochs));
     m.insert("histograms".to_string(), Json::Arr(r.histograms.iter().map(hist_to_json).collect()));
+    m.insert(
+        "slo_deadline_s".to_string(),
+        Json::Arr(r.slo_deadline_s.iter().map(|d| d.map_or(Json::Null, Json::Num)).collect()),
+    );
+    m.insert("slo_met".to_string(), Json::Arr(r.slo_met.iter().map(|&x| junum(x)).collect()));
+    m.insert(
+        "slo_missed".to_string(),
+        Json::Arr(r.slo_missed.iter().map(|&x| junum(x)).collect()),
+    );
     Json::Obj(m)
+}
+
+/// Parse the per-tenant deadline array: `null` entries are throughput
+/// tiers. Absent key (a pre-SLO trace) → all throughput tiers.
+fn deadlines_from_json(v: &Json, n: usize) -> Vec<Option<f64>> {
+    match v.get("slo_deadline_s").and_then(Json::as_arr) {
+        Some(arr) => arr.iter().map(Json::as_f64).collect(),
+        None => vec![None; n],
+    }
+}
+
+/// Parse an optional per-tenant counter array, defaulting to zeros for
+/// traces recorded before SLO accounting existed.
+fn u64_arr_or_zeros(v: &Json, key: &str, n: usize) -> Result<Vec<u64>, String> {
+    if v.get(key).is_none() {
+        return Ok(vec![0; n]);
+    }
+    u64_arr_of(v, key)
 }
 
 /// Parse a `{"kind":"summary",...}` trace footer value back into a
@@ -297,10 +328,11 @@ pub fn report_from_json(v: &Json) -> Result<ServeReport, String> {
         .iter()
         .map(hist_from_json)
         .collect::<Result<Vec<_>, _>>()?;
+    let served = u64_arr_of(v, "served")?;
+    let n = served.len();
     Ok(ServeReport {
         strategy: str_of(v, "strategy")?,
         completion_s: f64_of(v, "completion_s")?,
-        served: u64_arr_of(v, "served")?,
         rejected: u64_arr_of(v, "rejected")?,
         throttled: u64_arr_of(v, "throttled")?,
         switches: u64_of(v, "switches")?,
@@ -311,6 +343,10 @@ pub fn report_from_json(v: &Json) -> Result<ServeReport, String> {
         pack_group_sizes: usize_arr_of(v, "pack_group_sizes")?,
         epochs: u64_of(v, "epochs")?,
         histograms,
+        slo_deadline_s: deadlines_from_json(v, n),
+        slo_met: u64_arr_or_zeros(v, "slo_met", n)?,
+        slo_missed: u64_arr_or_zeros(v, "slo_missed", n)?,
+        served,
     })
 }
 
@@ -486,13 +522,20 @@ impl RecordedTrace {
     /// are rebuilt by pairing each [`EngineEvent::BatchDone`] with the
     /// oldest un-served [`EngineEvent::Admitted`] arrivals of its
     /// tenant (the engine's own FIFO admission order), recording
-    /// `(done - arrival).max(0)` exactly as the engine did.
-    /// `completion_s`, `epochs` and `pack_swaps` are carried from the
-    /// footer (see the module docs for why they are not derivable).
+    /// `(done - arrival).max(0)` exactly as the engine did. SLO
+    /// counters are re-derived from those exact latencies against the
+    /// footer's per-tenant deadlines (the deadlines themselves are
+    /// configuration, not events, so they ride the footer like the
+    /// tenant names do). `completion_s`, `epochs` and `pack_swaps` are
+    /// carried from the footer (see the module docs for why they are
+    /// not derivable).
     pub fn replay(&self) -> ServeReport {
         let t_n = self.tenants.len();
+        let deadlines = &self.report.slo_deadline_s;
         let mut fifo: Vec<VecDeque<f64>> = vec![VecDeque::new(); t_n];
         let mut histograms = vec![LatencyHistogram::new(); t_n];
+        let mut slo_met = vec![0u64; t_n];
+        let mut slo_missed = vec![0u64; t_n];
         let mut served = vec![0u64; t_n];
         let mut rejected = vec![0u64; t_n];
         let mut throttled = vec![0u64; t_n];
@@ -507,8 +550,16 @@ impl RecordedTrace {
                         // admission) records nothing; verify() then
                         // reports the served-count mismatch.
                         if let Some(arr) = fifo[*tenant].pop_front() {
-                            histograms[*tenant].record((*at_s - arr).max(0.0));
+                            let lat = (*at_s - arr).max(0.0);
+                            histograms[*tenant].record(lat);
                             served[*tenant] += 1;
+                            if let Some(d) = deadlines.get(*tenant).copied().flatten() {
+                                if lat <= d {
+                                    slo_met[*tenant] += 1;
+                                } else {
+                                    slo_missed[*tenant] += 1;
+                                }
+                            }
                         }
                     }
                 }
@@ -540,6 +591,9 @@ impl RecordedTrace {
             pack_group_sizes,
             epochs: self.report.epochs,
             histograms,
+            slo_deadline_s: deadlines.clone(),
+            slo_met,
+            slo_missed,
         }
     }
 
@@ -576,6 +630,12 @@ impl RecordedTrace {
             "pack_group_sizes",
             r.pack_group_sizes == f.pack_group_sizes,
             format!("{:?} vs {:?}", r.pack_group_sizes, f.pack_group_sizes),
+        );
+        chk("slo_met", r.slo_met == f.slo_met, format!("{:?} vs {:?}", r.slo_met, f.slo_met));
+        chk(
+            "slo_missed",
+            r.slo_missed == f.slo_missed,
+            format!("{:?} vs {:?}", r.slo_missed, f.slo_missed),
         );
         chk(
             "histogram count",
@@ -714,6 +774,11 @@ pub struct TenantSample {
     /// Token-bucket level in fabric seconds as of the last admission;
     /// `None` when the tenant has no rate limit.
     pub bucket_tokens: Option<f64>,
+    /// Cumulative served requests that met the tenant's latency-SLO
+    /// deadline (0 for throughput tiers).
+    pub slo_met: u64,
+    /// Cumulative served requests that missed it.
+    pub slo_missed: u64,
 }
 
 /// Everything the engine observed and decided at one policy epoch.
@@ -787,6 +852,8 @@ impl TimelineReport {
                                 "bucket_tokens".to_string(),
                                 t.bucket_tokens.map_or(Json::Null, jnum),
                             );
+                            tm.insert("slo_met".to_string(), junum(t.slo_met));
+                            tm.insert("slo_missed".to_string(), junum(t.slo_missed));
                             Json::Obj(tm)
                         })
                         .collect(),
@@ -1018,12 +1085,18 @@ mod tests {
             pack_group_sizes: vec![2],
             epochs: 12,
             histograms: vec![h0, LatencyHistogram::new()],
+            slo_deadline_s: vec![Some(0.002), None],
+            slo_met: vec![27, 0],
+            slo_missed: vec![13, 0],
         };
         let v = report_to_json(&r);
         let back = report_from_json(&Json::parse(&v.to_string_compact()).expect("parses"))
             .expect("report parses");
         assert_eq!(back.completion_s, r.completion_s);
         assert_eq!(back.served, r.served);
+        assert_eq!(back.slo_deadline_s, r.slo_deadline_s);
+        assert_eq!(back.slo_met, r.slo_met);
+        assert_eq!(back.slo_missed, r.slo_missed);
         assert_eq!(back.histograms[0].buckets(), r.histograms[0].buckets());
         assert_eq!(back.histograms[0].sum_s(), r.histograms[0].sum_s());
         assert_eq!(back.histograms[0].min_s(), r.histograms[0].min_s());
@@ -1061,6 +1134,11 @@ mod tests {
             pack_group_sizes: vec![],
             epochs: 0,
             histograms: vec![h, LatencyHistogram::new()],
+            // Deadline between the two recorded latencies (0.29, 0.3):
+            // replay must re-derive exactly one met and one missed.
+            slo_deadline_s: vec![Some(0.295), None],
+            slo_met: vec![1, 0],
+            slo_missed: vec![1, 0],
         };
         let text = trace_to_jsonl(
             "static-equal",
@@ -1086,8 +1164,20 @@ mod tests {
                 epoch: 1,
                 at_s: 0.05,
                 tenants: vec![
-                    TenantSample { queue_depth: 3, backlog_s: 0.2, bucket_tokens: None },
-                    TenantSample { queue_depth: 0, backlog_s: 0.0, bucket_tokens: Some(0.7) },
+                    TenantSample {
+                        queue_depth: 3,
+                        backlog_s: 0.2,
+                        bucket_tokens: None,
+                        slo_met: 5,
+                        slo_missed: 1,
+                    },
+                    TenantSample {
+                        queue_depth: 0,
+                        backlog_s: 0.0,
+                        bucket_tokens: Some(0.7),
+                        slo_met: 0,
+                        slo_missed: 0,
+                    },
                 ],
                 weights: vec![8, 1],
                 pack_shapes: vec![],

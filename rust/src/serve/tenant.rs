@@ -361,22 +361,70 @@ impl TokenBucket {
     }
 }
 
+/// Per-tenant service-level objective class, in the spirit of Herald's
+/// multi-DNN serving tiers: latency-tier tenants carry a per-request
+/// completion deadline that feeds SLO-attainment accounting, optional
+/// deadline-aware admission shedding, and the policy's backlog
+/// weighting; throughput-tier tenants (the default) carry no deadline
+/// and behave exactly as before this type existed.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum SloClass {
+    /// Each served request should finish within `deadline_s` fabric
+    /// seconds of its arrival; requests beyond it count as SLO misses.
+    LatencyTier {
+        /// Per-request completion deadline in fabric seconds.
+        deadline_s: f64,
+    },
+    /// No per-request deadline — only aggregate throughput matters.
+    #[default]
+    ThroughputTier,
+}
+
+impl SloClass {
+    /// The per-request deadline when this is a latency tier. Non-finite
+    /// or non-positive deadlines are treated as "no deadline" so an
+    /// `INFINITY` tier degenerates to throughput semantics instead of
+    /// marking every request met vacuously.
+    pub fn deadline_s(&self) -> Option<f64> {
+        match *self {
+            SloClass::LatencyTier { deadline_s } if deadline_s > 0.0 && deadline_s.is_finite() => {
+                Some(deadline_s)
+            }
+            _ => None,
+        }
+    }
+}
+
 /// Classify one arrival against a tenant's admission state: queue
-/// depth first (reject as [`PushError::Full`]), then the fabric-time
-/// token bucket (refuse as [`PushError::Throttled`]) — the single
-/// admission-order site behind the engine's push path (and therefore
-/// behind every composition mode, unified included), so refusal
-/// classification can never diverge between deployment modes.
+/// depth first (reject as [`PushError::Full`]), then the optional
+/// deadline shed (refuse as [`PushError::Deadline`] when the queue-wait
+/// estimate already exceeds the tenant's latency-SLO deadline — checked
+/// before the bucket so a doomed request never consumes fabric-time
+/// tokens), then the fabric-time token bucket (refuse as
+/// [`PushError::Throttled`]) — the single admission-order site behind
+/// the engine's push path (and therefore behind every composition mode,
+/// unified included), so refusal classification can never diverge
+/// between deployment modes.
 pub(crate) fn admit_arrival(
     pending: &mut VecDeque<(u64, f64)>,
     cap: usize,
     bucket: &mut Option<TokenBucket>,
     per_request_s: f64,
+    shed_deadline_s: Option<f64>,
     id: u64,
     arr_s: f64,
 ) -> Result<(), PushError> {
     if pending.len() >= cap {
         return Err(PushError::Full);
+    }
+    if let Some(d) = shed_deadline_s {
+        // Conservative wait estimate: everything already queued, served
+        // one request at a time on the current slice. Deliberately
+        // ignores in-flight work and batching so the bound is cheap,
+        // deterministic, and composition-mode-independent.
+        if pending.len() as f64 * per_request_s > d {
+            return Err(PushError::Deadline);
+        }
     }
     if let Some(b) = bucket {
         if !b.try_take(per_request_s, arr_s) {
@@ -402,13 +450,28 @@ pub struct TenantSpec {
     /// Optional bound on this tenant's share of *fabric time* (token
     /// bucket); `None` leaves only the queue-depth bound.
     pub rate_limit: Option<RateLimit>,
+    /// Service-level objective class (default: throughput tier, which
+    /// leaves every pre-existing behavior untouched).
+    pub slo: SloClass,
+    /// When `true` and the tenant is a latency tier, arrivals whose
+    /// queue-wait estimate already exceeds the deadline are shed at
+    /// admission ([`PushError::Deadline`]) instead of queued to miss.
+    pub deadline_admission: bool,
 }
 
 impl TenantSpec {
     /// Spec with default serving knobs (4096-deep queue, batches of 8,
-    /// no rate limit).
+    /// no rate limit, throughput-tier SLO).
     pub fn new(name: impl Into<String>, dag: Dag) -> Self {
-        Self { name: name.into(), dag, queue_capacity: 4096, max_batch: 8, rate_limit: None }
+        Self {
+            name: name.into(),
+            dag,
+            queue_capacity: 4096,
+            max_batch: 8,
+            rate_limit: None,
+            slo: SloClass::ThroughputTier,
+            deadline_admission: false,
+        }
     }
 
     /// Bound the tenant's queue to `cap` requests (min 1); pushes
@@ -430,6 +493,29 @@ impl TenantSpec {
         self.rate_limit = Some(RateLimit { fabric_share, burst_s });
         self
     }
+
+    /// Attach a service-level objective class.
+    pub fn with_slo(mut self, slo: SloClass) -> Self {
+        self.slo = slo;
+        self
+    }
+
+    /// Enable deadline-aware admission shedding (only effective on a
+    /// latency-tier tenant).
+    pub fn with_deadline_admission(mut self) -> Self {
+        self.deadline_admission = true;
+        self
+    }
+
+    /// The deadline used for admission shedding: the SLO deadline when
+    /// this tenant is a latency tier with shedding enabled, else `None`.
+    pub(crate) fn shed_deadline_s(&self) -> Option<f64> {
+        if self.deadline_admission {
+            self.slo.deadline_s()
+        } else {
+            None
+        }
+    }
 }
 
 /// One request arrival in a (virtual-time) traffic trace.
@@ -444,8 +530,9 @@ pub struct Arrival {
 }
 
 /// Sort a merged trace by (time, tenant) and renumber ids to the
-/// global arrival order — shared epilogue of every trace generator.
-fn finalize_trace(all: &mut [Arrival]) {
+/// global arrival order — shared epilogue of every trace generator
+/// (the scenario zoo's shape generators included).
+pub(crate) fn finalize_trace(all: &mut [Arrival]) {
     all.sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).unwrap().then(a.tenant.cmp(&b.tenant)));
     for (i, a) in all.iter_mut().enumerate() {
         a.id = i as u64;
@@ -738,5 +825,56 @@ mod tests {
         assert!(b.try_take(0.5, 1.0));
         // Clock going backwards never mints tokens.
         assert!(!b.try_take(0.5, 0.5));
+    }
+
+    // ---- SLO classes + deadline-aware admission --------------------------
+
+    #[test]
+    fn slo_deadline_ignores_degenerate_tiers() {
+        assert_eq!(SloClass::ThroughputTier.deadline_s(), None);
+        assert_eq!(SloClass::LatencyTier { deadline_s: 0.25 }.deadline_s(), Some(0.25));
+        assert_eq!(SloClass::LatencyTier { deadline_s: 0.0 }.deadline_s(), None);
+        assert_eq!(SloClass::LatencyTier { deadline_s: -1.0 }.deadline_s(), None);
+        assert_eq!(SloClass::LatencyTier { deadline_s: f64::INFINITY }.deadline_s(), None);
+    }
+
+    #[test]
+    fn shed_deadline_requires_both_tier_and_opt_in() {
+        let base = TenantSpec::new("t", zoo::mlp_s());
+        assert_eq!(base.shed_deadline_s(), None);
+        let tier = TenantSpec::new("t", zoo::mlp_s()).with_slo(SloClass::LatencyTier {
+            deadline_s: 0.5,
+        });
+        assert_eq!(tier.shed_deadline_s(), None, "shedding is opt-in");
+        assert_eq!(tier.with_deadline_admission().shed_deadline_s(), Some(0.5));
+        let thr = TenantSpec::new("t", zoo::mlp_s()).with_deadline_admission();
+        assert_eq!(thr.shed_deadline_s(), None, "throughput tiers have no deadline");
+    }
+
+    #[test]
+    fn admission_sheds_past_deadline_before_the_bucket() {
+        let mut pending: VecDeque<(u64, f64)> = VecDeque::new();
+        let mut bucket = Some(TokenBucket::new(0.0, 10.0));
+        // per-request 1 s, deadline 2.5 s: depths 0..=2 admit (wait
+        // estimate 0,1,2 s), depth 3 sheds (estimate 3 s > 2.5 s).
+        for id in 0..3 {
+            assert_eq!(
+                admit_arrival(&mut pending, 16, &mut bucket, 1.0, Some(2.5), id, 0.0),
+                Ok(())
+            );
+        }
+        let before = bucket.as_ref().unwrap().tokens();
+        assert_eq!(
+            admit_arrival(&mut pending, 16, &mut bucket, 1.0, Some(2.5), 3, 0.0),
+            Err(PushError::Deadline)
+        );
+        assert_eq!(
+            bucket.as_ref().unwrap().tokens(),
+            before,
+            "a shed request must not consume fabric-time tokens"
+        );
+        assert_eq!(pending.len(), 3);
+        // Without a shed deadline the same push is admitted.
+        assert_eq!(admit_arrival(&mut pending, 16, &mut bucket, 1.0, None, 3, 0.0), Ok(()));
     }
 }

@@ -1,8 +1,10 @@
 //! Minimal JSON parser + writer (RFC 8259 subset sufficient for the
 //! artifact manifest and config files; no serde in the offline crate set).
 //!
-//! Supports: objects, arrays, strings (with escapes incl. `\uXXXX`),
-//! numbers (f64), booleans, null. Rejects trailing garbage.
+//! Supports: objects, arrays, strings (with escapes incl. `\uXXXX`
+//! and UTF-16 surrogate pairs for non-BMP scalars), numbers (f64),
+//! booleans, null. Rejects trailing garbage. Lone surrogate halves
+//! decode leniently to U+FFFD instead of erroring.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -295,8 +297,39 @@ impl<'a> Parser<'a> {
                                 .map_err(|_| self.err("bad \\u escape"))?;
                             let cp = u32::from_str_radix(hex, 16)
                                 .map_err(|_| self.err("bad \\u escape"))?;
-                            s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.i += 4;
+                            if (0xD800..=0xDBFF).contains(&cp)
+                                && self.i + 10 < self.b.len()
+                                && self.b[self.i + 5] == b'\\'
+                                && self.b[self.i + 6] == b'u'
+                            {
+                                // UTF-16 surrogate pair: standard JSON
+                                // encoders escape non-BMP scalars
+                                // (emoji &c.) as \uD8xx\uDCxx, which
+                                // must combine into one char.
+                                let hex2 =
+                                    std::str::from_utf8(&self.b[self.i + 7..self.i + 11])
+                                        .map_err(|_| self.err("bad \\u escape"))?;
+                                let lo = u32::from_str_radix(hex2, 16)
+                                    .map_err(|_| self.err("bad \\u escape"))?;
+                                if (0xDC00..=0xDFFF).contains(&lo) {
+                                    let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                    s.push(char::from_u32(c).unwrap_or('\u{fffd}'));
+                                    self.i += 10;
+                                } else {
+                                    // High half followed by a non-low
+                                    // escape: replace the lone half and
+                                    // let the loop handle the second
+                                    // escape on its own.
+                                    s.push('\u{fffd}');
+                                    self.i += 4;
+                                }
+                            } else {
+                                // Lone surrogate halves land in
+                                // from_u32's None -> U+FFFD (lenient,
+                                // like most practical parsers).
+                                s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                                self.i += 4;
+                            }
                         }
                         _ => return Err(self.err("bad escape")),
                     }
@@ -398,6 +431,32 @@ mod tests {
             assert!(!text.contains(c), "raw control char in {text:?}");
             assert_eq!(Json::parse(&text).unwrap(), v, "control char {:#x}", c as u32);
         }
+    }
+
+    #[test]
+    fn surrogate_pairs_combine() {
+        // Standard encoders escape non-BMP scalars as UTF-16 pairs:
+        // U+1F600 is 😀.
+        let v = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(v.as_str(), Some("\u{1F600}"));
+        // Uppercase hex too.
+        assert_eq!(Json::parse("\"\\uD83D\\uDE00\"").unwrap().as_str(), Some("\u{1F600}"));
+        // The combined scalar re-serializes as raw UTF-8 and parses
+        // back unchanged.
+        assert_eq!(Json::parse(&v.to_string_compact()).unwrap(), v);
+        // Lone halves degrade to the replacement character, not an
+        // error and never a mangled document.
+        assert_eq!(Json::parse(r#""\ud83d""#).unwrap().as_str(), Some("\u{fffd}"));
+        assert_eq!(Json::parse(r#""\ude00x""#).unwrap().as_str(), Some("\u{fffd}x"));
+        // A high half chased by a raw character keeps both.
+        assert_eq!(Json::parse(r#""\ud83dA""#).unwrap().as_str(), Some("\u{fffd}A"));
+        // A high half chased by a non-surrogate escape: replacement
+        // for the half, then the escape decodes on its own.
+        assert_eq!(Json::parse(r#""\ud83d\n""#).unwrap().as_str(), Some("\u{fffd}\n"));
+        // Two high halves in a row: two replacements.
+        assert_eq!(Json::parse(r#""\ud83d\ud83d""#).unwrap().as_str(), Some("\u{fffd}\u{fffd}"));
+        // Truncated at end of input the string is simply unterminated.
+        assert!(Json::parse(r#""\ud83d\""#).is_err());
     }
 
     #[test]
