@@ -16,7 +16,7 @@
 use std::time::Instant;
 
 use filco::arch::FilcoConfig;
-use filco::dse::ga::GaConfig;
+use filco::dse::ga::{GaConfig, GaSeed};
 use filco::dse::milp::MilpStatus;
 use filco::dse::schedule::{CandidateTable, Mode};
 use filco::dse::sched_milp;
@@ -144,6 +144,59 @@ fn main() {
         format!("{ga2_t:.2}"),
         format!("{:.4}", ga2.best_makespan),
         format!("{} evals", ga2.evaluations),
+    ]);
+
+    // ---- Fast-DSE rows: worker pool differential + warm start --------
+    // The pool only batches fitness evaluation; children are generated
+    // by the serial RNG stream, so every worker count must reproduce
+    // the Config-1 GA outcome bit-for-bit while the wall clock drops.
+    let ga1_cfg = GaConfig { population: 64, generations: 200, seed: 4, ..Default::default() };
+    let mut ga1_w1_t = ga1_t;
+    for w in [1usize, 2, 4] {
+        let tw = Instant::now();
+        let out = GaConfig { workers: w, ..ga1_cfg.clone() }.solve(&dag1, &tab1, &cfg1);
+        let wt = tw.elapsed().as_secs_f64();
+        assert_eq!(out, ga1, "workers={w} changed the Config-1 GA outcome");
+        if w == 1 {
+            ga1_w1_t = wt;
+        }
+        t.row(&[
+            "Config-1 (50x50)".into(),
+            format!("GA w={w}"),
+            format!("{wt:.2}"),
+            format!("{:.4}", out.best_makespan),
+            format!(
+                "{:.2}x, {:.0} evals/s",
+                ga1_w1_t / wt.max(1e-9),
+                out.evaluations as f64 / wt.max(1e-9)
+            ),
+        ]);
+    }
+    // Warm start seeded with the cold run's own schedule plus the
+    // convergence cutoff: same budget, equal-or-better makespan,
+    // typically far fewer generations.
+    let seeds = vec![GaSeed::from_schedule(&ga1.schedule, dag1.len()).expect("valid donor")];
+    let tw = Instant::now();
+    let warm = GaConfig { workers: 4, stall_generations: 8, stall_epsilon: 1e-3, ..ga1_cfg }
+        .solve_seeded(&dag1, &tab1, &cfg1, &seeds);
+    let warm_t = tw.elapsed().as_secs_f64();
+    assert!(
+        warm.best_makespan <= ga1.best_makespan * 1.000_001,
+        "warm start lost makespan: {} vs {}",
+        warm.best_makespan,
+        ga1.best_makespan
+    );
+    t.row(&[
+        "Config-1 (50x50)".into(),
+        "GA warm+cutoff".into(),
+        format!("{warm_t:.2}"),
+        format!("{:.4}", warm.best_makespan),
+        format!(
+            "{} gens{}, {:.0} evals/s",
+            warm.generations_run,
+            if warm.stopped_early { " (early stop)" } else { "" },
+            warm.evaluations as f64 / warm_t.max(1e-9)
+        ),
     ]);
     t.emit("fig11_dse_search");
 

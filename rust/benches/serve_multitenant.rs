@@ -24,11 +24,12 @@ use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use filco::arch::FilcoConfig;
-use filco::dse::Solver;
+use filco::dse::ga::{GaConfig, GaSeed};
+use filco::dse::{stage1, Solver};
 use filco::platform::Platform;
 use filco::report::{eng, Table};
 use filco::serve::{
-    equal_split_per_request, poisson_trace, scenario, simulate, simulate_instrumented,
+    equal_split_per_request, poisson_trace, scenario, simulate, simulate_instrumented, DseTuning,
     PolicyConfig, RunTelemetry, Scenario, ScheduleCache, ServeReport, Strategy, TelemetryConfig,
     TenantSpec,
 };
@@ -83,7 +84,11 @@ fn main() {
     } else {
         Solver::Ga { population: 32, generations: 60, seed: 0xF11C0 }
     };
-    let cache = ScheduleCache::new(solver);
+    // The accelerated DSE profile the `--dse-workers 4` CLI flag maps
+    // to: pooled fitness evaluation, warm starts off neighboring
+    // slices, and the convergence cutoff. Worker count never changes a
+    // result; warm starts only match or improve makespan.
+    let cache = ScheduleCache::new(solver).with_tuning(DseTuning::accelerated(4));
 
     let tenants = vec![
         TenantSpec::new("mlp-l", zoo::mlp_l()),
@@ -219,6 +224,83 @@ fn main() {
         scen_rows.insert(name.to_string(), Json::Obj(row));
     }
 
+    // ---- DSE fast path: cold vs warm, worker scaling -----------------
+    // Direct GA timings over the zoo DAGs, separate from the cache
+    // wall times above, so the snapshot tracks the solver itself. The
+    // warm runs are seeded the way the cache's warm-start probe seeds
+    // them and must never lose makespan; the cutoff is what buys the
+    // wall-time win at an unchanged generation budget.
+    let (dse_pop, dse_gens) = if sample { (16, 20) } else { (32, 60) };
+    let budget = GaConfig {
+        population: dse_pop,
+        generations: dse_gens,
+        seed: 0xF11C0,
+        ..Default::default()
+    };
+    let tuned =
+        GaConfig { workers: 4, stall_generations: 6, stall_epsilon: 1e-3, ..budget.clone() };
+    let dse_dags = [zoo::mlp_s(), zoo::mlp_l(), zoo::deit_s(), zoo::pointnet()];
+    let (mut cold_ms, mut warm_ms) = (0.0f64, 0.0f64);
+    let (mut stops, mut warm_evals, mut warm_wall_s) = (0usize, 0u64, 0.0f64);
+    for d in &dse_dags {
+        let tbl = stage1::optimize_pool(&sc.platform, &sc.base, d, 4);
+        let t = std::time::Instant::now();
+        let serial = budget.solve(d, &tbl, &sc.base);
+        let c_ms = t.elapsed().as_secs_f64() * 1e3;
+        cold_ms += c_ms;
+        let seeds = vec![GaSeed::from_schedule(&serial.schedule, d.len()).expect("valid donor")];
+        let t = std::time::Instant::now();
+        let warm = tuned.solve_seeded(d, &tbl, &sc.base, &seeds);
+        let w_ms = t.elapsed().as_secs_f64() * 1e3;
+        warm_ms += w_ms;
+        warm_wall_s += warm.elapsed_s.max(1e-9);
+        warm_evals += warm.evaluations;
+        stops += warm.stopped_early as usize;
+        assert!(
+            warm.best_makespan <= serial.best_makespan * 1.000_001,
+            "{}: warm start lost makespan ({} vs {})",
+            d.name,
+            warm.best_makespan,
+            serial.best_makespan
+        );
+        println!(
+            "dse {}: cold {c_ms:.1} ms -> warm {w_ms:.1} ms, {} gens{}",
+            d.name,
+            warm.generations_run,
+            if warm.stopped_early { " (early stop)" } else { "" }
+        );
+    }
+    // Worker scaling on identical inputs: the outcome must be
+    // bit-for-bit invariant, only the wall clock may move.
+    let wdag = zoo::mlp_l();
+    let wtbl = stage1::optimize_pool(&sc.platform, &sc.base, &wdag, 4);
+    let mut workers_ms = BTreeMap::new();
+    let (mut w1_ms, mut w1_out) = (0.0f64, None);
+    for w in [1usize, 2, 4] {
+        let t = std::time::Instant::now();
+        let out = GaConfig { workers: w, ..budget.clone() }.solve(&wdag, &wtbl, &sc.base);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        if let Some(ref base) = w1_out {
+            assert_eq!(&out, base, "workers={w} changed the GA outcome");
+        } else {
+            w1_ms = ms;
+            w1_out = Some(out);
+        }
+        workers_ms.insert(w.to_string(), num(w1_ms / ms.max(1e-9)));
+        println!("dse workers={w}: {ms:.1} ms ({:.2}x)", w1_ms / ms.max(1e-9));
+    }
+    let mut dse_obj = BTreeMap::new();
+    dse_obj.insert("cold_solve_ms".to_string(), num(cold_ms));
+    dse_obj.insert("warm_solve_ms".to_string(), num(warm_ms));
+    dse_obj.insert("warm_speedup".to_string(), num(cold_ms / warm_ms.max(1e-9)));
+    dse_obj.insert("workers_speedup".to_string(), Json::Obj(workers_ms));
+    dse_obj.insert(
+        "evals_per_sec".to_string(),
+        num(warm_evals as f64 / warm_wall_s.max(1e-9)),
+    );
+    dse_obj.insert("early_stop_rate".to_string(), num(stops as f64 / dse_dags.len() as f64));
+    dse_obj.insert("coalesced_solves".to_string(), num(cache.coalesced_solves() as f64));
+
     println!("schedule cache: {}", cache.stats());
     println!(
         "DSE: {} solves, {:.1} ms wall total; cache lookups {:.1} us wall total",
@@ -246,6 +328,7 @@ fn main() {
         "sharded_step_speedup".to_string(),
         num(serial_step_ns / reports[7].2.step_profile.ns_per_step().max(1e-9)),
     );
+    snap.insert("dse".to_string(), Json::Obj(dse_obj));
     snap.insert("scenarios".to_string(), Json::Obj(scen_rows));
     snap.insert(
         "strategies".to_string(),

@@ -14,6 +14,7 @@
 //! the paper describes; the best chromosome survives each generation
 //! (elitism).
 
+use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::arch::FilcoConfig;
@@ -25,8 +26,12 @@ use super::schedule::{list_schedule, makespan_only, CandidateTable, Schedule, Sc
 /// GA hyper-parameters.
 #[derive(Debug, Clone)]
 pub struct GaConfig {
+    /// Chromosomes per generation (floored at 2).
     pub population: usize,
+    /// Breeding rounds to run (upper bound; see [`Self::stall_generations`]
+    /// and [`Self::time_budget_s`] for early exits).
     pub generations: usize,
+    /// RNG seed; the whole search is a pure function of it.
     pub seed: u64,
     /// Per-gene crossover probability (uniform crossover).
     pub crossover_rate: f64,
@@ -36,6 +41,19 @@ pub struct GaConfig {
     pub elite: usize,
     /// Optional wall-clock budget; stops early when exceeded.
     pub time_budget_s: Option<f64>,
+    /// Fitness-evaluation worker threads (1 = evaluate inline). Children
+    /// are always *generated* serially by the seeded RNG stream — the
+    /// pool only evaluates the finished batch, and `evaluate` is a pure
+    /// function of the chromosome — so the outcome is bit-for-bit
+    /// identical for every worker count.
+    pub workers: usize,
+    /// Convergence cutoff: stop after this many consecutive generations
+    /// whose best makespan improved by less than [`Self::stall_epsilon`]
+    /// (relative). 0 disables the cutoff (the default — full budget).
+    pub stall_generations: usize,
+    /// Relative improvement below which a generation counts as stalled
+    /// for [`Self::stall_generations`].
+    pub stall_epsilon: f64,
 }
 
 impl Default for GaConfig {
@@ -48,20 +66,94 @@ impl Default for GaConfig {
             mutation_rate: 0.1,
             elite: 2,
             time_budget_s: None,
+            workers: 1,
+            stall_generations: 0,
+            stall_epsilon: 1e-4,
         }
     }
 }
 
 /// GA outcome with convergence telemetry (Fig 11's y-axis).
+///
+/// Equality ignores [`Self::elapsed_s`] (wall-clock noise): two
+/// outcomes are `==` when the *search* was identical — schedule,
+/// history, evaluation count, generation count and early-stop flag.
+/// That is what the worker-count differential test asserts.
 #[derive(Debug, Clone)]
 pub struct GaOutcome {
+    /// Best schedule found.
     pub schedule: Schedule,
+    /// Its makespan (fabric seconds).
     pub best_makespan: f64,
+    /// Breeding rounds actually run.
     pub generations_run: usize,
+    /// Fitness evaluations performed.
     pub evaluations: u64,
+    /// Wall seconds the solve took (excluded from `==`).
     pub elapsed_s: f64,
     /// Best makespan after each generation.
     pub history: Vec<f64>,
+    /// Did the convergence cutoff ([`GaConfig::stall_generations`])
+    /// stop the search before the generation budget ran out?
+    pub stopped_early: bool,
+}
+
+impl PartialEq for GaOutcome {
+    fn eq(&self, other: &Self) -> bool {
+        self.schedule == other.schedule
+            && self.best_makespan == other.best_makespan
+            && self.generations_run == other.generations_run
+            && self.evaluations == other.evaluations
+            && self.history == other.history
+            && self.stopped_early == other.stopped_early
+    }
+}
+
+/// A known-good schedule injected into the initial population: a layer
+/// order (re-encoded as ascending random keys) plus per-layer mode
+/// picks. [`crate::serve::ScheduleCache`] derives these from ready
+/// schedules of the *same DAG* under neighboring fabric slices, so a
+/// re-split starts near a known-good point instead of from random
+/// genes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GaSeed {
+    /// Layer indices in scheduling order (a permutation of `0..n`).
+    pub order: Vec<usize>,
+    /// Candidate-mode index per layer (clamped to the table's range).
+    pub modes: Vec<usize>,
+}
+
+impl GaSeed {
+    /// Derive a seed from a schedule: layer order by `(start, end,
+    /// layer)`, mode picks straight from the entries. Returns `None`
+    /// when the schedule does not cover exactly `n` layers (a foreign
+    /// or degenerate schedule cannot seed this DAG).
+    pub fn from_schedule(schedule: &Schedule, n: usize) -> Option<Self> {
+        if schedule.entries.len() != n {
+            return None;
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            let (x, y) = (&schedule.entries[a], &schedule.entries[b]);
+            x.start
+                .total_cmp(&y.start)
+                .then(x.end.total_cmp(&y.end))
+                .then(x.layer.cmp(&y.layer))
+        });
+        let mut order = Vec::with_capacity(n);
+        let mut modes = vec![0usize; n];
+        let mut seen = vec![false; n];
+        for &i in &idx {
+            let e = &schedule.entries[i];
+            if e.layer >= n || seen[e.layer] {
+                return None;
+            }
+            seen[e.layer] = true;
+            order.push(e.layer);
+            modes[e.layer] = e.mode;
+        }
+        Some(Self { order, modes })
+    }
 }
 
 #[derive(Clone)]
@@ -90,7 +182,7 @@ pub fn decode_order(dag: &Dag, encode: &[f64]) -> Vec<usize> {
     }
     impl Ord for Key {
         fn cmp(&self, o: &Self) -> std::cmp::Ordering {
-            self.0.partial_cmp(&o.0).unwrap().then(self.1.cmp(&o.1))
+            self.0.total_cmp(&o.0).then(self.1.cmp(&o.1))
         }
     }
 
@@ -118,28 +210,184 @@ pub fn decode_order(dag: &Dag, encode: &[f64]) -> Vec<usize> {
     order
 }
 
+/// One fitness job shipped to a pool worker: the population slot the
+/// result lands back in, plus the genes to score.
+type EvalTask = (usize, Vec<f64>, Vec<u16>);
+
+/// Batch fitness evaluator. Both implementations compute the exact
+/// same pure function per chromosome and write results back by slot
+/// index, so swapping one for the other never changes the search.
+trait BatchEval {
+    /// Score every chromosome in `batch`, bumping `evals` once each.
+    fn eval(
+        &mut self,
+        dag: &Dag,
+        table: &CandidateTable,
+        cfg: &FilcoConfig,
+        batch: &mut [Chromosome],
+        evals: &mut u64,
+    );
+}
+
+/// Inline evaluator: one scratch + mode buffer, reused across all
+/// evaluations (§Perf: the allocation-free fitness path).
+#[derive(Default)]
+struct SerialEval {
+    scratch: ScheduleScratch,
+    mode_buf: Vec<usize>,
+}
+
+/// Score one chromosome: decode the order, list-schedule, makespan.
+/// Pure in the chromosome (given dag/table/cfg), which is what makes
+/// parallel evaluation bit-for-bit equal to serial.
+fn fitness_of(
+    dag: &Dag,
+    table: &CandidateTable,
+    cfg: &FilcoConfig,
+    encode: &[f64],
+    candidate: &[u16],
+    scratch: &mut ScheduleScratch,
+    mode_buf: &mut Vec<usize>,
+) -> f64 {
+    let order = decode_order(dag, encode);
+    mode_buf.clear();
+    mode_buf.extend(candidate.iter().map(|&x| x as usize));
+    makespan_only(dag, table, &order, mode_buf, cfg.n_fmus, cfg.m_cus, scratch)
+}
+
+impl BatchEval for SerialEval {
+    fn eval(
+        &mut self,
+        dag: &Dag,
+        table: &CandidateTable,
+        cfg: &FilcoConfig,
+        batch: &mut [Chromosome],
+        evals: &mut u64,
+    ) {
+        for c in batch.iter_mut() {
+            c.fitness = fitness_of(
+                dag,
+                table,
+                cfg,
+                &c.encode,
+                &c.candidate,
+                &mut self.scratch,
+                &mut self.mode_buf,
+            );
+            *evals += 1;
+        }
+    }
+}
+
+/// Pool evaluator: tasks fan out round-robin over per-worker channels
+/// (each worker owns its scratch/mode buffers), results come back on a
+/// shared channel tagged with their slot index. However the results
+/// interleave in wall time, they land in their slots — the population
+/// after a batch is identical for any worker count.
+struct PoolEval {
+    txs: Vec<mpsc::Sender<EvalTask>>,
+    rx: mpsc::Receiver<(usize, f64)>,
+}
+
+impl BatchEval for PoolEval {
+    fn eval(
+        &mut self,
+        _dag: &Dag,
+        _table: &CandidateTable,
+        _cfg: &FilcoConfig,
+        batch: &mut [Chromosome],
+        evals: &mut u64,
+    ) {
+        for (i, c) in batch.iter().enumerate() {
+            self.txs[i % self.txs.len()]
+                .send((i, c.encode.clone(), c.candidate.clone()))
+                .expect("eval worker alive");
+        }
+        for _ in 0..batch.len() {
+            let (i, fit) = self.rx.recv().expect("eval worker alive");
+            batch[i].fitness = fit;
+            *evals += 1;
+        }
+    }
+}
+
 impl GaConfig {
     /// Run the GA; always returns a valid schedule.
     pub fn solve(&self, dag: &Dag, table: &CandidateTable, cfg: &FilcoConfig) -> GaOutcome {
+        self.solve_seeded(dag, table, cfg, &[])
+    }
+
+    /// Run the GA with warm-start `seeds` injected into the initial
+    /// population (on top of the always-present fastest-modes
+    /// individual). Seeds overwrite individuals *after* the seeded RNG
+    /// generated them, so the RNG stream — and therefore every random
+    /// draw the search makes — is identical with and without seeds of
+    /// any count, and identical for any [`GaConfig::workers`] value.
+    pub fn solve_seeded(
+        &self,
+        dag: &Dag,
+        table: &CandidateTable,
+        cfg: &FilcoConfig,
+        seeds: &[GaSeed],
+    ) -> GaOutcome {
+        let workers = self.workers.max(1).min(self.population.max(2));
+        if workers == 1 {
+            return self.run(dag, table, cfg, seeds, &mut SerialEval::default());
+        }
+        // Fixed pool for the whole solve: spawn once, feed per-worker
+        // task channels, tear down by dropping the senders (the scope
+        // joins the workers on exit).
+        std::thread::scope(|scope| {
+            let (res_tx, res_rx) = mpsc::channel::<(usize, f64)>();
+            let mut txs = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let (tx, rx) = mpsc::channel::<EvalTask>();
+                let res_tx = res_tx.clone();
+                scope.spawn(move || {
+                    // Per-worker scratch + mode buffer: no shared
+                    // mutable state between evaluations.
+                    let mut scratch = ScheduleScratch::default();
+                    let mut mode_buf: Vec<usize> = Vec::with_capacity(dag.len());
+                    while let Ok((idx, encode, candidate)) = rx.recv() {
+                        let fit = fitness_of(
+                            dag,
+                            table,
+                            cfg,
+                            &encode,
+                            &candidate,
+                            &mut scratch,
+                            &mut mode_buf,
+                        );
+                        if res_tx.send((idx, fit)).is_err() {
+                            break;
+                        }
+                    }
+                });
+                txs.push(tx);
+            }
+            drop(res_tx);
+            let mut eval = PoolEval { txs, rx: res_rx };
+            self.run(dag, table, cfg, seeds, &mut eval)
+        })
+    }
+
+    /// The GA loop proper, generic over the fitness evaluator. Children
+    /// are generated serially by the seeded RNG (gene layout and stream
+    /// unchanged from the original inline-evaluation loop — `evaluate`
+    /// consumed no RNG), then the batch is scored.
+    fn run<E: BatchEval>(
+        &self,
+        dag: &Dag,
+        table: &CandidateTable,
+        cfg: &FilcoConfig,
+        seeds: &[GaSeed],
+        eval: &mut E,
+    ) -> GaOutcome {
         let start = Instant::now();
         let n = dag.len();
         let mut rng = SplitMix64::new(self.seed);
         let cans: Vec<u16> = (0..n).map(|i| table.modes[i].len() as u16).collect();
         let mut evals = 0u64;
-        // Allocation-free fitness path (§Perf): reuse scratch + mode
-        // buffer across all evaluations.
-        let mut scratch = ScheduleScratch::default();
-        let mut mode_buf: Vec<usize> = vec![0; n];
-
-        let mut evaluate = |c: &mut Chromosome, evals: &mut u64| {
-            let order = decode_order(dag, &c.encode);
-            for (dst, &src) in mode_buf.iter_mut().zip(&c.candidate) {
-                *dst = src as usize;
-            }
-            c.fitness =
-                makespan_only(dag, table, &order, &mode_buf, cfg.n_fmus, cfg.m_cus, &mut scratch);
-            *evals += 1;
-        };
 
         // Init population: random keys + random candidates, with one
         // seeded "fastest modes" individual for a sane starting point.
@@ -152,9 +400,7 @@ impl GaConfig {
                             table.modes[i]
                                 .iter()
                                 .enumerate()
-                                .min_by(|a, b| {
-                                    a.1.latency_s.partial_cmp(&b.1.latency_s).unwrap()
-                                })
+                                .min_by(|a, b| a.1.latency_s.total_cmp(&b.1.latency_s))
                                 .map(|(k, _)| k as u16)
                                 .unwrap_or(0)
                         })
@@ -165,25 +411,70 @@ impl GaConfig {
                 Chromosome { encode, candidate, fitness: f64::INFINITY }
             })
             .collect();
-        for c in &mut pop {
-            evaluate(c, &mut evals);
+        // Warm-start injection: overwrite individuals starting at slot 1
+        // (slot 0 keeps the fastest-modes heuristic). The RNG already
+        // ran for these slots above, so injection perturbs no stream.
+        for (si, seed) in seeds.iter().enumerate() {
+            let slot = 1 + si;
+            if slot >= pop.len() {
+                break;
+            }
+            if seed.order.len() != n || seed.modes.len() != n {
+                continue;
+            }
+            let c = &mut pop[slot];
+            for (rank, &layer) in seed.order.iter().enumerate() {
+                if layer < n {
+                    // Ascending keys reproduce the seed's layer order
+                    // through the dependency-aware decoder.
+                    c.encode[layer] = (rank as f64 + 0.5) / n as f64;
+                }
+            }
+            for i in 0..n {
+                c.candidate[i] = seed.modes[i].min(cans[i].max(1) as usize - 1) as u16;
+            }
         }
+        eval.eval(dag, table, cfg, &mut pop, &mut evals);
 
         let mut history = Vec::with_capacity(self.generations);
         let mut gens = 0usize;
+        let mut stall = 0usize;
+        let mut stopped_early = false;
         for _gen in 0..self.generations {
             if let Some(budget) = self.time_budget_s {
                 if start.elapsed().as_secs_f64() > budget {
                     break;
                 }
             }
-            gens += 1;
-            pop.sort_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap());
+            pop.sort_by(|a, b| a.fitness.total_cmp(&b.fitness));
             history.push(pop[0].fitness);
+            // Convergence cutoff: count consecutive generations whose
+            // best improved by less than the relative epsilon; K such
+            // stalls end the search (elitism makes the series
+            // non-increasing, so a stalled best cannot recover).
+            if self.stall_generations > 0 && history.len() >= 2 {
+                let prev = history[history.len() - 2];
+                let cur = history[history.len() - 1];
+                let threshold = if prev.is_finite() {
+                    prev - self.stall_epsilon * prev.abs()
+                } else {
+                    f64::MAX
+                };
+                if cur < threshold {
+                    stall = 0;
+                } else {
+                    stall += 1;
+                }
+                if stall >= self.stall_generations {
+                    stopped_early = true;
+                    break;
+                }
+            }
+            gens += 1;
 
             let elite = self.elite.min(pop.len());
-            let mut next: Vec<Chromosome> = pop[..elite].to_vec();
-            while next.len() < pop.len() {
+            let mut children: Vec<Chromosome> = Vec::with_capacity(pop.len() - elite);
+            while children.len() < pop.len() - elite {
                 // Random parent selection (paper's strategy), mild
                 // fitness bias by sampling from the top half.
                 let half = (pop.len() / 2).max(1);
@@ -208,12 +499,17 @@ impl GaConfig {
                         child.candidate[i] = rng.below(cans[i].max(1) as u64) as u16;
                     }
                 }
-                evaluate(&mut child, &mut evals);
-                next.push(child);
+                children.push(child);
             }
+            // The offspring batch is complete; score it (in parallel
+            // when a pool is attached — no RNG runs past this point in
+            // the generation, so batching changed nothing).
+            eval.eval(dag, table, cfg, &mut children, &mut evals);
+            let mut next: Vec<Chromosome> = pop[..elite].to_vec();
+            next.append(&mut children);
             pop = next;
         }
-        pop.sort_by(|a, b| a.fitness.partial_cmp(&b.fitness).unwrap());
+        pop.sort_by(|a, b| a.fitness.total_cmp(&b.fitness));
         let best = &pop[0];
         let order = decode_order(dag, &best.encode);
         let mode_of: Vec<usize> = best.candidate.iter().map(|&x| x as usize).collect();
@@ -225,6 +521,7 @@ impl GaConfig {
             evaluations: evals,
             elapsed_s: start.elapsed().as_secs_f64(),
             history,
+            stopped_early,
         }
     }
 }

@@ -23,6 +23,7 @@ pub mod schedule;
 pub mod simplex;
 pub mod stage1;
 
+pub use ga::GaSeed;
 pub use schedule::{CandidateTable, LayerStep, Mode, Schedule, ScheduleEntry};
 
 use crate::workload::Dag;
@@ -36,6 +37,22 @@ pub enum Solver {
     Ga { population: usize, generations: usize, seed: u64 },
 }
 
+/// Performance knobs for a [`two_stage_tuned`] solve. The default is
+/// the legacy behaviour: one worker, no convergence cutoff, no seeds —
+/// so [`two_stage`] callers are untouched.
+#[derive(Debug, Clone, Default)]
+pub struct SolveTuning {
+    /// Fitness-evaluation worker threads (0 and 1 both mean serial).
+    pub workers: usize,
+    /// Stop the GA after this many generations without relative
+    /// improvement (0 disables the cutoff).
+    pub stall_generations: usize,
+    /// Relative improvement below which a generation counts as stalled.
+    pub stall_epsilon: f64,
+    /// Warm-start individuals injected into the initial population.
+    pub seeds: Vec<GaSeed>,
+}
+
 /// End-to-end two-stage DSE: candidate table, then schedule.
 pub fn two_stage(
     platform: &crate::platform::Platform,
@@ -43,14 +60,35 @@ pub fn two_stage(
     dag: &Dag,
     solver: Solver,
 ) -> Schedule {
-    let table = stage1::optimize(platform, cfg, dag);
+    two_stage_tuned(platform, cfg, dag, solver, &SolveTuning::default())
+}
+
+/// [`two_stage`] with performance knobs: Stage 1 spreads distinct layer
+/// shapes over `tuning.workers` threads, and the GA arm gets the worker
+/// pool, convergence cutoff, and warm-start seeds. The schedule is
+/// bit-for-bit identical for any worker count; seeds and cutoff may
+/// change it (equal-or-better makespan by elitism).
+pub fn two_stage_tuned(
+    platform: &crate::platform::Platform,
+    cfg: &crate::arch::FilcoConfig,
+    dag: &Dag,
+    solver: Solver,
+    tuning: &SolveTuning,
+) -> Schedule {
+    let table = stage1::optimize_pool(platform, cfg, dag, tuning.workers.max(1));
     match solver {
         Solver::Milp { budget_s } => sched_milp::solve(dag, &table, cfg, budget_s).schedule,
-        Solver::Ga { population, generations, seed } => {
-            ga::GaConfig { population, generations, seed, ..Default::default() }
-                .solve(dag, &table, cfg)
-                .schedule
+        Solver::Ga { population, generations, seed } => ga::GaConfig {
+            population,
+            generations,
+            seed,
+            workers: tuning.workers.max(1),
+            stall_generations: tuning.stall_generations,
+            stall_epsilon: tuning.stall_epsilon,
+            ..Default::default()
         }
+        .solve_seeded(dag, &table, cfg, &tuning.seeds)
+        .schedule,
     }
 }
 

@@ -34,18 +34,20 @@ impl CandidateTable {
         self.modes.iter().map(|m| m.len()).max().unwrap_or(0)
     }
 
-    /// Mode of layer `i` with the smallest latency.
+    /// Mode of layer `i` with the smallest latency. NaN-safe:
+    /// `total_cmp` orders non-finite latencies last instead of
+    /// panicking on a degenerate table.
     pub fn fastest(&self, i: usize) -> &Mode {
         self.modes[i]
             .iter()
-            .min_by(|a, b| a.latency_s.partial_cmp(&b.latency_s).unwrap())
+            .min_by(|a, b| a.latency_s.total_cmp(&b.latency_s))
             .expect("layer with no candidate modes")
     }
 }
 
 /// One scheduled layer: mode + interval + concrete unit assignment
 /// (the `A_{i,m}`/`B_{i,m}` of the MILP, materialised).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScheduleEntry {
     pub layer: usize,
     pub mode: usize,
@@ -77,7 +79,7 @@ pub struct LayerStep {
 }
 
 /// A complete schedule (sorted by layer index).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Schedule {
     pub entries: Vec<ScheduleEntry>,
     pub makespan: f64,
@@ -93,9 +95,8 @@ impl Schedule {
         let mut order: Vec<&ScheduleEntry> = self.entries.iter().collect();
         order.sort_by(|a, b| {
             a.end
-                .partial_cmp(&b.end)
-                .unwrap()
-                .then(a.start.partial_cmp(&b.start).unwrap())
+                .total_cmp(&b.end)
+                .then(a.start.total_cmp(&b.start))
                 .then(a.layer.cmp(&b.layer))
         });
         let mut frontier = 0.0f64;
@@ -247,10 +248,10 @@ pub fn list_schedule(
         debug_assert!(ready.is_finite(), "order must respect dependencies");
 
         // Sort unit ids by free time; claim the earliest-free `need`.
-        fmu_idx.sort_by(|&a, &b| {
-            fmu_free[a as usize].partial_cmp(&fmu_free[b as usize]).unwrap()
-        });
-        cu_idx.sort_by(|&a, &b| cu_free[a as usize].partial_cmp(&cu_free[b as usize]).unwrap());
+        // `total_cmp`: free times are non-negative, and a degenerate
+        // NaN latency must not panic the scheduler mid-solve.
+        fmu_idx.sort_by(|&a, &b| fmu_free[a as usize].total_cmp(&fmu_free[b as usize]));
+        cu_idx.sort_by(|&a, &b| cu_free[a as usize].total_cmp(&cu_free[b as usize]));
         let f_avail = if need_f > 0 { fmu_free[fmu_idx[need_f - 1] as usize] } else { 0.0 };
         let c_avail = if need_c > 0 { cu_free[cu_idx[need_c - 1] as usize] } else { 0.0 };
         let start = ready.max(f_avail).max(c_avail);
@@ -347,16 +348,24 @@ pub fn makespan_only(
             ready = ready.max(if d.is_nan() { f64::INFINITY } else { d });
         }
         let (fmu_free, cu_free) = (&mut scratch.fmu_free, &mut scratch.cu_free);
-        scratch.fmu_idx.sort_unstable_by(|&a, &b| {
-            fmu_free[a as usize].partial_cmp(&fmu_free[b as usize]).unwrap()
-        });
-        scratch.cu_idx.sort_unstable_by(|&a, &b| {
-            cu_free[a as usize].partial_cmp(&cu_free[b as usize]).unwrap()
-        });
+        scratch
+            .fmu_idx
+            .sort_unstable_by(|&a, &b| fmu_free[a as usize].total_cmp(&fmu_free[b as usize]));
+        scratch
+            .cu_idx
+            .sort_unstable_by(|&a, &b| cu_free[a as usize].total_cmp(&cu_free[b as usize]));
         let f_avail = if need_f > 0 { fmu_free[scratch.fmu_idx[need_f - 1] as usize] } else { 0.0 };
         let c_avail = if need_c > 0 { cu_free[scratch.cu_idx[need_c - 1] as usize] } else { 0.0 };
         let start = ready.max(f_avail).max(c_avail);
         let end = start + mode.latency_s;
+        if !end.is_finite() {
+            // A non-finite latency (degenerate candidate table) means
+            // this chromosome can never be a real schedule: report
+            // infinite makespan instead of letting NaN leak into the
+            // free-time state — `f64::max` would silently *drop* a NaN
+            // end, scoring the degenerate mode as faster.
+            return f64::INFINITY;
+        }
         for &f in &scratch.fmu_idx[..need_f] {
             fmu_free[f as usize] = end;
         }

@@ -40,6 +40,44 @@ fn fmu_grid(n_fmus: u32) -> Vec<u32> {
     v
 }
 
+/// The per-shape brute force: sweep the allocation grid, Pareto-prune,
+/// dedupe. Pure in its inputs — the memoised serial walk and the
+/// worker-pool walk both bottom out here, which is why their tables
+/// are identical.
+fn candidates_for(
+    p: &Platform,
+    cfg: &FilcoConfig,
+    fgrid: &[u32],
+    shape: &crate::workload::MmShape,
+) -> Vec<Mode> {
+    let mut cand: Vec<Mode> = Vec::new();
+    for &f in fgrid {
+        for c in 1..=cfg.m_cus {
+            let model = slice_model(cfg, f, c);
+            let perf = model.layer_perf(p, shape);
+            cand.push(Mode { fmus: f, cus: c, latency_s: perf.latency_s, tile: perf.tile });
+        }
+    }
+    // Pareto prune: drop modes dominated in (fmus, cus, latency).
+    let mut keep: Vec<Mode> = Vec::new();
+    for m in &cand {
+        let dominated = cand.iter().any(|o| {
+            (o.fmus <= m.fmus && o.cus <= m.cus && o.latency_s < m.latency_s - 1e-15)
+                || (o.fmus < m.fmus && o.cus <= m.cus && o.latency_s <= m.latency_s)
+                || (o.fmus <= m.fmus && o.cus < m.cus && o.latency_s <= m.latency_s)
+        });
+        if !dominated {
+            keep.push(*m);
+        }
+    }
+    // Deduplicate identical survivors.
+    keep.sort_by(|a, b| {
+        (a.fmus, a.cus).cmp(&(b.fmus, b.cus)).then(a.latency_s.total_cmp(&b.latency_s))
+    });
+    keep.dedup_by(|a, b| a.fmus == b.fmus && a.cus == b.cus);
+    keep
+}
+
 /// Brute-force the candidate table for every layer of `dag`.
 ///
 /// Perf: DNN DAGs repeat a handful of layer shapes (a 12-layer BERT has
@@ -55,42 +93,54 @@ pub fn optimize(p: &Platform, cfg: &FilcoConfig, dag: &Dag) -> CandidateTable {
             modes.push(hit.clone());
             continue;
         }
-        let mut cand: Vec<Mode> = Vec::new();
-        for &f in &fgrid {
-            for c in 1..=cfg.m_cus {
-                let model = slice_model(cfg, f, c);
-                let perf = model.layer_perf(p, &layer.shape);
-                cand.push(Mode {
-                    fmus: f,
-                    cus: c,
-                    latency_s: perf.latency_s,
-                    tile: perf.tile,
-                });
-            }
-        }
-        // Pareto prune: drop modes dominated in (fmus, cus, latency).
-        let mut keep: Vec<Mode> = Vec::new();
-        for m in &cand {
-            let dominated = cand.iter().any(|o| {
-                (o.fmus <= m.fmus && o.cus <= m.cus && o.latency_s < m.latency_s - 1e-15)
-                    || (o.fmus < m.fmus && o.cus <= m.cus && o.latency_s <= m.latency_s)
-                    || (o.fmus <= m.fmus && o.cus < m.cus && o.latency_s <= m.latency_s)
-            });
-            if !dominated {
-                keep.push(*m);
-            }
-        }
-        // Deduplicate identical survivors.
-        keep.sort_by(|a, b| {
-            (a.fmus, a.cus)
-                .cmp(&(b.fmus, b.cus))
-                .then(a.latency_s.partial_cmp(&b.latency_s).unwrap())
-        });
-        keep.dedup_by(|a, b| a.fmus == b.fmus && a.cus == b.cus);
+        let keep = candidates_for(p, cfg, &fgrid, &layer.shape);
         memo.insert(layer.shape, keep.clone());
         modes.push(keep);
     }
     CandidateTable { modes }
+}
+
+/// Like [`optimize`], spreading the distinct layer shapes over
+/// `workers` scoped threads. The per-shape brute force is a pure
+/// function and results are assembled by shape index, so the table is
+/// bit-for-bit identical to the serial walk's for any worker count.
+pub fn optimize_pool(
+    p: &Platform,
+    cfg: &FilcoConfig,
+    dag: &Dag,
+    workers: usize,
+) -> CandidateTable {
+    let workers = workers.max(1);
+    // Distinct shapes in first-seen order (the serial memo's key set).
+    let mut shapes: Vec<crate::workload::MmShape> = Vec::new();
+    let mut shape_of: Vec<usize> = Vec::with_capacity(dag.len());
+    for layer in &dag.layers {
+        let idx = match shapes.iter().position(|s| *s == layer.shape) {
+            Some(i) => i,
+            None => {
+                shapes.push(layer.shape);
+                shapes.len() - 1
+            }
+        };
+        shape_of.push(idx);
+    }
+    if workers == 1 || shapes.len() <= 1 {
+        return optimize(p, cfg, dag);
+    }
+    let fgrid = fmu_grid(cfg.n_fmus);
+    let mut results: Vec<Vec<Mode>> = vec![Vec::new(); shapes.len()];
+    let chunk = shapes.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, out) in results.chunks_mut(chunk).enumerate() {
+            let (shapes, fgrid) = (&shapes, &fgrid);
+            s.spawn(move || {
+                for (j, slot) in out.iter_mut().enumerate() {
+                    *slot = candidates_for(p, cfg, fgrid, &shapes[ci * chunk + j]);
+                }
+            });
+        }
+    });
+    CandidateTable { modes: shape_of.iter().map(|&i| results[i].clone()).collect() }
 }
 
 #[cfg(test)]

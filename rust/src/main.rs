@@ -13,8 +13,8 @@
 //!   serve   [--requests N] [--mode live|sim]
 //!           [--strategy dynamic|static|unified] [--epoch-ms E]
 //!           [--timescale S] [--preempt on|off] [--pack on|off]
-//!           [--shards N] [--cache-file P] [--trace-out P]
-//!           [--timeline-out P]
+//!           [--shards N] [--dse-workers N] [--cache-file P]
+//!           [--trace-out P] [--timeline-out P]
 //!           multi-tenant serving on the live re-composable fabric:
 //!           worker per partition stepping batches layer-by-layer,
 //!           backlog policy re-splits via the Reconfigurator (mid-DAG
@@ -60,8 +60,9 @@ use filco::platform::Platform;
 use filco::runtime::Engine;
 use filco::serve::{
     equal_split_per_request, poisson_trace, scenario, simulate, simulate_instrumented,
-    write_trace, FabricScheduler, LiveConfig, LiveMode, LiveRequest, PolicyConfig, RecordedTrace,
-    Scenario, ScenarioSpec, ScheduleCache, Strategy, TelemetryConfig, TenantSpec, TimelineReport,
+    write_trace, DseTuning, FabricScheduler, LiveConfig, LiveMode, LiveRequest, PolicyConfig,
+    RecordedTrace, Scenario, ScenarioSpec, ScheduleCache, Strategy, TelemetryConfig, TenantSpec,
+    TimelineReport,
 };
 use filco::sim::{self, Fabric};
 use filco::util::json::Json;
@@ -175,6 +176,13 @@ FLAGS (serve)
                   partitions step in parallel on N workers with a
                   deterministic merge, so the event trace is identical
                   for every N — a throughput knob, not a semantic one
+  --dse-workers N DSE solver threads (default 1): N > 1 switches the
+                  schedule cache to the accelerated profile (parallel
+                  fitness evaluation + warm-started populations +
+                  convergence cutoff) and fans background solves for
+                  distinct cold slices out over N workers. Worker
+                  count never changes a GA result; warm starts and the
+                  cutoff may (equal-or-better makespan by elitism)
   --cache-file P  schedule-cache persistence: load on startup, save on
                   shutdown, so restarts never re-run the DSE for a
                   composition seen before
@@ -358,6 +366,13 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     // and 0 workers would mean no one steps the fabric.
     let shards: usize = flags.get("shards").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
 
+    // DSE solver threads: > 1 opts the schedule cache into the
+    // accelerated profile (parallel fitness evaluation, warm-started
+    // populations, convergence cutoff) and sizes the background
+    // solver's pool.
+    let dse_workers: usize =
+        flags.get("dse-workers").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+
     // A zoo scenario replaces the default skewed demo entirely:
     // tenants, traffic, and SLO deadlines come from the spec, and the
     // run is the deterministic sim comparison.
@@ -376,7 +391,11 @@ fn cmd_serve(flags: &HashMap<String, String>) {
 
     let platform = Platform::vck190();
     let base = FilcoConfig::default_for(&platform);
-    let cache = Arc::new(ScheduleCache::new(ScheduleCache::serving_solver()));
+    let mut cache = ScheduleCache::new(ScheduleCache::serving_solver());
+    if dse_workers > 1 {
+        cache = cache.with_tuning(DseTuning::accelerated(dse_workers));
+    }
+    let cache = Arc::new(cache);
     // Warm from disk: restarts skip the GA/MILP for every composition
     // this process has already seen.
     let cache_file = flags.get("cache-file").map(std::path::PathBuf::from);
@@ -512,6 +531,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         timescale,
         max_sleep: Duration::from_millis(100),
         shards,
+        dse_workers,
     };
     let sched = FabricScheduler::new(platform, base, specs(), cache.clone(), cfg)
         .expect("build scheduler");

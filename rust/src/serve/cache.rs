@@ -136,6 +136,69 @@ struct Key {
     dag: u64,
 }
 
+/// Deterministic ordering for configs: persistence and warm-start seed
+/// selection both sort by this tuple so their output never depends on
+/// `HashMap` iteration order.
+fn cfg_sort_key(c: &FilcoConfig) -> (u32, u32, u32, u64, u64, bool, bool, bool) {
+    (
+        c.n_fmus,
+        c.m_cus,
+        c.aies_per_cu,
+        c.fmu_bytes,
+        c.cu_buf_bytes,
+        c.features.fp,
+        c.features.fmf,
+        c.features.fmv,
+    )
+}
+
+/// At most this many neighbor schedules seed a warm-started GA
+/// population (more would crowd out the random individuals that keep
+/// the search exploring).
+const MAX_WARM_SEEDS: usize = 4;
+
+/// Performance knobs for the solves a [`ScheduleCache`] runs on misses.
+///
+/// The default is the legacy behaviour — serial evaluation, no
+/// convergence cutoff, no warm starts — so existing callers see
+/// bit-for-bit identical schedules. [`DseTuning::accelerated`] opts a
+/// cache into the fast path (the `--dse-workers N` CLI flag and the
+/// serving benches use it).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DseTuning {
+    /// Worker threads per solve: Stage 1 spreads distinct layer shapes
+    /// and the GA spreads fitness evaluation over this many threads.
+    /// 1 means fully serial. Worker count never changes the schedule.
+    pub workers: usize,
+    /// Stop the GA after this many generations without relative
+    /// improvement (0 disables the cutoff).
+    pub stall_generations: usize,
+    /// Relative improvement below which a generation counts as stalled.
+    pub stall_epsilon: f64,
+    /// Seed GA populations from ready schedules of the same DAG under
+    /// other fabric slices (see [`ScheduleCache::neighbors`]).
+    pub warm_start: bool,
+}
+
+impl Default for DseTuning {
+    fn default() -> Self {
+        Self { workers: 1, stall_generations: 0, stall_epsilon: 1e-4, warm_start: false }
+    }
+}
+
+impl DseTuning {
+    /// The fast profile: `workers` threads, cutoff after 6 stalled
+    /// generations at 0.1% relative improvement, warm starts on.
+    pub fn accelerated(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            stall_generations: 6,
+            stall_epsilon: 1e-3,
+            warm_start: true,
+        }
+    }
+}
+
 /// One memoized DSE result.
 #[derive(Debug, Clone)]
 pub struct CachedSchedule {
@@ -185,6 +248,7 @@ enum Slot {
 /// Thread-safe memo table for two-stage DSE results.
 pub struct ScheduleCache {
     solver: Solver,
+    tuning: DseTuning,
     inner: Mutex<HashMap<Key, Slot>>,
     hits: AtomicU64,
     misses: AtomicU64,
@@ -193,6 +257,7 @@ pub struct ScheduleCache {
     lookup_ns: AtomicU64,
     solve_ns: AtomicU64,
     solve_count: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 impl ScheduleCache {
@@ -201,6 +266,7 @@ impl ScheduleCache {
     pub fn new(solver: Solver) -> Self {
         Self {
             solver,
+            tuning: DseTuning::default(),
             inner: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -209,7 +275,20 @@ impl ScheduleCache {
             lookup_ns: AtomicU64::new(0),
             solve_ns: AtomicU64::new(0),
             solve_count: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
         }
+    }
+
+    /// Builder: resolve misses with these performance knobs instead of
+    /// the legacy serial defaults.
+    pub fn with_tuning(mut self, tuning: DseTuning) -> Self {
+        self.tuning = tuning;
+        self
+    }
+
+    /// The performance knobs this cache solves misses with.
+    pub fn tuning(&self) -> &DseTuning {
+        &self.tuning
     }
 
     /// A solver sized for serving-time re-scheduling: small GA, fixed
@@ -239,24 +318,31 @@ impl ScheduleCache {
         enum Probe {
             Hit(Arc<CachedSchedule>),
             Wait(Arc<Flight>),
-            Lead(Arc<Flight>),
+            Lead(Arc<Flight>, Vec<dse::GaSeed>),
         }
         // Timing below is observability-only: the counters are never
         // read by any scheduling decision, so wall-clock jitter cannot
         // perturb the deterministic fabric-time trace.
         let t0 = std::time::Instant::now();
         // One lock acquisition decides this caller's role; the solve
-        // and the wait both happen outside the map lock.
+        // and the wait both happen outside the map lock. Warm-start
+        // seeds are captured under the same lock acquisition, so the
+        // seed set is exactly the ready neighbors at leadership time.
         let probe = {
             let mut map = self.inner.lock().unwrap();
             match map.get(&key) {
                 Some(Slot::Ready(hit)) => Probe::Hit(hit.clone()),
                 Some(Slot::Pending(flight)) => Probe::Wait(flight.clone()),
                 None => {
+                    let seeds = if self.tuning.warm_start {
+                        Self::neighbor_seeds(&map, &key, dag.len())
+                    } else {
+                        Vec::new()
+                    };
                     let flight =
                         Arc::new(Flight { done: Mutex::new(None), cv: Condvar::new() });
                     map.insert(key.clone(), Slot::Pending(flight.clone()));
-                    Probe::Lead(flight)
+                    Probe::Lead(flight, seeds)
                 }
             }
         };
@@ -277,10 +363,16 @@ impl ScheduleCache {
                 self.stall_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 done.clone().expect("flight signalled without a result")
             }
-            Probe::Lead(flight) => {
+            Probe::Lead(flight, seeds) => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 let t1 = std::time::Instant::now();
-                let schedule = dse::two_stage(platform, cfg, dag, self.solver);
+                let tuning = dse::SolveTuning {
+                    workers: self.tuning.workers,
+                    stall_generations: self.tuning.stall_generations,
+                    stall_epsilon: self.tuning.stall_epsilon,
+                    seeds,
+                };
+                let schedule = dse::two_stage_tuned(platform, cfg, dag, self.solver, &tuning);
                 self.solve_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 self.solve_count.fetch_add(1, Ordering::Relaxed);
                 let cached = Arc::new(CachedSchedule::new(schedule));
@@ -314,6 +406,56 @@ impl ScheduleCache {
             Some(Slot::Ready(hit)) => Some(hit.clone()),
             _ => None,
         }
+    }
+
+    /// Ready schedules for the *same* `(platform, dag)` under other
+    /// fabric slices, in deterministic config order. A re-split moves a
+    /// tenant between adjacent slice shapes, so these are near-optimal
+    /// starting points: the warm-start path re-encodes their layer
+    /// orders and mode picks as initial GA individuals. Counts neither
+    /// hits nor misses.
+    pub fn neighbors(
+        &self,
+        platform: &Platform,
+        cfg: &FilcoConfig,
+        dag: &Dag,
+    ) -> Vec<Arc<CachedSchedule>> {
+        let (pfp, dfp) = (platform_fingerprint(platform), dag_fingerprint(dag));
+        let map = self.inner.lock().unwrap();
+        let mut found: Vec<(&Key, &Arc<CachedSchedule>)> = map
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Ready(v) if k.platform == pfp && k.dag == dfp && k.cfg != *cfg => {
+                    Some((k, v))
+                }
+                _ => None,
+            })
+            .collect();
+        found.sort_by_key(|(k, _)| cfg_sort_key(&k.cfg));
+        found.into_iter().map(|(_, v)| v.clone()).collect()
+    }
+
+    /// Warm-start seeds for `key`, read from a map the caller already
+    /// holds locked: neighbor schedules in deterministic config order,
+    /// re-encoded as GA individuals, capped at [`MAX_WARM_SEEDS`].
+    fn neighbor_seeds(map: &HashMap<Key, Slot>, key: &Key, n_layers: usize) -> Vec<dse::GaSeed> {
+        let mut found: Vec<(&Key, &Arc<CachedSchedule>)> = map
+            .iter()
+            .filter_map(|(k, s)| match s {
+                Slot::Ready(v)
+                    if k.platform == key.platform && k.dag == key.dag && k.cfg != key.cfg =>
+                {
+                    Some((k, v))
+                }
+                _ => None,
+            })
+            .collect();
+        found.sort_by_key(|(k, _)| cfg_sort_key(&k.cfg));
+        found
+            .into_iter()
+            .filter_map(|(_, v)| dse::GaSeed::from_schedule(&v.schedule, n_layers))
+            .take(MAX_WARM_SEEDS)
+            .collect()
     }
 
     /// Lookups served from the memo table so far.
@@ -357,6 +499,14 @@ impl ScheduleCache {
         self.solve_count.load(Ordering::Relaxed)
     }
 
+    /// Duplicate [`SolveRequest`]s a [`BackgroundSolver`] dropped
+    /// before they reached the cache: requests queued for a key already
+    /// in the same drained batch. Re-deferrals that arrive in *later*
+    /// batches show up as hits or single-flight stalls instead.
+    pub fn coalesced_solves(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
     /// Number of distinct `(config, dag)` schedules held (ready
     /// entries only; in-flight solves don't count until they land).
     pub fn len(&self) -> usize {
@@ -394,20 +544,7 @@ impl ScheduleCache {
                 Slot::Pending(_) => None,
             })
             .collect();
-        sorted.sort_by_key(|(k, _)| {
-            (
-                k.platform,
-                k.dag,
-                k.cfg.n_fmus,
-                k.cfg.m_cus,
-                k.cfg.aies_per_cu,
-                k.cfg.fmu_bytes,
-                k.cfg.cu_buf_bytes,
-                k.cfg.features.fp,
-                k.cfg.features.fmf,
-                k.cfg.features.fmv,
-            )
-        });
+        sorted.sort_by_key(|(k, _)| (k.platform, k.dag, cfg_sort_key(&k.cfg)));
         let entries: Vec<Json> = sorted
             .into_iter()
             .map(|(k, v)| {
@@ -513,28 +650,75 @@ pub struct SolveRequest {
     pub dag: Dag,
 }
 
-/// Dedicated DSE thread taking cold-composition solves off the serving
-/// hot path: it drains [`SolveRequest`]s from a channel and resolves
-/// each through [`ScheduleCache::get_or_compute`], so the engine's
-/// policy epoch can defer a resplit whose slices are not yet cached and
-/// re-propose it once the background solves land. Duplicate requests
-/// (the same key re-deferred across epochs) collapse into cache hits or
-/// single-flight waits — the GA/MILP still runs once per key.
+/// Dedicated DSE dispatcher taking cold-composition solves off the
+/// serving hot path: each wake it drains *every* pending
+/// [`SolveRequest`] from its channel, dedupes the batch by
+/// `(cfg, dag)` key (counting drops into
+/// [`ScheduleCache::coalesced_solves`]), and resolves the distinct
+/// requests through [`ScheduleCache::get_or_compute`] — concurrently
+/// on a scoped worker pool when spawned with
+/// [`BackgroundSolver::spawn_pool`]. The engine's policy epoch can
+/// defer a resplit whose slices are not yet cached and re-propose it
+/// once the background solves land. Duplicates that slip into later
+/// batches still collapse into cache hits or single-flight waits — the
+/// GA/MILP runs once per key no matter what.
 pub struct BackgroundSolver {
     tx: Option<mpsc::Sender<SolveRequest>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl BackgroundSolver {
-    /// Spawn the solver thread. It exits when every requester handle
-    /// (including this struct's own) has been dropped.
+    /// Spawn a single-threaded solver (drain + dedupe, solves run
+    /// serially). It exits when every requester handle (including this
+    /// struct's own) has been dropped.
     pub fn spawn(platform: Platform, cache: Arc<ScheduleCache>) -> Self {
+        Self::spawn_pool(platform, cache, 1)
+    }
+
+    /// Spawn the solver dispatcher with `workers` solve threads: each
+    /// drained batch's distinct requests fan out round-robin over a
+    /// scoped pool, so a resplit waiting on several cold slices pays
+    /// one solve's latency instead of their sum. `workers <= 1` solves
+    /// serially in batch order.
+    pub fn spawn_pool(platform: Platform, cache: Arc<ScheduleCache>, workers: usize) -> Self {
+        let workers = workers.max(1);
         let (tx, rx) = mpsc::channel::<SolveRequest>();
         let handle = std::thread::Builder::new()
             .name("filco-dse".into())
             .spawn(move || {
-                while let Ok(req) = rx.recv() {
-                    let _ = cache.get_or_compute(&platform, &req.cfg, &req.dag);
+                while let Ok(first) = rx.recv() {
+                    // Drain everything already queued: the same key
+                    // re-deferred across epochs coalesces into one
+                    // lookup instead of paying a solve (or stall) per
+                    // duplicate.
+                    let mut batch = vec![first];
+                    while let Ok(req) = rx.try_recv() {
+                        batch.push(req);
+                    }
+                    let before = batch.len();
+                    let mut seen = std::collections::HashSet::new();
+                    batch.retain(|r| seen.insert((r.cfg.clone(), dag_fingerprint(&r.dag))));
+                    cache
+                        .coalesced
+                        .fetch_add((before - batch.len()) as u64, Ordering::Relaxed);
+                    let k = workers.min(batch.len());
+                    if k <= 1 {
+                        for req in &batch {
+                            let _ = cache.get_or_compute(&platform, &req.cfg, &req.dag);
+                        }
+                    } else {
+                        std::thread::scope(|s| {
+                            for lane in 0..k {
+                                let (platform, cache, batch) = (&platform, &cache, &batch);
+                                s.spawn(move || {
+                                    for req in batch.iter().skip(lane).step_by(k) {
+                                        let _ =
+                                            cache.get_or_compute(platform, &req.cfg, &req.dag);
+                                    }
+                                });
+                            }
+                        });
+                    }
                 }
             })
             .expect("spawn background DSE solver thread");
@@ -773,6 +957,109 @@ mod tests {
         let path = std::env::temp_dir().join("filco_sched_cache_does_not_exist.json");
         assert_eq!(cache.load_from(&path).expect("missing file tolerated"), 0);
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn neighbors_returns_same_dag_other_slices_only() {
+        let p = Platform::vck190();
+        let base = FilcoConfig::default_for(&p);
+        let mut half = base.clone();
+        half.m_cus = (base.m_cus / 2).max(1);
+        half.n_fmus = (base.n_fmus / 2).max(1);
+        let dag = zoo::mlp_s();
+        let other_dag = zoo::mlp_l();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        assert!(cache.neighbors(&p, &base, &dag).is_empty(), "cold cache has no neighbors");
+        cache.get_or_compute(&p, &base, &dag);
+        cache.get_or_compute(&p, &half, &dag);
+        cache.get_or_compute(&p, &base, &other_dag);
+        // Probing for `dag` under `base` sees only `half`'s entry: the
+        // same-config entry and the other DAG's entry are excluded.
+        let n = cache.neighbors(&p, &base, &dag);
+        assert_eq!(n.len(), 1);
+        let expect = cache.get_cached(&p, &half, &dag).unwrap();
+        assert!(Arc::ptr_eq(&n[0], &expect));
+        // And symmetrically from the other slice's point of view.
+        assert_eq!(cache.neighbors(&p, &half, &dag).len(), 1);
+    }
+
+    #[test]
+    fn warm_started_cache_solves_are_equal_or_better() {
+        let p = Platform::vck190();
+        let base = FilcoConfig::default_for(&p);
+        let mut half = base.clone();
+        half.m_cus = (base.m_cus / 2).max(1);
+        half.n_fmus = (base.n_fmus / 2).max(1);
+        let dag = zoo::mlp_s();
+        let cold = ScheduleCache::new(ScheduleCache::serving_solver());
+        let cold_half = cold.get_or_compute(&p, &half, &dag);
+        // Same solver, warm-start enabled, with `base`'s schedule ready
+        // to seed the `half` solve.
+        let warm = ScheduleCache::new(ScheduleCache::serving_solver())
+            .with_tuning(DseTuning { warm_start: true, ..DseTuning::default() });
+        warm.get_or_compute(&p, &base, &dag);
+        let warm_half = warm.get_or_compute(&p, &half, &dag);
+        // mlp-s is a chain, where both runs converge onto per-layer
+        // fastest modes: the warm solve must not lose makespan.
+        assert!(
+            warm_half.per_request_s <= cold_half.per_request_s * 1.000_001,
+            "warm {} vs cold {}",
+            warm_half.per_request_s,
+            cold_half.per_request_s
+        );
+        let table = crate::dse::stage1::optimize(&p, &half, &dag);
+        warm_half.schedule.validate(&dag, &table, half.n_fmus, half.m_cus).unwrap();
+    }
+
+    #[test]
+    fn background_pool_coalesces_duplicates_and_accounts_for_them() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s();
+        let cache = Arc::new(
+            ScheduleCache::new(ScheduleCache::serving_solver())
+                .with_tuning(DseTuning::accelerated(2)),
+        );
+        const N: u64 = 6;
+        {
+            let solver = BackgroundSolver::spawn_pool(p.clone(), cache.clone(), 2);
+            let tx = solver.requester();
+            for _ in 0..N {
+                tx.send(SolveRequest { cfg: cfg.clone(), dag: dag.clone() }).unwrap();
+            }
+            drop(tx);
+            // Dropping the solver joins the dispatcher: every request
+            // was either coalesced in a batch or reached the cache.
+        }
+        assert!(cache.get_cached(&p, &cfg, &dag).is_some());
+        assert_eq!(cache.solve_count(), 1, "one key must solve once");
+        // Conservation: however the dispatcher batched the stream,
+        // each of the N duplicates was dropped by dedupe or became a
+        // cache lookup (hit, leader miss, or single-flight stall).
+        assert_eq!(cache.coalesced_solves() + cache.hits() + cache.misses(), N);
+        assert!(cache.misses() >= 1);
+    }
+
+    #[test]
+    fn pooled_solver_lands_distinct_requests() {
+        let p = Platform::vck190();
+        let base = FilcoConfig::default_for(&p);
+        let mut half = base.clone();
+        half.m_cus = (base.m_cus / 2).max(1);
+        half.n_fmus = (base.n_fmus / 2).max(1);
+        let dag = zoo::mlp_s();
+        let cache = Arc::new(ScheduleCache::new(ScheduleCache::serving_solver()));
+        {
+            let solver = BackgroundSolver::spawn_pool(p.clone(), cache.clone(), 4);
+            let tx = solver.requester();
+            tx.send(SolveRequest { cfg: base.clone(), dag: dag.clone() }).unwrap();
+            tx.send(SolveRequest { cfg: half.clone(), dag: dag.clone() }).unwrap();
+            drop(tx);
+        }
+        assert!(cache.get_cached(&p, &base, &dag).is_some());
+        assert!(cache.get_cached(&p, &half, &dag).is_some());
+        assert_eq!(cache.solve_count(), 2);
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

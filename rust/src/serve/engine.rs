@@ -1466,6 +1466,7 @@ impl FabricEngine {
                 cache_misses: cache.misses(),
                 lock_held_ns: self.lock_meter.as_ref().map_or(0, |m| m.held_ns()),
                 dse_stall_ns: cache.stall_ns(),
+                coalesced_solves: cache.coalesced_solves(),
                 decisions: std::mem::take(&mut self.epoch_decisions),
             };
             if let Some(tl) = self.timeline.as_mut() {

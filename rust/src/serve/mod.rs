@@ -126,7 +126,9 @@ pub mod tenant;
 pub use crate::coordinator::metrics::{LatencyHistogram, Metrics};
 pub use crate::coordinator::serving::{Request, RequestQueue, Response, Servable, Server};
 
-pub use cache::{dag_fingerprint, BackgroundSolver, CachedSchedule, ScheduleCache, SolveRequest};
+pub use cache::{
+    dag_fingerprint, BackgroundSolver, CachedSchedule, DseTuning, ScheduleCache, SolveRequest,
+};
 pub use clock::{Clock, Pacer, VirtualClock, WallClock};
 pub use engine::{EngineEvent, FabricEngine, Transition};
 pub use interleave::{InterleaveEvent, Interleaver};

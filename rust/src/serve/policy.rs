@@ -82,7 +82,12 @@ pub struct PolicyConfig {
     /// needs a slice whose schedule is not cached yet, defer the
     /// transition, hand the solves to the background solver, and keep
     /// the last cached split until they land (the resplit is
-    /// re-proposed at a later epoch boundary). Off by default — the
+    /// re-proposed at a later epoch boundary). The solver drains and
+    /// dedupes its whole queue each wake — a resplit re-deferred
+    /// across epochs coalesces instead of re-queueing solves (counted
+    /// in [`StallStats::coalesced_solves`](super::telemetry::StallStats::coalesced_solves))
+    /// — and with [`LiveConfig::dse_workers`](super::LiveConfig) > 1
+    /// solves distinct cold slices concurrently. Off by default — the
     /// synchronous path solves inline and the engine stays
     /// single-threaded-deterministic with no solver thread attached.
     pub async_solve: bool,

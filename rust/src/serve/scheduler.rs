@@ -101,6 +101,12 @@ pub struct LiveConfig {
     /// reports are bit-for-bit identical for any value
     /// ([`FabricEngine::set_shards`]).
     pub shards: usize,
+    /// Worker threads for the background DSE solver when
+    /// [`PolicyConfig::async_solve`] is on (1 = one solver thread, the
+    /// legacy behaviour): distinct cold-slice requests drained in one
+    /// wake solve concurrently
+    /// ([`BackgroundSolver::spawn_pool`](super::BackgroundSolver::spawn_pool)).
+    pub dse_workers: usize,
 }
 
 impl Default for LiveConfig {
@@ -111,6 +117,7 @@ impl Default for LiveConfig {
             timescale: 0.0,
             max_sleep: Duration::from_millis(100),
             shards: 1,
+            dse_workers: 1,
         }
     }
 }
@@ -369,8 +376,9 @@ impl FabricScheduler {
         // The async-DSE solver works against the same shared cache and
         // platform; spawn it before the engine so the engine can hold
         // a requester channel from construction.
-        let background = (cfg.mode == LiveMode::Dynamic && cfg.policy.async_solve)
-            .then(|| BackgroundSolver::spawn(platform.clone(), cache.clone()));
+        let background = (cfg.mode == LiveMode::Dynamic && cfg.policy.async_solve).then(|| {
+            BackgroundSolver::spawn_pool(platform.clone(), cache.clone(), cfg.dse_workers.max(1))
+        });
         let mut engine = match cfg.mode {
             // The unified and static compositions run no policy: the
             // fabric's shape is fixed for the whole run.
@@ -526,6 +534,7 @@ impl FabricScheduler {
             lock_holds: self.lock_meter.holds(),
             dse_stall_ns: self.cache.stall_ns(),
             dse_stalls: self.cache.stalls(),
+            coalesced_solves: self.cache.coalesced_solves(),
         }
     }
 

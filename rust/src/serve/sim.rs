@@ -293,7 +293,7 @@ pub fn simulate_instrumented(
     engine.set_shards(scenario.shards);
     engine.record_trace(telemetry.trace);
     engine.record_timeline(telemetry.timeline);
-    let stalls0 = (cache.stalls(), cache.stall_ns());
+    let stalls0 = (cache.stalls(), cache.stall_ns(), cache.coalesced_solves());
     let mut profile = super::telemetry::StepProfile::default();
     let mut timed_step = |engine: &mut FabricEngine, now: f64| {
         let t0 = std::time::Instant::now();
@@ -323,6 +323,7 @@ pub fn simulate_instrumented(
         lock_holds: 0,
         dse_stall_ns: cache.stall_ns() - stalls0.1,
         dse_stalls: cache.stalls() - stalls0.0,
+        coalesced_solves: cache.coalesced_solves() - stalls0.2,
     };
     (report, RunTelemetry { trace, timeline, step_profile: profile, stalls })
 }

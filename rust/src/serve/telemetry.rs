@@ -806,6 +806,10 @@ pub struct EpochSample {
     /// in-flight DSE solve so far (cumulative,
     /// [`ScheduleCache::stall_ns`](super::cache::ScheduleCache::stall_ns)).
     pub dse_stall_ns: u64,
+    /// Duplicate solve requests the background solver dropped before
+    /// they reached the cache so far (cumulative,
+    /// [`ScheduleCache::coalesced_solves`](super::cache::ScheduleCache::coalesced_solves)).
+    pub coalesced_solves: u64,
     /// Every decision evaluated this epoch, in evaluation order.
     pub decisions: Vec<DecisionSample>,
 }
@@ -876,6 +880,7 @@ impl TimelineReport {
             m.insert("cache_misses".to_string(), junum(s.cache_misses));
             m.insert("lock_held_ns".to_string(), junum(s.lock_held_ns));
             m.insert("dse_stall_ns".to_string(), junum(s.dse_stall_ns));
+            m.insert("coalesced_solves".to_string(), junum(s.coalesced_solves));
             m.insert(
                 "decisions".to_string(),
                 Json::Arr(
@@ -1022,6 +1027,10 @@ pub struct StallStats {
     pub dse_stall_ns: u64,
     /// Lookups that stalled that way.
     pub dse_stalls: u64,
+    /// Duplicate background solve requests coalesced away before they
+    /// reached the cache (see
+    /// [`ScheduleCache::coalesced_solves`](super::cache::ScheduleCache::coalesced_solves)).
+    pub coalesced_solves: u64,
 }
 
 /// Everything an instrumented run recorded beyond its report.
@@ -1185,6 +1194,7 @@ mod tests {
                 cache_misses: 2,
                 lock_held_ns: 1500,
                 dse_stall_ns: 0,
+                coalesced_solves: 0,
                 decisions: vec![DecisionSample {
                     kind: DecisionKind::Resplit,
                     tenants: vec![],

@@ -1,0 +1,251 @@
+//! Solver quality and determinism for the fast-DSE path: the worker
+//! pool must be invisible in results (bit-for-bit), warm starts +
+//! convergence cutoff must not lose makespan against the serial
+//! default under the same budget, and the cutoff must never fire
+//! before the configured number of true stalls.
+
+use filco::arch::FilcoConfig;
+use filco::dse::ga::{GaConfig, GaSeed};
+use filco::dse::schedule::{makespan_only, ScheduleScratch};
+use filco::dse::{stage1, CandidateTable, Mode};
+use filco::platform::Platform;
+use filco::workload::{zoo, Dag};
+
+fn setup() -> (Platform, FilcoConfig) {
+    let p = Platform::vck190();
+    let cfg = FilcoConfig::default_for(&p);
+    (p, cfg)
+}
+
+/// Zoo DAGs exercised by the quality gates: chains and branchy models.
+fn quality_dags() -> Vec<Dag> {
+    vec![zoo::mlp_s(), zoo::mlp_l(), zoo::bert_layers(64, 1), zoo::pointnet()]
+}
+
+#[test]
+fn ga_outcome_is_bit_for_bit_identical_for_any_worker_count() {
+    let (p, cfg) = setup();
+    for dag in [zoo::mlp_s(), zoo::bert_layers(64, 1), zoo::pointnet()] {
+        let table = stage1::optimize(&p, &cfg, &dag);
+        let outcomes: Vec<_> = [1usize, 2, 4]
+            .iter()
+            .map(|&w| {
+                GaConfig {
+                    population: 16,
+                    generations: 12,
+                    seed: 0xD5E,
+                    workers: w,
+                    ..Default::default()
+                }
+                .solve(&dag, &table, &cfg)
+            })
+            .collect();
+        assert_eq!(
+            outcomes[0], outcomes[1],
+            "{}: workers 1 vs 2 diverged",
+            dag.name
+        );
+        assert_eq!(
+            outcomes[0], outcomes[2],
+            "{}: workers 1 vs 4 diverged",
+            dag.name
+        );
+        // The equality above ignores wall time by design; spot-check
+        // the interesting fields anyway for a readable failure.
+        assert_eq!(outcomes[0].history, outcomes[2].history);
+        assert_eq!(outcomes[0].schedule.entries, outcomes[2].schedule.entries);
+        assert_eq!(outcomes[0].evaluations, outcomes[2].evaluations);
+    }
+}
+
+#[test]
+fn seeded_ga_outcome_is_worker_count_invariant_too() {
+    // Warm starts and the pool compose: the seed injection happens
+    // before any evaluation, so the differential must hold with seeds
+    // and the cutoff enabled as well.
+    let (p, cfg) = setup();
+    let dag = zoo::pointnet();
+    let table = stage1::optimize(&p, &cfg, &dag);
+    let donor = GaConfig { population: 16, generations: 10, seed: 1, ..Default::default() }
+        .solve(&dag, &table, &cfg);
+    let seeds = vec![GaSeed::from_schedule(&donor.schedule, dag.len()).expect("valid donor")];
+    let run = |w: usize| {
+        GaConfig {
+            population: 16,
+            generations: 20,
+            seed: 0xBEE,
+            workers: w,
+            stall_generations: 4,
+            stall_epsilon: 1e-3,
+            ..Default::default()
+        }
+        .solve_seeded(&dag, &table, &cfg, &seeds)
+    };
+    let (a, b, c) = (run(1), run(2), run(4));
+    assert_eq!(a, b, "seeded: workers 1 vs 2 diverged");
+    assert_eq!(a, c, "seeded: workers 1 vs 4 diverged");
+}
+
+#[test]
+fn stage1_pool_matches_serial_for_any_worker_count() {
+    let (p, cfg) = setup();
+    for dag in quality_dags() {
+        let serial = stage1::optimize(&p, &cfg, &dag);
+        for w in [1usize, 2, 4] {
+            let pooled = stage1::optimize_pool(&p, &cfg, &dag, w);
+            assert_eq!(
+                serial.modes, pooled.modes,
+                "{}: stage1 table diverged at {w} workers",
+                dag.name
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_start_with_cutoff_is_equal_or_better_within_the_same_budget() {
+    let (p, cfg) = setup();
+    for dag in quality_dags() {
+        let table = stage1::optimize(&p, &cfg, &dag);
+        let budget =
+            GaConfig { population: 24, generations: 40, seed: 0xF11C0, ..Default::default() };
+        let serial = budget.solve(&dag, &table, &cfg);
+        // Seed with a known-good schedule the way the cache's
+        // warm-start path does: re-encode its layer order and mode
+        // picks. The initial population then contains an individual
+        // scoring the donor's makespan, and elitism keeps the best —
+        // so the warm run can only match or improve.
+        let seeds =
+            vec![GaSeed::from_schedule(&serial.schedule, dag.len()).expect("valid donor")];
+        let warm = GaConfig { stall_generations: 6, stall_epsilon: 1e-3, ..budget.clone() }
+            .solve_seeded(&dag, &table, &cfg, &seeds);
+        assert!(
+            warm.best_makespan <= serial.best_makespan * 1.000_001,
+            "{}: warm {} vs serial {}",
+            dag.name,
+            warm.best_makespan,
+            serial.best_makespan
+        );
+        // Same generation budget, so the cutoff can only spend fewer
+        // evaluations, never more.
+        assert!(
+            warm.evaluations <= serial.evaluations,
+            "{}: warm spent {} evals vs serial {}",
+            dag.name,
+            warm.evaluations,
+            serial.evaluations
+        );
+        warm.schedule.validate(&dag, &table, cfg.n_fmus, cfg.m_cus).unwrap();
+    }
+}
+
+/// Recompute the stall counter from a history series exactly as the
+/// solver does; return the 0-based history index where a cutoff of
+/// `k` stalls would fire, if any.
+fn cutoff_index(history: &[f64], k: usize, eps: f64) -> Option<usize> {
+    let mut stall = 0usize;
+    for i in 1..history.len() {
+        let (prev, cur) = (history[i - 1], history[i]);
+        let threshold = if prev.is_finite() { prev - eps * prev.abs() } else { f64::MAX };
+        if cur < threshold {
+            stall = 0;
+        } else {
+            stall += 1;
+        }
+        if stall >= k {
+            return Some(i);
+        }
+    }
+    None
+}
+
+#[test]
+fn cutoff_never_fires_before_the_configured_stall_count() {
+    let (p, cfg) = setup();
+    let (k, eps) = (5usize, 1e-3f64);
+    for dag in quality_dags() {
+        let table = stage1::optimize(&p, &cfg, &dag);
+        let out = GaConfig {
+            population: 24,
+            generations: 60,
+            seed: 0xCAFE,
+            stall_generations: k,
+            stall_epsilon: eps,
+            ..Default::default()
+        }
+        .solve(&dag, &table, &cfg);
+        match cutoff_index(&out.history, k, eps) {
+            Some(at) if out.stopped_early => {
+                // Fired exactly when the k-th consecutive stall landed,
+                // and the search stopped right there: the break happens
+                // after the history push and before the generation
+                // counter bumps.
+                assert_eq!(at, out.history.len() - 1, "{}: stopped at the wrong point", dag.name);
+                assert_eq!(out.generations_run, out.history.len() - 1, "{}", dag.name);
+                // The k transitions leading into the cutoff are all
+                // true stalls under the relative epsilon.
+                for i in (at - k + 1)..=at {
+                    let (prev, cur) = (out.history[i - 1], out.history[i]);
+                    assert!(
+                        cur >= prev - eps * prev.abs(),
+                        "{}: generation {i} improved yet counted as a stall",
+                        dag.name
+                    );
+                }
+            }
+            Some(_) => panic!("{}: history shows a cutoff point but the GA ran on", dag.name),
+            None => {
+                assert!(!out.stopped_early, "{}: stopped early without k true stalls", dag.name);
+                assert_eq!(out.generations_run, out.history.len(), "{}", dag.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn cutoff_disabled_by_default_runs_the_full_budget() {
+    let (p, cfg) = setup();
+    let dag = zoo::mlp_s();
+    let table = stage1::optimize(&p, &cfg, &dag);
+    let out = GaConfig { population: 12, generations: 25, seed: 2, ..Default::default() }
+        .solve(&dag, &table, &cfg);
+    assert!(!out.stopped_early);
+    assert_eq!(out.generations_run, 25);
+    assert_eq!(out.history.len(), 25);
+}
+
+#[test]
+fn degenerate_candidate_table_with_nan_latency_does_not_panic() {
+    // Regression: the fitness sorts used `partial_cmp().unwrap()` and
+    // `f64::max` silently dropped NaN layer ends — a degenerate table
+    // either panicked the solver or scored the broken mode as fastest.
+    let mut dag = Dag::new("degenerate");
+    for i in 0..4 {
+        dag.add(format!("l{i}"), filco::workload::MmShape::new(8, 8, 8));
+    }
+    dag.dep(0, 2);
+    let bad = Mode { fmus: 1, cus: 1, latency_s: f64::NAN, tile: (8, 8, 8) };
+    let good = Mode { fmus: 1, cus: 1, latency_s: 1.0, tile: (8, 8, 8) };
+    let table = CandidateTable { modes: vec![vec![bad, good]; dag.len()] };
+    let (_, mut cfg) = setup();
+    cfg.n_fmus = 4;
+    cfg.m_cus = 4;
+
+    // The fastest-mode probe must order NaN last, not panic.
+    assert_eq!(table.fastest(0).latency_s, 1.0);
+
+    // A chromosome forced onto the NaN mode scores infinitely bad
+    // instead of leaking NaN into the resource state.
+    let mut scratch = ScheduleScratch::default();
+    let mk = makespan_only(&dag, &table, &[0, 1, 2, 3], &[0; 4], 4, 4, &mut scratch);
+    assert!(mk.is_infinite() && mk > 0.0, "NaN mode must score +inf, got {mk}");
+
+    // And the GA routes around it: no panic, a finite best makespan,
+    // every layer on the finite mode.
+    let out = GaConfig { population: 16, generations: 15, seed: 11, ..Default::default() }
+        .solve(&dag, &table, &cfg);
+    assert!(out.best_makespan.is_finite());
+    for e in &out.schedule.entries {
+        assert_eq!(e.mode, 1, "layer {} landed on the NaN mode", e.layer);
+    }
+}

@@ -158,6 +158,7 @@ fn live_and_sim_produce_identical_engine_traces() {
             mode: LiveMode::Dynamic,
             timescale,
             max_sleep: Duration::from_millis(100),
+            ..LiveConfig::default()
         };
         let (live_report, live_trace) = live_run(&sc, &cache, live_cfg);
 

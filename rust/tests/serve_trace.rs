@@ -136,6 +136,7 @@ fn live_trace_parses_line_by_line_and_replays() {
             mode: LiveMode::Dynamic,
             timescale: 0.0,
             max_sleep: Duration::from_millis(100),
+            ..LiveConfig::default()
         },
         sc.arrivals.clone(),
     )
