@@ -26,8 +26,9 @@ use filco::coordinator::reconfig::Reconfigurator;
 use filco::dse::Solver;
 use filco::platform::Platform;
 use filco::serve::{
-    equal_split_per_request, phased_trace, simulate, FabricScheduler, LiveConfig, LiveRequest,
-    PolicyConfig, Scenario, ScheduleCache, Strategy, TenantSpec,
+    equal_split_per_request, phased_trace, simulate, simulate_cluster, ClusterPolicy,
+    FabricScheduler, LiveConfig, LiveRequest, PolicyConfig, Scenario, ScheduleCache, Strategy,
+    TenantSpec,
 };
 use filco::workload::zoo;
 
@@ -67,12 +68,13 @@ fn main() {
         tenants,
         arrivals,
         switch_cost_s: None,
+        shards: 1,
     };
     let policy = PolicyConfig::calibrated(per[0]);
 
     let unified = simulate(&sc, &Strategy::Unified, &cache);
     let stat = simulate(&sc, &Strategy::StaticEqual, &cache);
-    let dynr = simulate(&sc, &Strategy::Dynamic(policy), &cache);
+    let dynr = simulate(&sc, &Strategy::Dynamic(policy.clone()), &cache);
     for rep in [&unified, &stat, &dynr] {
         println!("{}", rep.summary());
     }
@@ -93,6 +95,29 @@ fn main() {
         dynr.switches,
     );
 
+    // --- multi-board cluster --------------------------------------------
+    // The same trace across two independent boards: tenants are
+    // first-fit-placed by declared fabric share, and the placement
+    // epoch migrates a tenant (queue, token bucket, even a mid-DAG
+    // batch cursor) off the overloaded board when the backlog
+    // imbalance crosses the hysteresis. One board reproduces the
+    // single-engine run bit for bit.
+    println!("\ntwo-board cluster (dynamic strategy + calibrated placement):");
+    let crep = simulate_cluster(
+        &sc,
+        &Strategy::Dynamic(policy),
+        2,
+        Some(ClusterPolicy::calibrated(per[0])),
+        &cache,
+    );
+    println!("{}", crep.report.summary());
+    println!(
+        "  {} migrations over {} placement epochs | worst-board p99 {:.3e} s",
+        crep.migrations,
+        crep.placement_epochs,
+        crep.worst_board_p99_s(),
+    );
+
     // --- live threaded run ----------------------------------------------
     // Same tenants, real worker threads; flood the MLP queue, let one
     // policy step re-compose, then drain.
@@ -111,9 +136,9 @@ fn main() {
             id += 1;
         }
     }
-    println!("  composition before policy: {:?}", sched.composition());
+    println!("  composition before policy: {:?}", sched.snapshot().composition);
     sched.policy_step();
-    println!("  composition after policy:  {:?}", sched.composition());
+    println!("  composition after policy:  {:?}", sched.snapshot().composition);
     sched.close();
     let report = sched.run();
     println!("{}", report.summary());

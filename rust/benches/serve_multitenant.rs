@@ -29,9 +29,9 @@ use filco::dse::{stage1, Solver};
 use filco::platform::Platform;
 use filco::report::{eng, Table};
 use filco::serve::{
-    equal_split_per_request, poisson_trace, scenario, simulate, simulate_instrumented, DseTuning,
-    PolicyConfig, RunTelemetry, Scenario, ScheduleCache, ServeReport, Strategy, TelemetryConfig,
-    TenantSpec,
+    equal_split_per_request, poisson_trace, scenario, simulate, simulate_cluster,
+    simulate_instrumented, ClusterPolicy, DseTuning, PolicyConfig, RunTelemetry, Scenario,
+    ScheduleCache, ServeReport, Strategy, TelemetryConfig, TenantSpec,
 };
 use filco::util::json::Json;
 use filco::workload::zoo;
@@ -224,6 +224,64 @@ fn main() {
         scen_rows.insert(name.to_string(), Json::Obj(row));
     }
 
+    // ---- multi-board scaling -----------------------------------------
+    // The same skewed shape over four tenants (so four boards still
+    // have a resident each), run through the cluster driver at 1, 2
+    // and 4 boards with the calibrated placement/migration policy.
+    // The snapshot tracks throughput scaling, how many cross-board
+    // migrations the imbalance trigger fired, and the worst board's
+    // worst-tenant p99 — the cluster-level tail the placement layer is
+    // supposed to keep flat.
+    let mb_tenants = vec![
+        TenantSpec::new("mlp-l", zoo::mlp_l()),
+        TenantSpec::new("deit-s", zoo::deit_s()),
+        TenantSpec::new("pointnet", zoo::pointnet()),
+        TenantSpec::new("mlp-s", zoo::mlp_s()),
+    ];
+    let mb_per = equal_split_per_request(&sc.platform, &sc.base, &mb_tenants, &cache);
+    let mb_rates = [2.5 / mb_per[0], 0.1 / mb_per[1], 0.1 / mb_per[2], 0.1 / mb_per[3]];
+    let mb_arrivals =
+        poisson_trace(&mb_rates, if sample { 25.0 } else { 100.0 } * mb_per[0], 0xB0A2D);
+    let mb_sc = Scenario {
+        platform: sc.platform.clone(),
+        base: sc.base.clone(),
+        tenants: mb_tenants,
+        arrivals: mb_arrivals,
+        switch_cost_s: None,
+        shards: 1,
+    };
+    let mb_policy = Strategy::Dynamic(PolicyConfig::calibrated(mb_per[0]));
+    let mut mb_obj = BTreeMap::new();
+    mb_obj.insert("arrivals".to_string(), num(mb_sc.arrivals.len() as f64));
+    let mut mb_base_rps = 0.0f64;
+    for boards in [1usize, 2, 4] {
+        let rep = simulate_cluster(
+            &mb_sc,
+            &mb_policy,
+            boards,
+            Some(ClusterPolicy::calibrated(mb_per[0])),
+            &cache,
+        );
+        let rps = rep.report.throughput_rps();
+        if boards == 1 {
+            mb_base_rps = rps;
+        }
+        println!(
+            "boards={boards}: {:.1} req/s ({:.2}x), {} migrations, worst-board p99 {:.3e} s",
+            rps,
+            rps / mb_base_rps.max(1e-9),
+            rep.migrations,
+            rep.worst_board_p99_s()
+        );
+        let mut row = BTreeMap::new();
+        row.insert("throughput_rps".to_string(), num(rps));
+        row.insert("throughput_scaling".to_string(), num(rps / mb_base_rps.max(1e-9)));
+        row.insert("migrations".to_string(), num(rep.migrations as f64));
+        row.insert("worst_board_p99_s".to_string(), num(rep.worst_board_p99_s()));
+        row.insert("served".to_string(), num(rep.report.total_served() as f64));
+        mb_obj.insert(format!("boards_{boards}"), Json::Obj(row));
+    }
+
     // ---- DSE fast path: cold vs warm, worker scaling -----------------
     // Direct GA timings over the zoo DAGs, separate from the cache
     // wall times above, so the snapshot tracks the solver itself. The
@@ -329,6 +387,7 @@ fn main() {
         num(serial_step_ns / reports[7].2.step_profile.ns_per_step().max(1e-9)),
     );
     snap.insert("dse".to_string(), Json::Obj(dse_obj));
+    snap.insert("multi_board".to_string(), Json::Obj(mb_obj));
     snap.insert("scenarios".to_string(), Json::Obj(scen_rows));
     snap.insert(
         "strategies".to_string(),

@@ -13,8 +13,8 @@
 //!   serve   [--requests N] [--mode live|sim]
 //!           [--strategy dynamic|static|unified] [--epoch-ms E]
 //!           [--timescale S] [--preempt on|off] [--pack on|off]
-//!           [--shards N] [--dse-workers N] [--cache-file P]
-//!           [--trace-out P] [--timeline-out P]
+//!           [--shards N] [--dse-workers N] [--boards M]
+//!           [--cache-file P] [--trace-out P] [--timeline-out P]
 //!           multi-tenant serving on the live re-composable fabric:
 //!           worker per partition stepping batches layer-by-layer,
 //!           backlog policy re-splits via the Reconfigurator (mid-DAG
@@ -59,10 +59,10 @@ use filco::isa::disasm;
 use filco::platform::Platform;
 use filco::runtime::Engine;
 use filco::serve::{
-    equal_split_per_request, poisson_trace, scenario, simulate, simulate_instrumented,
-    write_trace, DseTuning, FabricScheduler, LiveConfig, LiveMode, LiveRequest, PolicyConfig,
-    RecordedTrace, Scenario, ScenarioSpec, ScheduleCache, Strategy, TelemetryConfig, TenantSpec,
-    TimelineReport,
+    equal_split_per_request, poisson_trace, scenario, simulate, simulate_cluster,
+    simulate_instrumented, write_trace, ClusterPolicy, DseTuning, FabricScheduler, LiveConfig,
+    LiveMode, LiveRequest, PolicyConfig, RecordedTrace, Scenario, ScenarioSpec, ScheduleCache,
+    Strategy, TelemetryConfig, TenantSpec, TimelineReport,
 };
 use filco::sim::{self, Fabric};
 use filco::util::json::Json;
@@ -119,12 +119,43 @@ fn solver_of(flags: &HashMap<String, String>) -> Solver {
     }
 }
 
+/// Every `--flag` the `serve` subcommand reads. [`serve_flag`] routes
+/// all of `cmd_serve`'s lookups through this list, and the
+/// `help_documents_every_serve_flag` test holds [`USAGE`] to it — so a
+/// parsed flag can never silently go missing from `filco help`.
+const SERVE_FLAGS: &[&str] = &[
+    "--mode",
+    "--strategy",
+    "--requests",
+    "--epoch-ms",
+    "--timescale",
+    "--preempt",
+    "--pack",
+    "--shards",
+    "--dse-workers",
+    "--boards",
+    "--cache-file",
+    "--trace-out",
+    "--timeline-out",
+    "--scenario",
+    "--scenario-file",
+];
+
+/// Look up a serve flag by bare name, asserting it is in the
+/// documented [`SERVE_FLAGS`] list (so the help reference cannot
+/// drift from the parser).
+fn serve_flag<'a>(flags: &'a HashMap<String, String>, name: &str) -> Option<&'a String> {
+    debug_assert!(
+        SERVE_FLAGS.iter().any(|f| &f[2..] == name),
+        "serve flag --{name} is not in SERVE_FLAGS (and so not in `filco help`)"
+    );
+    flags.get(name)
+}
+
 /// The flag-by-flag usage reference (`filco help`). Every flag of
 /// every subcommand gets one doc line here; `ARCHITECTURE.md` carries
 /// the long-form walkthrough.
-fn print_usage() {
-    println!(
-        "\
+const USAGE: &str = "\
 filco — FILCO framework reproduction CLI
 
 USAGE: filco <command> [--flag value]...
@@ -183,6 +214,16 @@ FLAGS (serve)
                   distinct cold slices out over N workers. Worker
                   count never changes a GA result; warm starts and the
                   cutoff may (equal-or-better makespan by elitism)
+  --boards M      independent fabric boards (default 1): tenants are
+                  first-fit-placed across boards by declared fabric
+                  share, one engine per board, with cross-board
+                  migration when the queued-backlog imbalance crosses
+                  the cluster hysteresis (dynamic strategy only; a
+                  migration checkpoints a possibly mid-DAG batch
+                  losslessly and charges a migration cost on the
+                  destination). A cluster of 1 board is bit-for-bit
+                  the single-fabric stack. Incompatible with
+                  --trace-out / --timeline-out (single-board traces)
   --cache-file P  schedule-cache persistence: load on startup, save on
                   shutdown, so restarts never re-run the DSE for a
                   composition seen before
@@ -225,8 +266,11 @@ FLAGS (scenario)
 EXAMPLE (end to end, copy-pasteable)
   filco serve --mode sim --requests 600 --pack on --trace-out /tmp/filco-trace.jsonl
   filco trace replay /tmp/filco-trace.jsonl
-  filco serve --scenario flash-crowd"
-    );
+  filco serve --mode sim --boards 2 --strategy dynamic
+  filco serve --scenario flash-crowd";
+
+fn print_usage() {
+    println!("{USAGE}");
 }
 
 fn cmd_info() {
@@ -328,14 +372,15 @@ fn cmd_gantt(flags: &HashMap<String, String>) {
 fn cmd_serve(flags: &HashMap<String, String>) {
     // Floor of 1: `--requests 0` would otherwise divide by zero in the
     // pacing/timescale math below.
-    let n: u64 = flags.get("requests").and_then(|s| s.parse().ok()).unwrap_or(480).max(1);
-    let epoch_ms: f64 = flags.get("epoch-ms").and_then(|s| s.parse().ok()).unwrap_or(200.0);
-    let mode = flags.get("mode").map(String::as_str).unwrap_or("live");
+    let n: u64 = serve_flag(flags, "requests").and_then(|s| s.parse().ok()).unwrap_or(480).max(1);
+    let epoch_ms: f64 =
+        serve_flag(flags, "epoch-ms").and_then(|s| s.parse().ok()).unwrap_or(200.0);
+    let mode = serve_flag(flags, "mode").map(String::as_str).unwrap_or("live");
     if mode != "live" && mode != "sim" {
         eprintln!("unknown --mode {mode:?}; expected \"live\" or \"sim\"");
         std::process::exit(2);
     }
-    let strategy_flag = flags.get("strategy").map(String::as_str);
+    let strategy_flag = serve_flag(flags, "strategy").map(String::as_str);
     if let Some(s) = strategy_flag {
         if !matches!(s, "dynamic" | "static" | "unified") {
             eprintln!(
@@ -344,7 +389,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             std::process::exit(2);
         }
     }
-    let preempt = match flags.get("preempt").map(String::as_str) {
+    let preempt = match serve_flag(flags, "preempt").map(String::as_str) {
         None | Some("on") => true,
         Some("off") => false,
         Some(other) => {
@@ -352,7 +397,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             std::process::exit(2);
         }
     };
-    let pack = match flags.get("pack").map(String::as_str) {
+    let pack = match serve_flag(flags, "pack").map(String::as_str) {
         None | Some("off") => false,
         Some("on") => true,
         Some(other) => {
@@ -364,20 +409,26 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     // Floor of 1: shards are a throughput knob, never a semantic one
     // (the engine's merge keeps the event trace bit-for-bit identical),
     // and 0 workers would mean no one steps the fabric.
-    let shards: usize = flags.get("shards").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+    let shards: usize =
+        serve_flag(flags, "shards").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
 
     // DSE solver threads: > 1 opts the schedule cache into the
     // accelerated profile (parallel fitness evaluation, warm-started
     // populations, convergence cutoff) and sizes the background
     // solver's pool.
     let dse_workers: usize =
-        flags.get("dse-workers").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+        serve_flag(flags, "dse-workers").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
+
+    // Independent fabric boards; 1 (the default) is bit-for-bit the
+    // single-fabric serve stack.
+    let boards: usize =
+        serve_flag(flags, "boards").and_then(|s| s.parse().ok()).unwrap_or(1).max(1);
 
     // A zoo scenario replaces the default skewed demo entirely:
     // tenants, traffic, and SLO deadlines come from the spec, and the
     // run is the deterministic sim comparison.
     if let Some(spec) = scenario_from_flags(flags) {
-        if flags.get("mode").map(String::as_str) == Some("live") {
+        if serve_flag(flags, "mode").map(String::as_str) == Some("live") {
             eprintln!("--scenario/--scenario-file run the deterministic sim comparison; drop --mode live");
             std::process::exit(2);
         }
@@ -385,9 +436,14 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         return;
     }
 
-    let trace_out = flags.get("trace-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
+    let trace_out =
+        serve_flag(flags, "trace-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
     let timeline_out =
-        flags.get("timeline-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
+        serve_flag(flags, "timeline-out").filter(|p| !p.is_empty()).map(std::path::PathBuf::from);
+    if boards > 1 && (trace_out.is_some() || timeline_out.is_some()) {
+        eprintln!("--trace-out/--timeline-out record a single board's engine; drop --boards");
+        std::process::exit(2);
+    }
 
     let platform = Platform::vck190();
     let base = FilcoConfig::default_for(&platform);
@@ -398,7 +454,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     let cache = Arc::new(cache);
     // Warm from disk: restarts skip the GA/MILP for every composition
     // this process has already seen.
-    let cache_file = flags.get("cache-file").map(std::path::PathBuf::from);
+    let cache_file = serve_flag(flags, "cache-file").map(std::path::PathBuf::from);
     if let Some(path) = &cache_file {
         match cache.load_from(path) {
             Ok(0) => {}
@@ -449,6 +505,29 @@ fn cmd_serve(flags: &HashMap<String, String>) {
             Some("dynamic") => vec![Strategy::Dynamic(policy)],
             _ => vec![Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy)],
         };
+        // Multi-board: the same comparison through the cluster driver,
+        // with the calibrated placement/migration policy.
+        if boards > 1 {
+            let cluster = ClusterPolicy::calibrated(per[0]);
+            for strat in strategies {
+                let rep = simulate_cluster(&sc, &strat, boards, Some(cluster), &cache);
+                println!("{}", rep.report.summary());
+                println!(
+                    "    {boards} boards | {} migrations | {} placement epochs | \
+                     worst-board p99 {:.3e} s",
+                    rep.migrations,
+                    rep.placement_epochs,
+                    rep.worst_board_p99_s()
+                );
+                for (t, h) in sc.tenants.iter().zip(&rep.report.histograms) {
+                    println!("    {:<9} p50 {:.3e} s  p95 {:.3e} s  p99 {:.3e} s",
+                        t.name, h.p50(), h.p95(), h.p99());
+                }
+            }
+            println!("schedule cache: {}", cache.stats());
+            save_cache(&cache);
+            return;
+        }
         // Telemetry attaches to one row: the strategy --strategy
         // selects, or the dynamic row of the three-way comparison.
         let recorded_label = match strategy_flag {
@@ -506,8 +585,7 @@ fn cmd_serve(flags: &HashMap<String, String>) {
     // heavy tenant's total fabric time to ~2 s wall keeps the demo
     // short while leaving the policy thread epochs to react in.
     let n_heavy = n * 8 / 10;
-    let timescale: f64 = flags
-        .get("timescale")
+    let timescale: f64 = serve_flag(flags, "timescale")
         .and_then(|s| s.parse().ok())
         .unwrap_or(2.0 / (n_heavy as f64 * per[0] * 0.9).max(1e-9));
     let mut policy = PolicyConfig {
@@ -532,6 +610,15 @@ fn cmd_serve(flags: &HashMap<String, String>) {
         max_sleep: Duration::from_millis(100),
         shards,
         dse_workers,
+        boards,
+        // Placement epochs pace in wall seconds (like --epoch-ms);
+        // the migration charge is calibrated to the measured service
+        // time, mirroring the sim cluster's calibration.
+        cluster: ClusterPolicy {
+            epoch_s: epoch_ms / 1e3,
+            migration_cost_s: 0.25 * per[0],
+            ..ClusterPolicy::default()
+        },
     };
     let sched = FabricScheduler::new(platform, base, specs(), cache.clone(), cfg)
         .expect("build scheduler");
@@ -605,13 +692,13 @@ fn cmd_serve(flags: &HashMap<String, String>) {
 /// `None` when neither flag is present; exits with a diagnostic on an
 /// unknown name or a malformed file.
 fn scenario_from_flags(flags: &HashMap<String, String>) -> Option<ScenarioSpec> {
-    if let Some(name) = flags.get("scenario").filter(|s| !s.is_empty()) {
+    if let Some(name) = serve_flag(flags, "scenario").filter(|s| !s.is_empty()) {
         return Some(scenario::builtin(name).unwrap_or_else(|| {
             eprintln!("unknown scenario {name:?}; `filco scenario list` prints the zoo");
             std::process::exit(2);
         }));
     }
-    let path = flags.get("scenario-file").filter(|s| !s.is_empty())?;
+    let path = serve_flag(flags, "scenario-file").filter(|s| !s.is_empty())?;
     let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
         eprintln!("cannot read {path}: {e}");
         std::process::exit(2);
@@ -772,6 +859,22 @@ fn main() {
             eprintln!("unknown command {other:?}");
             print_usage();
             std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{SERVE_FLAGS, USAGE};
+
+    /// Every flag `cmd_serve` parses must be documented in `filco help`.
+    /// `serve_flag` debug-asserts the reverse direction (no lookup of a
+    /// flag missing from [`SERVE_FLAGS`]), so together the parser and
+    /// the help text cannot drift apart.
+    #[test]
+    fn help_documents_every_serve_flag() {
+        for flag in SERVE_FLAGS {
+            assert!(USAGE.contains(flag), "`filco help` is missing serve flag {flag}");
         }
     }
 }

@@ -239,10 +239,13 @@ struct Flight {
 }
 
 /// Map slot: either a finished schedule or a marker for a solve some
-/// thread is currently running (single-flight dedupe).
+/// thread is currently running (single-flight dedupe). Each slot
+/// remembers the board that first computed (or is computing) it, so
+/// multi-board serving stacks can count how often one board's solve
+/// warmed another board's lookup.
 enum Slot {
-    Ready(Arc<CachedSchedule>),
-    Pending(Arc<Flight>),
+    Ready(Arc<CachedSchedule>, usize),
+    Pending(Arc<Flight>, usize),
 }
 
 /// Thread-safe memo table for two-stage DSE results.
@@ -258,6 +261,7 @@ pub struct ScheduleCache {
     solve_ns: AtomicU64,
     solve_count: AtomicU64,
     coalesced: AtomicU64,
+    cross_board: AtomicU64,
 }
 
 impl ScheduleCache {
@@ -276,6 +280,7 @@ impl ScheduleCache {
             solve_ns: AtomicU64::new(0),
             solve_count: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
+            cross_board: AtomicU64::new(0),
         }
     }
 
@@ -310,13 +315,29 @@ impl ScheduleCache {
         cfg: &FilcoConfig,
         dag: &Dag,
     ) -> Arc<CachedSchedule> {
+        self.get_or_compute_from(platform, cfg, dag, 0)
+    }
+
+    /// [`Self::get_or_compute`] with the caller's board identity. A hit
+    /// on an entry first computed by a *different* board additionally
+    /// counts into [`Self::cross_board_hits`] — the multi-board warm
+    /// path where one board's solve spares another board a cold DSE
+    /// run. Single-board callers use origin 0 everywhere, so the
+    /// counter stays at zero for them.
+    pub fn get_or_compute_from(
+        &self,
+        platform: &Platform,
+        cfg: &FilcoConfig,
+        dag: &Dag,
+        origin: usize,
+    ) -> Arc<CachedSchedule> {
         let key = Key {
             cfg: cfg.clone(),
             platform: platform_fingerprint(platform),
             dag: dag_fingerprint(dag),
         };
         enum Probe {
-            Hit(Arc<CachedSchedule>),
+            Hit(Arc<CachedSchedule>, usize),
             Wait(Arc<Flight>),
             Lead(Arc<Flight>, Vec<dse::GaSeed>),
         }
@@ -331,8 +352,8 @@ impl ScheduleCache {
         let probe = {
             let mut map = self.inner.lock().unwrap();
             match map.get(&key) {
-                Some(Slot::Ready(hit)) => Probe::Hit(hit.clone()),
-                Some(Slot::Pending(flight)) => Probe::Wait(flight.clone()),
+                Some(Slot::Ready(hit, org)) => Probe::Hit(hit.clone(), *org),
+                Some(Slot::Pending(flight, _)) => Probe::Wait(flight.clone()),
                 None => {
                     let seeds = if self.tuning.warm_start {
                         Self::neighbor_seeds(&map, &key, dag.len())
@@ -341,15 +362,18 @@ impl ScheduleCache {
                     };
                     let flight =
                         Arc::new(Flight { done: Mutex::new(None), cv: Condvar::new() });
-                    map.insert(key.clone(), Slot::Pending(flight.clone()));
+                    map.insert(key.clone(), Slot::Pending(flight.clone(), origin));
                     Probe::Lead(flight, seeds)
                 }
             }
         };
         self.lookup_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         match probe {
-            Probe::Hit(hit) => {
+            Probe::Hit(hit, org) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                if org != origin {
+                    self.cross_board.fetch_add(1, Ordering::Relaxed);
+                }
                 hit
             }
             Probe::Wait(flight) => {
@@ -380,7 +404,7 @@ impl ScheduleCache {
                 // so later lookups hit without touching the flight.
                 *flight.done.lock().unwrap() = Some(cached.clone());
                 flight.cv.notify_all();
-                self.inner.lock().unwrap().insert(key, Slot::Ready(cached.clone()));
+                self.inner.lock().unwrap().insert(key, Slot::Ready(cached.clone(), origin));
                 cached
             }
         }
@@ -403,7 +427,7 @@ impl ScheduleCache {
             dag: dag_fingerprint(dag),
         };
         match self.inner.lock().unwrap().get(&key) {
-            Some(Slot::Ready(hit)) => Some(hit.clone()),
+            Some(Slot::Ready(hit, _)) => Some(hit.clone()),
             _ => None,
         }
     }
@@ -425,7 +449,7 @@ impl ScheduleCache {
         let mut found: Vec<(&Key, &Arc<CachedSchedule>)> = map
             .iter()
             .filter_map(|(k, s)| match s {
-                Slot::Ready(v) if k.platform == pfp && k.dag == dfp && k.cfg != *cfg => {
+                Slot::Ready(v, _) if k.platform == pfp && k.dag == dfp && k.cfg != *cfg => {
                     Some((k, v))
                 }
                 _ => None,
@@ -442,7 +466,7 @@ impl ScheduleCache {
         let mut found: Vec<(&Key, &Arc<CachedSchedule>)> = map
             .iter()
             .filter_map(|(k, s)| match s {
-                Slot::Ready(v)
+                Slot::Ready(v, _)
                     if k.platform == key.platform && k.dag == key.dag && k.cfg != key.cfg =>
                 {
                     Some((k, v))
@@ -507,6 +531,15 @@ impl ScheduleCache {
         self.coalesced.load(Ordering::Relaxed)
     }
 
+    /// Hits served from an entry another board first computed (or was
+    /// first to start computing): cold solves a board skipped because a
+    /// peer board warmed the shared cache. A subset of [`Self::hits`].
+    /// Zero unless lookups arrive through
+    /// [`Self::get_or_compute_from`] with distinct origins.
+    pub fn cross_board_hits(&self) -> u64 {
+        self.cross_board.load(Ordering::Relaxed)
+    }
+
     /// Number of distinct `(config, dag)` schedules held (ready
     /// entries only; in-flight solves don't count until they land).
     pub fn len(&self) -> usize {
@@ -514,7 +547,7 @@ impl ScheduleCache {
             .lock()
             .unwrap()
             .values()
-            .filter(|s| matches!(s, Slot::Ready(_)))
+            .filter(|s| matches!(s, Slot::Ready(..)))
             .count()
     }
 
@@ -540,8 +573,8 @@ impl ScheduleCache {
         let mut sorted: Vec<(&Key, &Arc<CachedSchedule>)> = map
             .iter()
             .filter_map(|(k, s)| match s {
-                Slot::Ready(v) => Some((k, v)),
-                Slot::Pending(_) => None,
+                Slot::Ready(v, _) => Some((k, v)),
+                Slot::Pending(..) => None,
             })
             .collect();
         sorted.sort_by_key(|(k, _)| (k.platform, k.dag, cfg_sort_key(&k.cfg)));
@@ -601,7 +634,7 @@ impl ScheduleCache {
         let mut map = self.inner.lock().unwrap();
         for (key, schedule) in parsed {
             if let std::collections::hash_map::Entry::Vacant(slot) = map.entry(key) {
-                slot.insert(Slot::Ready(Arc::new(CachedSchedule::new(schedule))));
+                slot.insert(Slot::Ready(Arc::new(CachedSchedule::new(schedule)), 0));
                 loaded += 1;
             }
         }
@@ -865,6 +898,26 @@ mod tests {
         let probed = cache.get_cached(&p, &cfg, &dag).expect("ready after solve");
         assert!(Arc::ptr_eq(&solved, &probed));
         assert_eq!((cache.hits(), cache.misses()), (0, 1));
+    }
+
+    #[test]
+    fn cross_board_hit_skips_the_cold_solve() {
+        let p = Platform::vck190();
+        let cfg = FilcoConfig::default_for(&p);
+        let dag = zoo::mlp_s();
+        let cache = ScheduleCache::new(ScheduleCache::serving_solver());
+        // Board 0 pays the cold solve.
+        let a = cache.get_or_compute_from(&p, &cfg, &dag, 0);
+        assert_eq!((cache.solve_count(), cache.cross_board_hits()), (1, 0));
+        // Board 1's first lookup of the same (slice, DAG) key is a warm
+        // hit on board 0's entry: no second solve, one cross-board hit.
+        let b = cache.get_or_compute_from(&p, &cfg, &dag, 1);
+        assert!(Arc::ptr_eq(&a, &b), "board 1 must share board 0's Arc");
+        assert_eq!(cache.solve_count(), 1, "board 1's cold solve must be avoided");
+        assert_eq!((cache.hits(), cache.cross_board_hits()), (1, 1));
+        // Same-board re-lookups are plain hits, not cross-board ones.
+        let _ = cache.get_or_compute_from(&p, &cfg, &dag, 0);
+        assert_eq!((cache.hits(), cache.cross_board_hits()), (2, 1));
     }
 
     #[test]

@@ -1,0 +1,959 @@
+//! Multi-board fabrics: a cluster of M [`FabricEngine`]s with a
+//! placement layer and cross-board tenant migration.
+//!
+//! A FILCO deployment larger than one device is M independent boards,
+//! each running its own reconfigurable fabric. [`FabricCluster`] owns
+//! one engine per board (built with
+//! [`FabricEngine::new_on_board`](super::FabricEngine::new_on_board),
+//! so shared-cache lookups are board-tagged), holds the *global*
+//! arrival stream, and routes each arrival to its tenant's current
+//! host board through [`FabricEngine::push`]. Time is global: the
+//! cluster's [`FabricCluster::next_time`] is the min over the global
+//! arrival stream and every board's own next event, and
+//! [`FabricCluster::step`] steps every board to the same fabric
+//! instant.
+//!
+//! # Placement and migration
+//!
+//! Tenants land on boards by declared fabric share (first-fit, see
+//! [`first_fit_placement`]); every later residency change is a
+//! [`ClusterTransition`] applied at exactly one site
+//! ([`FabricCluster::apply`]) — mirroring the engine's own
+//! `Transition` discipline. A per-epoch imbalance signal (max/min
+//! board backlog ratio with hysteresis, [`ClusterPolicy`]) triggers at
+//! most one cross-board migration per placement epoch: the tenant's
+//! (possibly mid-DAG) batch cursor is checkpointed by
+//! [`FabricEngine::remove_tenant`](super::FabricEngine::remove_tenant),
+//! its queue and token bucket move wholesale, and
+//! [`FabricEngine::install_tenant`](super::FabricEngine::install_tenant)
+//! charges the configured migration cost to the newcomer only. The
+//! move is lossless: an undisturbed batch's final consumed fabric time
+//! equals its solo walk plus exactly the migration charge (asserted on
+//! `f64`s in `rust/tests/serve_cluster.rs`).
+//!
+//! # The deterministic merged trace
+//!
+//! Engine events carry board-local tenant indices; the cluster
+//! translates them to global indices at its per-step drain point
+//! (residency is constant within a step — migrations land after the
+//! drain) and buckets each board's chunk under the *step instant*.
+//! [`merge_board_streams`] then stably sorts buckets by `(instant,
+//! board)` using `f64::total_cmp` — no float arithmetic anywhere in
+//! the merge — so the merged trace is a deterministic function of the
+//! per-board streams, invariant under the order boards were stepped
+//! or drained in (property-tested under stream permutation).
+//!
+//! # Cluster-of-1 is the single engine, bit for bit
+//!
+//! With one board, placement puts every tenant on board 0 in spec
+//! order, the per-step push/step orchestration reproduces the single
+//! engine's ingest-inside-step event order exactly (the
+//! [`FabricEngine::set_external_pending`](super::FabricEngine::set_external_pending)
+//! flag keeps its epoch gating identical), the merge degenerates to
+//! concatenation, and the merged report is a field-by-field scatter.
+//! `rust/tests/serve_cluster.rs` asserts trace, report and every
+//! histogram equal (`==` on `f64`s) against the plain single-engine
+//! simulator across the seed matrix.
+
+use crate::arch::FilcoConfig;
+use crate::coordinator::metrics::LatencyHistogram;
+use crate::platform::Platform;
+
+use super::cache::ScheduleCache;
+use super::engine::{EngineEvent, FabricEngine};
+use super::sim::{report_from_engine, ServeReport, Strategy};
+use super::telemetry::EpochSample;
+use super::tenant::{Arrival, TenantSpec};
+
+/// Identity of one board (one physical fabric) in a cluster. Plain
+/// index: board `b` is `engines[b]`, and every [`EngineEvent`] bucket,
+/// [`EpochSample::board`] tag and [`EngineEvent::Migrated`] endpoint
+/// uses it directly.
+pub type BoardId = usize;
+
+/// Knobs of the cluster placement layer: when to evaluate imbalance
+/// and when a migration is worth its cost.
+///
+/// The imbalance signal is the ratio of the most- to least-backlogged
+/// board's queued work (an empty board against a non-empty one reads
+/// as infinite). Hysteresis is an armed flag: a migration fires only
+/// while armed and the ratio is at or above [`Self::imbalance_hi`];
+/// firing disarms, and the trigger re-arms only once the ratio falls
+/// to [`Self::imbalance_lo`] or below — so a single persistent skew
+/// cannot thrash tenants back and forth between boards.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterPolicy {
+    /// Fabric seconds between placement-epoch evaluations.
+    pub epoch_s: f64,
+    /// Fire threshold on the max/min board backlog ratio (while armed).
+    pub imbalance_hi: f64,
+    /// Re-arm threshold: the ratio must fall to this or below after a
+    /// migration before another can fire.
+    pub imbalance_lo: f64,
+    /// Fabric seconds charged to a migrated tenant on its destination
+    /// board (onto the in-flight cursor's ledger when mid-DAG, onto
+    /// its availability when idle).
+    pub migration_cost_s: f64,
+    /// Minimum queued fabric seconds a tenant must hold to be a
+    /// migration candidate (don't move tenants that carry no work).
+    pub min_gain_s: f64,
+}
+
+impl Default for ClusterPolicy {
+    fn default() -> Self {
+        Self {
+            epoch_s: 1.0,
+            imbalance_hi: 4.0,
+            imbalance_lo: 1.5,
+            migration_cost_s: 1e-6,
+            min_gain_s: 0.0,
+        }
+    }
+}
+
+impl ClusterPolicy {
+    /// A policy calibrated to a scenario's measured per-request
+    /// service time, like
+    /// [`PolicyConfig::calibrated`](super::policy::PolicyConfig::calibrated):
+    /// evaluate every 5 requests' worth of fabric time, charge a
+    /// quarter-request migration cost.
+    pub fn calibrated(per_request_s: f64) -> Self {
+        Self {
+            epoch_s: 5.0 * per_request_s,
+            migration_cost_s: 0.25 * per_request_s,
+            ..Self::default()
+        }
+    }
+}
+
+/// A cluster-level residency change. Every way a tenant's host board
+/// can be (re)assigned is one of these, and all of them are applied at
+/// exactly one site — [`FabricCluster::apply`] — mirroring the
+/// engine's own `Transition` discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterTransition {
+    /// Assign `tenant` to `board` at construction time, before the
+    /// board engines are built. Refused once they are — later moves
+    /// are [`Self::Migrate`]s.
+    Place {
+        /// Global tenant index.
+        tenant: usize,
+        /// Destination board.
+        board: BoardId,
+    },
+    /// Move `tenant` from its current board to `to`, checkpointing a
+    /// mid-DAG batch losslessly and charging the policy's migration
+    /// cost on arrival.
+    Migrate {
+        /// Global tenant index.
+        tenant: usize,
+        /// Destination board.
+        to: BoardId,
+    },
+}
+
+/// First-fit placement of tenants onto `boards` boards by declared
+/// fabric share.
+///
+/// A tenant's share is its [`RateLimit::fabric_share`](super::tenant::RateLimit)
+/// when declared, else `1/boards` (an undeclared tenant is assumed to
+/// need an equal slice of the cluster). Tenants are taken in spec
+/// order: each goes to the first board whose accumulated share stays
+/// within one board's capacity (1.0), overflowing to the least-loaded
+/// board (lowest index on ties). A post-pass donates the
+/// highest-index tenant of the most-populated board to any board left
+/// empty, so every board starts with at least one resident — which is
+/// why `boards` may not exceed the tenant count.
+pub fn first_fit_placement(tenants: &[TenantSpec], boards: usize) -> Result<Vec<usize>, String> {
+    if boards == 0 {
+        return Err("a cluster needs at least one board".into());
+    }
+    if tenants.is_empty() {
+        return Err("no tenants".into());
+    }
+    if boards > tenants.len() {
+        return Err(format!(
+            "{} boards exceed {} tenants (every board needs a resident)",
+            boards,
+            tenants.len()
+        ));
+    }
+    let share = |t: &TenantSpec| {
+        t.rate_limit.map(|r| r.fabric_share).unwrap_or(1.0 / boards as f64).max(0.0)
+    };
+    let mut load = vec![0.0f64; boards];
+    let mut count = vec![0usize; boards];
+    let mut assign = vec![0usize; tenants.len()];
+    for (i, t) in tenants.iter().enumerate() {
+        let s = share(t);
+        let b = (0..boards).find(|&b| load[b] + s <= 1.0 + 1e-12).unwrap_or_else(|| {
+            (0..boards).fold(0, |best, b| if load[b] < load[best] { b } else { best })
+        });
+        assign[i] = b;
+        load[b] += s;
+        count[b] += 1;
+    }
+    while let Some(empty) = (0..boards).find(|&b| count[b] == 0) {
+        let donor = (0..boards).fold(0, |best, b| if count[b] > count[best] { b } else { best });
+        let t = (0..tenants.len())
+            .rev()
+            .find(|&t| assign[t] == donor)
+            .expect("the most-populated board has a resident");
+        assign[t] = empty;
+        count[donor] -= 1;
+        count[empty] += 1;
+        load[donor] -= share(&tenants[t]);
+        load[empty] += share(&tenants[t]);
+    }
+    Ok(assign)
+}
+
+/// Order-stable deterministic merge of per-board event streams into
+/// one global trace.
+///
+/// Each stream is `(board, buckets)` where a bucket is `(instant,
+/// events)` — the events one board emitted at one step instant, in
+/// emission order, already translated to global tenant indices.
+/// Buckets are stably sorted by `(instant, board)` with
+/// `f64::total_cmp` and concatenated; no float arithmetic happens
+/// anywhere in the merge, so the result is bit-identical regardless
+/// of the order streams are supplied in (property-tested under
+/// permutation) — and a single stream passes through unchanged, which
+/// is what makes the cluster-of-1 trace equal the single engine's.
+pub fn merge_board_streams(
+    streams: Vec<(BoardId, Vec<(f64, Vec<EngineEvent>)>)>,
+) -> Vec<EngineEvent> {
+    let mut flat: Vec<(f64, BoardId, Vec<EngineEvent>)> = Vec::new();
+    for (board, buckets) in streams {
+        for (t, chunk) in buckets {
+            if !chunk.is_empty() {
+                flat.push((t, board, chunk));
+            }
+        }
+    }
+    flat.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    flat.into_iter().flat_map(|(_, _, chunk)| chunk).collect()
+}
+
+/// Rewrite one board-local event onto cluster-global tenant indices
+/// (`residents` maps the board's local index to the global one).
+/// `Resplit` weights are per-partition-group on that board and stay
+/// raw; `Unified` and `Migrated` carry no local indices.
+fn globalize(ev: EngineEvent, residents: &[usize]) -> EngineEvent {
+    match ev {
+        EngineEvent::Admitted { tenant, id, at_s } => {
+            EngineEvent::Admitted { tenant: residents[tenant], id, at_s }
+        }
+        EngineEvent::BatchStarted { tenant, n, at_s } => {
+            EngineEvent::BatchStarted { tenant: residents[tenant], n, at_s }
+        }
+        EngineEvent::BatchDone { tenant, n, at_s, consumed_s } => {
+            EngineEvent::BatchDone { tenant: residents[tenant], n, at_s, consumed_s }
+        }
+        EngineEvent::Rejected { tenant, at_s } => {
+            EngineEvent::Rejected { tenant: residents[tenant], at_s }
+        }
+        EngineEvent::Throttled { tenant, at_s } => {
+            EngineEvent::Throttled { tenant: residents[tenant], at_s }
+        }
+        EngineEvent::Preempted { tenant, at_s } => {
+            EngineEvent::Preempted { tenant: residents[tenant], at_s }
+        }
+        EngineEvent::PackHandoff { tenant, consumed_s, at_s } => {
+            EngineEvent::PackHandoff { tenant: residents[tenant], consumed_s, at_s }
+        }
+        EngineEvent::Packed { members, at_s } => EngineEvent::Packed {
+            members: members.into_iter().map(|t| residents[t]).collect(),
+            at_s,
+        },
+        EngineEvent::Unpacked { members, at_s } => EngineEvent::Unpacked {
+            members: members.into_iter().map(|t| residents[t]).collect(),
+            at_s,
+        },
+        other @ (EngineEvent::Resplit { .. }
+        | EngineEvent::Unified { .. }
+        | EngineEvent::Migrated { .. }) => other,
+    }
+}
+
+/// Scatter per-board reports into one cluster-global [`ServeReport`].
+///
+/// Per-tenant state (queues, histograms, counters) travels wholesale
+/// with a migrating tenant, so at the end of a run each tenant's
+/// numbers live entirely on its final board: the merge is a pure
+/// scatter through the residency maps plus exact integer sums and an
+/// `f64::max` over completions — no float addition, so a one-board
+/// merge is bit-identical to that board's own report.
+pub(crate) fn merge_reports(
+    label: &str,
+    per_board: &[ServeReport],
+    residents: &[Vec<usize>],
+    n_tenants: usize,
+) -> ServeReport {
+    let mut served = vec![0u64; n_tenants];
+    let mut rejected = vec![0u64; n_tenants];
+    let mut throttled = vec![0u64; n_tenants];
+    let mut slo_met = vec![0u64; n_tenants];
+    let mut slo_missed = vec![0u64; n_tenants];
+    let mut slo_deadline_s: Vec<Option<f64>> = vec![None; n_tenants];
+    let mut histograms: Vec<Option<LatencyHistogram>> = vec![None; n_tenants];
+    let mut pack_group_sizes = Vec::new();
+    for (b, rep) in per_board.iter().enumerate() {
+        for (l, &g) in residents[b].iter().enumerate() {
+            served[g] = rep.served[l];
+            rejected[g] = rep.rejected[l];
+            throttled[g] = rep.throttled[l];
+            slo_met[g] = rep.slo_met[l];
+            slo_missed[g] = rep.slo_missed[l];
+            slo_deadline_s[g] = rep.slo_deadline_s[l];
+            histograms[g] = Some(rep.histograms[l].clone());
+        }
+        pack_group_sizes.extend(rep.pack_group_sizes.iter().copied());
+    }
+    ServeReport {
+        strategy: label.to_string(),
+        completion_s: per_board.iter().map(|r| r.completion_s).fold(f64::NEG_INFINITY, f64::max),
+        served,
+        rejected,
+        throttled,
+        switches: per_board.iter().map(|r| r.switches).sum(),
+        preemptions: per_board.iter().map(|r| r.preemptions).sum(),
+        packs: per_board.iter().map(|r| r.packs).sum(),
+        unpacks: per_board.iter().map(|r| r.unpacks).sum(),
+        pack_swaps: per_board.iter().map(|r| r.pack_swaps).sum(),
+        pack_group_sizes,
+        epochs: per_board.iter().map(|r| r.epochs).sum(),
+        histograms: histograms
+            .into_iter()
+            .map(|h| h.expect("every tenant resides on exactly one board"))
+            .collect(),
+        slo_deadline_s,
+        slo_met,
+        slo_missed,
+    }
+}
+
+/// Outcome of one cluster run: the merged global [`ServeReport`] plus
+/// the per-board breakdown the multi-board bench and CLI read.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// The cluster-global report (global tenant indexing).
+    pub report: ServeReport,
+    /// Each board's own report over its final residents (board-local
+    /// tenant indexing; translate through [`Self::residents`]).
+    pub per_board: Vec<ServeReport>,
+    /// Final residency: `residents[b][l]` is the global index of board
+    /// `b`'s local tenant `l`.
+    pub residents: Vec<Vec<usize>>,
+    /// Cross-board migrations performed.
+    pub migrations: u64,
+    /// Placement epochs evaluated (0 on a single board).
+    pub placement_epochs: u64,
+}
+
+impl ClusterReport {
+    /// Worst per-tenant p99 across the worst board — the multi-board
+    /// tail metric the bench snapshots.
+    pub fn worst_board_p99_s(&self) -> f64 {
+        self.per_board.iter().map(ServeReport::worst_p99_s).fold(0.0, f64::max)
+    }
+}
+
+/// M boards, one [`FabricEngine`] each, behind a single global clock —
+/// the serve stack's cluster abstraction (see the module docs for the
+/// time model, the merge discipline and the cluster-of-1 guarantee).
+pub struct FabricCluster {
+    engines: Vec<FabricEngine>,
+    /// Per board: local tenant index → global tenant index.
+    residents: Vec<Vec<usize>>,
+    /// Global tenant index → (board, local index).
+    locate: Vec<(BoardId, usize)>,
+    /// The global arrival stream (sorted by `t_s`) and its cursor.
+    arrivals: Vec<Arrival>,
+    ai: usize,
+    /// `None` on a single board (no peer to migrate to, and the
+    /// cluster-of-1 trace must not carry placement epochs).
+    policy: Option<ClusterPolicy>,
+    next_epoch: f64,
+    armed: bool,
+    migrations: u64,
+    placement_epochs: u64,
+    now: f64,
+    label: String,
+    tracing: bool,
+    /// Per-board trace buckets keyed by step instant, plus one
+    /// pseudo-stream at index `boards` for cluster-emitted
+    /// [`EngineEvent::Migrated`] events (sorting after every board at
+    /// the same instant).
+    streams: Vec<Vec<(f64, Vec<EngineEvent>)>>,
+}
+
+impl FabricCluster {
+    /// Build a cluster of `boards` boards serving `tenants` under
+    /// `strategy` (each board runs the strategy over its residents;
+    /// `Unified` boards compose their residents into one accelerator
+    /// each and refuse migration). Tenants are placed by
+    /// [`first_fit_placement`] through the [`ClusterTransition::Place`]
+    /// arm of [`Self::apply`]; `arrivals` is the global trace the
+    /// cluster routes itself. `cluster_policy` enables the placement
+    /// epoch / migration layer and is ignored on a single board.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        platform: Platform,
+        base: FilcoConfig,
+        tenants: Vec<TenantSpec>,
+        strategy: &Strategy,
+        switch_cost_s: Option<f64>,
+        arrivals: Vec<Arrival>,
+        boards: usize,
+        cluster_policy: Option<ClusterPolicy>,
+        cache: &ScheduleCache,
+    ) -> Result<Self, String> {
+        let assignment = first_fit_placement(&tenants, boards)?;
+        if let Some(p) = &cluster_policy {
+            if p.epoch_s <= 0.0 || p.epoch_s.is_nan() {
+                return Err("cluster policy epoch_s must be positive".into());
+            }
+        }
+        let policy = if boards > 1 { cluster_policy } else { None };
+        let next_epoch = policy.map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
+        let mut cluster = Self {
+            engines: Vec::new(),
+            residents: vec![Vec::new(); boards],
+            locate: vec![(0, 0); tenants.len()],
+            arrivals,
+            ai: 0,
+            policy,
+            next_epoch,
+            armed: true,
+            migrations: 0,
+            placement_epochs: 0,
+            now: 0.0,
+            label: strategy.label().to_string(),
+            tracing: false,
+            streams: Vec::new(),
+        };
+        for (t, &b) in assignment.iter().enumerate() {
+            cluster.apply(ClusterTransition::Place { tenant: t, board: b }, 0.0, cache)?;
+        }
+        for b in 0..boards {
+            let specs: Vec<TenantSpec> =
+                cluster.residents[b].iter().map(|&g| tenants[g].clone()).collect();
+            let engine = match strategy {
+                Strategy::Unified => FabricEngine::new_unified(
+                    platform.clone(),
+                    base.clone(),
+                    specs,
+                    switch_cost_s,
+                    Vec::new(),
+                    cache,
+                ),
+                Strategy::StaticEqual | Strategy::Dynamic(_) => {
+                    let p = match strategy {
+                        Strategy::Dynamic(p) => Some(p.clone()),
+                        _ => None,
+                    };
+                    FabricEngine::new_on_board(
+                        platform.clone(),
+                        base.clone(),
+                        specs,
+                        p,
+                        switch_cost_s,
+                        Vec::new(),
+                        cache,
+                        b,
+                    )
+                }
+            }?;
+            cluster.engines.push(engine);
+        }
+        Ok(cluster)
+    }
+
+    /// Number of boards in the cluster.
+    pub fn num_boards(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Number of tenants across the cluster.
+    pub fn num_tenants(&self) -> usize {
+        self.locate.len()
+    }
+
+    /// The board currently hosting global tenant `t`, and `t`'s local
+    /// index on it.
+    pub fn locate(&self, t: usize) -> (BoardId, usize) {
+        self.locate[t]
+    }
+
+    /// Per-board residency: `residents()[b][l]` is the global index of
+    /// board `b`'s local tenant `l`.
+    pub fn residents(&self) -> &[Vec<usize>] {
+        &self.residents
+    }
+
+    /// Cross-board migrations performed so far.
+    pub fn migrations(&self) -> u64 {
+        self.migrations
+    }
+
+    /// Placement epochs evaluated so far (0 on a single board).
+    pub fn placement_epochs(&self) -> u64 {
+        self.placement_epochs
+    }
+
+    /// Fabric seconds consumed on global tenant `t`'s behalf, read
+    /// from its current host board (the ledger migrates with the
+    /// tenant, so this is its cluster-lifetime total).
+    pub fn fabric_s(&self, t: usize) -> f64 {
+        let (b, l) = self.locate[t];
+        self.engines[b].fabric_s(l)
+    }
+
+    /// Record the merged global event trace for [`Self::take_trace`]
+    /// (off by default). Enable before the first step.
+    pub fn record_trace(&mut self, on: bool) {
+        self.tracing = on;
+        self.streams = if on { vec![Vec::new(); self.engines.len() + 1] } else { Vec::new() };
+        for engine in &mut self.engines {
+            engine.record_trace(on);
+        }
+    }
+
+    /// The merged global trace recorded so far: every board's events
+    /// translated to global tenant indices plus the cluster's
+    /// `Migrated` events, merged by [`merge_board_streams`]. Detaches
+    /// recording.
+    pub fn take_trace(&mut self) -> Vec<EngineEvent> {
+        let streams = std::mem::take(&mut self.streams);
+        self.tracing = false;
+        for engine in &mut self.engines {
+            engine.record_trace(false);
+        }
+        merge_board_streams(streams.into_iter().enumerate().collect())
+    }
+
+    /// Record every board's epoch-metrics timeline (off by default);
+    /// samples carry their [`EpochSample::board`] tag.
+    pub fn record_timeline(&mut self, on: bool) {
+        for engine in &mut self.engines {
+            engine.record_timeline(on);
+        }
+    }
+
+    /// The boards' epoch samples, merged into one global timeline by
+    /// the same `(instant, board)` stable order as the event merge.
+    pub fn take_timeline(&mut self) -> Vec<EpochSample> {
+        let mut flat: Vec<EpochSample> = Vec::new();
+        for engine in &mut self.engines {
+            flat.extend(engine.take_timeline());
+        }
+        flat.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.board.cmp(&b.board)));
+        flat
+    }
+
+    /// Step shard workers per board (see
+    /// [`FabricEngine::set_shards`](super::FabricEngine::set_shards)).
+    pub fn set_shards(&mut self, n: usize) {
+        for engine in &mut self.engines {
+            engine.set_shards(n);
+        }
+    }
+
+    /// Earliest fabric instant at which anything can happen on any
+    /// board: the next unrouted global arrival, every board's own next
+    /// event, and (multi-board, with a policy) the next placement
+    /// epoch while the cluster still holds or expects work.
+    pub fn next_time(&self) -> Option<f64> {
+        let mut next = f64::INFINITY;
+        if self.ai < self.arrivals.len() {
+            next = next.min(self.arrivals[self.ai].t_s);
+        }
+        for engine in &self.engines {
+            if let Some(t) = engine.next_time() {
+                next = next.min(t);
+            }
+        }
+        if self.policy.is_some() && self.next_epoch.is_finite() && self.cluster_relevant() {
+            next = next.min(self.next_epoch);
+        }
+        next.is_finite().then_some(next)
+    }
+
+    /// Is there anything left for a placement epoch to look at?
+    fn cluster_relevant(&self) -> bool {
+        self.ai < self.arrivals.len() || self.engines.iter().any(FabricEngine::has_work)
+    }
+
+    /// Advance the whole cluster to fabric instant `now`: route due
+    /// global arrivals to their tenants' host boards, step every board
+    /// (ascending), drain the per-board traces into the merge buckets,
+    /// then run the placement epoch if one is due. Returns this step's
+    /// events across all boards (board-ascending, global indices) plus
+    /// any migration — admission events go to the trace only, exactly
+    /// like [`FabricEngine::step`].
+    pub fn step(&mut self, now: f64, cache: &ScheduleCache) -> Vec<EngineEvent> {
+        let now = now.max(self.now);
+        self.now = now;
+        // External-pending is computed *before* this step's pushes, so
+        // each board's epoch gating sees exactly what a single engine
+        // ingesting the same trace inside its own step would see.
+        let pre = self.ai < self.arrivals.len();
+        for engine in &mut self.engines {
+            engine.set_external_pending(pre);
+        }
+        while self.ai < self.arrivals.len() && self.arrivals[self.ai].t_s <= now {
+            let a = self.arrivals[self.ai];
+            self.ai += 1;
+            let (b, l) = self.locate[a.tenant];
+            let _ = self.engines[b].push(l, a.id, a.t_s);
+        }
+        let mut per_board: Vec<Vec<EngineEvent>> = Vec::with_capacity(self.engines.len());
+        for engine in &mut self.engines {
+            per_board.push(engine.step(now, cache));
+        }
+        // Post-push truth, so each board's `next_time` epoch gating
+        // matches a single engine's post-ingest `trace_pending`.
+        let post = self.ai < self.arrivals.len();
+        for engine in &mut self.engines {
+            engine.set_external_pending(post);
+        }
+        if self.tracing {
+            for b in 0..self.engines.len() {
+                let chunk = self.engines[b].drain_trace();
+                if !chunk.is_empty() {
+                    let translated =
+                        chunk.into_iter().map(|e| globalize(e, &self.residents[b])).collect();
+                    self.streams[b].push((now, translated));
+                }
+            }
+        }
+        let mut out = Vec::new();
+        for (b, events) in per_board.into_iter().enumerate() {
+            out.extend(events.into_iter().map(|e| globalize(e, &self.residents[b])));
+        }
+        if self.policy.is_some() && now >= self.next_epoch {
+            if let Some(ev) = self.placement_epoch(now, cache) {
+                out.push(ev);
+            }
+            self.placement_epochs += 1;
+            let epoch = self.policy.as_ref().map(|p| p.epoch_s).unwrap_or(f64::INFINITY);
+            while self.next_epoch <= now {
+                self.next_epoch += epoch;
+            }
+        }
+        out
+    }
+
+    /// Retire everything still in flight on every board (ascending)
+    /// after [`Self::next_time`] returns `None` — the cluster's
+    /// [`FabricEngine::finish`](super::FabricEngine::finish). Final
+    /// trace buckets are keyed at `f64::INFINITY`, after every step
+    /// instant.
+    pub fn finish(&mut self) -> Vec<EngineEvent> {
+        let mut out = Vec::new();
+        for b in 0..self.engines.len() {
+            let events = self.engines[b].finish();
+            if self.tracing {
+                let chunk = self.engines[b].drain_trace();
+                if !chunk.is_empty() {
+                    let translated =
+                        chunk.into_iter().map(|e| globalize(e, &self.residents[b])).collect();
+                    self.streams[b].push((f64::INFINITY, translated));
+                }
+            }
+            out.extend(events.into_iter().map(|e| globalize(e, &self.residents[b])));
+        }
+        out
+    }
+
+    /// The cluster-global [`ServeReport`]: per-board reports scattered
+    /// through the residency maps (see [`merge_reports`]'s exactness
+    /// note — one board merges bit-for-bit).
+    pub fn report(&self) -> ServeReport {
+        let per_board: Vec<ServeReport> =
+            self.engines.iter().map(|e| report_from_engine(e, &self.label)).collect();
+        merge_reports(&self.label, &per_board, &self.residents, self.locate.len())
+    }
+
+    /// Each board's own [`ServeReport`] over its residents (local
+    /// tenant indexing; pair with [`Self::residents`]) — what the
+    /// bench's per-board scaling and worst-board tails read.
+    pub fn board_reports(&self) -> Vec<ServeReport> {
+        self.engines.iter().map(|e| report_from_engine(e, &self.label)).collect()
+    }
+
+    /// The full [`ClusterReport`]: the merged global report, the
+    /// per-board breakdown, final residency and migration counters.
+    pub fn cluster_report(&self) -> ClusterReport {
+        ClusterReport {
+            report: self.report(),
+            per_board: self.board_reports(),
+            residents: self.residents.clone(),
+            migrations: self.migrations,
+            placement_epochs: self.placement_epochs,
+        }
+    }
+
+    /// Apply one cluster transition — the single site every residency
+    /// change goes through. `Place` is construction-only; `Migrate`
+    /// checkpoints the tenant off its current board, installs it on
+    /// `to` (charging the policy's migration cost there), updates the
+    /// residency maps, and returns the [`EngineEvent::Migrated`]
+    /// recorded into the merged trace.
+    pub fn apply(
+        &mut self,
+        tr: ClusterTransition,
+        now: f64,
+        cache: &ScheduleCache,
+    ) -> Result<Option<EngineEvent>, String> {
+        match tr {
+            ClusterTransition::Place { tenant, board } => {
+                if !self.engines.is_empty() {
+                    return Err("placement is fixed once boards are built (use Migrate)".into());
+                }
+                if board >= self.residents.len() {
+                    return Err(format!("no board {board}"));
+                }
+                if tenant >= self.locate.len() {
+                    return Err(format!("no tenant {tenant}"));
+                }
+                let local = self.residents[board].len();
+                self.residents[board].push(tenant);
+                self.locate[tenant] = (board, local);
+                Ok(None)
+            }
+            ClusterTransition::Migrate { tenant, to } => {
+                if tenant >= self.locate.len() {
+                    return Err(format!("no tenant {tenant}"));
+                }
+                if to >= self.engines.len() {
+                    return Err(format!("no board {to}"));
+                }
+                let (from, local) = self.locate[tenant];
+                if from == to {
+                    return Err(format!("tenant {tenant} already resides on board {to}"));
+                }
+                if !self.engines[to].can_host_migrant() {
+                    return Err(format!("board {to} cannot host a migrant right now"));
+                }
+                let cost = self.policy.map(|p| p.migration_cost_s).unwrap_or(0.0);
+                let ex = self.engines[from].remove_tenant(local, now, cache)?;
+                let consumed_s = ex.inflight_consumed_s();
+                let new_local = self.engines[to].install_tenant(ex, now, cost, cache)?;
+                self.residents[from].remove(local);
+                for l in local..self.residents[from].len() {
+                    let g = self.residents[from][l];
+                    self.locate[g] = (from, l);
+                }
+                self.residents[to].push(tenant);
+                self.locate[tenant] = (to, new_local);
+                debug_assert_eq!(new_local + 1, self.residents[to].len());
+                self.migrations += 1;
+                let ev = EngineEvent::Migrated { tenant, from, to, consumed_s, at_s: now };
+                if self.tracing {
+                    let pseudo = self.engines.len();
+                    self.streams[pseudo].push((now, vec![ev.clone()]));
+                }
+                Ok(Some(ev))
+            }
+        }
+    }
+
+    /// One placement-epoch evaluation: compute per-board queued
+    /// backlog, check the hysteresis-gated imbalance trigger, and
+    /// perform at most one migration (the candidate from the
+    /// most-backlogged board that minimizes the post-move worse side,
+    /// provided it strictly improves on the current max).
+    fn placement_epoch(&mut self, now: f64, cache: &ScheduleCache) -> Option<EngineEvent> {
+        let p = self.policy?;
+        let nb = self.engines.len();
+        let mut backlog = vec![0.0f64; nb];
+        for (b, engine) in self.engines.iter().enumerate() {
+            for l in 0..engine.num_tenants() {
+                backlog[b] += engine.pending_len(l) as f64 * engine.per_request_s(l);
+            }
+        }
+        let max = backlog.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let min = backlog.iter().copied().fold(f64::INFINITY, f64::min);
+        let ratio = if min <= 0.0 {
+            if max > 0.0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        } else {
+            max / min
+        };
+        if ratio <= p.imbalance_lo {
+            self.armed = true;
+        }
+        if !self.armed || ratio < p.imbalance_hi {
+            return None;
+        }
+        let src = (0..nb).fold(0, |best, b| if backlog[b] > backlog[best] { b } else { best });
+        let dst = (0..nb).fold(0, |best, b| if backlog[b] < backlog[best] { b } else { best });
+        if src == dst || !self.engines[src].migratable() || !self.engines[dst].can_host_migrant()
+        {
+            return None;
+        }
+        let mut best: Option<(f64, usize)> = None;
+        for (l, &g) in self.residents[src].iter().enumerate() {
+            let bt = self.engines[src].pending_len(l) as f64 * self.engines[src].per_request_s(l);
+            if bt < p.min_gain_s {
+                continue;
+            }
+            let post = (backlog[src] - bt).max(backlog[dst] + bt);
+            if post >= backlog[src] {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bp, bg)) => post < bp || (post == bp && g < bg),
+            };
+            if better {
+                best = Some((post, g));
+            }
+        }
+        let (_, tenant) = best?;
+        match self.apply(ClusterTransition::Migrate { tenant, to: dst }, now, cache) {
+            Ok(ev) => {
+                self.armed = false;
+                ev
+            }
+            Err(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+    use crate::workload::zoo;
+
+    fn spec(name: &str) -> TenantSpec {
+        TenantSpec::new(name, zoo::mlp_s())
+    }
+
+    #[test]
+    fn one_board_places_everyone_on_it_in_order() {
+        let tenants = vec![spec("a"), spec("b"), spec("c")];
+        assert_eq!(first_fit_placement(&tenants, 1).unwrap(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn declared_shares_drive_first_fit() {
+        // 0.5 + 0.5 fill board 0; the third share opens board 1.
+        let tenants = vec![
+            spec("a").with_fabric_share(0.5, 1.0),
+            spec("b").with_fabric_share(0.5, 1.0),
+            spec("c").with_fabric_share(0.5, 1.0),
+        ];
+        assert_eq!(first_fit_placement(&tenants, 2).unwrap(), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn overflow_goes_to_the_least_loaded_board() {
+        let tenants = vec![
+            spec("a").with_fabric_share(0.9, 1.0),
+            spec("b").with_fabric_share(0.6, 1.0),
+            spec("c").with_fabric_share(0.9, 1.0),
+        ];
+        // a → board 0 (0.9); b → board 1 (0.6); c fits nowhere and
+        // overflows to the least-loaded board (1).
+        assert_eq!(first_fit_placement(&tenants, 2).unwrap(), vec![0, 1, 1]);
+    }
+
+    #[test]
+    fn post_pass_fills_empty_boards() {
+        // Tiny shares all land on board 0; the post-pass donates the
+        // highest-index tenant to the empty board.
+        let tenants = vec![
+            spec("a").with_fabric_share(0.1, 1.0),
+            spec("b").with_fabric_share(0.1, 1.0),
+            spec("c").with_fabric_share(0.1, 1.0),
+        ];
+        assert_eq!(first_fit_placement(&tenants, 2).unwrap(), vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn more_boards_than_tenants_is_refused() {
+        let tenants = vec![spec("a"), spec("b")];
+        assert!(first_fit_placement(&tenants, 3).is_err());
+        assert!(first_fit_placement(&tenants, 0).is_err());
+        assert!(first_fit_placement(&[], 1).is_err());
+    }
+
+    fn ev(tenant: usize, id: u64, at_s: f64) -> EngineEvent {
+        EngineEvent::Admitted { tenant, id, at_s }
+    }
+
+    #[test]
+    fn merge_is_identity_for_one_stream() {
+        let buckets = vec![
+            (0.0, vec![ev(0, 0, 0.0), ev(1, 1, 0.0)]),
+            (1.5, vec![ev(0, 2, 1.25)]),
+            (f64::INFINITY, vec![ev(1, 3, 2.0)]),
+        ];
+        let merged = merge_board_streams(vec![(0, buckets.clone())]);
+        let flat: Vec<EngineEvent> = buckets.into_iter().flat_map(|(_, c)| c).collect();
+        assert_eq!(merged, flat);
+    }
+
+    #[test]
+    fn merge_orders_ties_by_board() {
+        let b0 = vec![(1.0, vec![ev(0, 0, 1.0)])];
+        let b1 = vec![(1.0, vec![ev(1, 1, 1.0)]), (2.0, vec![ev(1, 2, 2.0)])];
+        let merged = merge_board_streams(vec![(1, b1), (0, b0)]);
+        assert_eq!(merged, vec![ev(0, 0, 1.0), ev(1, 1, 1.0), ev(1, 2, 2.0)]);
+    }
+
+    #[test]
+    fn merge_is_invariant_under_stream_permutation() {
+        // Random per-board streams on a shared instant grid (so
+        // cross-board ties are common), merged after shuffling the
+        // stream order: the output must be bit-identical.
+        Cases::new(64).run(|rng| {
+            let boards = rng.range(2, 5);
+            let mut id = 0u64;
+            let mut streams: Vec<(usize, Vec<(f64, Vec<EngineEvent>)>)> = Vec::new();
+            for b in 0..boards {
+                let n_buckets = rng.range(0, 5);
+                let mut buckets = Vec::new();
+                let mut t = 0.0f64;
+                for _ in 0..n_buckets {
+                    t += 0.25 * rng.range(0, 3) as f64;
+                    let n_ev = rng.range(1, 4);
+                    let chunk: Vec<EngineEvent> = (0..n_ev)
+                        .map(|_| {
+                            id += 1;
+                            ev(b, id, t)
+                        })
+                        .collect();
+                    buckets.push((t, chunk));
+                }
+                streams.push((b, buckets));
+            }
+            let baseline = merge_board_streams(streams.clone());
+            let mut shuffled = streams;
+            rng.shuffle(&mut shuffled);
+            assert_eq!(merge_board_streams(shuffled), baseline);
+        });
+    }
+
+    #[test]
+    fn globalize_translates_tenant_fields_and_members() {
+        let residents = [4usize, 7, 2];
+        assert_eq!(
+            globalize(ev(1, 9, 3.0), &residents),
+            EngineEvent::Admitted { tenant: 7, id: 9, at_s: 3.0 }
+        );
+        assert_eq!(
+            globalize(EngineEvent::Packed { members: vec![0, 2], at_s: 1.0 }, &residents),
+            EngineEvent::Packed { members: vec![4, 2], at_s: 1.0 }
+        );
+        let resplit = EngineEvent::Resplit { weights: vec![2, 1], at_s: 1.0 };
+        assert_eq!(globalize(resplit.clone(), &residents), resplit);
+    }
+}

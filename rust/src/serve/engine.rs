@@ -227,6 +227,26 @@ pub enum EngineEvent {
         /// Fabric instant of the composition.
         at_s: f64,
     },
+    /// A tenant was migrated across boards: its pending queue, token
+    /// bucket and (possibly mid-DAG, checkpoint/resumed) in-flight
+    /// batch moved wholesale from board `from` to board `to`. Emitted
+    /// by the cluster layer (see [`super::cluster::FabricCluster`])
+    /// into the merged trace — a single engine never emits it, so
+    /// single-board traces are unchanged.
+    Migrated {
+        /// The migrated tenant (cluster-global index in merged traces).
+        tenant: usize,
+        /// Source board.
+        from: usize,
+        /// Destination board.
+        to: usize,
+        /// Consumed fabric seconds of the checkpointed in-flight
+        /// batch at the migration instant (0.0 if the tenant was
+        /// idle) — the continuity anchor for conservation checks.
+        consumed_s: f64,
+        /// Fabric instant of the migration.
+        at_s: f64,
+    },
 }
 
 /// A composition transition. Every way the fabric can change shape is
@@ -267,6 +287,35 @@ pub enum Transition {
     /// runs, so the engine's walk reproduces the closed-form unified
     /// baseline bit-for-bit.
     Unify,
+}
+
+/// A tenant's complete serving state, checkpointed out of one board's
+/// engine by [`FabricEngine::remove_tenant`] for re-installation on
+/// another board through [`FabricEngine::install_tenant`]. Opaque: it
+/// carries the tenant spec, pending queue, latency histogram,
+/// served/SLO/refusal counters, the fabric-time token bucket, and —
+/// when a batch was mid-DAG — the in-flight [`BatchCursor`] with its
+/// consumed-time ledger intact, so the move is lossless.
+pub struct TenantExtract {
+    spec: TenantSpec,
+    cap: usize,
+    bucket: Option<TokenBucket>,
+    lane: TenantLane,
+    rejected: u64,
+    throttled: u64,
+}
+
+impl TenantExtract {
+    /// The migrating tenant's display name.
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Consumed fabric seconds of the checkpointed in-flight batch
+    /// (0.0 when the tenant was idle at extraction).
+    pub fn inflight_consumed_s(&self) -> f64 {
+        self.lane.busy.as_ref().map_or(0.0, |fl| fl.cursor.consumed_s())
+    }
 }
 
 /// One in-flight batch on a solo partition (closed-form accounting).
@@ -768,6 +817,14 @@ pub struct FabricEngine {
     /// — bridges [`Self::apply_resplit`]'s per-tenant preemption
     /// verdicts into the epoch's sample.
     epoch_decisions: Vec<DecisionSample>,
+    /// Which board of a multi-board cluster this engine is (0 for
+    /// single-engine drivers). Tags shared-cache lookups (cross-board
+    /// warm-hit accounting) and epoch samples.
+    board: usize,
+    /// External arrivals still pending beyond the engine's own trace —
+    /// the cluster's stand-in for [`Self::trace_pending`] in the epoch
+    /// gating term (see [`Self::set_external_pending`]).
+    external_pending: bool,
 }
 
 impl FabricEngine {
@@ -786,6 +843,26 @@ impl FabricEngine {
         arrivals: Vec<Arrival>,
         cache: &ScheduleCache,
     ) -> Result<Self, String> {
+        Self::new_on_board(platform, base, specs, policy, switch_cost_s, arrivals, cache, 0)
+    }
+
+    /// [`Self::new`] for board `board` of a multi-board cluster: the
+    /// engine tags its shared-cache lookups (including the setup
+    /// solves here) with its board identity, so a solve one board paid
+    /// for shows up as a cross-board warm hit when a peer board looks
+    /// the same `(slice, DAG)` key up. Board 0 is bit-for-bit
+    /// [`Self::new`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_on_board(
+        platform: Platform,
+        base: FilcoConfig,
+        specs: Vec<TenantSpec>,
+        policy: Option<PolicyConfig>,
+        switch_cost_s: Option<f64>,
+        arrivals: Vec<Arrival>,
+        cache: &ScheduleCache,
+        board: usize,
+    ) -> Result<Self, String> {
         if specs.is_empty() {
             return Err("no tenants".into());
         }
@@ -799,10 +876,14 @@ impl FabricEngine {
         let scheds: Vec<Arc<CachedSchedule>> = parts
             .iter()
             .zip(&specs)
-            .map(|(part, t)| cache.get_or_compute(&platform, &part.config(&base), &t.dag))
+            .map(|(part, t)| {
+                cache.get_or_compute_from(&platform, &part.config(&base), &t.dag, board)
+            })
             .collect();
         let dims: Vec<(u32, u32)> = parts.iter().map(|p| (p.n_fmus(), p.m_cus())).collect();
-        Ok(Self::scaffold(platform, base, specs, policy, recon, scheds, dims, arrivals))
+        let mut eng = Self::scaffold(platform, base, specs, policy, recon, scheds, dims, arrivals);
+        eng.board = board;
+        Ok(eng)
     }
 
     /// Build the engine in the *unified* composition: the whole fabric
@@ -919,6 +1000,8 @@ impl FabricEngine {
             trace: None,
             timeline: None,
             epoch_decisions: Vec::new(),
+            board: 0,
+            external_pending: false,
             specs,
         }
     }
@@ -935,6 +1018,29 @@ impl FabricEngine {
     /// [`Self::record_trace`] was enabled).
     pub fn take_trace(&mut self) -> Vec<EngineEvent> {
         self.trace.take().unwrap_or_default()
+    }
+
+    /// Drain the recorded trace so far, leaving recording enabled —
+    /// the cluster's per-step collection point (unlike
+    /// [`Self::take_trace`], which detaches the recorder).
+    pub fn drain_trace(&mut self) -> Vec<EngineEvent> {
+        self.trace.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// Which board of a multi-board cluster this engine is (0 unless
+    /// built with [`Self::new_on_board`]).
+    pub fn board(&self) -> usize {
+        self.board
+    }
+
+    /// Tell the engine whether external arrivals are still pending
+    /// beyond its own trace. The cluster holds the global arrival
+    /// stream and feeds boards through [`Self::push`], so this flag
+    /// stands in for [`Self::trace_pending`] in the epoch gating term
+    /// — keeping a cluster board's epoch schedule identical to a
+    /// single engine ingesting the same arrivals itself.
+    pub fn set_external_pending(&mut self, pending: bool) {
+        self.external_pending = pending;
     }
 
     /// Sample engine state and policy decisions at every epoch into an
@@ -1107,6 +1213,7 @@ impl FabricEngine {
             || (preempt_on && self.lanes.iter().any(|l| l.busy.is_some()))
             || self.packs.iter().any(|pk| !pk.il.is_empty())
             || self.trace_pending()
+            || self.external_pending
     }
 
     /// The partitioned-mode step body: decompose the fabric into
@@ -1467,6 +1574,8 @@ impl FabricEngine {
                 lock_held_ns: self.lock_meter.as_ref().map_or(0, |m| m.held_ns()),
                 dse_stall_ns: cache.stall_ns(),
                 coalesced_solves: cache.coalesced_solves(),
+                cross_board_hits: cache.cross_board_hits(),
+                board: self.board,
                 decisions: std::mem::take(&mut self.epoch_decisions),
             };
             if let Some(tl) = self.timeline.as_mut() {
@@ -1701,7 +1810,12 @@ impl FabricEngine {
                 self.packs[pki].t = self.packs[pki].t.max(now) + switch;
                 self.lanes[g[0]].fabric_s += switch;
                 for &m in g {
-                    let ns = cache.get_or_compute(&self.platform, &slice, &self.specs[m].dag);
+                    let ns = cache.get_or_compute_from(
+                        &self.platform,
+                        &slice,
+                        &self.specs[m].dag,
+                        self.board,
+                    );
                     // Parked members (no live slot) report Ok(false);
                     // a step-count mismatch would mean the cache handed
                     // back a schedule for a different DAG.
@@ -1716,7 +1830,8 @@ impl FabricEngine {
                 continue;
             }
             let t = g[0];
-            let new_sched = cache.get_or_compute(&self.platform, &slice, &self.specs[t].dag);
+            let new_sched =
+                cache.get_or_compute_from(&self.platform, &slice, &self.specs[t].dag, self.board);
             let mut preempt = false;
             if preempt_on {
                 if let Some(fl) = self.lanes[t].busy.as_ref() {
@@ -1889,6 +2004,161 @@ impl FabricEngine {
             tr.extend(out.iter().cloned());
         }
         out
+    }
+
+    // ---- cross-board migration -------------------------------------------
+
+    /// May this engine release a tenant right now? True when the
+    /// engine is partitioned (not unified), has no packed groups, no
+    /// unconsumed own-trace arrivals, and more than one tenant — the
+    /// preconditions [`Self::remove_tenant`] enforces. Cluster
+    /// placement uses this to filter migration candidates without
+    /// mutating anything.
+    pub fn migratable(&self) -> bool {
+        self.unified.is_none()
+            && self.packs.is_empty()
+            && !self.trace_pending()
+            && self.specs.len() > 1
+    }
+
+    /// May this engine accept a migrated tenant right now? True when
+    /// the engine is partitioned (not unified) and has no packed
+    /// groups — the preconditions [`Self::install_tenant`] enforces.
+    /// Checked *before* the source board extracts, so a migration can
+    /// never strand a [`TenantExtract`] between boards.
+    pub fn can_host_migrant(&self) -> bool {
+        self.unified.is_none() && self.packs.is_empty()
+    }
+
+    /// Checkpoint tenant `t` out of this engine for cross-board
+    /// migration: commit its in-flight cursor's retired layer steps,
+    /// detach its spec, queue, token bucket, counters and (possibly
+    /// mid-DAG) batch, and re-split the remaining tenants over the
+    /// freed fabric at their current weights. The re-split is
+    /// setup-like: it neither counts into [`Self::switches`] nor
+    /// charges incumbents — the migration cost is charged where the
+    /// tenant lands ([`Self::install_tenant`]). Refused while unified,
+    /// while any pack exists, while own-trace arrivals are unconsumed,
+    /// or for the last tenant (see [`Self::migratable`]).
+    pub fn remove_tenant(
+        &mut self,
+        t: usize,
+        now: f64,
+        cache: &ScheduleCache,
+    ) -> Result<TenantExtract, String> {
+        if self.unified.is_some() {
+            return Err("cannot extract a tenant from the unified composition".into());
+        }
+        if !self.packs.is_empty() {
+            return Err("cannot extract a tenant while packed groups exist".into());
+        }
+        if self.trace_pending() {
+            return Err("cannot extract a tenant with unconsumed trace arrivals".into());
+        }
+        if t >= self.specs.len() {
+            return Err(format!("no tenant {t}"));
+        }
+        if self.specs.len() == 1 {
+            return Err("cannot extract the last tenant".into());
+        }
+        let mut lane = self.lanes.remove(t);
+        if let Some(fl) = lane.busy.as_mut() {
+            // Commit the layer steps that retired by `now` (idempotent
+            // with the epoch sync), so the checkpoint's consumed-time
+            // ledger is exact at the migration instant.
+            while fl.cursor.peek_consumed_s().is_some_and(|c| fl.start_s + c <= now) {
+                let _ = fl.cursor.advance();
+            }
+            debug_assert!(!fl.cursor.is_done(), "a done batch would have retired in the step");
+        }
+        let ex = TenantExtract {
+            spec: self.specs.remove(t),
+            cap: self.caps.remove(t),
+            bucket: self.buckets.remove(t),
+            lane,
+            rejected: self.rejected.remove(t),
+            throttled: self.throttled.remove(t),
+        };
+        self.weights.remove(t);
+        self.scheds.remove(t);
+        self.per_req.remove(t);
+        self.dims.remove(t);
+        self.resplit_residents(cache)?;
+        Ok(ex)
+    }
+
+    /// Install a tenant checkpointed off another board: append its
+    /// spec, queue, bucket and (possibly mid-DAG) batch, re-split the
+    /// fabric over all residents (the newcomer at weight 1), and
+    /// charge `migration_cost_s` to the newcomer only — onto its
+    /// in-flight cursor's ledger when a batch is mid-DAG (its final
+    /// [`EngineEvent::BatchDone`] `consumed_s` then carries the
+    /// charge, like a preemption's switch cost), or onto its
+    /// availability and fabric-time ledger when idle. Incumbents'
+    /// in-flight batches keep draining on their old schedules (the
+    /// non-preempt re-split semantics, minus the reprogram charge,
+    /// which the migration cost subsumes). Returns the tenant's index
+    /// on this engine. Refused while unified or while packs exist.
+    pub fn install_tenant(
+        &mut self,
+        ex: TenantExtract,
+        now: f64,
+        migration_cost_s: f64,
+        cache: &ScheduleCache,
+    ) -> Result<usize, String> {
+        if self.unified.is_some() {
+            return Err("cannot install a tenant into the unified composition".into());
+        }
+        if !self.packs.is_empty() {
+            return Err("cannot install a tenant while packed groups exist".into());
+        }
+        let t = self.specs.len();
+        self.specs.push(ex.spec);
+        self.caps.push(ex.cap);
+        self.buckets.push(ex.bucket);
+        self.lanes.push(ex.lane);
+        self.rejected.push(ex.rejected);
+        self.throttled.push(ex.throttled);
+        self.weights.push(1);
+        // Placeholders; `resplit_residents` rewrites all three.
+        self.scheds.push(self.scheds[0].clone());
+        self.per_req.push(0.0);
+        self.dims.push((0, 0));
+        self.resplit_residents(cache)?;
+        let lane = &mut self.lanes[t];
+        if let Some(fl) = lane.busy.as_mut() {
+            let extra = (lane.avail - fl.fin_s()).max(0.0);
+            fl.cursor
+                .retarget(self.scheds[t].clone(), migration_cost_s)
+                .map_err(|e| format!("migrated cursor re-base failed: {e:?}"))?;
+            lane.avail = fl.fin_s() + extra;
+        } else {
+            lane.avail = lane.avail.max(now) + migration_cost_s;
+            lane.fabric_s += migration_cost_s;
+        }
+        Ok(t)
+    }
+
+    /// Re-split every current tenant over the whole fabric at the
+    /// current weights without charging anyone — the migration
+    /// bookkeeping split shared by [`Self::remove_tenant`] and
+    /// [`Self::install_tenant`]. Counts as setup (`setup_switches`),
+    /// so [`Self::switches`] is unchanged.
+    fn resplit_residents(&mut self, cache: &ScheduleCache) -> Result<(), String> {
+        let named: Vec<(&str, u32)> =
+            self.specs.iter().zip(&self.weights).map(|(s, &w)| (s.name.as_str(), w)).collect();
+        let parts = self.recon.split(&named)?;
+        debug_assert!(self.recon.validate().is_ok());
+        self.setup_switches += 1;
+        for (i, part) in parts.iter().enumerate() {
+            let slice = part.config(&self.base);
+            let ns =
+                cache.get_or_compute_from(&self.platform, &slice, &self.specs[i].dag, self.board);
+            self.per_req[i] = ns.per_request_s;
+            self.scheds[i] = ns;
+            self.dims[i] = (part.n_fmus(), part.m_cus());
+        }
+        Ok(())
     }
 
     // ---- accessors -------------------------------------------------------

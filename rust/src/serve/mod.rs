@@ -93,6 +93,12 @@
 //!   first-fit-decreasing group proposal ([`pack_groups`]).
 //! * [`engine`] — the deterministic execution core shared by both
 //!   drivers (see above).
+//! * [`cluster`] — M boards, one engine each: share-driven first-fit
+//!   placement, per-epoch imbalance-driven cross-board migration
+//!   (lossless mid-DAG cursor checkpointing through one
+//!   [`ClusterTransition`] site), and the order-stable deterministic
+//!   merge of per-board event streams. A cluster of one board runs
+//!   bit-for-bit identical to the bare engine.
 //! * [`clock`] — the [`Clock`] trait with its [`VirtualClock`] and
 //!   [`WallClock`]/[`Pacer`] implementations.
 //! * [`sim`] — the virtual-time driver and the [`ServeReport`]
@@ -113,6 +119,7 @@
 
 pub mod cache;
 pub mod clock;
+pub mod cluster;
 pub mod engine;
 pub mod interleave;
 pub mod policy;
@@ -130,6 +137,10 @@ pub use cache::{
     dag_fingerprint, BackgroundSolver, CachedSchedule, DseTuning, ScheduleCache, SolveRequest,
 };
 pub use clock::{Clock, Pacer, VirtualClock, WallClock};
+pub use cluster::{
+    first_fit_placement, merge_board_streams, BoardId, ClusterPolicy, ClusterReport,
+    ClusterTransition, FabricCluster,
+};
 pub use engine::{EngineEvent, FabricEngine, Transition};
 pub use interleave::{InterleaveEvent, Interleaver};
 pub use policy::{
@@ -146,8 +157,8 @@ pub use scheduler::{
     TenantReport,
 };
 pub use sim::{
-    equal_split_per_request, simulate, simulate_instrumented, simulate_traced, Scenario,
-    ServeReport, Strategy,
+    equal_split_per_request, simulate, simulate_cluster, simulate_cluster_traced,
+    simulate_instrumented, simulate_traced, Scenario, ServeReport, Strategy,
 };
 pub use telemetry::{
     event_from_json, event_to_json, report_from_json, report_to_json, trace_to_jsonl, write_trace,

@@ -44,10 +44,21 @@
 //!   machinery statically disabled;
 //! * **wall-clock latency accounting** — fabric-time histograms live in
 //!   the engine; the shells record each request's wall latency when its
-//!   batch's [`EngineEvent::BatchDone`] fires.
+//!   batch's [`EngineEvent::BatchDone`] fires;
+//! * **multi-board hosting** — with [`LiveConfig::boards`] `> 1` the
+//!   scheduler owns M engines behind per-board mutexes (tenants
+//!   first-fit-placed by declared fabric share, exactly like the
+//!   virtual-time [`FabricCluster`](super::FabricCluster)), and a
+//!   single placement thread migrates tenants across boards when the
+//!   queued-backlog imbalance crosses the [`ClusterPolicy`]
+//!   hysteresis — checkpointing a (possibly mid-DAG) batch cursor
+//!   losslessly and charging the configured migration cost on the
+//!   destination board. Lock order is placement map first, then board
+//!   mutexes ascending; a cluster of one board runs the classic
+//!   single-fabric paths bit-for-bit.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -57,6 +68,7 @@ use crate::platform::Platform;
 
 use super::cache::{BackgroundSolver, ScheduleCache};
 use super::clock::{Clock, WallClock};
+use super::cluster::{first_fit_placement, ClusterPolicy};
 use super::engine::{EngineEvent, FabricEngine};
 use super::policy::PolicyConfig;
 use super::queue::PushError;
@@ -107,6 +119,15 @@ pub struct LiveConfig {
     /// wake solve concurrently
     /// ([`BackgroundSolver::spawn_pool`](super::BackgroundSolver::spawn_pool)).
     pub dse_workers: usize,
+    /// Independent fabric boards hosted by this scheduler (1 = the
+    /// classic single-fabric scheduler, bit-for-bit). Tenants are
+    /// placed by declared fabric share
+    /// ([`first_fit_placement`](super::cluster::first_fit_placement)).
+    pub boards: usize,
+    /// Cross-board placement/migration policy: its `epoch_s` paces the
+    /// placement thread in wall seconds. Active only when `boards > 1`
+    /// and the mode is [`LiveMode::Dynamic`].
+    pub cluster: ClusterPolicy,
 }
 
 impl Default for LiveConfig {
@@ -118,6 +139,8 @@ impl Default for LiveConfig {
             max_sleep: Duration::from_millis(100),
             shards: 1,
             dse_workers: 1,
+            boards: 1,
+            cluster: ClusterPolicy::default(),
         }
     }
 }
@@ -200,6 +223,9 @@ pub struct LiveReport {
     pub packed_batches: u64,
     /// Size of every pack group formed, in transition order.
     pub pack_group_sizes: Vec<usize>,
+    /// Cross-board tenant migrations performed by the placement thread
+    /// (always 0 on a single board).
+    pub migrations: u64,
     /// Schedule-cache activity during this run only (the cache may be
     /// shared with calibration or simulation phases).
     pub cache_hits: u64,
@@ -251,7 +277,7 @@ impl LiveReport {
         }
         s.push_str(&format!(
             "  {} re-compositions ({} preemptive) | {} packs {:?}, {} unpacks, {} swaps, \
-             {} packed batches | worst p99 {:.3e} s | \
+             {} packed batches | {} migrations | worst p99 {:.3e} s | \
              schedule cache: {} hits, {} misses | {:.2} s wall",
             self.switches,
             self.preemptions,
@@ -260,6 +286,7 @@ impl LiveReport {
             self.unpacks,
             self.pack_swaps,
             self.packed_batches,
+            self.migrations,
             self.worst_p99_s(),
             self.cache_hits,
             self.cache_misses,
@@ -288,46 +315,76 @@ pub struct SchedulerSnapshot {
     pub now_s: f64,
 }
 
-/// State behind the one engine lock: the deterministic core plus the
-/// shell-side bookkeeping that pairs live requests with engine events.
+/// State behind one board's engine lock: the deterministic core plus
+/// the shell-side bookkeeping that pairs live requests with engine
+/// events. All indexing in here is *board-local*; `residents`
+/// translates back to the scheduler's global tenant space.
 struct Shared {
     engine: FabricEngine,
-    /// The wall↔fabric mapping all shells share. Re-anchored
+    /// The wall↔fabric mapping this board's shells share. Re-anchored
     /// ([`WallClock::resync`]) when a push lands on an idle engine, so
     /// idle wall time is never banked as pacing lead — without that, a
     /// burst after a producer gap would drain unpaced at host speed.
     clock: WallClock,
-    /// Admitted-but-unfinished requests per tenant, in engine order
-    /// (the engine serves each tenant strictly FIFO, so `BatchDone`
-    /// events pop from the front).
+    /// Admitted-but-unfinished requests per local tenant, in engine
+    /// order (the engine serves each tenant strictly FIFO, so
+    /// `BatchDone` events pop from the front).
     reqs: Vec<VecDeque<LiveRequest>>,
     /// Wall-clock latency histograms, recorded at `BatchDone`.
     hist: Vec<LatencyHistogram>,
+    /// `residents[l]` is the global index of this board's local tenant
+    /// `l` — kept in lock-step with the engine's lane order (and with
+    /// the scheduler's placement map) across migrations.
+    residents: Vec<usize>,
     closed: bool,
     finished: bool,
 }
 
-/// Live multi-tenant scheduler over a dynamically re-partitioned
-/// fabric: producer threads [`Self::push`] into the shared
-/// [`FabricEngine`]; worker shells drive it under wall pacing.
+/// One board of the live cluster: an engine (plus its shell-side
+/// bookkeeping) behind its own mutex, with its own condvar so pushes
+/// and migrations wake only the shells driving this board.
+struct BoardCell {
+    shared: Mutex<Shared>,
+    cv: Condvar,
+}
+
+/// Live multi-tenant scheduler over one or more dynamically
+/// re-partitioned fabric boards: producer threads [`Self::push`] into
+/// the owning board's [`FabricEngine`]; per-board worker shells drive
+/// the engines under wall pacing; on a multi-board cluster a single
+/// placement thread migrates tenants across boards when the backlog
+/// imbalance crosses the [`ClusterPolicy`] hysteresis. With
+/// `boards == 1` (the default) every code path reduces to the classic
+/// single-fabric scheduler, bit-for-bit.
+///
+/// Lock order everywhere: `placement` first, then board mutexes in
+/// ascending board order — so a push's placement lookup and the
+/// placement thread's migration can never deadlock.
 pub struct FabricScheduler {
     cache: Arc<ScheduleCache>,
     cfg: LiveConfig,
-    shared: Mutex<Shared>,
-    cv: Condvar,
+    /// The boards, each behind its own mutex (ascending lock order).
+    boards: Vec<BoardCell>,
+    /// Global tenant → (board, board-local index). Held while a push
+    /// resolves its target board (released only after the board lock
+    /// is taken, so a migration cannot move the tenant in between).
+    placement: Mutex<Vec<(usize, usize)>>,
+    /// Cross-board migrations performed so far.
+    migrations: AtomicU64,
     stop_policy: AtomicBool,
     /// Deterministic-ingest mode ([`Self::with_arrivals`]): the engine
     /// consumes its own virtual-time trace and the idle-relaxation
     /// shell stays out of the way, so the run replays the simulator.
+    /// Requires a single board.
     deterministic: bool,
-    /// Engine-mutex hold-time meter, fed by [`Self::push`] and
-    /// [`Self::policy_step`] and shared with the engine's timeline
-    /// sampling.
+    /// Engine-mutex hold-time meter (shared by every board), fed by
+    /// [`Self::push`] and [`Self::policy_step`] and shared with the
+    /// engines' timeline sampling.
     lock_meter: Arc<LockMeter>,
     /// The async-DSE solver thread, spawned when the policy opts in
     /// ([`PolicyConfig::async_solve`], [`LiveMode::Dynamic`] only).
-    /// Declared after `shared`: the engine's requester channel clone
-    /// drops with `shared` first, so the solver's shutdown join can
+    /// Declared after `boards`: the engines' requester channel clones
+    /// drop with `boards` first, so the solver's shutdown join can
     /// observe a disconnected queue and terminate.
     background: Option<BackgroundSolver>,
 }
@@ -372,56 +429,103 @@ impl FabricScheduler {
         arrivals: Vec<Arrival>,
         deterministic: bool,
     ) -> Result<Self, String> {
-        let t_n = specs.len();
+        if deterministic && cfg.boards != 1 {
+            return Err("deterministic arrival ingest requires a single board".into());
+        }
+        // Share-driven first-fit placement — the same initial placement
+        // the virtual-time cluster computes.
+        let assignment = first_fit_placement(&specs, cfg.boards)?;
+        let mut residents: Vec<Vec<usize>> = vec![Vec::new(); cfg.boards];
+        let mut placement = vec![(0usize, 0usize); specs.len()];
+        for (g, &b) in assignment.iter().enumerate() {
+            placement[g] = (b, residents[b].len());
+            residents[b].push(g);
+        }
         // The async-DSE solver works against the same shared cache and
-        // platform; spawn it before the engine so the engine can hold
+        // platform; spawn it before the engines so each engine can hold
         // a requester channel from construction.
         let background = (cfg.mode == LiveMode::Dynamic && cfg.policy.async_solve).then(|| {
             BackgroundSolver::spawn_pool(platform.clone(), cache.clone(), cfg.dse_workers.max(1))
         });
-        let mut engine = match cfg.mode {
-            // The unified and static compositions run no policy: the
-            // fabric's shape is fixed for the whole run.
-            LiveMode::Unified => {
-                FabricEngine::new_unified(platform, base, specs, None, arrivals, &cache)?
-            }
-            LiveMode::StaticEqual => {
-                FabricEngine::new(platform, base, specs, None, None, arrivals, &cache)?
-            }
-            LiveMode::Dynamic => {
-                // Policy epochs live on the engine's fabric timeline; a
-                // paced run converts the wall-clock epoch through the
-                // timescale (an unpaced run drains at host speed, where
-                // the configured value is the only meaningful fabric
-                // budget).
-                let mut policy = cfg.policy.clone();
-                if cfg.timescale > 0.0 {
-                    policy.epoch_s = cfg.policy.epoch_s / cfg.timescale;
-                }
-                FabricEngine::new(platform, base, specs, Some(policy), None, arrivals, &cache)?
-            }
-        };
-        engine.eager_completions(true);
-        engine.set_shards(cfg.shards);
         let lock_meter = Arc::new(LockMeter::new());
-        engine.set_lock_meter(lock_meter.clone());
-        if let Some(solver) = &background {
-            engine.set_solve_channel(solver.requester());
-        }
-        if deterministic {
-            engine.record_trace(true);
+        let mut boards = Vec::with_capacity(cfg.boards);
+        for (b, locals) in residents.into_iter().enumerate() {
+            let board_specs: Vec<TenantSpec> =
+                locals.iter().map(|&g| specs[g].clone()).collect();
+            let n_local = board_specs.len();
+            // Deterministic ingest is single-board, so the whole trace
+            // belongs to board 0 (the only board).
+            let board_arrivals = if b == 0 { arrivals.clone() } else { Vec::new() };
+            let mut engine = match cfg.mode {
+                // The unified and static compositions run no policy:
+                // each board's shape is fixed for the whole run.
+                LiveMode::Unified => FabricEngine::new_unified(
+                    platform.clone(),
+                    base.clone(),
+                    board_specs,
+                    None,
+                    board_arrivals,
+                    &cache,
+                )?,
+                LiveMode::StaticEqual => FabricEngine::new_on_board(
+                    platform.clone(),
+                    base.clone(),
+                    board_specs,
+                    None,
+                    None,
+                    board_arrivals,
+                    &cache,
+                    b,
+                )?,
+                LiveMode::Dynamic => {
+                    // Policy epochs live on the engine's fabric
+                    // timeline; a paced run converts the wall-clock
+                    // epoch through the timescale (an unpaced run
+                    // drains at host speed, where the configured value
+                    // is the only meaningful fabric budget).
+                    let mut policy = cfg.policy.clone();
+                    if cfg.timescale > 0.0 {
+                        policy.epoch_s = cfg.policy.epoch_s / cfg.timescale;
+                    }
+                    FabricEngine::new_on_board(
+                        platform.clone(),
+                        base.clone(),
+                        board_specs,
+                        Some(policy),
+                        None,
+                        board_arrivals,
+                        &cache,
+                        b,
+                    )?
+                }
+            };
+            engine.eager_completions(true);
+            engine.set_shards(cfg.shards);
+            engine.set_lock_meter(lock_meter.clone());
+            if let Some(solver) = &background {
+                engine.set_solve_channel(solver.requester());
+            }
+            if deterministic {
+                engine.record_trace(true);
+            }
+            boards.push(BoardCell {
+                shared: Mutex::new(Shared {
+                    engine,
+                    clock: WallClock::new(cfg.timescale, cfg.max_sleep),
+                    reqs: (0..n_local).map(|_| VecDeque::new()).collect(),
+                    hist: vec![LatencyHistogram::new(); n_local],
+                    residents: locals,
+                    closed: false,
+                    finished: false,
+                }),
+                cv: Condvar::new(),
+            });
         }
         Ok(Self {
             cache,
-            shared: Mutex::new(Shared {
-                engine,
-                clock: WallClock::new(cfg.timescale, cfg.max_sleep),
-                reqs: (0..t_n).map(|_| VecDeque::new()).collect(),
-                hist: vec![LatencyHistogram::new(); t_n],
-                closed: false,
-                finished: false,
-            }),
-            cv: Condvar::new(),
+            boards,
+            placement: Mutex::new(placement),
+            migrations: AtomicU64::new(0),
             stop_policy: AtomicBool::new(false),
             deterministic,
             lock_meter,
@@ -430,29 +534,43 @@ impl FabricScheduler {
         })
     }
 
-    /// Number of tenants this scheduler serves.
+    /// Number of tenants this scheduler serves (across every board).
     pub fn num_tenants(&self) -> usize {
-        self.shared.lock().unwrap().engine.num_tenants()
+        self.placement.lock().unwrap().len()
     }
 
-    /// A consistent point-in-time view of the composition, read under
-    /// one lock acquisition — the accessor callers use instead of
+    /// Number of fabric boards this scheduler hosts.
+    pub fn num_boards(&self) -> usize {
+        self.boards.len()
+    }
+
+    /// Cross-board migrations performed so far.
+    pub fn migrations(&self) -> u64 {
+        self.migrations.load(Ordering::Relaxed)
+    }
+
+    /// A consistent point-in-time view of the composition (global
+    /// tenant indexing), read under the placement lock plus one lock
+    /// acquisition per board — the accessor callers use instead of
     /// stitching together per-field reads (each of which would take
-    /// and release the engine mutex, interleaving with transitions).
+    /// and release locks, interleaving with transitions). `now_s` is
+    /// the furthest board's fabric clock.
     pub fn snapshot(&self) -> SchedulerSnapshot {
-        let s = self.shared.lock().unwrap();
-        let n = s.engine.num_tenants();
-        SchedulerSnapshot {
-            num_tenants: n,
-            hosts: (0..n).map(|t| s.engine.host(t)).collect(),
-            composition: (0..n)
-                .map(|t| {
-                    let (fmus, cus) = s.engine.dims(t);
-                    (s.engine.tenant_name(t).to_string(), fmus, cus)
-                })
-                .collect(),
-            now_s: s.engine.now_s(),
+        let placement = self.placement.lock().unwrap();
+        let n = placement.len();
+        let mut hosts = vec![0usize; n];
+        let mut composition = vec![(String::new(), 0u32, 0u32); n];
+        let mut now_s = 0.0f64;
+        for cell in &self.boards {
+            let s = cell.shared.lock().unwrap();
+            now_s = now_s.max(s.engine.now_s());
+            for (l, &g) in s.residents.iter().enumerate() {
+                hosts[g] = s.residents[s.engine.host(l)];
+                let (fmus, cus) = s.engine.dims(l);
+                composition[g] = (s.engine.tenant_name(l).to_string(), fmus, cus);
+            }
         }
+        SchedulerSnapshot { num_tenants: n, hosts, composition, now_s }
     }
 
     /// Admission-controlled enqueue for tenant `t`: closed check, then
@@ -462,18 +580,27 @@ impl FabricScheduler {
     /// *is* the engine's one admission path. The engine-lock hold time
     /// is metered into [`Self::stall_stats`] and the epoch timeline.
     pub fn push(&self, t: usize, req: LiveRequest) -> Result<(), PushError> {
-        let mut s = self.shared.lock().unwrap();
+        // Resolve the tenant's board under the placement lock and keep
+        // holding it until the board lock is taken: a migration (which
+        // acquires the same locks in the same order) can then never
+        // move the tenant between the lookup and the enqueue.
+        let placement = self.placement.lock().unwrap();
+        let (b, local) = placement[t];
+        let cell = &self.boards[b];
+        let mut s = cell.shared.lock().unwrap();
+        drop(placement);
         let t0 = Instant::now();
-        let res = self.push_locked(&mut s, t, req);
+        let res = self.push_locked(&mut s, local, req);
         self.lock_meter.record_ns(t0.elapsed().as_nanos() as u64);
         drop(s);
         if res.is_ok() {
-            self.cv.notify_all();
+            cell.cv.notify_all();
         }
         res
     }
 
-    /// The body of [`Self::push`], under the caller-held engine lock.
+    /// The body of [`Self::push`], under the caller-held board lock;
+    /// `t` is the tenant's board-local index.
     fn push_locked(&self, s: &mut Shared, t: usize, req: LiveRequest) -> Result<(), PushError> {
         if s.closed {
             return Err(PushError::Closed);
@@ -504,22 +631,28 @@ impl FabricScheduler {
         Ok(())
     }
 
-    /// Close ingress; the run ends once the engine drains.
+    /// Close ingress; the run ends once every board's engine drains.
     pub fn close(&self) {
-        self.shared.lock().unwrap().closed = true;
-        self.cv.notify_all();
+        for cell in &self.boards {
+            cell.shared.lock().unwrap().closed = true;
+            cell.cv.notify_all();
+        }
     }
 
-    /// Force one policy evaluation at the engine's current fabric
-    /// instant (the epoch schedule is untouched). Returns true when
-    /// the composition changed. Public so step-driven callers (and
-    /// tests) can exercise the policy without the wall-clock loop. The
-    /// engine-lock hold time is metered into [`Self::stall_stats`].
+    /// Force one policy evaluation on every board at its current
+    /// fabric instant (the epoch schedules are untouched). Returns
+    /// true when any board's composition changed. Public so
+    /// step-driven callers (and tests) can exercise the policy without
+    /// the wall-clock loop. The engine-lock hold times are metered
+    /// into [`Self::stall_stats`].
     pub fn policy_step(&self) -> bool {
-        let mut s = self.shared.lock().unwrap();
-        let t0 = Instant::now();
-        let changed = s.engine.epoch_now(&self.cache);
-        self.lock_meter.record_ns(t0.elapsed().as_nanos() as u64);
+        let mut changed = false;
+        for cell in &self.boards {
+            let mut s = cell.shared.lock().unwrap();
+            let t0 = Instant::now();
+            changed |= s.engine.epoch_now(&self.cache);
+            self.lock_meter.record_ns(t0.elapsed().as_nanos() as u64);
+        }
         changed
     }
 
@@ -535,61 +668,93 @@ impl FabricScheduler {
             dse_stall_ns: self.cache.stall_ns(),
             dse_stalls: self.cache.stalls(),
             coalesced_solves: self.cache.coalesced_solves(),
+            cross_board_hits: self.cache.cross_board_hits(),
         }
     }
 
-    /// Drop every request still pending for tenant `t` (not yet in a
-    /// batch), returning how many were discarded — an operational
+    /// Drop every request still pending for global tenant `t` (not yet
+    /// in a batch), returning how many were discarded — an operational
     /// shed-load aid, also used by tests to empty a backlog.
     pub fn drain_pending(&self, t: usize) -> usize {
-        let mut s = self.shared.lock().unwrap();
-        let n = s.engine.drain_pending(t);
+        let placement = self.placement.lock().unwrap();
+        let (b, local) = placement[t];
+        let mut s = self.boards[b].shared.lock().unwrap();
+        drop(placement);
+        let n = s.engine.drain_pending(local);
         for _ in 0..n {
-            s.reqs[t].pop_back();
+            s.reqs[local].pop_back();
         }
         n
     }
 
     /// The engine event trace recorded so far (empty unless built with
     /// [`Self::with_arrivals`]). Call after [`Self::run`] returns.
+    /// Deterministic tracing is single-board, so this reads board 0.
     pub fn take_trace(&self) -> Vec<EngineEvent> {
-        self.shared.lock().unwrap().engine.take_trace()
+        self.boards[0].shared.lock().unwrap().engine.take_trace()
     }
 
     /// Enable or disable engine event tracing for this run (on by
     /// construction in [`Self::with_arrivals`]; call before
     /// [`Self::run`] to capture a trace from an externally-pushed live
-    /// run, e.g. `filco serve --mode live --trace-out`).
+    /// run, e.g. `filco serve --mode live --trace-out`). Live tracing
+    /// captures board 0's engine — on a multi-board cluster the CLI
+    /// refuses `--trace-out` rather than emit a partial trace.
     pub fn record_trace(&self, on: bool) {
-        self.shared.lock().unwrap().engine.record_trace(on);
+        self.boards[0].shared.lock().unwrap().engine.record_trace(on);
     }
 
     /// Enable or disable per-epoch timeline sampling
-    /// ([`super::telemetry::EpochSample`]). Only meaningful in
-    /// [`LiveMode::Dynamic`] — fixed compositions run no policy epochs,
-    /// so their timelines stay empty.
+    /// ([`super::telemetry::EpochSample`]) on every board. Only
+    /// meaningful in [`LiveMode::Dynamic`] — fixed compositions run no
+    /// policy epochs, so their timelines stay empty.
     pub fn record_timeline(&self, on: bool) {
-        self.shared.lock().unwrap().engine.record_timeline(on);
+        for cell in &self.boards {
+            cell.shared.lock().unwrap().engine.record_timeline(on);
+        }
     }
 
-    /// The epoch samples recorded so far (empty unless
-    /// [`Self::record_timeline`] was enabled). Call after [`Self::run`]
-    /// returns.
+    /// The epoch samples recorded so far across every board (empty
+    /// unless [`Self::record_timeline`] was enabled), merged in
+    /// `(at_s, board)` order. Call after [`Self::run`] returns.
     pub fn take_timeline(&self) -> Vec<super::telemetry::EpochSample> {
-        self.shared.lock().unwrap().engine.take_timeline()
+        let mut flat: Vec<super::telemetry::EpochSample> = self
+            .boards
+            .iter()
+            .flat_map(|cell| cell.shared.lock().unwrap().engine.take_timeline())
+            .collect();
+        flat.sort_by(|a, b| a.at_s.total_cmp(&b.at_s).then(a.board.cmp(&b.board)));
+        flat
     }
 
     /// The engine-side fabric-time report for this run, in the same
-    /// shape the simulator emits ([`super::ServeReport`]) — the footer a
-    /// recorded live trace is verified against. Call after
-    /// [`Self::run`] returns.
+    /// shape the simulator emits ([`super::ServeReport`]) — the footer
+    /// a recorded live trace is verified against. On a multi-board
+    /// cluster the per-board reports are merged back into global
+    /// tenant indexing ([`super::cluster`]'s scatter merge). Call
+    /// after [`Self::run`] returns.
     pub fn serve_report(&self) -> super::ServeReport {
         let label = match self.cfg.mode {
             LiveMode::Unified => "unified",
             LiveMode::StaticEqual => "static-equal",
             LiveMode::Dynamic => "dynamic",
         };
-        super::sim::report_from_engine(&self.shared.lock().unwrap().engine, label)
+        if self.boards.len() == 1 {
+            return super::sim::report_from_engine(
+                &self.boards[0].shared.lock().unwrap().engine,
+                label,
+            );
+        }
+        let placement = self.placement.lock().unwrap();
+        let n = placement.len();
+        let mut per_board = Vec::with_capacity(self.boards.len());
+        let mut residents = Vec::with_capacity(self.boards.len());
+        for cell in &self.boards {
+            let s = cell.shared.lock().unwrap();
+            per_board.push(super::sim::report_from_engine(&s.engine, label));
+            residents.push(s.residents.clone());
+        }
+        super::cluster::merge_reports(label, &per_board, &residents, n)
     }
 
     /// Record wall latencies for the batches an engine step completed.
@@ -605,17 +770,18 @@ impl FabricScheduler {
         }
     }
 
-    /// The worker shell: one bounded drive pass per iteration — ask
-    /// the engine for its next fabric instant; if it is due on the
-    /// wall clock, step the engine under the same lock hold, otherwise
-    /// wait toward the deadline on the condvar (so an earlier-event
-    /// push wakes the shell). Exits once ingress is closed and the
-    /// engine has drained.
-    fn worker_loop(&self) {
+    /// The worker shell for board `b`: one bounded drive pass per
+    /// iteration — ask the board's engine for its next fabric instant;
+    /// if it is due on the wall clock, step the engine under the same
+    /// lock hold, otherwise wait toward the deadline on the board's
+    /// condvar (so an earlier-event push wakes the shell). Exits once
+    /// ingress is closed and the engine has drained.
+    fn worker_loop(&self, b: usize) {
+        let cell = &self.boards[b];
         let max_sleep_s = self.cfg.max_sleep.as_secs_f64().max(1e-3);
         loop {
             let lead_s = {
-                let mut s = self.shared.lock().unwrap();
+                let mut s = cell.shared.lock().unwrap();
                 if s.finished {
                     return;
                 }
@@ -626,17 +792,17 @@ impl FabricScheduler {
                         Self::record(&mut s, &events);
                         s.finished = true;
                         drop(s);
-                        self.cv.notify_all();
+                        cell.cv.notify_all();
                         return;
                     }
-                    let _ = self.cv.wait_timeout(s, Duration::from_millis(20)).unwrap();
+                    let _ = cell.cv.wait_timeout(s, Duration::from_millis(20)).unwrap();
                     continue;
                 }
                 let Some(t) = s.engine.next_time() else {
                     // In-flight work whose completion needs no event
                     // can only appear with eager completions off; park
                     // briefly and re-check.
-                    let _ = self.cv.wait_timeout(s, Duration::from_millis(20)).unwrap();
+                    let _ = cell.cv.wait_timeout(s, Duration::from_millis(20)).unwrap();
                     continue;
                 };
                 let lead_s = s.clock.lead_s(t);
@@ -651,14 +817,14 @@ impl FabricScheduler {
             // released, capped so shutdown and re-planning stay
             // responsive; any push re-wakes us through the condvar.
             let wait = Duration::from_secs_f64(lead_s.min(max_sleep_s));
-            let s = self.shared.lock().unwrap();
-            let _ = self.cv.wait_timeout(s, wait).unwrap();
+            let s = cell.shared.lock().unwrap();
+            let _ = cell.cv.wait_timeout(s, wait).unwrap();
         }
     }
 
-    /// The policy shell: epochs fire on the engine's fabric timeline
+    /// The policy shell: epochs fire on each engine's fabric timeline
     /// while work flows; this thread only relaxes an idle, skewed
-    /// fabric back to the equal split between bursts (a shape the
+    /// board back to its equal split between bursts (a shape the
     /// schedule cache has always seen).
     fn policy_loop(&self) {
         let epoch = Duration::from_secs_f64(self.cfg.policy.epoch_s.max(1e-3));
@@ -675,73 +841,265 @@ impl FabricScheduler {
             if self.stop_policy.load(Ordering::Relaxed) || self.deterministic {
                 continue;
             }
-            let mut s = self.shared.lock().unwrap();
-            if !s.finished
-                && !s.engine.has_work()
-                && !s.engine.trace_pending()
-                && !s.engine.weights_equal()
-            {
-                s.engine.epoch_now(&self.cache);
+            for cell in &self.boards {
+                let mut s = cell.shared.lock().unwrap();
+                if !s.finished
+                    && !s.engine.has_work()
+                    && !s.engine.trace_pending()
+                    && !s.engine.weights_equal()
+                {
+                    s.engine.epoch_now(&self.cache);
+                }
             }
         }
     }
 
-    /// Run the worker and policy shells until ingress is closed and
-    /// the engine has drained. Producers push concurrently from other
-    /// threads via [`Self::push`].
+    /// Step board state `s` through every event instant up to `target`
+    /// and land its fabric clock there — the pre-migration
+    /// synchronization that retires due completions before a cursor is
+    /// checkpointed (mirroring the virtual-time cluster, where both
+    /// boards always sit at the same global instant).
+    fn drive_to(s: &mut Shared, target: f64, cache: &ScheduleCache) {
+        while let Some(t) = s.engine.next_time() {
+            if t > target {
+                break;
+            }
+            let events = s.engine.step(t, cache);
+            Self::record(s, &events);
+        }
+        if s.engine.now_s() < target {
+            let events = s.engine.step(target, cache);
+            Self::record(s, &events);
+        }
+    }
+
+    /// The placement shell (multi-board [`LiveMode::Dynamic`] only):
+    /// every [`ClusterPolicy::epoch_s`] wall seconds, compare per-board
+    /// queued-backlog times and — when the max/min ratio crosses the
+    /// re-armed `imbalance_hi` threshold — migrate the one tenant that
+    /// most reduces the worst board's backlog, checkpointing its
+    /// (possibly mid-DAG) batch losslessly and charging
+    /// [`ClusterPolicy::migration_cost_s`] on the destination.
+    fn placement_loop(&self) {
+        let epoch = Duration::from_secs_f64(self.cfg.cluster.epoch_s.max(1e-3));
+        let slice = epoch.min(Duration::from_millis(20));
+        let mut slept = Duration::ZERO;
+        // Hysteresis: a migration disarms the trigger until the ratio
+        // decays below `imbalance_lo`, so one sustained skew cannot
+        // thrash tenants back and forth.
+        let mut armed = true;
+        while !self.stop_policy.load(Ordering::Relaxed) {
+            std::thread::sleep(slice);
+            slept += slice;
+            if slept < epoch {
+                continue;
+            }
+            slept = Duration::ZERO;
+            if self.stop_policy.load(Ordering::Relaxed) {
+                continue;
+            }
+            self.placement_epoch(&mut armed);
+        }
+    }
+
+    /// One placement evaluation under the full lock set (placement,
+    /// then every board ascending — the global lock order). Returns
+    /// true when a migration was performed.
+    fn placement_epoch(&self, armed: &mut bool) -> bool {
+        let p = self.cfg.cluster;
+        let mut placement = self.placement.lock().unwrap();
+        let mut shareds: Vec<_> =
+            self.boards.iter().map(|cell| cell.shared.lock().unwrap()).collect();
+        if shareds.iter().any(|s| s.finished) {
+            return false;
+        }
+        // Queued-only backlog time per board: in-flight work finishes
+        // where it runs either way, so it is no reason to migrate.
+        let backlog: Vec<f64> = shareds
+            .iter()
+            .map(|s| {
+                (0..s.engine.num_tenants())
+                    .map(|l| s.engine.pending_len(l) as f64 * s.engine.per_request_s(l))
+                    .sum()
+            })
+            .collect();
+        let min = backlog.iter().copied().fold(f64::INFINITY, f64::min);
+        let max = backlog.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let ratio = if min <= 0.0 && max > 0.0 {
+            f64::INFINITY
+        } else if max <= 0.0 {
+            0.0
+        } else {
+            max / min
+        };
+        if ratio <= p.imbalance_lo {
+            *armed = true;
+        }
+        if !*armed || ratio < p.imbalance_hi {
+            return false;
+        }
+        let src = (0..backlog.len())
+            .fold(0, |best, b| if backlog[b] > backlog[best] { b } else { best });
+        let dst = (0..backlog.len())
+            .fold(0, |best, b| if backlog[b] < backlog[best] { b } else { best });
+        if src == dst
+            || !shareds[src].engine.migratable()
+            || !shareds[dst].engine.can_host_migrant()
+        {
+            return false;
+        }
+        // Candidate: the source tenant whose departure minimizes the
+        // post-migration worst of the two boards — and strictly
+        // improves on the source's backlog, so a migration is never a
+        // lateral move.
+        let mut best: Option<(usize, usize, f64)> = None; // (local, global, post)
+        for l in 0..shareds[src].engine.num_tenants() {
+            let se = &shareds[src].engine;
+            let bt = se.pending_len(l) as f64 * se.per_request_s(l);
+            if bt < p.min_gain_s {
+                continue;
+            }
+            let post = (backlog[src] - bt).max(backlog[dst] + bt);
+            if post >= backlog[src] {
+                continue;
+            }
+            let g = shareds[src].residents[l];
+            if best.is_none_or(|(_, bg, bp)| post < bp || (post == bp && g < bg)) {
+                best = Some((l, g, post));
+            }
+        }
+        let Some((local, g, _)) = best else { return false };
+        // Synchronize both engines on one fabric instant before the
+        // checkpoint, so due completions retire on their home board.
+        let target = shareds[src].engine.now_s().max(shareds[dst].engine.now_s());
+        Self::drive_to(&mut shareds[src], target, &self.cache);
+        Self::drive_to(&mut shareds[dst], target, &self.cache);
+        // Stepping runs policy epochs, which may pack — re-check the
+        // preconditions the checkpoint relies on.
+        if !shareds[src].engine.migratable() || !shareds[dst].engine.can_host_migrant() {
+            return false;
+        }
+        let Ok(ex) = shareds[src].engine.remove_tenant(local, target, &self.cache) else {
+            return false;
+        };
+        let new_local = shareds[dst]
+            .engine
+            .install_tenant(ex, target, p.migration_cost_s, &self.cache)
+            .expect("install after can_host_migrant");
+        // Move the shell-side bookkeeping with the tenant and repair
+        // both index spaces (engine lanes shifted down on the source).
+        let reqs = shareds[src].reqs.remove(local);
+        let hist = shareds[src].hist.remove(local);
+        shareds[src].residents.remove(local);
+        shareds[dst].reqs.push(reqs);
+        shareds[dst].hist.push(hist);
+        shareds[dst].residents.push(g);
+        debug_assert_eq!(new_local + 1, shareds[dst].residents.len());
+        placement[g] = (dst, new_local);
+        for (l2, &g2) in shareds[src].residents.iter().enumerate() {
+            placement[g2] = (src, l2);
+        }
+        self.migrations.fetch_add(1, Ordering::Relaxed);
+        *armed = false;
+        drop(shareds);
+        self.boards[src].cv.notify_all();
+        self.boards[dst].cv.notify_all();
+        true
+    }
+
+    /// Run the worker, policy and placement shells until ingress is
+    /// closed and every board's engine has drained. Producers push
+    /// concurrently from other threads via [`Self::push`].
     ///
-    /// One worker shell is spawned per tenant. The shells serialize on
-    /// the engine lock, so the extra threads buy liveness (a shell
-    /// stuck in a long pacing wait never stalls the run; any other
-    /// shell picks up the next due instant), not parallelism — engine
-    /// stepping is deliberately single-site.
+    /// One worker shell is spawned per tenant, bound to the tenant's
+    /// initial board. A board's shells serialize on its lock, so the
+    /// extra threads buy liveness (a shell stuck in a long pacing wait
+    /// never stalls the board; any sibling picks up the next due
+    /// instant), not parallelism — each engine's stepping is
+    /// deliberately single-site. Boards, however, genuinely step in
+    /// parallel: they share nothing but the schedule cache.
     pub fn run(&self) -> LiveReport {
         let t0 = Instant::now();
         // The cache may be shared with calibration / sim phases; report
         // only this run's activity.
         let (hits0, misses0) = (self.cache.hits(), self.cache.misses());
-        let n = self.num_tenants();
+        let board_workers: Vec<usize> = self
+            .boards
+            .iter()
+            .map(|cell| cell.shared.lock().unwrap().residents.len().max(1))
+            .collect();
         std::thread::scope(|s| {
-            let workers: Vec<_> = (0..n).map(|_| s.spawn(|| self.worker_loop())).collect();
+            let workers: Vec<_> = board_workers
+                .iter()
+                .enumerate()
+                .flat_map(|(b, &n)| (0..n).map(move |_| b))
+                .map(|b| s.spawn(move || self.worker_loop(b)))
+                .collect();
             // Fixed compositions (unified / static) run no policy, so
-            // no relaxation shell is spawned for them.
+            // no relaxation or placement shell is spawned for them.
             let policy =
                 (self.cfg.mode == LiveMode::Dynamic).then(|| s.spawn(|| self.policy_loop()));
-            // Stop the policy thread before propagating any worker
-            // panic: panicking while it still runs would leave the
-            // scope blocked on a loop that never observes the flag.
+            let placement = (self.cfg.mode == LiveMode::Dynamic && self.boards.len() > 1)
+                .then(|| s.spawn(|| self.placement_loop()));
+            // Stop the policy threads before propagating any worker
+            // panic: panicking while they still run would leave the
+            // scope blocked on loops that never observe the flag.
             let worker_panicked =
                 workers.into_iter().map(|w| usize::from(w.join().is_err())).sum::<usize>();
             self.stop_policy.store(true, Ordering::Relaxed);
             let policy_result = policy.map_or(Ok(()), |p| p.join());
+            let placement_result = placement.map_or(Ok(()), |p| p.join());
             assert_eq!(worker_panicked, 0, "{worker_panicked} worker thread(s) panicked");
             policy_result.expect("policy thread panicked");
+            placement_result.expect("placement thread panicked");
         });
-        let shared = self.shared.lock().unwrap();
-        let engine = &shared.engine;
-        let served = engine.served();
-        let (slo_met, slo_missed, slo_deadlines) =
-            (engine.slo_met(), engine.slo_missed(), engine.slo_deadlines());
+        // Assemble the global report: every counter lives wholesale on
+        // its tenant's final board, so this is a pure scatter.
+        let placement = self.placement.lock().unwrap();
+        let n = placement.len();
+        let mut tenants: Vec<Option<TenantReport>> = vec![None; n];
+        let (mut switches, mut preemptions, mut packs, mut unpacks) = (0, 0, 0, 0);
+        let (mut pack_swaps, mut packed_batches) = (0, 0);
+        let mut pack_group_sizes = Vec::new();
+        for cell in &self.boards {
+            let shared = cell.shared.lock().unwrap();
+            let engine = &shared.engine;
+            let served = engine.served();
+            let (slo_met, slo_missed, slo_deadlines) =
+                (engine.slo_met(), engine.slo_missed(), engine.slo_deadlines());
+            for (l, &g) in shared.residents.iter().enumerate() {
+                tenants[g] = Some(TenantReport {
+                    name: engine.tenant_name(l).to_string(),
+                    served: served[l],
+                    throttled: engine.throttled()[l],
+                    fabric_s: engine.fabric_s(l),
+                    wall_latency: shared.hist[l].clone(),
+                    slo_deadline_s: slo_deadlines[l],
+                    slo_met: slo_met[l],
+                    slo_missed: slo_missed[l],
+                });
+            }
+            switches += engine.switches();
+            preemptions += engine.preemptions();
+            packs += engine.packs();
+            unpacks += engine.unpacks();
+            pack_swaps += engine.pack_swaps();
+            packed_batches += engine.packed_batches();
+            pack_group_sizes.extend_from_slice(engine.pack_group_sizes());
+        }
         LiveReport {
-            tenants: (0..n)
-                .map(|t| TenantReport {
-                    name: engine.tenant_name(t).to_string(),
-                    served: served[t],
-                    throttled: engine.throttled()[t],
-                    fabric_s: engine.fabric_s(t),
-                    wall_latency: shared.hist[t].clone(),
-                    slo_deadline_s: slo_deadlines[t],
-                    slo_met: slo_met[t],
-                    slo_missed: slo_missed[t],
-                })
+            tenants: tenants
+                .into_iter()
+                .map(|t| t.expect("every tenant resides on exactly one board"))
                 .collect(),
-            switches: engine.switches(),
-            preemptions: engine.preemptions(),
-            packs: engine.packs(),
-            unpacks: engine.unpacks(),
-            pack_swaps: engine.pack_swaps(),
-            packed_batches: engine.packed_batches(),
-            pack_group_sizes: engine.pack_group_sizes().to_vec(),
+            switches,
+            preemptions,
+            packs,
+            unpacks,
+            pack_swaps,
+            packed_batches,
+            pack_group_sizes,
+            migrations: self.migrations.load(Ordering::Relaxed),
             cache_hits: self.cache.hits() - hits0,
             cache_misses: self.cache.misses() - misses0,
             wall_s: t0.elapsed().as_secs_f64(),
@@ -800,7 +1158,7 @@ mod tests {
             }
         }
         assert_eq!(rejected, 6);
-        assert_eq!(sched.shared.lock().unwrap().engine.pending_len(1), 0);
+        assert_eq!(sched.boards[0].shared.lock().unwrap().engine.pending_len(1), 0);
         sched.close();
         let report = sched.run();
         assert_eq!(report.total_served(), 4);
@@ -858,7 +1216,7 @@ mod tests {
         assert!(after[0].2 > before[0].2, "tenant a must gain CUs: {before:?} -> {after:?}");
         // No batch in flight: nothing to preempt.
         {
-            let s = sched.shared.lock().unwrap();
+            let s = sched.boards[0].shared.lock().unwrap();
             assert_eq!(s.engine.switches(), 1);
             assert_eq!(s.engine.preemptions(), 0);
         }
@@ -958,7 +1316,7 @@ mod tests {
         }
         assert!(sched.policy_step(), "skew must trigger a re-split");
         {
-            let s = sched.shared.lock().unwrap();
+            let s = sched.boards[0].shared.lock().unwrap();
             assert_eq!(s.engine.packs(), 1, "light pair must pack");
             assert_eq!(s.engine.pack_group_sizes(), &[2]);
         }
@@ -979,7 +1337,7 @@ mod tests {
         }
         assert!(sched.policy_step(), "unpack is a forced re-composition");
         {
-            let s = sched.shared.lock().unwrap();
+            let s = sched.boards[0].shared.lock().unwrap();
             assert_eq!(s.engine.unpacks(), 1, "flooded member must unpack");
         }
         assert_eq!(sched.snapshot().hosts[2], 2);
@@ -1079,7 +1437,7 @@ mod tests {
         assert!(!committed, "cold epoch must defer, not solve under the engine lock");
         assert!(epoch_wall < epoch, "deferring epoch blocked {epoch_wall:?} (> one epoch)");
         assert!(
-            sched.shared.lock().unwrap().engine.deferred_resplits() >= 1,
+            sched.boards[0].shared.lock().unwrap().engine.deferred_resplits() >= 1,
             "the deferral must be counted"
         );
         // Ingress stays bounded by a cache lookup while the solve is

@@ -36,6 +36,7 @@ use crate::platform::Platform;
 
 use super::cache::ScheduleCache;
 use super::clock::{Clock, VirtualClock};
+use super::cluster::{ClusterPolicy, ClusterReport, FabricCluster};
 use super::engine::{EngineEvent, FabricEngine};
 use super::policy::PolicyConfig;
 use super::telemetry::{RunTelemetry, StallStats, TelemetryConfig, TimelineReport};
@@ -293,7 +294,8 @@ pub fn simulate_instrumented(
     engine.set_shards(scenario.shards);
     engine.record_trace(telemetry.trace);
     engine.record_timeline(telemetry.timeline);
-    let stalls0 = (cache.stalls(), cache.stall_ns(), cache.coalesced_solves());
+    let stalls0 =
+        (cache.stalls(), cache.stall_ns(), cache.coalesced_solves(), cache.cross_board_hits());
     let mut profile = super::telemetry::StepProfile::default();
     let mut timed_step = |engine: &mut FabricEngine, now: f64| {
         let t0 = std::time::Instant::now();
@@ -324,8 +326,67 @@ pub fn simulate_instrumented(
         dse_stall_ns: cache.stall_ns() - stalls0.1,
         dse_stalls: cache.stalls() - stalls0.0,
         coalesced_solves: cache.coalesced_solves() - stalls0.2,
+        cross_board_hits: cache.cross_board_hits() - stalls0.3,
     };
     (report, RunTelemetry { trace, timeline, step_profile: profile, stalls })
+}
+
+/// Run `scenario` on a `boards`-board [`FabricCluster`] under
+/// `strategy`. Tenants are placed by declared fabric share
+/// ([`first_fit_placement`](super::cluster::first_fit_placement));
+/// `cluster_policy` enables per-epoch imbalance-driven cross-board
+/// migration (ignored on one board). The driver loop is the same
+/// thin shell as [`simulate`]: the cluster decides *what* happens at
+/// each fabric instant, the virtual clock merely jumps there. On one
+/// board, `report` in the returned [`ClusterReport`] is bit-for-bit
+/// the single-engine [`simulate`] report (the cluster-of-1 guarantee;
+/// `rust/tests/serve_cluster.rs` asserts it with `==` on every f64).
+pub fn simulate_cluster(
+    scenario: &Scenario,
+    strategy: &Strategy,
+    boards: usize,
+    cluster_policy: Option<ClusterPolicy>,
+    cache: &ScheduleCache,
+) -> ClusterReport {
+    simulate_cluster_traced(scenario, strategy, boards, cluster_policy, cache, false).0
+}
+
+/// Like [`simulate_cluster`], optionally recording the cluster-global
+/// event trace — the deterministic merge of every board's stream plus
+/// `Migrated` markers — which the cluster-of-1 differential compares
+/// bit-for-bit against [`simulate_traced`]'s.
+pub fn simulate_cluster_traced(
+    scenario: &Scenario,
+    strategy: &Strategy,
+    boards: usize,
+    cluster_policy: Option<ClusterPolicy>,
+    cache: &ScheduleCache,
+    record_trace: bool,
+) -> (ClusterReport, Vec<EngineEvent>) {
+    let mut cluster = FabricCluster::new(
+        scenario.platform.clone(),
+        scenario.base.clone(),
+        scenario.tenants.clone(),
+        strategy,
+        scenario.switch_cost_s,
+        scenario.arrivals.clone(),
+        boards,
+        cluster_policy,
+        cache,
+    )
+    .expect("cluster setup");
+    cluster.set_shards(scenario.shards);
+    cluster.record_trace(record_trace);
+    let mut clock = VirtualClock::new();
+    cluster.step(clock.now_s(), cache);
+    while let Some(t) = cluster.next_time() {
+        clock.advance_to(t);
+        cluster.step(clock.now_s(), cache);
+    }
+    cluster.finish();
+    let report = cluster.cluster_report();
+    let trace = cluster.take_trace();
+    (report, trace)
 }
 
 pub(crate) fn report_from_engine(engine: &FabricEngine, label: &str) -> ServeReport {

@@ -186,6 +186,14 @@ pub fn event_to_json(ev: &EngineEvent) -> Json {
             m.insert("at_s".to_string(), jnum(*at_s));
             "unified"
         }
+        EngineEvent::Migrated { tenant, from, to, consumed_s, at_s } => {
+            m.insert("tenant".to_string(), junum(*tenant as u64));
+            m.insert("from".to_string(), junum(*from as u64));
+            m.insert("to".to_string(), junum(*to as u64));
+            m.insert("consumed_s".to_string(), jnum(*consumed_s));
+            m.insert("at_s".to_string(), jnum(*at_s));
+            "migrated"
+        }
     };
     m.insert("ev".to_string(), jstr(name));
     Json::Obj(m)
@@ -225,6 +233,13 @@ pub fn event_from_json(v: &Json) -> Result<EngineEvent, String> {
         }),
         "unpacked" => Ok(EngineEvent::Unpacked { members: usize_arr_of(v, "members")?, at_s }),
         "unified" => Ok(EngineEvent::Unified { at_s }),
+        "migrated" => Ok(EngineEvent::Migrated {
+            tenant: tenant()?,
+            from: u64_of(v, "from")? as usize,
+            to: u64_of(v, "to")? as usize,
+            consumed_s: f64_of(v, "consumed_s")?,
+            at_s,
+        }),
         other => Err(format!("unknown event kind {other:?}")),
     }
 }
@@ -574,7 +589,8 @@ impl RecordedTrace {
                 EngineEvent::Unpacked { .. } => unpacks += 1,
                 EngineEvent::BatchStarted { .. }
                 | EngineEvent::PackHandoff { .. }
-                | EngineEvent::Unified { .. } => {}
+                | EngineEvent::Unified { .. }
+                | EngineEvent::Migrated { .. } => {}
             }
         }
         ServeReport {
@@ -686,6 +702,7 @@ impl RecordedTrace {
                 EngineEvent::PackHandoff { at_s, .. } => ("pack_handoff", *at_s),
                 EngineEvent::Unpacked { at_s, .. } => ("unpacked", *at_s),
                 EngineEvent::Unified { at_s } => ("unified", *at_s),
+                EngineEvent::Migrated { at_s, .. } => ("migrated", *at_s),
             };
             *counts.entry(name).or_insert(0) += 1;
             span = (span.0.min(at), span.1.max(at));
@@ -810,6 +827,13 @@ pub struct EpochSample {
     /// they reached the cache so far (cumulative,
     /// [`ScheduleCache::coalesced_solves`](super::cache::ScheduleCache::coalesced_solves)).
     pub coalesced_solves: u64,
+    /// Schedule-cache hits whose entry was populated by a *different*
+    /// board so far (cumulative,
+    /// [`ScheduleCache::cross_board_hits`](super::cache::ScheduleCache::cross_board_hits);
+    /// always 0 on a single-board fabric).
+    pub cross_board_hits: u64,
+    /// Board this sample's engine runs on (0 on a single-board fabric).
+    pub board: usize,
     /// Every decision evaluated this epoch, in evaluation order.
     pub decisions: Vec<DecisionSample>,
 }
@@ -881,6 +905,8 @@ impl TimelineReport {
             m.insert("lock_held_ns".to_string(), junum(s.lock_held_ns));
             m.insert("dse_stall_ns".to_string(), junum(s.dse_stall_ns));
             m.insert("coalesced_solves".to_string(), junum(s.coalesced_solves));
+            m.insert("cross_board_hits".to_string(), junum(s.cross_board_hits));
+            m.insert("board".to_string(), junum(s.board as u64));
             m.insert(
                 "decisions".to_string(),
                 Json::Arr(
@@ -1031,6 +1057,11 @@ pub struct StallStats {
     /// reached the cache (see
     /// [`ScheduleCache::coalesced_solves`](super::cache::ScheduleCache::coalesced_solves)).
     pub coalesced_solves: u64,
+    /// Schedule-cache hits served from an entry another board had
+    /// already populated (see
+    /// [`ScheduleCache::cross_board_hits`](super::cache::ScheduleCache::cross_board_hits);
+    /// always 0 on a single-board fabric).
+    pub cross_board_hits: u64,
 }
 
 /// Everything an instrumented run recorded beyond its report.
@@ -1065,6 +1096,7 @@ mod tests {
             EngineEvent::PackHandoff { tenant: 1, consumed_s: 0.05, at_s: 3.0 },
             EngineEvent::Unpacked { members: vec![1, 2], at_s: 4.0 },
             EngineEvent::Unified { at_s: 0.0 },
+            EngineEvent::Migrated { tenant: 2, from: 0, to: 1, consumed_s: 0.015, at_s: 5.0 },
         ];
         for ev in &evs {
             let line = event_to_json(ev).to_string_compact();
@@ -1195,6 +1227,8 @@ mod tests {
                 lock_held_ns: 1500,
                 dse_stall_ns: 0,
                 coalesced_solves: 0,
+                cross_board_hits: 0,
+                board: 0,
                 decisions: vec![DecisionSample {
                     kind: DecisionKind::Resplit,
                     tenants: vec![],

@@ -245,7 +245,11 @@ impl BatchCursor {
     /// Re-base the remaining steps onto `sched` at the current layer
     /// boundary, charging `switch_charge_s` (the mid-DAG reconfiguration
     /// cost) into the batch's consumed time. Completed work keeps its
-    /// old-schedule accounting.
+    /// old-schedule accounting. Two callers rely on this invariance:
+    /// mid-DAG preemption onto a re-split slice, and cross-board
+    /// migration (the charge is then the
+    /// [`ClusterPolicy::migration_cost_s`](super::cluster::ClusterPolicy::migration_cost_s)
+    /// landing on the destination board's slice).
     ///
     /// `sched` must walk the same DAG timeline (one step per layer, so
     /// the step counts must match); a mismatched schedule is refused

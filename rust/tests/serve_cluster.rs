@@ -1,0 +1,514 @@
+//! Acceptance tests for the multi-board cluster layer.
+//!
+//! 1. **Cluster-of-1 is the single engine, bit for bit**: for every
+//!    strategy and every seed in the matrix, a one-board
+//!    [`FabricCluster`] run produces the *identical* event trace and an
+//!    identical report — every counter, every histogram bucket, every
+//!    `f64` asserted with `==` — as the plain single-engine simulator.
+//!    The same holds for the live scheduler hosting one board.
+//! 2. **Migration is lossless and exactly charged**: moving an idle
+//!    tenant charges exactly the configured migration cost onto its
+//!    fabric-time ledger; moving a tenant whose batch is in flight
+//!    lands the batch with its undisturbed solo fabric time plus
+//!    exactly the charge (`==` on `f64`s when the checkpoint is at the
+//!    walk's start, a 1-ulp-tight relative bound mid-DAG where float
+//!    re-association is unavoidable), and total fabric time obeys
+//!    `Σ fabric_s == baseline + migrations × cost`.
+//! 3. **M-board runs are deterministic and placement pays off**: the
+//!    same skewed scenario run twice merges to the same trace and
+//!    report, and the placement/migration layer strictly beats static
+//!    board pinning on the worst-tenant p99.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use filco::arch::FilcoConfig;
+use filco::dse::Solver;
+use filco::platform::Platform;
+use filco::serve::{
+    equal_split_per_request, poisson_trace, simulate_cluster, simulate_cluster_traced,
+    simulate_traced, Arrival, ClusterPolicy, ClusterTransition, EngineEvent, FabricCluster,
+    FabricScheduler, LatencyHistogram, LiveConfig, LiveMode, LiveRequest, PolicyConfig, Scenario,
+    ScheduleCache, ServeReport, Strategy, TenantSpec,
+};
+use filco::workload::zoo;
+
+fn small_solver() -> Solver {
+    Solver::Ga { population: 16, generations: 20, seed: 42 }
+}
+
+/// Seed whose single-engine trace is known rich (re-splits and packs);
+/// the cluster-of-1 differential must survive it like any other.
+const RICH_SEED: u64 = 4711;
+
+/// Seed matrix for the differentials (override with a comma-separated
+/// `FILCO_TEST_SEEDS`, same contract as `serve_engine.rs`).
+fn test_seeds() -> Vec<u64> {
+    match std::env::var("FILCO_TEST_SEEDS") {
+        Ok(s) => s
+            .split(',')
+            .map(|x| {
+                x.trim().parse().unwrap_or_else(|_| {
+                    panic!("FILCO_TEST_SEEDS must be comma-separated integers; bad token {x:?}")
+                })
+            })
+            .collect(),
+        Err(_) => vec![RICH_SEED, 271_828, 3_141_592],
+    }
+}
+
+/// The skewed 3-tenant scenario the single-engine differential pins
+/// down: heavy Poisson pressure on one tenant, light on two, with
+/// preemption and packing both live — so the cluster-of-1 run has to
+/// reproduce re-splits, preemptions, packs and unpacks, not just a
+/// quiet queue drain.
+fn rich_scenario(cache: &ScheduleCache, seed: u64) -> (Scenario, PolicyConfig, f64) {
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let cap = 1 << 22;
+    let tenants = vec![
+        TenantSpec::new("heavy", zoo::mlp_l()).with_queue_capacity(cap),
+        TenantSpec::new("s1", zoo::mlp_s()).with_queue_capacity(cap),
+        TenantSpec::new("s2", zoo::pointnet()).with_queue_capacity(cap),
+    ];
+    let per = equal_split_per_request(&platform, &base, &tenants, cache);
+    let arrivals =
+        poisson_trace(&[2.5 / per[0], 0.05 / per[1], 0.05 / per[2]], 60.0 * per[0], seed);
+    assert!(arrivals.len() > 50, "calibrated trace too small: {}", arrivals.len());
+    let policy = PolicyConfig {
+        pack_swap_margin: 10.0,
+        ..PolicyConfig::calibrated(per[0]).with_packing()
+    };
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, policy, per[0])
+}
+
+/// Power-of-two wall timescale (see `serve_engine.rs`): the live
+/// scheduler's wall→fabric epoch conversion round-trips bit-exactly.
+fn pow2_timescale(fabric_total_s: f64) -> f64 {
+    2f64.powi((0.5 / fabric_total_s).log2().floor() as i32)
+}
+
+fn assert_hists_equal(a: &LatencyHistogram, b: &LatencyHistogram, ctx: &str) {
+    assert_eq!(a.buckets(), b.buckets(), "{ctx}: histogram buckets");
+    assert_eq!(a.count(), b.count(), "{ctx}: histogram count");
+    assert_eq!(a.sum_s(), b.sum_s(), "{ctx}: histogram sum");
+    assert_eq!(a.min_s(), b.min_s(), "{ctx}: histogram min");
+    assert_eq!(a.max_s(), b.max_s(), "{ctx}: histogram max");
+}
+
+/// Field-by-field report equality, `==` on every `f64` — the
+/// cluster-of-1 claim is bit-for-bit, not approximately-equal.
+fn assert_reports_equal(a: &ServeReport, b: &ServeReport, ctx: &str) {
+    assert_eq!(a.strategy, b.strategy, "{ctx}: strategy");
+    assert_eq!(a.completion_s, b.completion_s, "{ctx}: completion_s");
+    assert_eq!(a.served, b.served, "{ctx}: served");
+    assert_eq!(a.rejected, b.rejected, "{ctx}: rejected");
+    assert_eq!(a.throttled, b.throttled, "{ctx}: throttled");
+    assert_eq!(a.switches, b.switches, "{ctx}: switches");
+    assert_eq!(a.preemptions, b.preemptions, "{ctx}: preemptions");
+    assert_eq!(a.packs, b.packs, "{ctx}: packs");
+    assert_eq!(a.unpacks, b.unpacks, "{ctx}: unpacks");
+    assert_eq!(a.pack_swaps, b.pack_swaps, "{ctx}: pack_swaps");
+    assert_eq!(a.pack_group_sizes, b.pack_group_sizes, "{ctx}: pack_group_sizes");
+    assert_eq!(a.epochs, b.epochs, "{ctx}: epochs");
+    assert_eq!(a.slo_deadline_s, b.slo_deadline_s, "{ctx}: slo_deadline_s");
+    assert_eq!(a.slo_met, b.slo_met, "{ctx}: slo_met");
+    assert_eq!(a.slo_missed, b.slo_missed, "{ctx}: slo_missed");
+    assert_eq!(a.histograms.len(), b.histograms.len(), "{ctx}: tenant count");
+    for (i, (x, y)) in a.histograms.iter().zip(&b.histograms).enumerate() {
+        assert_hists_equal(x, y, &format!("{ctx}: tenant {i}"));
+    }
+}
+
+#[test]
+fn cluster_of_one_matches_the_single_engine_bit_for_bit() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    for seed in test_seeds() {
+        let (sc, policy, _per0) = rich_scenario(&cache, seed);
+        let strategies =
+            [Strategy::Unified, Strategy::StaticEqual, Strategy::Dynamic(policy.clone())];
+        for strat in &strategies {
+            let ctx = format!("seed {seed} {}", strat.label());
+            let (solo, solo_trace) = simulate_traced(&sc, strat, &cache, true);
+            // A cluster policy is supplied on purpose: one board must
+            // ignore it (no peer to migrate to, no placement epochs in
+            // the trace).
+            let (crep, ctrace) = simulate_cluster_traced(
+                &sc,
+                strat,
+                1,
+                Some(ClusterPolicy::default()),
+                &cache,
+                true,
+            );
+            assert!(!solo_trace.is_empty(), "{ctx}: the differential needs a real trace");
+            assert_eq!(ctrace.len(), solo_trace.len(), "{ctx}: event counts");
+            for (i, (c, s)) in ctrace.iter().zip(&solo_trace).enumerate() {
+                assert_eq!(c, s, "{ctx}: trace diverges at event {i}");
+            }
+            assert_eq!(crep.migrations, 0, "{ctx}: one board cannot migrate");
+            assert_eq!(crep.placement_epochs, 0, "{ctx}: one board runs no placement epochs");
+            assert_eq!(crep.per_board.len(), 1, "{ctx}");
+            assert_eq!(crep.residents, vec![vec![0, 1, 2]], "{ctx}: spec-order placement");
+            assert_reports_equal(&crep.report, &solo, &format!("{ctx}: merged report"));
+            assert_reports_equal(&crep.per_board[0], &solo, &format!("{ctx}: board report"));
+        }
+    }
+}
+
+#[test]
+fn live_cluster_of_one_matches_the_cluster_sim() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let (sc, policy, per0) = rich_scenario(&cache, RICH_SEED);
+
+    let (crep, ctrace) = simulate_cluster_traced(
+        &sc,
+        &Strategy::Dynamic(policy.clone()),
+        1,
+        Some(ClusterPolicy::default()),
+        &cache,
+        true,
+    );
+
+    let timescale = pow2_timescale(70.0 * per0);
+    let live_cfg = LiveConfig {
+        policy: PolicyConfig { epoch_s: policy.epoch_s * timescale, ..policy },
+        mode: LiveMode::Dynamic,
+        timescale,
+        max_sleep: Duration::from_millis(100),
+        boards: 1,
+        ..LiveConfig::default()
+    };
+    let sched = FabricScheduler::with_arrivals(
+        sc.platform.clone(),
+        sc.base.clone(),
+        sc.tenants.clone(),
+        cache.clone(),
+        live_cfg,
+        sc.arrivals.clone(),
+    )
+    .expect("live scheduler");
+    sched.close();
+    let live_report = sched.run();
+    let live_trace = sched.take_trace();
+
+    assert_eq!(live_trace.len(), ctrace.len(), "event counts must match");
+    for (i, (l, c)) in live_trace.iter().zip(&ctrace).enumerate() {
+        assert_eq!(l, c, "live vs cluster sim: trace diverges at event {i}");
+    }
+    assert_eq!(live_report.migrations, 0, "one live board cannot migrate");
+    assert_eq!(
+        live_report.tenants.iter().map(|t| t.served).collect::<Vec<_>>(),
+        crep.report.served,
+    );
+}
+
+// ---- migration conservation -----------------------------------------------
+
+/// Three identical tenants: default shares place `a`,`b` on board 0 and
+/// `c` on board 1, and identical DAGs mean every half-board slice
+/// resolves to the *same* cached schedule on either board — which is
+/// what makes the conservation claims exact.
+fn identical_tenants() -> Vec<TenantSpec> {
+    vec![
+        TenantSpec::new("a", zoo::mlp_s()).with_queue_capacity(64),
+        TenantSpec::new("b", zoo::mlp_s()).with_queue_capacity(64),
+        TenantSpec::new("c", zoo::mlp_s()).with_queue_capacity(64),
+    ]
+}
+
+/// A 2-board cluster whose placement epochs never fire (infinite
+/// epoch), so every migration in these tests is applied manually.
+fn manual_cluster(arrivals: Vec<Arrival>, cost: f64, cache: &ScheduleCache) -> FabricCluster {
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    FabricCluster::new(
+        platform,
+        base,
+        identical_tenants(),
+        &Strategy::StaticEqual,
+        None,
+        arrivals,
+        2,
+        Some(ClusterPolicy {
+            epoch_s: f64::INFINITY,
+            migration_cost_s: cost,
+            ..ClusterPolicy::default()
+        }),
+        cache,
+    )
+    .expect("cluster setup")
+}
+
+/// Drain a cluster the way the sim driver does, collecting every event.
+fn drive(cluster: &mut FabricCluster, cache: &ScheduleCache) -> Vec<EngineEvent> {
+    let mut events = cluster.step(0.0, cache);
+    while let Some(t) = cluster.next_time() {
+        events.extend(cluster.step(t, cache));
+    }
+    events.extend(cluster.finish());
+    events
+}
+
+fn batch_done_consumed(events: &[EngineEvent], tenant: usize) -> f64 {
+    events
+        .iter()
+        .find_map(|e| match e {
+            EngineEvent::BatchDone { tenant: t, consumed_s, .. } if *t == tenant => {
+                Some(*consumed_s)
+            }
+            _ => None,
+        })
+        .expect("the tenant's batch must complete")
+}
+
+fn total_fabric_s(cluster: &FabricCluster) -> f64 {
+    (0..cluster.num_tenants()).map(|t| cluster.fabric_s(t)).sum()
+}
+
+#[test]
+fn migrating_an_idle_tenant_charges_exactly_the_configured_cost() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let cost = 0.125;
+    let mut cluster = manual_cluster(Vec::new(), cost, &cache);
+    assert_eq!(cluster.locate(0), (0, 0));
+    assert_eq!(cluster.locate(1), (0, 1));
+    assert_eq!(cluster.locate(2), (1, 0));
+    assert_eq!(cluster.fabric_s(1), 0.0);
+
+    let ev = cluster
+        .apply(ClusterTransition::Migrate { tenant: 1, to: 1 }, 0.0, &cache)
+        .expect("idle migration");
+    assert_eq!(
+        ev,
+        Some(EngineEvent::Migrated { tenant: 1, from: 0, to: 1, consumed_s: 0.0, at_s: 0.0 })
+    );
+    assert_eq!(cluster.fabric_s(1), cost, "idle migration charges exactly the cost");
+    assert_eq!(cluster.locate(1), (1, 1));
+    assert_eq!(cluster.residents()[0], vec![0]);
+    assert_eq!(cluster.residents()[1], vec![2, 1]);
+    assert_eq!(cluster.migrations(), 1);
+
+    // A second hop charges again — the ledger travels with the tenant.
+    cluster
+        .apply(ClusterTransition::Migrate { tenant: 1, to: 0 }, 0.0, &cache)
+        .expect("migrate back");
+    assert_eq!(cluster.fabric_s(1), cost + cost);
+    assert_eq!(cluster.migrations(), 2);
+
+    // Residency guards: no self-moves, and a board never loses its
+    // last tenant.
+    assert!(cluster.apply(ClusterTransition::Migrate { tenant: 1, to: 0 }, 0.0, &cache).is_err());
+    assert!(
+        cluster.apply(ClusterTransition::Migrate { tenant: 2, to: 0 }, 0.0, &cache).is_err(),
+        "board 1's last tenant must not be extractable"
+    );
+}
+
+#[test]
+fn migrating_an_inflight_batch_is_lossless_plus_exactly_the_cost() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let cost = 0.125;
+    let arrivals = vec![Arrival { t_s: 0.0, tenant: 1, id: 0 }];
+
+    // Baseline: the batch runs to completion on its home board.
+    let mut base = manual_cluster(arrivals.clone(), cost, &cache);
+    let base_events = drive(&mut base, &cache);
+    let solo = batch_done_consumed(&base_events, 1);
+    assert!(solo > 0.0);
+    let base_total = total_fabric_s(&base);
+
+    // Migrated: checkpoint the in-flight cursor at the walk's start
+    // (no layer retired yet), land it on board 1, run to completion.
+    // With the checkpoint ledger at zero the final consumed time is
+    // float-exactly the solo walk plus the charge.
+    let mut migr = manual_cluster(arrivals, cost, &cache);
+    let mut events = migr.step(0.0, &cache);
+    assert!(
+        events.iter().any(|e| matches!(e, EngineEvent::BatchStarted { tenant: 1, .. })),
+        "the batch must be in flight at the migration instant"
+    );
+    let ev = migr
+        .apply(ClusterTransition::Migrate { tenant: 1, to: 1 }, 0.0, &cache)
+        .expect("in-flight migration")
+        .expect("a migration event");
+    match ev {
+        EngineEvent::Migrated { tenant, from, to, consumed_s, .. } => {
+            assert_eq!((tenant, from, to), (1, 0, 1));
+            assert_eq!(consumed_s, 0.0, "no layer has retired at the walk's start");
+        }
+        other => panic!("expected a Migrated event, got {other:?}"),
+    }
+    while let Some(t) = migr.next_time() {
+        events.extend(migr.step(t, &cache));
+    }
+    events.extend(migr.finish());
+
+    let landed = batch_done_consumed(&events, 1);
+    assert_eq!(landed, solo + cost, "lossless: solo walk plus exactly the migration charge");
+    assert_eq!(
+        total_fabric_s(&migr),
+        base_total + migr.migrations() as f64 * cost,
+        "total fabric time is conserved up to exactly migrations x cost"
+    );
+}
+
+#[test]
+fn migrating_mid_dag_conserves_the_walk_within_float_reassociation() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let cost = 0.125;
+    let arrivals = vec![Arrival { t_s: 0.0, tenant: 1, id: 0 }];
+
+    let mut base = manual_cluster(arrivals.clone(), cost, &cache);
+    let solo = batch_done_consumed(&drive(&mut base, &cache), 1);
+
+    let mut migr = manual_cluster(arrivals, cost, &cache);
+    let mut events = migr.step(0.0, &cache);
+    let done_at = migr.next_time().expect("a batch is in flight");
+    let mid = 0.5 * done_at;
+    events.extend(migr.step(mid, &cache));
+    let ev = migr
+        .apply(ClusterTransition::Migrate { tenant: 1, to: 1 }, mid, &cache)
+        .expect("mid-DAG migration")
+        .expect("a migration event");
+    let at_checkpoint = match ev {
+        EngineEvent::Migrated { consumed_s, .. } => consumed_s,
+        other => panic!("expected a Migrated event, got {other:?}"),
+    };
+    assert!(
+        at_checkpoint > 0.0 && at_checkpoint < solo,
+        "the checkpoint must land mid-DAG: {at_checkpoint} of {solo}"
+    );
+    while let Some(t) = migr.next_time() {
+        events.extend(migr.step(t, &cache));
+    }
+    events.extend(migr.finish());
+
+    // The re-based remainder is valued on the *same* shared-cache
+    // schedule, so the only slack is the ledger's re-association of
+    // (consumed + cost) + remaining — ulps, bounded tightly here.
+    let landed = batch_done_consumed(&events, 1);
+    assert!(landed > solo, "the migration charge must show up in the walk");
+    let err = ((landed - (solo + cost)) / (solo + cost)).abs();
+    assert!(err < 1e-12, "mid-DAG conservation drift {err} (landed {landed}, solo {solo})");
+}
+
+// ---- multi-board determinism and the placement win ------------------------
+
+/// Skewed load on a 2-board placement: `a` floods and `b` queues behind
+/// it on board 0 while `c` idles on board 1 — exactly the imbalance the
+/// placement epoch exists to dissolve.
+fn skewed_scenario(cache: &ScheduleCache) -> (Scenario, f64) {
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let tenants: Vec<TenantSpec> = identical_tenants()
+        .into_iter()
+        .map(|t| t.with_queue_capacity(1 << 14).with_max_batch(4))
+        .collect();
+    let per = equal_split_per_request(&platform, &base, &tenants, cache);
+    let mut arrivals = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..40 {
+        arrivals.push(Arrival { t_s: 0.0, tenant: 0, id });
+        id += 1;
+    }
+    for _ in 0..20 {
+        arrivals.push(Arrival { t_s: 0.0, tenant: 1, id });
+        id += 1;
+    }
+    arrivals.push(Arrival { t_s: 0.0, tenant: 2, id });
+    (Scenario { platform, base, tenants, arrivals, switch_cost_s: None, shards: 1 }, per[0])
+}
+
+#[test]
+fn two_board_runs_are_deterministic() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let (sc, per) = skewed_scenario(&cache);
+    let policy = Some(ClusterPolicy::calibrated(per));
+    let (rep_a, trace_a) =
+        simulate_cluster_traced(&sc, &Strategy::StaticEqual, 2, policy, &cache, true);
+    let (rep_b, trace_b) =
+        simulate_cluster_traced(&sc, &Strategy::StaticEqual, 2, policy, &cache, true);
+    assert_eq!(trace_a.len(), trace_b.len(), "event counts must repeat");
+    for (i, (a, b)) in trace_a.iter().zip(&trace_b).enumerate() {
+        assert_eq!(a, b, "repeat run diverges at event {i}");
+    }
+    assert_eq!(rep_a.migrations, rep_b.migrations);
+    assert_eq!(rep_a.placement_epochs, rep_b.placement_epochs);
+    assert_eq!(rep_a.residents, rep_b.residents);
+    assert_reports_equal(&rep_a.report, &rep_b.report, "repeat run");
+}
+
+#[test]
+fn placement_and_migration_beat_static_pinning_on_worst_tenant_p99() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let (sc, per) = skewed_scenario(&cache);
+
+    let pinned = simulate_cluster(&sc, &Strategy::StaticEqual, 2, None, &cache);
+    assert_eq!(pinned.migrations, 0, "no policy, no migrations");
+    assert_eq!(pinned.placement_epochs, 0);
+
+    let balanced = simulate_cluster(
+        &sc,
+        &Strategy::StaticEqual,
+        2,
+        Some(ClusterPolicy::calibrated(per)),
+        &cache,
+    );
+    assert!(
+        balanced.migrations >= 1,
+        "the skewed board must shed a tenant (placement epochs: {})",
+        balanced.placement_epochs
+    );
+    assert_eq!(balanced.report.served, pinned.report.served, "everyone is served either way");
+    assert!(
+        balanced.report.worst_p99_s() < pinned.report.worst_p99_s(),
+        "migration must strictly improve the worst-tenant p99: {} vs pinned {}",
+        balanced.report.worst_p99_s(),
+        pinned.report.worst_p99_s()
+    );
+}
+
+#[test]
+fn live_two_board_scheduler_serves_everything() {
+    let cache = Arc::new(ScheduleCache::new(small_solver()));
+    let platform = Platform::vck190();
+    let base = FilcoConfig::default_for(&platform);
+    let tenants: Vec<TenantSpec> = identical_tenants()
+        .into_iter()
+        .map(|t| t.with_queue_capacity(1 << 14).with_max_batch(4))
+        .collect();
+    let per = equal_split_per_request(&platform, &base, &tenants, &cache);
+    let timescale = pow2_timescale(40.0 * per[0]);
+    let calibrated = PolicyConfig::calibrated(per[0]);
+    let cfg = LiveConfig {
+        policy: PolicyConfig { epoch_s: calibrated.epoch_s * timescale, ..calibrated },
+        mode: LiveMode::Dynamic,
+        timescale,
+        max_sleep: Duration::from_millis(100),
+        boards: 2,
+        cluster: ClusterPolicy {
+            epoch_s: 0.01,
+            migration_cost_s: 0.25 * per[0],
+            ..ClusterPolicy::default()
+        },
+        ..LiveConfig::default()
+    };
+    let sched = FabricScheduler::new(platform, base, tenants, cache.clone(), cfg)
+        .expect("two-board scheduler");
+    assert_eq!(sched.num_boards(), 2);
+
+    let mut id = 0u64;
+    let mut pushed = 0u64;
+    for (tenant, n) in [(0usize, 24u64), (1, 12), (2, 2)] {
+        for _ in 0..n {
+            sched.push(tenant, LiveRequest::new(id)).expect("push");
+            id += 1;
+            pushed += 1;
+        }
+    }
+    sched.close();
+    let report = sched.run();
+    assert_eq!(report.total_served(), pushed, "every pushed request must be served");
+    assert_eq!(report.migrations, sched.migrations(), "report mirrors the scheduler counter");
+}

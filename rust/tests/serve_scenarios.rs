@@ -31,8 +31,8 @@
 
 use filco::dse::Solver;
 use filco::serve::{
-    scenario, simulate, simulate_traced, trace_to_jsonl, EngineEvent, RecordedTrace,
-    ScheduleCache, ServeReport, Strategy,
+    scenario, simulate, simulate_cluster_traced, simulate_traced, trace_to_jsonl, ClusterPolicy,
+    EngineEvent, RecordedTrace, ScheduleCache, ServeReport, Strategy,
 };
 
 fn small_cache() -> ScheduleCache {
@@ -212,4 +212,43 @@ fn trace_replay_reproduces_the_recorded_admissions_exactly() {
     assert_eq!(rep2.completion_s, rep.completion_s);
     assert_eq!(rep2.slo_met, rep.slo_met);
     assert_eq!(rep2.slo_missed, rep.slo_missed);
+}
+
+/// The cluster-of-1 guarantee holds on zoo scenarios too: running a
+/// built-in shape through the one-board cluster driver (with a cluster
+/// policy supplied, which one board must ignore) reproduces the
+/// single-engine trace and report bit for bit — SLO accounting and
+/// latency histograms included. The skewed shape is the interesting
+/// one: its dynamic run re-splits, so the differential covers real
+/// transitions, not a quiet drain.
+#[test]
+fn cluster_of_one_reproduces_zoo_scenarios_bit_for_bit() {
+    let cache = small_cache();
+    let spec = scenario::builtin("skewed").expect("registry names resolve");
+    let mat = spec.materialize(&cache).expect("builtin scenarios materialize");
+    let sc = mat.scenario;
+    let strat = Strategy::Dynamic(mat.policy.clone());
+
+    let (solo, solo_trace) = simulate_traced(&sc, &strat, &cache, true);
+    let (crep, ctrace) =
+        simulate_cluster_traced(&sc, &strat, 1, Some(ClusterPolicy::default()), &cache, true);
+
+    assert!(!solo_trace.is_empty());
+    assert_eq!(ctrace.len(), solo_trace.len(), "event counts");
+    for (i, (c, s)) in ctrace.iter().zip(&solo_trace).enumerate() {
+        assert_eq!(c, s, "trace diverges at event {i}");
+    }
+    assert_eq!(crep.migrations, 0);
+    assert_eq!(crep.placement_epochs, 0);
+    assert_eq!(crep.report.strategy, solo.strategy);
+    assert_eq!(crep.report.completion_s, solo.completion_s);
+    assert_eq!(crep.report.served, solo.served);
+    assert_eq!(crep.report.slo_met, solo.slo_met);
+    assert_eq!(crep.report.slo_missed, solo.slo_missed);
+    assert_eq!(crep.report.switches, solo.switches);
+    assert_eq!(crep.report.preemptions, solo.preemptions);
+    for (t, (x, y)) in crep.report.histograms.iter().zip(&solo.histograms).enumerate() {
+        assert_eq!(x.buckets(), y.buckets(), "tenant {t}: histogram buckets");
+        assert_eq!(x.sum_s(), y.sum_s(), "tenant {t}: histogram sum");
+    }
 }

@@ -24,9 +24,10 @@ use filco::arch::FilcoConfig;
 use filco::dse::Solver;
 use filco::platform::Platform;
 use filco::serve::{
-    equal_split_per_request, poisson_trace, simulate_instrumented, simulate_traced, trace_to_jsonl,
-    write_trace, DecisionKind, FabricScheduler, LiveConfig, LiveMode, PolicyConfig, RecordedTrace,
-    Scenario, ScheduleCache, Strategy, TelemetryConfig, TenantSpec,
+    equal_split_per_request, event_from_json, event_to_json, poisson_trace, simulate_instrumented,
+    simulate_traced, trace_to_jsonl, write_trace, DecisionKind, EngineEvent, FabricScheduler,
+    LiveConfig, LiveMode, PolicyConfig, RecordedTrace, Scenario, ScheduleCache, Strategy,
+    TelemetryConfig, TenantSpec,
 };
 use filco::util::json::Json;
 use filco::workload::zoo;
@@ -211,4 +212,19 @@ fn timeline_samples_every_epoch_with_decisions() {
     assert!(telemetry.step_profile.steps > 0);
     // The trace was recorded too (TelemetryConfig::full).
     assert!(telemetry.trace.is_some_and(|t| !t.is_empty()));
+}
+
+/// The `migrated` event kind — the only one a single-engine run never
+/// emits — must survive the JSON codec exactly like the others: a
+/// multi-board cluster trace is made of the same event lines.
+#[test]
+fn migrated_events_round_trip_through_the_codec() {
+    let ev = EngineEvent::Migrated { tenant: 2, from: 0, to: 3, consumed_s: 0.125, at_s: 7.5 };
+    let json = event_to_json(&ev);
+    let back = event_from_json(&json).expect("a migrated event parses back");
+    assert_eq!(back, ev, "lossless codec round-trip");
+    // And through the textual form a trace file actually stores.
+    let line = json.to_string_compact();
+    let reparsed = Json::parse(&line).expect("the serialized line parses standalone");
+    assert_eq!(event_from_json(&reparsed).expect("parse"), ev);
 }
